@@ -1,0 +1,76 @@
+//! Energy/accuracy trade-off explorer (the Fig.-4 scenario as a library
+//! consumer would script it): sweeps precision schemes, reports each
+//! scheme's 4-bit-client accuracy against its energy saving vs the
+//! homogeneous 32-bit and 16-bit fleets.
+//!
+//! ```sh
+//! cargo run --release --example energy_tradeoff -- --rounds 8
+//! ```
+
+use mpota::cli::Args;
+use mpota::config::RunConfig;
+use mpota::coordinator::{pretrain, Coordinator};
+use mpota::fl::Scheme;
+use mpota::quant::Precision;
+use mpota::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let mut args =
+        Args::parse(std::iter::once("run".to_string()).chain(std::env::args().skip(1)))?;
+    let rounds = args.get_parse("rounds", 8usize)?;
+    let samples = args.get_parse("train-samples", 1920usize)?;
+    args.finish()?;
+
+    // schemes containing a 4-bit group (the paper's Fig.-4 focus) plus the
+    // homogeneous baselines
+    let schemes = [
+        "32,32,32", "16,16,16", "8,8,8", "4,4,4", // homogeneous
+        "32,16,4", "16,8,4", "12,4,4", "24,8,4", // mixed with 4-bit clients
+    ];
+
+    let pretrained = {
+        let runtime = Runtime::load(std::path::Path::new("artifacts"))?;
+        pretrain::ensure_pretrained(&runtime, &pretrain::PretrainConfig::default())?
+    };
+
+    println!(
+        "{:<10} {:>10} {:>12} {:>12} {:>12}",
+        "scheme", "acc@4bit", "energy (J)", "vs 32-bit", "vs 16-bit"
+    );
+    for s in schemes {
+        let mut cfg = RunConfig::default();
+        cfg.rounds = rounds;
+        cfg.scheme = Scheme::parse(s)?;
+        cfg.train_samples = samples;
+        cfg.test_samples = 384;
+        cfg.local_steps = 2;
+        cfg.lr = 0.02;
+        cfg.init_params = Some(pretrained.clone());
+        let mut coord = Coordinator::new(cfg)?;
+        let report = coord.run()?;
+
+        // 4-bit client view: final global model requantized to 4 bits
+        // (for schemes without 4-bit clients, evaluate it anyway — that is
+        // exactly the paper's "re-quantized for 4-bit clients" comparison)
+        let acc4 = match report
+            .requant
+            .iter()
+            .find(|r| r.precision.bits() == 4)
+        {
+            Some(r) => r.accuracy,
+            None => {
+                let q = coord.requantize_global(Precision::of(4));
+                coord.evaluate_model(&q)?.accuracy
+            }
+        };
+        println!(
+            "{:<10} {:>9.2}% {:>12.2} {:>11.1}% {:>11.1}%",
+            s,
+            100.0 * acc4,
+            report.energy.actual_joules,
+            report.energy.saving_vs_32(),
+            report.energy.saving_vs_16()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! End-to-end driver (DESIGN.md "End-to-end validation"): a full
+//! mixed-precision OTA-FL training run through all three layers —
+//! rust coordinator → PJRT artifacts → Pallas quantization kernels —
+//! with pretrained initialization, logging the accuracy curve and the
+//! final requantization/energy report exactly as EXPERIMENTS.md records.
+//!
+//! Defaults are sized for a single CPU core (~10 min); flags scale it up:
+//!
+//! ```sh
+//! cargo run --release --example mixed_precision_train -- \
+//!     --scheme 16,8,4 --rounds 30 --snr-db 20
+//! ```
+
+use mpota::cli::Args;
+use mpota::config::RunConfig;
+use mpota::coordinator::{pretrain, Coordinator};
+use mpota::fl::Scheme;
+use mpota::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // examples have no subcommand; feed a placeholder one
+    let mut args =
+        Args::parse(std::iter::once("run".to_string()).chain(std::env::args().skip(1)))?;
+    let mut cfg = RunConfig::default();
+    cfg.rounds = args.get_parse("rounds", 30usize)?;
+    if let Some(s) = args.get("scheme") {
+        cfg.scheme = Scheme::parse(s)?;
+    } else {
+        cfg.scheme = Scheme::parse("16,8,4")?;
+    }
+    cfg.train_samples = args.get_parse("train-samples", 2880usize)?;
+    cfg.test_samples = args.get_parse("test-samples", 576usize)?;
+    cfg.local_steps = args.get_parse("local-steps", 2usize)?;
+    cfg.lr = args.get_parse("lr", 0.02f32)?;
+    cfg.channel.snr_db = args.get_parse("snr-db", 20.0f32)?;
+    cfg.seed = args.get_parse("seed", 42u64)?;
+    args.finish()?;
+
+    // Pretrained initialization (the paper's ImageNet stand-in).
+    {
+        let runtime = Runtime::load(&cfg.artifacts_dir)?;
+        let pcfg = pretrain::PretrainConfig::default();
+        cfg.init_params = Some(pretrain::ensure_pretrained(&runtime, &pcfg)?);
+    }
+
+    println!(
+        "mixed-precision OTA-FL: scheme {}, {} rounds, SNR {} dB, pretrained init",
+        cfg.scheme, cfg.rounds, cfg.channel.snr_db
+    );
+    let out_dir = cfg.out_dir.clone();
+    let mut coord = Coordinator::new(cfg)?;
+    let report = coord.run()?;
+
+    println!("\nround  server-acc  server-loss  train-loss  part  ota-mse");
+    for r in &report.log.rounds {
+        println!(
+            "{:>5}  {:>9.4}  {:>10.4}  {:>10.4}  {:>4}  {:.2e}",
+            r.round, r.server_accuracy, r.server_loss, r.train_loss,
+            r.participants, r.ota_mse
+        );
+    }
+
+    println!("\n—— final report ——");
+    println!("{}", report.to_json().to_string_pretty());
+    if let Some(r90) = report.rounds_to_90 {
+        println!("reached 90% at round {r90}");
+    }
+    let stem = format!("e2e_{}", report.label.replace([',', '@'], "_"));
+    report.log.write_files(&out_dir, &stem)?;
+    println!("curve written to {}/{stem}.csv", out_dir.display());
+
+    let c = coord.runtime.counters();
+    println!(
+        "runtime counters: {} train steps ({:.3}s avg), {} eval batches ({:.3}s avg), {} compiles",
+        c.train_steps,
+        c.train_secs / c.train_steps.max(1) as f64,
+        c.eval_batches,
+        c.eval_secs / c.eval_batches.max(1) as f64,
+        c.compiles
+    );
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! Wireless-layer walkthrough: what the multi-precision modulation scheme
+//! actually does, step by step, with numbers you can read.
+//!
+//! Demonstrates (1) why mixed-precision payloads superpose cleanly under
+//! analog amplitude modulation, (2) the effect of SNR and channel
+//! estimation quality on aggregation error, and (3) the bandwidth cost of
+//! the digital-orthogonal baseline — the paper's Eq. 2-8 pipeline end to
+//! end, without any ML in the loop.
+//!
+//! ```sh
+//! cargo run --release --example ota_channel_demo
+//! ```
+
+use mpota::channel::{ChannelConfig, RoundChannel};
+use mpota::ota;
+use mpota::quant::{fake_quant, Precision};
+use mpota::rng::Rng;
+use mpota::tensor;
+
+fn main() -> anyhow::Result<()> {
+    let k = 15;
+    let n = 65_536;
+    let root = Rng::seed_from(2025);
+
+    // --- 1. fifteen clients with mixed-precision payloads ---------------
+    let mut data_rng = root.stream("payloads");
+    let raw: Vec<Vec<f32>> = (0..k)
+        .map(|_| {
+            let mut v = vec![0.0f32; n];
+            data_rng.fill_normal(&mut v, 0.0, 1.0);
+            v
+        })
+        .collect();
+    let precisions: Vec<Precision> = [32u8, 32, 32, 32, 32, 8, 8, 8, 8, 8, 4, 4, 4, 4, 4]
+        .iter()
+        .map(|&b| Precision::of(b))
+        .collect();
+    let payloads: Vec<Vec<f32>> = raw
+        .iter()
+        .zip(&precisions)
+        .map(|(r, &p)| fake_quant(r, p))
+        .collect();
+    println!("clients: 5x32-bit, 5x8-bit, 5x4-bit; payload {n} params each\n");
+
+    // the noise-free ideal the channel should reproduce
+    let ideal = mpota::fl::mean(&payloads);
+
+    // --- 2. analog OTA across SNR and CSI quality -----------------------
+    println!("{:<22} {:>12} {:>14}", "channel", "agg MSE", "participants");
+    for (label, snr, perfect) in [
+        ("5 dB, estimated CSI", 5.0, false),
+        ("15 dB, estimated CSI", 15.0, false),
+        ("30 dB, estimated CSI", 30.0, false),
+        ("30 dB, perfect CSI", 30.0, true),
+    ] {
+        let cfg = ChannelConfig { snr_db: snr, perfect_csi: perfect, ..Default::default() };
+        let mut ch_rng = root.stream(label);
+        let round = RoundChannel::draw(&cfg, k, &mut ch_rng);
+        let (agg, stats) = ota::analog::aggregate(&payloads, &round, &mut ch_rng);
+        let mse = tensor::mse(&agg, &ideal);
+        println!("{label:<22} {mse:>12.3e} {:>14}", stats.participants);
+    }
+
+    // --- 3. the digital-orthogonal baseline -----------------------------
+    let (dig, dstats) = ota::digital::aggregate(&raw, &precisions);
+    let dig_mse = tensor::mse(&dig, &ideal);
+    println!("\ndigital orthogonal baseline:");
+    println!("  aggregate MSE vs ideal: {dig_mse:.3e} (bit-exact transport)");
+    println!(
+        "  channel uses: {} (OTA uses {n} — a {}x bandwidth win for OTA)",
+        dstats.channel_uses,
+        dstats.channel_uses / n as u64
+    );
+    println!(
+        "  bits on the wire: {} ({} bits/param avg across the mixed fleet)",
+        dstats.bits_transmitted,
+        dstats.bits_transmitted / (k as u64 * n as u64)
+    );
+
+    // --- 4. Eq. 3's obstruction, demonstrated ---------------------------
+    // summing *integer codes* across precisions is meaningless: quantize
+    // two payloads at different precisions and compare code-sum vs
+    // decimal-sum.
+    let a = &raw[0][..8];
+    let b = &raw[10][..8];
+    let (ca, pa) = mpota::quant::fixed::encode_tensor(a, 8);
+    let (cb, pb) = mpota::quant::fixed::encode_tensor(b, 4);
+    println!("\nEq. 3 demo (first 4 params):");
+    println!("  8-bit codes {:?} (scale {:.4})", &ca[..4], pa.scale);
+    println!("  4-bit codes {:?} (scale {:.4})", &cb[..4], pb.scale);
+    let code_sum: Vec<u32> = ca.iter().zip(&cb).map(|(x, y)| x + y).collect();
+    let decimal_sum: Vec<f32> = a.iter().zip(b).map(|(x, y)| x + y).collect();
+    println!("  raw code sum      {:?}  <- no common scale: meaningless", &code_sum[..4]);
+    println!(
+        "  decimal (analog)  {:?}  <- what amplitude modulation sums",
+        &decimal_sum[..4]
+    );
+    Ok(())
+}

@@ -1,0 +1,211 @@
+"""AOT driver: lower every (variant, precision) graph to HLO TEXT artifacts.
+
+Run exactly once by `make artifacts`; the rust binary is self-contained
+afterwards.  Python never appears on the request path.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under --out (default ../artifacts):
+  manifest.json            — everything rust needs: shapes, flat param
+                             layout, artifact filenames, MAC counts
+  <variant>_train_q<b>.hlo.txt
+  <variant>_eval.hlo.txt
+  ota_k15.hlo.txt
+  <variant>_init.f32.bin   — He-init flat params (little-endian f32)
+  goldens.json             — quantization test vectors for bit-exact parity
+                             tests of the rust quant mirror
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+from .kernels.ota import ota_superpose_pallas
+
+# Precision levels lowered as train-step artifacts for the flagship variant
+# (paper §IV-A2: schemes draw from [32, 24, 16, 12, 8, 6, 4]).
+TRAIN_LEVELS = (32, 24, 16, 12, 8, 6, 4)
+# Variants besides the flagship get f32 training + eval only (Table I uses
+# post-training quantization, done by the rust quant mirror).
+FLAGSHIP = "base"
+OTA_CLIENTS = 15
+OTA_CHUNK = 16384
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1024:.0f} KiB)")
+
+
+def lower_train(cfg: M.VariantConfig, bits: int) -> str:
+    p = M.param_count(cfg)
+    step = M.make_train_step(cfg, bits)
+    lowered = jax.jit(step).lower(
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((M.TRAIN_BATCH, *M.IMAGE_SHAPE), jnp.float32),
+        jax.ShapeDtypeStruct((M.TRAIN_BATCH,), jnp.int32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_eval(cfg: M.VariantConfig) -> str:
+    p = M.param_count(cfg)
+    step = M.make_eval_step(cfg)
+    lowered = jax.jit(step).lower(
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((M.EVAL_BATCH, *M.IMAGE_SHAPE), jnp.float32),
+        jax.ShapeDtypeStruct((M.EVAL_BATCH,), jnp.int32),
+        jax.ShapeDtypeStruct((M.EVAL_BATCH,), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_ota() -> str:
+    lowered = jax.jit(
+        lambda x, hre, him, nre, nim: ota_superpose_pallas(x, hre, him, nre, nim)
+    ).lower(
+        jax.ShapeDtypeStruct((OTA_CLIENTS, OTA_CHUNK), jnp.float32),
+        jax.ShapeDtypeStruct((OTA_CLIENTS,), jnp.float32),
+        jax.ShapeDtypeStruct((OTA_CLIENTS,), jnp.float32),
+        jax.ShapeDtypeStruct((OTA_CHUNK,), jnp.float32),
+        jax.ShapeDtypeStruct((OTA_CHUNK,), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def emit_goldens(path: str) -> None:
+    """Deterministic quantization vectors: rust/src/quant must match these
+    bit-for-bit (same floor/clip math, same scale/zero-point formulas)."""
+    rng = np.random.default_rng(12345)
+    cases = []
+    inputs = {
+        "normal": rng.standard_normal(64).astype(np.float32),
+        "uniform_pos": rng.uniform(0.0, 7.5, 64).astype(np.float32),
+        "mixed_scale": (
+            rng.standard_normal(64) * 10.0 ** rng.integers(-3, 4, 64).astype(np.float64)
+        ).astype(np.float32),
+        "constant": np.full(16, 0.7311, np.float32),
+        "zeros": np.zeros(8, np.float32),
+        "with_negatives": np.linspace(-5.0, 5.0, 33).astype(np.float32),
+    }
+    for name, arr in inputs.items():
+        for bits in ref.SUPPORTED_LEVELS:
+            for rounding in ("floor", "nearest"):
+                out = np.asarray(ref.fake_quant(jnp.asarray(arr), bits, rounding))
+                cases.append(
+                    {
+                        "name": f"{name}_q{bits}_{rounding}",
+                        "bits": int(bits),
+                        "rounding": rounding,
+                        "input": [float(v) for v in arr],
+                        "expect": [float(v) for v in out],
+                    }
+                )
+    with open(path, "w") as f:
+        json.dump({"cases": cases}, f)
+    print(f"  wrote {path} ({len(cases)} cases)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default=",".join(M.VARIANTS),
+        help="comma-separated variant subset (flagship always included)",
+    )
+    ap.add_argument(
+        "--levels",
+        default=",".join(str(b) for b in TRAIN_LEVELS),
+        help="train-step precision levels for the flagship variant",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+
+    variants = [v.strip() for v in args.variants.split(",") if v.strip()]
+    if FLAGSHIP not in variants:
+        variants.insert(0, FLAGSHIP)
+    levels = [int(b) for b in args.levels.split(",") if b.strip()]
+    for b in levels:
+        assert b in ref.SUPPORTED_LEVELS, f"unsupported level {b}"
+
+    manifest = {
+        "version": 1,
+        "train_batch": M.TRAIN_BATCH,
+        "eval_batch": M.EVAL_BATCH,
+        "image": list(M.IMAGE_SHAPE),
+        "classes": M.NUM_CLASSES,
+        "padded_classes": M.PADDED_CLASSES,
+        "flagship": FLAGSHIP,
+        "train_levels": levels,
+        "ota": {
+            "artifact": "ota_k15.hlo.txt",
+            "clients": OTA_CLIENTS,
+            "chunk": OTA_CHUNK,
+        },
+        "goldens": "goldens.json",
+        "variants": {},
+    }
+
+    for vname in variants:
+        cfg = M.VARIANTS[vname]
+        print(f"[{vname}] param_count={M.param_count(cfg)}")
+        train_levels = levels if vname == FLAGSHIP else [32]
+        artifacts = {}
+        for bits in train_levels:
+            fname = f"{vname}_train_q{bits}.hlo.txt"
+            _write(os.path.join(args.out, fname), lower_train(cfg, bits))
+            artifacts[f"train_q{bits}"] = fname
+        fname = f"{vname}_eval.hlo.txt"
+        _write(os.path.join(args.out, fname), lower_eval(cfg))
+        artifacts["eval"] = fname
+
+        init = np.asarray(M.init_flat_params(cfg, seed=0), dtype="<f4")
+        init_name = f"{vname}_init.f32.bin"
+        init.tofile(os.path.join(args.out, init_name))
+        print(f"  wrote {init_name} ({init.nbytes / 1024:.0f} KiB)")
+
+        manifest["variants"][vname] = {
+            "param_count": int(M.param_count(cfg)),
+            "params": [[n, list(s)] for n, s in M.param_spec(cfg)],
+            "artifacts": artifacts,
+            "init": init_name,
+            "macs_per_sample": int(M.macs_per_sample(cfg)),
+        }
+
+    _write(os.path.join(args.out, "ota_k15.hlo.txt"), lower_ota())
+    emit_goldens(os.path.join(args.out, "goldens.json"))
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest.json written; total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+  quantize.py — Algorithm 2 fake-quant (fixed-point affine + float trunc)
+  qmatmul.py  — tiled quantized matmul (dense-layer hot spot)
+  ota.py      — K-client over-the-air superposition
+  ref.py      — pure-jnp oracles (the pytest correctness signal)
+"""
+
+from . import ota, qmatmul, quantize, ref  # noqa: F401

@@ -1,0 +1,116 @@
+"""L1 Pallas kernel: tiled quantized matmul (the model's dense-layer hot spot).
+
+The paper's clients compute end-to-end at their designated precision; the
+FPGA analogue packs more MACs per DSP slice at lower bit-widths.  The TPU
+analogue implemented here (DESIGN.md §5): each (bm x bk) tile of A and
+(bk x bn) tile of B is *fake-quantized in VMEM* (per-tile min/max affine or
+mantissa truncation, per the precision->format map), then fed to an
+MXU-shaped f32 `jnp.dot`.  Accumulation is f32 across the K grid axis —
+matching low-precision-multiply / wide-accumulate AxC hardware.
+
+Per-TILE (not per-tensor) quantization is deliberate: it is what a blocked
+accelerator implementation can actually compute without a global reduction,
+and it is *more* faithful to blocked FPGA dataflows.  The tile-exact oracle
+is `ref.qmatmul_tiled`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+__all__ = ["qmatmul_pallas", "TILE_M", "TILE_K", "TILE_N"]
+
+# MXU-shaped tiles: 128x128 systolic array; bm follows the training batch.
+TILE_M = 32
+TILE_K = 128
+TILE_N = 128
+
+_SCALE_EPS = 1e-12
+
+
+def _tile_fake_quant(x: jax.Array, bits: int) -> jax.Array:
+    """Quantize one VMEM tile in-register.  Mirrors ref.fake_quant math,
+    but with tile-local (not tensor-global) min/max for the fixed branch."""
+    if bits >= 32:
+        return x
+    if bits in ref.FLOAT_TRUNC_LEVELS:
+        drop = 23 - (bits - 9)
+        mask = 0xFFFF_FFFF << drop & 0xFFFF_FFFF
+        u = jax.lax.bitcast_convert_type(x, jnp.uint32)
+        return jax.lax.bitcast_convert_type(u & jnp.uint32(mask), jnp.float32)
+    if bits in ref.FIXED_POINT_LEVELS:
+        levels = jnp.float32(2**bits - 1)
+        w_min = jnp.min(x)
+        w_max = jnp.max(x)
+        scale = jnp.maximum((w_max - w_min) / levels, _SCALE_EPS)
+        zp = -w_min / scale
+        # nearest rounding: this quantizer sits inside the TRAINING graphs
+        # (see ref.fixed_point_fake_quant's rounding note / Gupta et al. 16)
+        q = jnp.clip(jnp.round(x / scale + zp), 0.0, levels)
+        return (q - zp) * scale
+    raise ValueError(f"unsupported precision level: {bits}")
+
+
+def _qmm_kernel(bits: int, nk: int, a_ref, b_ref, o_ref):
+    """Grid (i, j, k); o[i,j] accumulates quant(a[i,k]) @ quant(b[k,j])."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    at = _tile_fake_quant(a_ref[...], bits)
+    bt = _tile_fake_quant(b_ref[...], bits)
+    o_ref[...] += jnp.dot(at, bt, preferred_element_type=jnp.float32)
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def qmatmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    bits: int,
+    bm: int = TILE_M,
+    bk: int = TILE_K,
+    bn: int = TILE_N,
+) -> jax.Array:
+    """(M,K) @ (K,N) with per-tile fake-quant of both operands.
+
+    Arbitrary shapes: operands are zero-padded up to tile multiples (an
+    all-zero pad tile quantizes to zeros and contributes nothing), output
+    is cropped back to (M, N).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    bm_, bk_, bn_ = min(bm, m), min(bk, k), min(bn, n)
+    mp = -(-m // bm_) * bm_
+    kp = -(-k // bk_) * bk_
+    np_ = -(-n // bn_) * bn_
+    ap = _pad_to(a, mp, kp)
+    bp = _pad_to(b, kp, np_)
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, bits, grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]

@@ -1,0 +1,176 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must match its oracle here to float tolerance under pytest (see
+python/tests/).  They implement, in plain jax.numpy:
+
+  * Algorithm 2 of the paper (fixed-point affine quantization and
+    floating-point truncation), as *fake-quantization*: the returned tensor
+    holds the de-quantized decimal values, i.e. exactly the values the
+    paper's multi-precision amplitude modulation transmits ("Convert model
+    update to decimal", Alg. 1 step 3).
+  * The quantized matmul used by the model's dense layers.
+  * The K-client over-the-air superposition (Eq. 2 / Alg. 1 step 4) with
+    residual channel-compensation error and additive receiver noise.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "fixed_point_params",
+    "fixed_point_fake_quant",
+    "float_truncate",
+    "fake_quant",
+    "qmatmul",
+    "qmatmul_tiled",
+    "ota_superpose",
+    "FIXED_POINT_LEVELS",
+    "FLOAT_TRUNC_LEVELS",
+    "SUPPORTED_LEVELS",
+]
+
+# Paper §III-B: fixed-point is preferred below 8-bit ("due to the limited
+# dynamic range of floating-point formats under 8-bit representation");
+# float formats are supported at >= 8-bit.  We follow the mapping recorded
+# in DESIGN.md §3: {8, 6, 4, 3, 2} -> fixed point, {24, 16, 12} -> float
+# truncation, 32 -> identity.
+FIXED_POINT_LEVELS = (8, 6, 4, 3, 2)
+FLOAT_TRUNC_LEVELS = (24, 16, 12)
+SUPPORTED_LEVELS = (32,) + FLOAT_TRUNC_LEVELS + FIXED_POINT_LEVELS
+
+# Guard for degenerate all-constant tensors (w_max == w_min) where the
+# affine scale collapses to zero.
+_SCALE_EPS = 1e-12
+
+
+def fixed_point_params(w: jax.Array, bits: int):
+    """Per-tensor scale / zero-point of Algorithm 2 ("fixed" branch).
+
+    scale       = (w_max - w_min) / (2^b - 1)
+    zero_point  = -w_min / scale
+    """
+    w_min = jnp.min(w)
+    w_max = jnp.max(w)
+    levels = jnp.float32(2**bits - 1)
+    scale = (w_max - w_min) / levels
+    scale = jnp.maximum(scale, _SCALE_EPS)
+    zero_point = -w_min / scale
+    return scale.astype(jnp.float32), zero_point.astype(jnp.float32)
+
+
+def fixed_point_fake_quant(
+    w: jax.Array, bits: int, rounding: str = "floor"
+) -> jax.Array:
+    """Algorithm 2 "fixed" branch followed by de-quantization.
+
+    q_ij = max(0, min(2^b - 1, round(w_ij / scale + zero_point)))
+    out  = (q_ij - zero_point) * scale
+
+    rounding="floor"   — Algorithm 2 verbatim (transmission payloads, PTQ,
+                         the rust goldens contract).
+    rounding="nearest" — round-half-even, used for the TRAINING-state
+                         quantizer inside the QAT graphs: with floor, any
+                         negative perturbation of an on-grid weight drops a
+                         full level, so SGD performs a destructive downward
+                         random walk.  The paper's low-precision-training
+                         citation [16] (Gupta et al. 2015) establishes that
+                         nearest/stochastic rounding is required for
+                         convergent low-precision training.
+    """
+    scale, zero_point = fixed_point_params(w, bits)
+    levels = jnp.float32(2**bits - 1)
+    pre = w / scale + zero_point
+    q = jnp.floor(pre) if rounding == "floor" else jnp.round(pre)
+    q = jnp.clip(q, 0.0, levels)
+    return ((q - zero_point) * scale).astype(jnp.float32)
+
+
+def float_truncate(w: jax.Array, bits: int) -> jax.Array:
+    """Algorithm 2 "floating-point" branch: truncate mantissa to fit b bits.
+
+    Layout kept: 1 sign bit + 8 exponent bits + (bits - 9) mantissa bits.
+    Truncation (not rounding) of the IEEE-754 mantissa, exactly as
+    "Truncate mantissa and exponent to fit b bits".  bits == 32 is the
+    identity.  Requires bits >= 10 (at least one mantissa bit).
+    """
+    if bits >= 32:
+        return w.astype(jnp.float32)
+    if bits < 10:
+        raise ValueError(f"float truncation needs >= 10 bits, got {bits}")
+    mant_keep = bits - 9
+    drop = 23 - mant_keep
+    mask = jnp.uint32(0xFFFF_FFFF << drop & 0xFFFF_FFFF)
+    u = jax.lax.bitcast_convert_type(w.astype(jnp.float32), jnp.uint32)
+    return jax.lax.bitcast_convert_type(u & mask, jnp.float32)
+
+
+def fake_quant(w: jax.Array, bits: int, rounding: str = "floor") -> jax.Array:
+    """Dispatch per DESIGN.md §3 precision->format mapping."""
+    if bits >= 32:
+        return w.astype(jnp.float32)
+    if bits in FLOAT_TRUNC_LEVELS:
+        return float_truncate(w, bits)
+    if bits in FIXED_POINT_LEVELS:
+        return fixed_point_fake_quant(w, bits, rounding)
+    raise ValueError(f"unsupported precision level: {bits}")
+
+
+def qmatmul(a: jax.Array, b: jax.Array, bits: int) -> jax.Array:
+    """Quantized matmul oracle: fake-quant both operands, then f32 matmul.
+
+    Per-TENSOR quantization (the Pallas kernel quantizes per-tile; the
+    pytest suite compares against `qmatmul_tiled` below for the tiled
+    semantics and against this for the bits==32 path).  Nearest rounding —
+    this is the training-graph quantizer.
+    """
+    return jnp.matmul(
+        fake_quant(a, bits, "nearest"), fake_quant(b, bits, "nearest")
+    )
+
+
+def qmatmul_tiled(
+    a: jax.Array, b: jax.Array, bits: int, bm: int, bk: int, bn: int
+) -> jax.Array:
+    """Tile-exact oracle of the Pallas qmatmul kernel.
+
+    The kernel quantizes each (bm x bk) tile of `a` and (bk x bn) tile of
+    `b` independently (per-tile min/max), then accumulates f32 partial
+    products.  This mirrors that loop in plain jnp so tests can assert
+    exact agreement.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    out = jnp.zeros((m, n), jnp.float32)
+    for i0 in range(0, m, bm):
+        for j0 in range(0, n, bn):
+            acc = jnp.zeros((min(bm, m - i0), min(bn, n - j0)), jnp.float32)
+            for k0 in range(0, k, bk):
+                at = fake_quant(a[i0 : i0 + bm, k0 : k0 + bk], bits, "nearest")
+                bt = fake_quant(b[k0 : k0 + bk, j0 : j0 + bn], bits, "nearest")
+                acc = acc + jnp.matmul(at, bt)
+            out = out.at[i0 : i0 + bm, j0 : j0 + bn].set(acc)
+    return out
+
+
+def ota_superpose(
+    x: jax.Array,
+    heff_re: jax.Array,
+    heff_im: jax.Array,
+    noise_re: jax.Array,
+    noise_im: jax.Array,
+):
+    """K-client over-the-air superposition (Eq. 2 with Eq. 6 precoding).
+
+    x        : (K, N) real amplitude-modulated decimal payloads
+    heff_*   : (K,)  effective complex gain h_k * ĥ_k^{-1} per client
+               (== 1 + estimation error; exactly 1 under perfect CSI)
+    noise_*  : (N,)  receiver AWGN
+    returns  : (re, im) of  Σ_k heff_k · x_k  +  n
+    """
+    re = jnp.einsum("k,kn->n", heff_re, x) + noise_re
+    im = jnp.einsum("k,kn->n", heff_im, x) + noise_im
+    return re.astype(jnp.float32), im.astype(jnp.float32)

@@ -1,0 +1,333 @@
+"""L2: the jax model — "SignNet" CNN family with quantization-aware training.
+
+The paper trains ResNet-50 on GTSRB at each client's designated precision
+("the quantization function is systematically applied to every layer of the
+CNN model ... and is integrated into both the forward and backward passes").
+Our substitute (DESIGN.md §2) is a compact CNN family sized for interpret-
+mode Pallas on CPU; the quantization semantics are identical:
+
+  * every weight tensor is fake-quantized (L1 Pallas kernel) before use;
+  * every activation is fake-quantized after its non-linearity;
+  * every cotangent flowing back through a quantizer is itself quantized
+    (straight-through-estimator with a quantized gradient) — this is what
+    reproduces the paper's observation that ultra-low precision limits
+    gradient dynamic range and makes 4-bit convergence slow and erratic;
+  * dense layers run through the tiled quantized-matmul Pallas kernel in
+    both the forward and backward passes;
+  * the SGD parameter update is re-quantized so parameters live on the
+    client's precision grid end-to-end.
+
+Everything here is traced by `jax.jit(...).lower(...)` in aot.py — exactly
+once per (variant, precision) — and never imported at runtime.
+
+Parameter convention: a single FLAT f32 vector.  The rust coordinator keeps
+model state as one flat vector (that is what gets amplitude-modulated for
+OTA aggregation), so every artifact takes/returns flat params; slicing into
+layer shapes happens inside the graph.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.qmatmul import qmatmul_pallas
+from .kernels.quantize import fake_quant_pallas
+
+__all__ = [
+    "VariantConfig",
+    "VARIANTS",
+    "NUM_CLASSES",
+    "PADDED_CLASSES",
+    "IMAGE_SHAPE",
+    "TRAIN_BATCH",
+    "EVAL_BATCH",
+    "param_spec",
+    "param_count",
+    "init_flat_params",
+    "make_train_step",
+    "make_eval_step",
+    "macs_per_sample",
+]
+
+NUM_CLASSES = 43       # GTSRB-like: 43 traffic-sign classes
+PADDED_CLASSES = 64    # logits padded to a lane-friendly width; extras masked
+IMAGE_SHAPE = (32, 32, 3)
+TRAIN_BATCH = 32
+EVAL_BATCH = 64
+
+_MASK_NEG = -1e9       # additive logit mask for the padding classes
+GRAD_CLIP_NORM = 10.0  # global-norm gradient clip (see make_train_step)
+
+
+@dataclass(frozen=True)
+class VariantConfig:
+    """One SignNet family member.
+
+    channels    : output channels of the three conv stages
+    convs_per_stage : conv layers per stage (depth knob)
+    dense       : width of the hidden dense layer
+    """
+
+    name: str
+    channels: tuple = (32, 64, 128)
+    convs_per_stage: int = 1
+    dense: int = 256
+
+
+# Five variants standing in for the paper's Table-I model zoo (DESIGN.md §2).
+VARIANTS = {
+    "tiny": VariantConfig("tiny", channels=(8, 16, 32), dense=64),
+    "small": VariantConfig("small", channels=(16, 32, 64), dense=128),
+    "base": VariantConfig("base", channels=(32, 64, 128), dense=256),
+    "wide": VariantConfig("wide", channels=(48, 96, 192), dense=256),
+    "deep": VariantConfig("deep", channels=(24, 48, 96), convs_per_stage=2, dense=128),
+}
+
+
+# --------------------------------------------------------------------------
+# Parameter bookkeeping: ordered spec <-> flat vector
+# --------------------------------------------------------------------------
+
+def param_spec(cfg: VariantConfig):
+    """Ordered (name, shape) list — the SINGLE source of truth for the flat
+    layout, mirrored verbatim into artifacts/manifest.json for rust."""
+    spec = []
+    cin = IMAGE_SHAPE[2]
+    for stage, cout in enumerate(cfg.channels):
+        for rep in range(cfg.convs_per_stage):
+            spec.append((f"s{stage}c{rep}_w", (3, 3, cin, cout)))
+            spec.append((f"s{stage}c{rep}_b", (cout,)))
+            cin = cout
+    spec.append(("d0_w", (cfg.channels[-1], cfg.dense)))
+    spec.append(("d0_b", (cfg.dense,)))
+    spec.append(("d1_w", (cfg.dense, PADDED_CLASSES)))
+    spec.append(("d1_b", (PADDED_CLASSES,)))
+    return spec
+
+
+def param_count(cfg: VariantConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_spec(cfg))
+
+
+def _unflatten(cfg: VariantConfig, theta: jax.Array) -> dict:
+    params, off = {}, 0
+    for name, shape in param_spec(cfg):
+        size = 1
+        for d in shape:
+            size *= d
+        params[name] = theta[off : off + size].reshape(shape)
+        off += size
+    return params
+
+
+def _flatten(cfg: VariantConfig, params: dict) -> jax.Array:
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in param_spec(cfg)]
+    )
+
+
+def init_flat_params(cfg: VariantConfig, seed: int = 0) -> jax.Array:
+    """He-normal conv/dense init, zero biases — the 'random start'.
+
+    The 'pretrained' initialisation the paper gets from ImageNet is produced
+    by the rust pipeline itself (`mpota pretrain`, central f32 SGD on a
+    held-out synthetic shard) and saved next to this blob.
+    """
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("_b") or name == "d1_w":
+            # Biases and the classifier head start at zero: logits begin
+            # uniform (loss = ln(NUM_CLASSES)) which keeps the first rounds
+            # of low-precision training inside the quantizer dynamic range.
+            chunks.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            std = (2.0 / fan_in) ** 0.5
+            chunks.append(
+                (jax.random.normal(sub, shape, jnp.float32) * std).reshape(-1)
+            )
+    return jnp.concatenate(chunks)
+
+
+# --------------------------------------------------------------------------
+# Quantizers with quantized-cotangent STE
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _fq(x, bits):
+    # nearest rounding throughout the training graphs: Algorithm 2's floor
+    # is kept for transmission/PTQ, but floor applied to the SGD weight
+    # state makes every negatively-perturbed on-grid weight drop a full
+    # level per step (a destructive downward random walk).  Nearest is the
+    # convergent choice per the paper's citation [16] (Gupta et al. 2015).
+    return fake_quant_pallas(x, bits, rounding="nearest")
+
+
+def _fq_fwd(x, bits):
+    return fake_quant_pallas(x, bits, rounding="nearest"), None
+
+
+def _fq_bwd(bits, _res, g):
+    # STE, but the cotangent itself is pushed onto the precision grid:
+    # the client's backward pass also runs at q_k bits (paper §III-B).
+    return (fake_quant_pallas(g, bits, rounding="nearest"),)
+
+
+_fq.defvjp(_fq_fwd, _fq_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _qmm(a, b, bits):
+    return qmatmul_pallas(a, b, bits)
+
+
+def _qmm_fwd(a, b, bits):
+    return qmatmul_pallas(a, b, bits), (a, b)
+
+
+def _qmm_bwd(bits, res, g):
+    # Both backward matmuls also run through the quantized kernel: the AxC
+    # hardware has no full-precision multiplier to fall back to.
+    a, b = res
+    da = qmatmul_pallas(g, b.T, bits)
+    db = qmatmul_pallas(a.T, g, bits)
+    return (da, db)
+
+
+_qmm.defvjp(_qmm_fwd, _qmm_bwd)
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+_DIMS = jax.lax.conv_dimension_numbers(
+    (1, *IMAGE_SHAPE), (3, 3, 1, 1), ("NHWC", "HWIO", "NHWC")
+)
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME", dimension_numbers=_DIMS
+    )
+    return y + b
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(cfg: VariantConfig, bits: int, theta: jax.Array, images: jax.Array):
+    """images (B,32,32,3) -> masked logits (B, PADDED_CLASSES)."""
+    p = _unflatten(cfg, theta)
+    x = images
+    for stage in range(len(cfg.channels)):
+        for rep in range(cfg.convs_per_stage):
+            w = _fq(p[f"s{stage}c{rep}_w"], bits)
+            b = _fq(p[f"s{stage}c{rep}_b"], bits)
+            x = jax.nn.relu(_conv(x, w, b))
+            x = _fq(x, bits)
+        x = _maxpool2(x)
+    x = jnp.mean(x, axis=(1, 2))  # global average pool -> (B, C3)
+    x = jax.nn.relu(_qmm(x, p["d0_w"], bits) + _fq(p["d0_b"], bits))
+    x = _fq(x, bits)
+    logits = _qmm(x, p["d1_w"], bits) + _fq(p["d1_b"], bits)
+    mask = jnp.where(jnp.arange(PADDED_CLASSES) < NUM_CLASSES, 0.0, _MASK_NEG)
+    return logits + mask
+
+
+def _loss_and_metrics(cfg, bits, theta, images, labels):
+    logits = forward(cfg, bits, theta, images)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, PADDED_CLASSES, dtype=jnp.float32)
+    per_example = -jnp.sum(onehot * logp, axis=-1)
+    loss = jnp.mean(per_example)
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    )
+    return loss, correct
+
+
+# --------------------------------------------------------------------------
+# Artifact entry points
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: VariantConfig, bits: int):
+    """One minibatch SGD step at precision `bits`.
+
+    (theta f32[P], images f32[B,32,32,3], labels i32[B], lr f32[1])
+      -> (new_theta f32[P], metrics f32[2] = [mean_loss, correct_count])
+
+    The updated parameters are re-quantized so they stay on the client's
+    precision grid (Alg. 1 step 2: the client operates end-to-end at q_k).
+    """
+
+    def train_step(theta, images, labels, lr):
+        (loss, correct), grad = jax.value_and_grad(
+            lambda t: _loss_and_metrics(cfg, bits, t, images, labels),
+            has_aux=True,
+        )(theta)
+        # Global-norm gradient clipping: low-precision forward passes emit
+        # occasional huge cross-entropy gradients (coarse logits), and an
+        # unclipped 4-bit run diverges within a few rounds.  Clipping keeps
+        # ultra-low-precision training in the paper's "slow and erratic
+        # but bounded" regime (cf. its citation [16] on the narrow dynamic
+        # range of low-precision gradients).
+        grad_norm = jnp.sqrt(jnp.sum(grad * grad) + 1e-12)
+        clip = jnp.minimum(1.0, GRAD_CLIP_NORM / grad_norm)
+        new_theta = _fq(theta - lr[0] * clip * grad, bits)
+        return new_theta, jnp.stack([loss, correct])
+
+    return train_step
+
+
+def make_eval_step(cfg: VariantConfig):
+    """f32 evaluation with a per-example weight mask for ragged last batches.
+
+    (theta f32[P], images f32[B,32,32,3], labels i32[B], weights f32[B])
+      -> metrics f32[2] = [Σ w·loss_i, Σ w·correct_i]
+    """
+
+    def eval_step(theta, images, labels, weights):
+        logits = forward(cfg, 32, theta, images)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        onehot = jax.nn.one_hot(labels, PADDED_CLASSES, dtype=jnp.float32)
+        per_example = -jnp.sum(onehot * logp, axis=-1)
+        correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+        return jnp.stack(
+            [jnp.sum(per_example * weights), jnp.sum(correct * weights)]
+        )
+
+    return eval_step
+
+
+# --------------------------------------------------------------------------
+# Energy-model inputs
+# --------------------------------------------------------------------------
+
+def macs_per_sample(cfg: VariantConfig) -> int:
+    """Forward-pass multiply-accumulates for one sample (energy model D_ML).
+
+    Conv: H·W·K_h·K_w·C_in·C_out at each layer's output resolution;
+    dense: C_in·C_out.  Pooling/activations are ignored (MAC-free).
+    """
+    h, w, cin = IMAGE_SHAPE
+    total = 0
+    for stage, cout in enumerate(VARIANTS[cfg.name].channels):
+        for _ in range(cfg.convs_per_stage):
+            total += h * w * 3 * 3 * cin * cout
+            cin = cout
+        h, w = h // 2, w // 2
+    total += cfg.channels[-1] * cfg.dense
+    total += cfg.dense * PADDED_CLASSES
+    return total

@@ -1,0 +1,18 @@
+"""Shared pytest configuration for the compile-path test suite."""
+
+import os
+import sys
+
+# Allow `pytest python/tests` from the repo root as well as `cd python &&
+# pytest tests/`: make the `compile` package importable either way.
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_PYROOT = os.path.dirname(_HERE)
+if _PYROOT not in sys.path:
+    sys.path.insert(0, _PYROOT)
+
+from hypothesis import settings
+
+# Interpret-mode Pallas on one CPU core is slow; never let hypothesis's
+# default 200ms deadline flake a shrink run.
+settings.register_profile("mpota", deadline=None, max_examples=25)
+settings.load_profile("mpota")

@@ -1,0 +1,176 @@
+"""L2 model tests: parameter bookkeeping, forward shapes, QAT training
+dynamics, and the artifact entry-point contracts the rust runtime relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+
+def _batch(n=M.TRAIN_BATCH, seed=0):
+    rng = np.random.default_rng(seed)
+    imgs = jnp.asarray(rng.uniform(0, 1, (n, *M.IMAGE_SHAPE)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, M.NUM_CLASSES, n).astype(np.int32))
+    return imgs, labels
+
+
+# ------------------------------------------------------------ bookkeeping
+
+
+@pytest.mark.parametrize("name", list(M.VARIANTS))
+def test_param_spec_matches_count(name):
+    cfg = M.VARIANTS[name]
+    spec = M.param_spec(cfg)
+    total = sum(int(np.prod(s)) for _, s in spec)
+    assert total == M.param_count(cfg)
+    theta = M.init_flat_params(cfg)
+    assert theta.shape == (total,)
+
+
+def test_unflatten_flatten_roundtrip():
+    cfg = M.VARIANTS["tiny"]
+    theta = M.init_flat_params(cfg, seed=3)
+    params = M._unflatten(cfg, theta)
+    back = M._flatten(cfg, params)
+    assert np.array_equal(np.asarray(theta), np.asarray(back))
+
+
+def test_classifier_head_zero_init():
+    cfg = M.VARIANTS["tiny"]
+    theta = M.init_flat_params(cfg)
+    params = M._unflatten(cfg, theta)
+    assert np.all(np.asarray(params["d1_w"]) == 0.0)
+    assert np.all(np.asarray(params["d1_b"]) == 0.0)
+
+
+def test_variants_are_ordered_by_size():
+    sizes = {n: M.param_count(c) for n, c in M.VARIANTS.items()}
+    assert sizes["tiny"] < sizes["small"] < sizes["base"] < sizes["wide"]
+
+
+# ----------------------------------------------------------------- forward
+
+
+def test_forward_shapes_and_mask():
+    cfg = M.VARIANTS["tiny"]
+    theta = M.init_flat_params(cfg)
+    imgs, _ = _batch(8)
+    logits = M.forward(cfg, 32, theta, imgs)
+    assert logits.shape == (8, M.PADDED_CLASSES)
+    # padding classes are masked to huge negatives
+    pad = np.asarray(logits[:, M.NUM_CLASSES:])
+    assert np.all(pad < -1e8)
+
+
+def test_initial_loss_is_uniform_over_real_classes():
+    cfg = M.VARIANTS["tiny"]
+    theta = M.init_flat_params(cfg)
+    imgs, labels = _batch()
+    loss, _ = M._loss_and_metrics(cfg, 32, theta, imgs, labels)
+    assert abs(float(loss) - np.log(M.NUM_CLASSES)) < 1e-3
+
+
+@pytest.mark.parametrize("bits", [32, 16, 8, 4])
+def test_forward_finite_at_all_precisions(bits):
+    cfg = M.VARIANTS["tiny"]
+    theta = M.init_flat_params(cfg, seed=1)
+    imgs, _ = _batch(4, seed=2)
+    logits = M.forward(cfg, bits, theta, imgs[:4])
+    assert np.all(np.isfinite(np.asarray(logits[:, : M.NUM_CLASSES])))
+
+
+# ---------------------------------------------------------------- training
+
+
+def test_train_step_contract_and_learning():
+    cfg = M.VARIANTS["tiny"]
+    step = jax.jit(M.make_train_step(cfg, 32))
+    theta = M.init_flat_params(cfg)
+    imgs, labels = _batch(seed=5)
+    lr = jnp.asarray([0.2], jnp.float32)
+    losses = []
+    for _ in range(12):
+        theta, metrics = step(theta, imgs, labels, lr)
+        losses.append(float(metrics[0]))
+    assert metrics.shape == (2,)
+    # overfits a single batch: loss must drop monotonically-ish and clearly
+    assert losses[-1] < losses[0] - 0.5, losses
+    # correct-count within range
+    assert 0.0 <= float(metrics[1]) <= M.TRAIN_BATCH
+
+
+def test_train_step_q8_keeps_params_on_grid():
+    cfg = M.VARIANTS["tiny"]
+    step = jax.jit(M.make_train_step(cfg, 8))
+    theta = M.init_flat_params(cfg, seed=4)
+    imgs, labels = _batch(seed=6)
+    new_theta, _ = step(theta, imgs, labels, jnp.asarray([0.05], jnp.float32))
+    # The returned params are on an 8-bit grid.  Re-quantization re-derives
+    # scale/zero-point from the (already clipped) tensor, so it is not a
+    # bitwise no-op — but it can move each value by at most one step of the
+    # new grid.
+    again = np.asarray(ref.fake_quant(new_theta, 8))
+    new_theta = np.asarray(new_theta)
+    step_size = (new_theta.max() - new_theta.min()) / 255.0
+    assert np.abs(again - new_theta).max() <= step_size * 1.01
+    # and the tensor really is coarse: at most 256 distinct values
+    assert len(np.unique(new_theta)) <= 256
+
+
+def test_low_precision_trains_slower():
+    """The paper's core observation: 4-bit training stalls vs f32."""
+    cfg = M.VARIANTS["tiny"]
+    imgs, labels = _batch(seed=7)
+    lr = jnp.asarray([0.05], jnp.float32)
+
+    def run(bits, steps=6):
+        step = jax.jit(M.make_train_step(cfg, bits))
+        theta = M.init_flat_params(cfg)
+        first = last = None
+        for _ in range(steps):
+            theta, m = step(theta, imgs, labels, lr)
+            if first is None:
+                first = float(m[0])
+            last = float(m[0])
+        return first - last  # loss improvement
+
+    assert run(32) > run(4) - 1e-3
+
+
+def test_eval_step_weight_mask():
+    cfg = M.VARIANTS["tiny"]
+    ev = jax.jit(M.make_eval_step(cfg))
+    theta = M.init_flat_params(cfg, seed=8)
+    imgs, labels = _batch(M.EVAL_BATCH, seed=9)
+    w_full = jnp.ones(M.EVAL_BATCH, jnp.float32)
+    w_half = jnp.asarray(
+        [1.0] * (M.EVAL_BATCH // 2) + [0.0] * (M.EVAL_BATCH // 2), jnp.float32
+    )
+    full = np.asarray(ev(theta, imgs, labels, w_full))
+    half = np.asarray(ev(theta, imgs, labels, w_half))
+    assert half[0] < full[0]  # masked loss sum is smaller
+    assert half[1] <= full[1]
+    # zero weights => zero metrics
+    zero = np.asarray(ev(theta, imgs, labels, jnp.zeros(M.EVAL_BATCH)))
+    assert zero[0] == 0.0 and zero[1] == 0.0
+
+
+def test_gradient_quantization_via_custom_vjp():
+    """Cotangents through _fq are quantized: at 4 bits the gradient of a
+    fine-grained function must lie on a coarse grid."""
+    x = jnp.asarray(np.linspace(-1, 1, 64, dtype=np.float32))
+    c = jnp.sin(x * 3.7)  # fine-grained CONSTANT cotangent source
+    g = jax.grad(lambda t: jnp.sum(M._fq(t, 4) * c))(x)
+    distinct = np.unique(np.round(np.asarray(g), 5))
+    # the raw cotangent c has 64 distinct values; after the quantized-STE
+    # backward pass it must collapse onto a <= 2^4-level grid
+    assert len(distinct) <= 16, len(distinct)
+
+
+def test_macs_per_sample_positive_and_ordered():
+    macs = {n: M.macs_per_sample(c) for n, c in M.VARIANTS.items()}
+    assert all(v > 0 for v in macs.values())
+    assert macs["tiny"] < macs["base"] < macs["wide"]

@@ -1,0 +1,85 @@
+"""Pallas OTA superposition kernel vs the jnp oracle + linearity laws."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.ota import ota_superpose_pallas
+
+
+def _inputs(k, n, seed, noise=True):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    hre = jnp.asarray((1.0 + 0.05 * rng.standard_normal(k)).astype(np.float32))
+    him = jnp.asarray((0.05 * rng.standard_normal(k)).astype(np.float32))
+    scale = 0.1 if noise else 0.0
+    nre = jnp.asarray((scale * rng.standard_normal(n)).astype(np.float32))
+    nim = jnp.asarray((scale * rng.standard_normal(n)).astype(np.float32))
+    return x, hre, him, nre, nim
+
+
+@pytest.mark.parametrize("n", [128, 4096, 5000, 16384])
+def test_matches_oracle(n):
+    args = _inputs(15, n, seed=n)
+    got_re, got_im = ota_superpose_pallas(*args)
+    want_re, want_im = ref.ota_superpose(*args)
+    np.testing.assert_allclose(np.asarray(got_re), np.asarray(want_re), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_im), np.asarray(want_im), atol=1e-4)
+
+
+def test_perfect_csi_no_noise_is_plain_sum():
+    k, n = 15, 1000
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    ones = jnp.ones(k, jnp.float32)
+    zeros_k = jnp.zeros(k, jnp.float32)
+    zeros_n = jnp.zeros(n, jnp.float32)
+    re, im = ota_superpose_pallas(x, ones, zeros_k, zeros_n, zeros_n)
+    np.testing.assert_allclose(np.asarray(re), np.asarray(x.sum(0)), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(im), 0.0, atol=1e-6)
+
+
+def test_linearity_in_payloads():
+    # superpose(x + y) == superpose(x) + superpose(y) - noise (noise counted
+    # once); verify with zero noise.
+    k, n = 7, 513
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    hre = jnp.asarray(rng.standard_normal(k).astype(np.float32))
+    him = jnp.asarray(rng.standard_normal(k).astype(np.float32))
+    z = jnp.zeros(n, jnp.float32)
+    rx, ix = ota_superpose_pallas(x, hre, him, z, z)
+    ry, iy = ota_superpose_pallas(y, hre, him, z, z)
+    rxy, ixy = ota_superpose_pallas(x + y, hre, him, z, z)
+    np.testing.assert_allclose(np.asarray(rxy), np.asarray(rx + ry), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(ixy), np.asarray(ix + iy), atol=1e-3)
+
+
+def test_silenced_clients_zero_gain_contribute_nothing():
+    k, n = 4, 256
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    hre = jnp.asarray([1.0, 0.0, 1.0, 0.0], jnp.float32)  # clients 1,3 silent
+    him = jnp.zeros(k, jnp.float32)
+    z = jnp.zeros(n, jnp.float32)
+    re, _ = ota_superpose_pallas(x, hre, him, z, z)
+    want = np.asarray(x[0] + x[2])
+    np.testing.assert_allclose(np.asarray(re), want, atol=1e-4)
+
+
+@given(
+    k=st.integers(min_value=1, max_value=20),
+    n=st.integers(min_value=1, max_value=3000),
+)
+def test_shapes_hypothesis(k, n):
+    args = _inputs(k, n, seed=k * 7919 + n)
+    got_re, got_im = ota_superpose_pallas(*args)
+    assert got_re.shape == (n,)
+    assert got_im.shape == (n,)
+    want_re, want_im = ref.ota_superpose(*args)
+    np.testing.assert_allclose(np.asarray(got_re), np.asarray(want_re), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got_im), np.asarray(want_im), atol=2e-4)

@@ -1,0 +1,119 @@
+"""Pallas tiled quantized matmul vs its oracles.
+
+Comparison notes: under jit, XLA's fusion (reciprocal multiplies, FMA) can
+flip `floor` on values that land within an ulp of a level boundary, so
+fixed-point comparisons use a tolerance scaled to the quantization step
+times the contraction depth; float-truncation and identity paths are exact
+up to accumulation order.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.qmatmul import qmatmul_pallas
+
+RNG = np.random.default_rng(7)
+
+
+def _mats(m, k, n, scale=1.0, seed=None):
+    rng = np.random.default_rng(seed if seed is not None else RNG.integers(1 << 31))
+    a = (rng.standard_normal((m, k)) * scale).astype(np.float32)
+    b = (rng.standard_normal((k, n)) * scale).astype(np.float32)
+    return jnp.asarray(a), jnp.asarray(b)
+
+
+def _tol(a, b, bits, bm=32, bk=128, bn=128):
+    """Error bound: a few boundary flips x step x |counterpart| x depth."""
+    if bits >= 32:
+        return 1e-4 * max(1.0, float(jnp.abs(a).max() * jnp.abs(b).max()))
+    if bits in ref.FLOAT_TRUNC_LEVELS:
+        rel = 2.0 ** -(bits - 9)
+        k = a.shape[1]
+        return 4.0 * rel * float(jnp.abs(a).max() * jnp.abs(b).max()) * k**0.5 + 1e-4
+    step_a = float((a.max() - a.min())) / (2**bits - 1)
+    step_b = float((b.max() - b.min())) / (2**bits - 1)
+    # a handful of one-level flips along the contraction
+    return 8.0 * (
+        step_a * float(jnp.abs(b).max()) + step_b * float(jnp.abs(a).max())
+    ) + 1e-4
+
+
+@pytest.mark.parametrize("bits", [32, 16, 8, 4])
+def test_matches_tiled_oracle_aligned(bits):
+    a, b = _mats(32, 128, 128, seed=1)
+    got = np.asarray(qmatmul_pallas(a, b, bits))
+    want = np.asarray(ref.qmatmul_tiled(a, b, bits, 32, 128, 128))
+    assert np.abs(got - want).max() < _tol(a, b, bits)
+
+
+@pytest.mark.parametrize("bits", [32, 16, 8, 4])
+@pytest.mark.parametrize("shape", [(5, 7, 3), (33, 130, 65), (1, 1, 1), (64, 256, 64)])
+def test_unaligned_shapes(bits, shape):
+    m, k, n = shape
+    a, b = _mats(m, k, n, seed=m * 1000 + k + n)
+    got = np.asarray(qmatmul_pallas(a, b, bits))
+    assert got.shape == (m, n)
+    if bits == 32:
+        want = np.asarray(jnp.matmul(a, b))
+        assert np.abs(got - want).max() < _tol(a, b, 32)
+    else:
+        # padded-tile-exact oracle: pad like the kernel, compare, crop
+        bm_, bk_, bn_ = min(32, m), min(128, k), min(128, n)
+        mp = -(-m // bm_) * bm_
+        kp = -(-k // bk_) * bk_
+        np_ = -(-n // bn_) * bn_
+        ap = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+        bp = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+        want = np.asarray(ref.qmatmul_tiled(ap, bp, bits, bm_, bk_, bn_))[:m, :n]
+        assert np.abs(got - want).max() < _tol(a, b, bits)
+
+
+def test_q32_equals_plain_matmul():
+    a, b = _mats(32, 128, 64, seed=3)
+    got = np.asarray(qmatmul_pallas(a, b, 32))
+    want = np.asarray(jnp.matmul(a, b))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_zero_inputs_give_zero():
+    a = jnp.zeros((32, 128), jnp.float32)
+    b = jnp.zeros((128, 128), jnp.float32)
+    for bits in [32, 8, 4]:
+        assert np.all(np.asarray(qmatmul_pallas(a, b, bits)) == 0.0)
+
+
+def test_contraction_mismatch_raises():
+    a = jnp.zeros((4, 5), jnp.float32)
+    b = jnp.zeros((6, 7), jnp.float32)
+    with pytest.raises(ValueError):
+        qmatmul_pallas(a, b, 8)
+
+
+def test_quantization_error_shrinks_with_bits():
+    a, b = _mats(32, 128, 64, scale=1.0, seed=9)
+    exact = np.asarray(jnp.matmul(a, b))
+    errs = []
+    for bits in [4, 8, 16]:
+        got = np.asarray(qmatmul_pallas(a, b, bits))
+        errs.append(np.abs(got - exact).mean())
+    assert errs[0] > errs[1] > errs[2], errs
+
+
+@given(
+    m=st.integers(min_value=1, max_value=40),
+    k=st.integers(min_value=1, max_value=150),
+    n=st.integers(min_value=1, max_value=150),
+    bits=st.sampled_from([32, 16, 8, 4]),
+)
+def test_shapes_hypothesis(m, k, n, bits):
+    a, b = _mats(m, k, n, seed=m * 10007 + k * 101 + n)
+    got = np.asarray(qmatmul_pallas(a, b, bits))
+    assert got.shape == (m, n)
+    assert np.all(np.isfinite(got))
+    # loose correctness: quantized result tracks the exact product
+    exact = np.asarray(jnp.matmul(a, b))
+    assert np.abs(got - exact).max() <= _tol(a, b, bits) + np.abs(exact).max() * 0.6

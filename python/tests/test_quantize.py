@@ -1,0 +1,181 @@
+"""Pallas quantization kernels vs pure-jnp oracles (Algorithm 2).
+
+The fixed-point kernel must match `ref.fixed_point_fake_quant` EXACTLY
+(atol=0): both compute scale/zero-point with the same jnp reductions and
+the kernel body replays the same floor/clip ops.  The float-truncation
+kernel is pure bit masking, so it is exact by construction.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.quantize import (
+    LANES,
+    fake_quant_pallas,
+    fixed_point_fake_quant_pallas,
+    float_truncate_pallas,
+)
+
+RNG = np.random.default_rng(2024)
+
+
+def _rand(shape, scale=1.0):
+    return (RNG.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ----------------------------------------------------------------- oracles
+
+
+@pytest.mark.parametrize("bits", ref.FIXED_POINT_LEVELS)
+def test_fixed_point_levels_on_grid(bits):
+    """De-quantized outputs sit on exactly <= 2^b distinct levels."""
+    w = jnp.asarray(_rand(257))
+    out = np.asarray(ref.fixed_point_fake_quant(w, bits))
+    assert len(np.unique(out)) <= 2**bits
+
+
+@pytest.mark.parametrize("bits", ref.FIXED_POINT_LEVELS)
+def test_fixed_point_range_preserved(bits):
+    """Outputs stay within [w_min - scale, w_max + scale]."""
+    w = _rand(513, scale=3.0)
+    out = np.asarray(ref.fixed_point_fake_quant(jnp.asarray(w), bits))
+    scale = (w.max() - w.min()) / (2**bits - 1)
+    assert out.min() >= w.min() - scale - 1e-6
+    assert out.max() <= w.max() + scale + 1e-6
+
+
+@pytest.mark.parametrize("bits", ref.FIXED_POINT_LEVELS)
+def test_fixed_point_error_bounded_by_step(bits):
+    w = _rand(1024)
+    out = np.asarray(ref.fixed_point_fake_quant(jnp.asarray(w), bits))
+    scale = (w.max() - w.min()) / (2**bits - 1)
+    # floor-quantization error is < 1 step (plus float slack)
+    assert np.abs(out - w).max() <= scale * (1 + 1e-3)
+
+
+def test_fixed_point_constant_tensor_survives():
+    """w_max == w_min must not divide by zero; values stay near constant."""
+    w = jnp.full((64,), 0.7311, jnp.float32)
+    out = np.asarray(ref.fixed_point_fake_quant(w, 8))
+    assert np.all(np.isfinite(out))
+    assert np.abs(out - 0.7311).max() < 1e-3
+
+
+def test_fixed_point_zeros():
+    out = np.asarray(ref.fixed_point_fake_quant(jnp.zeros(32), 4))
+    assert np.all(out == 0.0)
+
+
+@pytest.mark.parametrize("bits", ref.FLOAT_TRUNC_LEVELS)
+def test_float_truncate_magnitude_never_grows(bits):
+    """Mantissa truncation moves values toward zero, never away."""
+    w = _rand(512, scale=100.0)
+    out = np.asarray(ref.float_truncate(jnp.asarray(w), bits))
+    assert np.all(np.abs(out) <= np.abs(w))
+    assert np.all((np.sign(out) == np.sign(w)) | (out == 0))
+
+
+@pytest.mark.parametrize("bits", ref.FLOAT_TRUNC_LEVELS)
+def test_float_truncate_relative_error(bits):
+    """Relative error < 2^-(mantissa bits kept)."""
+    w = _rand(512, scale=5.0)
+    w = np.where(np.abs(w) < 1e-3, 1.0, w).astype(np.float32)
+    out = np.asarray(ref.float_truncate(jnp.asarray(w), bits))
+    rel = np.abs(out - w) / np.abs(w)
+    assert rel.max() < 2.0 ** -(bits - 9)
+
+
+def test_float_truncate_idempotent():
+    w = jnp.asarray(_rand(256))
+    once = ref.float_truncate(w, 16)
+    twice = ref.float_truncate(once, 16)
+    assert np.array_equal(np.asarray(once), np.asarray(twice))
+
+
+def test_fixed_point_monotone():
+    """Quantization preserves order (non-strict)."""
+    w = np.sort(_rand(512, scale=2.0))
+    out = np.asarray(ref.fixed_point_fake_quant(jnp.asarray(w), 6))
+    assert np.all(np.diff(out) >= 0)
+
+
+def test_q32_identity():
+    w = jnp.asarray(_rand(100))
+    assert np.array_equal(np.asarray(ref.fake_quant(w, 32)), np.asarray(w))
+    assert np.array_equal(np.asarray(fake_quant_pallas(w, 32)), np.asarray(w))
+
+
+def test_unsupported_level_raises():
+    with pytest.raises(ValueError):
+        ref.fake_quant(jnp.zeros(4), 5)
+    with pytest.raises(ValueError):
+        fake_quant_pallas(jnp.zeros(4), 7)
+    with pytest.raises(ValueError):
+        ref.float_truncate(jnp.zeros(4), 8)
+
+
+# ------------------------------------------------- pallas kernel vs oracle
+
+
+@pytest.mark.parametrize("bits", ref.FIXED_POINT_LEVELS)
+@pytest.mark.parametrize(
+    "shape", [(7,), (128,), (129,), (4, 33), (3, 3, 3, 16), (2000,)]
+)
+def test_pallas_fixed_matches_ref(bits, shape):
+    w = jnp.asarray(_rand(shape, scale=2.0))
+    got = np.asarray(fixed_point_fake_quant_pallas(w, bits))
+    want = np.asarray(ref.fixed_point_fake_quant(w, bits))
+    assert got.shape == want.shape
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("bits", ref.FLOAT_TRUNC_LEVELS)
+@pytest.mark.parametrize("shape", [(5,), (200,), (16, 128), (1, 1, 130)])
+def test_pallas_trunc_matches_ref(bits, shape):
+    w = jnp.asarray(_rand(shape, scale=50.0))
+    got = np.asarray(float_truncate_pallas(w, bits))
+    want = np.asarray(ref.float_truncate(w, bits))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    bits=st.sampled_from(ref.SUPPORTED_LEVELS),
+    scale=st.floats(min_value=1e-3, max_value=1e3),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pallas_matches_ref_hypothesis(n, bits, scale, seed):
+    """Hypothesis sweep over length / precision / magnitude / seed."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray((rng.standard_normal(n) * scale).astype(np.float32))
+    got = np.asarray(fake_quant_pallas(w, bits))
+    want = np.asarray(ref.fake_quant(w, bits))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(
+    rows=st.integers(min_value=1, max_value=40),
+    cols=st.integers(min_value=1, max_value=300),
+    bits=st.sampled_from(ref.FIXED_POINT_LEVELS),
+)
+def test_pallas_2d_shapes_hypothesis(rows, cols, bits):
+    rng = np.random.default_rng(rows * 1000 + cols)
+    w = jnp.asarray(rng.standard_normal((rows, cols)).astype(np.float32))
+    got = np.asarray(fake_quant_pallas(w, bits))
+    want = np.asarray(ref.fake_quant(w, bits))
+    assert got.shape == (rows, cols)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pallas_padding_does_not_leak():
+    """Values past the tensor end (lane padding) must never affect output."""
+    w = _rand(LANES + 1, scale=2.0)
+    full = np.asarray(fake_quant_pallas(jnp.asarray(w), 6))
+    # same data with a different total length => same prefix result
+    w2 = np.concatenate([w, np.full(37, 77.7, np.float32)])
+    out2 = np.asarray(fake_quant_pallas(jnp.asarray(w2[: LANES + 1]), 6))
+    np.testing.assert_array_equal(full, out2)

@@ -1,0 +1,110 @@
+//! Ablations over the paper's experimental dimensions that Figs. 3/4
+//! aggregate away:
+//!
+//!   * the 5-30 dB SNR band (§IV-A: "5-30dB of emulated Gaussian noise")
+//!   * pilot-based vs perfect CSI (Eq. 5's estimation error)
+//!   * update- vs weight-transmission (Alg. 1 step 10/14 vs step 18 —
+//!     DESIGN.md §3 decision 3)
+//!   * full vs partial participation (K < N client selection, §II-A)
+//!   * IID vs Dirichlet non-IID sharding (extension knob)
+//!
+//! Run: `cargo bench --bench ablations`  (MPOTA_AB_ROUNDS to scale)
+
+use mpota::config::{RunConfig, Transmit};
+use mpota::coordinator::{pretrain, Coordinator};
+use mpota::fl::Scheme;
+use mpota::runtime::Runtime;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn base_cfg(rounds: usize, pretrained: &std::path::Path) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.rounds = rounds;
+    cfg.scheme = Scheme::parse("16,8,4").unwrap();
+    cfg.train_samples = 1920;
+    cfg.test_samples = 384;
+    cfg.local_steps = 2;
+    cfg.lr = 0.02;
+    cfg.init_params = Some(pretrained.to_path_buf());
+    cfg
+}
+
+fn run(cfg: RunConfig) -> anyhow::Result<(f64, f64)> {
+    let mut coord = Coordinator::new(cfg)?;
+    let report = coord.run()?;
+    let mean_mse = report.log.rounds.iter().map(|r| r.ota_mse).sum::<f64>()
+        / report.log.rounds.len() as f64;
+    Ok((report.final_accuracy, mean_mse))
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing: run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let rounds = env_usize("MPOTA_AB_ROUNDS", 3);
+    let pretrained = {
+        let rt = Runtime::load(&dir)?;
+        pretrain::ensure_pretrained(&rt, &pretrain::PretrainConfig::default())?
+    };
+
+    println!("=== ablations (scheme 16,8,4, {rounds} rounds) ===\n");
+
+    // ---- SNR band (paper §IV-A) -----------------------------------------
+    println!("{:<26} {:>10} {:>14}", "SNR", "final acc", "mean OTA MSE");
+    let mut mses = Vec::new();
+    for snr in [5.0f32, 10.0, 20.0, 30.0] {
+        let mut cfg = base_cfg(rounds, &pretrained);
+        cfg.channel.snr_db = snr;
+        let (acc, mse) = run(cfg)?;
+        println!("{:<26} {:>10.4} {:>14.3e}", format!("{snr} dB"), acc, mse);
+        mses.push(mse);
+    }
+    assert!(mses[0] > mses[3], "MSE must fall across the 5→30 dB band");
+
+    // ---- CSI quality (Eq. 5) --------------------------------------------
+    println!("\n{:<26} {:>10} {:>14}", "CSI", "final acc", "mean OTA MSE");
+    for (label, perfect, pilot_len) in
+        [("perfect", true, 16usize), ("LS pilot x16", false, 16), ("LS pilot x4", false, 4)]
+    {
+        let mut cfg = base_cfg(rounds, &pretrained);
+        cfg.channel.perfect_csi = perfect;
+        cfg.channel.pilot_len = pilot_len;
+        let (acc, mse) = run(cfg)?;
+        println!("{label:<26} {acc:>10.4} {mse:>14.3e}");
+    }
+
+    // ---- transmit mode (DESIGN.md §3.3) ----------------------------------
+    println!("\n{:<26} {:>10}", "payload", "final acc");
+    let mut accs = Vec::new();
+    for (label, mode) in
+        [("updates (Alg.1 §10/14)", Transmit::Updates), ("weights (Alg.1 §18)", Transmit::Weights)]
+    {
+        let mut cfg = base_cfg(rounds, &pretrained);
+        cfg.transmit = mode;
+        let (acc, _) = run(cfg)?;
+        println!("{label:<26} {acc:>10.4}");
+        accs.push(acc);
+    }
+    println!(
+        "  -> update-transmission advantage: {:+.1} accuracy points",
+        100.0 * (accs[0] - accs[1])
+    );
+
+    // ---- participation (K of N, §II-A) -----------------------------------
+    println!("\n{:<26} {:>10}", "participation", "final acc");
+    for k in [15usize, 9, 6] {
+        let mut cfg = base_cfg(rounds, &pretrained);
+        cfg.clients_per_round = k;
+        // scheme groups must divide the SELECTED count each round; keep all
+        // 15 clients but sample k of them
+        let (acc, _) = run(cfg)?;
+        println!("{:<26} {acc:>10.4}", format!("K={k} of 15"));
+    }
+
+    println!("\nablations complete");
+    Ok(())
+}

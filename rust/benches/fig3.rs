@@ -1,0 +1,110 @@
+//! Regenerates **Fig. 3**: server training accuracy over communication
+//! rounds for the paper's precision schemes (paper §IV-B2).
+//!
+//! Scaled for one CPU core: default 12 rounds / reduced corpus (override
+//! with MPOTA_F3_ROUNDS / MPOTA_F3_SAMPLES).  Expected shape: schemes
+//! containing >=16-bit clients converge fast and smoothly; [4,4,4] and
+//! [12,4,4] converge slower and erratically; 32-bit adds little over
+//! 16-bit.
+//!
+//! Run: `cargo bench --bench fig3`
+
+use mpota::config::RunConfig;
+use mpota::coordinator::{pretrain, Coordinator};
+use mpota::fl::Scheme;
+use mpota::metrics::RunLog;
+use mpota::runtime::Runtime;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing: run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let rounds = env_usize("MPOTA_F3_ROUNDS", 6);
+    let samples = env_usize("MPOTA_F3_SAMPLES", 1920);
+
+    // pretrained init = the paper's "ImageNet pre-trained initialization"
+    let pretrained = {
+        let rt = Runtime::load(&dir)?;
+        pretrain::ensure_pretrained(&rt, &pretrain::PretrainConfig::default())?
+    };
+
+    let schemes = Scheme::paper_schemes();
+    println!(
+        "=== Fig. 3 reproduction: server accuracy vs round ({rounds} rounds, \
+         15 clients, pretrained init, 20 dB SNR) ==="
+    );
+
+    let mut curves: Vec<(String, RunLog)> = Vec::new();
+    for scheme in &schemes {
+        let mut cfg = RunConfig::default();
+        cfg.rounds = rounds;
+        cfg.scheme = scheme.clone();
+        cfg.train_samples = samples;
+        cfg.test_samples = 384;
+        cfg.local_steps = 2;
+        cfg.lr = 0.02;
+        cfg.init_params = Some(pretrained.clone());
+        let mut coord = Coordinator::new(cfg)?;
+        let report = coord.run()?;
+        eprintln!(
+            "[{}] final {:.3} best {:.3} instab {:.4}",
+            scheme,
+            report.final_accuracy,
+            report.log.best_accuracy(),
+            report.log.early_instability(rounds)
+        );
+        curves.push((scheme.to_string(), report.log));
+    }
+
+    // ---- the figure, as a text series table ------------------------------
+    print!("\n{:<10}", "round");
+    for (label, _) in &curves {
+        print!("{:>10}", label);
+    }
+    println!();
+    for r in 0..rounds {
+        print!("{:<10}", r + 1);
+        for (_, log) in &curves {
+            print!("{:>10.4}", log.rounds[r].server_accuracy);
+        }
+        println!();
+    }
+
+    // ---- shape checks ----------------------------------------------------
+    let acc_of = |label: &str| {
+        curves
+            .iter()
+            .find(|(l, _)| l == label)
+            .map(|(_, log)| log.final_accuracy())
+            .unwrap()
+    };
+    let instab_of = |label: &str| {
+        curves
+            .iter()
+            .find(|(l, _)| l == label)
+            .map(|(_, log)| log.early_instability(rounds))
+            .unwrap()
+    };
+    println!("\nshape checks (paper Fig. 3):");
+    let slow_low = acc_of("4,4,4") <= acc_of("16,16,16") + 0.02;
+    println!("  [4,4,4] converges no faster than [16,16,16]: {slow_low}");
+    let marginal_32 = (acc_of("32,32,32") - acc_of("16,16,16")).abs() < 0.10;
+    println!("  32-bit only marginal gain over 16-bit: {marginal_32}");
+    let erratic = instab_of("4,4,4") + instab_of("12,4,4")
+        >= instab_of("32,16,8") + instab_of("16,16,16") - 1e-6;
+    println!("  low-precision schemes more erratic: {erratic}");
+
+    // persist curves for fig4 / plotting
+    let out = std::path::PathBuf::from("runs/fig3");
+    for (label, log) in &curves {
+        log.write_files(&out, &label.replace(',', "_"))?;
+    }
+    println!("\ncurves written to runs/fig3/*.csv");
+    Ok(())
+}

@@ -1,0 +1,160 @@
+//! Hot-path microbenchmarks (criterion is not in the vendored set; this is
+//! a small warmup+trimmed-mean harness with ns/op and throughput output).
+//!
+//! Covers the L3 request-path kernels the §Perf pass optimizes:
+//!   * OTA analog superposition (K=15 complex-gain accumulate + noise)
+//!   * Algorithm-2 quantization (fixed-point and float-trunc)
+//!   * digital-baseline encode/decode
+//!   * Rayleigh channel round draw (pilot estimation included)
+//!   * fedavg / vector kernels
+//!   * PJRT train-step + eval dispatch (if artifacts are present)
+//!
+//! Run: `cargo bench --bench hotpaths`
+
+use std::time::Instant;
+
+use mpota::channel::{ChannelConfig, RoundChannel};
+use mpota::ota;
+use mpota::quant::{self, Precision};
+use mpota::rng::Rng;
+
+/// warmup + measure: returns (secs_per_iter, iters)
+fn bench<F: FnMut()>(label: &str, bytes_per_iter: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let mut samples = Vec::new();
+    let target = std::time::Duration::from_millis(600);
+    let t_all = Instant::now();
+    let mut iters = 0u64;
+    while t_all.elapsed() < target || samples.len() < 5 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        iters += 1;
+        if iters > 10_000 {
+            break;
+        }
+    }
+    samples.sort_by(f64::total_cmp);
+    // trimmed mean of the middle 60%
+    let lo = samples.len() / 5;
+    let hi = samples.len() - lo;
+    let mean: f64 = samples[lo..hi].iter().sum::<f64>() / (hi - lo) as f64;
+    let gbps = bytes_per_iter as f64 / mean / 1e9;
+    if bytes_per_iter > 0 {
+        println!("{label:<44} {:>12.3} ms/iter {:>9.2} GB/s", mean * 1e3, gbps);
+    } else {
+        println!("{label:<44} {:>12.3} ms/iter", mean * 1e3);
+    }
+    mean
+}
+
+fn main() {
+    println!("=== hotpaths: L3 request-path microbenchmarks ===\n");
+    let k = 15usize;
+    let n = 142_720usize; // flagship param count: the real payload size
+    let root = Rng::seed_from(1);
+
+    // payloads
+    let mut rng = root.stream("bench");
+    let payloads: Vec<Vec<f32>> = (0..k)
+        .map(|_| {
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal(&mut v, 0.0, 1.0);
+            v
+        })
+        .collect();
+    let cfg = ChannelConfig::default();
+    let round = RoundChannel::draw(&cfg, k, &mut rng);
+
+    // --- OTA analog aggregation (the paper's aggregation hot path) ------
+    let payload_bytes = k * n * 4;
+    bench("ota::analog::aggregate (15 x 142720 f32)", payload_bytes, || {
+        let mut noise_rng = Rng::seed_from(7);
+        let (agg, _) = ota::analog::aggregate(&payloads, &round, &mut noise_rng);
+        std::hint::black_box(agg);
+    });
+
+    // --- digital baseline ------------------------------------------------
+    let precisions: Vec<Precision> =
+        (0..k).map(|i| Precision::of([32u8, 8, 4][i % 3])).collect();
+    bench("ota::digital::aggregate (encode+decode+avg)", payload_bytes, || {
+        let (agg, _) = ota::digital::aggregate(&payloads, &precisions);
+        std::hint::black_box(agg);
+    });
+
+    // --- quantization -----------------------------------------------------
+    let src = payloads[0].clone();
+    let mut buf = src.clone();
+    bench("quant fixed-point 4-bit (142720 f32)", n * 4, || {
+        buf.copy_from_slice(&src);
+        quant::fake_quant_inplace(&mut buf, Precision::of(4));
+        std::hint::black_box(&buf);
+    });
+    bench("quant float-trunc 16-bit (142720 f32)", n * 4, || {
+        buf.copy_from_slice(&src);
+        quant::fake_quant_inplace(&mut buf, Precision::of(16));
+        std::hint::black_box(&buf);
+    });
+
+    // --- channel simulation ----------------------------------------------
+    bench("RoundChannel::draw (15 clients, 16-pilot LS)", 0, || {
+        let mut ch_rng = Rng::seed_from(3);
+        let rc = RoundChannel::draw(&cfg, k, &mut ch_rng);
+        std::hint::black_box(rc);
+    });
+
+    // --- fedavg oracle ----------------------------------------------------
+    bench("fl::mean (15 x 142720 f32)", payload_bytes, || {
+        let m = mpota::fl::mean(&payloads);
+        std::hint::black_box(m);
+    });
+
+    // --- data generation ---------------------------------------------------
+    bench("signs::render 32x32 sample", 0, || {
+        let mut r = Rng::seed_from(11);
+        let img = mpota::data::signs::render(7, &mut r);
+        std::hint::black_box(img);
+    });
+
+    // --- PJRT dispatch (needs artifacts) -----------------------------------
+    let dir = std::path::PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = mpota::runtime::Runtime::load(&dir).unwrap();
+        let theta = rt.init_params("base").unwrap();
+        let mut drng = Rng::seed_from(5);
+        let data = mpota::data::Dataset::generate(64, &mut drng);
+        let (images, labels) = (
+            data.images[..32 * mpota::data::SAMPLE_LEN].to_vec(),
+            data.labels[..32].to_vec(),
+        );
+        for bits in [32u8, 8, 4] {
+            // compile outside the timed region
+            rt.train_step("base", Precision::of(bits), &theta, &images, &labels, 0.01)
+                .unwrap();
+            bench(&format!("PJRT train_step base q{bits} (batch 32)"), 0, || {
+                let out = rt
+                    .train_step(
+                        "base",
+                        Precision::of(bits),
+                        &theta,
+                        &images,
+                        &labels,
+                        0.01,
+                    )
+                    .unwrap();
+                std::hint::black_box(out);
+            });
+        }
+        bench("PJRT evaluate base (64 samples)", 0, || {
+            let r = rt
+                .evaluate("base", &theta, &data.images, &data.labels)
+                .unwrap();
+            std::hint::black_box(r);
+        });
+    } else {
+        println!("(PJRT benches skipped: run `make artifacts` first)");
+    }
+}

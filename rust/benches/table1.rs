@@ -1,0 +1,95 @@
+//! Regenerates **Table I**: classification accuracy of f32-trained CNN
+//! models post-training-quantized to 8/6/4/3/2 bits (paper §II-C).
+//!
+//! The paper's zoo (densenet-161 … squeezenet on GTSRB) maps to the
+//! SignNet variant family on synthetic signs (DESIGN.md §2): each variant
+//! is trained centrally at f32, then Algorithm-2-quantized per level and
+//! evaluated.  The expected *shape* (what the paper's colour coding says):
+//! 8/6-bit ≈ f32, 4-bit noticeably damaged but usable, 3/2-bit collapse.
+//!
+//! Run: `cargo bench --bench table1` (optionally MPOTA_T1_EPOCHS=n)
+
+use mpota::coordinator::pretrain::{pretrain, PretrainConfig};
+use mpota::data::Dataset;
+use mpota::quant::{Precision, Rounding};
+use mpota::rng::Rng;
+use mpota::runtime::Runtime;
+
+const PTQ_LEVELS: [u8; 5] = [8, 6, 4, 3, 2];
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing: run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let rt = Runtime::load(&dir)?;
+    let epochs: usize = std::env::var("MPOTA_T1_EPOCHS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+
+    // held-out evaluation corpus (same generator family, fresh stream)
+    let mut eval_rng = Rng::seed_from(99).stream("table1-eval");
+    let test = Dataset::generate(860, &mut eval_rng);
+
+    println!("=== Table I reproduction: PTQ accuracy across quantization levels ===");
+    println!(
+        "(SignNet variants stand in for the paper's ImageNet-pretrained zoo; \
+         f32 central training, {epochs} epochs, then Algorithm-2 PTQ)\n"
+    );
+    print!("{:<8} {:>8}", "model", "f32");
+    for b in PTQ_LEVELS {
+        print!("{:>8}", format!("{b}-bit"));
+    }
+    println!();
+
+    let variants: Vec<String> = rt.manifest.variants.keys().cloned().collect();
+    let mut rows: Vec<(String, f64, Vec<f64>)> = Vec::new();
+    for name in &variants {
+        let cfg = PretrainConfig {
+            variant: name.clone(),
+            samples: 3072,
+            epochs,
+            lr: 0.1,
+            seed: 17,
+        };
+        let (theta, _) = pretrain(&rt, &cfg)?;
+        let base = rt.evaluate(name, &theta, &test.images, &test.labels)?;
+        let mut accs = Vec::new();
+        print!("{:<8} {:>7.2}%", name, 100.0 * base.accuracy);
+        for b in PTQ_LEVELS {
+            // per-layer Algorithm-2 PTQ (floor), paper §III-B semantics
+            let q = rt.quantize_model(name, &theta, Precision::of(b), Rounding::Floor)?;
+            let r = rt.evaluate(name, &q, &test.images, &test.labels)?;
+            accs.push(r.accuracy);
+            print!("{:>7.2}%", 100.0 * r.accuracy);
+        }
+        println!();
+        rows.push((name.clone(), base.accuracy, accs));
+    }
+
+    // ---- shape checks vs the paper's colour bands -----------------------
+    println!("\nshape checks (paper Table I):");
+    let mut ok = true;
+    for (name, f32_acc, accs) in &rows {
+        // 8-bit and 6-bit stay close to f32 (paper: degradation only
+        // "noticeable" at 8-bit)
+        let near = accs[0] > f32_acc - 0.10 && accs[1] > f32_acc - 0.12;
+        // 2-bit collapses far below 8-bit
+        let collapse = accs[4] < accs[0] - 0.20 || accs[4] < 0.20;
+        // monotone-ish: lower bits never much better
+        let mono = accs[0] + 0.05 >= accs[2] && accs[2] + 0.05 >= accs[4];
+        let pass = near && collapse && mono;
+        ok &= pass;
+        println!(
+            "  {name:<8} 8/6-bit≈f32: {near}, 2-bit collapse: {collapse}, \
+             monotone: {mono} -> {}",
+            if pass { "PASS" } else { "FAIL" }
+        );
+    }
+    if !ok {
+        println!("WARNING: some shape checks failed (undertrained models?)");
+    }
+    Ok(())
+}

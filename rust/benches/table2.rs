@@ -1,0 +1,105 @@
+//! Regenerates **Table II**: estimated energy consumption per sample for a
+//! ResNet-50 forward pass, and relative savings vs 32-bit, averaged over
+//! the nine FPGA platforms (paper §IV-B1).
+//!
+//! Also prints the same table for the SignNet flagship (the model the FL
+//! experiments actually train) and the per-platform breakdown, since the
+//! paper notes the variance across hardware.
+//!
+//! Run: `cargo bench --bench table2`
+
+use mpota::energy::{
+    energy_joules, mean_energy_joules, saving_vs_f32, Platform, PLATFORMS,
+    RESNET50_MACS_PER_SAMPLE,
+};
+use mpota::quant::Precision;
+
+const LEVELS: [u8; 6] = [32, 16, 12, 8, 6, 4];
+
+fn row(levels: &[u8], macs: f64) -> (Vec<f64>, Vec<f64>) {
+    let energies: Vec<f64> = levels
+        .iter()
+        .map(|&b| mean_energy_joules(Precision::of(b), macs))
+        .collect();
+    let savings: Vec<f64> = levels
+        .iter()
+        .map(|&b| saving_vs_f32(Precision::of(b), macs))
+        .collect();
+    (energies, savings)
+}
+
+fn print_table(title: &str, macs: f64) {
+    println!("\n{title}  (D_ML = {macs:.3e} MACs)");
+    print!("{:<18}", "");
+    for b in LEVELS {
+        print!("{:>10}", format!("{b}-bit"));
+    }
+    println!();
+    let (energies, savings) = row(&LEVELS, macs);
+    print!("{:<18}", "Energy Cost (J)");
+    for e in &energies {
+        print!("{:>10}", format_sig(*e));
+    }
+    println!();
+    print!("{:<18}", "Saving (%)");
+    for s in &savings {
+        print!("{:>10.2}", s);
+    }
+    println!();
+}
+
+fn format_sig(v: f64) -> String {
+    if v >= 0.1 {
+        format!("{v:.2}")
+    } else if v >= 0.01 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+fn main() {
+    println!("=== Table II reproduction: energy per sample & savings vs 32-bit ===");
+    println!("paper reference (avg of 9 platforms, ResNet-50 fwd):");
+    println!("  32-bit 0.36 J | 16-bit 0.17 J (52.6%) | 12-bit 0.16 J (56.2%)");
+    println!("  8-bit 0.022 J (93.9%) | 6-bit 0.021 J (94.2%) | 4-bit 0.0056 J (98.5%)");
+
+    print_table(
+        "ResNet-50 forward pass (the paper's workload)",
+        RESNET50_MACS_PER_SAMPLE,
+    );
+
+    // the model this repo actually trains (manifest MACs if available)
+    let signnet_macs = match mpota::runtime::Manifest::load(std::path::Path::new("artifacts")) {
+        Ok(m) => m.variant("base").map(|v| v.macs_per_sample as f64).unwrap_or(1.0e7),
+        Err(_) => 1.0e7,
+    };
+    print_table("SignNet-base forward pass (this repo's workload)", signnet_macs);
+
+    println!("\nper-platform energy at ResNet-50 fwd (J/sample):");
+    print!("{:<10}", "platform");
+    for b in LEVELS {
+        print!("{:>10}", format!("{b}-bit"));
+    }
+    println!();
+    for plat in &PLATFORMS {
+        print_platform_row(plat);
+    }
+
+    // shape assertions (who-wins / plateau structure, DESIGN.md §4)
+    let (e, s) = row(&LEVELS, RESNET50_MACS_PER_SAMPLE);
+    assert!(e.windows(2).all(|w| w[1] <= w[0] * 1.0001), "energy must fall with bits");
+    assert!((e[1] - e[2]).abs() / e[1] < 0.10, "16≈12-bit plateau");
+    assert!((e[3] - e[4]).abs() / e[3] < 0.10, "8≈6-bit plateau");
+    assert!(s[5] - s[3] < s[3] - s[1], "diminishing returns 8→4 vs 16→8");
+    println!("\nshape checks vs paper Table II: PASS (plateaus + diminishing returns)");
+}
+
+fn print_platform_row(plat: &Platform) {
+    print!("{:<10}", plat.name);
+    for b in LEVELS {
+        let e = energy_joules(plat, Precision::of(b), RESNET50_MACS_PER_SAMPLE);
+        print!("{:>10}", format_sig(e));
+    }
+    println!();
+}

@@ -1,0 +1,158 @@
+//! Minimal complex-f32 arithmetic for the baseband channel simulation.
+//!
+//! (The vendored dependency set has no `num-complex`; the handful of ops
+//! the PHY needs are trivial to supply and keep fully inlinable.)
+
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+/// Complex number, f32 components (baseband samples, channel gains).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct C32 {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl C32 {
+    pub const ZERO: C32 = C32 { re: 0.0, im: 0.0 };
+    pub const ONE: C32 = C32 { re: 1.0, im: 0.0 };
+
+    #[inline]
+    pub fn new(re: f32, im: f32) -> Self {
+        C32 { re, im }
+    }
+
+    /// From polar form (magnitude, phase-radians).
+    pub fn from_polar(r: f32, theta: f32) -> Self {
+        C32::new(r * theta.cos(), r * theta.sin())
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        C32::new(self.re, -self.im)
+    }
+
+    #[inline]
+    pub fn norm_sq(self) -> f32 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn abs(self) -> f32 {
+        self.norm_sq().sqrt()
+    }
+
+    pub fn arg(self) -> f32 {
+        self.im.atan2(self.re)
+    }
+
+    /// Multiplicative inverse; returns None for (near-)zero magnitude.
+    pub fn inv(self) -> Option<Self> {
+        let n = self.norm_sq();
+        if n < 1e-30 {
+            None
+        } else {
+            Some(C32::new(self.re / n, -self.im / n))
+        }
+    }
+
+    /// Scale by a real factor.
+    #[inline]
+    pub fn scale(self, a: f32) -> Self {
+        C32::new(self.re * a, self.im * a)
+    }
+}
+
+impl Add for C32 {
+    type Output = C32;
+    #[inline]
+    fn add(self, o: C32) -> C32 {
+        C32::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl Sub for C32 {
+    type Output = C32;
+    #[inline]
+    fn sub(self, o: C32) -> C32 {
+        C32::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl Mul for C32 {
+    type Output = C32;
+    #[inline]
+    fn mul(self, o: C32) -> C32 {
+        C32::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl Div for C32 {
+    type Output = C32;
+    #[inline]
+    fn div(self, o: C32) -> C32 {
+        let n = o.norm_sq();
+        C32::new(
+            (self.re * o.re + self.im * o.im) / n,
+            (self.im * o.re - self.re * o.im) / n,
+        )
+    }
+}
+
+impl Neg for C32 {
+    type Output = C32;
+    #[inline]
+    fn neg(self) -> C32 {
+        C32::new(-self.re, -self.im)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: C32, b: C32, tol: f32) -> bool {
+        (a - b).abs() < tol
+    }
+
+    #[test]
+    fn basic_arithmetic() {
+        let a = C32::new(1.0, 2.0);
+        let b = C32::new(3.0, -1.0);
+        assert_eq!(a + b, C32::new(4.0, 1.0));
+        assert_eq!(a - b, C32::new(-2.0, 3.0));
+        // (1+2i)(3-i) = 3 - i + 6i - 2i^2 = 5 + 5i
+        assert_eq!(a * b, C32::new(5.0, 5.0));
+    }
+
+    #[test]
+    fn division_inverts_multiplication() {
+        let a = C32::new(0.3, -0.7);
+        let b = C32::new(-1.2, 0.4);
+        assert!(close((a * b) / b, a, 1e-6));
+    }
+
+    #[test]
+    fn inv_and_conj() {
+        let a = C32::new(2.0, -3.0);
+        let inv = a.inv().unwrap();
+        assert!(close(a * inv, C32::ONE, 1e-6));
+        assert_eq!(a.conj(), C32::new(2.0, 3.0));
+        assert!(C32::ZERO.inv().is_none());
+    }
+
+    #[test]
+    fn polar_roundtrip() {
+        let c = C32::from_polar(2.0, 0.7);
+        assert!((c.abs() - 2.0).abs() < 1e-6);
+        assert!((c.arg() - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn norms() {
+        assert_eq!(C32::new(3.0, 4.0).abs(), 5.0);
+        assert_eq!(C32::new(3.0, 4.0).norm_sq(), 25.0);
+    }
+}

@@ -1,0 +1,103 @@
+//! Rayleigh block-fading channel draws.
+//!
+//! Paper §II-B: "a Single-Input Single-Output (SISO) fading channel between
+//! the server and an edge device k, characterized by a Rayleigh distributed
+//! random variable h_{s,k} ∈ ℂ".  We model h ~ CN(0, 1): real and imaginary
+//! parts i.i.d. N(0, 1/2), so |h| is Rayleigh(σ=1/√2) with E[|h|²] = 1.
+//! Block fading: one draw per (client, round), constant across the round's
+//! payload — the standard model in the OTA-FL line the paper builds on [3],
+//! [5].
+
+use crate::channel::complex::C32;
+use crate::rng::Rng;
+
+/// Unit-average-power Rayleigh coefficient.
+pub fn rayleigh_coeff(rng: &mut Rng) -> C32 {
+    let s = std::f32::consts::FRAC_1_SQRT_2;
+    C32::new(rng.normal_f32(0.0, s), rng.normal_f32(0.0, s))
+}
+
+/// Per-round channel realisations for all clients.
+pub fn draw_round(rng: &mut Rng, clients: usize) -> Vec<C32> {
+    (0..clients).map(|_| rayleigh_coeff(rng)).collect()
+}
+
+/// Circularly-symmetric complex Gaussian sample with total variance `var`
+/// (each component gets var/2) — receiver noise, estimation error.
+pub fn cn_sample(rng: &mut Rng, var: f32) -> C32 {
+    let s = (var * 0.5).sqrt();
+    C32::new(rng.normal_f32(0.0, s), rng.normal_f32(0.0, s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_average_power() {
+        let mut rng = Rng::seed_from(100);
+        let n = 200_000;
+        let mean_pow: f64 = (0..n)
+            .map(|_| rayleigh_coeff(&mut rng).norm_sq() as f64)
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean_pow - 1.0).abs() < 0.01, "E|h|^2 = {mean_pow}");
+    }
+
+    #[test]
+    fn magnitude_is_rayleigh() {
+        // E[|h|] for Rayleigh(1/sqrt(2)) = sqrt(pi)/2 ≈ 0.8862
+        let mut rng = Rng::seed_from(101);
+        let n = 200_000;
+        let mean_mag: f64 = (0..n)
+            .map(|_| rayleigh_coeff(&mut rng).abs() as f64)
+            .sum::<f64>()
+            / n as f64;
+        let expect = (std::f64::consts::PI).sqrt() / 2.0;
+        assert!((mean_mag - expect).abs() < 0.005, "E|h| = {mean_mag}");
+    }
+
+    #[test]
+    fn phase_uniform() {
+        // quadrant counts should be ~equal
+        let mut rng = Rng::seed_from(102);
+        let mut quad = [0usize; 4];
+        let n = 40_000;
+        for _ in 0..n {
+            let h = rayleigh_coeff(&mut rng);
+            let q = match (h.re >= 0.0, h.im >= 0.0) {
+                (true, true) => 0,
+                (false, true) => 1,
+                (false, false) => 2,
+                (true, false) => 3,
+            };
+            quad[q] += 1;
+        }
+        for q in quad {
+            let frac = q as f64 / n as f64;
+            assert!((frac - 0.25).abs() < 0.01, "{quad:?}");
+        }
+    }
+
+    #[test]
+    fn cn_sample_variance() {
+        let mut rng = Rng::seed_from(103);
+        let var = 0.37f32;
+        let n = 100_000;
+        let mean_pow: f64 = (0..n)
+            .map(|_| cn_sample(&mut rng, var).norm_sq() as f64)
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean_pow - var as f64).abs() < 0.01, "{mean_pow}");
+    }
+
+    #[test]
+    fn draw_round_shape_and_determinism() {
+        let mut a = Rng::seed_from(9);
+        let mut b = Rng::seed_from(9);
+        let ha = draw_round(&mut a, 15);
+        let hb = draw_round(&mut b, 15);
+        assert_eq!(ha.len(), 15);
+        assert_eq!(ha, hb);
+    }
+}

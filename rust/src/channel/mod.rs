@@ -1,0 +1,187 @@
+//! Wireless physical-layer substrate: everything between "client has a
+//! decimal payload" and "server has a noisy superposition".
+//!
+//! Composition per communication round (paper §III-A):
+//!
+//! 1. [`fading`] draws each client's Rayleigh coefficient h_k (block fading);
+//! 2. [`pilot`] simulates the downlink pilot broadcast and LS estimation
+//!    ĥ_k at each client (Eq. 5);
+//! 3. [`precode`] computes the truncated channel inversion ĥ_k⁻¹ (Eq. 6);
+//! 4. [`RoundChannel`] packages the resulting effective gains h_k·ĥ_k⁻¹
+//!    and the server AWGN level for the OTA superposition (`crate::ota`).
+
+pub mod complex;
+pub mod fading;
+pub mod pilot;
+pub mod precode;
+
+pub use complex::C32;
+pub use precode::Precode;
+
+use crate::rng::Rng;
+
+/// Channel-simulation configuration (one per run).
+#[derive(Clone, Debug)]
+pub struct ChannelConfig {
+    /// Server receiver SNR in dB (paper: 5-30 dB of emulated noise).
+    pub snr_db: f32,
+    /// Pilot sequence length for LS channel estimation.
+    pub pilot_len: usize,
+    /// Per-sample noise variance during pilot reception at the clients.
+    pub pilot_noise_var: f32,
+    /// Truncation threshold on |ĥ| for channel-inversion precoding.
+    pub truncation: f32,
+    /// Perfect-CSI switch (ablation: zero estimation error).
+    pub perfect_csi: bool,
+}
+
+impl Default for ChannelConfig {
+    fn default() -> Self {
+        ChannelConfig {
+            snr_db: 20.0,
+            pilot_len: 16,
+            pilot_noise_var: 0.01,
+            truncation: precode::DEFAULT_TRUNCATION,
+            perfect_csi: false,
+        }
+    }
+}
+
+/// One client's channel state for one round.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientChannel {
+    /// True channel h_k.
+    pub h: C32,
+    /// Client's estimate ĥ_k (== h under perfect CSI).
+    pub h_est: C32,
+    /// Truncated inversion precoder.
+    pub precode: Precode,
+    /// h_k · ĥ_k⁻¹ if transmitting.
+    pub effective_gain: Option<C32>,
+}
+
+/// All clients' channel state for one round plus the server noise level.
+#[derive(Clone, Debug)]
+pub struct RoundChannel {
+    pub clients: Vec<ClientChannel>,
+    pub snr_db: f32,
+}
+
+impl RoundChannel {
+    /// Draw a full round of channels: fading, pilot estimation, precoding.
+    pub fn draw(cfg: &ChannelConfig, num_clients: usize, rng: &mut Rng) -> Self {
+        let pilot = pilot::pilot_sequence(cfg.pilot_len);
+        let clients = (0..num_clients)
+            .map(|_| {
+                let h = fading::rayleigh_coeff(rng);
+                let h_est = if cfg.perfect_csi {
+                    h
+                } else {
+                    pilot::estimate(h, &pilot, cfg.pilot_noise_var, rng)
+                };
+                let pc = precode::channel_inversion(h_est, cfg.truncation);
+                let effective_gain = precode::effective_gain(h, &pc);
+                ClientChannel { h, h_est, precode: pc, effective_gain }
+            })
+            .collect();
+        RoundChannel { clients, snr_db: cfg.snr_db }
+    }
+
+    /// Indices of clients actually transmitting this round.
+    pub fn active(&self) -> Vec<usize> {
+        self.clients
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.effective_gain.is_some())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Server noise variance for a superposed signal of mean power
+    /// `signal_power`: var = P / 10^(SNR/10).
+    pub fn noise_var(&self, signal_power: f32) -> f32 {
+        signal_power / 10f32.powf(self.snr_db / 10.0)
+    }
+}
+
+/// Convert an SNR in dB to linear.
+pub fn db_to_linear(db: f32) -> f32 {
+    10f32.powf(db / 10.0)
+}
+
+/// Convert a linear power ratio to dB.
+pub fn linear_to_db(lin: f32) -> f32 {
+    10.0 * lin.log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_channel_shapes() {
+        let mut rng = Rng::seed_from(21);
+        let cfg = ChannelConfig::default();
+        let rc = RoundChannel::draw(&cfg, 15, &mut rng);
+        assert_eq!(rc.clients.len(), 15);
+        for c in &rc.clients {
+            match c.precode {
+                Precode::Transmit(_) => assert!(c.effective_gain.is_some()),
+                Precode::Silenced => assert!(c.effective_gain.is_none()),
+            }
+        }
+    }
+
+    #[test]
+    fn perfect_csi_gains_are_one() {
+        let mut rng = Rng::seed_from(22);
+        let cfg = ChannelConfig { perfect_csi: true, ..Default::default() };
+        let rc = RoundChannel::draw(&cfg, 30, &mut rng);
+        for c in &rc.clients {
+            if let Some(g) = c.effective_gain {
+                assert!((g - C32::ONE).abs() < 1e-5, "{g:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn imperfect_csi_gains_near_one() {
+        let mut rng = Rng::seed_from(23);
+        let cfg = ChannelConfig::default();
+        let rc = RoundChannel::draw(&cfg, 200, &mut rng);
+        let gains: Vec<_> = rc.clients.iter().filter_map(|c| c.effective_gain).collect();
+        assert!(!gains.is_empty());
+        let mean_err: f32 =
+            gains.iter().map(|g| (*g - C32::ONE).abs()).sum::<f32>() / gains.len() as f32;
+        assert!(mean_err < 0.2, "mean misalignment {mean_err}");
+    }
+
+    #[test]
+    fn noise_var_follows_snr() {
+        let rc = RoundChannel { clients: vec![], snr_db: 10.0 };
+        assert!((rc.noise_var(1.0) - 0.1).abs() < 1e-6);
+        let rc = RoundChannel { clients: vec![], snr_db: 30.0 };
+        assert!((rc.noise_var(2.0) - 0.002).abs() < 1e-6);
+    }
+
+    #[test]
+    fn db_conversions_roundtrip() {
+        for db in [-10.0f32, 0.0, 5.0, 17.3, 30.0] {
+            let lin = db_to_linear(db);
+            assert!((linear_to_db(lin) - db).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn determinism_per_seed() {
+        let cfg = ChannelConfig::default();
+        let mut r1 = Rng::seed_from(7);
+        let mut r2 = Rng::seed_from(7);
+        let a = RoundChannel::draw(&cfg, 15, &mut r1);
+        let b = RoundChannel::draw(&cfg, 15, &mut r2);
+        for (x, y) in a.clients.iter().zip(b.clients.iter()) {
+            assert_eq!(x.h, y.h);
+            assert_eq!(x.h_est, y.h_est);
+        }
+    }
+}

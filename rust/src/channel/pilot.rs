@@ -1,0 +1,125 @@
+//! Pilot-based least-squares channel estimation (paper Eq. 5).
+//!
+//! The server broadcasts a predefined pilot sequence `u`; client k receives
+//! `y = h_{s,k} · u + n` and estimates
+//!
+//! ```text
+//! ĥ_{s,k} = ⟨y, u⟩ / |u|²  =  h + ⟨n, u⟩ / |u|²
+//! ```
+//!
+//! so the estimation error is CN(0, σ_n² / (L · P_u)) — longer pilots or
+//! higher pilot power give better CSI, which directly controls the residual
+//! misalignment `h·ĥ⁻¹ - 1` that pollutes OTA aggregation.
+
+use crate::channel::complex::C32;
+use crate::channel::fading::cn_sample;
+use crate::rng::Rng;
+
+/// A deterministic unit-power Zadoff-Chu-style pilot sequence of length L.
+/// (Constant modulus, good autocorrelation; the exact family is irrelevant
+/// for LS estimation quality — only length x power matters.)
+pub fn pilot_sequence(len: usize) -> Vec<C32> {
+    assert!(len > 0, "pilot length must be positive");
+    // ZC root 1 over length L (use odd virtual length to avoid degeneracy)
+    let l = if len % 2 == 0 { len + 1 } else { len };
+    (0..len)
+        .map(|n| {
+            let phase = -std::f32::consts::PI * (n * (n + 1)) as f32 / l as f32;
+            C32::from_polar(1.0, phase)
+        })
+        .collect()
+}
+
+/// Simulate reception of the pilot through channel `h` with per-sample
+/// noise variance `noise_var`, and LS-estimate the channel (Eq. 5).
+pub fn estimate(h: C32, pilot: &[C32], noise_var: f32, rng: &mut Rng) -> C32 {
+    let mut num = C32::ZERO; // ⟨y, u⟩ = Σ y_i · u_i*
+    let mut den = 0.0f32; // |u|²
+    for &u in pilot {
+        let y = h * u + cn_sample(rng, noise_var);
+        num = num + y * u.conj();
+        den += u.norm_sq();
+    }
+    num.scale(1.0 / den)
+}
+
+/// Theoretical variance of the LS estimation error for a given pilot.
+pub fn estimation_error_var(pilot: &[C32], noise_var: f32) -> f32 {
+    let energy: f32 = pilot.iter().map(|u| u.norm_sq()).sum();
+    noise_var / energy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pilot_is_unit_modulus() {
+        for len in [1usize, 8, 16, 63, 64] {
+            let p = pilot_sequence(len);
+            assert_eq!(p.len(), len);
+            for u in p {
+                assert!((u.abs() - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn noiseless_estimation_is_exact() {
+        let mut rng = Rng::seed_from(1);
+        let h = C32::new(0.8, -0.6);
+        let pilot = pilot_sequence(16);
+        let est = estimate(h, &pilot, 0.0, &mut rng);
+        assert!((est - h).abs() < 1e-5, "{est:?}");
+    }
+
+    #[test]
+    fn error_variance_matches_theory() {
+        let mut rng = Rng::seed_from(2);
+        let h = C32::new(0.3, 1.1);
+        let pilot = pilot_sequence(8);
+        let noise_var = 0.25f32;
+        let n = 20_000;
+        let mean_err: f64 = (0..n)
+            .map(|_| (estimate(h, &pilot, noise_var, &mut rng) - h).norm_sq() as f64)
+            .sum::<f64>()
+            / n as f64;
+        let theory = estimation_error_var(&pilot, noise_var) as f64;
+        assert!(
+            (mean_err - theory).abs() / theory < 0.05,
+            "measured {mean_err}, theory {theory}"
+        );
+    }
+
+    #[test]
+    fn longer_pilot_better_estimate() {
+        let mut rng = Rng::seed_from(3);
+        let h = C32::new(-0.5, 0.9);
+        let noise_var = 0.5f32;
+        let mut errs = Vec::new();
+        for len in [2usize, 16, 128] {
+            let pilot = pilot_sequence(len);
+            let n = 5000;
+            let e: f64 = (0..n)
+                .map(|_| (estimate(h, &pilot, noise_var, &mut rng) - h).norm_sq() as f64)
+                .sum::<f64>()
+                / n as f64;
+            errs.push(e);
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn estimator_is_unbiased() {
+        let mut rng = Rng::seed_from(4);
+        let h = C32::new(1.0, -2.0);
+        let pilot = pilot_sequence(4);
+        let n = 50_000;
+        let mut acc = C32::ZERO;
+        for _ in 0..n {
+            acc = acc + estimate(h, &pilot, 0.3, &mut rng);
+        }
+        let mean = acc.scale(1.0 / n as f32);
+        assert!((mean - h).abs() < 0.02, "{mean:?}");
+    }
+}

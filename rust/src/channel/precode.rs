@@ -1,0 +1,124 @@
+//! Truncated channel-inversion precoding (paper Eq. 6).
+//!
+//! Each client pre-multiplies its payload by ĥ⁻¹ so the server receives
+//! `h·ĥ⁻¹·x ≈ x` and the electromagnetic superposition performs the sum.
+//! Plain inversion has unbounded transmit power for deeply-faded channels;
+//! like the OTA-FL literature the paper cites ([3], [5]) we truncate: a
+//! client whose |ĥ| falls below a threshold is *silenced* for the round
+//! (its payload is dropped from the superposition and the server's scaling
+//! is adjusted by the participating count).
+
+use crate::channel::complex::C32;
+
+/// Outcome of precoding for one client-round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Precode {
+    /// Client transmits with this precoding coefficient (= ĥ⁻¹).
+    Transmit(C32),
+    /// Channel too deeply faded (|ĥ| < threshold): client stays silent.
+    Silenced,
+}
+
+/// Default truncation threshold on |ĥ|.  With h ~ CN(0,1) this silences
+/// P[|h| < 0.1] ≈ 1% of client-rounds while bounding the transmit power
+/// amplification at 1/0.1² = 100x (20 dB).
+pub const DEFAULT_TRUNCATION: f32 = 0.1;
+
+/// Compute the truncated-inversion precoder for an estimated channel.
+pub fn channel_inversion(h_est: C32, truncation: f32) -> Precode {
+    if h_est.abs() < truncation {
+        return Precode::Silenced;
+    }
+    match h_est.inv() {
+        Some(inv) => Precode::Transmit(inv),
+        None => Precode::Silenced,
+    }
+}
+
+/// Effective end-to-end gain for a transmitting client: `h_true · ĥ⁻¹`.
+/// Under perfect CSI this is exactly 1+0j; the deviation is the residual
+/// misalignment the OTA aggregation inherits.
+pub fn effective_gain(h_true: C32, precode: &Precode) -> Option<C32> {
+    match precode {
+        Precode::Transmit(inv) => Some(h_true * *inv),
+        Precode::Silenced => None,
+    }
+}
+
+/// Transmit-power amplification factor |ĥ⁻¹|² of a precoder.
+pub fn power_amplification(precode: &Precode) -> f32 {
+    match precode {
+        Precode::Transmit(inv) => inv.norm_sq(),
+        Precode::Silenced => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::fading::rayleigh_coeff;
+    use crate::rng::Rng;
+
+    #[test]
+    fn perfect_csi_gain_is_one() {
+        let h = C32::new(0.6, -0.8);
+        let p = channel_inversion(h, DEFAULT_TRUNCATION);
+        let g = effective_gain(h, &p).unwrap();
+        assert!((g - C32::ONE).abs() < 1e-6, "{g:?}");
+    }
+
+    #[test]
+    fn deep_fade_is_silenced() {
+        let h = C32::new(0.01, 0.02);
+        assert_eq!(channel_inversion(h, 0.1), Precode::Silenced);
+        assert_eq!(effective_gain(h, &Precode::Silenced), None);
+    }
+
+    #[test]
+    fn zero_channel_is_silenced_even_with_zero_truncation() {
+        assert_eq!(channel_inversion(C32::ZERO, 0.0), Precode::Silenced);
+    }
+
+    #[test]
+    fn power_amplification_bounded_by_truncation() {
+        let mut rng = Rng::seed_from(11);
+        let trunc = 0.2f32;
+        let bound = 1.0 / (trunc * trunc) * 1.001;
+        for _ in 0..10_000 {
+            let h = rayleigh_coeff(&mut rng);
+            let p = channel_inversion(h, trunc);
+            assert!(power_amplification(&p) <= bound);
+        }
+    }
+
+    #[test]
+    fn silencing_rate_near_theory() {
+        // P[|h| < t] = 1 - exp(-t^2) for unit-power Rayleigh
+        let mut rng = Rng::seed_from(12);
+        let trunc = 0.3f32;
+        let n = 100_000;
+        let silenced = (0..n)
+            .filter(|_| {
+                matches!(
+                    channel_inversion(rayleigh_coeff(&mut rng), trunc),
+                    Precode::Silenced
+                )
+            })
+            .count();
+        let rate = silenced as f64 / n as f64;
+        let theory = 1.0 - (-(trunc as f64).powi(2)).exp();
+        assert!((rate - theory).abs() < 0.005, "rate {rate} theory {theory}");
+    }
+
+    #[test]
+    fn imperfect_csi_gain_near_one() {
+        let mut rng = Rng::seed_from(13);
+        let h = C32::new(0.9, 0.5);
+        // small estimation error
+        let h_est = h + C32::new(0.01, -0.02);
+        let p = channel_inversion(h_est, DEFAULT_TRUNCATION);
+        let g = effective_gain(h, &p).unwrap();
+        assert!((g - C32::ONE).abs() < 0.05, "{g:?}");
+        let _ = rng.next_u64();
+    }
+}

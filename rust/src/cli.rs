@@ -1,0 +1,143 @@
+//! Minimal command-line argument parser (no `clap` in the vendored set).
+//!
+//! Grammar: `mpota <subcommand> [--key value | --flag] ...`
+//! Unknown keys are rejected up-front so typos fail fast instead of
+//! silently running a default experiment.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: a subcommand plus `--key value` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Keys the caller actually read — for strict unknown-option checking.
+    allowed: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_default();
+        if subcommand.starts_with('-') {
+            bail!("expected a subcommand before options, got '{subcommand}'");
+        }
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        while let Some(arg) = it.next() {
+            let Some(key) = arg.strip_prefix("--") else {
+                bail!("expected '--option', got '{arg}'");
+            };
+            if key.is_empty() {
+                bail!("empty option name");
+            }
+            // --key=value or --key value or bare flag
+            if let Some((k, v)) = key.split_once('=') {
+                opts.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                opts.insert(key.to_string(), it.next().unwrap());
+            } else {
+                flags.push(key.to_string());
+            }
+        }
+        Ok(Args { subcommand, opts, flags, allowed: Vec::new() })
+    }
+
+    /// From the process environment.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&mut self, key: &str) -> Option<&str> {
+        self.allowed.push(key.to_string());
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&mut self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&mut self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{key} '{raw}': {e}")),
+        }
+    }
+
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.allowed.push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Call after reading all options: errors on anything unrecognised.
+    pub fn finish(&self) -> Result<()> {
+        for k in self.opts.keys() {
+            if !self.allowed.contains(k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !self.allowed.contains(f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let mut a = args(&["train", "--rounds", "10", "--scheme=16,8,4", "--verbose"]);
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get("rounds"), Some("10"));
+        assert_eq!(a.get("scheme"), Some("16,8,4"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn typed_parse_with_default() {
+        let mut a = args(&["train", "--lr", "0.05"]);
+        assert_eq!(a.get_parse("lr", 0.01f64).unwrap(), 0.05);
+        assert_eq!(a.get_parse("rounds", 7usize).unwrap(), 7);
+        assert!(a.get_parse("lr", 0i32).is_err()); // 0.05 not an i32
+    }
+
+    #[test]
+    fn unknown_options_rejected() {
+        let mut a = args(&["train", "--bogus", "1"]);
+        let _ = a.get("rounds");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn malformed_inputs_rejected() {
+        assert!(Args::parse(["--rounds".to_string()]).is_err());
+        assert!(Args::parse(["train".to_string(), "positional".to_string()]).is_err());
+        assert!(Args::parse(["train".to_string(), "--".to_string()]).is_err());
+    }
+
+    #[test]
+    fn empty_argv_gives_empty_subcommand() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.subcommand, "");
+    }
+}

@@ -1,0 +1,328 @@
+//! Run configuration: every knob of an experiment in one validated struct,
+//! loadable from a JSON file and overridable from the CLI.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::channel::ChannelConfig;
+use crate::fl::scheme::Scheme;
+use crate::json::{self, Value};
+
+/// What clients put on the air each round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transmit {
+    /// Model updates Δ[θ_k] (Alg. 1 step 10/14 — the default; keeps the
+    /// server's global model at full precision).
+    Updates,
+    /// Full local weights [θ_k] (Alg. 1 step 18's literal reading) —
+    /// ablation mode showing why update-transmission matters for
+    /// mixed-precision fleets.
+    Weights,
+}
+
+impl std::str::FromStr for Transmit {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "updates" | "delta" => Ok(Transmit::Updates),
+            "weights" | "model" => Ok(Transmit::Weights),
+            other => bail!("unknown transmit mode '{other}' (updates|weights)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Transmit {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}",
+            match self {
+                Transmit::Updates => "updates",
+                Transmit::Weights => "weights",
+            }
+        )
+    }
+}
+
+/// How client updates reach the server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Aggregation {
+    /// The paper's analog multi-precision OTA superposition.
+    OtaAnalog,
+    /// Conventional digital orthogonal uplink (baseline).
+    Digital,
+    /// Noise-free FedAvg oracle (Eq. 1) — upper bound / debugging.
+    Ideal,
+}
+
+impl std::str::FromStr for Aggregation {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "ota" | "analog" | "ota-analog" => Ok(Aggregation::OtaAnalog),
+            "digital" | "orthogonal" => Ok(Aggregation::Digital),
+            "ideal" | "fedavg" => Ok(Aggregation::Ideal),
+            other => bail!("unknown aggregation '{other}' (ota|digital|ideal)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Aggregation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Aggregation::OtaAnalog => "ota",
+            Aggregation::Digital => "digital",
+            Aggregation::Ideal => "ideal",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Directory holding `manifest.json` + HLO artifacts.
+    pub artifacts_dir: PathBuf,
+    /// Model variant (must exist in the manifest).
+    pub variant: String,
+    /// Total clients N (paper: 15).
+    pub clients: usize,
+    /// Clients selected per round K (paper: all 15).
+    pub clients_per_round: usize,
+    /// Communication rounds T (paper: 100).
+    pub rounds: usize,
+    /// Precision scheme (paper §IV-A2).
+    pub scheme: Scheme,
+    /// Local SGD steps per client per round.
+    pub local_steps: usize,
+    /// Client learning rate.
+    pub lr: f32,
+    /// Training samples in the synthetic corpus.
+    pub train_samples: usize,
+    /// Held-out test samples.
+    pub test_samples: usize,
+    /// Aggregation path.
+    pub aggregation: Aggregation,
+    /// Payload semantics (updates vs full weights).
+    pub transmit: Transmit,
+    /// Wireless channel knobs.
+    pub channel: ChannelConfig,
+    /// Root seed for everything.
+    pub seed: u64,
+    /// Optional pretrained-params blob (flat f32) to start from; None uses
+    /// the He init shipped with the artifacts.
+    pub init_params: Option<PathBuf>,
+    /// Worker threads for client-parallel local training (1 = sequential).
+    pub workers: usize,
+    /// Where run logs go.
+    pub out_dir: PathBuf,
+    /// Evaluate the server model every `eval_every` rounds.
+    pub eval_every: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            variant: "base".to_string(),
+            clients: 15,
+            clients_per_round: 15,
+            rounds: 100,
+            scheme: Scheme::parse("16,8,4").expect("static scheme"),
+            local_steps: 4,
+            lr: 0.05,
+            train_samples: 3840,
+            test_samples: 960,
+            aggregation: Aggregation::OtaAnalog,
+            transmit: Transmit::Updates,
+            channel: ChannelConfig::default(),
+            seed: 42,
+            init_params: None,
+            workers: 1,
+            out_dir: PathBuf::from("runs"),
+            eval_every: 1,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.clients == 0 || self.rounds == 0 {
+            bail!("clients and rounds must be positive");
+        }
+        if self.clients_per_round == 0 || self.clients_per_round > self.clients {
+            bail!(
+                "clients_per_round {} must be in 1..={}",
+                self.clients_per_round,
+                self.clients
+            );
+        }
+        // the scheme must expand over the SELECTED set each round
+        self.scheme.client_precisions(self.clients)?;
+        if self.local_steps == 0 {
+            bail!("local_steps must be positive");
+        }
+        if !(self.lr > 0.0 && self.lr.is_finite()) {
+            bail!("lr must be positive and finite");
+        }
+        if self.train_samples < self.clients {
+            bail!("need at least one training sample per client");
+        }
+        if self.eval_every == 0 {
+            bail!("eval_every must be positive");
+        }
+        if self.workers == 0 {
+            bail!("workers must be positive");
+        }
+        if !(self.channel.snr_db.is_finite()) {
+            bail!("snr_db must be finite");
+        }
+        Ok(())
+    }
+
+    /// Load overrides from a JSON config file (any subset of keys).
+    pub fn load_overrides(&mut self, path: &Path) -> Result<()> {
+        let v = json::parse_file(path)?;
+        self.apply_json(&v)
+            .with_context(|| format!("applying {}", path.display()))
+    }
+
+    /// Apply a JSON object of overrides.
+    pub fn apply_json(&mut self, v: &Value) -> Result<()> {
+        for (k, val) in v.as_object()? {
+            match k.as_str() {
+                "artifacts_dir" => self.artifacts_dir = PathBuf::from(val.as_str()?),
+                "variant" => self.variant = val.as_str()?.to_string(),
+                "clients" => self.clients = val.as_usize()?,
+                "clients_per_round" => self.clients_per_round = val.as_usize()?,
+                "rounds" => self.rounds = val.as_usize()?,
+                "scheme" => self.scheme = Scheme::parse(val.as_str()?)?,
+                "local_steps" => self.local_steps = val.as_usize()?,
+                "lr" => self.lr = val.as_f64()? as f32,
+                "train_samples" => self.train_samples = val.as_usize()?,
+                "test_samples" => self.test_samples = val.as_usize()?,
+                "aggregation" => self.aggregation = val.as_str()?.parse()?,
+                "transmit" => self.transmit = val.as_str()?.parse()?,
+                "snr_db" => self.channel.snr_db = val.as_f64()? as f32,
+                "pilot_len" => self.channel.pilot_len = val.as_usize()?,
+                "pilot_noise_var" => {
+                    self.channel.pilot_noise_var = val.as_f64()? as f32
+                }
+                "truncation" => self.channel.truncation = val.as_f64()? as f32,
+                "perfect_csi" => self.channel.perfect_csi = val.as_bool()?,
+                "seed" => self.seed = val.as_f64()? as u64,
+                "init_params" => {
+                    self.init_params = Some(PathBuf::from(val.as_str()?))
+                }
+                "workers" => self.workers = val.as_usize()?,
+                "out_dir" => self.out_dir = PathBuf::from(val.as_str()?),
+                "eval_every" => self.eval_every = val.as_usize()?,
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize the effective config (for run provenance logs).
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::object();
+        o.set(
+            "artifacts_dir",
+            Value::Str(self.artifacts_dir.display().to_string()),
+        );
+        o.set("variant", Value::Str(self.variant.clone()));
+        o.set("clients", Value::Num(self.clients as f64));
+        o.set("clients_per_round", Value::Num(self.clients_per_round as f64));
+        o.set("rounds", Value::Num(self.rounds as f64));
+        o.set("scheme", Value::Str(self.scheme.to_string()));
+        o.set("local_steps", Value::Num(self.local_steps as f64));
+        o.set("lr", Value::Num(self.lr as f64));
+        o.set("train_samples", Value::Num(self.train_samples as f64));
+        o.set("test_samples", Value::Num(self.test_samples as f64));
+        o.set("aggregation", Value::Str(self.aggregation.to_string()));
+        o.set("transmit", Value::Str(self.transmit.to_string()));
+        o.set("snr_db", Value::Num(self.channel.snr_db as f64));
+        o.set("pilot_len", Value::Num(self.channel.pilot_len as f64));
+        o.set("perfect_csi", Value::Bool(self.channel.perfect_csi));
+        o.set("seed", Value::Num(self.seed as f64));
+        o.set("workers", Value::Num(self.workers as f64));
+        o.set("eval_every", Value::Num(self.eval_every as f64));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_bad_fields() {
+        let mut c = RunConfig::default();
+        c.clients_per_round = 20;
+        assert!(c.validate().is_err());
+
+        let mut c = RunConfig::default();
+        c.clients = 16; // 16 % 3 groups != 0
+        c.clients_per_round = 16;
+        assert!(c.validate().is_err());
+
+        let mut c = RunConfig::default();
+        c.lr = -1.0;
+        assert!(c.validate().is_err());
+
+        let mut c = RunConfig::default();
+        c.rounds = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_overrides_apply() {
+        let mut c = RunConfig::default();
+        let v = json::parse(
+            r#"{"rounds": 7, "scheme": "8,8,8", "snr_db": 12.5,
+                "aggregation": "digital", "perfect_csi": true}"#,
+        )
+        .unwrap();
+        c.apply_json(&v).unwrap();
+        assert_eq!(c.rounds, 7);
+        assert_eq!(c.scheme.to_string(), "8,8,8");
+        assert_eq!(c.channel.snr_db, 12.5);
+        assert_eq!(c.aggregation, Aggregation::Digital);
+        assert!(c.channel.perfect_csi);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = RunConfig::default();
+        let v = json::parse(r#"{"roundz": 7}"#).unwrap();
+        assert!(c.apply_json(&v).is_err());
+    }
+
+    #[test]
+    fn provenance_roundtrip() {
+        let c = RunConfig::default();
+        let j = c.to_json();
+        let mut c2 = RunConfig::default();
+        c2.rounds = 1;
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.rounds, c.rounds);
+        assert_eq!(c2.scheme, c.scheme);
+    }
+
+    #[test]
+    fn aggregation_parse() {
+        assert_eq!("ota".parse::<Aggregation>().unwrap(), Aggregation::OtaAnalog);
+        assert_eq!(
+            "FEDAVG".parse::<Aggregation>().unwrap(),
+            Aggregation::Ideal
+        );
+        assert!("smoke".parse::<Aggregation>().is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! Per-client state machine: owns a data shard, a precision level, and a
+//! private RNG stream; executes the paper's Alg. 1 step 2 (quantize the
+//! broadcast model, train locally) against the PJRT runtime.
+
+use anyhow::Result;
+
+use crate::data::{BatchIter, Dataset, SAMPLE_LEN};
+use crate::quant::{self, Precision};
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+
+/// Client-side metrics from one local round.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LocalStats {
+    pub mean_loss: f64,
+    pub mean_acc: f64,
+    pub steps: usize,
+    pub samples: u64,
+}
+
+/// One federated client.
+pub struct ClientState {
+    pub id: usize,
+    pub precision: Precision,
+    /// Indices into the global training corpus owned by this client.
+    pub shard: Vec<usize>,
+    batches: BatchIter,
+    rng: Rng,
+    /// Scratch buffers reused across rounds (no allocation in the loop).
+    img_buf: Vec<f32>,
+    label_buf: Vec<i32>,
+    /// Cumulative MACs this client has spent (energy accounting).
+    pub macs_spent: f64,
+}
+
+impl ClientState {
+    pub fn new(
+        id: usize,
+        precision: Precision,
+        shard: Vec<usize>,
+        train_batch: usize,
+        root_rng: &Rng,
+    ) -> Self {
+        let mut rng = root_rng.stream("client").substream(id as u64);
+        let batches = BatchIter::new(shard.len(), train_batch, &mut rng);
+        ClientState {
+            id,
+            precision,
+            shard,
+            batches,
+            rng,
+            img_buf: vec![0.0f32; train_batch * SAMPLE_LEN],
+            label_buf: vec![0i32; train_batch],
+            macs_spent: 0.0,
+        }
+    }
+
+    /// Alg. 1 step 2: quantize the broadcast model to this client's
+    /// precision, run `local_steps` minibatch SGD steps at that precision,
+    /// and return the payload for OTA transmission plus local metrics.
+    ///
+    /// Payload semantics follow Alg. 1 step 10/14: the client transmits its
+    /// model UPDATE `Δ[θ_k] = [θ_k]_{q_k} - [θ^(t-1)]_{q_k}` (as decimal
+    /// values, ready for amplitude modulation).  Transmitting updates
+    /// rather than full weights keeps the server's global model at full
+    /// precision — coarse clients contribute small zero-mean-ish deltas
+    /// instead of dragging the global weights onto their coarse grid (the
+    /// failure mode EXPERIMENTS.md §Fig3-ablation demonstrates).
+    pub fn local_round(
+        &mut self,
+        runtime: &Runtime,
+        variant: &str,
+        data: &Dataset,
+        theta_global: &[f32],
+        lr: f32,
+        local_steps: usize,
+        macs_per_sample: u64,
+        transmit_weights: bool,
+        layout: &crate::tensor::ParamLayout,
+    ) -> Result<(Vec<f32>, LocalStats)> {
+        // Step 2a: re-quantize the broadcast model (Fig. 2c) onto the
+        // client's TRAINING grid — per LAYER (paper §III-B), nearest
+        // rounding (same grid the QAT graph uses; floor is reserved for
+        // transmission/PTQ).
+        let theta_start = quant::fake_quant_layout(
+            theta_global,
+            layout,
+            self.precision,
+            quant::Rounding::Nearest,
+        );
+        let mut theta = theta_start.clone();
+
+        let mut stats = LocalStats::default();
+        let batch = self.label_buf.len();
+        for _ in 0..local_steps {
+            let idx = match self.batches.next_batch() {
+                Some(idx) => idx.to_vec(),
+                None => {
+                    self.batches.reset(&mut self.rng);
+                    self.batches
+                        .next_batch()
+                        .expect("shard smaller than one batch")
+                        .to_vec()
+                }
+            };
+            // gather via the *global* corpus through this client's shard
+            let global_idx: Vec<usize> = idx.iter().map(|&i| self.shard[i]).collect();
+            data.gather(&global_idx, &mut self.img_buf, &mut self.label_buf);
+            let out = runtime.train_step(
+                variant,
+                self.precision,
+                &theta,
+                &self.img_buf,
+                &self.label_buf,
+                lr,
+            )?;
+            theta = out.new_theta;
+            stats.mean_loss += out.loss as f64;
+            stats.mean_acc += out.correct as f64 / batch as f64;
+            stats.steps += 1;
+            stats.samples += batch as u64;
+            // fwd+bwd ≈ 3x forward MACs per trained sample
+            self.macs_spent += 3.0 * macs_per_sample as f64 * batch as f64;
+        }
+        if stats.steps > 0 {
+            stats.mean_loss /= stats.steps as f64;
+            stats.mean_acc /= stats.steps as f64;
+        }
+        let payload = if transmit_weights {
+            theta
+        } else {
+            // Δ[θ_k] = [θ_k]_{q_k} - [θ^(t-1)]_{q_k}   (Alg. 1 step 10)
+            theta
+                .iter()
+                .zip(theta_start.iter())
+                .map(|(a, b)| a - b)
+                .collect()
+        };
+        Ok((payload, stats))
+    }
+
+    /// Smallest number of local steps that constitutes one epoch over the
+    /// client's shard.
+    pub fn steps_per_epoch(&self) -> usize {
+        self.batches.batches_per_epoch()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_rng_streams_differ() {
+        let root = Rng::seed_from(1);
+        let a = ClientState::new(0, Precision::of(8), (0..64).collect(), 32, &root);
+        let b = ClientState::new(1, Precision::of(8), (0..64).collect(), 32, &root);
+        // different shuffle orders => different first batches (w.h.p.)
+        let mut ai = a.batches;
+        let mut bi = b.batches;
+        assert_ne!(ai.next_batch().unwrap(), bi.next_batch().unwrap());
+    }
+
+    #[test]
+    fn steps_per_epoch() {
+        let root = Rng::seed_from(2);
+        let c = ClientState::new(0, Precision::of(4), (0..100).collect(), 32, &root);
+        assert_eq!(c.steps_per_epoch(), 3);
+    }
+}

@@ -1,0 +1,308 @@
+//! The L3 coordinator: the paper's Algorithm 1 as a round-driven state
+//! machine over the substrate modules.
+//!
+//! Per communication round t (Alg. 1):
+//!   1. broadcast θ^(t-1) to the selected clients;
+//!   2. each client re-quantizes to its precision q_k and trains locally
+//!      (PJRT execution of the `train_q{b}` artifact — [`client`]);
+//!   3. clients amplitude-modulate their decimal-valued models and the
+//!      channel superposes them (`ota::analog` with `channel` simulation),
+//!      or the digital / ideal baselines take over per config;
+//!   4. the server scales by 1/K and the result becomes θ^(t).
+//!
+//! Scheduling note: the PJRT client is `Rc`-based (not `Send`) and this
+//! testbed has one core, so client work is interleaved on the coordinator
+//! thread; the per-client state machines in [`client`] keep the design
+//! ready for a multi-queue runtime.
+
+pub mod client;
+pub mod pretrain;
+pub mod report;
+
+pub use client::ClientState;
+pub use report::{EnergyReport, RequantEval, RunReport};
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::channel::RoundChannel;
+use crate::config::{Aggregation, RunConfig};
+use crate::data::{equal_shards, Dataset};
+use crate::energy;
+use crate::fl::{self, Selection};
+use crate::metrics::{RoundRecord, RunLog};
+use crate::ota;
+use crate::quant::{self, Precision};
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::tensor;
+
+/// Orchestrates one full federated run.
+pub struct Coordinator {
+    pub cfg: RunConfig,
+    pub runtime: Runtime,
+    clients: Vec<ClientState>,
+    train_data: Dataset,
+    test_data: Dataset,
+    /// Global model (flat decimal values).
+    theta: Vec<f32>,
+    selection: Selection,
+    select_rng: Rng,
+    channel_rng: Rng,
+    noise_rng: Rng,
+    log: RunLog,
+    macs_per_sample: u64,
+    layout: crate::tensor::ParamLayout,
+}
+
+impl Coordinator {
+    /// Build everything: runtime, data, shards, clients, initial model.
+    pub fn new(cfg: RunConfig) -> Result<Self> {
+        cfg.validate()?;
+        let runtime = Runtime::load(&cfg.artifacts_dir)?;
+        let variant = runtime.manifest.variant(&cfg.variant)?.clone();
+
+        let root = Rng::seed_from(cfg.seed);
+        let mut data_rng = root.stream("data");
+        let train_data = Dataset::generate(cfg.train_samples, &mut data_rng);
+        let test_data = Dataset::generate(cfg.test_samples, &mut data_rng);
+
+        let mut shard_rng = root.stream("shard");
+        let shards = equal_shards(train_data.n, cfg.clients, &mut shard_rng);
+        let precisions = cfg.scheme.client_precisions(cfg.clients)?;
+        let clients: Vec<ClientState> = shards
+            .into_iter()
+            .zip(precisions.iter())
+            .map(|(s, &p)| {
+                ClientState::new(s.client, p, s.indices, runtime.manifest.train_batch, &root)
+            })
+            .collect();
+
+        let theta = match &cfg.init_params {
+            Some(path) => {
+                let p = tensor::read_f32_file(path)?;
+                anyhow::ensure!(
+                    p.len() == variant.param_count,
+                    "init params {} != param_count {}",
+                    p.len(),
+                    variant.param_count
+                );
+                p
+            }
+            None => runtime.init_params(&cfg.variant)?,
+        };
+
+        let selection = if cfg.clients_per_round == cfg.clients {
+            Selection::All
+        } else {
+            Selection::UniformK(cfg.clients_per_round)
+        };
+
+        let label = format!("{}@{}", cfg.scheme, cfg.aggregation);
+        Ok(Coordinator {
+            select_rng: root.stream("select"),
+            channel_rng: root.stream("channel"),
+            noise_rng: root.stream("noise"),
+            log: RunLog::new(label),
+            macs_per_sample: variant.macs_per_sample,
+            layout: variant.layout.clone(),
+            cfg,
+            runtime,
+            clients,
+            train_data,
+            test_data,
+            theta,
+            selection,
+        })
+    }
+
+    /// Current global model (flat).
+    pub fn global_model(&self) -> &[f32] {
+        &self.theta
+    }
+
+    /// Replace the global model (e.g. with pretrained weights).
+    pub fn set_global_model(&mut self, theta: Vec<f32>) -> Result<()> {
+        anyhow::ensure!(theta.len() == self.theta.len(), "model size mismatch");
+        self.theta = theta;
+        Ok(())
+    }
+
+    /// Execute one communication round; returns its record.
+    pub fn round(&mut self, t: usize) -> Result<RoundRecord> {
+        let t0 = Instant::now();
+        let selected = self
+            .selection
+            .select(self.cfg.clients, t, &mut self.select_rng);
+
+        // Steps 1-2: broadcast + local training per selected client.
+        let mut payloads: Vec<Vec<f32>> = Vec::with_capacity(selected.len());
+        let mut precisions: Vec<Precision> = Vec::with_capacity(selected.len());
+        let mut train_loss = 0.0f64;
+        let mut train_acc = 0.0f64;
+        for &k in &selected {
+            let c = &mut self.clients[k];
+            let (payload, stats) = c.local_round(
+                &self.runtime,
+                &self.cfg.variant,
+                &self.train_data,
+                &self.theta,
+                self.cfg.lr,
+                self.cfg.local_steps,
+                self.macs_per_sample,
+                matches!(self.cfg.transmit, crate::config::Transmit::Weights),
+                &self.layout,
+            )?;
+            payloads.push(payload);
+            precisions.push(c.precision);
+            train_loss += stats.mean_loss;
+            train_acc += stats.mean_acc;
+        }
+        train_loss /= selected.len() as f64;
+        train_acc /= selected.len() as f64;
+
+        // Steps 3-4: aggregation.
+        let (agg, participants, ota_mse) = match self.cfg.aggregation {
+            Aggregation::OtaAnalog => {
+                let rc = RoundChannel::draw(
+                    &self.cfg.channel,
+                    payloads.len(),
+                    &mut self.channel_rng,
+                );
+                let (agg, stats) = ota::analog::aggregate(&payloads, &rc, &mut self.noise_rng);
+                (agg, stats.participants, stats.mse_vs_ideal)
+            }
+            Aggregation::Digital => {
+                let (agg, stats) = ota::digital::aggregate(&payloads, &precisions);
+                (agg, stats.participants, 0.0)
+            }
+            Aggregation::Ideal => {
+                let agg = fl::mean(&payloads);
+                (agg, payloads.len(), 0.0)
+            }
+        };
+        if participants > 0 {
+            match self.cfg.transmit {
+                // θ^(t) = θ^(t-1) + mean(Δ_k)   (Alg. 1 steps 10/14)
+                crate::config::Transmit::Updates => {
+                    tensor::axpy(&mut self.theta, 1.0, &agg)
+                }
+                // θ^(t) = mean(θ_k)             (Alg. 1 step 18, ablation)
+                crate::config::Transmit::Weights => self.theta = agg,
+            }
+        } // else: round lost to deep fades; keep θ^(t-1)
+
+        // Evaluation + energy accounting.
+        let mut rec = RoundRecord {
+            round: t,
+            train_loss,
+            train_accuracy: train_acc,
+            participants,
+            ota_mse,
+            energy_joules: self.energy_report().actual_joules,
+            wall_secs: 0.0,
+            ..Default::default()
+        };
+        if t % self.cfg.eval_every == 0 || t == self.cfg.rounds {
+            let eval = self.runtime.evaluate(
+                &self.cfg.variant,
+                &self.theta,
+                &self.test_data.images,
+                &self.test_data.labels,
+            )?;
+            rec.server_accuracy = eval.accuracy;
+            rec.server_loss = eval.loss;
+        } else if let Some(prev) = self.log.rounds.last() {
+            rec.server_accuracy = prev.server_accuracy;
+            rec.server_loss = prev.server_loss;
+        }
+        rec.wall_secs = t0.elapsed().as_secs_f64();
+        Ok(rec)
+    }
+
+    /// Run all configured rounds and produce the final report.
+    pub fn run(&mut self) -> Result<RunReport> {
+        let t0 = Instant::now();
+        self.runtime
+            .warmup(&self.cfg.variant, &self.cfg.scheme.distinct_levels())
+            .context("artifact warmup")?;
+        for t in 1..=self.cfg.rounds {
+            let rec = self.round(t)?;
+            self.log.push(rec);
+        }
+        self.report(t0.elapsed().as_secs_f64())
+    }
+
+    /// Post-run report: requantized client evals + energy summary.
+    pub fn report(&mut self, wall_secs: f64) -> Result<RunReport> {
+        let mut requant = Vec::new();
+        for p in self.cfg.scheme.distinct_levels() {
+            let q = self.requantize_global(p);
+            let eval = self.runtime.evaluate(
+                &self.cfg.variant,
+                &q,
+                &self.test_data.images,
+                &self.test_data.labels,
+            )?;
+            requant.push(RequantEval {
+                precision: p,
+                accuracy: eval.accuracy,
+                loss: eval.loss,
+            });
+        }
+        let final_eval = self.runtime.evaluate(
+            &self.cfg.variant,
+            &self.theta,
+            &self.test_data.images,
+            &self.test_data.labels,
+        )?;
+        Ok(RunReport {
+            label: self.log.label.clone(),
+            final_accuracy: final_eval.accuracy,
+            final_loss: final_eval.loss,
+            requant,
+            energy: self.energy_report(),
+            rounds_to_90: self.log.rounds_to_accuracy(0.90),
+            wall_secs,
+            log: self.log.clone(),
+        })
+    }
+
+    /// Energy actuals + homogeneous counterfactuals over the same MACs.
+    pub fn energy_report(&self) -> EnergyReport {
+        let mut actual = 0.0;
+        let macs: Vec<f64> = self.clients.iter().map(|c| c.macs_spent).collect();
+        for c in &self.clients {
+            actual += energy::mean_energy_joules(c.precision, c.macs_spent);
+        }
+        EnergyReport {
+            actual_joules: actual,
+            all32_joules: energy::Meter::counterfactual_joules(&macs, Precision::of(32)),
+            all16_joules: energy::Meter::counterfactual_joules(&macs, Precision::of(16)),
+            all8_joules: energy::Meter::counterfactual_joules(&macs, Precision::of(8)),
+            all4_joules: energy::Meter::counterfactual_joules(&macs, Precision::of(4)),
+        }
+    }
+
+    /// Access the accumulated run log.
+    pub fn log(&self) -> &RunLog {
+        &self.log
+    }
+
+    /// Per-layer re-quantization of the current global model to precision
+    /// `p` (Fig. 2c — the deployment view of a precision-p client).
+    pub fn requantize_global(&self, p: Precision) -> Vec<f32> {
+        quant::fake_quant_layout(&self.theta, &self.layout, p, quant::Rounding::Nearest)
+    }
+
+    /// Evaluate an arbitrary flat model on the held-out test set.
+    pub fn evaluate_model(&self, theta: &[f32]) -> Result<crate::runtime::EvalResult> {
+        self.runtime.evaluate(
+            &self.cfg.variant,
+            theta,
+            &self.test_data.images,
+            &self.test_data.labels,
+        )
+    }
+}

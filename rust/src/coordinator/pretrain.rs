@@ -1,0 +1,123 @@
+//! Centralized f32 pre-training — the stand-in for the paper's
+//! "ImageNet pre-trained weights initialization" (DESIGN.md §2).
+//!
+//! Trains a variant centrally (no FL, no channel) on a held-out synthetic
+//! corpus and writes the resulting flat params next to the artifacts, so
+//! federated runs can start from a sane feature extractor exactly like the
+//! paper's runs start from ImageNet weights.  Also used by the Table-I
+//! bench to produce the f32 models that are then post-training-quantized.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::data::{BatchIter, Dataset, SAMPLE_LEN};
+use crate::quant::Precision;
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+
+/// Pre-training configuration.
+#[derive(Clone, Debug)]
+pub struct PretrainConfig {
+    pub variant: String,
+    pub samples: usize,
+    pub epochs: usize,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl Default for PretrainConfig {
+    fn default() -> Self {
+        PretrainConfig {
+            variant: "base".into(),
+            samples: 4096,
+            epochs: 6,
+            lr: 0.08,
+            seed: 7,
+        }
+    }
+}
+
+/// Progress record per epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub mean_loss: f64,
+    pub mean_acc: f64,
+}
+
+/// Run central SGD at f32; returns (params, per-epoch stats).
+pub fn pretrain(
+    runtime: &Runtime,
+    cfg: &PretrainConfig,
+) -> Result<(Vec<f32>, Vec<EpochStats>)> {
+    let root = Rng::seed_from(cfg.seed);
+    // A separate corpus from FL runs (stream "pretrain" vs "data"): the
+    // pretrained features must not have seen the federated test set.
+    let mut data_rng = root.stream("pretrain");
+    let data = Dataset::generate(cfg.samples, &mut data_rng);
+
+    let mut theta = runtime.init_params(&cfg.variant)?;
+    let batch = runtime.manifest.train_batch;
+    let mut it_rng = root.stream("batches");
+    let mut batches = BatchIter::new(data.n, batch, &mut it_rng);
+    let mut img_buf = vec![0.0f32; batch * SAMPLE_LEN];
+    let mut label_buf = vec![0i32; batch];
+
+    let mut stats = Vec::new();
+    for epoch in 1..=cfg.epochs {
+        let mut loss = 0.0f64;
+        let mut acc = 0.0f64;
+        let mut steps = 0usize;
+        // simple 1/sqrt(epoch) decay keeps late epochs stable
+        let lr = cfg.lr / (epoch as f32).sqrt();
+        batches.reset(&mut it_rng);
+        while let Some(idx) = batches.next_batch() {
+            let idx = idx.to_vec();
+            data.gather(&idx, &mut img_buf, &mut label_buf);
+            let out = runtime.train_step(
+                &cfg.variant,
+                Precision::of(32),
+                &theta,
+                &img_buf,
+                &label_buf,
+                lr,
+            )?;
+            theta = out.new_theta;
+            loss += out.loss as f64;
+            acc += out.correct as f64 / batch as f64;
+            steps += 1;
+        }
+        stats.push(EpochStats {
+            epoch,
+            mean_loss: loss / steps.max(1) as f64,
+            mean_acc: acc / steps.max(1) as f64,
+        });
+    }
+    Ok((theta, stats))
+}
+
+/// Standard location of a variant's pretrained blob.
+pub fn pretrained_path(artifacts_dir: &Path, variant: &str) -> std::path::PathBuf {
+    artifacts_dir.join(format!("{variant}_pretrained.f32.bin"))
+}
+
+/// Pretrain-if-missing: returns the blob path, training + writing it if it
+/// does not exist yet (used by examples/benches so they are self-contained).
+pub fn ensure_pretrained(
+    runtime: &Runtime,
+    cfg: &PretrainConfig,
+) -> Result<std::path::PathBuf> {
+    let path = pretrained_path(&runtime.manifest.dir, &cfg.variant);
+    if !path.exists() {
+        let (theta, stats) = pretrain(runtime, cfg)?;
+        if let Some(last) = stats.last() {
+            eprintln!(
+                "[pretrain {}] epoch {} loss {:.3} acc {:.3}",
+                cfg.variant, last.epoch, last.mean_loss, last.mean_acc
+            );
+        }
+        crate::tensor::write_f32_file(&path, &theta)?;
+    }
+    Ok(path)
+}

@@ -1,0 +1,139 @@
+//! End-of-run report: everything Figs. 3/4 and the tables need.
+
+use crate::json::Value;
+use crate::metrics::RunLog;
+use crate::quant::Precision;
+
+/// Post-run evaluation of the final global model re-quantized to one
+/// precision level (paper Fig. 2c / Fig. 4: "client performance after
+/// aggregation and re-quantization").
+#[derive(Clone, Copy, Debug)]
+pub struct RequantEval {
+    pub precision: Precision,
+    pub accuracy: f64,
+    pub loss: f64,
+}
+
+/// Energy summary across the run.
+#[derive(Clone, Debug, Default)]
+pub struct EnergyReport {
+    /// Actual joules spent by the mixed-precision client fleet.
+    pub actual_joules: f64,
+    /// Counterfactual joules had all clients run at 32-bit (same MACs).
+    pub all32_joules: f64,
+    /// Counterfactual at 16-bit.
+    pub all16_joules: f64,
+    /// Counterfactual at 8-bit.
+    pub all8_joules: f64,
+    /// Counterfactual at 4-bit.
+    pub all4_joules: f64,
+}
+
+impl EnergyReport {
+    pub fn saving_vs_32(&self) -> f64 {
+        (1.0 - self.actual_joules / self.all32_joules) * 100.0
+    }
+    pub fn saving_vs_16(&self) -> f64 {
+        (1.0 - self.actual_joules / self.all16_joules) * 100.0
+    }
+}
+
+/// Full run outcome.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub label: String,
+    pub log: RunLog,
+    pub final_accuracy: f64,
+    pub final_loss: f64,
+    /// Final model re-quantized + evaluated at each scheme level.
+    pub requant: Vec<RequantEval>,
+    pub energy: EnergyReport,
+    /// Rounds to reach 90% test accuracy (convergence speed).
+    pub rounds_to_90: Option<usize>,
+    /// Total wall-clock seconds.
+    pub wall_secs: f64,
+}
+
+impl RunReport {
+    /// Accuracy of the final model at the scheme's lowest precision
+    /// (the paper's headline client-side metric).
+    pub fn lowest_precision_accuracy(&self) -> Option<f64> {
+        self.requant
+            .iter()
+            .min_by_key(|r| r.precision.bits())
+            .map(|r| r.accuracy)
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::object();
+        o.set("label", Value::Str(self.label.clone()));
+        o.set("final_accuracy", Value::Num(self.final_accuracy));
+        o.set("final_loss", Value::Num(self.final_loss));
+        o.set(
+            "rounds_to_90",
+            match self.rounds_to_90 {
+                Some(r) => Value::Num(r as f64),
+                None => Value::Null,
+            },
+        );
+        let mut rq = Vec::new();
+        for r in &self.requant {
+            let mut e = Value::object();
+            e.set("bits", Value::Num(r.precision.bits() as f64));
+            e.set("accuracy", Value::Num(r.accuracy));
+            e.set("loss", Value::Num(r.loss));
+            rq.push(e);
+        }
+        o.set("requant", Value::Array(rq));
+        let mut en = Value::object();
+        en.set("actual_j", Value::Num(self.energy.actual_joules));
+        en.set("all32_j", Value::Num(self.energy.all32_joules));
+        en.set("all16_j", Value::Num(self.energy.all16_joules));
+        en.set("all8_j", Value::Num(self.energy.all8_joules));
+        en.set("all4_j", Value::Num(self.energy.all4_joules));
+        en.set("saving_vs_32_pct", Value::Num(self.energy.saving_vs_32()));
+        en.set("saving_vs_16_pct", Value::Num(self.energy.saving_vs_16()));
+        o.set("energy", en);
+        o.set("wall_secs", Value::Num(self.wall_secs));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_savings() {
+        let e = EnergyReport {
+            actual_joules: 30.0,
+            all32_joules: 100.0,
+            all16_joules: 50.0,
+            all8_joules: 10.0,
+            all4_joules: 2.0,
+        };
+        assert!((e.saving_vs_32() - 70.0).abs() < 1e-9);
+        assert!((e.saving_vs_16() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lowest_precision_pick() {
+        let report = RunReport {
+            label: "t".into(),
+            log: RunLog::new("t"),
+            final_accuracy: 0.9,
+            final_loss: 0.3,
+            requant: vec![
+                RequantEval { precision: Precision::of(16), accuracy: 0.9, loss: 0.3 },
+                RequantEval { precision: Precision::of(4), accuracy: 0.7, loss: 0.9 },
+            ],
+            energy: EnergyReport::default(),
+            rounds_to_90: Some(12),
+            wall_secs: 1.0,
+        };
+        assert_eq!(report.lowest_precision_accuracy(), Some(0.7));
+        let j = report.to_json();
+        assert_eq!(j.get("rounds_to_90").unwrap().as_f64().unwrap(), 12.0);
+        assert_eq!(j.get("requant").unwrap().as_array().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,181 @@
+//! Dataset assembly + batch iteration over the synthetic sign corpus.
+
+use crate::data::signs::{self, NUM_CLASSES, SAMPLE_LEN};
+use crate::rng::Rng;
+
+/// An in-memory labelled image set (HWC f32 images, i32 labels).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub images: Vec<f32>, // n * SAMPLE_LEN, sample-major
+    pub labels: Vec<i32>,
+    pub n: usize,
+}
+
+impl Dataset {
+    /// Generate `n` samples, class-balanced (round-robin over the 43
+    /// classes then shuffled), deterministically from `rng`.
+    pub fn generate(n: usize, rng: &mut Rng) -> Self {
+        let mut order: Vec<usize> = (0..n).map(|i| i % NUM_CLASSES).collect();
+        rng.shuffle(&mut order);
+        let mut images = vec![0.0f32; n * SAMPLE_LEN];
+        let mut labels = Vec::with_capacity(n);
+        for (i, &class) in order.iter().enumerate() {
+            signs::render_into(
+                class,
+                rng,
+                &mut images[i * SAMPLE_LEN..(i + 1) * SAMPLE_LEN],
+            );
+            labels.push(class as i32);
+        }
+        Dataset { images, labels, n }
+    }
+
+    /// Borrow sample `i`'s pixels.
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * SAMPLE_LEN..(i + 1) * SAMPLE_LEN]
+    }
+
+    /// Copy a batch given sample indices; `images_out` must hold
+    /// `idx.len() * SAMPLE_LEN`, `labels_out` `idx.len()`.
+    pub fn gather(&self, idx: &[usize], images_out: &mut [f32], labels_out: &mut [i32]) {
+        assert_eq!(images_out.len(), idx.len() * SAMPLE_LEN);
+        assert_eq!(labels_out.len(), idx.len());
+        for (j, &i) in idx.iter().enumerate() {
+            images_out[j * SAMPLE_LEN..(j + 1) * SAMPLE_LEN]
+                .copy_from_slice(self.image(i));
+            labels_out[j] = self.labels[i];
+        }
+    }
+
+    /// Split into (first, rest) at `at` samples.
+    pub fn split(mut self, at: usize) -> (Dataset, Dataset) {
+        assert!(at <= self.n);
+        let tail_images = self.images.split_off(at * SAMPLE_LEN);
+        let tail_labels = self.labels.split_off(at);
+        let tail_n = tail_labels.len();
+        let head = Dataset { images: self.images, labels: self.labels, n: at };
+        let tail = Dataset { images: tail_images, labels: tail_labels, n: tail_n };
+        (head, tail)
+    }
+
+    /// Class histogram (for balance checks).
+    pub fn class_counts(&self) -> [usize; NUM_CLASSES] {
+        let mut counts = [0usize; NUM_CLASSES];
+        for &l in &self.labels {
+            counts[l as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// Epoch-shuffling minibatch index iterator (drops the ragged tail batch —
+/// training artifacts have a fixed batch dimension).
+pub struct BatchIter {
+    order: Vec<usize>,
+    batch: usize,
+    cursor: usize,
+}
+
+impl BatchIter {
+    pub fn new(n: usize, batch: usize, rng: &mut Rng) -> Self {
+        assert!(batch > 0);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        BatchIter { order, batch, cursor: 0 }
+    }
+
+    /// Next minibatch of indices, or None at epoch end.
+    pub fn next_batch(&mut self) -> Option<&[usize]> {
+        if self.cursor + self.batch > self.order.len() {
+            return None;
+        }
+        let s = &self.order[self.cursor..self.cursor + self.batch];
+        self.cursor += self.batch;
+        Some(s)
+    }
+
+    /// Reshuffle and restart for the next epoch.
+    pub fn reset(&mut self, rng: &mut Rng) {
+        rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.order.len() / self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_is_balanced_and_deterministic() {
+        let mut r1 = Rng::seed_from(42);
+        let mut r2 = Rng::seed_from(42);
+        let d1 = Dataset::generate(430, &mut r1);
+        let d2 = Dataset::generate(430, &mut r2);
+        assert_eq!(d1.images, d2.images);
+        assert_eq!(d1.labels, d2.labels);
+        let counts = d1.class_counts();
+        assert!(counts.iter().all(|&c| c == 10), "{counts:?}");
+    }
+
+    #[test]
+    fn gather_batches() {
+        let mut rng = Rng::seed_from(1);
+        let d = Dataset::generate(50, &mut rng);
+        let idx = [3usize, 17, 49];
+        let mut imgs = vec![0.0f32; 3 * SAMPLE_LEN];
+        let mut labels = vec![0i32; 3];
+        d.gather(&idx, &mut imgs, &mut labels);
+        assert_eq!(labels[1], d.labels[17]);
+        assert_eq!(&imgs[SAMPLE_LEN..2 * SAMPLE_LEN], d.image(17));
+    }
+
+    #[test]
+    fn split_partitions() {
+        let mut rng = Rng::seed_from(2);
+        let d = Dataset::generate(100, &mut rng);
+        let all_labels = d.labels.clone();
+        let (a, b) = d.split(60);
+        assert_eq!(a.n, 60);
+        assert_eq!(b.n, 40);
+        assert_eq!(
+            a.labels.iter().chain(b.labels.iter()).copied().collect::<Vec<_>>(),
+            all_labels
+        );
+    }
+
+    #[test]
+    fn batch_iter_covers_epoch_without_repeats() {
+        let mut rng = Rng::seed_from(3);
+        let mut it = BatchIter::new(100, 32, &mut rng);
+        assert_eq!(it.batches_per_epoch(), 3);
+        let mut seen = Vec::new();
+        while let Some(b) = it.next_batch() {
+            assert_eq!(b.len(), 32);
+            seen.extend_from_slice(b);
+        }
+        assert_eq!(seen.len(), 96);
+        let mut sorted = seen.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 96, "repeated index within epoch");
+        // reset starts a new epoch with a different order
+        it.reset(&mut rng);
+        let mut second = Vec::new();
+        while let Some(b) = it.next_batch() {
+            second.extend_from_slice(b);
+        }
+        assert_eq!(second.len(), 96);
+        assert_ne!(seen, second);
+    }
+
+    #[test]
+    fn batch_iter_small_n() {
+        let mut rng = Rng::seed_from(4);
+        let mut it = BatchIter::new(10, 32, &mut rng);
+        assert!(it.next_batch().is_none());
+    }
+}

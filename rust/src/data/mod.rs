@@ -1,0 +1,13 @@
+//! Synthetic traffic-sign data substrate — the GTSRB stand-in.
+//!
+//! [`signs`] renders 43-class procedural sign images (deterministic per
+//! seed), [`dataset`] assembles labelled corpora with batch iteration,
+//! [`shard`] partitions them across FL clients.
+
+pub mod dataset;
+pub mod shard;
+pub mod signs;
+
+pub use dataset::{BatchIter, Dataset};
+pub use shard::{dirichlet_shards, equal_shards, Shard};
+pub use signs::{NUM_CLASSES, SAMPLE_LEN};

@@ -1,0 +1,321 @@
+//! Procedural traffic-sign renderer — the GTSRB stand-in (DESIGN.md §2).
+//!
+//! 43 classes, each a distinct (plate shape, rim colour, inner glyph)
+//! combination, rendered at 32×32 RGB with the nuisance variability that
+//! makes GTSRB non-trivial: random background, sign position/scale/rotation
+//! jitter, brightness/contrast (lighting), and sensor noise.  Every image
+//! is a pure function of (class, per-sample RNG), so datasets are
+//! deterministic per seed.
+//!
+//! The renderer evaluates signed-distance functions per pixel — no image
+//! library needed, and it is fast enough to synthesise tens of thousands
+//! of samples per second in release builds.
+
+use crate::rng::Rng;
+
+pub const IMG: usize = 32;
+pub const CHANNELS: usize = 3;
+pub const NUM_CLASSES: usize = 43;
+/// Floats per sample.
+pub const SAMPLE_LEN: usize = IMG * IMG * CHANNELS;
+
+/// Plate silhouettes (matching the real-world sign families).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Shape {
+    Circle,
+    Triangle,
+    TriangleDown,
+    Diamond,
+    Octagon,
+    Square,
+}
+
+const SHAPES: [Shape; 6] = [
+    Shape::Circle,
+    Shape::Triangle,
+    Shape::TriangleDown,
+    Shape::Diamond,
+    Shape::Octagon,
+    Shape::Square,
+];
+
+/// Inner glyphs: coarse geometric marks a 32×32 CNN can discriminate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Glyph {
+    HBar,
+    VBar,
+    Cross,
+    Dot,
+    TwoDots,
+    ArrowUp,
+    ArrowLeft,
+    Ring,
+}
+
+const GLYPHS: [Glyph; 8] = [
+    Glyph::HBar,
+    Glyph::VBar,
+    Glyph::Cross,
+    Glyph::Dot,
+    Glyph::TwoDots,
+    Glyph::ArrowUp,
+    Glyph::ArrowLeft,
+    Glyph::Ring,
+];
+
+/// RGB triple in [0,1].
+type Rgb = [f32; 3];
+
+const RIM_COLOURS: [Rgb; 4] = [
+    [0.80, 0.10, 0.12], // red
+    [0.10, 0.25, 0.75], // blue
+    [0.85, 0.70, 0.10], // amber
+    [0.15, 0.15, 0.15], // black
+];
+
+/// Visual identity of one class.
+#[derive(Clone, Copy, Debug)]
+pub struct ClassSpec {
+    pub shape: Shape,
+    pub glyph: Glyph,
+    pub rim: Rgb,
+    pub face: Rgb,
+}
+
+/// Deterministic class table: 43 distinct (shape, glyph, rim) combos.
+pub fn class_spec(class: usize) -> ClassSpec {
+    assert!(class < NUM_CLASSES, "class {class} out of range");
+    let shape = SHAPES[class % SHAPES.len()];
+    let glyph = GLYPHS[(class / SHAPES.len() + class) % GLYPHS.len()];
+    let rim = RIM_COLOURS[(class / 11) % RIM_COLOURS.len()];
+    // plate face: white-ish for most, amber plates for diamonds
+    let face = if shape == Shape::Diamond {
+        [0.92, 0.78, 0.25]
+    } else {
+        [0.93, 0.93, 0.90]
+    };
+    ClassSpec { shape, glyph, rim, face }
+}
+
+/// Signed distance (negative = inside) of the unit-sized plate silhouette;
+/// coordinates are in plate-local units where the plate spans ~[-1, 1].
+fn shape_sdf(s: Shape, x: f32, y: f32) -> f32 {
+    match s {
+        Shape::Circle => (x * x + y * y).sqrt() - 1.0,
+        Shape::Square => x.abs().max(y.abs()) - 0.9,
+        Shape::Diamond => (x.abs() + y.abs()) - 1.15,
+        Shape::Octagon => {
+            let a = x.abs().max(y.abs());
+            let b = (x.abs() + y.abs()) * std::f32::consts::FRAC_1_SQRT_2;
+            a.max(b) - 0.95
+        }
+        Shape::Triangle => {
+            // upward triangle: three half-plane constraints
+            let d1 = -y - 0.75; // bottom edge y > -0.75 inside
+            let d2 = 0.866 * x + 0.5 * y - 0.55;
+            let d3 = -0.866 * x + 0.5 * y - 0.55;
+            d1.max(d2).max(d3)
+        }
+        Shape::TriangleDown => {
+            let d1 = y - 0.75;
+            let d2 = 0.866 * x - 0.5 * y - 0.55;
+            let d3 = -0.866 * x - 0.5 * y - 0.55;
+            d1.max(d2).max(d3)
+        }
+    }
+}
+
+/// Glyph mask (true = glyph pixel) in plate-local coordinates.
+fn glyph_hit(g: Glyph, x: f32, y: f32) -> bool {
+    match g {
+        Glyph::HBar => x.abs() < 0.55 && y.abs() < 0.16,
+        Glyph::VBar => x.abs() < 0.16 && y.abs() < 0.55,
+        Glyph::Cross => {
+            (x.abs() < 0.14 && y.abs() < 0.5) || (y.abs() < 0.14 && x.abs() < 0.5)
+        }
+        Glyph::Dot => x * x + y * y < 0.20 * 0.20 * 4.0,
+        Glyph::TwoDots => {
+            let d1 = (x + 0.3) * (x + 0.3) + y * y;
+            let d2 = (x - 0.3) * (x - 0.3) + y * y;
+            d1 < 0.05 || d2 < 0.05
+        }
+        Glyph::ArrowUp => {
+            let head = y > 0.05 && y < 0.55 && x.abs() < (0.55 - y) * 0.8;
+            let stem = y <= 0.05 && y > -0.5 && x.abs() < 0.12;
+            head || stem
+        }
+        Glyph::ArrowLeft => {
+            let head = x < -0.05 && x > -0.55 && y.abs() < (0.55 + x) * 0.8;
+            let stem = x >= -0.05 && x < 0.5 && y.abs() < 0.12;
+            head || stem
+        }
+        Glyph::Ring => {
+            let r = (x * x + y * y).sqrt();
+            (0.30..0.52).contains(&r)
+        }
+    }
+}
+
+/// Per-sample nuisance parameters (the "real-world variability").
+#[derive(Clone, Copy, Debug)]
+struct Jitter {
+    cx: f32,
+    cy: f32,
+    radius: f32,
+    rot_sin: f32,
+    rot_cos: f32,
+    brightness: f32,
+    contrast: f32,
+    bg: Rgb,
+    bg_grad: [f32; 2],
+    noise_std: f32,
+}
+
+impl Jitter {
+    fn draw(rng: &mut Rng) -> Self {
+        let ang = rng.uniform_in(-0.30, 0.30); // ±17°
+        Jitter {
+            cx: 16.0 + rng.uniform_in(-2.5, 2.5),
+            cy: 16.0 + rng.uniform_in(-2.5, 2.5),
+            radius: rng.uniform_in(9.0, 13.0),
+            rot_sin: ang.sin(),
+            rot_cos: ang.cos(),
+            brightness: rng.uniform_in(-0.12, 0.12),
+            contrast: rng.uniform_in(0.75, 1.20),
+            bg: [
+                rng.uniform_in(0.15, 0.65),
+                rng.uniform_in(0.20, 0.70),
+                rng.uniform_in(0.15, 0.60),
+            ],
+            bg_grad: [rng.uniform_in(-0.004, 0.004), rng.uniform_in(-0.006, 0.002)],
+            noise_std: rng.uniform_in(0.01, 0.06),
+        }
+    }
+}
+
+/// Render one sample into `out` (length SAMPLE_LEN, HWC layout, values
+/// roughly in [0,1] before noise).
+pub fn render_into(class: usize, rng: &mut Rng, out: &mut [f32]) {
+    assert_eq!(out.len(), SAMPLE_LEN);
+    let spec = class_spec(class);
+    let j = Jitter::draw(rng);
+    let inv_r = 1.0 / j.radius;
+    for py in 0..IMG {
+        for px in 0..IMG {
+            // plate-local coordinates (rotate + scale + translate inverse)
+            let dx = (px as f32 - j.cx) * inv_r;
+            let dy = (py as f32 - j.cy) * inv_r;
+            let x = j.rot_cos * dx + j.rot_sin * dy;
+            let y = -j.rot_sin * dx + j.rot_cos * dy;
+
+            let sdf = shape_sdf(spec.shape, x, y);
+            let mut rgb = if sdf > 0.0 {
+                // background with a soft vertical/horizontal gradient
+                [
+                    j.bg[0] + j.bg_grad[0] * px as f32 + j.bg_grad[1] * py as f32,
+                    j.bg[1] + j.bg_grad[0] * px as f32 + j.bg_grad[1] * py as f32,
+                    j.bg[2] + j.bg_grad[0] * px as f32 - j.bg_grad[1] * py as f32,
+                ]
+            } else if sdf > -0.22 {
+                spec.rim
+            } else if glyph_hit(spec.glyph, x * 1.4, y * 1.4) {
+                [0.08, 0.08, 0.08]
+            } else {
+                spec.face
+            };
+            // lighting + sensor noise
+            for c in 0..CHANNELS {
+                let v = (rgb[c] - 0.5) * j.contrast + 0.5 + j.brightness;
+                rgb[c] = (v + rng.normal_f32(0.0, j.noise_std)).clamp(0.0, 1.0);
+            }
+            let base = (py * IMG + px) * CHANNELS;
+            out[base] = rgb[0];
+            out[base + 1] = rgb[1];
+            out[base + 2] = rgb[2];
+        }
+    }
+}
+
+/// Convenience allocation wrapper around [`render_into`].
+pub fn render(class: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut out = vec![0.0f32; SAMPLE_LEN];
+    render_into(class, rng, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_are_distinct() {
+        // every class must differ from every other in at least one of
+        // (shape, glyph, rim)
+        for a in 0..NUM_CLASSES {
+            for b in (a + 1)..NUM_CLASSES {
+                let sa = class_spec(a);
+                let sb = class_spec(b);
+                let same = sa.shape == sb.shape
+                    && sa.glyph == sb.glyph
+                    && sa.rim == sb.rim;
+                assert!(!same, "classes {a} and {b} visually identical");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn class_out_of_range_panics() {
+        let _ = class_spec(43);
+    }
+
+    #[test]
+    fn render_is_deterministic_per_seed() {
+        let mut r1 = Rng::seed_from(5).substream(3);
+        let mut r2 = Rng::seed_from(5).substream(3);
+        assert_eq!(render(7, &mut r1), render(7, &mut r2));
+    }
+
+    #[test]
+    fn render_values_in_unit_range() {
+        let mut rng = Rng::seed_from(6);
+        for class in [0usize, 11, 42] {
+            let img = render(class, &mut rng);
+            assert_eq!(img.len(), SAMPLE_LEN);
+            assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn sign_pixels_differ_from_background() {
+        // centre pixel should usually be plate face / glyph, not background:
+        // render many and check the centre differs from a corner on average
+        let mut rng = Rng::seed_from(7);
+        let mut centre_diff = 0.0f32;
+        let n = 50;
+        for class in 0..n {
+            let img = render(class % NUM_CLASSES, &mut rng);
+            let c = (16 * IMG + 16) * CHANNELS;
+            let corner = 0;
+            centre_diff +=
+                (img[c] - img[corner]).abs() + (img[c + 1] - img[corner + 1]).abs();
+        }
+        assert!(centre_diff / n as f32 > 0.05, "signs invisible?");
+    }
+
+    #[test]
+    fn same_class_varies_across_samples() {
+        let mut rng = Rng::seed_from(8);
+        let a = render(3, &mut rng);
+        let b = render(3, &mut rng);
+        assert_ne!(a, b, "augmentation missing");
+    }
+
+    #[test]
+    fn sdf_shapes_inside_outside() {
+        for s in SHAPES {
+            assert!(shape_sdf(s, 0.0, 0.0) < 0.0, "{s:?} centre must be inside");
+            assert!(shape_sdf(s, 3.0, 3.0) > 0.0, "{s:?} far point must be outside");
+        }
+    }
+}

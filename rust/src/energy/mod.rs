@@ -1,0 +1,109 @@
+//! Client energy accounting (paper §III-C, Table II, Fig. 4's x-axis).
+//!
+//! [`platform`] carries the 9-platform datasheet table; [`model`] is the
+//! Eq. 9 estimator; [`Meter`] accumulates per-client energy over a run so
+//! the coordinator can report per-scheme totals and savings vs homogeneous
+//! baselines.
+
+pub mod model;
+pub mod platform;
+
+pub use model::{
+    energy_joules, macs_per_dsp, mean_energy_joules, saving_vs_f32, training_macs,
+    RESNET50_MACS_PER_SAMPLE,
+};
+pub use platform::{by_name, Platform, PLATFORMS};
+
+use crate::quant::Precision;
+
+/// Accumulates energy spent by every client across a run.
+#[derive(Clone, Debug, Default)]
+pub struct Meter {
+    /// (client, precision, joules) — joules accumulated per client.
+    per_client: Vec<(usize, Precision, f64)>,
+}
+
+impl Meter {
+    pub fn new(precisions: &[Precision]) -> Self {
+        Meter {
+            per_client: precisions
+                .iter()
+                .enumerate()
+                .map(|(i, &p)| (i, p, 0.0))
+                .collect(),
+        }
+    }
+
+    /// Charge client `k` for `macs` MACs at its precision (platform-mean).
+    pub fn charge(&mut self, k: usize, macs: f64) {
+        let (_, p, ref mut j) = self.per_client[k];
+        *j += mean_energy_joules(p, macs);
+    }
+
+    /// Total joules across all clients.
+    pub fn total_joules(&self) -> f64 {
+        self.per_client.iter().map(|(_, _, j)| j).sum()
+    }
+
+    /// Joules for client `k`.
+    pub fn client_joules(&self, k: usize) -> f64 {
+        self.per_client[k].2
+    }
+
+    /// What the same per-client MAC workload would have cost had every
+    /// client run at `p` — for "savings vs homogeneous 32/16-bit" claims.
+    /// Requires the per-client MAC trace, so the coordinator keeps one.
+    pub fn counterfactual_joules(macs_per_client: &[f64], p: Precision) -> f64 {
+        macs_per_client
+            .iter()
+            .map(|&m| mean_energy_joules(p, m))
+            .sum()
+    }
+
+    /// Saving (%) of `actual` relative to `baseline` joules.
+    pub fn saving_pct(actual: f64, baseline: f64) -> f64 {
+        (1.0 - actual / baseline) * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meter_accumulates_per_precision() {
+        let ps = vec![Precision::of(32), Precision::of(4)];
+        let mut m = Meter::new(&ps);
+        m.charge(0, 1e9);
+        m.charge(1, 1e9);
+        // 4-bit client must spend far less than the 32-bit one
+        assert!(m.client_joules(1) < m.client_joules(0) * 0.05);
+        assert!((m.total_joules()
+            - (m.client_joules(0) + m.client_joules(1)))
+        .abs()
+            < 1e-12);
+    }
+
+    #[test]
+    fn counterfactual_and_saving() {
+        let macs = vec![1e9, 1e9, 1e9];
+        let all32 = Meter::counterfactual_joules(&macs, Precision::of(32));
+        let all4 = Meter::counterfactual_joules(&macs, Precision::of(4));
+        let s = Meter::saving_pct(all4, all32);
+        assert!(s > 90.0, "saving {s}");
+        assert_eq!(Meter::saving_pct(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn mixed_scheme_sits_between_homogeneous_extremes() {
+        // [16,8,4] total must be between all-4 and all-16 for equal work
+        let macs = 1e9;
+        let mixed: f64 = [16u8, 8, 4]
+            .iter()
+            .map(|&b| mean_energy_joules(Precision::of(b), macs))
+            .sum();
+        let all16 = 3.0 * mean_energy_joules(Precision::of(16), macs);
+        let all4 = 3.0 * mean_energy_joules(Precision::of(4), macs);
+        assert!(mixed < all16 && mixed > all4);
+    }
+}

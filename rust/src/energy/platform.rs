@@ -1,0 +1,77 @@
+//! FPGA edge-platform datasheet table (paper §III-C).
+//!
+//! The paper estimates client energy from "official data sheets of typical
+//! FPGA edge platforms" across "9 Xilinx FPGA platforms of varying
+//! specifications".  This table carries the same datasheet quantities
+//! Eq. 9 needs — DSP slice count, DSP fmax, and typical package power —
+//! for nine UltraScale+-class parts spanning the embedded (Zynq), mid
+//! (Kintex) and datacenter (Virtex) tiers.  Values are rounded datasheet
+//! figures (DS923 and friends); the *relative* spread across platforms is
+//! what the averaged Table-II numbers inherit.
+
+/// One FPGA platform's Eq.-9 inputs.
+#[derive(Clone, Copy, Debug)]
+pub struct Platform {
+    pub name: &'static str,
+    /// Number of DSP slices on the part (N_DSP).
+    pub dsp_slices: u32,
+    /// DSP fmax in MHz (F_DSP).
+    pub dsp_mhz: u32,
+    /// Typical package power draw in watts (E_Package's rate).
+    pub package_w: f32,
+    /// Achievable sustained DSP utilisation for a dense CNN dataflow —
+    /// accelerators never keep every slice busy every cycle (memory
+    /// stalls, control, partial tiles).
+    pub utilization: f32,
+}
+
+/// The nine evaluated platforms.
+pub const PLATFORMS: [Platform; 9] = [
+    Platform { name: "zu3eg", dsp_slices: 360, dsp_mhz: 650, package_w: 10.0, utilization: 0.30 },
+    Platform { name: "zu7ev", dsp_slices: 1_728, dsp_mhz: 650, package_w: 20.0, utilization: 0.28 },
+    Platform { name: "zu9eg", dsp_slices: 2_520, dsp_mhz: 650, package_w: 25.0, utilization: 0.26 },
+    Platform { name: "ku5p", dsp_slices: 1_824, dsp_mhz: 775, package_w: 16.0, utilization: 0.28 },
+    Platform { name: "ku15p", dsp_slices: 1_968, dsp_mhz: 775, package_w: 25.0, utilization: 0.26 },
+    Platform { name: "vu3p", dsp_slices: 2_280, dsp_mhz: 891, package_w: 25.0, utilization: 0.25 },
+    Platform { name: "vu9p", dsp_slices: 6_840, dsp_mhz: 891, package_w: 60.0, utilization: 0.22 },
+    Platform { name: "vu13p", dsp_slices: 12_288, dsp_mhz: 891, package_w: 90.0, utilization: 0.20 },
+    Platform { name: "vu35p", dsp_slices: 5_952, dsp_mhz: 891, package_w: 75.0, utilization: 0.22 },
+];
+
+pub fn by_name(name: &str) -> Option<&'static Platform> {
+    PLATFORMS.iter().find(|p| p.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nine_platforms() {
+        assert_eq!(PLATFORMS.len(), 9);
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<_> = PLATFORMS.iter().map(|p| p.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 9);
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(by_name("vu9p").unwrap().dsp_slices, 6_840);
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn sane_datasheet_ranges() {
+        for p in &PLATFORMS {
+            assert!(p.dsp_slices >= 100 && p.dsp_slices <= 20_000, "{}", p.name);
+            assert!(p.dsp_mhz >= 400 && p.dsp_mhz <= 1_000, "{}", p.name);
+            assert!(p.package_w > 1.0 && p.package_w < 200.0, "{}", p.name);
+            assert!(p.utilization > 0.0 && p.utilization <= 1.0, "{}", p.name);
+        }
+    }
+}

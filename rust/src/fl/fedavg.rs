@@ -1,0 +1,114 @@
+//! FedAvg aggregation math (paper Eq. 1) — the noise-free oracle both
+//! wireless paths are measured against.
+
+use crate::tensor;
+
+/// Weighted FedAvg: θ = Σ w_k θ_k / Σ w_k.
+/// `weights` are typically dataset sizes (paper: equal shards → equal w).
+pub fn fedavg(updates: &[Vec<f32>], weights: &[f32]) -> Vec<f32> {
+    assert_eq!(updates.len(), weights.len());
+    let n = updates.first().map(|u| u.len()).unwrap_or(0);
+    let mut acc = vec![0.0f32; n];
+    let total: f32 = weights.iter().sum();
+    assert!(total > 0.0, "weights must sum positive");
+    for (u, &w) in updates.iter().zip(weights.iter()) {
+        assert_eq!(u.len(), n, "update length mismatch");
+        tensor::axpy(&mut acc, w / total, u);
+    }
+    acc
+}
+
+/// Unweighted mean (the paper's Alg. 1 step 4: r/K).
+pub fn mean(updates: &[Vec<f32>]) -> Vec<f32> {
+    let w = vec![1.0f32; updates.len()];
+    fedavg(updates, &w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+
+    #[test]
+    fn mean_of_identical_is_identity() {
+        let u = vec![vec![1.0f32, -2.0, 3.0]; 5];
+        assert_eq!(mean(&u), vec![1.0, -2.0, 3.0]);
+    }
+
+    #[test]
+    fn weighted_average() {
+        let updates = vec![vec![0.0f32, 0.0], vec![10.0f32, 20.0]];
+        let out = fedavg(&updates, &[3.0, 1.0]);
+        assert_eq!(out, vec![2.5, 5.0]);
+    }
+
+    #[test]
+    fn property_mean_within_bounds() {
+        // every coordinate of the mean lies within [min, max] of inputs
+        testing::check(
+            "fedavg-bounds",
+            testing::CASES,
+            |rng| {
+                let k = 1 + rng.below(6);
+                let n = 1 + rng.below(50);
+                let us: Vec<Vec<f32>> = (0..k)
+                    .map(|_| {
+                        let mut v = vec![0.0f32; n];
+                        rng.fill_normal(&mut v, 0.0, 5.0);
+                        v
+                    })
+                    .collect();
+                us
+            },
+            |us| {
+                let m = mean(us);
+                (0..m.len()).all(|i| {
+                    let lo = us.iter().map(|u| u[i]).fold(f32::INFINITY, f32::min);
+                    let hi = us.iter().map(|u| u[i]).fold(f32::NEG_INFINITY, f32::max);
+                    m[i] >= lo - 1e-4 && m[i] <= hi + 1e-4
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn property_linearity() {
+        // fedavg(a+b) == fedavg(a) + fedavg(b) elementwise
+        testing::check(
+            "fedavg-linearity",
+            32,
+            |rng| {
+                let n = 1 + rng.below(32);
+                let mk = |rng: &mut crate::rng::Rng| {
+                    (0..3)
+                        .map(|_| {
+                            let mut v = vec![0.0f32; n];
+                            rng.fill_normal(&mut v, 0.0, 1.0);
+                            v
+                        })
+                        .collect::<Vec<_>>()
+                };
+                (mk(rng), mk(rng))
+            },
+            |(a, b)| {
+                let sum: Vec<Vec<f32>> = a
+                    .iter()
+                    .zip(b.iter())
+                    .map(|(x, y)| x.iter().zip(y.iter()).map(|(p, q)| p + q).collect())
+                    .collect();
+                let lhs = mean(&sum);
+                let ra = mean(a);
+                let rb = mean(b);
+                lhs.iter()
+                    .zip(ra.iter().zip(rb.iter()))
+                    .all(|(l, (x, y))| (l - (x + y)).abs() < 1e-4)
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "weights must sum positive")]
+    fn zero_weights_panic() {
+        let _ = fedavg(&[vec![1.0]], &[0.0]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Federated-learning core: schemes, client selection, aggregation oracle.
+//!
+//! The round state machine itself lives in [`crate::coordinator`]; this
+//! module holds the pure-math pieces it composes.
+
+pub mod fedavg;
+pub mod scheme;
+pub mod selection;
+
+pub use fedavg::{fedavg, mean};
+pub use scheme::Scheme;
+pub use selection::Selection;

@@ -1,0 +1,180 @@
+//! Client precision schemes (paper §IV-A2).
+//!
+//! "We assign quantization levels to the 15 clients by a group of 5.  Each
+//! scheme consists of 3 precision levels, and each precision level is
+//! assigned to 5 clients.  Quantization levels are chosen from
+//! [32, 24, 16, 12, 8, 6, 4]."
+//!
+//! A [`Scheme`] is the ordered list of group levels (e.g. `[16, 8, 4]`);
+//! [`Scheme::client_precisions`] expands it to the per-client assignment.
+
+use anyhow::{bail, Result};
+
+use crate::quant::Precision;
+
+/// Levels a *scheme* may draw from (Table I's 3/2-bit probing levels are
+/// not valid client operating points — no train artifacts exist for them).
+pub const SCHEME_LEVELS: [u8; 7] = [32, 24, 16, 12, 8, 6, 4];
+
+/// An ordered assignment of precision levels to client groups.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Scheme {
+    groups: Vec<Precision>,
+}
+
+impl Scheme {
+    /// Build from group levels, highest first by convention.
+    pub fn new(levels: &[u8]) -> Result<Self> {
+        if levels.is_empty() {
+            bail!("scheme needs at least one precision group");
+        }
+        let mut groups = Vec::with_capacity(levels.len());
+        for &b in levels {
+            if !SCHEME_LEVELS.contains(&b) {
+                bail!("scheme level {b} not in {SCHEME_LEVELS:?}");
+            }
+            groups.push(Precision::of(b));
+        }
+        Ok(Scheme { groups })
+    }
+
+    /// Parse "16,8,4".
+    pub fn parse(s: &str) -> Result<Self> {
+        let levels: Result<Vec<u8>> = s
+            .split(',')
+            .map(|t| Ok(t.trim().parse::<u8>()?))
+            .collect();
+        Scheme::new(&levels?)
+    }
+
+    /// The paper's eight Fig.-3 schemes.
+    pub fn paper_schemes() -> Vec<Scheme> {
+        [
+            "32,32,32",
+            "32,16,8",
+            "24,12,6",
+            "16,16,16",
+            "16,8,4",
+            "12,4,4",
+            "8,8,8",
+            "4,4,4",
+        ]
+        .iter()
+        .map(|s| Scheme::parse(s).expect("static scheme"))
+        .collect()
+    }
+
+    pub fn groups(&self) -> &[Precision] {
+        &self.groups
+    }
+
+    /// Is every group at the same level?
+    pub fn is_homogeneous(&self) -> bool {
+        self.groups.windows(2).all(|w| w[0] == w[1])
+    }
+
+    /// Expand to per-client precisions: `clients` must divide evenly into
+    /// the groups (paper: 15 clients / 3 groups = 5 each).
+    pub fn client_precisions(&self, clients: usize) -> Result<Vec<Precision>> {
+        let g = self.groups.len();
+        if clients % g != 0 {
+            bail!("{clients} clients do not divide into {g} equal groups");
+        }
+        let per = clients / g;
+        Ok(self
+            .groups
+            .iter()
+            .flat_map(|&p| std::iter::repeat(p).take(per))
+            .collect())
+    }
+
+    /// Distinct levels, high to low.
+    pub fn distinct_levels(&self) -> Vec<Precision> {
+        let mut ls = self.groups.clone();
+        ls.sort_by(|a, b| b.bits().cmp(&a.bits()));
+        ls.dedup();
+        ls
+    }
+
+    /// Lowest precision present (the paper's client-performance focus).
+    pub fn lowest(&self) -> Precision {
+        *self
+            .groups
+            .iter()
+            .min_by_key(|p| p.bits())
+            .expect("non-empty scheme")
+    }
+}
+
+impl std::fmt::Display for Scheme {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let parts: Vec<String> =
+            self.groups.iter().map(|p| p.bits().to_string()).collect();
+        write!(f, "{}", parts.join(","))
+    }
+}
+
+impl std::str::FromStr for Scheme {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Scheme::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_display_roundtrip() {
+        let s = Scheme::parse("16,8,4").unwrap();
+        assert_eq!(s.to_string(), "16,8,4");
+        assert_eq!(s.groups().len(), 3);
+        assert!(!s.is_homogeneous());
+    }
+
+    #[test]
+    fn rejects_bad_levels() {
+        assert!(Scheme::parse("16,8,5").is_err());
+        assert!(Scheme::parse("3,3,3").is_err()); // 3-bit: probe-only level
+        assert!(Scheme::parse("").is_err());
+    }
+
+    #[test]
+    fn paper_schemes_all_valid_for_15_clients() {
+        let schemes = Scheme::paper_schemes();
+        assert_eq!(schemes.len(), 8);
+        for s in &schemes {
+            let ps = s.client_precisions(15).unwrap();
+            assert_eq!(ps.len(), 15);
+            // groups of five (paper §IV-A2)
+            for g in 0..3 {
+                let group = &ps[g * 5..(g + 1) * 5];
+                assert!(group.windows(2).all(|w| w[0] == w[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn homogeneous_detection() {
+        assert!(Scheme::parse("8,8,8").unwrap().is_homogeneous());
+        assert!(!Scheme::parse("12,4,4").unwrap().is_homogeneous());
+    }
+
+    #[test]
+    fn client_expansion_requires_divisibility() {
+        let s = Scheme::parse("16,8,4").unwrap();
+        assert!(s.client_precisions(16).is_err());
+        assert!(s.client_precisions(3).is_ok());
+    }
+
+    #[test]
+    fn distinct_and_lowest() {
+        let s = Scheme::parse("12,4,4").unwrap();
+        assert_eq!(
+            s.distinct_levels().iter().map(|p| p.bits()).collect::<Vec<_>>(),
+            vec![12, 4]
+        );
+        assert_eq!(s.lowest().bits(), 4);
+    }
+}

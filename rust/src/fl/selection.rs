@@ -1,0 +1,87 @@
+//! Per-round client selection (paper §II-A: "N clients, at each
+//! communication round, K of them are selected").
+
+use crate::rng::Rng;
+
+/// Strategy for picking the K participants each round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Selection {
+    /// All N clients every round (the paper's evaluation setting).
+    All,
+    /// Uniformly random K without replacement.
+    UniformK(usize),
+    /// Deterministic rotation: rounds cycle through client blocks.
+    RoundRobinK(usize),
+}
+
+impl Selection {
+    /// Client indices participating in `round` (1-based round index).
+    pub fn select(&self, clients: usize, round: usize, rng: &mut Rng) -> Vec<usize> {
+        match *self {
+            Selection::All => (0..clients).collect(),
+            Selection::UniformK(k) => {
+                let k = k.min(clients);
+                let mut sel = rng.choose_k(clients, k);
+                sel.sort_unstable();
+                sel
+            }
+            Selection::RoundRobinK(k) => {
+                let k = k.min(clients);
+                let start = ((round.saturating_sub(1)) * k) % clients;
+                (0..k).map(|i| (start + i) % clients).collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_selects_everyone() {
+        let mut rng = Rng::seed_from(1);
+        assert_eq!(Selection::All.select(5, 3, &mut rng), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn uniform_k_distinct_and_sized() {
+        let mut rng = Rng::seed_from(2);
+        for round in 1..50 {
+            let sel = Selection::UniformK(6).select(15, round, &mut rng);
+            assert_eq!(sel.len(), 6);
+            let mut d = sel.clone();
+            d.dedup();
+            assert_eq!(d.len(), 6);
+            assert!(sel.windows(2).all(|w| w[0] < w[1]), "sorted");
+        }
+    }
+
+    #[test]
+    fn uniform_k_covers_all_clients_eventually() {
+        let mut rng = Rng::seed_from(3);
+        let mut seen = vec![false; 15];
+        for round in 1..200 {
+            for i in Selection::UniformK(5).select(15, round, &mut rng) {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let mut rng = Rng::seed_from(4);
+        let s = Selection::RoundRobinK(5);
+        assert_eq!(s.select(15, 1, &mut rng), vec![0, 1, 2, 3, 4]);
+        assert_eq!(s.select(15, 2, &mut rng), vec![5, 6, 7, 8, 9]);
+        assert_eq!(s.select(15, 3, &mut rng), vec![10, 11, 12, 13, 14]);
+        assert_eq!(s.select(15, 4, &mut rng), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let mut rng = Rng::seed_from(5);
+        assert_eq!(Selection::UniformK(99).select(4, 1, &mut rng).len(), 4);
+    }
+}

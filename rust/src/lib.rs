@@ -1,0 +1,40 @@
+//! # mpota — Mixed-Precision Over-The-Air Federated Learning
+//!
+//! Rust coordinator (L3) of the three-layer reproduction of
+//! *"Mixed-Precision Federated Learning via Multi-Precision Over-the-Air
+//! Aggregation"* (Yuan, Wei, Guo — IEEE WCNC 2025).
+//!
+//! The layers (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — federated-learning orchestration: round
+//!   scheduling, client precision schemes, the wireless physical layer
+//!   (Rayleigh fading, pilot-based channel estimation, channel-inversion
+//!   precoding, analog amplitude-modulated superposition + AWGN), energy
+//!   accounting, metrics, CLI.  Python never runs here.
+//! * **L2** — jax model graphs (`python/compile/model.py`), AOT-lowered to
+//!   HLO text once by `make artifacts`.
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) for Algorithm-2
+//!   quantization, tiled quantized matmul and the K-client OTA
+//!   superposition; lowered into the same artifacts.
+//!
+//! The crate is organised as many small substrate modules; `coordinator`
+//! wires them into the paper's Algorithm 1.
+
+pub mod channel;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod fl;
+pub mod json;
+pub mod metrics;
+pub mod ota;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+
+/// Crate-wide result alias (anyhow is the only error dependency).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,273 @@
+//! Run metrics: accuracy/loss tracking, convergence detection, and
+//! structured (JSONL + CSV) run logs.
+//!
+//! The paper's server-side metrics (§IV-A3): convergence speed (rounds to
+//! a target accuracy) and final aggregated-model performance; client-side:
+//! post-requantization accuracy.  [`RoundRecord`] captures one
+//! communication round; [`RunLog`] accumulates them and renders the
+//! artefacts the benches print.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::json::Value;
+
+/// Everything measured in one communication round.
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Server (global model) top-1 accuracy on the held-out test set.
+    pub server_accuracy: f64,
+    /// Server test loss.
+    pub server_loss: f64,
+    /// Mean client training loss this round (across participants).
+    pub train_loss: f64,
+    /// Mean client training accuracy this round.
+    pub train_accuracy: f64,
+    /// Clients that actually transmitted (not silenced).
+    pub participants: usize,
+    /// OTA aggregation MSE vs the noise-free ideal.
+    pub ota_mse: f64,
+    /// Cumulative client energy so far (J).
+    pub energy_joules: f64,
+    /// Wall-clock seconds spent in this round.
+    pub wall_secs: f64,
+}
+
+/// Accumulated log for a full run.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub rounds: Vec<RoundRecord>,
+    /// Label for reports (e.g. the scheme string "16,8,4").
+    pub label: String,
+}
+
+impl RunLog {
+    pub fn new(label: impl Into<String>) -> Self {
+        RunLog { rounds: Vec::new(), label: label.into() }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r);
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.rounds.last().map(|r| r.server_accuracy).unwrap_or(0.0)
+    }
+
+    /// Best accuracy seen at any round.
+    pub fn best_accuracy(&self) -> f64 {
+        self.rounds.iter().map(|r| r.server_accuracy).fold(0.0, f64::max)
+    }
+
+    /// First round whose accuracy reaches `threshold` (convergence speed,
+    /// paper §IV-A3). None if never reached.
+    pub fn rounds_to_accuracy(&self, threshold: f64) -> Option<usize> {
+        self.rounds
+            .iter()
+            .find(|r| r.server_accuracy >= threshold)
+            .map(|r| r.round)
+    }
+
+    /// Convergence-stability proxy: standard deviation of round-over-round
+    /// accuracy deltas in the first `k` rounds ("erratic" = large).
+    pub fn early_instability(&self, k: usize) -> f64 {
+        let accs: Vec<f64> = self
+            .rounds
+            .iter()
+            .take(k)
+            .map(|r| r.server_accuracy)
+            .collect();
+        if accs.len() < 3 {
+            return 0.0;
+        }
+        let deltas: Vec<f64> = accs.windows(2).map(|w| w[1] - w[0]).collect();
+        let mean = deltas.iter().sum::<f64>() / deltas.len() as f64;
+        (deltas.iter().map(|d| (d - mean) * (d - mean)).sum::<f64>()
+            / deltas.len() as f64)
+            .sqrt()
+    }
+
+    /// Total energy at end of run.
+    pub fn total_energy(&self) -> f64 {
+        self.rounds.last().map(|r| r.energy_joules).unwrap_or(0.0)
+    }
+
+    // ------------------------------------------------------------- export
+
+    /// One JSON object per round (JSONL) — machine-readable run record.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in &self.rounds {
+            let mut o = Value::object();
+            o.set("label", Value::Str(self.label.clone()));
+            o.set("round", Value::Num(r.round as f64));
+            o.set("server_acc", Value::Num(r.server_accuracy));
+            o.set("server_loss", Value::Num(r.server_loss));
+            o.set("train_loss", Value::Num(r.train_loss));
+            o.set("train_acc", Value::Num(r.train_accuracy));
+            o.set("participants", Value::Num(r.participants as f64));
+            o.set("ota_mse", Value::Num(r.ota_mse));
+            o.set("energy_j", Value::Num(r.energy_joules));
+            o.set("wall_s", Value::Num(r.wall_secs));
+            out.push_str(&o.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV (header + one row per round) — for quick plotting.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,server_acc,server_loss,train_loss,train_acc,participants,ota_mse,energy_j,wall_s\n",
+        );
+        for r in &self.rounds {
+            out.push_str(&format!(
+                "{},{:.6},{:.6},{:.6},{:.6},{},{:.3e},{:.4},{:.3}\n",
+                r.round,
+                r.server_accuracy,
+                r.server_loss,
+                r.train_loss,
+                r.train_accuracy,
+                r.participants,
+                r.ota_mse,
+                r.energy_joules,
+                r.wall_secs
+            ));
+        }
+        out
+    }
+
+    pub fn write_files(&self, dir: &Path, stem: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let mut f = std::fs::File::create(dir.join(format!("{stem}.jsonl")))?;
+        f.write_all(self.to_jsonl().as_bytes())?;
+        let mut f = std::fs::File::create(dir.join(format!("{stem}.csv")))?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+}
+
+/// Online mean/variance (Welford) for streaming diagnostics.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log_with_accs(accs: &[f64]) -> RunLog {
+        let mut log = RunLog::new("test");
+        for (i, &a) in accs.iter().enumerate() {
+            log.push(RoundRecord {
+                round: i + 1,
+                server_accuracy: a,
+                ..Default::default()
+            });
+        }
+        log
+    }
+
+    #[test]
+    fn convergence_detection() {
+        let log = log_with_accs(&[0.1, 0.5, 0.85, 0.92, 0.91]);
+        assert_eq!(log.rounds_to_accuracy(0.9), Some(4));
+        assert_eq!(log.rounds_to_accuracy(0.99), None);
+        assert_eq!(log.final_accuracy(), 0.91);
+        assert_eq!(log.best_accuracy(), 0.92);
+    }
+
+    #[test]
+    fn instability_orders_smooth_vs_erratic() {
+        let smooth = log_with_accs(&[0.1, 0.3, 0.5, 0.7, 0.8, 0.85]);
+        let erratic = log_with_accs(&[0.1, 0.4, 0.2, 0.6, 0.3, 0.7]);
+        assert!(erratic.early_instability(6) > smooth.early_instability(6));
+    }
+
+    #[test]
+    fn jsonl_parses_back() {
+        let log = log_with_accs(&[0.25, 0.5]);
+        for line in log.to_jsonl().lines() {
+            let v = crate::json::parse(line).unwrap();
+            assert_eq!(v.get("label").unwrap().as_str().unwrap(), "test");
+            assert!(v.get("server_acc").unwrap().as_f64().unwrap() <= 0.5);
+        }
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let log = log_with_accs(&[0.2]);
+        let csv = log.to_csv();
+        let lines: Vec<_> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("round,"));
+        assert!(lines[1].starts_with("1,"));
+    }
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        // sample variance of this classic set is 32/7
+        assert!((w.var() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(w.count(), 8);
+    }
+
+    #[test]
+    fn empty_log_defaults() {
+        let log = RunLog::new("empty");
+        assert_eq!(log.final_accuracy(), 0.0);
+        assert_eq!(log.rounds_to_accuracy(0.5), None);
+        assert_eq!(log.early_instability(10), 0.0);
+    }
+
+    #[test]
+    fn write_files_creates_both() {
+        let dir = std::env::temp_dir().join("mpota_metrics_test");
+        let log = log_with_accs(&[0.3, 0.6]);
+        log.write_files(&dir, "run1").unwrap();
+        assert!(dir.join("run1.jsonl").exists());
+        assert!(dir.join("run1.csv").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

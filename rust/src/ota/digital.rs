@@ -1,0 +1,167 @@
+//! Digital orthogonal-uplink baseline (conventional FL aggregation).
+//!
+//! Each client transmits its quantized update bit-exactly in its own
+//! orthogonal slot (TDMA; error-free link-layer assumed, as is standard
+//! when comparing aggregation *architectures*).  The server must then
+//! perform per-client PRECISION CONVERSION — decode each client's format
+//! (affine codes at its scale/zero-point, or truncated floats) back to f32
+//! — before it can average.  This conversion step, and the K× channel
+//! uses, are exactly the overheads the paper's analog scheme eliminates.
+
+use crate::ota::AggregateStats;
+use crate::quant::{fixed, float, Format, Precision};
+use crate::tensor;
+
+/// What one client puts on the air in the digital baseline.
+#[derive(Clone, Debug)]
+pub enum DigitalFrame {
+    /// Affine integer codes + the (scale, zero-point) header.
+    Fixed {
+        codes: Vec<u32>,
+        params: fixed::AffineParams,
+        bits: u8,
+    },
+    /// Truncated floats transmitted as raw 32-bit words with the dropped
+    /// mantissa bits elided: b bits on the wire per value.
+    Float { words: Vec<u32>, bits: u8 },
+}
+
+impl DigitalFrame {
+    /// Encode a payload at the client's precision.
+    pub fn encode(payload: &[f32], p: Precision) -> Self {
+        match p.format() {
+            Format::FixedPoint => {
+                let (codes, params) = fixed::encode_tensor(payload, p.bits());
+                DigitalFrame::Fixed { codes, params, bits: p.bits() }
+            }
+            Format::FloatTrunc | Format::Identity => {
+                let mask = float::mask(p.bits()).expect("validated level");
+                DigitalFrame::Float {
+                    words: payload.iter().map(|v| v.to_bits() & mask).collect(),
+                    bits: p.bits(),
+                }
+            }
+        }
+    }
+
+    /// Server-side decode back to decimal values (precision conversion).
+    pub fn decode(&self) -> Vec<f32> {
+        match self {
+            DigitalFrame::Fixed { codes, params, .. } => {
+                fixed::decode_tensor(codes, *params)
+            }
+            DigitalFrame::Float { words, .. } => {
+                words.iter().map(|&w| f32::from_bits(w)).collect()
+            }
+        }
+    }
+
+    /// Payload bits on the wire (header ignored: 64 bits amortised away).
+    pub fn bits_on_wire(&self) -> u64 {
+        match self {
+            DigitalFrame::Fixed { codes, bits, .. } => {
+                codes.len() as u64 * *bits as u64
+            }
+            DigitalFrame::Float { words, bits } => words.len() as u64 * *bits as u64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            DigitalFrame::Fixed { codes, .. } => codes.len(),
+            DigitalFrame::Float { words, .. } => words.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Full digital-baseline aggregation: encode at each client's precision,
+/// transmit orthogonally, decode and average at the server.
+///
+/// `payloads[k]` are the RAW (pre-quantization) client updates; encoding
+/// performs the client-side quantization, so the decoded values match what
+/// the analog path would transmit as decimals.
+pub fn aggregate(
+    payloads: &[Vec<f32>],
+    precisions: &[Precision],
+) -> (Vec<f32>, AggregateStats) {
+    assert_eq!(payloads.len(), precisions.len());
+    let n = payloads.first().map(|p| p.len()).unwrap_or(0);
+    let k = payloads.len();
+    let mut acc = vec![0.0f32; n];
+    let mut stats = AggregateStats::default();
+    for (payload, &p) in payloads.iter().zip(precisions.iter()) {
+        assert_eq!(payload.len(), n, "payload length mismatch");
+        let frame = DigitalFrame::encode(payload, p);
+        stats.bits_transmitted += frame.bits_on_wire();
+        // Orthogonal slots: every client costs its own n channel uses.
+        stats.channel_uses += n as u64;
+        let decoded = frame.decode();
+        tensor::axpy(&mut acc, 1.0, &decoded);
+    }
+    if k > 0 {
+        tensor::scale(&mut acc, 1.0 / k as f32);
+    }
+    stats.participants = k;
+    (acc, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fake_quant;
+    use crate::rng::Rng;
+
+    fn payload(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from(seed);
+        (0..n).map(|_| rng.normal_f32(0.0, 2.0)).collect()
+    }
+
+    #[test]
+    fn frame_roundtrip_equals_fake_quant() {
+        for bits in [32u8, 24, 16, 12, 8, 6, 4, 3, 2] {
+            let p = Precision::of(bits);
+            let w = payload(333, bits as u64);
+            let frame = DigitalFrame::encode(&w, p);
+            let decoded = frame.decode();
+            let expect = fake_quant(&w, p);
+            assert_eq!(decoded, expect, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn bits_on_wire_scale_with_precision() {
+        let w = payload(1000, 1);
+        let f32b = DigitalFrame::encode(&w, Precision::of(32)).bits_on_wire();
+        let f4b = DigitalFrame::encode(&w, Precision::of(4)).bits_on_wire();
+        assert_eq!(f32b, 32_000);
+        assert_eq!(f4b, 4_000);
+    }
+
+    #[test]
+    fn aggregate_is_mean_of_quantized() {
+        let raw: Vec<Vec<f32>> = (0..3).map(|i| payload(200, 40 + i)).collect();
+        let ps = vec![Precision::of(8), Precision::of(4), Precision::of(32)];
+        let (agg, stats) = aggregate(&raw, &ps);
+        let mut want = vec![0.0f32; 200];
+        for (w, &p) in raw.iter().zip(ps.iter()) {
+            let q = fake_quant(w, p);
+            tensor::axpy(&mut want, 1.0 / 3.0, &q);
+        }
+        assert!(tensor::max_abs_diff(&agg, &want) < 1e-6);
+        assert_eq!(stats.participants, 3);
+        // K x n channel uses (vs n for OTA)
+        assert_eq!(stats.channel_uses, 600);
+        assert_eq!(stats.bits_transmitted, (8 + 4 + 32) * 200);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let (agg, stats) = aggregate(&[], &[]);
+        assert!(agg.is_empty());
+        assert_eq!(stats.participants, 0);
+    }
+}

@@ -1,0 +1,183 @@
+//! Fixed-point affine quantization — Algorithm 2, "fixed" branch.
+//!
+//! All arithmetic is f32 in the exact op order of the jnp oracle
+//! (`kernels/ref.py::fixed_point_fake_quant`) so the two implementations
+//! agree bit-for-bit (enforced against `artifacts/goldens.json`):
+//!
+//! ```text
+//! scale = max((w_max - w_min) / (2^b - 1), 1e-12)
+//! zp    = -w_min / scale
+//! q     = clip(floor(w/scale + zp), 0, 2^b - 1)
+//! out   = (q - zp) * scale
+//! ```
+
+/// Must match `_SCALE_EPS` in kernels/ref.py.
+pub const SCALE_EPS: f32 = 1e-12;
+
+/// Per-tensor affine parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AffineParams {
+    pub scale: f32,
+    pub zero_point: f32,
+}
+
+/// Compute scale / zero-point from the tensor's min/max (Algorithm 2 l.4-5).
+pub fn params(w: &[f32], bits: u8) -> AffineParams {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in w {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if w.is_empty() {
+        lo = 0.0;
+        hi = 0.0;
+    }
+    let levels = ((1u64 << bits) - 1) as f32;
+    let scale = ((hi - lo) / levels).max(SCALE_EPS);
+    AffineParams { scale, zero_point: -lo / scale }
+}
+
+/// Quantize one value to its integer code (Algorithm 2 l.7).
+#[inline]
+pub fn encode(v: f32, p: AffineParams, max_code: u32) -> u32 {
+    let q = (v / p.scale + p.zero_point).floor();
+    let q = q.clamp(0.0, max_code as f32);
+    q as u32
+}
+
+/// De-quantize an integer code back to its decimal value.
+#[inline]
+pub fn decode(code: u32, p: AffineParams) -> f32 {
+    (code as f32 - p.zero_point) * p.scale
+}
+
+/// Fake-quantize in place (encode+decode without materialising codes),
+/// Algorithm-2 floor rounding.
+pub fn fake_quant_inplace(w: &mut [f32], bits: u8) {
+    fake_quant_inplace_mode(w, bits, false);
+}
+
+/// Fake-quantize in place with selectable rounding.
+///
+/// `nearest = false` — Algorithm 2 verbatim (floor): transmission payloads,
+/// PTQ, digital baseline.
+/// `nearest = true` — round-half-even (matches jnp.round bit-for-bit via
+/// `round_ties_even`): the TRAINING-state grid, mirroring the L2 QAT
+/// quantizer (see kernels/ref.py rounding note; Gupta et al. [16]).
+pub fn fake_quant_inplace_mode(w: &mut [f32], bits: u8, nearest: bool) {
+    let p = params(w, bits);
+    let levels = ((1u64 << bits) - 1) as f32;
+    for v in w.iter_mut() {
+        // Keep the exact oracle op order: div, add, round, clip, sub, mul.
+        let pre = *v / p.scale + p.zero_point;
+        let q = if nearest { pre.round_ties_even() } else { pre.floor() };
+        *v = (q.clamp(0.0, levels) - p.zero_point) * p.scale;
+    }
+}
+
+/// Quantize a full tensor to integer codes + params (digital baseline path:
+/// these codes are what a conventional FL uplink would actually transmit).
+pub fn encode_tensor(w: &[f32], bits: u8) -> (Vec<u32>, AffineParams) {
+    let p = params(w, bits);
+    let max_code = ((1u64 << bits) - 1) as u32;
+    (w.iter().map(|&v| encode(v, p, max_code)).collect(), p)
+}
+
+/// Inverse of [`encode_tensor`].
+pub fn decode_tensor(codes: &[u32], p: AffineParams) -> Vec<f32> {
+    codes.iter().map(|&c| decode(c, p)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn params_of_known_range() {
+        let w = [0.0f32, 1.0];
+        let p = params(&w, 8);
+        assert!((p.scale - 1.0 / 255.0).abs() < 1e-9);
+        assert_eq!(p.zero_point, 0.0);
+    }
+
+    #[test]
+    fn constant_tensor_does_not_blow_up() {
+        let mut w = vec![0.7311f32; 33];
+        fake_quant_inplace(&mut w, 8);
+        assert!(w.iter().all(|v| v.is_finite()));
+        assert!(w.iter().all(|v| (v - 0.7311).abs() < 1e-3));
+    }
+
+    #[test]
+    fn zeros_stay_zero() {
+        let mut w = vec![0.0f32; 8];
+        fake_quant_inplace(&mut w, 4);
+        assert_eq!(w, vec![0.0f32; 8]);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_fake_quant() {
+        let mut rng = Rng::seed_from(5);
+        let w: Vec<f32> = (0..512).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+        for bits in [8u8, 6, 4, 3, 2] {
+            let (codes, p) = encode_tensor(&w, bits);
+            let decoded = decode_tensor(&codes, p);
+            let mut fq = w.clone();
+            fake_quant_inplace(&mut fq, bits);
+            assert_eq!(decoded, fq, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn codes_within_range() {
+        let mut rng = Rng::seed_from(6);
+        let w: Vec<f32> = (0..256).map(|_| rng.normal_f32(1.0, 10.0)).collect();
+        for bits in [8u8, 4, 2] {
+            let (codes, _) = encode_tensor(&w, bits);
+            let max = ((1u64 << bits) - 1) as u32;
+            assert!(codes.iter().all(|&c| c <= max));
+            // extremes are hit: min maps to 0, max maps to max_code
+            assert!(codes.contains(&0));
+            assert!(codes.contains(&max));
+        }
+    }
+
+    #[test]
+    fn output_on_uniform_grid() {
+        let mut rng = Rng::seed_from(7);
+        let mut w: Vec<f32> = (0..400).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let p = params(&w, 4);
+        fake_quant_inplace(&mut w, 4);
+        let mut distinct: Vec<f32> = w.clone();
+        distinct.sort_by(f32::total_cmp);
+        distinct.dedup();
+        assert!(distinct.len() <= 16, "levels {}", distinct.len());
+        // consecutive distinct levels differ by ~scale
+        for pair in distinct.windows(2) {
+            let gap = pair[1] - pair[0];
+            let ratio = gap / p.scale;
+            assert!((ratio - ratio.round()).abs() < 1e-3, "gap {gap}");
+        }
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let mut rng = Rng::seed_from(8);
+        let mut w: Vec<f32> = (0..300).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        w.sort_by(f32::total_cmp);
+        let mut q = w.clone();
+        fake_quant_inplace(&mut q, 6);
+        for pair in q.windows(2) {
+            assert!(pair[1] >= pair[0]);
+        }
+    }
+
+    #[test]
+    fn empty_tensor_ok() {
+        let mut w: Vec<f32> = vec![];
+        fake_quant_inplace(&mut w, 8);
+        assert!(w.is_empty());
+    }
+}

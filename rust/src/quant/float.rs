@@ -1,0 +1,124 @@
+//! Floating-point truncation — Algorithm 2, "floating-point" branch.
+//!
+//! Keeps 1 sign bit, the full 8-bit exponent and the top (b - 9) mantissa
+//! bits of the IEEE-754 single; the dropped mantissa bits are zeroed
+//! (truncation toward zero in magnitude, exactly like the jnp oracle's
+//! `u & (0xFFFFFFFF << drop)`).
+
+use anyhow::{bail, Result};
+
+/// Bit mask keeping sign+exponent+(bits-9) mantissa bits.
+pub fn mask(bits: u8) -> Result<u32> {
+    if bits >= 32 {
+        return Ok(0xFFFF_FFFF);
+    }
+    if bits < 10 {
+        bail!("float truncation needs >= 10 bits, got {bits}");
+    }
+    let mant_keep = (bits - 9) as u32;
+    let drop = 23 - mant_keep;
+    Ok(0xFFFF_FFFFu32 << drop)
+}
+
+/// Truncate one value.
+#[inline]
+pub fn truncate(v: f32, mask: u32) -> f32 {
+    f32::from_bits(v.to_bits() & mask)
+}
+
+/// Truncate a slice in place.
+pub fn truncate_inplace(w: &mut [f32], bits: u8) {
+    let m = mask(bits).expect("validated precision level");
+    for v in w.iter_mut() {
+        *v = truncate(*v, m);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn mask_values() {
+        assert_eq!(mask(32).unwrap(), 0xFFFF_FFFF);
+        // 16-bit: 1+8+7 -> drop 16 mantissa bits
+        assert_eq!(mask(16).unwrap(), 0xFFFF_0000);
+        // 12-bit: 1+8+3 -> drop 20
+        assert_eq!(mask(12).unwrap(), 0xFFF0_0000);
+        // 24-bit: 1+8+15 -> drop 8
+        assert_eq!(mask(24).unwrap(), 0xFFFF_FF00);
+        assert!(mask(9).is_err());
+    }
+
+    #[test]
+    fn magnitude_never_grows_sign_preserved() {
+        let mut rng = Rng::seed_from(3);
+        for bits in [24u8, 16, 12] {
+            let m = mask(bits).unwrap();
+            for _ in 0..2000 {
+                let v = rng.normal_f32(0.0, 100.0);
+                let t = truncate(v, m);
+                assert!(t.abs() <= v.abs());
+                assert!(t == 0.0 || t.signum() == v.signum());
+            }
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut rng = Rng::seed_from(4);
+        for bits in [24u8, 16, 12] {
+            let m = mask(bits).unwrap();
+            let bound = (2.0f32).powi(-((bits as i32) - 9));
+            for _ in 0..2000 {
+                let v = rng.normal_f32(0.0, 10.0);
+                if v.abs() < 1e-30 {
+                    continue;
+                }
+                let t = truncate(v, m);
+                let rel = ((v - t) / v).abs();
+                assert!(rel < bound, "bits={bits} v={v} t={t} rel={rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = Rng::seed_from(5);
+        for bits in [24u8, 16, 12] {
+            let mut w: Vec<f32> = (0..256).map(|_| rng.normal_f32(0.0, 7.0)).collect();
+            truncate_inplace(&mut w, bits);
+            let once = w.clone();
+            truncate_inplace(&mut w, bits);
+            assert_eq!(w, once, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn special_values() {
+        let m = mask(16).unwrap();
+        assert_eq!(truncate(0.0, m), 0.0);
+        assert_eq!(truncate(-0.0, m), -0.0);
+        assert!(truncate(f32::INFINITY, m).is_infinite());
+        assert!(truncate(f32::NAN, m).is_nan());
+        // powers of two are exactly representable at any mantissa width
+        for e in -10..10 {
+            let v = (2.0f32).powi(e);
+            assert_eq!(truncate(v, m), v);
+        }
+    }
+
+    #[test]
+    fn coarser_precision_is_coarser() {
+        // every 12-bit representable value is also 16-bit representable
+        let mut rng = Rng::seed_from(6);
+        let m12 = mask(12).unwrap();
+        let m16 = mask(16).unwrap();
+        for _ in 0..500 {
+            let v = rng.normal_f32(0.0, 5.0);
+            let t12 = truncate(v, m12);
+            assert_eq!(truncate(t12, m16), t12);
+        }
+    }
+}

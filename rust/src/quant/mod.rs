@@ -1,0 +1,255 @@
+//! Algorithm 2 of the paper, mirrored in rust.
+//!
+//! This is the SAME math as the L1 Pallas kernels
+//! (`python/compile/kernels/quantize.py`) and their jnp oracles
+//! (`kernels/ref.py`), re-implemented for the coordinator's runtime needs:
+//!
+//! * re-quantizing the broadcast global model to each client's precision
+//!   (Fig. 2c of the paper, Alg. 1 step 2) without a PJRT round-trip;
+//! * post-training quantization for the Table-I study;
+//! * the digital-orthogonal baseline, which transmits actual integer codes
+//!   and therefore needs `quantize` / `dequantize` (not just fake-quant).
+//!
+//! Bit-exactness contract: for every test vector in `artifacts/goldens.json`
+//! (emitted by aot.py from the jnp oracle) the rust output must be
+//! IDENTICAL at the bit level — both sides run plain IEEE-754 f32 ops in
+//! the same order.  `rust/tests/goldens.rs` enforces this.
+
+pub mod fixed;
+pub mod float;
+
+use anyhow::{bail, Result};
+
+/// Precision levels usable by clients (paper §IV-A2 draws schemes from
+/// [32, 24, 16, 12, 8, 6, 4]; Table I additionally probes 3 and 2).
+pub const SUPPORTED_LEVELS: [u8; 9] = [32, 24, 16, 12, 8, 6, 4, 3, 2];
+
+/// Number format backing a precision level (DESIGN.md §3 mapping).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    /// 32-bit IEEE-754: the identity.
+    Identity,
+    /// Mantissa truncation keeping 1 sign + 8 exponent + (b-9) mantissa
+    /// bits (paper: float formats supported at >= 8 bits; we use it for
+    /// 24/16/12 where the exponent still fits).
+    FloatTrunc,
+    /// Per-tensor affine fixed point (paper: preferred below 8 bits due to
+    /// float's limited sub-8-bit dynamic range).
+    FixedPoint,
+}
+
+/// A validated precision level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Precision {
+    bits: u8,
+}
+
+impl Precision {
+    pub fn new(bits: u8) -> Result<Self> {
+        if !SUPPORTED_LEVELS.contains(&bits) {
+            bail!(
+                "unsupported precision {bits}; supported: {:?}",
+                SUPPORTED_LEVELS
+            );
+        }
+        Ok(Precision { bits })
+    }
+
+    /// Panicking constructor for statically-known levels (tests, tables).
+    pub fn of(bits: u8) -> Self {
+        Precision::new(bits).expect("static precision level")
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    pub fn format(&self) -> Format {
+        match self.bits {
+            32 => Format::Identity,
+            24 | 16 | 12 => Format::FloatTrunc,
+            _ => Format::FixedPoint,
+        }
+    }
+
+    /// Quantization levels for the fixed-point branch (2^b - 1 is the max
+    /// code, matching Algorithm 2's clip range).
+    pub fn max_code(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}-bit", self.bits)
+    }
+}
+
+impl std::str::FromStr for Precision {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Precision::new(s.trim().parse::<u8>()?)
+    }
+}
+
+/// Rounding rule for the fixed-point branch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rounding {
+    /// Algorithm 2 verbatim — transmission payloads, PTQ, digital frames.
+    Floor,
+    /// Round-half-even — the training-state grid (matches the L2 QAT
+    /// quantizer bit-for-bit; see quant::fixed docs).
+    Nearest,
+}
+
+/// Fake-quantize out-of-place: returns the de-quantized decimal values —
+/// exactly what the paper's analog amplitude modulation transmits.
+pub fn fake_quant(w: &[f32], p: Precision) -> Vec<f32> {
+    let mut out = w.to_vec();
+    fake_quant_inplace(&mut out, p);
+    out
+}
+
+/// Fake-quantize in place (the hot-path form: no allocation).
+pub fn fake_quant_inplace(w: &mut [f32], p: Precision) {
+    fake_quant_inplace_mode(w, p, Rounding::Floor);
+}
+
+/// Fake-quantize with an explicit rounding rule (fixed-point branch only;
+/// float truncation has no rounding choice).
+pub fn fake_quant_inplace_mode(w: &mut [f32], p: Precision, r: Rounding) {
+    match p.format() {
+        Format::Identity => {}
+        Format::FloatTrunc => float::truncate_inplace(w, p.bits()),
+        Format::FixedPoint => {
+            fixed::fake_quant_inplace_mode(w, p.bits(), r == Rounding::Nearest)
+        }
+    }
+}
+
+/// Out-of-place form of [`fake_quant_inplace_mode`].
+pub fn fake_quant_mode(w: &[f32], p: Precision, r: Rounding) -> Vec<f32> {
+    let mut out = w.to_vec();
+    fake_quant_inplace_mode(&mut out, p, r);
+    out
+}
+
+/// Per-LAYER quantization of a flat model vector (paper §III-B: "the
+/// quantization function is systematically applied to every layer") —
+/// each named tensor in the layout gets its own scale/zero-point, exactly
+/// like the in-graph L2 quantizer.  Quantizing the whole flat vector with
+/// one scale would let the largest layer's range destroy the small ones.
+pub fn fake_quant_layout_inplace(
+    w: &mut [f32],
+    layout: &crate::tensor::ParamLayout,
+    p: Precision,
+    r: Rounding,
+) {
+    assert_eq!(w.len(), layout.total, "flat vector / layout mismatch");
+    for e in &layout.entries {
+        fake_quant_inplace_mode(&mut w[e.offset..e.offset + e.size], p, r);
+    }
+}
+
+/// Out-of-place form of [`fake_quant_layout_inplace`].
+pub fn fake_quant_layout(
+    w: &[f32],
+    layout: &crate::tensor::ParamLayout,
+    p: Precision,
+    r: Rounding,
+) -> Vec<f32> {
+    let mut out = w.to_vec();
+    fake_quant_layout_inplace(&mut out, layout, p, r);
+    out
+}
+
+/// Worst-case quantization step for a tensor at precision `p` — used for
+/// error budgeting in tests and the OTA MSE diagnostics.
+pub fn quant_step(w: &[f32], p: Precision) -> f32 {
+    match p.format() {
+        Format::Identity => 0.0,
+        Format::FloatTrunc => {
+            // relative step 2^-(mantissa kept) of the largest magnitude
+            let max = w.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            max * (2.0f32).powi(-((p.bits() as i32) - 9))
+        }
+        Format::FixedPoint => {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &v in w {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            if !lo.is_finite() || !hi.is_finite() {
+                return 0.0;
+            }
+            ((hi - lo) / p.max_code() as f32).max(1e-12)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_validation() {
+        assert!(Precision::new(32).is_ok());
+        assert!(Precision::new(4).is_ok());
+        assert!(Precision::new(5).is_err());
+        assert!(Precision::new(0).is_err());
+        assert!(Precision::new(64).is_err());
+    }
+
+    #[test]
+    fn format_mapping_matches_design() {
+        assert_eq!(Precision::of(32).format(), Format::Identity);
+        for b in [24u8, 16, 12] {
+            assert_eq!(Precision::of(b).format(), Format::FloatTrunc, "{b}");
+        }
+        for b in [8u8, 6, 4, 3, 2] {
+            assert_eq!(Precision::of(b).format(), Format::FixedPoint, "{b}");
+        }
+    }
+
+    #[test]
+    fn parse_and_display() {
+        let p: Precision = "16".parse().unwrap();
+        assert_eq!(p.bits(), 16);
+        assert_eq!(p.to_string(), "16-bit");
+        assert!("5".parse::<Precision>().is_err());
+        assert!("x".parse::<Precision>().is_err());
+    }
+
+    #[test]
+    fn identity_is_exact() {
+        let w = [1.0f32, -2.5, 3.7e-9, 1e30];
+        assert_eq!(fake_quant(&w, Precision::of(32)), w.to_vec());
+    }
+
+    #[test]
+    fn fake_quant_error_bounded_by_step() {
+        let mut rng = crate::rng::Rng::seed_from(1);
+        let w: Vec<f32> = (0..1000).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        for bits in [24u8, 16, 12, 8, 6, 4, 3, 2] {
+            let p = Precision::of(bits);
+            let q = fake_quant(&w, p);
+            let step = quant_step(&w, p);
+            let max_err = w
+                .iter()
+                .zip(q.iter())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_err <= step * 1.001 + 1e-6,
+                "bits={bits} err={max_err} step={step}"
+            );
+        }
+    }
+
+    #[test]
+    fn max_code() {
+        assert_eq!(Precision::of(8).max_code(), 255);
+        assert_eq!(Precision::of(4).max_code(), 15);
+        assert_eq!(Precision::of(2).max_code(), 3);
+    }
+}

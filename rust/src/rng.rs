@@ -1,0 +1,306 @@
+//! Deterministic, splittable PRNG for fully reproducible experiments.
+//!
+//! All stochastic behaviour in the system — dataset generation, client
+//! selection, Rayleigh fading draws, pilot noise, receiver AWGN — flows
+//! from one root seed through *named streams*, so a run is reproducible
+//! bit-for-bit regardless of thread scheduling: every client worker and
+//! every substrate derives its own independent stream instead of sharing a
+//! mutable global generator.
+//!
+//! Generator: xoshiro256++ (Blackman & Vigna), seeded via splitmix64.
+//! No external crates (the image only vendors the `xla` closure).
+
+/// xoshiro256++ PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second Box-Muller output
+    spare_normal: Option<f64>,
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed from a single u64 (expanded with splitmix64 per Vigna's
+    /// recommendation so low-entropy seeds still fill all 256 bits).
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        // xoshiro must not start at the all-zero state
+        let s = if s == [0, 0, 0, 0] { [1, 2, 3, 4] } else { s };
+        Rng { s, spare_normal: None }
+    }
+
+    /// Derive an independent named stream: hash the label into the seed
+    /// space and mix with this generator's state *without* consuming from
+    /// it.  Streams with different labels are statistically independent.
+    pub fn stream(&self, label: &str) -> Rng {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a offset basis
+        for b in label.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        let mixed = self.s[0] ^ h.rotate_left(17) ^ self.s[2].rotate_left(29);
+        Rng::seed_from(mixed ^ h)
+    }
+
+    /// Derive an independent stream indexed by an integer (e.g. client id).
+    pub fn substream(&self, index: u64) -> Rng {
+        let mixed = self.s[1]
+            ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(23)
+            ^ self.s[3];
+        Rng::seed_from(mixed)
+    }
+
+    /// Next raw u64.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform() as f32
+    }
+
+    /// Uniform integer in [0, n) via Lemire's multiply-shift (unbiased for
+    /// our n << 2^64 use-cases up to negligible 2^-64 bias).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box-Muller (caches the second draw).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // u1 in (0,1] to avoid ln(0)
+        let u1 = 1.0 - self.uniform();
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with given mean / std, as f32.
+    #[inline]
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Rayleigh-distributed magnitude with scale sigma:
+    /// if X,Y ~ N(0, sigma^2) then |X + iY| ~ Rayleigh(sigma).
+    pub fn rayleigh(&mut self, sigma: f64) -> f64 {
+        let u = 1.0 - self.uniform();
+        sigma * (-2.0 * u.ln()).sqrt()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample k distinct indices from [0, n) (partial Fisher-Yates).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot choose {k} from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Fill a slice with standard normals (f32).
+    ///
+    /// Hot-path form: consumes Box-Muller PAIRS directly (no spare-cache
+    /// branch per element), which measures ~25% faster than per-element
+    /// `normal_f32` on the OTA noise-injection path (EXPERIMENTS.md §Perf).
+    pub fn fill_normal(&mut self, out: &mut [f32], mean: f32, std: f32) {
+        let mut i = 0usize;
+        while i + 1 < out.len() {
+            let u1 = 1.0 - self.uniform();
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            let (s, c) = theta.sin_cos();
+            out[i] = mean + std * (r * c) as f32;
+            out[i + 1] = mean + std * (r * s) as f32;
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = self.normal_f32(mean, std);
+        }
+    }
+
+    /// Add N(0, std²) noise to a slice in place (single pass, no scratch
+    /// buffer — the OTA AWGN hot path).
+    pub fn add_normal(&mut self, out: &mut [f32], std: f32) {
+        let mut i = 0usize;
+        while i + 1 < out.len() {
+            let u1 = 1.0 - self.uniform();
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            let (s, c) = theta.sin_cos();
+            out[i] += std * (r * c) as f32;
+            out[i + 1] += std * (r * s) as f32;
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] += self.normal_f32(0.0, std);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::seed_from(42);
+        let mut b = Rng::seed_from(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seed_from(1);
+        let mut b = Rng::seed_from(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn streams_are_independent_and_stable() {
+        let root = Rng::seed_from(7);
+        let mut s1 = root.stream("channel");
+        let mut s2 = root.stream("data");
+        let mut s1b = root.stream("channel");
+        assert_eq!(s1.next_u64(), s1b.next_u64());
+        assert_ne!(s1.next_u64(), s2.next_u64());
+    }
+
+    #[test]
+    fn substreams_differ_per_index() {
+        let root = Rng::seed_from(7);
+        let mut c0 = root.substream(0);
+        let mut c1 = root.substream(1);
+        assert_ne!(c0.next_u64(), c1.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::seed_from(3);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = Rng::seed_from(11);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from(5);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn rayleigh_mean_matches_theory() {
+        // E[Rayleigh(sigma)] = sigma * sqrt(pi/2)
+        let mut r = Rng::seed_from(9);
+        let sigma = 0.5f64;
+        let n = 100_000;
+        let mean = (0..n).map(|_| r.rayleigh(sigma)).sum::<f64>() / n as f64;
+        let expect = sigma * (std::f64::consts::PI / 2.0).sqrt();
+        assert!((mean - expect).abs() < 0.01, "mean {mean} expect {expect}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::seed_from(13);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut r = Rng::seed_from(17);
+        for _ in 0..100 {
+            let ks = r.choose_k(15, 5);
+            assert_eq!(ks.len(), 5);
+            let mut sorted = ks.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 5, "duplicates in {ks:?}");
+            assert!(ks.iter().all(|&i| i < 15));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::seed_from(19);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,213 @@
+//! `artifacts/manifest.json` — the contract between the python compile
+//! path and the rust runtime.
+//!
+//! Written once by `python/compile/aot.py`; rust never re-derives any
+//! shape or layout, it only reads them from here.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json;
+use crate::tensor::ParamLayout;
+
+/// One model variant's artifact set.
+#[derive(Clone, Debug)]
+pub struct VariantInfo {
+    pub name: String,
+    pub param_count: usize,
+    pub layout: ParamLayout,
+    /// artifact key ("train_q8", "eval") -> filename
+    pub artifacts: BTreeMap<String, String>,
+    /// He-init flat params blob filename.
+    pub init: String,
+    /// Forward-pass MACs per sample (energy model input).
+    pub macs_per_sample: u64,
+}
+
+impl VariantInfo {
+    /// Precision levels this variant has train artifacts for.
+    pub fn train_levels(&self) -> Vec<u8> {
+        let mut levels: Vec<u8> = self
+            .artifacts
+            .keys()
+            .filter_map(|k| k.strip_prefix("train_q"))
+            .filter_map(|b| b.parse().ok())
+            .collect();
+        levels.sort_by(|a, b| b.cmp(a));
+        levels
+    }
+}
+
+/// OTA artifact description.
+#[derive(Clone, Debug)]
+pub struct OtaInfo {
+    pub artifact: String,
+    pub clients: usize,
+    pub chunk: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub image: Vec<usize>,
+    pub classes: usize,
+    pub padded_classes: usize,
+    pub flagship: String,
+    pub train_levels: Vec<u8>,
+    pub variants: BTreeMap<String, VariantInfo>,
+    pub ota: OtaInfo,
+    pub goldens: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let v = json::parse_file(&dir.join("manifest.json"))?;
+        let version = v.req("version")?.as_usize()?;
+        if version != 1 {
+            bail!("manifest version {version} unsupported (expected 1)");
+        }
+        let mut variants = BTreeMap::new();
+        for (name, info) in v.req("variants")?.as_object()? {
+            let layout = ParamLayout::from_manifest(info.req("params")?)
+                .with_context(|| format!("variant {name} params"))?;
+            let param_count = info.req("param_count")?.as_usize()?;
+            if layout.total != param_count {
+                bail!(
+                    "variant {name}: layout total {} != param_count {param_count}",
+                    layout.total
+                );
+            }
+            let mut artifacts = BTreeMap::new();
+            for (k, f) in info.req("artifacts")?.as_object()? {
+                artifacts.insert(k.clone(), f.as_str()?.to_string());
+            }
+            variants.insert(
+                name.clone(),
+                VariantInfo {
+                    name: name.clone(),
+                    param_count,
+                    layout,
+                    artifacts,
+                    init: info.req("init")?.as_str()?.to_string(),
+                    macs_per_sample: info.req("macs_per_sample")?.as_usize()? as u64,
+                },
+            );
+        }
+        let ota_v = v.req("ota")?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            train_batch: v.req("train_batch")?.as_usize()?,
+            eval_batch: v.req("eval_batch")?.as_usize()?,
+            image: v.req("image")?.as_usize_vec()?,
+            classes: v.req("classes")?.as_usize()?,
+            padded_classes: v.req("padded_classes")?.as_usize()?,
+            flagship: v.req("flagship")?.as_str()?.to_string(),
+            train_levels: v
+                .req("train_levels")?
+                .as_usize_vec()?
+                .into_iter()
+                .map(|b| b as u8)
+                .collect(),
+            variants,
+            ota: OtaInfo {
+                artifact: ota_v.req("artifact")?.as_str()?.to_string(),
+                clients: ota_v.req("clients")?.as_usize()?,
+                chunk: ota_v.req("chunk")?.as_usize()?,
+            },
+            goldens: v.req("goldens")?.as_str()?.to_string(),
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantInfo> {
+        self.variants
+            .get(name)
+            .with_context(|| format!("variant '{name}' not in manifest"))
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, filename: &str) -> PathBuf {
+        self.dir.join(filename)
+    }
+
+    /// Image elements per sample.
+    pub fn sample_len(&self) -> usize {
+        self.image.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join("mpota_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "version": 1, "train_batch": 32, "eval_batch": 64,
+              "image": [32, 32, 3], "classes": 43, "padded_classes": 64,
+              "flagship": "base", "train_levels": [32, 8],
+              "ota": {"artifact": "ota.hlo.txt", "clients": 15, "chunk": 1024},
+              "goldens": "goldens.json",
+              "variants": {
+                "base": {
+                  "param_count": 10,
+                  "params": [["w", [2, 3]], ["b", [4]]],
+                  "artifacts": {"train_q32": "t32.hlo", "train_q8": "t8.hlo",
+                                "eval": "e.hlo"},
+                  "init": "base_init.f32.bin",
+                  "macs_per_sample": 1000
+                }
+              }
+            }"#,
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn loads_and_validates() {
+        let m = Manifest::load(&fixture_dir()).unwrap();
+        assert_eq!(m.train_batch, 32);
+        assert_eq!(m.sample_len(), 3072);
+        let v = m.variant("base").unwrap();
+        assert_eq!(v.param_count, 10);
+        assert_eq!(v.train_levels(), vec![32, 8]);
+        assert_eq!(v.layout.entry("b").unwrap().offset, 6);
+        assert!(m.variant("nope").is_err());
+        assert!(m.path_of("x.hlo").ends_with("mpota_manifest_test/x.hlo"));
+    }
+
+    #[test]
+    fn rejects_param_count_mismatch() {
+        let dir = std::env::temp_dir().join("mpota_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "train_batch": 1, "eval_batch": 1,
+                "image": [2], "classes": 1, "padded_classes": 1,
+                "flagship": "x", "train_levels": [],
+                "ota": {"artifact": "o", "clients": 1, "chunk": 1},
+                "goldens": "g",
+                "variants": {"x": {"param_count": 99,
+                  "params": [["w", [2]]], "artifacts": {}, "init": "i",
+                  "macs_per_sample": 1}}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let dir = std::env::temp_dir().join("mpota_manifest_ver");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"version": 2}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,326 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! PJRT client (the `xla` crate) — the only place rust touches XLA.
+//!
+//! Design notes:
+//! * HLO **text** is the interchange format (jax ≥ 0.5 emits 64-bit
+//!   instruction ids in serialized protos which xla_extension 0.5.1
+//!   rejects; the text parser reassigns ids).
+//! * Executables are compiled once per artifact and cached; compilation is
+//!   the expensive step (~1 s per train graph), execution is the hot path.
+//! * `PjRtClient` is `Rc`-based (not `Send`), so all PJRT work stays on
+//!   the coordinator thread — on this 1-core testbed that is also the
+//!   throughput-optimal layout.
+
+pub mod manifest;
+
+pub use manifest::{Manifest, OtaInfo, VariantInfo};
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::Precision;
+use crate::tensor;
+
+/// Result of one train step.
+#[derive(Clone, Debug)]
+pub struct TrainOutput {
+    pub new_theta: Vec<f32>,
+    pub loss: f32,
+    /// correct predictions within the minibatch
+    pub correct: f32,
+}
+
+/// Aggregated evaluation over a full dataset.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub samples: usize,
+}
+
+/// Cumulative dispatch counters (perf accounting — EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Counters {
+    pub compiles: u64,
+    pub compile_secs: f64,
+    pub train_steps: u64,
+    pub train_secs: f64,
+    pub eval_batches: u64,
+    pub eval_secs: f64,
+}
+
+/// The PJRT-backed executor for all AOT artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    counters: RefCell<Counters>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and parse the artifact manifest.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)
+            .with_context(|| format!("loading manifest from {}", artifacts_dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: RefCell::new(BTreeMap::new()),
+            counters: RefCell::new(Counters::default()),
+        })
+    }
+
+    pub fn counters(&self) -> Counters {
+        *self.counters.borrow()
+    }
+
+    /// Compile (or fetch cached) the executable for an artifact filename.
+    pub fn executable(&self, filename: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.borrow().get(filename) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.path_of(filename);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        {
+            let mut c = self.counters.borrow_mut();
+            c.compiles += 1;
+            c.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.exes.borrow_mut().insert(filename.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact a run will need (so the first round
+    /// is not polluted by compile latency).
+    pub fn warmup(&self, variant: &str, levels: &[Precision]) -> Result<()> {
+        let v = self.manifest.variant(variant)?;
+        for p in levels {
+            let key = format!("train_q{}", p.bits());
+            let f = v
+                .artifacts
+                .get(&key)
+                .with_context(|| format!("variant {variant} lacks {key}"))?;
+            self.executable(f)?;
+        }
+        let eval = v.artifacts.get("eval").context("missing eval artifact")?;
+        self.executable(eval)?;
+        Ok(())
+    }
+
+    /// Initial (He-init) flat params shipped with the artifacts.
+    pub fn init_params(&self, variant: &str) -> Result<Vec<f32>> {
+        let v = self.manifest.variant(variant)?;
+        let params = tensor::read_f32_file(&self.manifest.path_of(&v.init))?;
+        if params.len() != v.param_count {
+            bail!(
+                "init blob has {} params, manifest says {}",
+                params.len(),
+                v.param_count
+            );
+        }
+        Ok(params)
+    }
+
+    // ------------------------------------------------------------ training
+
+    /// One SGD minibatch step at `precision` on `variant`.
+    ///
+    /// `images`: train_batch × H×W×C floats; `labels`: train_batch i32.
+    pub fn train_step(
+        &self,
+        variant: &str,
+        precision: Precision,
+        theta: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<TrainOutput> {
+        let v = self.manifest.variant(variant)?;
+        let b = self.manifest.train_batch;
+        let (h, w, c) = (
+            self.manifest.image[0] as i64,
+            self.manifest.image[1] as i64,
+            self.manifest.image[2] as i64,
+        );
+        if theta.len() != v.param_count {
+            bail!("theta len {} != param_count {}", theta.len(), v.param_count);
+        }
+        if images.len() != b * self.manifest.sample_len() || labels.len() != b {
+            bail!("batch shape mismatch");
+        }
+        let key = format!("train_q{}", precision.bits());
+        let file = v
+            .artifacts
+            .get(&key)
+            .with_context(|| format!("no train artifact at {precision} for {variant}"))?;
+        let exe = self.executable(file)?;
+
+        let t0 = Instant::now();
+        let theta_l = xla::Literal::vec1(theta);
+        let images_l = xla::Literal::vec1(images).reshape(&[b as i64, h, w, c])?;
+        let labels_l = xla::Literal::vec1(labels);
+        let lr_l = xla::Literal::vec1(&[lr]);
+        let result = exe.execute::<xla::Literal>(&[theta_l, images_l, labels_l, lr_l])?
+            [0][0]
+            .to_literal_sync()?;
+        let (new_theta_l, metrics_l) = result.to_tuple2()?;
+        let new_theta = new_theta_l.to_vec::<f32>()?;
+        let metrics = metrics_l.to_vec::<f32>()?;
+        {
+            let mut cnt = self.counters.borrow_mut();
+            cnt.train_steps += 1;
+            cnt.train_secs += t0.elapsed().as_secs_f64();
+        }
+        Ok(TrainOutput { new_theta, loss: metrics[0], correct: metrics[1] })
+    }
+
+    // ---------------------------------------------------------- evaluation
+
+    /// Evaluate `theta` over a labelled set, handling ragged final batches
+    /// with the artifact's per-example weight mask.
+    pub fn evaluate(
+        &self,
+        variant: &str,
+        theta: &[f32],
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<EvalResult> {
+        let v = self.manifest.variant(variant)?;
+        if theta.len() != v.param_count {
+            bail!("theta len {} != param_count {}", theta.len(), v.param_count);
+        }
+        let sample_len = self.manifest.sample_len();
+        let n = labels.len();
+        if images.len() != n * sample_len {
+            bail!("images/labels length mismatch");
+        }
+        let eb = self.manifest.eval_batch;
+        let file = v.artifacts.get("eval").context("missing eval artifact")?;
+        let exe = self.executable(file)?;
+        let (h, w, c) = (
+            self.manifest.image[0] as i64,
+            self.manifest.image[1] as i64,
+            self.manifest.image[2] as i64,
+        );
+
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut batch_images = vec![0.0f32; eb * sample_len];
+        let mut batch_labels = vec![0i32; eb];
+        let mut weights = vec![0.0f32; eb];
+        let mut off = 0usize;
+        while off < n {
+            let take = (n - off).min(eb);
+            batch_images[..take * sample_len]
+                .copy_from_slice(&images[off * sample_len..(off + take) * sample_len]);
+            batch_labels[..take].copy_from_slice(&labels[off..off + take]);
+            for i in 0..eb {
+                weights[i] = if i < take { 1.0 } else { 0.0 };
+                if i >= take {
+                    batch_labels[i] = 0;
+                }
+            }
+            if take < eb {
+                batch_images[take * sample_len..].fill(0.0);
+            }
+            let t0 = Instant::now();
+            let theta_l = xla::Literal::vec1(theta);
+            let images_l =
+                xla::Literal::vec1(&batch_images).reshape(&[eb as i64, h, w, c])?;
+            let labels_l = xla::Literal::vec1(&batch_labels);
+            let weights_l = xla::Literal::vec1(&weights);
+            let result = exe
+                .execute::<xla::Literal>(&[theta_l, images_l, labels_l, weights_l])?
+                [0][0]
+                .to_literal_sync()?;
+            let metrics = result.to_tuple1()?.to_vec::<f32>()?;
+            loss_sum += metrics[0] as f64;
+            correct += metrics[1] as f64;
+            {
+                let mut cnt = self.counters.borrow_mut();
+                cnt.eval_batches += 1;
+                cnt.eval_secs += t0.elapsed().as_secs_f64();
+            }
+            off += take;
+        }
+        Ok(EvalResult {
+            loss: loss_sum / n as f64,
+            accuracy: correct / n as f64,
+            samples: n,
+        })
+    }
+
+    /// Per-layer fake-quantization of a variant's flat model (paper
+    /// §III-B; used for re-quantization of the broadcast/global model and
+    /// Table-I PTQ).
+    pub fn quantize_model(
+        &self,
+        variant: &str,
+        theta: &[f32],
+        p: crate::quant::Precision,
+        r: crate::quant::Rounding,
+    ) -> Result<Vec<f32>> {
+        let v = self.manifest.variant(variant)?;
+        if theta.len() != v.param_count {
+            bail!("theta len {} != param_count {}", theta.len(), v.param_count);
+        }
+        Ok(crate::quant::fake_quant_layout(theta, &v.layout, p, r))
+    }
+
+    // ---------------------------------------------------------------- OTA
+
+    /// Execute the L1 OTA-superposition artifact on one chunk.
+    /// `x` is K×chunk payload rows; returns (re, im) of the superposition.
+    /// Used to cross-validate the rust `ota::analog` hot path against the
+    /// Pallas kernel lowered into HLO.
+    pub fn ota_chunk(
+        &self,
+        x: &[f32],
+        gains_re: &[f32],
+        gains_im: &[f32],
+        noise_re: &[f32],
+        noise_im: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let k = self.manifest.ota.clients;
+        let chunk = self.manifest.ota.chunk;
+        if x.len() != k * chunk
+            || gains_re.len() != k
+            || gains_im.len() != k
+            || noise_re.len() != chunk
+            || noise_im.len() != chunk
+        {
+            bail!("ota chunk shape mismatch");
+        }
+        let exe = self.executable(&self.manifest.ota.artifact.clone())?;
+        let x_l = xla::Literal::vec1(x).reshape(&[k as i64, chunk as i64])?;
+        let result = exe.execute::<xla::Literal>(&[
+            x_l,
+            xla::Literal::vec1(gains_re),
+            xla::Literal::vec1(gains_im),
+            xla::Literal::vec1(noise_re),
+            xla::Literal::vec1(noise_im),
+        ])?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != 2 {
+            bail!("ota artifact returned {} outputs, expected 2", parts.len());
+        }
+        Ok((parts[0].to_vec::<f32>()?, parts[1].to_vec::<f32>()?))
+    }
+}

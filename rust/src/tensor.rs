@@ -1,0 +1,211 @@
+//! Flat-parameter bookkeeping and the small vector-math kernel set used on
+//! the L3 hot path.
+//!
+//! Model state lives as ONE flat `Vec<f32>` everywhere in the coordinator —
+//! that is the representation that gets amplitude-modulated for OTA
+//! aggregation — and the layout (which slice is which layer) comes verbatim
+//! from `artifacts/manifest.json`, written by the same python that lowered
+//! the graphs.  Rust never re-derives shapes.
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Value;
+
+/// One named parameter tensor inside the flat vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Ordered layout of a variant's flat parameter vector.
+#[derive(Clone, Debug, Default)]
+pub struct ParamLayout {
+    pub entries: Vec<ParamEntry>,
+    pub total: usize,
+}
+
+impl ParamLayout {
+    /// Build from the manifest's `"params": [[name, [shape...]], ...]`.
+    pub fn from_manifest(params: &Value) -> Result<Self> {
+        let mut entries = Vec::new();
+        let mut offset = 0usize;
+        for pair in params.as_array()? {
+            let pair = pair.as_array()?;
+            if pair.len() != 2 {
+                bail!("param spec entry must be [name, shape]");
+            }
+            let name = pair[0].as_str()?.to_string();
+            let shape = pair[1].as_usize_vec()?;
+            let size = shape.iter().product::<usize>().max(1);
+            entries.push(ParamEntry { name, shape, offset, size });
+            offset += size;
+        }
+        Ok(ParamLayout { entries, total: offset })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ParamEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Slice a named tensor out of a flat vector.
+    pub fn view<'a>(&self, flat: &'a [f32], name: &str) -> Result<&'a [f32]> {
+        let e = self
+            .entry(name)
+            .with_context(|| format!("unknown param '{name}'"))?;
+        Ok(&flat[e.offset..e.offset + e.size])
+    }
+}
+
+// ---------------------------------------------------------------- file I/O
+
+/// Read a little-endian f32 blob (e.g. `<variant>_init.f32.bin`).
+pub fn read_f32_file(path: &std::path::Path) -> Result<Vec<f32>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{} length {} not a multiple of 4", path.display(), bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a little-endian f32 blob (checkpoints, pretrained params).
+pub fn write_f32_file(path: &std::path::Path, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+}
+
+// ---------------------------------------------------------- vector kernels
+//
+// The aggregation hot loop works over ~1e5..1e8-element f32 slices.  These
+// are written as straightforward indexable loops that LLVM auto-vectorizes;
+// `hotpaths` benches track their throughput (EXPERIMENTS.md §Perf).
+
+/// y += alpha * x
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * *xi;
+    }
+}
+
+/// y = x (copy)
+pub fn assign(y: &mut [f32], x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    y.copy_from_slice(x);
+}
+
+/// x *= alpha
+pub fn scale(x: &mut [f32], alpha: f32) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// sum of squares
+pub fn sq_norm(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+/// mean squared error between two slices
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// max |a - b|
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    fn layout_fixture() -> ParamLayout {
+        let v = json::parse(r#"[["w", [2, 3]], ["b", [3]], ["s", []]]"#).unwrap();
+        ParamLayout::from_manifest(&v).unwrap()
+    }
+
+    #[test]
+    fn layout_offsets_and_total() {
+        let l = layout_fixture();
+        assert_eq!(l.total, 6 + 3 + 1);
+        assert_eq!(l.entry("w").unwrap().offset, 0);
+        assert_eq!(l.entry("b").unwrap().offset, 6);
+        assert_eq!(l.entry("s").unwrap().offset, 9);
+        assert_eq!(l.entry("s").unwrap().size, 1);
+        assert!(l.entry("nope").is_none());
+    }
+
+    #[test]
+    fn layout_view_slices() {
+        let l = layout_fixture();
+        let flat: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        assert_eq!(l.view(&flat, "b").unwrap(), &[6.0, 7.0, 8.0]);
+        assert!(l.view(&flat, "zzz").is_err());
+    }
+
+    #[test]
+    fn layout_rejects_malformed() {
+        let v = json::parse(r#"[["w"]]"#).unwrap();
+        assert!(ParamLayout::from_manifest(&v).is_err());
+    }
+
+    #[test]
+    fn f32_file_roundtrip() {
+        let dir = std::env::temp_dir().join("mpota_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.f32.bin");
+        let data = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE, 1e30];
+        write_f32_file(&path, &data).unwrap();
+        let back = read_f32_file(&path).unwrap();
+        assert_eq!(back, data);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn read_rejects_bad_length() {
+        let dir = std::env::temp_dir().join("mpota_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, [0u8; 5]).unwrap();
+        assert!(read_f32_file(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn vector_kernels() {
+        let mut y = vec![1.0f32, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 4.0, 5.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![1.5, 2.0, 2.5]);
+        assert!((sq_norm(&y) - (1.5 * 1.5 + 4.0 + 6.25) as f64).abs() < 1e-9);
+        assert_eq!(max_abs_diff(&[1.0, 5.0], &[2.0, 3.0]), 2.0);
+        assert!((mse(&[1.0, 3.0], &[2.0, 5.0]) - 2.5).abs() < 1e-12);
+    }
+}

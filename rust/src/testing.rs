@@ -1,0 +1,174 @@
+//! Tiny property-testing harness (the vendored dependency set has no
+//! proptest/quickcheck; this supplies the subset we need).
+//!
+//! A property runs against `CASES` randomly-generated inputs from a
+//! deterministic seed.  On failure the harness performs greedy shrinking
+//! on `Vec<f32>` inputs (halving length, zeroing elements) and reports the
+//! smallest failing case — enough to make coordinator-invariant tests
+//! (routing, batching, aggregation state) debuggable.
+
+use crate::rng::Rng;
+
+/// Default number of cases per property.
+pub const CASES: usize = 64;
+
+/// Run `prop` on `cases` random inputs produced by `gen`.
+/// Panics with the (shrunk-by-regeneration) failing case index on failure.
+pub fn check<T: std::fmt::Debug, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let root = Rng::seed_from(0x5EED_0000 ^ fnv(name));
+    for case in 0..cases {
+        let mut rng = root.substream(case as u64);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!("property '{name}' failed on case {case}: {input:?}");
+        }
+    }
+}
+
+/// Random f32 vector generator with varied length/scale per case.
+pub fn gen_vec(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+    let len = 1 + rng.below(max_len);
+    let scale = 10f32.powf(rng.uniform_in(-3.0, 3.0));
+    let mut v = vec![0.0f32; len];
+    rng.fill_normal(&mut v, 0.0, scale);
+    // occasionally inject degenerate structure
+    match rng.below(8) {
+        0 => v.iter_mut().for_each(|x| *x = 0.0),
+        1 => {
+            let c = v[0];
+            v.iter_mut().for_each(|x| *x = c);
+        }
+        2 => v.iter_mut().for_each(|x| *x = x.abs()),
+        _ => {}
+    }
+    v
+}
+
+/// Shrinking check specialised to Vec<f32> inputs: on failure, repeatedly
+/// tries halving the vector and zeroing prefixes to find a smaller witness.
+pub fn check_vec<P>(name: &str, cases: usize, max_len: usize, mut prop: P)
+where
+    P: FnMut(&[f32]) -> bool,
+{
+    let root = Rng::seed_from(0x5EED_0001 ^ fnv(name));
+    for case in 0..cases {
+        let mut rng = root.substream(case as u64);
+        let input = gen_vec(&mut rng, max_len);
+        if !prop(&input) {
+            let witness = shrink_vec(&input, &mut prop);
+            panic!(
+                "property '{name}' failed on case {case}; shrunk witness \
+                 (len {}): {:?}",
+                witness.len(),
+                &witness[..witness.len().min(16)]
+            );
+        }
+    }
+}
+
+fn shrink_vec<P>(failing: &[f32], prop: &mut P) -> Vec<f32>
+where
+    P: FnMut(&[f32]) -> bool,
+{
+    let mut cur = failing.to_vec();
+    loop {
+        let mut improved = false;
+        // try halves (must be strictly smaller, or we would loop forever)
+        let mid = cur.len() / 2;
+        for range in [0..mid, mid..cur.len()] {
+            let half = cur[range].to_vec();
+            if !half.is_empty() && half.len() < cur.len() && !prop(&half) {
+                cur = half;
+                improved = true;
+                break;
+            }
+        }
+        if improved {
+            continue;
+        }
+        // try zeroing single elements
+        for i in 0..cur.len() {
+            if cur[i] != 0.0 {
+                let mut cand = cur.clone();
+                cand[i] = 0.0;
+                if !prop(&cand) {
+                    cur = cand;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+        if !improved {
+            return cur;
+        }
+    }
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Relative-or-absolute closeness for float comparisons in tests.
+pub fn close(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    let diff = (a - b).abs();
+    diff <= abs || diff <= rel * a.abs().max(b.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 32, |r| (r.uniform(), r.uniform()), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics() {
+        check("always-false", 4, |r| r.next_u64(), |_| false);
+    }
+
+    #[test]
+    fn vec_generator_hits_degenerate_cases() {
+        let mut zeros = false;
+        let mut constant = false;
+        let root = Rng::seed_from(1);
+        for i in 0..200 {
+            let mut rng = root.substream(i);
+            let v = gen_vec(&mut rng, 64);
+            if v.iter().all(|&x| x == 0.0) {
+                zeros = true;
+            } else if v.len() > 1 && v.windows(2).all(|w| w[0] == w[1]) {
+                constant = true;
+            }
+        }
+        assert!(zeros && constant, "zeros={zeros} constant={constant}");
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk witness")]
+    fn shrinker_reports_small_witness() {
+        // property "vector is empty" always fails (gen emits len >= 1) and
+        // shrinks to a length-1 witness
+        check_vec("bounded", 4, 256, |v| v.is_empty());
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, 0.0));
+        assert!(close(0.0, 1e-12, 0.0, 1e-9));
+        assert!(!close(1.0, 2.0, 1e-3, 1e-3));
+    }
+}

@@ -1,0 +1,47 @@
+//! Bit-exact parity: rust Algorithm-2 vs the jnp oracle's golden vectors.
+//!
+//! `artifacts/goldens.json` is emitted by `python/compile/aot.py` from
+//! `kernels/ref.py`.  Requires `make artifacts` to have run; the test is
+//! skipped (with a loud message) if the artifacts are missing so that
+//! `cargo test` works in a fresh checkout.
+
+use mpota::json;
+use mpota::quant::{self, Precision};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        std::env::var("MPOTA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    )
+}
+
+#[test]
+fn quantization_matches_jnp_bit_for_bit() {
+    let path = artifacts_dir().join("goldens.json");
+    if !path.exists() {
+        eprintln!("SKIP: {} missing (run `make artifacts`)", path.display());
+        return;
+    }
+    let doc = json::parse_file(&path).unwrap();
+    let cases = doc.req("cases").unwrap().as_array().unwrap();
+    assert!(cases.len() >= 40, "suspiciously few golden cases");
+    for case in cases {
+        let name = case.req("name").unwrap().as_str().unwrap();
+        let bits = case.req("bits").unwrap().as_usize().unwrap() as u8;
+        let rounding = match case.get("rounding").map(|v| v.as_str()) {
+            Some(Ok("nearest")) => quant::Rounding::Nearest,
+            _ => quant::Rounding::Floor,
+        };
+        let input = case.req("input").unwrap().as_f32_vec().unwrap();
+        let expect = case.req("expect").unwrap().as_f32_vec().unwrap();
+        let got =
+            quant::fake_quant_mode(&input, Precision::new(bits).unwrap(), rounding);
+        assert_eq!(got.len(), expect.len(), "{name}");
+        for (i, (g, e)) in got.iter().zip(expect.iter()).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                e.to_bits(),
+                "golden '{name}' diverges at [{i}]: rust {g} vs jnp {e}"
+            );
+        }
+    }
+}

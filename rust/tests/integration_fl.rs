@@ -1,0 +1,160 @@
+//! End-to-end coordinator integration: Algorithm 1 over all aggregation
+//! paths, determinism, energy accounting, and requantization reporting.
+//!
+//! Kept small (2 rounds, few hundred samples) so the suite stays fast on
+//! one core; the full-scale runs live in examples/ and benches/.
+
+use mpota::config::{Aggregation, RunConfig};
+use mpota::coordinator::Coordinator;
+use mpota::fl::Scheme;
+
+fn artifacts_present() -> bool {
+    let dir = std::path::PathBuf::from(
+        std::env::var("MPOTA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let ok = dir.join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+    }
+    ok
+}
+
+fn tiny_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.rounds = 2;
+    cfg.train_samples = 480; // 15 clients x 32 = one batch each
+    cfg.test_samples = 96;
+    cfg.local_steps = 1;
+    cfg.scheme = Scheme::parse("16,8,4").unwrap();
+    cfg.eval_every = 1;
+    cfg
+}
+
+#[test]
+fn ota_run_completes_with_report() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut coord = Coordinator::new(tiny_cfg()).unwrap();
+    let report = coord.run().unwrap();
+    assert_eq!(report.log.rounds.len(), 2);
+    for rec in &report.log.rounds {
+        assert!(rec.participants > 0, "all clients silenced at default SNR");
+        assert!(rec.train_loss.is_finite());
+        assert!(rec.server_accuracy >= 0.0 && rec.server_accuracy <= 1.0);
+    }
+    // requant evals exist for every distinct level of the scheme
+    assert_eq!(report.requant.len(), 3);
+    // energy: mixed scheme must cost less than all-32 counterfactual and
+    // more than all-4
+    assert!(report.energy.actual_joules < report.energy.all32_joules);
+    assert!(report.energy.actual_joules > report.energy.all4_joules);
+    assert!(report.energy.saving_vs_32() > 0.0);
+}
+
+#[test]
+fn all_aggregation_paths_run() {
+    if !artifacts_present() {
+        return;
+    }
+    for agg in [Aggregation::OtaAnalog, Aggregation::Digital, Aggregation::Ideal] {
+        let mut cfg = tiny_cfg();
+        cfg.rounds = 1;
+        cfg.aggregation = agg;
+        let mut coord = Coordinator::new(cfg).unwrap();
+        let report = coord.run().unwrap();
+        assert_eq!(report.log.rounds.len(), 1, "{agg}");
+        assert!(report.final_loss.is_finite(), "{agg}");
+    }
+}
+
+#[test]
+fn runs_are_deterministic_per_seed() {
+    if !artifacts_present() {
+        return;
+    }
+    let run = |seed: u64| {
+        let mut cfg = tiny_cfg();
+        cfg.rounds = 1;
+        cfg.seed = seed;
+        let mut coord = Coordinator::new(cfg).unwrap();
+        let report = coord.run().unwrap();
+        (
+            report.final_accuracy,
+            report.final_loss,
+            report.log.rounds[0].train_loss,
+            report.log.rounds[0].ota_mse,
+        )
+    };
+    let a = run(123);
+    let b = run(123);
+    assert_eq!(a, b, "same seed must reproduce bit-identically");
+    let c = run(124);
+    assert_ne!(a, c, "different seed should differ");
+}
+
+#[test]
+fn ideal_and_high_snr_ota_agree_closely() {
+    if !artifacts_present() {
+        return;
+    }
+    let run = |agg: Aggregation, snr: f32, perfect: bool| {
+        let mut cfg = tiny_cfg();
+        cfg.rounds = 1;
+        cfg.aggregation = agg;
+        cfg.channel.snr_db = snr;
+        cfg.channel.perfect_csi = perfect;
+        let mut coord = Coordinator::new(cfg).unwrap();
+        coord.run().unwrap().final_loss
+    };
+    let ideal = run(Aggregation::Ideal, 20.0, false);
+    let ota_clean = run(Aggregation::OtaAnalog, 120.0, true);
+    assert!(
+        (ideal - ota_clean).abs() < 1e-3,
+        "ideal {ideal} vs clean-channel OTA {ota_clean}"
+    );
+}
+
+#[test]
+fn low_snr_degrades_aggregation() {
+    if !artifacts_present() {
+        return;
+    }
+    let mse_at = |snr: f32| {
+        let mut cfg = tiny_cfg();
+        cfg.rounds = 1;
+        cfg.channel.snr_db = snr;
+        cfg.channel.perfect_csi = true;
+        let mut coord = Coordinator::new(cfg).unwrap();
+        let report = coord.run().unwrap();
+        report.log.rounds[0].ota_mse
+    };
+    let low = mse_at(5.0);
+    let high = mse_at(30.0);
+    assert!(
+        low > high * 10.0,
+        "OTA MSE should fall sharply with SNR: 5dB {low} vs 30dB {high}"
+    );
+}
+
+#[test]
+fn homogeneous_4bit_requant_matches_global() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut cfg = tiny_cfg();
+    cfg.rounds = 1;
+    cfg.scheme = Scheme::parse("4,4,4").unwrap();
+    let mut coord = Coordinator::new(cfg).unwrap();
+    let report = coord.run().unwrap();
+    assert_eq!(report.requant.len(), 1);
+    assert_eq!(report.requant[0].precision.bits(), 4);
+}
+
+#[test]
+fn config_validation_rejects_undivisible_scheme() {
+    let mut cfg = tiny_cfg();
+    cfg.clients = 14; // not divisible by 3 groups
+    cfg.clients_per_round = 14;
+    assert!(cfg.validate().is_err());
+}

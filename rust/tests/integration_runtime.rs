@@ -1,0 +1,201 @@
+//! Integration tests over the PJRT runtime + artifacts: the L1/L2 graphs
+//! executed from rust must behave as the model contract promises.
+//!
+//! All tests skip gracefully when `artifacts/` has not been built.
+
+use mpota::data::{Dataset, SAMPLE_LEN};
+use mpota::ota;
+use mpota::quant::Precision;
+use mpota::rng::Rng;
+use mpota::runtime::Runtime;
+use mpota::channel::{ChannelConfig, RoundChannel};
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::PathBuf::from(
+        std::env::var("MPOTA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime load"))
+}
+
+fn batch(rt: &Runtime, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Rng::seed_from(seed);
+    let b = rt.manifest.train_batch;
+    let data = Dataset::generate(b, &mut rng);
+    (data.images.clone(), data.labels.clone())
+}
+
+#[test]
+fn train_step_contract() {
+    let Some(rt) = runtime() else { return };
+    let theta = rt.init_params("base").unwrap();
+    let (images, labels) = batch(&rt, 1);
+    let out = rt
+        .train_step("base", Precision::of(8), &theta, &images, &labels, 0.05)
+        .unwrap();
+    assert_eq!(out.new_theta.len(), theta.len());
+    // first step from He init: uniform softmax over 43 classes
+    assert!((out.loss - (43.0f32).ln()).abs() < 0.05, "loss {}", out.loss);
+    assert!(out.correct >= 0.0 && out.correct <= rt.manifest.train_batch as f32);
+    // params actually moved
+    assert!(mpota::tensor::max_abs_diff(&out.new_theta, &theta) > 0.0);
+}
+
+#[test]
+fn train_overfits_single_batch_f32() {
+    let Some(rt) = runtime() else { return };
+    let mut theta = rt.init_params("base").unwrap();
+    let (images, labels) = batch(&rt, 2);
+    let mut first = None;
+    let mut last = 0.0f32;
+    for _ in 0..10 {
+        let out = rt
+            .train_step("base", Precision::of(32), &theta, &images, &labels, 0.2)
+            .unwrap();
+        theta = out.new_theta;
+        first.get_or_insert(out.loss);
+        last = out.loss;
+    }
+    assert!(
+        last < first.unwrap() - 0.5,
+        "no learning: first {} last {last}",
+        first.unwrap()
+    );
+}
+
+#[test]
+fn low_precision_params_stay_coarse() {
+    let Some(rt) = runtime() else { return };
+    let theta = rt.init_params("base").unwrap();
+    let (images, labels) = batch(&rt, 3);
+    let out = rt
+        .train_step("base", Precision::of(4), &theta, &images, &labels, 0.05)
+        .unwrap();
+    // per-tensor 4-bit quantization: whole-vector distinct count is bounded
+    // by 16 levels per parameter tensor; the flat concat of 14 tensors can
+    // hold at most 14 * 16 distinct values
+    let mut distinct: Vec<f32> = out.new_theta.clone();
+    distinct.sort_by(f32::total_cmp);
+    distinct.dedup();
+    assert!(
+        distinct.len() <= 14 * 16,
+        "4-bit params have {} distinct values",
+        distinct.len()
+    );
+}
+
+#[test]
+fn evaluate_handles_ragged_batches() {
+    let Some(rt) = runtime() else { return };
+    let theta = rt.init_params("base").unwrap();
+    let mut rng = Rng::seed_from(4);
+    // 70 samples: one full eval batch of 64 + ragged 6
+    let data = Dataset::generate(70, &mut rng);
+    let r = rt
+        .evaluate("base", &theta, &data.images, &data.labels)
+        .unwrap();
+    assert_eq!(r.samples, 70);
+    // zero-init classifier head => exactly uniform predictions
+    assert!((r.loss - (43.0f64).ln()).abs() < 0.05, "loss {}", r.loss);
+    assert!(r.accuracy >= 0.0 && r.accuracy <= 1.0);
+
+    // consistency: evaluating twice gives identical numbers
+    let r2 = rt
+        .evaluate("base", &theta, &data.images, &data.labels)
+        .unwrap();
+    assert_eq!(r.loss, r2.loss);
+    assert_eq!(r.accuracy, r2.accuracy);
+}
+
+#[test]
+fn eval_batch_boundary_exact_multiple() {
+    let Some(rt) = runtime() else { return };
+    let theta = rt.init_params("base").unwrap();
+    let mut rng = Rng::seed_from(5);
+    let eb = rt.manifest.eval_batch;
+    let data = Dataset::generate(eb * 2, &mut rng);
+    let r = rt
+        .evaluate("base", &theta, &data.images, &data.labels)
+        .unwrap();
+    assert_eq!(r.samples, eb * 2);
+}
+
+/// The L1 Pallas OTA kernel (through PJRT) and the rust hot path must
+/// compute the same superposition.
+#[test]
+fn ota_artifact_cross_validates_rust_hot_path() {
+    let Some(rt) = runtime() else { return };
+    let k = rt.manifest.ota.clients;
+    let chunk = rt.manifest.ota.chunk;
+    let mut rng = Rng::seed_from(6);
+
+    // payloads + a realistic imperfect-CSI channel round
+    let payloads: Vec<Vec<f32>> = (0..k)
+        .map(|_| {
+            let mut v = vec![0.0f32; chunk];
+            rng.fill_normal(&mut v, 0.0, 1.0);
+            v
+        })
+        .collect();
+    let cfg = ChannelConfig::default();
+    let round = RoundChannel::draw(&cfg, k, &mut rng);
+    let (gre, gim) = ota::analog::gain_vectors(&round);
+    let noise_re = vec![0.0f32; chunk];
+    let noise_im = vec![0.0f32; chunk];
+
+    // PJRT path
+    let mut flat = Vec::with_capacity(k * chunk);
+    for p in &payloads {
+        flat.extend_from_slice(p);
+    }
+    let (pjrt_re, _pjrt_im) = rt
+        .ota_chunk(&flat, &gre, &gim, &noise_re, &noise_im)
+        .unwrap();
+
+    // rust path (no noise => deterministic comparison); aggregate() scales
+    // by participants, the kernel does not — undo the scaling.
+    let mut noise_rng = Rng::seed_from(7);
+    let mut silent_cfg = round.clone();
+    silent_cfg.snr_db = f32::INFINITY; // noise_var -> 0
+    let (rust_mean, stats) =
+        ota::analog::aggregate(&payloads, &silent_cfg, &mut noise_rng);
+    let scale = stats.participants as f32;
+    let rust_sum: Vec<f32> = rust_mean.iter().map(|v| v * scale).collect();
+
+    // silenced clients have zero gain in BOTH paths; compare elementwise
+    let max_diff = mpota::tensor::max_abs_diff(&pjrt_re, &rust_sum);
+    assert!(max_diff < 2e-3, "pallas vs rust OTA diverge: {max_diff}");
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(rt) = runtime() else { return };
+    let theta = rt.init_params("base").unwrap();
+    let (images, labels) = batch(&rt, 8);
+    for _ in 0..3 {
+        rt.train_step("base", Precision::of(16), &theta, &images, &labels, 0.01)
+            .unwrap();
+    }
+    let c = rt.counters();
+    assert_eq!(c.compiles, 1, "executable cache miss: {c:?}");
+    assert_eq!(c.train_steps, 3);
+}
+
+#[test]
+fn variant_artifacts_all_loadable() {
+    let Some(rt) = runtime() else { return };
+    for (name, v) in rt.manifest.variants.clone() {
+        let theta = rt.init_params(&name).unwrap();
+        assert_eq!(theta.len(), v.param_count, "{name}");
+        let mut rng = Rng::seed_from(9);
+        let data = Dataset::generate(rt.manifest.eval_batch, &mut rng);
+        let r = rt
+            .evaluate(&name, &theta, &data.images, &data.labels)
+            .unwrap();
+        assert!(r.loss.is_finite(), "{name}");
+    }
+    let _ = SAMPLE_LEN; // silence unused import on skip path
+}
