@@ -28,6 +28,9 @@ fn base_cfg(rounds: usize, pretrained: &std::path::Path) -> RunConfig {
     cfg.local_steps = 2;
     cfg.lr = 0.02;
     cfg.init_params = Some(pretrained.to_path_buf());
+    // server-kernel parallelism: results are bit-identical per seed at any
+    // thread count, so this only changes wall-clock
+    cfg.threads = mpota::kernels::par::env_threads();
     cfg
 }
 

@@ -50,6 +50,7 @@ fn main() -> anyhow::Result<()> {
         cfg.local_steps = 2;
         cfg.lr = 0.02;
         cfg.init_params = Some(pretrained.clone());
+        cfg.threads = mpota::kernels::par::env_threads();
         let mut coord = Coordinator::new(cfg)?;
         let report = coord.run()?;
         eprintln!(

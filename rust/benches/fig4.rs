@@ -66,6 +66,8 @@ fn main() -> anyhow::Result<()> {
         cfg.local_steps = 2;
         cfg.lr = 0.02;
         cfg.init_params = Some(pretrained.clone());
+        // bit-identical per seed at any thread count; opt-in wall-clock win
+        cfg.threads = mpota::kernels::par::env_threads();
         let mut coord = Coordinator::new(cfg)?;
         let report = coord.run()?;
         let acc4 = match report.requant.iter().find(|r| r.precision.bits() == 4) {

@@ -2,60 +2,136 @@
 //! a small warmup+trimmed-mean harness with ns/op and throughput output).
 //!
 //! Covers the L3 request-path kernels the §Perf pass optimizes:
-//!   * OTA analog superposition (K=15 complex-gain accumulate + noise)
-//!   * Algorithm-2 quantization (fixed-point and float-trunc)
-//!   * digital-baseline encode/decode
-//!   * Rayleigh channel round draw (pilot estimation included)
-//!   * fedavg / vector kernels
-//!   * PJRT train-step + eval dispatch (if artifacts are present)
+//!   * OTA analog superposition (K=15 complex-gain accumulate + noise):
+//!     pre-PR scalar reference vs the fused payload-plane kernel at
+//!     threads=1 and threads=num_cpus
+//!   * Algorithm-2 quantization (fixed-point and float-trunc):
+//!     copy-then-inplace scalar reference vs fused quantize-into
+//!   * receiver-noise fill (sequential vs skip-ahead parallel Box-Muller)
+//!   * digital-baseline aggregation (frame encode/decode vs fused plane)
+//!   * fedavg (vec-of-vecs vs plane), channel round draw, data generation
+//!   * PJRT train-step + eval dispatch (artifacts + `pjrt` feature only)
 //!
 //! Run: `cargo bench --bench hotpaths`
+//! Budget: `MPOTA_BENCH_MS` (per-label wall budget, default 600 ms — set a
+//! small value for CI smoke runs).
+//! Output: human table on stdout plus machine-readable
+//! `BENCH_hotpaths.json` at the repo root (override: `MPOTA_BENCH_JSON`).
 
 use std::time::Instant;
 
 use mpota::channel::{ChannelConfig, RoundChannel};
-use mpota::ota;
-use mpota::quant::{self, Precision};
+use mpota::json::Value;
+use mpota::kernels::{par, PayloadPlane};
+use mpota::ota::{self, analog::OtaScratch};
+use mpota::quant::{self, Precision, Rounding};
 use mpota::rng::Rng;
 
-/// warmup + measure: returns (secs_per_iter, iters)
-fn bench<F: FnMut()>(label: &str, bytes_per_iter: usize, mut f: F) -> f64 {
-    // warmup
-    for _ in 0..3 {
-        f();
-    }
-    let mut samples = Vec::new();
-    let target = std::time::Duration::from_millis(600);
-    let t_all = Instant::now();
-    let mut iters = 0u64;
-    while t_all.elapsed() < target || samples.len() < 5 {
-        let t0 = Instant::now();
-        f();
-        samples.push(t0.elapsed().as_secs_f64());
-        iters += 1;
-        if iters > 10_000 {
-            break;
+/// Per-label wall-clock budget (ms), overridable for CI smoke runs.
+fn bench_budget_ms() -> u64 {
+    std::env::var("MPOTA_BENCH_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(600)
+}
+
+/// (label, secs_per_iter, GB/s) rows collected for the JSON emit.
+struct Results {
+    budget: std::time::Duration,
+    rows: Vec<(String, f64, f64)>,
+}
+
+impl Results {
+    fn new() -> Self {
+        Results {
+            budget: std::time::Duration::from_millis(bench_budget_ms()),
+            rows: Vec::new(),
         }
     }
-    samples.sort_by(f64::total_cmp);
-    // trimmed mean of the middle 60%
-    let lo = samples.len() / 5;
-    let hi = samples.len() - lo;
-    let mean: f64 = samples[lo..hi].iter().sum::<f64>() / (hi - lo) as f64;
-    let gbps = bytes_per_iter as f64 / mean / 1e9;
-    if bytes_per_iter > 0 {
-        println!("{label:<44} {:>12.3} ms/iter {:>9.2} GB/s", mean * 1e3, gbps);
-    } else {
-        println!("{label:<44} {:>12.3} ms/iter", mean * 1e3);
+
+    /// warmup + measure; records and returns secs_per_iter.
+    fn bench<F: FnMut()>(&mut self, label: &str, bytes_per_iter: usize, mut f: F) -> f64 {
+        // warmup
+        for _ in 0..3 {
+            f();
+        }
+        let mut samples = Vec::new();
+        let t_all = Instant::now();
+        let mut iters = 0u64;
+        // keep collecting until the budget elapses AND we have at least 5
+        // samples (so the trim below has a middle to keep); the iteration
+        // cap bounds pathological cases
+        while t_all.elapsed() < self.budget || samples.len() < 5 {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            iters += 1;
+            if iters > 10_000 {
+                break;
+            }
+        }
+        samples.sort_by(f64::total_cmp);
+        // trimmed mean of the middle 60% — but only when there are enough
+        // samples for the trim to leave a non-empty middle (tiny budgets /
+        // early breaks previously made lo == hi and panicked on the empty
+        // slice mean)
+        let len = samples.len();
+        let (lo, hi) = if len >= 5 { (len / 5, len - len / 5) } else { (0, len) };
+        let mid = &samples[lo..hi];
+        let mean: f64 = mid.iter().sum::<f64>() / mid.len() as f64;
+        let gbps = if bytes_per_iter > 0 {
+            bytes_per_iter as f64 / mean / 1e9
+        } else {
+            0.0
+        };
+        if bytes_per_iter > 0 {
+            println!("{label:<52} {:>12.3} ms/iter {:>9.2} GB/s", mean * 1e3, gbps);
+        } else {
+            println!("{label:<52} {:>12.3} ms/iter", mean * 1e3);
+        }
+        self.rows.push((label.to_string(), mean, gbps));
+        mean
     }
-    mean
+
+    fn to_json(&self, k: usize, n: usize, threads_max: usize) -> Value {
+        let mut labels = Value::object();
+        for (label, secs, gbps) in &self.rows {
+            let mut row = Value::object();
+            row.set("ns_per_op", Value::Num(secs * 1e9));
+            row.set("ms_per_iter", Value::Num(secs * 1e3));
+            row.set("gbps", Value::Num(*gbps));
+            labels.set(label, row);
+        }
+        let mut o = Value::object();
+        o.set("bench", Value::Str("hotpaths".into()));
+        o.set("k", Value::Num(k as f64));
+        o.set("n", Value::Num(n as f64));
+        o.set("threads_max", Value::Num(threads_max as f64));
+        o.set("budget_ms", Value::Num(bench_budget_ms() as f64));
+        o.set("labels", labels);
+        o
+    }
+}
+
+// The pre-PR scalar aggregation baseline lives in `mpota::testing`
+// (`reference_ota_aggregate`) — the SAME function the golden tests pin the
+// fused kernels against, so the published speedups and the bit-exactness
+// contract always reference one baseline.
+
+fn speedup(labels: &mut Value, name: &str, base: f64, new: f64) {
+    let s = base / new;
+    println!("  speedup {name:<44} {s:>6.2}x");
+    labels.set(name, Value::Num(s));
 }
 
 fn main() {
     println!("=== hotpaths: L3 request-path microbenchmarks ===\n");
     let k = 15usize;
     let n = 142_720usize; // flagship param count: the real payload size
+    let ncpu = par::auto_threads();
     let root = Rng::seed_from(1);
+    let mut res = Results::new();
+    println!("(budget {} ms/label, {} hardware threads)\n", bench_budget_ms(), ncpu);
 
     // payloads
     let mut rng = root.stream("bench");
@@ -68,60 +144,137 @@ fn main() {
         .collect();
     let cfg = ChannelConfig::default();
     let round = RoundChannel::draw(&cfg, k, &mut rng);
+    let plane = PayloadPlane::from_rows(&payloads);
 
     // --- OTA analog aggregation (the paper's aggregation hot path) ------
     let payload_bytes = k * n * 4;
-    bench("ota::analog::aggregate (15 x 142720 f32)", payload_bytes, || {
+    let scalar_agg =
+        res.bench("ota::analog aggregate scalar-reference", payload_bytes, || {
+            let mut noise_rng = Rng::seed_from(7);
+            let agg = mpota::testing::reference_ota_aggregate(&payloads, &round, &mut noise_rng);
+            std::hint::black_box(agg);
+        });
+    let mut scratch = OtaScratch::new();
+    let fused_t1 = res.bench("ota::analog aggregate fused threads=1", payload_bytes, || {
         let mut noise_rng = Rng::seed_from(7);
-        let (agg, _) = ota::analog::aggregate(&payloads, &round, &mut noise_rng);
-        std::hint::black_box(agg);
+        let stats =
+            ota::analog::aggregate_plane_into(&plane, &round, &mut noise_rng, &mut scratch, 1);
+        std::hint::black_box((&scratch.y_re, stats.participants));
+    });
+    // threads=ncpu rows only exist on multi-core machines: at ncpu == 1
+    // they would duplicate (and silently overwrite) the threads=1 labels
+    let fused_tn = (ncpu > 1).then(|| {
+        let label_tn = format!("ota::analog aggregate fused threads={ncpu}");
+        res.bench(&label_tn, payload_bytes, || {
+            let mut noise_rng = Rng::seed_from(7);
+            let stats = ota::analog::aggregate_plane_into(
+                &plane,
+                &round,
+                &mut noise_rng,
+                &mut scratch,
+                ncpu,
+            );
+            std::hint::black_box((&scratch.y_re, stats.participants));
+        })
+    });
+
+    // --- receiver-noise fill --------------------------------------------
+    let noise_bytes = 2 * n * 4;
+    let mut nre = vec![0.0f32; n];
+    let mut nim = vec![0.0f32; n];
+    let noise_seq = res.bench("noise add_normal re+im sequential", noise_bytes, || {
+        let mut r = Rng::seed_from(11);
+        r.add_normal(&mut nre, 0.3);
+        r.add_normal(&mut nim, 0.3);
+        std::hint::black_box((&nre, &nim));
+    });
+    let label_noise = format!("noise add_normal2 skip-ahead threads={ncpu}");
+    let noise_par = res.bench(&label_noise, noise_bytes, || {
+        let mut r = Rng::seed_from(11);
+        r.add_normal2(&mut nre, &mut nim, 0.3, ncpu);
+        std::hint::black_box((&nre, &nim));
     });
 
     // --- digital baseline ------------------------------------------------
     let precisions: Vec<Precision> =
         (0..k).map(|i| Precision::of([32u8, 8, 4][i % 3])).collect();
-    bench("ota::digital::aggregate (encode+decode+avg)", payload_bytes, || {
+    let dig_scalar = res.bench("ota::digital aggregate frame-reference", payload_bytes, || {
         let (agg, _) = ota::digital::aggregate(&payloads, &precisions);
         std::hint::black_box(agg);
+    });
+    let mut dig_out = Vec::new();
+    let label_dig = format!("ota::digital aggregate fused plane threads={ncpu}");
+    let dig_fused = res.bench(&label_dig, payload_bytes, || {
+        let stats =
+            ota::digital::aggregate_plane_into(&plane, &precisions, &mut dig_out, ncpu);
+        std::hint::black_box((&dig_out, stats.participants));
     });
 
     // --- quantization -----------------------------------------------------
     let src = payloads[0].clone();
     let mut buf = src.clone();
-    bench("quant fixed-point 4-bit (142720 f32)", n * 4, || {
+    let q4_scalar = res.bench("quant fixed 4-bit copy+inplace reference", n * 4, || {
         buf.copy_from_slice(&src);
         quant::fake_quant_inplace(&mut buf, Precision::of(4));
         std::hint::black_box(&buf);
     });
-    bench("quant float-trunc 16-bit (142720 f32)", n * 4, || {
+    let q4_t1 = res.bench("quant fixed 4-bit fused-into threads=1", n * 4, || {
+        quant::fake_quant_into(&mut buf, &src, Precision::of(4), Rounding::Floor, 1);
+        std::hint::black_box(&buf);
+    });
+    let q4_tn = (ncpu > 1).then(|| {
+        let label_q4 = format!("quant fixed 4-bit fused-into threads={ncpu}");
+        res.bench(&label_q4, n * 4, || {
+            quant::fake_quant_into(&mut buf, &src, Precision::of(4), Rounding::Floor, ncpu);
+            std::hint::black_box(&buf);
+        })
+    });
+    let q16_scalar = res.bench("quant float 16-bit copy+inplace reference", n * 4, || {
         buf.copy_from_slice(&src);
         quant::fake_quant_inplace(&mut buf, Precision::of(16));
         std::hint::black_box(&buf);
     });
+    let q16_t1 = res.bench("quant float 16-bit fused-into threads=1", n * 4, || {
+        quant::fake_quant_into(&mut buf, &src, Precision::of(16), Rounding::Floor, 1);
+        std::hint::black_box(&buf);
+    });
+    let q16_tn = (ncpu > 1).then(|| {
+        let label_q16 = format!("quant float 16-bit fused-into threads={ncpu}");
+        res.bench(&label_q16, n * 4, || {
+            quant::fake_quant_into(&mut buf, &src, Precision::of(16), Rounding::Floor, ncpu);
+            std::hint::black_box(&buf);
+        })
+    });
 
     // --- channel simulation ----------------------------------------------
-    bench("RoundChannel::draw (15 clients, 16-pilot LS)", 0, || {
+    res.bench("RoundChannel::draw (15 clients, 16-pilot LS)", 0, || {
         let mut ch_rng = Rng::seed_from(3);
         let rc = RoundChannel::draw(&cfg, k, &mut ch_rng);
         std::hint::black_box(rc);
     });
 
     // --- fedavg oracle ----------------------------------------------------
-    bench("fl::mean (15 x 142720 f32)", payload_bytes, || {
+    let mean_scalar = res.bench("fl::mean vec-of-vecs reference", payload_bytes, || {
         let m = mpota::fl::mean(&payloads);
         std::hint::black_box(m);
     });
+    let mut mean_out = Vec::new();
+    let label_mean = format!("fl::mean_plane_into threads={ncpu}");
+    let mean_fused = res.bench(&label_mean, payload_bytes, || {
+        mpota::fl::fedavg::mean_plane_into(&plane, &mut mean_out, ncpu);
+        std::hint::black_box(&mean_out);
+    });
 
     // --- data generation ---------------------------------------------------
-    bench("signs::render 32x32 sample", 0, || {
+    res.bench("signs::render 32x32 sample", 0, || {
         let mut r = Rng::seed_from(11);
         let img = mpota::data::signs::render(7, &mut r);
         std::hint::black_box(img);
     });
 
-    // --- PJRT dispatch (needs artifacts) -----------------------------------
+    // --- PJRT dispatch (needs artifacts + the pjrt feature) ----------------
     let dir = std::path::PathBuf::from("artifacts");
-    if dir.join("manifest.json").exists() {
+    if cfg!(feature = "pjrt") && dir.join("manifest.json").exists() {
         let rt = mpota::runtime::Runtime::load(&dir).unwrap();
         let theta = rt.init_params("base").unwrap();
         let mut drng = Rng::seed_from(5);
@@ -134,7 +287,7 @@ fn main() {
             // compile outside the timed region
             rt.train_step("base", Precision::of(bits), &theta, &images, &labels, 0.01)
                 .unwrap();
-            bench(&format!("PJRT train_step base q{bits} (batch 32)"), 0, || {
+            res.bench(&format!("PJRT train_step base q{bits} (batch 32)"), 0, || {
                 let out = rt
                     .train_step(
                         "base",
@@ -148,13 +301,46 @@ fn main() {
                 std::hint::black_box(out);
             });
         }
-        bench("PJRT evaluate base (64 samples)", 0, || {
+        res.bench("PJRT evaluate base (64 samples)", 0, || {
             let r = rt
                 .evaluate("base", &theta, &data.images, &data.labels)
                 .unwrap();
             std::hint::black_box(r);
         });
     } else {
-        println!("(PJRT benches skipped: run `make artifacts` first)");
+        println!("(PJRT benches skipped: need artifacts + --features pjrt)");
     }
+
+    // --- summary + machine-readable emit -----------------------------------
+    println!("\n—— speedups vs pre-PR scalar references ——");
+    let mut speedups = Value::object();
+    speedup(&mut speedups, "analog_fused_t1", scalar_agg, fused_t1);
+    if let Some(t) = fused_tn {
+        speedup(&mut speedups, &format!("analog_fused_t{ncpu}"), scalar_agg, t);
+    }
+    speedup(&mut speedups, "noise_skip_ahead", noise_seq, noise_par);
+    speedup(&mut speedups, "digital_fused_plane", dig_scalar, dig_fused);
+    speedup(&mut speedups, "quant_fixed4_fused_t1", q4_scalar, q4_t1);
+    if let Some(t) = q4_tn {
+        speedup(&mut speedups, &format!("quant_fixed4_fused_t{ncpu}"), q4_scalar, t);
+    }
+    speedup(&mut speedups, "quant_float16_fused_t1", q16_scalar, q16_t1);
+    if let Some(t) = q16_tn {
+        speedup(&mut speedups, &format!("quant_float16_fused_t{ncpu}"), q16_scalar, t);
+    }
+    speedup(&mut speedups, "fedavg_mean_plane", mean_scalar, mean_fused);
+
+    let mut doc = res.to_json(k, n, ncpu);
+    doc.set("speedups", speedups);
+    let path = std::env::var("MPOTA_BENCH_JSON").unwrap_or_else(|_| {
+        // cargo runs benches with CWD = package root (rust/); the perf
+        // trajectory file lives at the repo root next to ROADMAP.md
+        if std::path::Path::new("../ROADMAP.md").exists() {
+            "../BENCH_hotpaths.json".to_string()
+        } else {
+            "BENCH_hotpaths.json".to_string()
+        }
+    });
+    std::fs::write(&path, doc.to_string_pretty()).expect("writing bench json");
+    println!("\nwrote {path}");
 }

@@ -58,9 +58,18 @@ fn main() -> anyhow::Result<()> {
         let base = rt.evaluate(name, &theta, &test.images, &test.labels)?;
         let mut accs = Vec::new();
         print!("{:<8} {:>7.2}%", name, 100.0 * base.accuracy);
+        // fused chunk-parallel PTQ kernel: bit-identical per seed at any
+        // MPOTA_THREADS value
+        let threads = mpota::kernels::par::env_threads();
         for b in PTQ_LEVELS {
             // per-layer Algorithm-2 PTQ (floor), paper §III-B semantics
-            let q = rt.quantize_model(name, &theta, Precision::of(b), Rounding::Floor)?;
+            let q = rt.quantize_model_par(
+                name,
+                &theta,
+                Precision::of(b),
+                Rounding::Floor,
+                threads,
+            )?;
             let r = rt.evaluate(name, &q, &test.images, &test.labels)?;
             accs.push(r.accuracy);
             print!("{:>7.2}%", 100.0 * r.accuracy);

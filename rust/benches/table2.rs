@@ -69,11 +69,19 @@ fn main() {
         RESNET50_MACS_PER_SAMPLE,
     );
 
-    // the model this repo actually trains (manifest MACs if available)
-    let signnet_macs = match mpota::runtime::Manifest::load(std::path::Path::new("artifacts")) {
-        Ok(m) => m.variant("base").map(|v| v.macs_per_sample as f64).unwrap_or(1.0e7),
-        Err(_) => 1.0e7,
-    };
+    // the model this repo actually trains (manifest MACs if available;
+    // MPOTA_T2_MACS overrides for what-if sweeps without artifacts)
+    let signnet_macs = std::env::var("MPOTA_T2_MACS")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or_else(|| {
+            match mpota::runtime::Manifest::load(std::path::Path::new("artifacts")) {
+                Ok(m) => {
+                    m.variant("base").map(|v| v.macs_per_sample as f64).unwrap_or(1.0e7)
+                }
+                Err(_) => 1.0e7,
+            }
+        });
     print_table("SignNet-base forward pass (this repo's workload)", signnet_macs);
 
     println!("\nper-platform energy at ResNet-50 fwd (J/sample):");

@@ -67,24 +67,52 @@ pub struct RoundChannel {
     pub snr_db: f32,
 }
 
+impl Default for RoundChannel {
+    fn default() -> Self {
+        RoundChannel::empty()
+    }
+}
+
 impl RoundChannel {
+    /// Empty channel state, ready to be filled by [`draw_into`].
+    ///
+    /// [`draw_into`]: RoundChannel::draw_into
+    pub fn empty() -> Self {
+        RoundChannel { clients: Vec::new(), snr_db: 0.0 }
+    }
+
     /// Draw a full round of channels: fading, pilot estimation, precoding.
     pub fn draw(cfg: &ChannelConfig, num_clients: usize, rng: &mut Rng) -> Self {
         let pilot = pilot::pilot_sequence(cfg.pilot_len);
-        let clients = (0..num_clients)
-            .map(|_| {
-                let h = fading::rayleigh_coeff(rng);
-                let h_est = if cfg.perfect_csi {
-                    h
-                } else {
-                    pilot::estimate(h, &pilot, cfg.pilot_noise_var, rng)
-                };
-                let pc = precode::channel_inversion(h_est, cfg.truncation);
-                let effective_gain = precode::effective_gain(h, &pc);
-                ClientChannel { h, h_est, precode: pc, effective_gain }
-            })
-            .collect();
-        RoundChannel { clients, snr_db: cfg.snr_db }
+        let mut rc = RoundChannel::empty();
+        rc.draw_into(cfg, num_clients, rng, &pilot);
+        rc
+    }
+
+    /// Draw a round of channels into this (reused) value — the zero-alloc
+    /// round-loop form.  `pilot` is the broadcast pilot sequence, computed
+    /// once per run ([`pilot::pilot_sequence`]); RNG consumption is
+    /// identical to [`RoundChannel::draw`].
+    pub fn draw_into(
+        &mut self,
+        cfg: &ChannelConfig,
+        num_clients: usize,
+        rng: &mut Rng,
+        pilot: &[C32],
+    ) {
+        self.snr_db = cfg.snr_db;
+        self.clients.clear();
+        for _ in 0..num_clients {
+            let h = fading::rayleigh_coeff(rng);
+            let h_est = if cfg.perfect_csi {
+                h
+            } else {
+                pilot::estimate(h, pilot, cfg.pilot_noise_var, rng)
+            };
+            let pc = precode::channel_inversion(h_est, cfg.truncation);
+            let effective_gain = precode::effective_gain(h, &pc);
+            self.clients.push(ClientChannel { h, h_est, precode: pc, effective_gain });
+        }
     }
 
     /// Indices of clients actually transmitting this round.
@@ -183,5 +211,26 @@ mod tests {
             assert_eq!(x.h, y.h);
             assert_eq!(x.h_est, y.h_est);
         }
+    }
+
+    #[test]
+    fn draw_into_matches_draw_and_reuses_capacity() {
+        let cfg = ChannelConfig::default();
+        let pilot = pilot::pilot_sequence(cfg.pilot_len);
+        let mut r1 = Rng::seed_from(31);
+        let mut r2 = Rng::seed_from(31);
+        let mut reused = RoundChannel::empty();
+        for _ in 0..3 {
+            let fresh = RoundChannel::draw(&cfg, 15, &mut r1);
+            reused.draw_into(&cfg, 15, &mut r2, &pilot);
+            assert_eq!(reused.clients.len(), 15);
+            for (x, y) in fresh.clients.iter().zip(reused.clients.iter()) {
+                assert_eq!(x.h, y.h);
+                assert_eq!(x.h_est, y.h_est);
+                assert_eq!(x.effective_gain, y.effective_gain);
+            }
+        }
+        // same RNG state afterwards: the two paths consumed identically
+        assert_eq!(r1.next_u64(), r2.next_u64());
     }
 }

@@ -25,6 +25,9 @@ pub enum Precode {
 pub const DEFAULT_TRUNCATION: f32 = 0.1;
 
 /// Compute the truncated-inversion precoder for an estimated channel.
+/// Inlined: called once per (client, round) inside the zero-alloc
+/// `draw_into` loop.
+#[inline]
 pub fn channel_inversion(h_est: C32, truncation: f32) -> Precode {
     if h_est.abs() < truncation {
         return Precode::Silenced;
@@ -38,6 +41,7 @@ pub fn channel_inversion(h_est: C32, truncation: f32) -> Precode {
 /// Effective end-to-end gain for a transmitting client: `h_true · ĥ⁻¹`.
 /// Under perfect CSI this is exactly 1+0j; the deviation is the residual
 /// misalignment the OTA aggregation inherits.
+#[inline]
 pub fn effective_gain(h_true: C32, precode: &Precode) -> Option<C32> {
     match precode {
         Precode::Transmit(inv) => Some(h_true * *inv),

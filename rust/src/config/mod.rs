@@ -115,6 +115,11 @@ pub struct RunConfig {
     pub init_params: Option<PathBuf>,
     /// Worker threads for client-parallel local training (1 = sequential).
     pub workers: usize,
+    /// Chunk-parallelism for the server-side kernels (superposition,
+    /// noise, quantization, vector ops).  `1` runs the exact sequential
+    /// path; any value produces bit-identical results for a fixed seed
+    /// (see the `kernels` module determinism contract).
+    pub threads: usize,
     /// Where run logs go.
     pub out_dir: PathBuf,
     /// Evaluate the server model every `eval_every` rounds.
@@ -140,6 +145,7 @@ impl Default for RunConfig {
             seed: 42,
             init_params: None,
             workers: 1,
+            threads: 1,
             out_dir: PathBuf::from("runs"),
             eval_every: 1,
         }
@@ -175,6 +181,9 @@ impl RunConfig {
         }
         if self.workers == 0 {
             bail!("workers must be positive");
+        }
+        if self.threads == 0 {
+            bail!("threads must be positive (1 = sequential)");
         }
         if !(self.channel.snr_db.is_finite()) {
             bail!("snr_db must be finite");
@@ -217,6 +226,7 @@ impl RunConfig {
                     self.init_params = Some(PathBuf::from(val.as_str()?))
                 }
                 "workers" => self.workers = val.as_usize()?,
+                "threads" => self.threads = val.as_usize()?,
                 "out_dir" => self.out_dir = PathBuf::from(val.as_str()?),
                 "eval_every" => self.eval_every = val.as_usize()?,
                 other => bail!("unknown config key '{other}'"),
@@ -248,6 +258,7 @@ impl RunConfig {
         o.set("perfect_csi", Value::Bool(self.channel.perfect_csi));
         o.set("seed", Value::Num(self.seed as f64));
         o.set("workers", Value::Num(self.workers as f64));
+        o.set("threads", Value::Num(self.threads as f64));
         o.set("eval_every", Value::Num(self.eval_every as f64));
         o
     }
@@ -296,6 +307,17 @@ mod tests {
         assert_eq!(c.channel.snr_db, 12.5);
         assert_eq!(c.aggregation, Aggregation::Digital);
         assert!(c.channel.perfect_csi);
+    }
+
+    #[test]
+    fn threads_knob_validates_and_overrides() {
+        let mut c = RunConfig::default();
+        c.threads = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.apply_json(&json::parse(r#"{"threads": 4}"#).unwrap()).unwrap();
+        assert_eq!(c.threads, 4);
+        c.validate().unwrap();
     }
 
     #[test]

@@ -29,6 +29,11 @@ pub struct ClientState {
     /// Scratch buffers reused across rounds (no allocation in the loop).
     img_buf: Vec<f32>,
     label_buf: Vec<i32>,
+    global_idx: Vec<usize>,
+    /// Re-quantized broadcast model [θ^(t-1)]_{q_k} (reused across rounds).
+    theta_start: Vec<f32>,
+    /// Local training state θ_k (reused across rounds).
+    theta: Vec<f32>,
     /// Cumulative MACs this client has spent (energy accounting).
     pub macs_spent: f64,
 }
@@ -51,6 +56,9 @@ impl ClientState {
             rng,
             img_buf: vec![0.0f32; train_batch * SAMPLE_LEN],
             label_buf: vec![0i32; train_batch],
+            global_idx: Vec::with_capacity(train_batch),
+            theta_start: Vec::new(),
+            theta: Vec::new(),
             macs_spent: 0.0,
         }
     }
@@ -78,43 +86,84 @@ impl ClientState {
         transmit_weights: bool,
         layout: &crate::tensor::ParamLayout,
     ) -> Result<(Vec<f32>, LocalStats)> {
+        let mut payload = vec![0.0f32; theta_global.len()];
+        let stats = self.local_round_into(
+            runtime,
+            variant,
+            data,
+            theta_global,
+            lr,
+            local_steps,
+            macs_per_sample,
+            transmit_weights,
+            layout,
+            1,
+            &mut payload,
+        )?;
+        Ok((payload, stats))
+    }
+
+    /// Zero-alloc form of [`local_round`]: the payload is written straight
+    /// into `payload_out` (the client's payload-plane row) and all model
+    /// buffers are client-owned scratch reused across rounds.  The only
+    /// remaining per-round allocations happen inside the PJRT dispatch
+    /// (`Runtime::train_step` literals), outside the arena contract.
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_round_into(
+        &mut self,
+        runtime: &Runtime,
+        variant: &str,
+        data: &Dataset,
+        theta_global: &[f32],
+        lr: f32,
+        local_steps: usize,
+        macs_per_sample: u64,
+        transmit_weights: bool,
+        layout: &crate::tensor::ParamLayout,
+        threads: usize,
+        payload_out: &mut [f32],
+    ) -> Result<LocalStats> {
+        assert_eq!(payload_out.len(), theta_global.len());
         // Step 2a: re-quantize the broadcast model (Fig. 2c) onto the
         // client's TRAINING grid — per LAYER (paper §III-B), nearest
         // rounding (same grid the QAT graph uses; floor is reserved for
-        // transmission/PTQ).
-        let theta_start = quant::fake_quant_layout(
+        // transmission/PTQ).  Fused quantize-into: no copy pass, no
+        // allocation once the scratch is warm.
+        self.theta_start.resize(theta_global.len(), 0.0);
+        quant::fake_quant_layout_into(
+            &mut self.theta_start,
             theta_global,
             layout,
             self.precision,
             quant::Rounding::Nearest,
+            threads,
         );
-        let mut theta = theta_start.clone();
+        self.theta.resize(theta_global.len(), 0.0);
+        self.theta.copy_from_slice(&self.theta_start);
 
         let mut stats = LocalStats::default();
         let batch = self.label_buf.len();
         for _ in 0..local_steps {
-            let idx = match self.batches.next_batch() {
-                Some(idx) => idx.to_vec(),
-                None => {
-                    self.batches.reset(&mut self.rng);
-                    self.batches
-                        .next_batch()
-                        .expect("shard smaller than one batch")
-                        .to_vec()
-                }
-            };
+            if !self.batches.has_next() {
+                self.batches.reset(&mut self.rng);
+            }
+            let idx = self
+                .batches
+                .next_batch()
+                .expect("shard smaller than one batch");
             // gather via the *global* corpus through this client's shard
-            let global_idx: Vec<usize> = idx.iter().map(|&i| self.shard[i]).collect();
-            data.gather(&global_idx, &mut self.img_buf, &mut self.label_buf);
+            self.global_idx.clear();
+            self.global_idx.extend(idx.iter().map(|&i| self.shard[i]));
+            data.gather(&self.global_idx, &mut self.img_buf, &mut self.label_buf);
             let out = runtime.train_step(
                 variant,
                 self.precision,
-                &theta,
+                &self.theta,
                 &self.img_buf,
                 &self.label_buf,
                 lr,
             )?;
-            theta = out.new_theta;
+            self.theta.copy_from_slice(&out.new_theta);
             stats.mean_loss += out.loss as f64;
             stats.mean_acc += out.correct as f64 / batch as f64;
             stats.steps += 1;
@@ -126,17 +175,13 @@ impl ClientState {
             stats.mean_loss /= stats.steps as f64;
             stats.mean_acc /= stats.steps as f64;
         }
-        let payload = if transmit_weights {
-            theta
+        if transmit_weights {
+            payload_out.copy_from_slice(&self.theta);
         } else {
             // Δ[θ_k] = [θ_k]_{q_k} - [θ^(t-1)]_{q_k}   (Alg. 1 step 10)
-            theta
-                .iter()
-                .zip(theta_start.iter())
-                .map(|(a, b)| a - b)
-                .collect()
-        };
-        Ok((payload, stats))
+            crate::tensor::diff_into(payload_out, &self.theta, &self.theta_start);
+        }
+        Ok(stats)
     }
 
     /// Smallest number of local steps that constitutes one epoch over the

@@ -26,17 +26,46 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::channel::RoundChannel;
+use crate::channel::{pilot, RoundChannel, C32};
 use crate::config::{Aggregation, RunConfig};
 use crate::data::{equal_shards, Dataset};
 use crate::energy;
 use crate::fl::{self, Selection};
+use crate::kernels::PayloadPlane;
 use crate::metrics::{RoundRecord, RunLog};
 use crate::ota;
 use crate::quant::{self, Precision};
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::tensor;
+
+/// Round scratch arena: every server-side buffer a round needs, allocated
+/// once and reused, so steady-state [`Coordinator::round`] performs no
+/// heap allocation outside the PJRT training dispatch
+/// (`rust/tests/alloc_counter.rs` pins this on the aggregation path).
+#[derive(Default)]
+struct RoundScratch {
+    /// Participant indices for the round.
+    selected: Vec<usize>,
+    /// K×N decimal payload rows (the superposition input).
+    plane: PayloadPlane,
+    /// Per-participant precision levels (digital baseline).
+    precisions: Vec<Precision>,
+    /// Channel realisation (clients vec reused).
+    round_channel: RoundChannel,
+    /// Broadcast pilot sequence (depends only on cfg.pilot_len).
+    pilot: Vec<C32>,
+    /// Analog-aggregation accumulators + active-gain list.
+    ota: ota::analog::OtaScratch,
+    /// Digital/ideal aggregation output.
+    agg: Vec<f32>,
+}
+
+/// Which scratch buffer holds the round's aggregate.
+enum AggSlot {
+    OtaReal,
+    Agg,
+}
 
 /// Orchestrates one full federated run.
 pub struct Coordinator {
@@ -54,6 +83,7 @@ pub struct Coordinator {
     log: RunLog,
     macs_per_sample: u64,
     layout: crate::tensor::ParamLayout,
+    scratch: RoundScratch,
 }
 
 impl Coordinator {
@@ -100,6 +130,10 @@ impl Coordinator {
         };
 
         let label = format!("{}@{}", cfg.scheme, cfg.aggregation);
+        let scratch = RoundScratch {
+            pilot: pilot::pilot_sequence(cfg.channel.pilot_len),
+            ..Default::default()
+        };
         Ok(Coordinator {
             select_rng: root.stream("select"),
             channel_rng: root.stream("channel"),
@@ -114,6 +148,7 @@ impl Coordinator {
             test_data,
             theta,
             selection,
+            scratch,
         })
     }
 
@@ -130,20 +165,36 @@ impl Coordinator {
     }
 
     /// Execute one communication round; returns its record.
+    ///
+    /// Steady-state contract: every server-side buffer comes from the
+    /// reused [`RoundScratch`] arena — after the first round this method
+    /// performs no heap allocation outside the PJRT training dispatch.
+    /// With `cfg.threads == 1` it reproduces the historical sequential
+    /// path bit-for-bit; any other thread count yields identical results
+    /// (kernels-layer determinism contract).
     pub fn round(&mut self, t: usize) -> Result<RoundRecord> {
         let t0 = Instant::now();
-        let selected = self
-            .selection
-            .select(self.cfg.clients, t, &mut self.select_rng);
+        let threads = self.cfg.threads;
+        self.selection.select_into(
+            self.cfg.clients,
+            t,
+            &mut self.select_rng,
+            &mut self.scratch.selected,
+        );
+        let kk = self.scratch.selected.len();
 
-        // Steps 1-2: broadcast + local training per selected client.
-        let mut payloads: Vec<Vec<f32>> = Vec::with_capacity(selected.len());
-        let mut precisions: Vec<Precision> = Vec::with_capacity(selected.len());
+        // Steps 1-2: broadcast + local training per selected client, each
+        // payload fused-quantized straight into its payload-plane row.
+        self.scratch.plane.reset(kk, self.theta.len());
+        self.scratch.precisions.clear();
         let mut train_loss = 0.0f64;
         let mut train_acc = 0.0f64;
-        for &k in &selected {
+        let transmit_weights =
+            matches!(self.cfg.transmit, crate::config::Transmit::Weights);
+        for slot in 0..kk {
+            let k = self.scratch.selected[slot];
             let c = &mut self.clients[k];
-            let (payload, stats) = c.local_round(
+            let stats = c.local_round_into(
                 &self.runtime,
                 &self.cfg.variant,
                 &self.train_data,
@@ -151,45 +202,63 @@ impl Coordinator {
                 self.cfg.lr,
                 self.cfg.local_steps,
                 self.macs_per_sample,
-                matches!(self.cfg.transmit, crate::config::Transmit::Weights),
+                transmit_weights,
                 &self.layout,
+                threads,
+                self.scratch.plane.row_mut(slot),
             )?;
-            payloads.push(payload);
-            precisions.push(c.precision);
+            self.scratch.precisions.push(c.precision);
             train_loss += stats.mean_loss;
             train_acc += stats.mean_acc;
         }
-        train_loss /= selected.len() as f64;
-        train_acc /= selected.len() as f64;
+        train_loss /= kk as f64;
+        train_acc /= kk as f64;
 
-        // Steps 3-4: aggregation.
-        let (agg, participants, ota_mse) = match self.cfg.aggregation {
+        // Steps 3-4: aggregation over the payload plane.
+        let scratch = &mut self.scratch;
+        let (slot, participants, ota_mse) = match self.cfg.aggregation {
             Aggregation::OtaAnalog => {
-                let rc = RoundChannel::draw(
+                scratch.round_channel.draw_into(
                     &self.cfg.channel,
-                    payloads.len(),
+                    kk,
                     &mut self.channel_rng,
+                    &scratch.pilot,
                 );
-                let (agg, stats) = ota::analog::aggregate(&payloads, &rc, &mut self.noise_rng);
-                (agg, stats.participants, stats.mse_vs_ideal)
+                let stats = ota::analog::aggregate_plane_into(
+                    &scratch.plane,
+                    &scratch.round_channel,
+                    &mut self.noise_rng,
+                    &mut scratch.ota,
+                    threads,
+                );
+                (AggSlot::OtaReal, stats.participants, stats.mse_vs_ideal)
             }
             Aggregation::Digital => {
-                let (agg, stats) = ota::digital::aggregate(&payloads, &precisions);
-                (agg, stats.participants, 0.0)
+                let stats = ota::digital::aggregate_plane_into(
+                    &scratch.plane,
+                    &scratch.precisions,
+                    &mut scratch.agg,
+                    threads,
+                );
+                (AggSlot::Agg, stats.participants, 0.0)
             }
             Aggregation::Ideal => {
-                let agg = fl::mean(&payloads);
-                (agg, payloads.len(), 0.0)
+                fl::mean_plane_into(&scratch.plane, &mut scratch.agg, threads);
+                (AggSlot::Agg, kk, 0.0)
             }
         };
         if participants > 0 {
+            let agg: &[f32] = match slot {
+                AggSlot::OtaReal => &self.scratch.ota.y_re,
+                AggSlot::Agg => &self.scratch.agg,
+            };
             match self.cfg.transmit {
                 // θ^(t) = θ^(t-1) + mean(Δ_k)   (Alg. 1 steps 10/14)
                 crate::config::Transmit::Updates => {
-                    tensor::axpy(&mut self.theta, 1.0, &agg)
+                    tensor::axpy_par(&mut self.theta, 1.0, agg, threads)
                 }
                 // θ^(t) = mean(θ_k)             (Alg. 1 step 18, ablation)
-                crate::config::Transmit::Weights => self.theta = agg,
+                crate::config::Transmit::Weights => self.theta.copy_from_slice(agg),
             }
         } // else: round lost to deep fades; keep θ^(t-1)
 
@@ -200,7 +269,7 @@ impl Coordinator {
             train_accuracy: train_acc,
             participants,
             ota_mse,
-            energy_joules: self.energy_report().actual_joules,
+            energy_joules: self.actual_energy_joules(),
             wall_secs: 0.0,
             ..Default::default()
         };
@@ -269,15 +338,20 @@ impl Coordinator {
         })
     }
 
+    /// Cumulative fleet energy so far (the per-round record field) —
+    /// allocation-free, unlike the full counterfactual report.
+    pub fn actual_energy_joules(&self) -> f64 {
+        self.clients
+            .iter()
+            .map(|c| energy::mean_energy_joules(c.precision, c.macs_spent))
+            .sum()
+    }
+
     /// Energy actuals + homogeneous counterfactuals over the same MACs.
     pub fn energy_report(&self) -> EnergyReport {
-        let mut actual = 0.0;
         let macs: Vec<f64> = self.clients.iter().map(|c| c.macs_spent).collect();
-        for c in &self.clients {
-            actual += energy::mean_energy_joules(c.precision, c.macs_spent);
-        }
         EnergyReport {
-            actual_joules: actual,
+            actual_joules: self.actual_energy_joules(),
             all32_joules: energy::Meter::counterfactual_joules(&macs, Precision::of(32)),
             all16_joules: energy::Meter::counterfactual_joules(&macs, Precision::of(16)),
             all8_joules: energy::Meter::counterfactual_joules(&macs, Precision::of(8)),

@@ -84,9 +84,15 @@ impl BatchIter {
         BatchIter { order, batch, cursor: 0 }
     }
 
+    /// Whether another full minibatch remains in this epoch (lets the
+    /// zero-alloc client loop reset BEFORE borrowing the batch slice).
+    pub fn has_next(&self) -> bool {
+        self.cursor + self.batch <= self.order.len()
+    }
+
     /// Next minibatch of indices, or None at epoch end.
     pub fn next_batch(&mut self) -> Option<&[usize]> {
-        if self.cursor + self.batch > self.order.len() {
+        if !self.has_next() {
             return None;
         }
         let s = &self.order[self.cursor..self.cursor + self.batch];

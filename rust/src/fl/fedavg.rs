@@ -24,6 +24,57 @@ pub fn mean(updates: &[Vec<f32>]) -> Vec<f32> {
     fedavg(updates, &w)
 }
 
+/// Weighted FedAvg over a payload plane, written into a reused output
+/// buffer (zero allocation once warm), chunk-parallel.  Bit-identical to
+/// [`fedavg`] on the same rows for any `threads`: per element, the
+/// weighted contributions accumulate in the same ascending client order.
+pub fn fedavg_plane_into(
+    plane: &crate::kernels::PayloadPlane,
+    weights: &[f32],
+    out: &mut Vec<f32>,
+    threads: usize,
+) {
+    assert_eq!(plane.k(), weights.len());
+    let total: f32 = weights.iter().sum();
+    assert!(total > 0.0, "weights must sum positive");
+    out.resize(plane.n(), 0.0);
+    out.fill(0.0);
+    crate::kernels::par::par_chunks_mut(threads, out.as_mut_slice(), |off, chunk| {
+        for (k, &w) in weights.iter().enumerate() {
+            let row = &plane.row(k)[off..off + chunk.len()];
+            let f = w / total;
+            for (o, &x) in chunk.iter_mut().zip(row.iter()) {
+                *o += f * x;
+            }
+        }
+    });
+}
+
+/// Unweighted mean over a payload plane into a reused buffer —
+/// bit-identical to [`mean`] on the same rows for any `threads` (the
+/// all-ones weight total `1+1+…+1` is exact in f32 for any realistic K).
+pub fn mean_plane_into(
+    plane: &crate::kernels::PayloadPlane,
+    out: &mut Vec<f32>,
+    threads: usize,
+) {
+    let k = plane.k();
+    out.resize(plane.n(), 0.0);
+    out.fill(0.0);
+    if k == 0 {
+        return;
+    }
+    let f = 1.0f32 / k as f32;
+    crate::kernels::par::par_chunks_mut(threads, out.as_mut_slice(), |off, chunk| {
+        for ki in 0..k {
+            let row = &plane.row(ki)[off..off + chunk.len()];
+            for (o, &x) in chunk.iter_mut().zip(row.iter()) {
+                *o += f * x;
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,5 +161,28 @@ mod tests {
     #[should_panic(expected = "weights must sum positive")]
     fn zero_weights_panic() {
         let _ = fedavg(&[vec![1.0]], &[0.0]);
+    }
+
+    #[test]
+    fn plane_mean_and_fedavg_match_bitwise() {
+        let mut rng = crate::rng::Rng::seed_from(51);
+        let updates: Vec<Vec<f32>> = (0..5)
+            .map(|_| {
+                let mut v = vec![0.0f32; 20_000];
+                rng.fill_normal(&mut v, 0.0, 2.0);
+                v
+            })
+            .collect();
+        let weights = [3.0f32, 1.0, 2.0, 0.5, 4.0];
+        let want_mean = mean(&updates);
+        let want_avg = fedavg(&updates, &weights);
+        let plane = crate::kernels::PayloadPlane::from_rows(&updates);
+        let mut out = Vec::new();
+        for threads in [1usize, 4] {
+            mean_plane_into(&plane, &mut out, threads);
+            assert_eq!(out, want_mean, "mean threads={threads}");
+            fedavg_plane_into(&plane, &weights, &mut out, threads);
+            assert_eq!(out, want_avg, "fedavg threads={threads}");
+        }
     }
 }

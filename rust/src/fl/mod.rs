@@ -7,6 +7,6 @@ pub mod fedavg;
 pub mod scheme;
 pub mod selection;
 
-pub use fedavg::{fedavg, mean};
+pub use fedavg::{fedavg, fedavg_plane_into, mean, mean_plane_into};
 pub use scheme::Scheme;
 pub use selection::Selection;

@@ -17,18 +17,40 @@ pub enum Selection {
 impl Selection {
     /// Client indices participating in `round` (1-based round index).
     pub fn select(&self, clients: usize, round: usize, rng: &mut Rng) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.select_into(clients, round, rng, &mut out);
+        out
+    }
+
+    /// Fill `out` with the round's participant indices, reusing its
+    /// capacity (the zero-alloc round-loop form).  RNG consumption and
+    /// results are identical to [`select`](Selection::select).
+    pub fn select_into(
+        &self,
+        clients: usize,
+        round: usize,
+        rng: &mut Rng,
+        out: &mut Vec<usize>,
+    ) {
+        out.clear();
         match *self {
-            Selection::All => (0..clients).collect(),
+            Selection::All => out.extend(0..clients),
             Selection::UniformK(k) => {
                 let k = k.min(clients);
-                let mut sel = rng.choose_k(clients, k);
-                sel.sort_unstable();
-                sel
+                // partial Fisher-Yates, draw-for-draw the same as
+                // Rng::choose_k, over the reused buffer
+                out.extend(0..clients);
+                for i in 0..k {
+                    let j = i + rng.below(clients - i);
+                    out.swap(i, j);
+                }
+                out.truncate(k);
+                out.sort_unstable();
             }
             Selection::RoundRobinK(k) => {
                 let k = k.min(clients);
                 let start = ((round.saturating_sub(1)) * k) % clients;
-                (0..k).map(|i| (start + i) % clients).collect()
+                out.extend((0..k).map(|i| (start + i) % clients));
             }
         }
     }
@@ -83,5 +105,21 @@ mod tests {
     fn k_clamped_to_n() {
         let mut rng = Rng::seed_from(5);
         assert_eq!(Selection::UniformK(99).select(4, 1, &mut rng).len(), 4);
+    }
+
+    #[test]
+    fn select_into_matches_legacy_choose_k_draws() {
+        // the reusable-buffer path must consume the RNG exactly like the
+        // historical choose_k-based implementation
+        let mut legacy_rng = Rng::seed_from(6);
+        let mut new_rng = Rng::seed_from(6);
+        let mut out = Vec::new();
+        for round in 1..20 {
+            let mut legacy = legacy_rng.choose_k(15, 6);
+            legacy.sort_unstable();
+            Selection::UniformK(6).select_into(15, round, &mut new_rng, &mut out);
+            assert_eq!(out, legacy, "round {round}");
+        }
+        assert_eq!(legacy_rng.next_u64(), new_rng.next_u64());
     }
 }

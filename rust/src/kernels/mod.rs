@@ -1,0 +1,49 @@
+//! Fused, chunk-parallel kernels for the OTA round hot path (§Perf).
+//!
+//! The server-side cost of one communication round is pure vector math
+//! over K client payloads of N parameters: quantize + modulate each
+//! payload, superpose them through the channel gains, inject calibrated
+//! AWGN, and average.  This module supplies the substrate that makes that
+//! path fast without giving up reproducibility:
+//!
+//! * [`plane`] — [`PayloadPlane`], a contiguous K×N row-major buffer that
+//!   replaces `&[Vec<f32>]` on the aggregation path: one allocation per
+//!   run, cache-friendly row strides, stable row addresses for chunked
+//!   column sweeps.
+//! * [`fused`] — single-pass kernels: the complex [`fused::superpose`]
+//!   accumulates `y_re`, `y_im` and the noise-free `ideal` in ONE sweep
+//!   over each payload row (the scalar path reads every payload three
+//!   times), and [`fused::axpy2`] is the per-row building block.
+//! * [`par`] — scoped `std::thread` chunk-parallelism (no external deps):
+//!   N is split into contiguous column chunks, each worker owns a disjoint
+//!   output chunk, and chunk boundaries depend only on N and the chunk
+//!   count — never on scheduling.
+//!
+//! # Determinism-under-parallelism contract
+//!
+//! Every kernel here is **bit-identical to the sequential reference for
+//! any thread count**:
+//!
+//! * Elementwise maps (scale, axpy, quantize) and per-element reductions
+//!   over clients are computed in the same per-element operation order
+//!   regardless of chunking, so the f32 results match bit-for-bit.
+//! * min/max reductions (fixed-point quantization parameters) are exact
+//!   under any association, so chunked reduction changes nothing.
+//! * Order-sensitive f64 reductions (signal power, MSE diagnostics) stay
+//!   sequential — they are O(N) and cheap.
+//! * Receiver-noise generation keeps ONE logical RNG stream: workers
+//!   clone the generator and fast-forward (`Rng::clone_skip`) to their
+//!   chunk's draw offset, exploiting the fixed two-draws-per-pair shape of
+//!   the pairwise Box-Muller fill (see `Rng::add_normal2`).  The draws a
+//!   chunk consumes are exactly the draws the sequential pass would have
+//!   used at those positions.
+//!
+//! `threads = 1` executes the plain sequential loops — byte-for-byte the
+//! pre-kernel-layer behaviour — and `threads > 1` reproduces it exactly.
+//! `rust/tests/kernels.rs` enforces both against naive references.
+
+pub mod fused;
+pub mod par;
+pub mod plane;
+
+pub use plane::PayloadPlane;

@@ -1,0 +1,118 @@
+//! Scoped-thread chunk-parallelism helpers (no external crates).
+//!
+//! Work is split into contiguous chunks whose boundaries depend only on
+//! the element count and chunk count — never on scheduling — so parallel
+//! results are reproducible.  Below [`MIN_CHUNK_LEN`] elements per chunk
+//! the spawn overhead dominates and the helpers fall back to the inline
+//! sequential path (which also keeps the `threads = 1` round loop free of
+//! heap allocation; spawning scoped threads allocates their stacks).
+
+/// Smallest worthwhile per-chunk element count for f32 sweeps.
+pub const MIN_CHUNK_LEN: usize = 4096;
+
+/// Hardware parallelism (1 if it cannot be determined).
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Thread count from the `MPOTA_THREADS` environment variable (default 1
+/// — the exact sequential path).  Used by the benches; results are
+/// bit-identical per seed at any value, so it only trades wall-clock.
+pub fn env_threads() -> usize {
+    std::env::var("MPOTA_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&t| t > 0)
+        .unwrap_or(1)
+}
+
+/// Number of chunks actually worth using for `n` elements at `threads`.
+pub fn effective_chunks(threads: usize, n: usize) -> usize {
+    threads.min(n / MIN_CHUNK_LEN).max(1)
+}
+
+/// Length of chunk `i` of `chunks` over `n` elements (balanced split:
+/// the first `n % chunks` chunks get one extra element).
+pub fn chunk_len(n: usize, chunks: usize, i: usize) -> usize {
+    n / chunks + usize::from(i < n % chunks)
+}
+
+/// Start offset of chunk `i` of `chunks` over `n` elements.
+pub fn chunk_start(n: usize, chunks: usize, i: usize) -> usize {
+    let base = n / chunks;
+    let rem = n % chunks;
+    i * base + i.min(rem)
+}
+
+/// Run `f(offset, chunk)` over disjoint contiguous chunks of `buf`,
+/// in parallel when `threads > 1` and the buffer is large enough.
+///
+/// `f` must be oblivious to chunking (pure elementwise work): the chunk
+/// grid is deterministic, so results are identical for any thread count.
+pub fn par_chunks_mut<T, F>(threads: usize, buf: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = buf.len();
+    let chunks = effective_chunks(threads, n);
+    if chunks <= 1 {
+        f(0, buf);
+        return;
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = buf;
+        let mut off = 0usize;
+        for c in 0..chunks {
+            let len = chunk_len(n, chunks, c);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(len);
+            rest = tail;
+            let o = off;
+            off += len;
+            s.spawn(move || f(o, head));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_grid_is_a_partition() {
+        for n in [0usize, 1, 5, 4096, 10_000, 142_720] {
+            for chunks in 1..6 {
+                let mut total = 0usize;
+                for i in 0..chunks {
+                    assert_eq!(chunk_start(n, chunks, i), total);
+                    total += chunk_len(n, chunks, i);
+                }
+                assert_eq!(total, n, "n={n} chunks={chunks}");
+            }
+        }
+    }
+
+    #[test]
+    fn small_buffers_stay_sequential() {
+        assert_eq!(effective_chunks(8, 100), 1);
+        assert_eq!(effective_chunks(8, MIN_CHUNK_LEN * 3), 3);
+        assert_eq!(effective_chunks(2, MIN_CHUNK_LEN * 100), 2);
+        assert_eq!(effective_chunks(1, 1_000_000), 1);
+    }
+
+    #[test]
+    fn par_chunks_mut_matches_sequential() {
+        let n = MIN_CHUNK_LEN * 4 + 7;
+        let mut seq: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let mut par = seq.clone();
+        let work = |off: usize, chunk: &mut [f32]| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = *v * 0.5 + (off + j) as f32;
+            }
+        };
+        par_chunks_mut(1, &mut seq, work);
+        par_chunks_mut(4, &mut par, work);
+        assert_eq!(seq, par);
+    }
+}

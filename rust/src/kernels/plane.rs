@@ -1,0 +1,130 @@
+//! Contiguous K×N payload plane — the aggregation-path replacement for
+//! `&[Vec<f32>]`.
+//!
+//! One flat row-major buffer holds every client's decimal payload for the
+//! round.  Row k is `data[k*n .. (k+1)*n]`, so the superposition kernels
+//! stream each payload with unit stride, and the buffer is allocated once
+//! per run and reused every round (`reset` only grows capacity).
+
+/// K client payload rows of N parameters each, contiguous row-major.
+#[derive(Clone, Debug, Default)]
+pub struct PayloadPlane {
+    data: Vec<f32>,
+    k: usize,
+    n: usize,
+}
+
+impl PayloadPlane {
+    /// Empty plane (shape 0×0); call [`reset`](Self::reset) before use.
+    pub fn new() -> Self {
+        PayloadPlane::default()
+    }
+
+    /// Zero-filled plane of shape k×n.
+    pub fn zeros(k: usize, n: usize) -> Self {
+        PayloadPlane { data: vec![0.0; k * n], k, n }
+    }
+
+    /// Copy a ragged payload list into a fresh plane.
+    ///
+    /// Panics with "payload {k} length mismatch" if rows differ in length
+    /// (same contract as the historical slice-of-vecs aggregation entry).
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        let n = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut plane = PayloadPlane::zeros(rows.len(), n);
+        for (k, r) in rows.iter().enumerate() {
+            assert_eq!(r.len(), n, "payload {k} length mismatch");
+            plane.row_mut(k).copy_from_slice(r);
+        }
+        plane
+    }
+
+    /// Reshape to k×n, reusing the existing allocation when possible.
+    /// Contents are unspecified afterwards (rows are meant to be
+    /// overwritten); no allocation happens once capacity has grown.
+    pub fn reset(&mut self, k: usize, n: usize) {
+        self.data.resize(k * n, 0.0);
+        self.k = k;
+        self.n = n;
+    }
+
+    /// Number of rows (clients).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Row length (parameters per payload).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Client k's payload row.
+    pub fn row(&self, k: usize) -> &[f32] {
+        &self.data[k * self.n..(k + 1) * self.n]
+    }
+
+    /// Client k's payload row, mutable.
+    pub fn row_mut(&mut self, k: usize) -> &mut [f32] {
+        let n = self.n;
+        &mut self.data[k * n..(k + 1) * n]
+    }
+
+    /// Iterate rows in client order.
+    pub fn rows(&self) -> impl Iterator<Item = &[f32]> {
+        (0..self.k).map(move |k| self.row(k))
+    }
+
+    /// The whole K×N buffer, row-major.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_disjoint_views() {
+        let mut p = PayloadPlane::zeros(3, 4);
+        p.row_mut(1).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(p.row(0), &[0.0; 4]);
+        assert_eq!(p.row(1), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(p.row(2), &[0.0; 4]);
+        assert_eq!(p.as_slice().len(), 12);
+    }
+
+    #[test]
+    fn from_rows_round_trips() {
+        let rows = vec![vec![1.0f32, -2.0], vec![3.0, 4.0], vec![0.5, 0.25]];
+        let p = PayloadPlane::from_rows(&rows);
+        assert_eq!(p.k(), 3);
+        assert_eq!(p.n(), 2);
+        for (k, r) in p.rows().enumerate() {
+            assert_eq!(r, rows[k].as_slice());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn ragged_rows_panic() {
+        let _ = PayloadPlane::from_rows(&[vec![0.0; 3], vec![0.0; 4]]);
+    }
+
+    #[test]
+    fn reset_reuses_capacity() {
+        let mut p = PayloadPlane::zeros(4, 100);
+        let cap = p.data.capacity();
+        p.reset(2, 100);
+        p.reset(4, 100);
+        assert_eq!(p.data.capacity(), cap, "reset must not reallocate");
+        assert_eq!((p.k(), p.n()), (4, 100));
+    }
+
+    #[test]
+    fn empty_plane_is_fine() {
+        let p = PayloadPlane::from_rows(&[]);
+        assert_eq!((p.k(), p.n()), (0, 0));
+        assert_eq!(p.rows().count(), 0);
+    }
+}

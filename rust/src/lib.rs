@@ -19,6 +19,19 @@
 //!
 //! The crate is organised as many small substrate modules; `coordinator`
 //! wires them into the paper's Algorithm 1.
+//!
+//! ## The kernels layer (§Perf)
+//!
+//! The round hot path — quantize + modulate K payloads, superpose, inject
+//! AWGN, average — runs on [`kernels`]: a contiguous K×N
+//! [`kernels::PayloadPlane`] instead of `&[Vec<f32>]`, fused single-pass
+//! kernels ([`kernels::fused`]), and scoped-thread chunk-parallelism
+//! ([`kernels::par`]) gated by the `RunConfig::threads` knob.  The layer
+//! honours a strict determinism contract: for a fixed seed, results are
+//! bit-identical to the sequential scalar path at every thread count (see
+//! the module docs and `rust/tests/kernels.rs`).  The coordinator reuses a
+//! round scratch arena so steady-state rounds perform no heap allocation
+//! outside PJRT dispatch (`rust/tests/alloc_counter.rs`).
 
 pub mod channel;
 pub mod cli;
@@ -28,6 +41,7 @@ pub mod data;
 pub mod energy;
 pub mod fl;
 pub mod json;
+pub mod kernels;
 pub mod metrics;
 pub mod ota;
 pub mod quant;

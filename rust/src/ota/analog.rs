@@ -16,14 +16,48 @@
 //! cross-validate the two.
 
 use crate::channel::{RoundChannel, C32};
+use crate::kernels::{fused, PayloadPlane};
 use crate::ota::AggregateStats;
 use crate::rng::Rng;
 use crate::tensor;
+
+/// Reusable server-side buffers for the analog aggregation (one per run,
+/// owned by the coordinator's round scratch arena): the complex receive
+/// accumulators, the noise-free ideal, and the active-client gain list.
+/// After [`aggregate_plane_into`] returns, `y_re` holds the aggregated
+/// MEAN vector.
+#[derive(Clone, Debug, Default)]
+pub struct OtaScratch {
+    pub y_re: Vec<f32>,
+    pub y_im: Vec<f32>,
+    pub ideal: Vec<f32>,
+    pub active: Vec<(usize, C32)>,
+}
+
+impl OtaScratch {
+    pub fn new() -> Self {
+        OtaScratch::default()
+    }
+
+    /// Resize (allocation-free once warm) and zero the accumulators.
+    fn reset(&mut self, n: usize) {
+        self.y_re.resize(n, 0.0);
+        self.y_im.resize(n, 0.0);
+        self.ideal.resize(n, 0.0);
+        self.y_re.fill(0.0);
+        self.y_im.fill(0.0);
+        self.ideal.fill(0.0);
+    }
+}
 
 /// Superpose client payloads through the round's channel realisation.
 ///
 /// `payloads[k]` is client k's decimal payload (all equal length N).
 /// Returns the aggregated MEAN vector (length N) and diagnostics.
+///
+/// Convenience wrapper over [`aggregate_plane_into`] (sequential, fresh
+/// buffers) — tests, examples and one-shot callers.  The coordinator's
+/// round loop uses the plane/scratch form directly.
 ///
 /// Silenced clients (truncated inversion) contribute nothing; the mean is
 /// over actual participants.  If every client is silenced the aggregate is
@@ -34,59 +68,83 @@ pub fn aggregate(
     round: &RoundChannel,
     rng: &mut Rng,
 ) -> (Vec<f32>, AggregateStats) {
+    let plane = PayloadPlane::from_rows(payloads);
+    let mut scratch = OtaScratch::new();
+    let stats = aggregate_plane_into(&plane, round, rng, &mut scratch, 1);
+    (std::mem::take(&mut scratch.y_re), stats)
+}
+
+/// The round-loop form of the analog OTA aggregation: payloads live in a
+/// contiguous [`PayloadPlane`], all server buffers come from `scratch`
+/// (zero heap allocation once warm), and the element axis is
+/// chunk-parallel for `threads > 1`.
+///
+/// On return `scratch.y_re` holds the aggregated mean.  For a fixed seed
+/// the result is bit-identical to the sequential scalar path at every
+/// thread count (see the `kernels` module determinism contract; enforced
+/// by `rust/tests/kernels.rs`).
+pub fn aggregate_plane_into(
+    plane: &PayloadPlane,
+    round: &RoundChannel,
+    rng: &mut Rng,
+    scratch: &mut OtaScratch,
+    threads: usize,
+) -> AggregateStats {
     assert_eq!(
-        payloads.len(),
+        plane.k(),
         round.clients.len(),
         "one payload per client required"
     );
-    let n = payloads.first().map(|p| p.len()).unwrap_or(0);
-    for (k, p) in payloads.iter().enumerate() {
-        assert_eq!(p.len(), n, "payload {k} length mismatch");
-    }
-
-    // --- superposition: y = Σ_k g_k · x_k  (complex accumulate) ---------
-    let mut y_re = vec![0.0f32; n];
-    let mut y_im = vec![0.0f32; n];
-    let mut participants = 0usize;
-    let mut ideal = vec![0.0f32; n]; // noise-free, misalignment-free mean
-    for (k, payload) in payloads.iter().enumerate() {
-        if let Some(g) = round.clients[k].effective_gain {
-            tensor::axpy(&mut y_re, g.re, payload);
-            tensor::axpy(&mut y_im, g.im, payload);
-            tensor::axpy(&mut ideal, 1.0, payload);
-            participants += 1;
+    let n = plane.n();
+    scratch.reset(n);
+    scratch.active.clear();
+    for (k, c) in round.clients.iter().enumerate() {
+        if let Some(g) = c.effective_gain {
+            scratch.active.push((k, g));
         }
     }
-
+    let participants = scratch.active.len();
     let mut stats = AggregateStats {
         participants,
         channel_uses: n as u64,
         ..Default::default()
     };
     if participants == 0 {
-        return (vec![0.0f32; n], stats);
+        return stats;
     }
 
+    // --- superposition: y = Σ_k g_k · x_k (fused complex accumulate) ----
+    fused::superpose(
+        plane,
+        &scratch.active,
+        &mut scratch.y_re,
+        &mut scratch.y_im,
+        &mut scratch.ideal,
+        threads,
+    );
+
     // --- receiver noise calibrated to received signal power -------------
-    let signal_power = (tensor::sq_norm(&y_re) + tensor::sq_norm(&y_im)) / n as f64;
+    // (f64 reduction stays sequential: its summation order is part of the
+    // bit-exact contract and it is cheap relative to the sweeps above.)
+    let signal_power =
+        (tensor::sq_norm(&scratch.y_re) + tensor::sq_norm(&scratch.y_im)) / n as f64;
     let noise_var = round.noise_var(signal_power as f32);
     stats.signal_power = signal_power;
     stats.noise_var = noise_var as f64;
     if noise_var > 0.0 {
-        // CN(0, var): var/2 per component.  Noise is generated into a
-        // reused buffer with the pairwise Box-Muller fill (§Perf: 26%
-        // faster than per-element draws on this path).
+        // CN(0, var): var/2 per component, both components in one
+        // skip-ahead-parallel pairwise Box-Muller sweep (§Perf; draws
+        // exactly match the sequential re-then-im fill).
         let std = (noise_var * 0.5).sqrt();
-        rng.add_normal(&mut y_re, std);
-        rng.add_normal(&mut y_im, std);
+        rng.add_normal2(&mut scratch.y_re, &mut scratch.y_im, std, threads);
     }
 
     // --- demodulate: real part, scale to the mean ------------------------
     let scale = 1.0 / participants as f32;
-    tensor::scale(&mut y_re, scale);
-    tensor::scale(&mut ideal, scale);
-    stats.mse_vs_ideal = tensor::mse(&y_re, &ideal);
-    (y_re, stats)
+    tensor::scale_par(&mut scratch.y_re, scale, threads);
+    tensor::scale_par(&mut scratch.ideal, scale, threads);
+    stats.mse_vs_ideal = tensor::mse(&scratch.y_re, &scratch.ideal);
+    stats
 }
 
 /// Effective-gain view for the OTA artifact (`ota_k15.hlo.txt`): the PJRT
@@ -212,5 +270,28 @@ mod tests {
         let rc = perfect_round(2, 20.0);
         let mut rng = Rng::seed_from(14);
         let _ = aggregate(&[vec![0.0; 3], vec![0.0; 4]], &rc, &mut rng);
+    }
+
+    #[test]
+    fn plane_path_matches_wrapper_for_any_thread_count() {
+        // large even N: exercises the chunk-parallel superposition AND the
+        // skip-ahead parallel noise fill (20 dB SNR => noise_var > 0)
+        let ps = payloads(15, 20_000, 77);
+        let rc = perfect_round(15, 20.0);
+        let mut r0 = Rng::seed_from(5);
+        let (want, want_stats) = aggregate(&ps, &rc, &mut r0);
+        let plane = crate::kernels::PayloadPlane::from_rows(&ps);
+        let mut scratch = OtaScratch::new();
+        for threads in [1usize, 2, 4] {
+            let mut rng = Rng::seed_from(5);
+            let stats = aggregate_plane_into(&plane, &rc, &mut rng, &mut scratch, threads);
+            assert_eq!(scratch.y_re, want, "threads={threads}");
+            assert_eq!(stats.participants, want_stats.participants);
+            assert_eq!(
+                stats.mse_vs_ideal.to_bits(),
+                want_stats.mse_vs_ideal.to_bits(),
+                "threads={threads}"
+            );
+        }
     }
 }

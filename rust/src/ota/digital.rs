@@ -8,6 +8,7 @@
 //! — before it can average.  This conversion step, and the K× channel
 //! uses, are exactly the overheads the paper's analog scheme eliminates.
 
+use crate::kernels::{par, PayloadPlane};
 use crate::ota::AggregateStats;
 use crate::quant::{fixed, float, Format, Precision};
 use crate::tensor;
@@ -109,6 +110,60 @@ pub fn aggregate(
     (acc, stats)
 }
 
+/// Round-loop form of the digital baseline: encode→decode is fused per
+/// element straight out of the payload plane into `out` (no materialised
+/// code or decode vectors — zero heap allocation once `out` is warm), the
+/// element axis chunk-parallel per client sweep.
+///
+/// Bit-identical to [`aggregate`] on the same payloads for any `threads`:
+/// `decode(encode(v))` is exactly the fake-quant value the frame
+/// round-trip produces, and the accumulation order over clients is the
+/// same ascending sweep.
+pub fn aggregate_plane_into(
+    plane: &PayloadPlane,
+    precisions: &[Precision],
+    out: &mut Vec<f32>,
+    threads: usize,
+) -> AggregateStats {
+    assert_eq!(plane.k(), precisions.len());
+    let n = plane.n();
+    let k = plane.k();
+    out.resize(n, 0.0);
+    out.fill(0.0);
+    let mut stats = AggregateStats::default();
+    for (row_i, &p) in precisions.iter().enumerate() {
+        let row = plane.row(row_i);
+        stats.channel_uses += n as u64;
+        stats.bits_transmitted += n as u64 * p.bits() as u64;
+        match p.format() {
+            Format::FixedPoint => {
+                let ap = fixed::params(row, p.bits());
+                let max_code = p.max_code();
+                par::par_chunks_mut(threads, out.as_mut_slice(), |off, chunk| {
+                    let r = &row[off..off + chunk.len()];
+                    for (o, &v) in chunk.iter_mut().zip(r.iter()) {
+                        *o += fixed::decode(fixed::encode(v, ap, max_code), ap);
+                    }
+                });
+            }
+            Format::FloatTrunc | Format::Identity => {
+                let mask = float::mask(p.bits()).expect("validated level");
+                par::par_chunks_mut(threads, out.as_mut_slice(), |off, chunk| {
+                    let r = &row[off..off + chunk.len()];
+                    for (o, &v) in chunk.iter_mut().zip(r.iter()) {
+                        *o += f32::from_bits(v.to_bits() & mask);
+                    }
+                });
+            }
+        }
+    }
+    if k > 0 {
+        tensor::scale_par(out, 1.0 / k as f32, threads);
+    }
+    stats.participants = k;
+    stats
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,5 +218,22 @@ mod tests {
         let (agg, stats) = aggregate(&[], &[]);
         assert!(agg.is_empty());
         assert_eq!(stats.participants, 0);
+    }
+
+    #[test]
+    fn plane_path_matches_frame_path_bitwise() {
+        let raw: Vec<Vec<f32>> = (0..6).map(|i| payload(20_000, 70 + i)).collect();
+        let ps: Vec<Precision> =
+            [32u8, 24, 16, 12, 8, 4].iter().map(|&b| Precision::of(b)).collect();
+        let (want, want_stats) = aggregate(&raw, &ps);
+        let plane = PayloadPlane::from_rows(&raw);
+        let mut out = Vec::new();
+        for threads in [1usize, 4] {
+            let stats = aggregate_plane_into(&plane, &ps, &mut out, threads);
+            assert_eq!(out, want, "threads={threads}");
+            assert_eq!(stats.participants, want_stats.participants);
+            assert_eq!(stats.channel_uses, want_stats.channel_uses);
+            assert_eq!(stats.bits_transmitted, want_stats.bits_transmitted);
+        }
     }
 }

@@ -13,6 +13,13 @@
 //!   de-quantizes to f32 and averages.  K× the channel uses, plus explicit
 //!   per-client precision conversion at the server (the overhead the paper
 //!   eliminates).
+//!
+//! Both paths expose two entries: a convenience form over `&[Vec<f32>]`
+//! (tests/examples) and the round-loop `*_plane_into` form over a
+//! contiguous [`crate::kernels::PayloadPlane`] with caller-owned scratch —
+//! fused, chunk-parallel, allocation-free once warm, and bit-identical to
+//! the convenience form for any thread count (kernels-layer determinism
+//! contract).
 
 pub mod analog;
 pub mod digital;

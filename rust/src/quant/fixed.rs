@@ -58,6 +58,17 @@ pub fn fake_quant_inplace(w: &mut [f32], bits: u8) {
     fake_quant_inplace_mode(w, bits, false);
 }
 
+/// One element of Algorithm-2 fake-quantization, in the exact oracle op
+/// order: div, add, round, clip, sub, mul.  The SINGLE source of truth for
+/// the bit-exactness contract — both the in-place and the fused
+/// quantize-into sweeps call this.
+#[inline]
+fn fake_quant_element(v: f32, p: AffineParams, levels: f32, nearest: bool) -> f32 {
+    let pre = v / p.scale + p.zero_point;
+    let q = if nearest { pre.round_ties_even() } else { pre.floor() };
+    (q.clamp(0.0, levels) - p.zero_point) * p.scale
+}
+
 /// Fake-quantize in place with selectable rounding.
 ///
 /// `nearest = false` — Algorithm 2 verbatim (floor): transmission payloads,
@@ -69,11 +80,32 @@ pub fn fake_quant_inplace_mode(w: &mut [f32], bits: u8, nearest: bool) {
     let p = params(w, bits);
     let levels = ((1u64 << bits) - 1) as f32;
     for v in w.iter_mut() {
-        // Keep the exact oracle op order: div, add, round, clip, sub, mul.
-        let pre = *v / p.scale + p.zero_point;
-        let q = if nearest { pre.round_ties_even() } else { pre.floor() };
-        *v = (q.clamp(0.0, levels) - p.zero_point) * p.scale;
+        *v = fake_quant_element(*v, p, levels, nearest);
     }
+}
+
+/// Fused out-of-place fake-quantization: reads `src`, writes the
+/// de-quantized decimals straight into `dst` (e.g. a payload-plane row),
+/// skipping the copy pass of the copy-then-inplace idiom.  Bit-identical
+/// to [`fake_quant_inplace_mode`] on a copy of `src`, for any `threads`:
+/// the affine parameters come from an exact min/max reduction and the map
+/// itself is elementwise.
+pub fn fake_quant_into_mode(
+    dst: &mut [f32],
+    src: &[f32],
+    bits: u8,
+    nearest: bool,
+    threads: usize,
+) {
+    assert_eq!(dst.len(), src.len());
+    let p = params(src, bits);
+    let levels = ((1u64 << bits) - 1) as f32;
+    crate::kernels::par::par_chunks_mut(threads, dst, |off, chunk| {
+        let s = &src[off..off + chunk.len()];
+        for (d, &v) in chunk.iter_mut().zip(s.iter()) {
+            *d = fake_quant_element(v, p, levels, nearest);
+        }
+    });
 }
 
 /// Quantize a full tensor to integer codes + params (digital baseline path:

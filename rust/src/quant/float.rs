@@ -34,6 +34,20 @@ pub fn truncate_inplace(w: &mut [f32], bits: u8) {
     }
 }
 
+/// Fused out-of-place truncation: reads `src`, writes truncated values
+/// into `dst` (no copy pass).  Elementwise, so bit-identical to
+/// [`truncate_inplace`] on a copy for any `threads`.
+pub fn truncate_into(dst: &mut [f32], src: &[f32], bits: u8, threads: usize) {
+    assert_eq!(dst.len(), src.len());
+    let m = mask(bits).expect("validated precision level");
+    crate::kernels::par::par_chunks_mut(threads, dst, |off, chunk| {
+        let s = &src[off..off + chunk.len()];
+        for (d, &v) in chunk.iter_mut().zip(s.iter()) {
+            *d = truncate(v, m);
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

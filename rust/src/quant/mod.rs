@@ -163,6 +163,41 @@ pub fn fake_quant_layout(
     out
 }
 
+/// Fused quantize+modulate: fake-quantize `src` directly into `dst` (no
+/// copy pass, no allocation) — the hot-path form that writes a client's
+/// decimal payload straight into its payload-plane row.  Bit-identical to
+/// `fake_quant_mode(src, p, r)` for any `threads` (see the kernels-layer
+/// determinism contract).
+pub fn fake_quant_into(dst: &mut [f32], src: &[f32], p: Precision, r: Rounding, threads: usize) {
+    assert_eq!(dst.len(), src.len());
+    match p.format() {
+        Format::Identity => dst.copy_from_slice(src),
+        Format::FloatTrunc => float::truncate_into(dst, src, p.bits(), threads),
+        Format::FixedPoint => {
+            fixed::fake_quant_into_mode(dst, src, p.bits(), r == Rounding::Nearest, threads)
+        }
+    }
+}
+
+/// Per-layer fused form of [`fake_quant_into`]: every named tensor of the
+/// layout gets its own scale/zero-point, written straight from `src` into
+/// `dst`.  Bit-identical to [`fake_quant_layout`] for any `threads`.
+pub fn fake_quant_layout_into(
+    dst: &mut [f32],
+    src: &[f32],
+    layout: &crate::tensor::ParamLayout,
+    p: Precision,
+    r: Rounding,
+    threads: usize,
+) {
+    assert_eq!(src.len(), layout.total, "flat vector / layout mismatch");
+    assert_eq!(dst.len(), layout.total, "flat vector / layout mismatch");
+    for e in &layout.entries {
+        let range = e.offset..e.offset + e.size;
+        fake_quant_into(&mut dst[range.clone()], &src[range], p, r, threads);
+    }
+}
+
 /// Worst-case quantization step for a tensor at precision `p` — used for
 /// error budgeting in tests and the OTA MSE diagnostics.
 pub fn quant_step(w: &[f32], p: Precision) -> f32 {
@@ -251,5 +286,52 @@ mod tests {
         assert_eq!(Precision::of(8).max_code(), 255);
         assert_eq!(Precision::of(4).max_code(), 15);
         assert_eq!(Precision::of(2).max_code(), 3);
+    }
+
+    #[test]
+    fn fused_into_bit_identical_to_copy_then_inplace() {
+        let mut rng = crate::rng::Rng::seed_from(23);
+        let mut w = vec![0.0f32; 20_000];
+        rng.fill_normal(&mut w, 0.0, 2.0);
+        for bits in SUPPORTED_LEVELS {
+            let p = Precision::of(bits);
+            for r in [Rounding::Floor, Rounding::Nearest] {
+                let want = fake_quant_mode(&w, p, r);
+                for threads in [1usize, 4] {
+                    let mut dst = vec![f32::NAN; w.len()];
+                    fake_quant_into(&mut dst, &w, p, r, threads);
+                    let same = dst
+                        .iter()
+                        .zip(want.iter())
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(same, "bits={bits} rounding={r:?} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_layout_into_bit_identical() {
+        let layout = crate::tensor::ParamLayout::from_manifest(
+            &crate::json::parse(r#"[["w", [100, 70]], ["b", [70]], ["head", [5000]]]"#)
+                .unwrap(),
+        )
+        .unwrap();
+        let mut rng = crate::rng::Rng::seed_from(24);
+        let mut w = vec![0.0f32; layout.total];
+        rng.fill_normal(&mut w, 0.0, 1.0);
+        for bits in [16u8, 8, 4] {
+            let p = Precision::of(bits);
+            let want = fake_quant_layout(&w, &layout, p, Rounding::Nearest);
+            for threads in [1usize, 4] {
+                let mut dst = vec![f32::NAN; w.len()];
+                fake_quant_layout_into(&mut dst, &w, &layout, p, Rounding::Nearest, threads);
+                let same = dst
+                    .iter()
+                    .zip(want.iter())
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "bits={bits} threads={threads}");
+            }
+        }
     }
 }

@@ -188,6 +188,106 @@ impl Rng {
             out[i] += self.normal_f32(0.0, std);
         }
     }
+
+    /// Advance the generator by `draws` raw u64 outputs (the spare-normal
+    /// cache is untouched).  Used to fast-forward worker clones to a known
+    /// position in the stream.
+    pub fn skip(&mut self, draws: u64) {
+        for _ in 0..draws {
+            self.next_u64();
+        }
+    }
+
+    /// Clone the generator fast-forwarded by `draws` raw outputs, with the
+    /// spare-normal cache cleared (worker clones only ever execute the
+    /// pairwise Box-Muller loop, which never consults the cache).
+    pub fn clone_skip(&self, draws: u64) -> Rng {
+        let mut r = Rng { s: self.s, spare_normal: None };
+        r.skip(draws);
+        r
+    }
+
+    /// Add N(0, std²) noise to `re` then `im` — bit-identical to
+    /// `self.add_normal(re, std); self.add_normal(im, std);` for EVERY
+    /// thread count, parallel when profitable.
+    ///
+    /// Exactness argument: for even lengths the sequential pass consumes
+    /// exactly one u64 draw per element (two per Box-Muller pair: u1, u2)
+    /// and never touches the spare-normal cache, so the draw position of
+    /// every element is known in advance — element `i` of `re` starts at
+    /// draw `i`, element `i` of `im` at draw `n + i`.  A single cursor
+    /// sweep clones the generator state at each pair-aligned chunk
+    /// boundary (in draw order), workers fill their disjoint chunks with
+    /// exactly the draws the sequential pass would have used there, and
+    /// the owning generator lands past all `2n` draws.  Odd lengths
+    /// interact with the spare
+    /// cache and fall back to the sequential pass (the OTA payload length
+    /// is the model parameter count — even for every shipped variant).
+    pub fn add_normal2(&mut self, re: &mut [f32], im: &mut [f32], std: f32, threads: usize) {
+        use crate::kernels::par;
+        assert_eq!(re.len(), im.len(), "noise component length mismatch");
+        let n = re.len();
+        let total = 2 * n;
+        let chunks = par::effective_chunks(threads, total);
+        if chunks <= 1 || n % 2 != 0 {
+            self.add_normal(re, std);
+            self.add_normal(im, std);
+            return;
+        }
+        // One cursor sweeps the stream ONCE on this thread, cloning the
+        // generator state at each segment boundary (boundaries are visited
+        // in increasing draw order), so workers start with zero skipping
+        // and the total fast-forward work is O(2n) instead of O(threads·n).
+        let mut cursor = self.clone_skip(0);
+        let mut pos = 0u64;
+        let pairs = total / 2;
+        std::thread::scope(|s| {
+            let mut re_rest = re;
+            let mut im_rest = im;
+            for c in 0..chunks {
+                // global element range of this chunk over the virtual
+                // [re || im] stream, aligned to Box-Muller pairs
+                let p0 = par::chunk_start(pairs, chunks, c);
+                let p1 = p0 + par::chunk_len(pairs, chunks, c);
+                let (g0, g1) = (2 * p0, 2 * p1);
+                let re_lo = g0.min(n);
+                let re_hi = g1.min(n);
+                let im_lo = g0.max(n) - n;
+                let im_hi = g1.max(n) - n;
+                let (re_part, rest) =
+                    std::mem::take(&mut re_rest).split_at_mut(re_hi - re_lo);
+                re_rest = rest;
+                let (im_part, rest) =
+                    std::mem::take(&mut im_rest).split_at_mut(im_hi - im_lo);
+                im_rest = rest;
+                let re_rng = if re_part.is_empty() {
+                    None
+                } else {
+                    cursor.skip(re_lo as u64 - pos);
+                    pos = re_lo as u64;
+                    Some(cursor.clone())
+                };
+                let im_rng = if im_part.is_empty() {
+                    None
+                } else {
+                    cursor.skip((n + im_lo) as u64 - pos);
+                    pos = (n + im_lo) as u64;
+                    Some(cursor.clone())
+                };
+                s.spawn(move || {
+                    if let Some(mut r) = re_rng {
+                        r.add_normal(re_part, std);
+                    }
+                    if let Some(mut r) = im_rng {
+                        r.add_normal(im_part, std);
+                    }
+                });
+            }
+        });
+        // land the owning generator exactly where the sequential pass would
+        cursor.skip(total as u64 - pos);
+        self.s = cursor.s;
+    }
 }
 
 #[cfg(test)]
@@ -292,6 +392,58 @@ mod tests {
             assert_eq!(sorted.len(), 5, "duplicates in {ks:?}");
             assert!(ks.iter().all(|&i| i < 15));
         }
+    }
+
+    #[test]
+    fn clone_skip_matches_manual_advance() {
+        let base = Rng::seed_from(77);
+        let mut skipped = base.clone_skip(1000);
+        let mut manual = base.clone();
+        for _ in 0..1000 {
+            manual.next_u64();
+        }
+        for _ in 0..16 {
+            assert_eq!(skipped.next_u64(), manual.next_u64());
+        }
+    }
+
+    #[test]
+    fn add_normal2_bit_identical_any_thread_count() {
+        // large enough to cross the parallel threshold, even length
+        for n in [20_000usize, 16_384] {
+            let mut want_re = vec![0.25f32; n];
+            let mut want_im = vec![-0.5f32; n];
+            let mut seq = Rng::seed_from(4242);
+            seq.add_normal(&mut want_re, 0.7);
+            seq.add_normal(&mut want_im, 0.7);
+            for threads in [1usize, 2, 4, 7] {
+                let mut re = vec![0.25f32; n];
+                let mut im = vec![-0.5f32; n];
+                let mut rng = Rng::seed_from(4242);
+                rng.add_normal2(&mut re, &mut im, 0.7, threads);
+                assert_eq!(re, want_re, "n={n} threads={threads}");
+                assert_eq!(im, want_im, "n={n} threads={threads}");
+                // generator state must also end up identical
+                assert_eq!(rng.next_u64(), seq.clone().next_u64());
+            }
+        }
+    }
+
+    #[test]
+    fn add_normal2_odd_length_falls_back_exactly() {
+        let n = 12_345usize; // odd: exercises the spare-normal tail path
+        let mut want_re = vec![0.0f32; n];
+        let mut want_im = vec![0.0f32; n];
+        let mut seq = Rng::seed_from(99);
+        seq.add_normal(&mut want_re, 1.3);
+        seq.add_normal(&mut want_im, 1.3);
+        let mut re = vec![0.0f32; n];
+        let mut im = vec![0.0f32; n];
+        let mut rng = Rng::seed_from(99);
+        rng.add_normal2(&mut re, &mut im, 1.3, 4);
+        assert_eq!(re, want_re);
+        assert_eq!(im, want_im);
+        assert_eq!(rng.next_u64(), seq.next_u64());
     }
 
     #[test]

@@ -13,6 +13,14 @@
 
 pub mod manifest;
 
+// PJRT bindings: the real vendored `xla` crate with `--features pjrt`, an
+// API-compatible in-tree stub otherwise (see xla_stub.rs) so the crate
+// builds and tests in checkouts without the vendored toolchain.  Public
+// because `Runtime::executable` exposes `xla::PjRtLoadedExecutable`.
+#[cfg(not(feature = "pjrt"))]
+#[path = "xla_stub.rs"]
+pub mod xla;
+
 pub use manifest::{Manifest, OtaInfo, VariantInfo};
 
 use std::cell::RefCell;
@@ -276,11 +284,27 @@ impl Runtime {
         p: crate::quant::Precision,
         r: crate::quant::Rounding,
     ) -> Result<Vec<f32>> {
+        self.quantize_model_par(variant, theta, p, r, 1)
+    }
+
+    /// Chunk-parallel form of [`quantize_model`] using the fused
+    /// quantize-into kernels; bit-identical for any `threads` (kernels
+    /// determinism contract).
+    pub fn quantize_model_par(
+        &self,
+        variant: &str,
+        theta: &[f32],
+        p: crate::quant::Precision,
+        r: crate::quant::Rounding,
+        threads: usize,
+    ) -> Result<Vec<f32>> {
         let v = self.manifest.variant(variant)?;
         if theta.len() != v.param_count {
             bail!("theta len {} != param_count {}", theta.len(), v.param_count);
         }
-        Ok(crate::quant::fake_quant_layout(theta, &v.layout, p, r))
+        let mut out = vec![0.0f32; theta.len()];
+        crate::quant::fake_quant_layout_into(&mut out, theta, &v.layout, p, r, threads);
+        Ok(out)
     }
 
     // ---------------------------------------------------------------- OTA

@@ -97,10 +97,29 @@ pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
     }
 }
 
+/// y += alpha * x, chunk-parallel (bit-identical to [`axpy`] for any
+/// thread count: elementwise work, deterministic chunk grid).
+pub fn axpy_par(y: &mut [f32], alpha: f32, x: &[f32], threads: usize) {
+    assert_eq!(y.len(), x.len());
+    crate::kernels::par::par_chunks_mut(threads, y, |off, chunk| {
+        axpy(chunk, alpha, &x[off..off + chunk.len()]);
+    });
+}
+
 /// y = x (copy)
 pub fn assign(y: &mut [f32], x: &[f32]) {
     assert_eq!(y.len(), x.len());
     y.copy_from_slice(x);
+}
+
+/// dst = a - b, elementwise (the update-payload build Δθ = θ_k - θ_start,
+/// written straight into a payload-plane row — no intermediate vector).
+pub fn diff_into(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(dst.len(), a.len());
+    assert_eq!(dst.len(), b.len());
+    for i in 0..dst.len() {
+        dst[i] = a[i] - b[i];
+    }
 }
 
 /// x *= alpha
@@ -108,6 +127,13 @@ pub fn scale(x: &mut [f32], alpha: f32) {
     for xi in x.iter_mut() {
         *xi *= alpha;
     }
+}
+
+/// x *= alpha, chunk-parallel (bit-identical to [`scale`]).
+pub fn scale_par(x: &mut [f32], alpha: f32, threads: usize) {
+    crate::kernels::par::par_chunks_mut(threads, x, |_, chunk| {
+        scale(chunk, alpha);
+    });
 }
 
 /// sum of squares
@@ -207,5 +233,27 @@ mod tests {
         assert!((sq_norm(&y) - (1.5 * 1.5 + 4.0 + 6.25) as f64).abs() < 1e-9);
         assert_eq!(max_abs_diff(&[1.0, 5.0], &[2.0, 3.0]), 2.0);
         assert!((mse(&[1.0, 3.0], &[2.0, 5.0]) - 2.5).abs() < 1e-12);
+        let mut d = vec![0.0f32; 2];
+        diff_into(&mut d, &[3.0, 1.0], &[1.0, 4.0]);
+        assert_eq!(d, vec![2.0, -3.0]);
+    }
+
+    #[test]
+    fn par_kernels_match_sequential_bitwise() {
+        let mut rng = crate::rng::Rng::seed_from(31);
+        let n = 20_000;
+        let mut x = vec![0.0f32; n];
+        rng.fill_normal(&mut x, 0.0, 3.0);
+        let mut base = vec![0.0f32; n];
+        rng.fill_normal(&mut base, 0.0, 1.0);
+        let mut want = base.clone();
+        axpy(&mut want, 0.37, &x);
+        scale(&mut want, 1.0 / 7.0);
+        for threads in [1usize, 4] {
+            let mut got = base.clone();
+            axpy_par(&mut got, 0.37, &x, threads);
+            scale_par(&mut got, 1.0 / 7.0, threads);
+            assert_eq!(got, want, "threads={threads}");
+        }
     }
 }

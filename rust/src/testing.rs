@@ -12,6 +12,49 @@ use crate::rng::Rng;
 /// Default number of cases per property.
 pub const CASES: usize = 64;
 
+/// The PRE-KERNEL-LAYER analog OTA aggregation, replicated verbatim:
+/// per-client axpy sweeps, sequential f64 power reduction, sequential
+/// re-then-im pairwise Box-Muller noise, sequential scaling.  This is the
+/// single source of truth for "the historical scalar path" — the golden
+/// tests pin the fused kernels against it bit-for-bit and the `hotpaths`
+/// bench measures speedups relative to it, so both always reference the
+/// same baseline.  Returns (mean vector, participants, mse_vs_ideal).
+pub fn reference_ota_aggregate(
+    payloads: &[Vec<f32>],
+    round: &crate::channel::RoundChannel,
+    rng: &mut Rng,
+) -> (Vec<f32>, usize, f64) {
+    use crate::tensor;
+    let n = payloads.first().map(|p| p.len()).unwrap_or(0);
+    let mut y_re = vec![0.0f32; n];
+    let mut y_im = vec![0.0f32; n];
+    let mut ideal = vec![0.0f32; n];
+    let mut participants = 0usize;
+    for (k, payload) in payloads.iter().enumerate() {
+        if let Some(g) = round.clients[k].effective_gain {
+            tensor::axpy(&mut y_re, g.re, payload);
+            tensor::axpy(&mut y_im, g.im, payload);
+            tensor::axpy(&mut ideal, 1.0, payload);
+            participants += 1;
+        }
+    }
+    if participants == 0 {
+        return (y_re, 0, 0.0);
+    }
+    let signal_power = (tensor::sq_norm(&y_re) + tensor::sq_norm(&y_im)) / n as f64;
+    let noise_var = round.noise_var(signal_power as f32);
+    if noise_var > 0.0 {
+        let std = (noise_var * 0.5).sqrt();
+        rng.add_normal(&mut y_re, std);
+        rng.add_normal(&mut y_im, std);
+    }
+    let scale = 1.0 / participants as f32;
+    tensor::scale(&mut y_re, scale);
+    tensor::scale(&mut ideal, scale);
+    let mse = tensor::mse(&y_re, &ideal);
+    (y_re, participants, mse)
+}
+
 /// Run `prop` on `cases` random inputs produced by `gen`.
 /// Panics with the (shrunk-by-regeneration) failing case index on failure.
 pub fn check<T: std::fmt::Debug, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)

@@ -1,0 +1,138 @@
+//! Steady-state allocation audit for the server round path.
+//!
+//! A counting global allocator wraps the system allocator; after a warmup
+//! pass that grows every scratch buffer to capacity, the full server-side
+//! round path (selection → channel draw → analog/digital/ideal
+//! aggregation → global-model update) must perform ZERO heap allocations.
+//!
+//! Scope: this is the post-training half of `Coordinator::round()` — the
+//! client PJRT dispatch (`Runtime::train_step`) allocates literals inside
+//! the runtime and is explicitly outside the arena contract (and cannot
+//! run without artifacts anyway).  `threads = 1` (the steady-state
+//! default): spawning scoped worker threads allocates their stacks, which
+//! is the documented cost of opting into `threads > 1`.
+//!
+//! This file intentionally contains a single #[test]: the counter is
+//! process-global and other tests running in parallel would pollute it.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+use mpota::channel::{pilot, ChannelConfig, RoundChannel};
+use mpota::fl::{fedavg, Selection};
+use mpota::kernels::PayloadPlane;
+use mpota::ota;
+use mpota::quant::{self, Precision, Rounding};
+use mpota::rng::Rng;
+use mpota::tensor;
+
+#[test]
+fn steady_state_round_path_is_allocation_free() {
+    let k = 8usize;
+    let n = 10_000usize;
+    let cfg = ChannelConfig::default();
+    let layout = mpota::tensor::ParamLayout::from_manifest(
+        &mpota::json::parse(r#"[["w", [99, 100]], ["b", [100]]]"#).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(layout.total, n);
+
+    // run-level state (allocated once, like Coordinator::new does)
+    let root = Rng::seed_from(42);
+    let mut select_rng = root.stream("select");
+    let mut channel_rng = root.stream("channel");
+    let mut noise_rng = root.stream("noise");
+    let mut theta = vec![0.0f32; n];
+    root.stream("init").fill_normal(&mut theta, 0.0, 0.5);
+    let precisions: Vec<Precision> =
+        (0..k).map(|i| Precision::of([16u8, 8, 4][i % 3])).collect();
+
+    // the round scratch arena
+    let mut selected: Vec<usize> = Vec::new();
+    let mut plane = PayloadPlane::new();
+    let mut round_channel = RoundChannel::empty();
+    let pilot_seq = pilot::pilot_sequence(cfg.pilot_len);
+    let mut ota_scratch = ota::analog::OtaScratch::new();
+    let mut agg = Vec::new();
+
+    let selection = Selection::UniformK(k);
+    let mut round = |t: usize,
+                     theta: &mut Vec<f32>,
+                     select_rng: &mut Rng,
+                     channel_rng: &mut Rng,
+                     noise_rng: &mut Rng| {
+        // selection + payload build (stand-in for the client loop: fused
+        // re-quantize the broadcast model into each plane row)
+        selection.select_into(k, t, select_rng, &mut selected);
+        plane.reset(selected.len(), n);
+        for slot in 0..selected.len() {
+            let p = precisions[selected[slot]];
+            quant::fake_quant_layout_into(
+                plane.row_mut(slot),
+                theta.as_slice(),
+                &layout,
+                p,
+                Rounding::Nearest,
+                1,
+            );
+        }
+        // analog OTA path
+        round_channel.draw_into(&cfg, selected.len(), channel_rng, &pilot_seq);
+        let stats = ota::analog::aggregate_plane_into(
+            &plane,
+            &round_channel,
+            noise_rng,
+            &mut ota_scratch,
+            1,
+        );
+        if stats.participants > 0 {
+            tensor::axpy_par(theta, 1.0, &ota_scratch.y_re, 1);
+        }
+        // digital + ideal baselines over the same plane
+        let active = &precisions[..selected.len()];
+        let dstats = ota::digital::aggregate_plane_into(&plane, active, &mut agg, 1);
+        assert_eq!(dstats.participants, selected.len());
+        fedavg::mean_plane_into(&plane, &mut agg, 1);
+        std::hint::black_box((&agg, stats.participants));
+    };
+
+    // warmup: two rounds grow every buffer to steady-state capacity
+    for t in 1..=2 {
+        round(t, &mut theta, &mut select_rng, &mut channel_rng, &mut noise_rng);
+    }
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for t in 3..=8 {
+        round(t, &mut theta, &mut select_rng, &mut channel_rng, &mut noise_rng);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state round path allocated {} times",
+        after - before
+    );
+}

@@ -9,6 +9,10 @@ use mpota::coordinator::Coordinator;
 use mpota::fl::Scheme;
 
 fn artifacts_present() -> bool {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature (PJRT execution stubbed)");
+        return false;
+    }
     let dir = std::path::PathBuf::from(
         std::env::var("MPOTA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
     );

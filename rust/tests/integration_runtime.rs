@@ -11,6 +11,10 @@ use mpota::runtime::Runtime;
 use mpota::channel::{ChannelConfig, RoundChannel};
 
 fn runtime() -> Option<Runtime> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature (PJRT execution stubbed)");
+        return None;
+    }
     let dir = std::path::PathBuf::from(
         std::env::var("MPOTA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
     );

@@ -1,0 +1,235 @@
+//! Kernel-layer golden + property tests: the fused, chunk-parallel round
+//! hot path must be BIT-IDENTICAL to the pre-refactor scalar path for a
+//! fixed seed — at threads = 1 (replicating the historical sequential
+//! implementation verbatim) and at threads > 1 (ordered chunk grids,
+//! skip-ahead noise).  A Coordinator-level golden (artifacts-gated) pins
+//! the same contract end-to-end through `Coordinator::run()`.
+
+use mpota::channel::{ChannelConfig, RoundChannel};
+use mpota::config::RunConfig;
+use mpota::coordinator::Coordinator;
+use mpota::fl::Scheme;
+use mpota::kernels::{fused, PayloadPlane};
+use mpota::ota::analog::{aggregate_plane_into, OtaScratch};
+use mpota::quant::{self, Precision, Rounding};
+use mpota::rng::Rng;
+use mpota::tensor;
+
+/// The pre-refactor scalar path lives in `mpota::testing` so the golden
+/// tests and the `hotpaths` bench pin against the SAME baseline.
+use mpota::testing::reference_ota_aggregate as pre_refactor_aggregate;
+
+fn gaussian_payloads(k: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from(seed);
+    (0..k)
+        .map(|_| {
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal(&mut v, 0.0, 1.0);
+            v
+        })
+        .collect()
+}
+
+#[test]
+fn analog_aggregation_bit_identical_to_pre_refactor() {
+    // shapes: large-even (parallel kernels + parallel noise), odd
+    // (noise falls back, superposition still chunks), small (all
+    // sequential), each with a truncation that silences some clients
+    let cases = [
+        (15usize, 20_000usize, 20.0f32, 0.5f32),
+        (8, 9_999, 10.0, 0.8),
+        (4, 100, 25.0, 0.1),
+    ];
+    for (ci, &(k, n, snr, trunc)) in cases.iter().enumerate() {
+        let payloads = gaussian_payloads(k, n, 100 + ci as u64);
+        let cfg = ChannelConfig {
+            snr_db: snr,
+            truncation: trunc,
+            ..Default::default()
+        };
+        let mut ch_rng = Rng::seed_from(200 + ci as u64);
+        let round = RoundChannel::draw(&cfg, k, &mut ch_rng);
+
+        let mut ref_rng = Rng::seed_from(300 + ci as u64);
+        let (want, want_parts, want_mse) =
+            pre_refactor_aggregate(&payloads, &round, &mut ref_rng);
+        let ref_next = ref_rng.next_u64();
+
+        let plane = PayloadPlane::from_rows(&payloads);
+        let mut scratch = OtaScratch::new();
+        for threads in [1usize, 2, 4] {
+            let mut rng = Rng::seed_from(300 + ci as u64);
+            let stats = aggregate_plane_into(&plane, &round, &mut rng, &mut scratch, threads);
+            assert_eq!(stats.participants, want_parts, "case {ci} threads {threads}");
+            assert_eq!(
+                scratch.y_re, want,
+                "case {ci} threads {threads}: aggregate diverged"
+            );
+            assert_eq!(
+                stats.mse_vs_ideal.to_bits(),
+                want_mse.to_bits(),
+                "case {ci} threads {threads}: mse diverged"
+            );
+            // generator must land on exactly the same stream position
+            if want_parts > 0 {
+                assert_eq!(rng.next_u64(), ref_next, "case {ci} threads {threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn payload_build_bit_identical_to_pre_refactor() {
+    // client-side payload construction: fused layout-quantize-into + fused
+    // diff vs the historical allocate-copy-quantize-subtract chain
+    let layout = mpota::tensor::ParamLayout::from_manifest(
+        &mpota::json::parse(r#"[["conv", [3, 3, 16]], ["dense", [400, 43]], ["b", [43]]]"#)
+            .unwrap(),
+    )
+    .unwrap();
+    let mut rng = Rng::seed_from(7);
+    let mut theta_global = vec![0.0f32; layout.total];
+    rng.fill_normal(&mut theta_global, 0.0, 0.5);
+    let mut theta_trained = theta_global.clone();
+    // pretend training moved the weights a bit
+    let mut delta = vec![0.0f32; layout.total];
+    rng.fill_normal(&mut delta, 0.0, 0.01);
+    tensor::axpy(&mut theta_trained, 1.0, &delta);
+
+    for bits in [16u8, 8, 4] {
+        let p = Precision::of(bits);
+        // pre-refactor chain
+        let theta_start = quant::fake_quant_layout(&theta_global, &layout, p, Rounding::Nearest);
+        let want: Vec<f32> = theta_trained
+            .iter()
+            .zip(theta_start.iter())
+            .map(|(a, b)| a - b)
+            .collect();
+        // fused chain at both thread counts
+        for threads in [1usize, 4] {
+            let mut start = vec![0.0f32; layout.total];
+            quant::fake_quant_layout_into(
+                &mut start,
+                &theta_global,
+                &layout,
+                p,
+                Rounding::Nearest,
+                threads,
+            );
+            let mut payload = vec![0.0f32; layout.total];
+            tensor::diff_into(&mut payload, &theta_trained, &start);
+            let same = payload
+                .iter()
+                .zip(want.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "bits={bits} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn property_fused_axpy2_matches_naive() {
+    mpota::testing::check(
+        "axpy2-vs-naive",
+        48,
+        |rng| {
+            let n = 1 + rng.below(600);
+            let mut x = vec![0.0f32; n];
+            rng.fill_normal(&mut x, 0.0, 3.0);
+            let g_re = rng.normal_f32(0.0, 1.0);
+            let g_im = rng.normal_f32(0.0, 1.0);
+            (x, g_re, g_im)
+        },
+        |(x, g_re, g_im)| {
+            let n = x.len();
+            let mut want_re = vec![0.5f32; n];
+            let mut want_im = vec![-0.5f32; n];
+            tensor::axpy(&mut want_re, *g_re, x);
+            tensor::axpy(&mut want_im, *g_im, x);
+            let mut y_re = vec![0.5f32; n];
+            let mut y_im = vec![-0.5f32; n];
+            fused::axpy2(
+                &mut y_re,
+                &mut y_im,
+                mpota::channel::C32::new(*g_re, *g_im),
+                x,
+            );
+            y_re == want_re && y_im == want_im
+        },
+    );
+}
+
+#[test]
+fn property_plane_roundtrip_preserves_rows() {
+    mpota::testing::check(
+        "plane-roundtrip",
+        32,
+        |rng| {
+            let k = 1 + rng.below(8);
+            let n = 1 + rng.below(300);
+            (0..k)
+                .map(|_| {
+                    let mut v = vec![0.0f32; n];
+                    rng.fill_normal(&mut v, 0.0, 2.0);
+                    v
+                })
+                .collect::<Vec<_>>()
+        },
+        |rows| {
+            let p = PayloadPlane::from_rows(rows);
+            p.k() == rows.len()
+                && p.rows().zip(rows.iter()).all(|(a, b)| a == b.as_slice())
+        },
+    );
+}
+
+// ---------------------------------------------------------------- golden
+// Coordinator-level determinism: threads = 1 must equal threads = 4 over a
+// full run, bit for bit, in round records and the final model.  Needs the
+// PJRT artifacts (skips gracefully like the other integration suites).
+
+fn artifacts_present() -> bool {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature (PJRT execution stubbed)");
+        return false;
+    }
+    let dir = std::path::PathBuf::from(
+        std::env::var("MPOTA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let ok = dir.join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+    }
+    ok
+}
+
+#[test]
+fn coordinator_run_identical_across_thread_counts() {
+    if !artifacts_present() {
+        return;
+    }
+    let run = |threads: usize| {
+        let mut cfg = RunConfig::default();
+        cfg.rounds = 2;
+        cfg.train_samples = 480;
+        cfg.test_samples = 96;
+        cfg.local_steps = 1;
+        cfg.scheme = Scheme::parse("16,8,4").unwrap();
+        cfg.seed = 1234;
+        cfg.threads = threads;
+        let mut coord = Coordinator::new(cfg).unwrap();
+        let report = coord.run().unwrap();
+        let records: Vec<(u64, u64, usize)> = report
+            .log
+            .rounds
+            .iter()
+            .map(|r| (r.train_loss.to_bits(), r.ota_mse.to_bits(), r.participants))
+            .collect();
+        let model: Vec<u32> = coord.global_model().iter().map(|v| v.to_bits()).collect();
+        (records, model)
+    };
+    let (rec1, model1) = run(1);
+    let (rec4, model4) = run(4);
+    assert_eq!(rec1, rec4, "round records diverged across thread counts");
+    assert_eq!(model1, model4, "final model diverged across thread counts");
+}
