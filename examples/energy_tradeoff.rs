@@ -3,16 +3,23 @@
 //! scheme's 4-bit-client accuracy against its energy saving vs the
 //! homogeneous 32-bit and 16-bit fleets.
 //!
+//! Multi-run idiom: ONE `Rc<Runtime>` (artifacts compile once) and ONE
+//! recycled `Arena` (server buffers allocate once) across all eight runs
+//! — the same machinery `mpota sweep` uses.
+//!
 //! ```sh
 //! cargo run --release --example energy_tradeoff -- --rounds 8
 //! ```
 
+use std::rc::Rc;
+
 use mpota::cli::Args;
 use mpota::config::RunConfig;
-use mpota::coordinator::{pretrain, Coordinator};
+use mpota::coordinator::pretrain;
 use mpota::fl::Scheme;
 use mpota::quant::Precision;
 use mpota::runtime::Runtime;
+use mpota::sim::{Arena, Experiment};
 
 fn main() -> anyhow::Result<()> {
     let mut args =
@@ -28,15 +35,15 @@ fn main() -> anyhow::Result<()> {
         "32,16,4", "16,8,4", "12,4,4", "24,8,4", // mixed with 4-bit clients
     ];
 
-    let pretrained = {
-        let runtime = Runtime::load(std::path::Path::new("artifacts"))?;
-        pretrain::ensure_pretrained(&runtime, &pretrain::PretrainConfig::default())?
-    };
+    let runtime = Rc::new(Runtime::load(std::path::Path::new("artifacts"))?);
+    let pretrained =
+        pretrain::ensure_pretrained(&runtime, &pretrain::PretrainConfig::default())?;
 
     println!(
         "{:<10} {:>10} {:>12} {:>12} {:>12}",
         "scheme", "acc@4bit", "energy (J)", "vs 32-bit", "vs 16-bit"
     );
+    let mut arena = Arena::default();
     for s in schemes {
         let mut cfg = RunConfig::default();
         cfg.rounds = rounds;
@@ -46,8 +53,11 @@ fn main() -> anyhow::Result<()> {
         cfg.local_steps = 2;
         cfg.lr = 0.02;
         cfg.init_params = Some(pretrained.clone());
-        let mut coord = Coordinator::new(cfg)?;
-        let report = coord.run()?;
+        let mut exp = Experiment::builder(cfg)
+            .runtime(runtime.clone())
+            .arena(arena)
+            .build()?;
+        let report = exp.run()?;
 
         // 4-bit client view: final global model requantized to 4 bits
         // (for schemes without 4-bit clients, evaluate it anyway — that is
@@ -59,8 +69,8 @@ fn main() -> anyhow::Result<()> {
         {
             Some(r) => r.accuracy,
             None => {
-                let q = coord.requantize_global(Precision::of(4));
-                coord.evaluate_model(&q)?.accuracy
+                let q = exp.requantize_global(Precision::of(4));
+                exp.evaluate_model(&q)?.accuracy
             }
         };
         println!(
@@ -71,6 +81,7 @@ fn main() -> anyhow::Result<()> {
             report.energy.saving_vs_32(),
             report.energy.saving_vs_16()
         );
+        arena = exp.into_arena();
     }
     Ok(())
 }

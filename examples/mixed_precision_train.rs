@@ -3,6 +3,8 @@
 //! rust coordinator → PJRT artifacts → Pallas quantization kernels —
 //! with pretrained initialization, logging the accuracy curve and the
 //! final requantization/energy report exactly as EXPERIMENTS.md records.
+//! Built on the `Experiment` session API; `--policy snr-adaptive` swaps
+//! the static scheme for the dynamic bit-selection policy.
 //!
 //! Defaults are sized for a single CPU core (~10 min); flags scale it up:
 //!
@@ -11,11 +13,14 @@
 //!     --scheme 16,8,4 --rounds 30 --snr-db 20
 //! ```
 
+use std::rc::Rc;
+
 use mpota::cli::Args;
 use mpota::config::RunConfig;
-use mpota::coordinator::{pretrain, Coordinator};
+use mpota::coordinator::pretrain;
 use mpota::fl::Scheme;
 use mpota::runtime::Runtime;
+use mpota::sim::{Experiment, ProgressPrinter};
 
 fn main() -> anyhow::Result<()> {
     // examples have no subcommand; feed a placeholder one
@@ -28,6 +33,9 @@ fn main() -> anyhow::Result<()> {
     } else {
         cfg.scheme = Scheme::parse("16,8,4")?;
     }
+    if let Some(p) = args.get("policy") {
+        cfg.policy = p.parse()?;
+    }
     cfg.train_samples = args.get_parse("train-samples", 2880usize)?;
     cfg.test_samples = args.get_parse("test-samples", 576usize)?;
     cfg.local_steps = args.get_parse("local-steps", 2usize)?;
@@ -36,40 +44,33 @@ fn main() -> anyhow::Result<()> {
     cfg.seed = args.get_parse("seed", 42u64)?;
     args.finish()?;
 
-    // Pretrained initialization (the paper's ImageNet stand-in).
-    {
-        let runtime = Runtime::load(&cfg.artifacts_dir)?;
-        let pcfg = pretrain::PretrainConfig::default();
-        cfg.init_params = Some(pretrain::ensure_pretrained(&runtime, &pcfg)?);
-    }
+    // Pretrained initialization (the paper's ImageNet stand-in), sharing
+    // one runtime with the experiment.
+    let runtime = Rc::new(Runtime::load(&cfg.artifacts_dir)?);
+    let pcfg = pretrain::PretrainConfig::default();
+    cfg.init_params = Some(pretrain::ensure_pretrained(&runtime, &pcfg)?);
 
     println!(
-        "mixed-precision OTA-FL: scheme {}, {} rounds, SNR {} dB, pretrained init",
-        cfg.scheme, cfg.rounds, cfg.channel.snr_db
+        "mixed-precision OTA-FL: scheme {}, policy {}, {} rounds, SNR {} dB, pretrained init",
+        cfg.scheme, cfg.policy, cfg.rounds, cfg.channel.snr_db
     );
     let out_dir = cfg.out_dir.clone();
-    let mut coord = Coordinator::new(cfg)?;
-    let report = coord.run()?;
-
-    println!("\nround  server-acc  server-loss  train-loss  part  ota-mse");
-    for r in &report.log.rounds {
-        println!(
-            "{:>5}  {:>9.4}  {:>10.4}  {:>10.4}  {:>4}  {:.2e}",
-            r.round, r.server_accuracy, r.server_loss, r.train_loss,
-            r.participants, r.ota_mse
-        );
-    }
+    let mut exp = Experiment::builder(cfg)
+        .runtime(runtime.clone())
+        .observe(ProgressPrinter)
+        .build()?;
+    let report = exp.run()?;
 
     println!("\n—— final report ——");
     println!("{}", report.to_json().to_string_pretty());
     if let Some(r90) = report.rounds_to_90 {
         println!("reached 90% at round {r90}");
     }
-    let stem = format!("e2e_{}", report.label.replace([',', '@'], "_"));
+    let stem = format!("e2e_{}", report.file_label());
     report.log.write_files(&out_dir, &stem)?;
     println!("curve written to {}/{stem}.csv", out_dir.display());
 
-    let c = coord.runtime.counters();
+    let c = runtime.counters();
     println!(
         "runtime counters: {} train steps ({:.3}s avg), {} eval batches ({:.3}s avg), {} compiles",
         c.train_steps,

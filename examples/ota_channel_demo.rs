@@ -1,20 +1,24 @@
 //! Wireless-layer walkthrough: what the multi-precision modulation scheme
-//! actually does, step by step, with numbers you can read.
+//! actually does, step by step, with numbers you can read — driven through
+//! the composable `sim` traits (`ChannelModel` + `Aggregator` behind a
+//! `Session`), with no ML in the loop.
 //!
 //! Demonstrates (1) why mixed-precision payloads superpose cleanly under
-//! analog amplitude modulation, (2) the effect of SNR and channel
-//! estimation quality on aggregation error, and (3) the bandwidth cost of
-//! the digital-orthogonal baseline — the paper's Eq. 2-8 pipeline end to
-//! end, without any ML in the loop.
+//! analog amplitude modulation, (2) the effect of SNR, channel-estimation
+//! quality and the fading model on aggregation error, and (3) the
+//! bandwidth cost of the digital-orthogonal baseline — the paper's
+//! Eq. 2-8 pipeline end to end.
 //!
 //! ```sh
 //! cargo run --release --example ota_channel_demo
 //! ```
 
-use mpota::channel::{ChannelConfig, RoundChannel};
+use mpota::channel::ChannelConfig;
+use mpota::kernels::PayloadPlane;
 use mpota::ota;
 use mpota::quant::{fake_quant, Precision};
 use mpota::rng::Rng;
+use mpota::sim::{AnalogOta, Awgn, ChannelModel, RayleighPilot, Session};
 use mpota::tensor;
 
 fn main() -> anyhow::Result<()> {
@@ -40,25 +44,58 @@ fn main() -> anyhow::Result<()> {
         .zip(&precisions)
         .map(|(r, &p)| fake_quant(r, p))
         .collect();
+    let plane = PayloadPlane::from_rows(&payloads);
     println!("clients: 5x32-bit, 5x8-bit, 5x4-bit; payload {n} params each\n");
 
     // the noise-free ideal the channel should reproduce
     let ideal = mpota::fl::mean(&payloads);
 
-    // --- 2. analog OTA across SNR and CSI quality -----------------------
-    println!("{:<22} {:>12} {:>14}", "channel", "agg MSE", "participants");
-    for (label, snr, perfect) in [
-        ("5 dB, estimated CSI", 5.0, false),
-        ("15 dB, estimated CSI", 15.0, false),
-        ("30 dB, estimated CSI", 30.0, false),
-        ("30 dB, perfect CSI", 30.0, true),
-    ] {
-        let cfg = ChannelConfig { snr_db: snr, perfect_csi: perfect, ..Default::default() };
-        let mut ch_rng = root.stream(label);
-        let round = RoundChannel::draw(&cfg, k, &mut ch_rng);
-        let (agg, stats) = ota::analog::aggregate(&payloads, &round, &mut ch_rng);
-        let mse = tensor::mse(&agg, &ideal);
-        println!("{label:<22} {mse:>12.3e} {:>14}", stats.participants);
+    // --- 2. analog OTA across channel models, SNR and CSI quality -------
+    // each row is one pluggable ChannelModel behind the same Session API
+    let rows: Vec<(&str, Box<dyn ChannelModel>)> = vec![
+        (
+            "rayleigh  5 dB, est. CSI",
+            Box::new(RayleighPilot::new(ChannelConfig {
+                snr_db: 5.0,
+                ..Default::default()
+            })),
+        ),
+        (
+            "rayleigh 15 dB, est. CSI",
+            Box::new(RayleighPilot::new(ChannelConfig {
+                snr_db: 15.0,
+                ..Default::default()
+            })),
+        ),
+        (
+            "rayleigh 30 dB, est. CSI",
+            Box::new(RayleighPilot::new(ChannelConfig {
+                snr_db: 30.0,
+                ..Default::default()
+            })),
+        ),
+        (
+            "rayleigh 30 dB, perfect CSI",
+            Box::new(RayleighPilot::new(ChannelConfig {
+                snr_db: 30.0,
+                perfect_csi: true,
+                ..Default::default()
+            })),
+        ),
+        ("awgn     30 dB (no fading)", Box::new(Awgn { snr_db: 30.0 })),
+    ];
+    println!("{:<28} {:>12} {:>14}", "channel model", "agg MSE", "participants");
+    for (label, model) in rows {
+        let mut session = Session::new(
+            model,
+            Box::new(AnalogOta),
+            root.stream(label),
+            root.stream("noise"),
+            1,
+        );
+        let stats = session.aggregate(1, &plane, &precisions);
+        let mse = tensor::mse(session.result(), &ideal);
+        println!("{label:<28} {mse:>12.3e} {:>14}", stats.participants);
     }
 
     // --- 3. the digital-orthogonal baseline -----------------------------

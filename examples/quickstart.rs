@@ -1,4 +1,5 @@
-//! Quickstart: the smallest end-to-end mixed-precision OTA-FL run.
+//! Quickstart: the smallest end-to-end mixed-precision OTA-FL run,
+//! through the `Experiment` builder API.
 //!
 //! 15 clients in three precision groups (16/8/4-bit), 5 communication
 //! rounds over synthetic traffic signs, analog over-the-air aggregation at
@@ -9,10 +10,13 @@
 //! cargo run --release --example quickstart
 //! ```
 
+use std::rc::Rc;
+
 use mpota::config::RunConfig;
-use mpota::coordinator::{pretrain, Coordinator};
+use mpota::coordinator::pretrain;
 use mpota::fl::Scheme;
 use mpota::runtime::Runtime;
+use mpota::sim::{Experiment, ProgressPrinter};
 
 fn main() -> anyhow::Result<()> {
     let mut cfg = RunConfig::default();
@@ -23,27 +27,23 @@ fn main() -> anyhow::Result<()> {
     cfg.local_steps = 2;
     cfg.lr = 0.08;
     cfg.channel.snr_db = 20.0;
+
+    // one shared runtime: pretraining and the experiment reuse it
+    let runtime = Rc::new(Runtime::load(&cfg.artifacts_dir)?);
     // start from the pretrained feature extractor (the paper's runs start
     // from ImageNet weights) — trains it on first use, ~3 min
-    {
-        let runtime = Runtime::load(&cfg.artifacts_dir)?;
-        cfg.init_params = Some(pretrain::ensure_pretrained(
-            &runtime,
-            &pretrain::PretrainConfig::default(),
-        )?);
-    }
+    cfg.init_params = Some(pretrain::ensure_pretrained(
+        &runtime,
+        &pretrain::PretrainConfig::default(),
+    )?);
 
     println!("mpota quickstart — scheme {} over {} rounds", cfg.scheme, cfg.rounds);
-    let mut coord = Coordinator::new(cfg)?;
-    let report = coord.run()?;
+    let mut exp = Experiment::builder(cfg)
+        .runtime(runtime)
+        .observe(ProgressPrinter) // streams each round as it completes
+        .build()?;
+    let report = exp.run()?;
 
-    println!("\nround  server-acc  train-loss  participants  ota-mse");
-    for r in &report.log.rounds {
-        println!(
-            "{:>5}  {:>9.4}  {:>10.4}  {:>12}  {:.2e}",
-            r.round, r.server_accuracy, r.train_loss, r.participants, r.ota_mse
-        );
-    }
     println!("\nfinal server accuracy: {:.2}%", 100.0 * report.final_accuracy);
     for rq in &report.requant {
         println!(

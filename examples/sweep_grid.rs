@@ -1,0 +1,61 @@
+//! Config-grid sweep through the library API: schemes × SNRs ×
+//! aggregators in one process, consolidated JSON report out.
+//!
+//! Uses the channel-only mode (synthetic payloads through policy +
+//! channel model + aggregator — no PJRT artifacts needed), so this runs
+//! anywhere; swap `run_channel_sweep` for `run_fl_sweep` to sweep full
+//! federated runs once `make artifacts` has been run.  The CLI equivalent
+//! is `mpota sweep --channel-only --schemes "16,8,4;8,8,8" --snrs 5,20`.
+//!
+//! ```sh
+//! cargo run --release --example sweep_grid
+//! ```
+
+use mpota::config::{Aggregation, RunConfig};
+use mpota::fl::Scheme;
+use mpota::sim::sweep::{run_channel_sweep, SweepSpec};
+
+fn main() -> anyhow::Result<()> {
+    let mut base = RunConfig::default();
+    base.rounds = 4;
+    base.seed = 7;
+
+    let mut spec = SweepSpec::new(base);
+    spec.schemes = vec![
+        Scheme::parse("16,8,4")?,
+        Scheme::parse("8,8,8")?,
+        Scheme::parse("4,4,4")?,
+    ];
+    spec.snrs_db = vec![5.0, 15.0, 25.0];
+    spec.aggregations = vec![Aggregation::OtaAnalog, Aggregation::Ideal];
+    spec.payload_len = 16_384;
+
+    println!(
+        "channel-only sweep: {} cells ({} schemes x {} SNRs x {} aggregators)\n",
+        spec.grid_size(),
+        spec.schemes.len(),
+        spec.snrs_db.len(),
+        spec.aggregations.len()
+    );
+    let report = run_channel_sweep(&spec)?;
+
+    println!(
+        "{:<10} {:>8} {:>8} {:>14} {:>14}",
+        "scheme", "snr dB", "agg", "mse vs ideal", "participants"
+    );
+    for c in report.json.req("cells")?.as_array()? {
+        println!(
+            "{:<10} {:>8.1} {:>8} {:>14.3e} {:>14.1}",
+            c.req("scheme")?.as_str()?,
+            c.req("snr_db")?.as_f64()?,
+            c.req("aggregation")?.as_str()?,
+            c.req("mean_mse_vs_ideal")?.as_f64()?,
+            c.req("mean_participants")?.as_f64()?,
+        );
+    }
+
+    let path = std::path::Path::new("runs/sweep_grid/SWEEP_report.json");
+    report.write(path)?;
+    println!("\nconsolidated report written to {}", path.display());
+    Ok(())
+}

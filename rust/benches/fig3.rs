@@ -9,11 +9,14 @@
 //!
 //! Run: `cargo bench --bench fig3`
 
+use std::rc::Rc;
+
 use mpota::config::RunConfig;
-use mpota::coordinator::{pretrain, Coordinator};
+use mpota::coordinator::pretrain;
 use mpota::fl::Scheme;
 use mpota::metrics::RunLog;
 use mpota::runtime::Runtime;
+use mpota::sim::{Arena, Experiment};
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -28,11 +31,12 @@ fn main() -> anyhow::Result<()> {
     let rounds = env_usize("MPOTA_F3_ROUNDS", 6);
     let samples = env_usize("MPOTA_F3_SAMPLES", 1920);
 
+    // one runtime for all eight runs: artifacts compile once, and the
+    // recycled arena keeps the server buffers allocated once
+    let runtime = Rc::new(Runtime::load(&dir)?);
     // pretrained init = the paper's "ImageNet pre-trained initialization"
-    let pretrained = {
-        let rt = Runtime::load(&dir)?;
-        pretrain::ensure_pretrained(&rt, &pretrain::PretrainConfig::default())?
-    };
+    let pretrained =
+        pretrain::ensure_pretrained(&runtime, &pretrain::PretrainConfig::default())?;
 
     let schemes = Scheme::paper_schemes();
     println!(
@@ -40,6 +44,7 @@ fn main() -> anyhow::Result<()> {
          15 clients, pretrained init, 20 dB SNR) ==="
     );
 
+    let mut arena = Arena::default();
     let mut curves: Vec<(String, RunLog)> = Vec::new();
     for scheme in &schemes {
         let mut cfg = RunConfig::default();
@@ -51,8 +56,12 @@ fn main() -> anyhow::Result<()> {
         cfg.lr = 0.02;
         cfg.init_params = Some(pretrained.clone());
         cfg.threads = mpota::kernels::par::env_threads();
-        let mut coord = Coordinator::new(cfg)?;
-        let report = coord.run()?;
+        let mut exp = Experiment::builder(cfg)
+            .runtime(runtime.clone())
+            .arena(arena)
+            .build()?;
+        let report = exp.run()?;
+        arena = exp.into_arena();
         eprintln!(
             "[{}] final {:.3} best {:.3} instab {:.4}",
             scheme,

@@ -18,10 +18,50 @@ pub mod precode;
 pub use complex::C32;
 pub use precode::Precode;
 
+use anyhow::{bail, Result};
+
 use crate::rng::Rng;
 
+/// Which physical-layer model the run simulates.  The full simulation
+/// pipeline lives behind the [`crate::sim::ChannelModel`] trait; this enum
+/// is the config-file-friendly name for the built-in models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FadingKind {
+    /// Rayleigh block fading + pilot LS estimation + truncated channel
+    /// inversion (the paper's §III-A pipeline — the default).
+    Rayleigh,
+    /// No fading: every client arrives with unit gain, only the server
+    /// AWGN remains (a perfectly-aligned OTA uplink; consumes no
+    /// channel-RNG draws).
+    Awgn,
+}
+
+impl std::str::FromStr for FadingKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "rayleigh" => Ok(FadingKind::Rayleigh),
+            "awgn" | "none" => Ok(FadingKind::Awgn),
+            other => bail!("unknown channel model '{other}' (rayleigh|awgn)"),
+        }
+    }
+}
+
+impl std::fmt::Display for FadingKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}",
+            match self {
+                FadingKind::Rayleigh => "rayleigh",
+                FadingKind::Awgn => "awgn",
+            }
+        )
+    }
+}
+
 /// Channel-simulation configuration (one per run).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ChannelConfig {
     /// Server receiver SNR in dB (paper: 5-30 dB of emulated noise).
     pub snr_db: f32,
@@ -33,6 +73,8 @@ pub struct ChannelConfig {
     pub truncation: f32,
     /// Perfect-CSI switch (ablation: zero estimation error).
     pub perfect_csi: bool,
+    /// Which built-in physical-layer model to simulate.
+    pub model: FadingKind,
 }
 
 impl Default for ChannelConfig {
@@ -43,6 +85,7 @@ impl Default for ChannelConfig {
             pilot_noise_var: 0.01,
             truncation: precode::DEFAULT_TRUNCATION,
             perfect_csi: false,
+            model: FadingKind::Rayleigh,
         }
     }
 }

@@ -5,9 +5,46 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::channel::ChannelConfig;
+use crate::channel::{ChannelConfig, FadingKind};
 use crate::fl::scheme::Scheme;
 use crate::json::{self, Value};
+
+/// How client precisions are chosen each round (the config-file name for
+/// the built-in [`crate::sim::PrecisionPolicy`] implementations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// The static group scheme of `RunConfig::scheme` every round
+    /// (paper §IV-A2 — the default).
+    Static,
+    /// SNR-adaptive bit selection: the fleet runs at the cheapest level
+    /// whose quantization noise still sits at/below the channel noise
+    /// floor (≈6 dB per bit); see `sim::SnrAdaptive`.
+    SnrAdaptive,
+}
+
+impl std::str::FromStr for PolicyKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" | "scheme" => Ok(PolicyKind::Static),
+            "snr-adaptive" | "snr_adaptive" | "snr" => Ok(PolicyKind::SnrAdaptive),
+            other => bail!("unknown precision policy '{other}' (static|snr-adaptive)"),
+        }
+    }
+}
+
+impl std::fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}",
+            match self {
+                PolicyKind::Static => "static",
+                PolicyKind::SnrAdaptive => "snr-adaptive",
+            }
+        )
+    }
+}
 
 /// What clients put on the air each round.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -80,7 +117,7 @@ impl std::fmt::Display for Aggregation {
 }
 
 /// Full experiment configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
     /// Directory holding `manifest.json` + HLO artifacts.
     pub artifacts_dir: PathBuf,
@@ -92,8 +129,11 @@ pub struct RunConfig {
     pub clients_per_round: usize,
     /// Communication rounds T (paper: 100).
     pub rounds: usize,
-    /// Precision scheme (paper §IV-A2).
+    /// Precision scheme (paper §IV-A2) — the static assignment used by
+    /// the default precision policy, and the label baseline.
     pub scheme: Scheme,
+    /// Per-round precision policy (static scheme by default).
+    pub policy: PolicyKind,
     /// Local SGD steps per client per round.
     pub local_steps: usize,
     /// Client learning rate.
@@ -135,6 +175,7 @@ impl Default for RunConfig {
             clients_per_round: 15,
             rounds: 100,
             scheme: Scheme::parse("16,8,4").expect("static scheme"),
+            policy: PolicyKind::Static,
             local_steps: 4,
             lr: 0.05,
             train_samples: 3840,
@@ -208,6 +249,7 @@ impl RunConfig {
                 "clients_per_round" => self.clients_per_round = val.as_usize()?,
                 "rounds" => self.rounds = val.as_usize()?,
                 "scheme" => self.scheme = Scheme::parse(val.as_str()?)?,
+                "policy" => self.policy = val.as_str()?.parse()?,
                 "local_steps" => self.local_steps = val.as_usize()?,
                 "lr" => self.lr = val.as_f64()? as f32,
                 "train_samples" => self.train_samples = val.as_usize()?,
@@ -221,9 +263,15 @@ impl RunConfig {
                 }
                 "truncation" => self.channel.truncation = val.as_f64()? as f32,
                 "perfect_csi" => self.channel.perfect_csi = val.as_bool()?,
-                "seed" => self.seed = val.as_f64()? as u64,
+                "channel_model" => self.channel.model = val.as_str()?.parse()?,
+                // exact integer parse: f64 would silently corrupt seeds
+                // above 2^53
+                "seed" => self.seed = val.as_u64()?,
                 "init_params" => {
-                    self.init_params = Some(PathBuf::from(val.as_str()?))
+                    self.init_params = match val {
+                        Value::Null => None,
+                        v => Some(PathBuf::from(v.as_str()?)),
+                    }
                 }
                 "workers" => self.workers = val.as_usize()?,
                 "threads" => self.threads = val.as_usize()?,
@@ -235,7 +283,11 @@ impl RunConfig {
         Ok(())
     }
 
-    /// Serialize the effective config (for run provenance logs).
+    /// Serialize the effective config for run provenance logs.
+    ///
+    /// Full fidelity: every key `apply_json` understands is emitted, so
+    /// applying the output to a default config reproduces this config
+    /// exactly (`provenance_roundtrip` pins this).
     pub fn to_json(&self) -> Value {
         let mut o = Value::object();
         o.set(
@@ -247,6 +299,7 @@ impl RunConfig {
         o.set("clients_per_round", Value::Num(self.clients_per_round as f64));
         o.set("rounds", Value::Num(self.rounds as f64));
         o.set("scheme", Value::Str(self.scheme.to_string()));
+        o.set("policy", Value::Str(self.policy.to_string()));
         o.set("local_steps", Value::Num(self.local_steps as f64));
         o.set("lr", Value::Num(self.lr as f64));
         o.set("train_samples", Value::Num(self.train_samples as f64));
@@ -255,10 +308,21 @@ impl RunConfig {
         o.set("transmit", Value::Str(self.transmit.to_string()));
         o.set("snr_db", Value::Num(self.channel.snr_db as f64));
         o.set("pilot_len", Value::Num(self.channel.pilot_len as f64));
+        o.set("pilot_noise_var", Value::Num(self.channel.pilot_noise_var as f64));
+        o.set("truncation", Value::Num(self.channel.truncation as f64));
         o.set("perfect_csi", Value::Bool(self.channel.perfect_csi));
-        o.set("seed", Value::Num(self.seed as f64));
+        o.set("channel_model", Value::Str(self.channel.model.to_string()));
+        o.set("seed", Value::from_u64(self.seed));
+        o.set(
+            "init_params",
+            match &self.init_params {
+                Some(p) => Value::Str(p.display().to_string()),
+                None => Value::Null,
+            },
+        );
         o.set("workers", Value::Num(self.workers as f64));
         o.set("threads", Value::Num(self.threads as f64));
+        o.set("out_dir", Value::Str(self.out_dir.display().to_string()));
         o.set("eval_every", Value::Num(self.eval_every as f64));
         o
     }
@@ -329,13 +393,77 @@ mod tests {
 
     #[test]
     fn provenance_roundtrip() {
-        let c = RunConfig::default();
-        let j = c.to_json();
+        // every field off its default, including the ones a logged config
+        // historically lost (truncation, pilot_noise_var, out_dir,
+        // init_params) and a seed beyond f64's exact integer range
+        let mut c = RunConfig::default();
+        c.artifacts_dir = PathBuf::from("elsewhere/artifacts");
+        c.variant = "wide".into();
+        c.clients = 30;
+        c.clients_per_round = 10;
+        c.rounds = 7;
+        c.scheme = Scheme::parse("24,12,6").unwrap();
+        c.policy = PolicyKind::SnrAdaptive;
+        c.local_steps = 3;
+        c.lr = 0.125;
+        c.train_samples = 600;
+        c.test_samples = 120;
+        c.aggregation = Aggregation::Digital;
+        c.transmit = Transmit::Weights;
+        c.channel.snr_db = 7.5;
+        c.channel.pilot_len = 8;
+        c.channel.pilot_noise_var = 0.125;
+        c.channel.truncation = 0.25;
+        c.channel.perfect_csi = true;
+        c.channel.model = FadingKind::Awgn;
+        c.seed = (1u64 << 53) + 12345;
+        c.init_params = Some(PathBuf::from("runs/warm.f32.bin"));
+        c.workers = 2;
+        c.threads = 4;
+        c.out_dir = PathBuf::from("runs/prov");
+        c.eval_every = 2;
+
+        // serialize -> text -> parse -> apply onto a default config
+        let text = c.to_json().to_string();
         let mut c2 = RunConfig::default();
-        c2.rounds = 1;
-        c2.apply_json(&j).unwrap();
-        assert_eq!(c2.rounds, c.rounds);
-        assert_eq!(c2.scheme, c.scheme);
+        c2.apply_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(c2, c, "logged config must reproduce the run exactly");
+
+        // None init_params roundtrips too (emitted as null)
+        let d = RunConfig::default();
+        let mut d2 = RunConfig::default();
+        d2.init_params = Some(PathBuf::from("stale"));
+        d2.apply_json(&d.to_json()).unwrap();
+        assert_eq!(d2, d);
+    }
+
+    #[test]
+    fn seed_parsing_is_exact_and_strict() {
+        let mut c = RunConfig::default();
+        let big = u64::MAX - 7;
+        c.apply_json(&json::parse(&format!("{{\"seed\": {big}}}")).unwrap())
+            .unwrap();
+        assert_eq!(c.seed, big, "seeds above 2^53 must not be corrupted");
+        assert!(c.apply_json(&json::parse(r#"{"seed": 1.5}"#).unwrap()).is_err());
+        assert!(c.apply_json(&json::parse(r#"{"seed": -4}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn policy_and_channel_model_parse() {
+        assert_eq!("static".parse::<PolicyKind>().unwrap(), PolicyKind::Static);
+        assert_eq!(
+            "snr-adaptive".parse::<PolicyKind>().unwrap(),
+            PolicyKind::SnrAdaptive
+        );
+        assert!("smoke".parse::<PolicyKind>().is_err());
+        let mut c = RunConfig::default();
+        c.apply_json(
+            &json::parse(r#"{"policy": "snr-adaptive", "channel_model": "awgn"}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.policy, PolicyKind::SnrAdaptive);
+        assert_eq!(c.channel.model, FadingKind::Awgn);
     }
 
     #[test]

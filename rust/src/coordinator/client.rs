@@ -5,6 +5,7 @@
 use anyhow::Result;
 
 use crate::data::{BatchIter, Dataset, SAMPLE_LEN};
+use crate::energy;
 use crate::quant::{self, Precision};
 use crate::rng::Rng;
 use crate::runtime::Runtime;
@@ -36,6 +37,13 @@ pub struct ClientState {
     theta: Vec<f32>,
     /// Cumulative MACs this client has spent (energy accounting).
     pub macs_spent: f64,
+    /// Cumulative joules, accrued at the precision each MAC actually ran
+    /// at — correct even when a dynamic policy changes `precision`
+    /// between rounds.  (Accruing per step instead of once over the MAC
+    /// total can differ from the historical closed-form value in the last
+    /// f64 ulp; the energy column is diagnostic and not covered by the
+    /// bit-identity contract, which pins model/aggregation values.)
+    pub energy_joules: f64,
 }
 
 impl ClientState {
@@ -60,6 +68,7 @@ impl ClientState {
             theta_start: Vec::new(),
             theta: Vec::new(),
             macs_spent: 0.0,
+            energy_joules: 0.0,
         }
     }
 
@@ -169,7 +178,9 @@ impl ClientState {
             stats.steps += 1;
             stats.samples += batch as u64;
             // fwd+bwd ≈ 3x forward MACs per trained sample
-            self.macs_spent += 3.0 * macs_per_sample as f64 * batch as f64;
+            let step_macs = 3.0 * macs_per_sample as f64 * batch as f64;
+            self.macs_spent += step_macs;
+            self.energy_joules += energy::mean_energy_joules(self.precision, step_macs);
         }
         if stats.steps > 0 {
             stats.mean_loss /= stats.steps as f64;

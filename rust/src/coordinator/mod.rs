@@ -2,13 +2,20 @@
 //! machine over the substrate modules.
 //!
 //! Per communication round t (Alg. 1):
-//!   1. broadcast θ^(t-1) to the selected clients;
+//!   1. the precision policy assigns each client's level, the coordinator
+//!      broadcasts θ^(t-1) to the selected clients;
 //!   2. each client re-quantizes to its precision q_k and trains locally
 //!      (PJRT execution of the `train_q{b}` artifact — [`client`]);
-//!   3. clients amplitude-modulate their decimal-valued models and the
-//!      channel superposes them (`ota::analog` with `channel` simulation),
-//!      or the digital / ideal baselines take over per config;
-//!   4. the server scales by 1/K and the result becomes θ^(t).
+//!   3. the [`crate::sim::Session`] draws the round's channel through the
+//!      pluggable [`crate::sim::ChannelModel`] and aggregates the payload
+//!      plane through the pluggable [`crate::sim::Aggregator`] (analog
+//!      OTA, digital orthogonal, or ideal FedAvg by default);
+//!   4. the server applies the aggregate and the result becomes θ^(t).
+//!
+//! The pluggable parts arrive via [`crate::sim::SimParts`] (usually built
+//! through [`crate::sim::Experiment`]); `Coordinator::new` wires the
+//! config-selected defaults, which reproduce the pre-redesign enum
+//! dispatch bit-for-bit per seed (`rust/tests/sim.rs`).
 //!
 //! Scheduling note: the PJRT client is `Rc`-based (not `Send`) and this
 //! testbed has one core, so client work is interleaved on the coordinator
@@ -22,55 +29,46 @@ pub mod report;
 pub use client::ClientState;
 pub use report::{EnergyReport, RequantEval, RunReport};
 
+use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::channel::{pilot, RoundChannel, C32};
-use crate::config::{Aggregation, RunConfig};
+use crate::config::RunConfig;
 use crate::data::{equal_shards, Dataset};
 use crate::energy;
-use crate::fl::{self, Selection};
+use crate::fl::Selection;
 use crate::kernels::PayloadPlane;
 use crate::metrics::{RoundRecord, RunLog};
-use crate::ota;
 use crate::quant::{self, Precision};
 use crate::rng::Rng;
 use crate::runtime::Runtime;
+use crate::sim;
 use crate::tensor;
 
-/// Round scratch arena: every server-side buffer a round needs, allocated
-/// once and reused, so steady-state [`Coordinator::round`] performs no
-/// heap allocation outside the PJRT training dispatch
+/// Round scratch arena for the coordinator-side buffers (participant
+/// list, payload plane, per-round precision assignments), allocated once
+/// and reused so steady-state [`Coordinator::round`] performs no heap
+/// allocation outside the PJRT training dispatch
 /// (`rust/tests/alloc_counter.rs` pins this on the aggregation path).
+/// The aggregation-side buffers live in the [`sim::Session`]'s
+/// [`sim::AggScratch`]; both recycle across runs through [`sim::Arena`].
 #[derive(Default)]
-struct RoundScratch {
+pub struct RoundScratch {
     /// Participant indices for the round.
-    selected: Vec<usize>,
+    pub(crate) selected: Vec<usize>,
     /// K×N decimal payload rows (the superposition input).
-    plane: PayloadPlane,
-    /// Per-participant precision levels (digital baseline).
-    precisions: Vec<Precision>,
-    /// Channel realisation (clients vec reused).
-    round_channel: RoundChannel,
-    /// Broadcast pilot sequence (depends only on cfg.pilot_len).
-    pilot: Vec<C32>,
-    /// Analog-aggregation accumulators + active-gain list.
-    ota: ota::analog::OtaScratch,
-    /// Digital/ideal aggregation output.
-    agg: Vec<f32>,
-}
-
-/// Which scratch buffer holds the round's aggregate.
-enum AggSlot {
-    OtaReal,
-    Agg,
+    pub(crate) plane: PayloadPlane,
+    /// Per-participant precision levels (aligned with plane rows).
+    pub(crate) precisions: Vec<Precision>,
+    /// Per-client precision assignment for the full fleet (policy output).
+    pub(crate) assigned: Vec<Precision>,
 }
 
 /// Orchestrates one full federated run.
 pub struct Coordinator {
     pub cfg: RunConfig,
-    pub runtime: Runtime,
+    pub runtime: Rc<Runtime>,
     clients: Vec<ClientState>,
     train_data: Dataset,
     test_data: Dataset,
@@ -78,19 +76,31 @@ pub struct Coordinator {
     theta: Vec<f32>,
     selection: Selection,
     select_rng: Rng,
-    channel_rng: Rng,
-    noise_rng: Rng,
     log: RunLog,
     macs_per_sample: u64,
     layout: crate::tensor::ParamLayout,
     scratch: RoundScratch,
+    session: sim::Session,
+    policy: Box<dyn sim::PrecisionPolicy>,
 }
 
 impl Coordinator {
-    /// Build everything: runtime, data, shards, clients, initial model.
+    /// Build everything with the config-selected default parts: runtime,
+    /// data, shards, clients, initial model, static-scheme policy, the
+    /// configured channel model and aggregator.
     pub fn new(cfg: RunConfig) -> Result<Self> {
+        Coordinator::from_parts(cfg, sim::SimParts::default())
+    }
+
+    /// Build with injected parts; `None` fields fall back to the
+    /// config-selected defaults.  This is the [`sim::Experiment`]
+    /// builder's entry point.
+    pub fn from_parts(cfg: RunConfig, parts: sim::SimParts) -> Result<Self> {
         cfg.validate()?;
-        let runtime = Runtime::load(&cfg.artifacts_dir)?;
+        let runtime = match parts.runtime {
+            Some(rt) => rt,
+            None => Rc::new(Runtime::load(&cfg.artifacts_dir)?),
+        };
         let variant = runtime.manifest.variant(&cfg.variant)?.clone();
 
         let root = Rng::seed_from(cfg.seed);
@@ -98,12 +108,29 @@ impl Coordinator {
         let train_data = Dataset::generate(cfg.train_samples, &mut data_rng);
         let test_data = Dataset::generate(cfg.test_samples, &mut data_rng);
 
+        let mut policy = parts
+            .policy
+            .unwrap_or_else(|| sim::policy::from_config(cfg.policy, &cfg));
+
+        let sim::Arena { round: mut scratch, agg, channel } =
+            parts.arena.unwrap_or_default();
+
+        // round-1 assignment doubles as the construction-time precisions
+        policy.assign_into(
+            &sim::PolicyCtx {
+                round: 1,
+                clients: cfg.clients,
+                snr_db: cfg.channel.snr_db,
+                prev: None,
+            },
+            &mut scratch.assigned,
+        )?;
+
         let mut shard_rng = root.stream("shard");
         let shards = equal_shards(train_data.n, cfg.clients, &mut shard_rng);
-        let precisions = cfg.scheme.client_precisions(cfg.clients)?;
         let clients: Vec<ClientState> = shards
             .into_iter()
-            .zip(precisions.iter())
+            .zip(scratch.assigned.iter())
             .map(|(s, &p)| {
                 ClientState::new(s.client, p, s.indices, runtime.manifest.train_batch, &root)
             })
@@ -129,15 +156,29 @@ impl Coordinator {
             Selection::UniformK(cfg.clients_per_round)
         };
 
-        let label = format!("{}@{}", cfg.scheme, cfg.aggregation);
-        let scratch = RoundScratch {
-            pilot: pilot::pilot_sequence(cfg.channel.pilot_len),
-            ..Default::default()
-        };
+        let aggregator = parts
+            .aggregator
+            .unwrap_or_else(|| sim::aggregator::from_config(cfg.aggregation));
+        let channel_model = parts
+            .channel_model
+            .unwrap_or_else(|| sim::channel_model::from_config(&cfg.channel));
+
+        let label = format!("{}@{}", policy.label(), aggregator.name());
+        let mut session = sim::Session::with_state(
+            channel_model,
+            aggregator,
+            root.stream("channel"),
+            root.stream("noise"),
+            cfg.threads,
+            agg,
+            channel,
+        );
+        for obs in parts.observers {
+            session.add_observer(obs);
+        }
+
         Ok(Coordinator {
             select_rng: root.stream("select"),
-            channel_rng: root.stream("channel"),
-            noise_rng: root.stream("noise"),
             log: RunLog::new(label),
             macs_per_sample: variant.macs_per_sample,
             layout: variant.layout.clone(),
@@ -149,6 +190,8 @@ impl Coordinator {
             theta,
             selection,
             scratch,
+            session,
+            policy,
         })
     }
 
@@ -167,14 +210,33 @@ impl Coordinator {
     /// Execute one communication round; returns its record.
     ///
     /// Steady-state contract: every server-side buffer comes from the
-    /// reused [`RoundScratch`] arena — after the first round this method
-    /// performs no heap allocation outside the PJRT training dispatch.
-    /// With `cfg.threads == 1` it reproduces the historical sequential
-    /// path bit-for-bit; any other thread count yields identical results
+    /// reused scratch arenas ([`RoundScratch`] here, [`sim::AggScratch`]
+    /// in the session) — after the first round this method performs no
+    /// heap allocation outside the PJRT training dispatch, including
+    /// through the trait-object seams.  With `cfg.threads == 1` the
+    /// default parts reproduce the historical sequential path
+    /// bit-for-bit; any other thread count yields identical results
     /// (kernels-layer determinism contract).
     pub fn round(&mut self, t: usize) -> Result<RoundRecord> {
         let t0 = Instant::now();
         let threads = self.cfg.threads;
+        self.session.begin_round(t);
+
+        // Step 0: per-round precision assignment (static policy: the same
+        // fleet assignment every round).
+        self.policy.assign_into(
+            &sim::PolicyCtx {
+                round: t,
+                clients: self.cfg.clients,
+                snr_db: self.cfg.channel.snr_db,
+                prev: self.log.rounds.last(),
+            },
+            &mut self.scratch.assigned,
+        )?;
+        for (c, &p) in self.clients.iter_mut().zip(self.scratch.assigned.iter()) {
+            c.precision = p;
+        }
+
         self.selection.select_into(
             self.cfg.clients,
             t,
@@ -214,44 +276,13 @@ impl Coordinator {
         train_loss /= kk as f64;
         train_acc /= kk as f64;
 
-        // Steps 3-4: aggregation over the payload plane.
-        let scratch = &mut self.scratch;
-        let (slot, participants, ota_mse) = match self.cfg.aggregation {
-            Aggregation::OtaAnalog => {
-                scratch.round_channel.draw_into(
-                    &self.cfg.channel,
-                    kk,
-                    &mut self.channel_rng,
-                    &scratch.pilot,
-                );
-                let stats = ota::analog::aggregate_plane_into(
-                    &scratch.plane,
-                    &scratch.round_channel,
-                    &mut self.noise_rng,
-                    &mut scratch.ota,
-                    threads,
-                );
-                (AggSlot::OtaReal, stats.participants, stats.mse_vs_ideal)
-            }
-            Aggregation::Digital => {
-                let stats = ota::digital::aggregate_plane_into(
-                    &scratch.plane,
-                    &scratch.precisions,
-                    &mut scratch.agg,
-                    threads,
-                );
-                (AggSlot::Agg, stats.participants, 0.0)
-            }
-            Aggregation::Ideal => {
-                fl::mean_plane_into(&scratch.plane, &mut scratch.agg, threads);
-                (AggSlot::Agg, kk, 0.0)
-            }
-        };
+        // Steps 3-4: channel draw + aggregation through the trait seams.
+        let stats =
+            self.session
+                .aggregate(t, &self.scratch.plane, &self.scratch.precisions);
+        let participants = stats.participants;
         if participants > 0 {
-            let agg: &[f32] = match slot {
-                AggSlot::OtaReal => &self.scratch.ota.y_re,
-                AggSlot::Agg => &self.scratch.agg,
-            };
+            let agg = self.session.result();
             match self.cfg.transmit {
                 // θ^(t) = θ^(t-1) + mean(Δ_k)   (Alg. 1 steps 10/14)
                 crate::config::Transmit::Updates => {
@@ -268,7 +299,7 @@ impl Coordinator {
             train_loss,
             train_accuracy: train_acc,
             participants,
-            ota_mse,
+            ota_mse: stats.mse_vs_ideal,
             energy_joules: self.actual_energy_joules(),
             wall_secs: 0.0,
             ..Default::default()
@@ -287,6 +318,19 @@ impl Coordinator {
             rec.server_loss = prev.server_loss;
         }
         rec.wall_secs = t0.elapsed().as_secs_f64();
+        self.session.end_round(&rec);
+        Ok(rec)
+    }
+
+    /// Execute round `t` AND append its record to the run log — the
+    /// manual-stepping form of [`run`](Self::run).  Keeping the log
+    /// current is what feeds `PolicyCtx::prev`, carries evaluation
+    /// results across non-eval rounds, and makes the end-of-run
+    /// [`report`](Self::report) correct.  (Unlike `run`, artifact warmup
+    /// is lazy: the first dispatch per precision pays compile latency.)
+    pub fn step(&mut self, t: usize) -> Result<RoundRecord> {
+        let rec = self.round(t)?;
+        self.log.push(rec.clone());
         Ok(rec)
     }
 
@@ -294,19 +338,20 @@ impl Coordinator {
     pub fn run(&mut self) -> Result<RunReport> {
         let t0 = Instant::now();
         self.runtime
-            .warmup(&self.cfg.variant, &self.cfg.scheme.distinct_levels())
+            .warmup(&self.cfg.variant, &self.policy.levels())
             .context("artifact warmup")?;
         for t in 1..=self.cfg.rounds {
-            let rec = self.round(t)?;
-            self.log.push(rec);
+            self.step(t)?;
         }
-        self.report(t0.elapsed().as_secs_f64())
+        let report = self.report(t0.elapsed().as_secs_f64())?;
+        self.session.end_run(&report);
+        Ok(report)
     }
 
     /// Post-run report: requantized client evals + energy summary.
     pub fn report(&mut self, wall_secs: f64) -> Result<RunReport> {
         let mut requant = Vec::new();
-        for p in self.cfg.scheme.distinct_levels() {
+        for p in self.policy.levels() {
             let q = self.requantize_global(p);
             let eval = self.runtime.evaluate(
                 &self.cfg.variant,
@@ -339,12 +384,11 @@ impl Coordinator {
     }
 
     /// Cumulative fleet energy so far (the per-round record field) —
-    /// allocation-free, unlike the full counterfactual report.
+    /// allocation-free, unlike the full counterfactual report.  Each
+    /// client accrues energy at the precision it actually ran each round,
+    /// so dynamic policies are accounted correctly.
     pub fn actual_energy_joules(&self) -> f64 {
-        self.clients
-            .iter()
-            .map(|c| energy::mean_energy_joules(c.precision, c.macs_spent))
-            .sum()
+        self.clients.iter().map(|c| c.energy_joules).sum()
     }
 
     /// Energy actuals + homogeneous counterfactuals over the same MACs.
@@ -362,6 +406,18 @@ impl Coordinator {
     /// Access the accumulated run log.
     pub fn log(&self) -> &RunLog {
         &self.log
+    }
+
+    /// The server-side session (channel model, aggregator, observers).
+    pub fn session(&self) -> &sim::Session {
+        &self.session
+    }
+
+    /// Tear down into the recyclable scratch arena (runtime + buffers for
+    /// the next run of a sweep).
+    pub fn into_arena(self) -> sim::Arena {
+        let (agg, channel) = self.session.into_state();
+        sim::Arena { round: self.scratch, agg, channel }
     }
 
     /// Per-layer re-quantization of the current global model to precision

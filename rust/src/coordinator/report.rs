@@ -55,6 +55,12 @@ pub struct RunReport {
 }
 
 impl RunReport {
+    /// The report label sanitized for use as a file stem (the label's
+    /// separator characters `,` `@` `/` become `_`).
+    pub fn file_label(&self) -> String {
+        self.label.replace([',', '@', '/'], "_")
+    }
+
     /// Accuracy of the final model at the scheme's lowest precision
     /// (the paper's headline client-side metric).
     pub fn lowest_precision_accuracy(&self) -> Option<f64> {

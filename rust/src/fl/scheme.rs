@@ -76,16 +76,31 @@ impl Scheme {
     /// Expand to per-client precisions: `clients` must divide evenly into
     /// the groups (paper: 15 clients / 3 groups = 5 each).
     pub fn client_precisions(&self, clients: usize) -> Result<Vec<Precision>> {
+        let mut out = Vec::with_capacity(clients);
+        self.client_precisions_into(clients, &mut out)?;
+        Ok(out)
+    }
+
+    /// Expand into a reused buffer — the zero-alloc per-round form used by
+    /// the static precision policy (`sim::StaticScheme`).  Identical
+    /// output to [`client_precisions`](Self::client_precisions).
+    pub fn client_precisions_into(
+        &self,
+        clients: usize,
+        out: &mut Vec<Precision>,
+    ) -> Result<()> {
         let g = self.groups.len();
         if clients % g != 0 {
             bail!("{clients} clients do not divide into {g} equal groups");
         }
         let per = clients / g;
-        Ok(self
-            .groups
-            .iter()
-            .flat_map(|&p| std::iter::repeat(p).take(per))
-            .collect())
+        out.clear();
+        for &p in &self.groups {
+            for _ in 0..per {
+                out.push(p);
+            }
+        }
+        Ok(())
     }
 
     /// Distinct levels, high to low.

@@ -17,11 +17,18 @@ pub enum Value {
     Null,
     Bool(bool),
     Num(f64),
+    /// Non-negative integer token too large to represent exactly in f64
+    /// (> 2^53).  Kept exact so 64-bit seeds survive a JSON roundtrip;
+    /// integers that DO fit in f64 parse as [`Value::Num`] as before.
+    BigInt(u64),
     Str(String),
     Array(Vec<Value>),
     /// Insertion-ordered object (key, value) pairs.
     Object(Vec<(String, Value)>),
 }
+
+/// Largest integer magnitude f64 represents exactly (2^53).
+const F64_EXACT_INT_MAX: u64 = 1 << 53;
 
 impl Value {
     // ---------------------------------------------------------- accessors
@@ -41,11 +48,31 @@ impl Value {
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Value::Num(n) => Ok(*n),
+            // lossy above 2^53, like every f64 consumer of JSON
+            Value::BigInt(u) => Ok(*u as f64),
             other => bail!("expected number, got {other:?}"),
         }
     }
 
+    /// Exact unsigned 64-bit integer: rejects fractional values and floats
+    /// that cannot round-trip (> 2^53) instead of silently truncating.
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            Value::BigInt(u) => Ok(*u),
+            Value::Num(n)
+                if n.fract() == 0.0 && *n >= 0.0 && *n <= F64_EXACT_INT_MAX as f64 =>
+            {
+                Ok(*n as u64)
+            }
+            other => bail!("expected unsigned integer, got {other:?}"),
+        }
+    }
+
     pub fn as_usize(&self) -> Result<usize> {
+        if let Value::BigInt(u) = self {
+            return usize::try_from(*u)
+                .map_err(|_| anyhow!("integer {u} exceeds usize"));
+        }
         let f = self.as_f64()?;
         if f < 0.0 || f.fract() != 0.0 {
             bail!("expected non-negative integer, got {f}");
@@ -129,6 +156,17 @@ impl Value {
         }
     }
 
+    /// Exact u64 constructor: `Num` when f64 can hold the value exactly
+    /// (keeps emitted JSON identical for everyday integers), `BigInt`
+    /// above 2^53.
+    pub fn from_u64(u: u64) -> Value {
+        if u <= F64_EXACT_INT_MAX {
+            Value::Num(u as f64)
+        } else {
+            Value::BigInt(u)
+        }
+    }
+
     pub fn from_f32s(xs: &[f32]) -> Value {
         Value::Array(xs.iter().map(|&x| Value::Num(x as f64)).collect())
     }
@@ -159,6 +197,9 @@ impl Value {
             Value::Bool(true) => out.push_str("true"),
             Value::Bool(false) => out.push_str("false"),
             Value::Num(n) => write_num(out, *n),
+            Value::BigInt(u) => {
+                let _ = write!(out, "{u}");
+            }
             Value::Str(s) => write_escaped(out, s),
             Value::Array(a) => {
                 out.push('[');
@@ -490,6 +531,14 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        // Integer tokens beyond f64's exact range keep full precision.
+        if !text.contains(['.', 'e', 'E', '-']) {
+            if let Ok(u) = text.parse::<u64>() {
+                if u > F64_EXACT_INT_MAX {
+                    return Ok(Value::BigInt(u));
+                }
+            }
+        }
         Ok(Value::Num(text.parse::<f64>().context("bad number")?))
     }
 }
@@ -582,5 +631,32 @@ mod tests {
         assert_eq!(parse("42").unwrap().as_usize().unwrap(), 42);
         assert!(parse("-1").unwrap().as_usize().is_err());
         assert!(parse("1.5").unwrap().as_usize().is_err());
+    }
+
+    #[test]
+    fn big_integers_roundtrip_exactly() {
+        // above 2^53: f64 would corrupt the low bits
+        for u in [(1u64 << 53) + 1, u64::MAX, 0xDEAD_BEEF_CAFE_F00D] {
+            let v = parse(&u.to_string()).unwrap();
+            assert_eq!(v, Value::BigInt(u));
+            assert_eq!(v.as_u64().unwrap(), u);
+            assert_eq!(parse(&v.to_string()).unwrap(), v);
+            assert_eq!(Value::from_u64(u), v);
+        }
+        // at or below 2^53: still a plain Num, still exact via as_u64
+        for u in [0u64, 42, 1 << 53] {
+            let v = parse(&u.to_string()).unwrap();
+            assert_eq!(v, Value::Num(u as f64));
+            assert_eq!(v.as_u64().unwrap(), u);
+            assert_eq!(Value::from_u64(u), v);
+        }
+    }
+
+    #[test]
+    fn as_u64_rejects_non_integers() {
+        assert!(parse("1.5").unwrap().as_u64().is_err());
+        assert!(parse("-3").unwrap().as_u64().is_err());
+        assert!(parse("1e300").unwrap().as_u64().is_err());
+        assert!(parse("\"7\"").unwrap().as_u64().is_err());
     }
 }

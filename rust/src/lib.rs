@@ -18,7 +18,18 @@
 //!   superposition; lowered into the same artifacts.
 //!
 //! The crate is organised as many small substrate modules; `coordinator`
-//! wires them into the paper's Algorithm 1.
+//! wires them into the paper's Algorithm 1 through the trait seams of
+//! [`sim`] — the composable simulation API.
+//!
+//! ## The simulation API (§Scenarios)
+//!
+//! [`sim`] decomposes the round loop into pluggable traits over the
+//! kernels substrate: [`sim::Aggregator`] (analog OTA / digital / ideal /
+//! custom), [`sim::ChannelModel`] (Rayleigh+pilot / AWGN / custom),
+//! [`sim::PrecisionPolicy`] (static scheme / SNR-adaptive / custom) and
+//! [`sim::RoundObserver`] event sinks.  [`sim::Experiment`] is the
+//! builder-style entry point; [`sim::sweep`] runs config grids in one
+//! process over a shared runtime and scratch arena (`mpota sweep`).
 //!
 //! ## The kernels layer (§Perf)
 //!
@@ -47,6 +58,7 @@ pub mod ota;
 pub mod quant;
 pub mod rng;
 pub mod runtime;
+pub mod sim;
 pub mod tensor;
 pub mod testing;
 

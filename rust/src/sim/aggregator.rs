@@ -1,0 +1,221 @@
+//! The [`Aggregator`] seam: from a K×N payload plane (plus the round's
+//! channel realisation) to one aggregated model vector.
+//!
+//! The three built-in implementations wrap the kernels-layer entry points
+//! the pre-redesign coordinator dispatched to through its `Aggregation`
+//! enum — [`AnalogOta`] (`ota::analog::aggregate_plane_into`),
+//! [`DigitalOrthogonal`] (`ota::digital::aggregate_plane_into`) and
+//! [`IdealFedAvg`] (`fl::mean_plane_into`) — so default runs are
+//! bit-identical per seed to the enum paths at every thread count, and the
+//! zero-alloc steady-state contract holds through the trait object
+//! (`rust/tests/alloc_counter.rs`, `rust/tests/sim.rs`).
+
+use crate::channel::RoundChannel;
+use crate::config::Aggregation;
+use crate::fl;
+use crate::kernels::PayloadPlane;
+use crate::ota::{self, analog::OtaScratch, AggregateStats};
+use crate::quant::Precision;
+use crate::rng::Rng;
+
+/// Which scratch buffer holds the round's aggregate (the old coordinator
+/// `AggSlot`, now owned by the scratch itself so any aggregator can route
+/// its output without copies).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+enum Slot {
+    /// `AggScratch::ota.y_re` (the analog receive accumulator).
+    Ota,
+    /// `AggScratch::agg` (the plain output vector).
+    #[default]
+    Agg,
+}
+
+/// Server-side aggregation scratch arena: every buffer an aggregator may
+/// need, allocated once per run and reused every round.  Borrow a buffer
+/// through [`ota_mut`](Self::ota_mut) / [`agg_mut`](Self::agg_mut) — that
+/// also marks it as the round's result slot for [`result`](Self::result).
+#[derive(Debug, Default)]
+pub struct AggScratch {
+    ota: OtaScratch,
+    agg: Vec<f32>,
+    slot: Slot,
+}
+
+impl AggScratch {
+    pub fn new() -> Self {
+        AggScratch::default()
+    }
+
+    /// The analog-OTA accumulators; marks them as the result slot.
+    pub fn ota_mut(&mut self) -> &mut OtaScratch {
+        self.slot = Slot::Ota;
+        &mut self.ota
+    }
+
+    /// The plain output vector; marks it as the result slot.  Custom
+    /// aggregators resize/fill this and write their aggregate into it.
+    pub fn agg_mut(&mut self) -> &mut Vec<f32> {
+        self.slot = Slot::Agg;
+        &mut self.agg
+    }
+
+    /// The aggregate the last `aggregate_into` produced (the MEAN vector).
+    pub fn result(&self) -> &[f32] {
+        match self.slot {
+            Slot::Ota => &self.ota.y_re,
+            Slot::Agg => &self.agg,
+        }
+    }
+}
+
+/// Everything an aggregator may consult beyond the payload plane itself.
+pub struct AggCtx<'a> {
+    /// This round's channel realisation.  Only drawn (and only meaningful)
+    /// when the aggregator's [`Aggregator::needs_channel`] returns true.
+    pub channel: &'a RoundChannel,
+    /// Per-participant precision levels, aligned with the plane's rows.
+    pub precisions: &'a [Precision],
+    /// The server receiver-noise stream.
+    pub noise_rng: &'a mut Rng,
+    /// Chunk-parallelism width (1 = exact sequential path; any value is
+    /// bit-identical per seed — kernels-layer determinism contract).
+    pub threads: usize,
+}
+
+/// One uplink architecture: superposes/averages the payload plane into the
+/// scratch arena and reports diagnostics.
+///
+/// Contract: write the aggregated MEAN vector through `scratch.ota_mut()`
+/// or `scratch.agg_mut()` (never both), allocate nothing once the scratch
+/// is warm, and consume `ctx.noise_rng` deterministically (or not at all).
+pub trait Aggregator {
+    /// Aggregate the K×N plane; `scratch.result()` holds the mean vector
+    /// afterwards (when `participants > 0`).
+    fn aggregate_into(
+        &mut self,
+        plane: &PayloadPlane,
+        ctx: &mut AggCtx<'_>,
+        scratch: &mut AggScratch,
+    ) -> AggregateStats;
+
+    /// Whether the session should draw a channel realisation before
+    /// calling [`aggregate_into`](Self::aggregate_into).  Returning false
+    /// skips the draw AND its RNG consumption (the digital/ideal
+    /// baselines, matching the pre-redesign round loop draw-for-draw).
+    fn needs_channel(&self) -> bool {
+        true
+    }
+
+    /// Short architecture name for labels/reports ("ota", "digital", ...).
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's analog multi-precision OTA superposition (Alg. 1 steps
+/// 3-4): decimal payloads through the channel gains, AWGN, 1/K_active.
+pub struct AnalogOta;
+
+impl Aggregator for AnalogOta {
+    fn aggregate_into(
+        &mut self,
+        plane: &PayloadPlane,
+        ctx: &mut AggCtx<'_>,
+        scratch: &mut AggScratch,
+    ) -> AggregateStats {
+        ota::analog::aggregate_plane_into(
+            plane,
+            ctx.channel,
+            ctx.noise_rng,
+            scratch.ota_mut(),
+            ctx.threads,
+        )
+    }
+
+    fn name(&self) -> &'static str {
+        "ota"
+    }
+}
+
+/// Conventional digital orthogonal uplink: per-client encode at its
+/// precision, error-free transport, server-side precision conversion,
+/// average.  Needs no channel realisation.
+pub struct DigitalOrthogonal;
+
+impl Aggregator for DigitalOrthogonal {
+    fn aggregate_into(
+        &mut self,
+        plane: &PayloadPlane,
+        ctx: &mut AggCtx<'_>,
+        scratch: &mut AggScratch,
+    ) -> AggregateStats {
+        ota::digital::aggregate_plane_into(
+            plane,
+            ctx.precisions,
+            scratch.agg_mut(),
+            ctx.threads,
+        )
+    }
+
+    fn needs_channel(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "digital"
+    }
+}
+
+/// Noise-free FedAvg oracle (Eq. 1) — upper bound / debugging.
+pub struct IdealFedAvg;
+
+impl Aggregator for IdealFedAvg {
+    fn aggregate_into(
+        &mut self,
+        plane: &PayloadPlane,
+        ctx: &mut AggCtx<'_>,
+        scratch: &mut AggScratch,
+    ) -> AggregateStats {
+        fl::mean_plane_into(plane, scratch.agg_mut(), ctx.threads);
+        AggregateStats {
+            participants: plane.k(),
+            ..Default::default()
+        }
+    }
+
+    fn needs_channel(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "ideal"
+    }
+}
+
+/// The built-in aggregator named by a config [`Aggregation`].
+pub fn from_config(a: Aggregation) -> Box<dyn Aggregator> {
+    match a {
+        Aggregation::OtaAnalog => Box::new(AnalogOta),
+        Aggregation::Digital => Box::new(DigitalOrthogonal),
+        Aggregation::Ideal => Box::new(IdealFedAvg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_config_names_match_display() {
+        for a in [Aggregation::OtaAnalog, Aggregation::Digital, Aggregation::Ideal] {
+            assert_eq!(from_config(a).name(), a.to_string());
+        }
+    }
+
+    #[test]
+    fn scratch_slot_follows_last_borrow() {
+        let mut s = AggScratch::new();
+        s.agg_mut().extend_from_slice(&[1.0, 2.0]);
+        assert_eq!(s.result(), &[1.0, 2.0]);
+        s.ota_mut().y_re.push(9.0);
+        assert_eq!(s.result(), &[9.0]);
+    }
+}

@@ -1,0 +1,146 @@
+//! The [`ChannelModel`] seam: everything between "the round has K
+//! transmitters" and "the server has a [`RoundChannel`] realisation".
+//!
+//! The built-in [`RayleighPilot`] model reproduces the paper's §III-A
+//! pipeline (Rayleigh block fading → pilot LS estimation → truncated
+//! channel inversion) with RNG consumption identical to the pre-redesign
+//! coordinator, so default runs stay bit-identical per seed.  Alternate
+//! fading/CSI models implement the same trait and plug into a
+//! [`crate::sim::Session`] or [`crate::sim::Experiment`] without touching
+//! the round loop.
+
+use crate::channel::{
+    pilot, ChannelConfig, ClientChannel, FadingKind, Precode, RoundChannel, C32,
+};
+use crate::rng::Rng;
+
+/// Draws one round's channel realisation.
+///
+/// Contract: `draw_into` must fully overwrite `out` (the buffer is reused
+/// round to round), must not allocate once `out` has warmed to fleet
+/// capacity, and must consume `rng` deterministically — the same state in
+/// always yields the same realisation out.
+pub trait ChannelModel {
+    /// Fill `out` with `num_clients` client-channel states plus the server
+    /// noise level for this round.
+    fn draw_into(&self, num_clients: usize, rng: &mut Rng, out: &mut RoundChannel);
+
+    /// Short model name for labels/reports.
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's physical layer: Rayleigh block fading, pilot-based LS
+/// estimation (unless `perfect_csi`), truncated channel-inversion
+/// precoding.  Owns the precomputed broadcast pilot sequence, exactly as
+/// the pre-redesign round scratch did.
+pub struct RayleighPilot {
+    cfg: ChannelConfig,
+    pilot: Vec<C32>,
+}
+
+impl RayleighPilot {
+    pub fn new(cfg: ChannelConfig) -> Self {
+        let pilot = pilot::pilot_sequence(cfg.pilot_len);
+        RayleighPilot { cfg, pilot }
+    }
+
+    pub fn config(&self) -> &ChannelConfig {
+        &self.cfg
+    }
+}
+
+impl ChannelModel for RayleighPilot {
+    fn draw_into(&self, num_clients: usize, rng: &mut Rng, out: &mut RoundChannel) {
+        out.draw_into(&self.cfg, num_clients, rng, &self.pilot);
+    }
+
+    fn name(&self) -> &'static str {
+        "rayleigh"
+    }
+}
+
+/// No fading: every client arrives perfectly aligned with unit gain and
+/// only the server AWGN (at `snr_db`) degrades the superposition.
+/// Consumes no RNG draws — the receiver noise is injected downstream by
+/// the aggregator from its own stream.
+pub struct Awgn {
+    pub snr_db: f32,
+}
+
+impl ChannelModel for Awgn {
+    fn draw_into(&self, num_clients: usize, _rng: &mut Rng, out: &mut RoundChannel) {
+        out.snr_db = self.snr_db;
+        out.clients.clear();
+        for _ in 0..num_clients {
+            out.clients.push(ClientChannel {
+                h: C32::ONE,
+                h_est: C32::ONE,
+                precode: Precode::Transmit(C32::ONE),
+                effective_gain: Some(C32::ONE),
+            });
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "awgn"
+    }
+}
+
+/// The built-in model named by a [`ChannelConfig`].
+pub fn from_config(cfg: &ChannelConfig) -> Box<dyn ChannelModel> {
+    match cfg.model {
+        FadingKind::Rayleigh => Box::new(RayleighPilot::new(cfg.clone())),
+        FadingKind::Awgn => Box::new(Awgn { snr_db: cfg.snr_db }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rayleigh_model_matches_direct_draw() {
+        let cfg = ChannelConfig::default();
+        let model = RayleighPilot::new(cfg.clone());
+        let pilot = pilot::pilot_sequence(cfg.pilot_len);
+        let mut r1 = Rng::seed_from(314);
+        let mut r2 = Rng::seed_from(314);
+        let mut via_model = RoundChannel::empty();
+        let mut direct = RoundChannel::empty();
+        for _ in 0..3 {
+            model.draw_into(15, &mut r1, &mut via_model);
+            direct.draw_into(&cfg, 15, &mut r2, &pilot);
+            assert_eq!(via_model.clients.len(), 15);
+            for (a, b) in via_model.clients.iter().zip(direct.clients.iter()) {
+                assert_eq!(a.h, b.h);
+                assert_eq!(a.h_est, b.h_est);
+                assert_eq!(a.effective_gain, b.effective_gain);
+            }
+        }
+        // identical RNG consumption
+        assert_eq!(r1.next_u64(), r2.next_u64());
+    }
+
+    #[test]
+    fn awgn_model_is_unit_gain_and_rng_free() {
+        let model = Awgn { snr_db: 10.0 };
+        let mut rng = Rng::seed_from(7);
+        let before = rng.clone();
+        let mut rc = RoundChannel::empty();
+        model.draw_into(8, &mut rng, &mut rc);
+        assert_eq!(rc.clients.len(), 8);
+        assert_eq!(rc.snr_db, 10.0);
+        for c in &rc.clients {
+            assert_eq!(c.effective_gain, Some(C32::ONE));
+        }
+        assert_eq!(rng.next_u64(), before.clone().next_u64());
+    }
+
+    #[test]
+    fn from_config_picks_model() {
+        let mut cfg = ChannelConfig::default();
+        assert_eq!(from_config(&cfg).name(), "rayleigh");
+        cfg.model = FadingKind::Awgn;
+        assert_eq!(from_config(&cfg).name(), "awgn");
+    }
+}

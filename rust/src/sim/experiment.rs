@@ -1,0 +1,179 @@
+//! [`Experiment`]: the public session builder over the coordinator and the
+//! trait seams — configure a run, swap any part, attach observers, run.
+//!
+//! ```no_run
+//! use mpota::config::RunConfig;
+//! use mpota::sim::{Experiment, ProgressPrinter};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut cfg = RunConfig::default();
+//! cfg.rounds = 5;
+//! let mut exp = Experiment::builder(cfg).observe(ProgressPrinter).build()?;
+//! let report = exp.run()?;
+//! println!("final accuracy {:.4}", report.final_accuracy);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Multi-run drivers share one runtime and recycle the scratch arena:
+//!
+//! ```no_run
+//! # use std::rc::Rc;
+//! # use mpota::config::RunConfig;
+//! # use mpota::runtime::Runtime;
+//! # use mpota::sim::{Arena, Experiment};
+//! # fn main() -> anyhow::Result<()> {
+//! let base = RunConfig::default();
+//! let runtime = Rc::new(Runtime::load(&base.artifacts_dir)?);
+//! let mut arena = Arena::default();
+//! for snr in [5.0f32, 20.0] {
+//!     let mut cfg = base.clone();
+//!     cfg.channel.snr_db = snr;
+//!     let mut exp = Experiment::builder(cfg)
+//!         .runtime(runtime.clone())
+//!         .arena(arena)
+//!         .build()?;
+//!     let report = exp.run()?;
+//!     println!("{snr} dB -> {:.4}", report.final_accuracy);
+//!     arena = exp.into_arena();
+//! }
+//! # Ok(())
+//! # }
+//! ```
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::{Coordinator, RunReport};
+use crate::metrics::{RoundRecord, RunLog};
+use crate::quant::Precision;
+use crate::runtime::{EvalResult, Runtime};
+
+use super::{
+    Aggregator, Arena, ChannelModel, PrecisionPolicy, RoundObserver, SimParts,
+};
+
+/// A configured federated experiment, ready to run.
+pub struct Experiment {
+    coord: Coordinator,
+}
+
+impl Experiment {
+    /// Start building an experiment from a run configuration.
+    pub fn builder(cfg: RunConfig) -> ExperimentBuilder {
+        ExperimentBuilder { cfg, parts: SimParts::default() }
+    }
+
+    /// Run all configured rounds and produce the final report.
+    pub fn run(&mut self) -> Result<RunReport> {
+        self.coord.run()
+    }
+
+    /// Execute a single communication round (manual stepping).  The
+    /// record is also appended to the run log, so feedback policies
+    /// (`PolicyCtx::prev`), carried-forward eval results and the final
+    /// report all behave exactly as under [`run`](Self::run).
+    pub fn round(&mut self, t: usize) -> Result<RoundRecord> {
+        self.coord.step(t)
+    }
+
+    /// The effective run configuration.
+    pub fn cfg(&self) -> &RunConfig {
+        &self.coord.cfg
+    }
+
+    /// The shared runtime handle (pass to further builders).
+    pub fn runtime(&self) -> Rc<Runtime> {
+        self.coord.runtime.clone()
+    }
+
+    /// The accumulated run log.
+    pub fn log(&self) -> &RunLog {
+        self.coord.log()
+    }
+
+    /// Current global model (flat decimal values).
+    pub fn global_model(&self) -> &[f32] {
+        self.coord.global_model()
+    }
+
+    /// Per-layer re-quantization of the global model (deployment view of a
+    /// precision-p client).
+    pub fn requantize_global(&self, p: Precision) -> Vec<f32> {
+        self.coord.requantize_global(p)
+    }
+
+    /// Evaluate an arbitrary flat model on the run's held-out test set.
+    pub fn evaluate_model(&self, theta: &[f32]) -> Result<EvalResult> {
+        self.coord.evaluate_model(theta)
+    }
+
+    /// Escape hatch to the full coordinator API.
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    /// Escape hatch to the full coordinator API (mutable).
+    pub fn coordinator_mut(&mut self) -> &mut Coordinator {
+        &mut self.coord
+    }
+
+    /// Tear down into the recyclable scratch arena for the next run.
+    pub fn into_arena(self) -> Arena {
+        self.coord.into_arena()
+    }
+}
+
+/// Builder for [`Experiment`]: every part is optional and falls back to
+/// the config-selected default (static-scheme policy, Rayleigh channel,
+/// the configured aggregation path) — which reproduces the pre-redesign
+/// coordinator bit-for-bit per seed.
+pub struct ExperimentBuilder {
+    cfg: RunConfig,
+    parts: SimParts,
+}
+
+impl ExperimentBuilder {
+    /// Share a loaded runtime instead of loading one per run.
+    pub fn runtime(mut self, rt: Rc<Runtime>) -> Self {
+        self.parts.runtime = Some(rt);
+        self
+    }
+
+    /// Plug in a custom channel model.
+    pub fn channel_model(mut self, m: impl ChannelModel + 'static) -> Self {
+        self.parts.channel_model = Some(Box::new(m));
+        self
+    }
+
+    /// Plug in a custom aggregator.
+    pub fn aggregator(mut self, a: impl Aggregator + 'static) -> Self {
+        self.parts.aggregator = Some(Box::new(a));
+        self
+    }
+
+    /// Plug in a custom precision policy.
+    pub fn policy(mut self, p: impl PrecisionPolicy + 'static) -> Self {
+        self.parts.policy = Some(Box::new(p));
+        self
+    }
+
+    /// Attach a round observer (repeatable).
+    pub fn observe(mut self, o: impl RoundObserver + 'static) -> Self {
+        self.parts.observers.push(Box::new(o));
+        self
+    }
+
+    /// Recycle a previous run's scratch arena.
+    pub fn arena(mut self, a: Arena) -> Self {
+        self.parts.arena = Some(a);
+        self
+    }
+
+    /// Validate the config and wire everything up.
+    pub fn build(self) -> Result<Experiment> {
+        Ok(Experiment { coord: Coordinator::from_parts(self.cfg, self.parts)? })
+    }
+}

@@ -1,0 +1,225 @@
+//! Composable simulation API: the trait seams the round loop is built
+//! from, plus the [`Experiment`] session builder and the [`sweep`] driver.
+//!
+//! The pre-redesign coordinator hard-coded three aggregation enum arms,
+//! one channel model and a static precision scheme.  This module breaks
+//! those decisions into pluggable traits over the kernels-layer
+//! plane/arena substrate:
+//!
+//! * [`Aggregator`] — payload plane + channel realisation → aggregated
+//!   model ([`AnalogOta`], [`DigitalOrthogonal`], [`IdealFedAvg`]);
+//! * [`ChannelModel`] — per-round channel draw ([`RayleighPilot`] is the
+//!   paper's Rayleigh+pilot+inversion pipeline, [`Awgn`] a no-fading
+//!   alternative);
+//! * [`PrecisionPolicy`] — per-round client bit assignment
+//!   ([`StaticScheme`] reproduces the paper's fixed groups,
+//!   [`SnrAdaptive`] picks bits from the channel SNR);
+//! * [`RoundObserver`] — event sink for progress/logging/instrumentation.
+//!
+//! [`Session`] wires the server-side seams together over one reusable
+//! scratch arena; [`Coordinator`](crate::coordinator::Coordinator) drives
+//! it inside the full FL round, and [`Experiment`] is the public builder
+//! over both.  Multi-run drivers ([`sweep`], benches) recycle one
+//! [`Arena`] and one `Rc<Runtime>` across runs.
+//!
+//! # Determinism and allocation contracts
+//!
+//! The PR-1 contracts survive the trait seams and are re-pinned through
+//! them: with the default parts, results are bit-identical per seed to the
+//! pre-redesign enum paths at every thread count (`rust/tests/sim.rs`),
+//! and a steady-state round performs zero heap allocation through the
+//! trait objects (`rust/tests/alloc_counter.rs`).
+
+pub mod aggregator;
+pub mod channel_model;
+pub mod experiment;
+pub mod observer;
+pub mod policy;
+pub mod sweep;
+
+pub use aggregator::{
+    AggCtx, AggScratch, Aggregator, AnalogOta, DigitalOrthogonal, IdealFedAvg,
+};
+pub use channel_model::{Awgn, ChannelModel, RayleighPilot};
+pub use experiment::{Experiment, ExperimentBuilder};
+pub use observer::{ProgressPrinter, RoundObserver};
+pub use policy::{PolicyCtx, PrecisionPolicy, SnrAdaptive, StaticScheme};
+pub use sweep::{SweepReport, SweepSpec};
+
+use std::rc::Rc;
+
+use crate::channel::RoundChannel;
+use crate::coordinator::RoundScratch;
+use crate::kernels::PayloadPlane;
+use crate::metrics::RoundRecord;
+use crate::ota::AggregateStats;
+use crate::quant::Precision;
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+
+/// Recyclable server-side scratch: every buffer a run grows to capacity,
+/// handed from a finished run to the next one so a sweep allocates its
+/// arena once (see [`Experiment::into_arena`] and
+/// [`ExperimentBuilder::arena`]).
+#[derive(Default)]
+pub struct Arena {
+    pub(crate) round: RoundScratch,
+    pub(crate) agg: AggScratch,
+    pub(crate) channel: RoundChannel,
+}
+
+/// Injectable parts for a simulation run; `None`/empty fields fall back to
+/// the config-selected defaults ([`crate::coordinator::Coordinator`]
+/// resolves them).
+#[derive(Default)]
+pub struct SimParts {
+    /// Shared runtime (sweeps/benches reuse one across runs).
+    pub runtime: Option<Rc<Runtime>>,
+    pub channel_model: Option<Box<dyn ChannelModel>>,
+    pub aggregator: Option<Box<dyn Aggregator>>,
+    pub policy: Option<Box<dyn PrecisionPolicy>>,
+    pub observers: Vec<Box<dyn RoundObserver>>,
+    /// Recycled scratch arena from a previous run.
+    pub arena: Option<Arena>,
+}
+
+/// The server-side round engine: one channel model + one aggregator +
+/// observers over a reusable scratch arena and the channel/noise RNG
+/// streams.  Everything below the training layer — so it runs (and is
+/// tested) without PJRT artifacts.
+pub struct Session {
+    channel_model: Box<dyn ChannelModel>,
+    aggregator: Box<dyn Aggregator>,
+    observers: Vec<Box<dyn RoundObserver>>,
+    channel_rng: Rng,
+    noise_rng: Rng,
+    threads: usize,
+    round_channel: RoundChannel,
+    scratch: AggScratch,
+}
+
+impl Session {
+    /// Fresh session (buffers grow on first use).
+    pub fn new(
+        channel_model: Box<dyn ChannelModel>,
+        aggregator: Box<dyn Aggregator>,
+        channel_rng: Rng,
+        noise_rng: Rng,
+        threads: usize,
+    ) -> Self {
+        Session::with_state(
+            channel_model,
+            aggregator,
+            channel_rng,
+            noise_rng,
+            threads,
+            AggScratch::default(),
+            RoundChannel::empty(),
+        )
+    }
+
+    /// Session over recycled scratch buffers (the multi-run form).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_state(
+        channel_model: Box<dyn ChannelModel>,
+        aggregator: Box<dyn Aggregator>,
+        channel_rng: Rng,
+        noise_rng: Rng,
+        threads: usize,
+        scratch: AggScratch,
+        round_channel: RoundChannel,
+    ) -> Self {
+        Session {
+            channel_model,
+            aggregator,
+            observers: Vec::new(),
+            channel_rng,
+            noise_rng,
+            threads,
+            round_channel,
+            scratch,
+        }
+    }
+
+    pub fn add_observer(&mut self, obs: Box<dyn RoundObserver>) {
+        self.observers.push(obs);
+    }
+
+    pub fn aggregator_name(&self) -> &'static str {
+        self.aggregator.name()
+    }
+
+    pub fn channel_model_name(&self) -> &'static str {
+        self.channel_model.name()
+    }
+
+    /// The last drawn channel realisation.
+    pub fn channel(&self) -> &RoundChannel {
+        &self.round_channel
+    }
+
+    /// Notify observers that round `t` is starting.
+    pub fn begin_round(&mut self, t: usize) {
+        for obs in &mut self.observers {
+            obs.on_round_start(t);
+        }
+    }
+
+    /// Run the round's server side: draw the channel (when the aggregator
+    /// uses one — skipping it also skips its RNG consumption, matching the
+    /// pre-redesign enum dispatch draw-for-draw), aggregate the plane, and
+    /// notify observers.  `scratch` access afterwards via
+    /// [`result`](Self::result).
+    pub fn aggregate(
+        &mut self,
+        t: usize,
+        plane: &PayloadPlane,
+        precisions: &[Precision],
+    ) -> AggregateStats {
+        if self.aggregator.needs_channel() {
+            self.channel_model.draw_into(
+                plane.k(),
+                &mut self.channel_rng,
+                &mut self.round_channel,
+            );
+            for obs in &mut self.observers {
+                obs.on_channel(t, &self.round_channel);
+            }
+        }
+        let mut ctx = AggCtx {
+            channel: &self.round_channel,
+            precisions,
+            noise_rng: &mut self.noise_rng,
+            threads: self.threads,
+        };
+        let stats = self.aggregator.aggregate_into(plane, &mut ctx, &mut self.scratch);
+        for obs in &mut self.observers {
+            obs.on_aggregate(t, &stats);
+        }
+        stats
+    }
+
+    /// The aggregated MEAN vector from the last [`aggregate`](Self::aggregate).
+    pub fn result(&self) -> &[f32] {
+        self.scratch.result()
+    }
+
+    /// Notify observers that the round finished.
+    pub fn end_round(&mut self, rec: &RoundRecord) {
+        for obs in &mut self.observers {
+            obs.on_round_end(rec);
+        }
+    }
+
+    /// Notify observers that the run finished.
+    pub fn end_run(&mut self, report: &crate::coordinator::RunReport) {
+        for obs in &mut self.observers {
+            obs.on_run_end(report);
+        }
+    }
+
+    /// Tear down into the recyclable scratch parts.
+    pub(crate) fn into_state(self) -> (AggScratch, RoundChannel) {
+        (self.scratch, self.round_channel)
+    }
+}

@@ -1,0 +1,52 @@
+//! The [`RoundObserver`] event sink: per-round hooks for logging, live
+//! progress, metric streaming or test instrumentation, without touching
+//! the round loop.
+//!
+//! Observers attach to a [`crate::sim::Session`] (directly or through
+//! [`crate::sim::ExperimentBuilder::observe`]); every hook has an empty
+//! default body so implementations override only what they need.  Hook
+//! bodies run on the coordinator thread inside the round — keep them
+//! cheap, and allocation-free if the zero-alloc round contract matters to
+//! your run.
+
+use crate::channel::RoundChannel;
+use crate::coordinator::RunReport;
+use crate::metrics::RoundRecord;
+use crate::ota::AggregateStats;
+
+/// Per-round event hooks.
+#[allow(unused_variables)]
+pub trait RoundObserver {
+    /// A communication round is starting.
+    fn on_round_start(&mut self, round: usize) {}
+
+    /// The round's channel realisation was drawn (only fires for
+    /// aggregators that use a channel).
+    fn on_channel(&mut self, round: usize, channel: &RoundChannel) {}
+
+    /// The payload plane was aggregated.
+    fn on_aggregate(&mut self, round: usize, stats: &AggregateStats) {}
+
+    /// The round finished (record includes evaluation + energy).
+    fn on_round_end(&mut self, record: &RoundRecord) {}
+
+    /// The full run finished.
+    fn on_run_end(&mut self, report: &RunReport) {}
+}
+
+/// Prints one line per round — the CLI's live progress view.
+pub struct ProgressPrinter;
+
+impl RoundObserver for ProgressPrinter {
+    fn on_round_end(&mut self, r: &RoundRecord) {
+        println!(
+            "round {:>3}  acc {:.4}  loss {:.4}  train_loss {:.4}  part {:>2}  ota_mse {:.3e}",
+            r.round,
+            r.server_accuracy,
+            r.server_loss,
+            r.train_loss,
+            r.participants,
+            r.ota_mse
+        );
+    }
+}

@@ -1,0 +1,288 @@
+//! The [`PrecisionPolicy`] seam: which quantization level each client runs
+//! at, decided per communication round.
+//!
+//! The paper evaluates STATIC group schemes (§IV-A2) — [`StaticScheme`]
+//! reproduces exactly the assignment the pre-redesign coordinator fixed at
+//! construction, so default runs are bit-identical per seed.  The trait
+//! generalizes that to a per-round callback: [`SnrAdaptive`] is a built-in
+//! dynamic policy (bit selection from the channel SNR, with optional
+//! precision annealing over rounds), and custom policies can react to the
+//! previous round's record (loss plateau, OTA MSE, energy budget, ...).
+
+use anyhow::Result;
+
+use crate::config::{PolicyKind, RunConfig};
+use crate::fl::scheme::{Scheme, SCHEME_LEVELS};
+use crate::metrics::RoundRecord;
+use crate::quant::Precision;
+
+/// Everything a policy may consult when assigning the round's precisions.
+pub struct PolicyCtx<'a> {
+    /// 1-based communication round about to run.
+    pub round: usize,
+    /// Total fleet size N (assignments cover every client, selected or
+    /// not, so selection stays independent of the policy).
+    pub clients: usize,
+    /// Configured server receiver SNR in dB.
+    pub snr_db: f32,
+    /// The previous round's record (None on the first round).
+    pub prev: Option<&'a RoundRecord>,
+}
+
+/// Per-round precision assignment for the whole fleet.
+///
+/// Contract: `assign_into` fills `out` with exactly `ctx.clients` levels
+/// drawn from [`levels`](Self::levels), and allocates nothing once `out`
+/// has warmed to fleet capacity (the zero-alloc round contract).
+///
+/// `assign_into` must be a pure function of the policy's configuration
+/// and `ctx` — NOT of how many times it has been called: the coordinator
+/// invokes it once at construction (with `round: 1, prev: None`, to size
+/// the client fleet) and then once per round, so round 1 is assigned
+/// twice.  Derive any "progress" from `ctx.round`/`ctx.prev`, never from
+/// an internal call counter.
+pub trait PrecisionPolicy {
+    /// Fill `out` with one precision per client for this round.
+    fn assign_into(&mut self, ctx: &PolicyCtx<'_>, out: &mut Vec<Precision>)
+        -> Result<()>;
+
+    /// Every level the policy may ever assign — drives artifact warmup and
+    /// the end-of-run requantization report.
+    fn levels(&self) -> Vec<Precision>;
+
+    /// Report label (the scheme string for the static policy).
+    fn label(&self) -> String;
+}
+
+/// The paper's static group scheme, every round (the default policy).
+pub struct StaticScheme {
+    scheme: Scheme,
+}
+
+impl StaticScheme {
+    pub fn new(scheme: Scheme) -> Self {
+        StaticScheme { scheme }
+    }
+}
+
+impl PrecisionPolicy for StaticScheme {
+    fn assign_into(
+        &mut self,
+        ctx: &PolicyCtx<'_>,
+        out: &mut Vec<Precision>,
+    ) -> Result<()> {
+        self.scheme.client_precisions_into(ctx.clients, out)
+    }
+
+    fn levels(&self) -> Vec<Precision> {
+        self.scheme.distinct_levels()
+    }
+
+    fn label(&self) -> String {
+        self.scheme.to_string()
+    }
+}
+
+/// SNR-adaptive bit selection: run the whole fleet at the cheapest level
+/// whose quantization noise still sits at or below the channel noise
+/// floor.
+///
+/// Rationale: b-bit quantization buys ≈6.02·b dB of SQNR, so payload
+/// precision beyond `snr_db / 6.02` bits disappears under the receiver
+/// AWGN — energy spent on it is wasted.  With `anneal_every = e > 0` the
+/// policy additionally steps one ladder level down every `e` rounds
+/// (precision annealing: late-training updates tolerate coarser grids),
+/// making the assignment genuinely round-dependent.
+pub struct SnrAdaptive {
+    /// Candidate levels, descending bits (defaults to the scheme ladder
+    /// [32, 24, 16, 12, 8, 6, 4]).
+    ladder: Vec<Precision>,
+    /// Step down one ladder level every this many rounds (0 = off).
+    anneal_every: usize,
+    /// Known run SNR, when constructed from a config: lets
+    /// [`levels`](PrecisionPolicy::levels) report only *reachable* levels
+    /// so warmup compiles and requant evals skip unreachable precisions.
+    snr_hint_db: Option<f32>,
+}
+
+impl SnrAdaptive {
+    pub fn new() -> Self {
+        SnrAdaptive {
+            ladder: SCHEME_LEVELS.iter().map(|&b| Precision::of(b)).collect(),
+            anneal_every: 0,
+            snr_hint_db: None,
+        }
+    }
+
+    pub fn with_annealing(mut self, every: usize) -> Self {
+        self.anneal_every = every;
+        self
+    }
+
+    /// Declare the run's (fixed) channel SNR so `levels()` can prune
+    /// unreachable ladder entries.
+    pub fn with_snr_hint(mut self, snr_db: f32) -> Self {
+        self.snr_hint_db = Some(snr_db);
+        self
+    }
+
+    /// Ladder index of the cheapest level still reaching the SNR target.
+    fn base_index(&self, snr_db: f32) -> usize {
+        // ≈6.02 dB of SQNR per bit
+        let target_bits = (snr_db / 6.02).ceil();
+        let mut idx = 0usize;
+        for (i, p) in self.ladder.iter().enumerate() {
+            if (p.bits() as f32) >= target_bits {
+                idx = i; // descending ladder: keep walking down while >= target
+            } else {
+                break;
+            }
+        }
+        idx
+    }
+}
+
+impl Default for SnrAdaptive {
+    fn default() -> Self {
+        SnrAdaptive::new()
+    }
+}
+
+impl PrecisionPolicy for SnrAdaptive {
+    fn assign_into(
+        &mut self,
+        ctx: &PolicyCtx<'_>,
+        out: &mut Vec<Precision>,
+    ) -> Result<()> {
+        let mut idx = self.base_index(ctx.snr_db);
+        if self.anneal_every > 0 {
+            idx = (idx + (ctx.round.saturating_sub(1)) / self.anneal_every)
+                .min(self.ladder.len() - 1);
+        }
+        let p = self.ladder[idx];
+        out.clear();
+        out.resize(ctx.clients, p);
+        Ok(())
+    }
+
+    fn levels(&self) -> Vec<Precision> {
+        match self.snr_hint_db {
+            // the policy only ever walks DOWN from the SNR-selected base
+            Some(snr) => {
+                let base = self.base_index(snr);
+                if self.anneal_every > 0 {
+                    self.ladder[base..].to_vec()
+                } else {
+                    vec![self.ladder[base]]
+                }
+            }
+            // no hint (hand-constructed): every ladder level is possible
+            None => self.ladder.clone(),
+        }
+    }
+
+    fn label(&self) -> String {
+        if self.anneal_every > 0 {
+            format!("snr-adaptive/anneal{}", self.anneal_every)
+        } else {
+            "snr-adaptive".to_string()
+        }
+    }
+}
+
+/// The built-in policy named by the config's [`PolicyKind`].
+pub fn from_config(kind: PolicyKind, cfg: &RunConfig) -> Box<dyn PrecisionPolicy> {
+    match kind {
+        PolicyKind::Static => Box::new(StaticScheme::new(cfg.scheme.clone())),
+        PolicyKind::SnrAdaptive => {
+            Box::new(SnrAdaptive::new().with_snr_hint(cfg.channel.snr_db))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(round: usize, clients: usize, snr_db: f32) -> PolicyCtx<'static> {
+        PolicyCtx { round, clients, snr_db, prev: None }
+    }
+
+    #[test]
+    fn static_policy_matches_scheme_expansion() {
+        let scheme = Scheme::parse("16,8,4").unwrap();
+        let mut policy = StaticScheme::new(scheme.clone());
+        let mut out = Vec::new();
+        for t in 1..=3 {
+            policy.assign_into(&ctx(t, 15, 20.0), &mut out).unwrap();
+            assert_eq!(out, scheme.client_precisions(15).unwrap(), "round {t}");
+        }
+        assert_eq!(policy.levels(), scheme.distinct_levels());
+        assert_eq!(policy.label(), "16,8,4");
+    }
+
+    #[test]
+    fn static_policy_rejects_undivisible_fleet() {
+        let mut policy = StaticScheme::new(Scheme::parse("16,8,4").unwrap());
+        let mut out = Vec::new();
+        assert!(policy.assign_into(&ctx(1, 14, 20.0), &mut out).is_err());
+    }
+
+    #[test]
+    fn snr_adaptive_tracks_channel_quality() {
+        let mut policy = SnrAdaptive::new();
+        let mut out = Vec::new();
+        // 20 dB: ceil(20/6.02) = 4 target bits -> cheapest level >= 4 is 4
+        policy.assign_into(&ctx(1, 5, 20.0), &mut out).unwrap();
+        assert_eq!(out, vec![Precision::of(4); 5]);
+        // 45 dB: target 8 bits
+        policy.assign_into(&ctx(1, 5, 45.0), &mut out).unwrap();
+        assert_eq!(out, vec![Precision::of(8); 5]);
+        // 90 dB: target 15 -> 16-bit
+        policy.assign_into(&ctx(1, 5, 90.0), &mut out).unwrap();
+        assert_eq!(out, vec![Precision::of(16); 5]);
+        // absurdly clean channel: capped at the top of the ladder
+        policy.assign_into(&ctx(1, 5, 500.0), &mut out).unwrap();
+        assert_eq!(out, vec![Precision::of(32); 5]);
+    }
+
+    #[test]
+    fn snr_hint_prunes_unreachable_levels() {
+        // no hint: conservative full ladder
+        assert_eq!(SnrAdaptive::new().levels().len(), SCHEME_LEVELS.len());
+        // hint, no annealing: exactly the one reachable level
+        let p = SnrAdaptive::new().with_snr_hint(20.0);
+        assert_eq!(p.levels(), vec![Precision::of(4)]);
+        // hint + annealing: the base level and everything below it
+        let p = SnrAdaptive::new().with_snr_hint(90.0).with_annealing(3);
+        assert_eq!(
+            p.levels().iter().map(|p| p.bits()).collect::<Vec<_>>(),
+            vec![16, 12, 8, 6, 4]
+        );
+        // from_config wires the hint from the run config
+        let mut cfg = RunConfig::default();
+        cfg.policy = PolicyKind::SnrAdaptive;
+        cfg.channel.snr_db = 45.0;
+        assert_eq!(
+            from_config(cfg.policy, &cfg).levels(),
+            vec![Precision::of(8)]
+        );
+    }
+
+    #[test]
+    fn snr_adaptive_annealing_descends_the_ladder() {
+        let mut policy = SnrAdaptive::new().with_annealing(2);
+        let mut out = Vec::new();
+        let mut seen = Vec::new();
+        for t in 1..=8 {
+            policy.assign_into(&ctx(t, 3, 90.0), &mut out).unwrap();
+            seen.push(out[0].bits());
+        }
+        // base 16-bit at 90 dB, stepping down every 2 rounds
+        assert_eq!(seen, vec![16, 16, 12, 12, 8, 8, 6, 6]);
+        // never leaves the ladder
+        let mut late = Vec::new();
+        policy.assign_into(&ctx(1000, 3, 90.0), &mut late).unwrap();
+        assert_eq!(late[0].bits(), 4);
+    }
+}

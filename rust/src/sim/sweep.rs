@@ -1,0 +1,433 @@
+//! The sweep driver: run a scheme × SNR × aggregator config grid in ONE
+//! process, reusing one runtime and one scratch arena across cells, and
+//! emit a consolidated JSON report (`mpota sweep` on the CLI).
+//!
+//! Two modes:
+//!
+//! * [`run_fl_sweep`] — full federated runs per cell (requires PJRT
+//!   artifacts).  One `Rc<Runtime>` is shared by every cell so artifacts
+//!   compile once, and the finished cell's [`Arena`] seeds the next
+//!   cell's buffers.
+//! * [`run_channel_sweep`] — aggregation-only cells (no training, no
+//!   artifacts): synthetic payloads are fake-quantized per the cell's
+//!   precision policy and pushed through the cell's channel model and
+//!   aggregator, measuring aggregation MSE against the noise-free fleet
+//!   mean.  Every cell re-derives the same RNG streams from the root
+//!   seed, so cells see *paired* channel/payload realisations — the grid
+//!   isolates the scheme/SNR/architecture effect.  This is the mode CI
+//!   exercises.
+
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Aggregation, PolicyKind, RunConfig};
+use crate::fl::{self, Scheme};
+use crate::json::Value;
+use crate::kernels::PayloadPlane;
+use crate::quant;
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::tensor;
+
+use super::{aggregator, channel_model, policy, Arena, Experiment, PolicyCtx, Session};
+
+/// A config grid: the base run crossed with schemes × SNRs × aggregators.
+pub struct SweepSpec {
+    /// Every cell starts from this config.
+    pub base: RunConfig,
+    /// Precision schemes to sweep (static policy per cell).
+    pub schemes: Vec<Scheme>,
+    /// Server receiver SNRs (dB) to sweep.
+    pub snrs_db: Vec<f32>,
+    /// Aggregation architectures to sweep.
+    pub aggregations: Vec<Aggregation>,
+    /// Payload length for the channel-only mode (full FL runs use the
+    /// model's parameter count instead).
+    pub payload_len: usize,
+}
+
+impl SweepSpec {
+    /// A 1×1×1 grid over the base config; widen the axes from there.
+    pub fn new(base: RunConfig) -> Self {
+        SweepSpec {
+            schemes: vec![base.scheme.clone()],
+            snrs_db: vec![base.channel.snr_db],
+            aggregations: vec![base.aggregation],
+            payload_len: 4096,
+            base,
+        }
+    }
+
+    /// Number of grid cells.
+    pub fn grid_size(&self) -> usize {
+        self.schemes.len() * self.snrs_db.len() * self.aggregations.len()
+    }
+
+    /// Reject grids whose axes the per-cell policy would silently ignore:
+    /// a non-static precision policy never reads the cell's scheme, so a
+    /// multi-scheme grid would emit identical results under different
+    /// scheme labels.
+    fn validate(&self) -> Result<()> {
+        if self.base.policy != PolicyKind::Static && self.schemes.len() > 1 {
+            bail!(
+                "policy '{}' ignores the scheme; a multi-scheme sweep axis \
+                 requires the static policy",
+                self.base.policy
+            );
+        }
+        Ok(())
+    }
+
+    fn cell_config(&self, scheme: &Scheme, snr_db: f32, agg: Aggregation) -> RunConfig {
+        let mut cfg = self.base.clone();
+        cfg.scheme = scheme.clone();
+        cfg.channel.snr_db = snr_db;
+        cfg.aggregation = agg;
+        cfg
+    }
+
+    fn grid_json(&self) -> Value {
+        let mut g = Value::object();
+        g.set(
+            "schemes",
+            Value::Array(
+                self.schemes.iter().map(|s| Value::Str(s.to_string())).collect(),
+            ),
+        );
+        g.set(
+            "snrs_db",
+            Value::Array(
+                self.snrs_db.iter().map(|&s| Value::Num(s as f64)).collect(),
+            ),
+        );
+        g.set(
+            "aggregations",
+            Value::Array(
+                self.aggregations
+                    .iter()
+                    .map(|a| Value::Str(a.to_string()))
+                    .collect(),
+            ),
+        );
+        g
+    }
+}
+
+/// Consolidated sweep outcome: one JSON document with the grid axes, one
+/// entry per cell, and timing.
+pub struct SweepReport {
+    pub json: Value,
+}
+
+impl SweepReport {
+    /// Number of cell entries in the report.
+    pub fn cells(&self) -> usize {
+        self.json
+            .get("cells")
+            .and_then(|c| c.as_array().ok())
+            .map(|a| a.len())
+            .unwrap_or(0)
+    }
+
+    pub fn to_string_pretty(&self) -> String {
+        self.json.to_string_pretty()
+    }
+
+    /// Write the report (pretty JSON) to `path`, creating parent dirs.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+/// Full federated sweep: one `Experiment` per cell over a shared runtime
+/// and a recycled arena.  Requires PJRT artifacts.
+pub fn run_fl_sweep(spec: &SweepSpec) -> Result<SweepReport> {
+    let runtime = Rc::new(Runtime::load(&spec.base.artifacts_dir)?);
+    run_fl_sweep_on(spec, runtime)
+}
+
+/// [`run_fl_sweep`] over an already-loaded runtime (callers that also use
+/// the runtime for pretraining or warm pools pass it in here).
+pub fn run_fl_sweep_on(spec: &SweepSpec, runtime: Rc<Runtime>) -> Result<SweepReport> {
+    spec.validate()?;
+    let t0 = Instant::now();
+    let mut arena = Arena::default();
+    let mut cells = Vec::new();
+    for scheme in &spec.schemes {
+        for &snr in &spec.snrs_db {
+            for &agg in &spec.aggregations {
+                let cfg = spec.cell_config(scheme, snr, agg);
+                let cell_t0 = Instant::now();
+                let mut exp = Experiment::builder(cfg)
+                    .runtime(runtime.clone())
+                    .arena(arena)
+                    .build()?;
+                let report = exp.run()?;
+                arena = exp.into_arena();
+
+                let mean_mse = mean_of(report.log.rounds.iter().map(|r| r.ota_mse));
+                let mut c = Value::object();
+                c.set("scheme", Value::Str(scheme.to_string()));
+                c.set("snr_db", Value::Num(snr as f64));
+                c.set("aggregation", Value::Str(agg.to_string()));
+                c.set("label", Value::Str(report.label.clone()));
+                c.set("final_accuracy", Value::Num(report.final_accuracy));
+                c.set("final_loss", Value::Num(report.final_loss));
+                c.set(
+                    "best_accuracy",
+                    Value::Num(report.log.best_accuracy()),
+                );
+                c.set(
+                    "rounds_to_90",
+                    match report.rounds_to_90 {
+                        Some(r) => Value::Num(r as f64),
+                        None => Value::Null,
+                    },
+                );
+                c.set("mean_ota_mse", Value::Num(mean_mse));
+                c.set("energy_j", Value::Num(report.energy.actual_joules));
+                c.set(
+                    "energy_saving_vs_32_pct",
+                    Value::Num(report.energy.saving_vs_32()),
+                );
+                c.set("wall_secs", Value::Num(cell_t0.elapsed().as_secs_f64()));
+                cells.push(c);
+            }
+        }
+    }
+    Ok(SweepReport { json: consolidated(spec, "fl", cells, t0.elapsed().as_secs_f64()) })
+}
+
+/// Aggregation-only sweep: no training, no artifacts — synthetic payloads
+/// through the cell's policy, channel model and aggregator.  Rows hold
+/// the fake-quantized decimal payloads (what analog clients transmit);
+/// the digital baseline re-encodes them for transport.
+pub fn run_channel_sweep(spec: &SweepSpec) -> Result<SweepReport> {
+    spec.validate()?;
+    let t0 = Instant::now();
+    let base = &spec.base;
+    let n = spec.payload_len;
+    let rounds = base.rounds;
+    let clients = base.clients;
+    let root = Rng::seed_from(base.seed);
+
+    // cross-cell recycled buffers (the one arena of the sweep)
+    let mut agg_scratch = super::AggScratch::default();
+    let mut round_channel = crate::channel::RoundChannel::empty();
+    let mut plane = PayloadPlane::new();
+    let mut assigned = Vec::new();
+    let mut ideal = Vec::new();
+
+    let mut cells = Vec::new();
+    for scheme in &spec.schemes {
+        for &snr in &spec.snrs_db {
+            for &agg in &spec.aggregations {
+                let cfg = spec.cell_config(scheme, snr, agg);
+                let cell_t0 = Instant::now();
+                // identical streams per cell => paired realisations
+                let mut payload_rng = root.stream("sweep-payload");
+                let mut session = Session::with_state(
+                    channel_model::from_config(&cfg.channel),
+                    aggregator::from_config(cfg.aggregation),
+                    root.stream("sweep-channel"),
+                    root.stream("sweep-noise"),
+                    cfg.threads,
+                    std::mem::take(&mut agg_scratch),
+                    std::mem::take(&mut round_channel),
+                );
+                let mut pol = policy::from_config(cfg.policy, &cfg);
+
+                let mut mse_sum = 0.0f64;
+                let mut part_sum = 0usize;
+                let mut channel_uses = 0u64;
+                let mut bits = 0u64;
+                let mut lost_rounds = 0usize;
+                for t in 1..=rounds {
+                    pol.assign_into(
+                        &PolicyCtx {
+                            round: t,
+                            clients,
+                            snr_db: cfg.channel.snr_db,
+                            prev: None,
+                        },
+                        &mut assigned,
+                    )?;
+                    plane.reset(clients, n);
+                    for (k, &p) in assigned.iter().enumerate() {
+                        let row = plane.row_mut(k);
+                        payload_rng.fill_normal(row, 0.0, 1.0);
+                        quant::fake_quant_inplace(row, p);
+                    }
+                    fl::mean_plane_into(&plane, &mut ideal, cfg.threads);
+                    let stats = session.aggregate(t, &plane, &assigned);
+                    if stats.participants > 0 {
+                        mse_sum += tensor::mse(session.result(), &ideal);
+                    } else {
+                        // fully-silenced round: total loss, not 0-MSE —
+                        // excluded from the mean and counted separately
+                        lost_rounds += 1;
+                    }
+                    part_sum += stats.participants;
+                    channel_uses += stats.channel_uses;
+                    bits += stats.bits_transmitted;
+                }
+
+                let mut c = Value::object();
+                c.set("scheme", Value::Str(scheme.to_string()));
+                c.set("snr_db", Value::Num(snr as f64));
+                c.set("aggregation", Value::Str(agg.to_string()));
+                c.set("rounds", Value::Num(rounds as f64));
+                let delivered = rounds - lost_rounds;
+                c.set(
+                    "mean_mse_vs_ideal",
+                    if delivered > 0 {
+                        Value::Num(mse_sum / delivered as f64)
+                    } else {
+                        Value::Null // every round lost: no MSE to report
+                    },
+                );
+                c.set("lost_rounds", Value::Num(lost_rounds as f64));
+                c.set(
+                    "mean_participants",
+                    Value::Num(part_sum as f64 / rounds as f64),
+                );
+                c.set(
+                    "channel_uses_per_round",
+                    Value::Num(channel_uses as f64 / rounds as f64),
+                );
+                c.set("bits_per_round", Value::Num(bits as f64 / rounds as f64));
+                c.set("wall_secs", Value::Num(cell_t0.elapsed().as_secs_f64()));
+                cells.push(c);
+
+                let (a, ch) = session.into_state();
+                agg_scratch = a;
+                round_channel = ch;
+            }
+        }
+    }
+    let mut json = consolidated(spec, "channel-only", cells, t0.elapsed().as_secs_f64());
+    json.set("payload_len", Value::Num(n as f64));
+    json.set("clients", Value::Num(clients as f64));
+    Ok(SweepReport { json })
+}
+
+fn consolidated(
+    spec: &SweepSpec,
+    mode: &str,
+    cells: Vec<Value>,
+    wall_secs: f64,
+) -> Value {
+    let mut o = Value::object();
+    o.set("mode", Value::Str(mode.to_string()));
+    o.set("grid", spec.grid_json());
+    o.set("policy", Value::Str(spec.base.policy.to_string()));
+    o.set("seed", Value::from_u64(spec.base.seed));
+    o.set("rounds", Value::Num(spec.base.rounds as f64));
+    o.set("cells", Value::Array(cells));
+    o.set("wall_secs", Value::Num(wall_secs));
+    o
+}
+
+fn mean_of(xs: impl Iterator<Item = f64>) -> f64 {
+    let (mut sum, mut n) = (0.0f64, 0usize);
+    for x in xs {
+        sum += x;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> SweepSpec {
+        let mut base = RunConfig::default();
+        base.rounds = 2;
+        base.clients = 6;
+        base.clients_per_round = 6;
+        let mut spec = SweepSpec::new(base);
+        spec.schemes = vec![
+            Scheme::parse("16,8,4").unwrap(),
+            Scheme::parse("8,8,8").unwrap(),
+        ];
+        spec.snrs_db = vec![5.0, 20.0];
+        spec.aggregations = vec![Aggregation::OtaAnalog, Aggregation::Ideal];
+        spec.payload_len = 512;
+        spec
+    }
+
+    #[test]
+    fn channel_sweep_covers_the_grid() {
+        let spec = tiny_spec();
+        assert_eq!(spec.grid_size(), 8);
+        let report = run_channel_sweep(&spec).unwrap();
+        assert_eq!(report.cells(), 8);
+        let cells = report.json.get("cells").unwrap().as_array().unwrap();
+        for c in cells {
+            assert!(c.get("mean_mse_vs_ideal").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(c.get("mean_participants").unwrap().as_f64().unwrap() > 0.0);
+        }
+        // paired realisations: at fixed scheme+aggregation, MSE falls with SNR
+        let mse = |scheme: &str, snr: f64, agg: &str| {
+            cells
+                .iter()
+                .find(|c| {
+                    c.get("scheme").unwrap().as_str().unwrap() == scheme
+                        && c.get("snr_db").unwrap().as_f64().unwrap() == snr
+                        && c.get("aggregation").unwrap().as_str().unwrap() == agg
+                })
+                .unwrap()
+                .get("mean_mse_vs_ideal")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        assert!(mse("16,8,4", 5.0, "ota") > mse("16,8,4", 20.0, "ota"));
+        // the noise-free oracle is exact
+        assert_eq!(mse("8,8,8", 20.0, "ideal"), 0.0);
+    }
+
+    #[test]
+    fn scheme_axis_requires_static_policy() {
+        let mut spec = tiny_spec();
+        spec.base.policy = PolicyKind::SnrAdaptive;
+        // two schemes the policy would never read: reject loudly
+        assert!(run_channel_sweep(&spec).is_err());
+        // a single-scheme grid is fine (the axis carries no information)
+        spec.schemes.truncate(1);
+        assert_eq!(run_channel_sweep(&spec).unwrap().cells(), 4);
+    }
+
+    #[test]
+    fn channel_sweep_is_deterministic() {
+        let spec = tiny_spec();
+        let a = run_channel_sweep(&spec).unwrap();
+        let b = run_channel_sweep(&spec).unwrap();
+        // wall_secs differ; compare the science fields cell by cell
+        let (ca, cb) = (
+            a.json.get("cells").unwrap().as_array().unwrap(),
+            b.json.get("cells").unwrap().as_array().unwrap(),
+        );
+        assert_eq!(ca.len(), cb.len());
+        for (x, y) in ca.iter().zip(cb.iter()) {
+            for key in ["scheme", "snr_db", "aggregation", "mean_mse_vs_ideal"] {
+                assert_eq!(x.get(key), y.get(key), "{key}");
+            }
+        }
+    }
+}

@@ -1,9 +1,13 @@
-//! Steady-state allocation audit for the server round path.
+//! Steady-state allocation audit for the server round path — through the
+//! composable trait seams.
 //!
 //! A counting global allocator wraps the system allocator; after a warmup
 //! pass that grows every scratch buffer to capacity, the full server-side
-//! round path (selection → channel draw → analog/digital/ideal
-//! aggregation → global-model update) must perform ZERO heap allocations.
+//! round path (policy assignment → selection → channel draw → analog /
+//! digital / ideal aggregation → observer dispatch → global-model update)
+//! must perform ZERO heap allocations — including the dynamic dispatch
+//! through `Box<dyn Aggregator>`, `Box<dyn ChannelModel>`,
+//! `Box<dyn PrecisionPolicy>` and `Box<dyn RoundObserver>`.
 //!
 //! Scope: this is the post-training half of `Coordinator::round()` — the
 //! client PJRT dispatch (`Runtime::train_step`) allocates literals inside
@@ -41,17 +45,46 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
-use mpota::channel::{pilot, ChannelConfig, RoundChannel};
-use mpota::fl::{fedavg, Selection};
+use mpota::channel::ChannelConfig;
+use mpota::fl::{Scheme, Selection};
 use mpota::kernels::PayloadPlane;
-use mpota::ota;
+use mpota::metrics::RoundRecord;
+use mpota::ota::AggregateStats;
 use mpota::quant::{self, Precision, Rounding};
 use mpota::rng::Rng;
+use mpota::sim::{
+    AnalogOta, DigitalOrthogonal, IdealFedAvg, PolicyCtx, PrecisionPolicy,
+    RayleighPilot, RoundObserver, Session, StaticScheme,
+};
 use mpota::tensor;
+
+/// Allocation-free observer: bumps plain counters on every hook.  The
+/// counters exist to give the hooks real work; only the allocation count
+/// is asserted (observer *semantics* are covered in `tests/sim.rs`).
+#[derive(Default)]
+#[allow(dead_code)]
+struct TallyObserver {
+    rounds: u64,
+    channels: u64,
+    aggregates: u64,
+}
+
+impl RoundObserver for TallyObserver {
+    fn on_round_start(&mut self, _round: usize) {
+        self.rounds += 1;
+    }
+    fn on_channel(&mut self, _round: usize, _channel: &mpota::channel::RoundChannel) {
+        self.channels += 1;
+    }
+    fn on_aggregate(&mut self, _round: usize, _stats: &AggregateStats) {
+        self.aggregates += 1;
+    }
+    fn on_round_end(&mut self, _record: &RoundRecord) {}
+}
 
 #[test]
 fn steady_state_round_path_is_allocation_free() {
-    let k = 8usize;
+    let k = 9usize;
     let n = 10_000usize;
     let cfg = ChannelConfig::default();
     let layout = mpota::tensor::ParamLayout::from_manifest(
@@ -60,36 +93,67 @@ fn steady_state_round_path_is_allocation_free() {
     .unwrap();
     assert_eq!(layout.total, n);
 
-    // run-level state (allocated once, like Coordinator::new does)
+    // run-level state (allocated once, like Coordinator::from_parts does)
     let root = Rng::seed_from(42);
     let mut select_rng = root.stream("select");
-    let mut channel_rng = root.stream("channel");
-    let mut noise_rng = root.stream("noise");
     let mut theta = vec![0.0f32; n];
     root.stream("init").fill_normal(&mut theta, 0.0, 0.5);
-    let precisions: Vec<Precision> =
-        (0..k).map(|i| Precision::of([16u8, 8, 4][i % 3])).collect();
 
-    // the round scratch arena
+    // the trait-object seams (each an owned Box, like the coordinator's)
+    let mut policy: Box<dyn PrecisionPolicy> =
+        Box::new(StaticScheme::new(Scheme::parse("16,8,4").unwrap()));
+    let mut analog = Session::new(
+        Box::new(RayleighPilot::new(cfg.clone())),
+        Box::new(AnalogOta),
+        root.stream("channel"),
+        root.stream("noise"),
+        1,
+    );
+    analog.add_observer(Box::new(TallyObserver::default()));
+    let mut digital = Session::new(
+        Box::new(RayleighPilot::new(cfg.clone())),
+        Box::new(DigitalOrthogonal),
+        root.stream("channel-d"),
+        root.stream("noise-d"),
+        1,
+    );
+    let mut ideal = Session::new(
+        Box::new(RayleighPilot::new(cfg)),
+        Box::new(IdealFedAvg),
+        root.stream("channel-i"),
+        root.stream("noise-i"),
+        1,
+    );
+
+    // the coordinator-side round scratch
+    let mut assigned: Vec<Precision> = Vec::new();
     let mut selected: Vec<usize> = Vec::new();
+    let mut precisions: Vec<Precision> = Vec::new();
     let mut plane = PayloadPlane::new();
-    let mut round_channel = RoundChannel::empty();
-    let pilot_seq = pilot::pilot_sequence(cfg.pilot_len);
-    let mut ota_scratch = ota::analog::OtaScratch::new();
-    let mut agg = Vec::new();
 
     let selection = Selection::UniformK(k);
     let mut round = |t: usize,
                      theta: &mut Vec<f32>,
                      select_rng: &mut Rng,
-                     channel_rng: &mut Rng,
-                     noise_rng: &mut Rng| {
+                     policy: &mut Box<dyn PrecisionPolicy>,
+                     analog: &mut Session,
+                     digital: &mut Session,
+                     ideal: &mut Session| {
+        // per-round policy assignment through the trait object
+        policy
+            .assign_into(
+                &PolicyCtx { round: t, clients: k, snr_db: 20.0, prev: None },
+                &mut assigned,
+            )
+            .unwrap();
         // selection + payload build (stand-in for the client loop: fused
         // re-quantize the broadcast model into each plane row)
         selection.select_into(k, t, select_rng, &mut selected);
         plane.reset(selected.len(), n);
+        precisions.clear();
         for slot in 0..selected.len() {
-            let p = precisions[selected[slot]];
+            let p = assigned[selected[slot]];
+            precisions.push(p);
             quant::fake_quant_layout_into(
                 plane.row_mut(slot),
                 theta.as_slice(),
@@ -99,40 +163,51 @@ fn steady_state_round_path_is_allocation_free() {
                 1,
             );
         }
-        // analog OTA path
-        round_channel.draw_into(&cfg, selected.len(), channel_rng, &pilot_seq);
-        let stats = ota::analog::aggregate_plane_into(
-            &plane,
-            &round_channel,
-            noise_rng,
-            &mut ota_scratch,
-            1,
-        );
+        // analog OTA path through Session + observers
+        analog.begin_round(t);
+        let stats = analog.aggregate(t, &plane, &precisions);
         if stats.participants > 0 {
-            tensor::axpy_par(theta, 1.0, &ota_scratch.y_re, 1);
+            tensor::axpy_par(theta, 1.0, analog.result(), 1);
         }
+        analog.end_round(&RoundRecord::default());
         // digital + ideal baselines over the same plane
-        let active = &precisions[..selected.len()];
-        let dstats = ota::digital::aggregate_plane_into(&plane, active, &mut agg, 1);
+        let dstats = digital.aggregate(t, &plane, &precisions);
         assert_eq!(dstats.participants, selected.len());
-        fedavg::mean_plane_into(&plane, &mut agg, 1);
-        std::hint::black_box((&agg, stats.participants));
+        let istats = ideal.aggregate(t, &plane, &precisions);
+        assert_eq!(istats.participants, selected.len());
+        std::hint::black_box((digital.result().len(), ideal.result().len()));
     };
 
     // warmup: two rounds grow every buffer to steady-state capacity
     for t in 1..=2 {
-        round(t, &mut theta, &mut select_rng, &mut channel_rng, &mut noise_rng);
+        round(
+            t,
+            &mut theta,
+            &mut select_rng,
+            &mut policy,
+            &mut analog,
+            &mut digital,
+            &mut ideal,
+        );
     }
 
     let before = ALLOCS.load(Ordering::SeqCst);
     for t in 3..=8 {
-        round(t, &mut theta, &mut select_rng, &mut channel_rng, &mut noise_rng);
+        round(
+            t,
+            &mut theta,
+            &mut select_rng,
+            &mut policy,
+            &mut analog,
+            &mut digital,
+            &mut ideal,
+        );
     }
     let after = ALLOCS.load(Ordering::SeqCst);
     assert_eq!(
         after - before,
         0,
-        "steady-state round path allocated {} times",
+        "steady-state round path allocated {} times through the trait seams",
         after - before
     );
 }

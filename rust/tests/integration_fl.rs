@@ -4,9 +4,10 @@
 //! Kept small (2 rounds, few hundred samples) so the suite stays fast on
 //! one core; the full-scale runs live in examples/ and benches/.
 
-use mpota::config::{Aggregation, RunConfig};
+use mpota::config::{Aggregation, PolicyKind, RunConfig};
 use mpota::coordinator::Coordinator;
 use mpota::fl::Scheme;
+use mpota::sim::Experiment;
 
 fn artifacts_present() -> bool {
     if !cfg!(feature = "pjrt") {
@@ -161,4 +162,47 @@ fn config_validation_rejects_undivisible_scheme() {
     cfg.clients = 14; // not divisible by 3 groups
     cfg.clients_per_round = 14;
     assert!(cfg.validate().is_err());
+}
+
+#[test]
+fn experiment_builder_defaults_match_coordinator() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut cfg = tiny_cfg();
+    cfg.rounds = 1;
+    let report_coord = Coordinator::new(cfg.clone()).unwrap().run().unwrap();
+    let report_exp = Experiment::builder(cfg).build().unwrap().run().unwrap();
+    // the builder with default parts IS the coordinator: bit-identical
+    assert_eq!(
+        report_coord.final_accuracy.to_bits(),
+        report_exp.final_accuracy.to_bits()
+    );
+    assert_eq!(
+        report_coord.final_loss.to_bits(),
+        report_exp.final_loss.to_bits()
+    );
+    assert_eq!(
+        report_coord.log.rounds[0].ota_mse.to_bits(),
+        report_exp.log.rounds[0].ota_mse.to_bits()
+    );
+    assert_eq!(report_coord.label, report_exp.label);
+}
+
+#[test]
+fn snr_adaptive_policy_and_awgn_model_run_end_to_end() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut cfg = tiny_cfg();
+    cfg.rounds = 1;
+    cfg.policy = PolicyKind::SnrAdaptive;
+    cfg.channel.model = mpota::channel::FadingKind::Awgn;
+    let mut exp = Experiment::builder(cfg).build().unwrap();
+    let report = exp.run().unwrap();
+    assert_eq!(report.log.rounds.len(), 1);
+    // AWGN model: nobody is ever silenced
+    assert_eq!(report.log.rounds[0].participants, 15);
+    assert!(report.final_loss.is_finite());
+    assert!(report.label.starts_with("snr-adaptive@"));
 }

@@ -1,0 +1,381 @@
+//! The composable simulation API's contracts:
+//!
+//! 1. GOLDENS — the default trait impls ([`AnalogOta`], [`DigitalOrthogonal`],
+//!    [`IdealFedAvg`] behind a [`Session`], [`StaticScheme`] policy) are
+//!    bit-identical per seed to the pre-redesign enum-dispatch paths
+//!    (direct `aggregate_plane_into` calls over a hand-drawn channel) at
+//!    threads=1 AND threads=N.
+//! 2. SEAMS — a mock [`ChannelModel`] and a counting [`RoundObserver`]
+//!    plug in and are actually driven; a custom [`Aggregator`] works end
+//!    to end through the session.
+//! 3. RNG discipline — aggregators that need no channel skip the draw and
+//!    its RNG consumption, exactly like the old enum dispatch.
+
+use mpota::channel::{pilot, ChannelConfig, ClientChannel, Precode, RoundChannel, C32};
+use mpota::fl::{self, Scheme};
+use mpota::kernels::PayloadPlane;
+use mpota::ota::{self, AggregateStats};
+use mpota::quant::{fake_quant, Precision};
+use mpota::rng::Rng;
+use mpota::sim::{
+    AggCtx, AggScratch, Aggregator, AnalogOta, ChannelModel, DigitalOrthogonal,
+    IdealFedAvg, PolicyCtx, PrecisionPolicy, RayleighPilot, RoundObserver, Session,
+    StaticScheme,
+};
+
+const K: usize = 15;
+const N: usize = 20_000; // large even N: crosses the parallel thresholds
+
+fn mixed_precisions() -> Vec<Precision> {
+    let scheme = Scheme::parse("16,8,4").unwrap();
+    scheme.client_precisions(K).unwrap()
+}
+
+/// K quantized client payloads, shaped like real round traffic.
+fn quantized_plane(seed: u64) -> PayloadPlane {
+    let mut rng = Rng::seed_from(seed);
+    let precisions = mixed_precisions();
+    let rows: Vec<Vec<f32>> = (0..K)
+        .map(|k| {
+            let mut v = vec![0.0f32; N];
+            rng.fill_normal(&mut v, 0.0, 1.0);
+            fake_quant(&v, precisions[k])
+        })
+        .collect();
+    PayloadPlane::from_rows(&rows)
+}
+
+fn default_session(aggregator: Box<dyn Aggregator>, seed: u64, threads: usize) -> Session {
+    let root = Rng::seed_from(seed);
+    Session::new(
+        Box::new(RayleighPilot::new(ChannelConfig::default())),
+        aggregator,
+        root.stream("channel"),
+        root.stream("noise"),
+        threads,
+    )
+}
+
+// ---------------------------------------------------------------- goldens
+
+#[test]
+fn analog_session_bit_identical_to_enum_path() {
+    let plane = quantized_plane(11);
+    let precisions = mixed_precisions();
+    let cfg = ChannelConfig::default();
+    for threads in [1usize, 4] {
+        // pre-redesign path: explicit draw + direct kernel call
+        let root = Rng::seed_from(77);
+        let mut channel_rng = root.stream("channel");
+        let mut noise_rng = root.stream("noise");
+        let pilot_seq = pilot::pilot_sequence(cfg.pilot_len);
+        let mut rc = RoundChannel::empty();
+        rc.draw_into(&cfg, K, &mut channel_rng, &pilot_seq);
+        let mut ota_scratch = ota::analog::OtaScratch::new();
+        let want_stats = ota::analog::aggregate_plane_into(
+            &plane,
+            &rc,
+            &mut noise_rng,
+            &mut ota_scratch,
+            threads,
+        );
+
+        // redesigned path: the same seed through the trait seams
+        let mut session = default_session(Box::new(AnalogOta), 77, threads);
+        let stats = session.aggregate(1, &plane, &precisions);
+
+        assert_eq!(session.result(), &ota_scratch.y_re[..], "threads={threads}");
+        assert_eq!(stats.participants, want_stats.participants);
+        assert_eq!(
+            stats.mse_vs_ideal.to_bits(),
+            want_stats.mse_vs_ideal.to_bits(),
+            "threads={threads}"
+        );
+        assert_eq!(stats.noise_var.to_bits(), want_stats.noise_var.to_bits());
+    }
+}
+
+#[test]
+fn digital_session_bit_identical_to_enum_path() {
+    let plane = quantized_plane(12);
+    let precisions = mixed_precisions();
+    for threads in [1usize, 4] {
+        let mut agg = Vec::new();
+        let want_stats =
+            ota::digital::aggregate_plane_into(&plane, &precisions, &mut agg, threads);
+
+        let mut session = default_session(Box::new(DigitalOrthogonal), 78, threads);
+        let stats = session.aggregate(1, &plane, &precisions);
+
+        assert_eq!(session.result(), &agg[..], "threads={threads}");
+        assert_eq!(stats.participants, want_stats.participants);
+        assert_eq!(stats.channel_uses, want_stats.channel_uses);
+        assert_eq!(stats.bits_transmitted, want_stats.bits_transmitted);
+    }
+}
+
+#[test]
+fn ideal_session_bit_identical_to_enum_path() {
+    let plane = quantized_plane(13);
+    let precisions = mixed_precisions();
+    for threads in [1usize, 4] {
+        let mut want = Vec::new();
+        fl::mean_plane_into(&plane, &mut want, threads);
+
+        let mut session = default_session(Box::new(IdealFedAvg), 79, threads);
+        let stats = session.aggregate(1, &plane, &precisions);
+
+        assert_eq!(session.result(), &want[..], "threads={threads}");
+        assert_eq!(stats.participants, K);
+        assert_eq!(stats.mse_vs_ideal, 0.0);
+    }
+}
+
+#[test]
+fn channelless_aggregators_consume_no_randomness() {
+    // the pre-redesign loop drew a channel ONLY for the analog arm; the
+    // session preserves that draw-for-draw — so the digital/ideal paths
+    // are seed-independent while analog is not
+    let plane = quantized_plane(14);
+    let precisions = mixed_precisions();
+    let run = |agg: Box<dyn Aggregator>, seed: u64| -> Vec<f32> {
+        let mut s = default_session(agg, seed, 1);
+        s.aggregate(1, &plane, &precisions);
+        s.result().to_vec()
+    };
+    assert_eq!(
+        run(Box::new(DigitalOrthogonal), 1),
+        run(Box::new(DigitalOrthogonal), 2)
+    );
+    assert_eq!(run(Box::new(IdealFedAvg), 1), run(Box::new(IdealFedAvg), 2));
+    assert_ne!(run(Box::new(AnalogOta), 1), run(Box::new(AnalogOta), 2));
+}
+
+#[test]
+fn static_policy_bit_identical_to_scheme_expansion() {
+    let scheme = Scheme::parse("24,12,6").unwrap();
+    let want = scheme.client_precisions(15).unwrap();
+    let mut policy: Box<dyn PrecisionPolicy> = Box::new(StaticScheme::new(scheme));
+    let mut out = Vec::new();
+    for t in 1..=5 {
+        policy
+            .assign_into(
+                &PolicyCtx { round: t, clients: 15, snr_db: 20.0, prev: None },
+                &mut out,
+            )
+            .unwrap();
+        assert_eq!(out, want, "round {t}");
+    }
+}
+
+// ----------------------------------------------------------------- seams
+
+/// Mock channel: fixed unit gains, silencing a chosen client — a
+/// stand-in for any alternate fading/CSI model.
+struct MockChannel {
+    silence: usize,
+    snr_db: f32,
+}
+
+impl ChannelModel for MockChannel {
+    fn draw_into(&self, num_clients: usize, _rng: &mut Rng, out: &mut RoundChannel) {
+        out.snr_db = self.snr_db;
+        out.clients.clear();
+        for k in 0..num_clients {
+            if k == self.silence {
+                out.clients.push(ClientChannel {
+                    h: C32::ZERO,
+                    h_est: C32::ZERO,
+                    precode: Precode::Silenced,
+                    effective_gain: None,
+                });
+            } else {
+                out.clients.push(ClientChannel {
+                    h: C32::ONE,
+                    h_est: C32::ONE,
+                    precode: Precode::Transmit(C32::ONE),
+                    effective_gain: Some(C32::ONE),
+                });
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "mock"
+    }
+}
+
+/// Counts every observer hook invocation.
+#[derive(Default)]
+struct CountingObserver {
+    starts: std::rc::Rc<std::cell::RefCell<Counts>>,
+}
+
+#[derive(Default, Debug)]
+struct Counts {
+    round_start: usize,
+    channel: usize,
+    aggregate: usize,
+    round_end: usize,
+}
+
+impl RoundObserver for CountingObserver {
+    fn on_round_start(&mut self, _round: usize) {
+        self.starts.borrow_mut().round_start += 1;
+    }
+    fn on_channel(&mut self, _round: usize, channel: &RoundChannel) {
+        assert!(!channel.clients.is_empty());
+        self.starts.borrow_mut().channel += 1;
+    }
+    fn on_aggregate(&mut self, _round: usize, stats: &AggregateStats) {
+        assert!(stats.participants > 0);
+        self.starts.borrow_mut().aggregate += 1;
+    }
+    fn on_round_end(&mut self, _record: &mpota::metrics::RoundRecord) {
+        self.starts.borrow_mut().round_end += 1;
+    }
+}
+
+#[test]
+fn mock_channel_and_counting_observer_are_driven() {
+    let plane = quantized_plane(15);
+    let precisions = mixed_precisions();
+    let counts = std::rc::Rc::new(std::cell::RefCell::new(Counts::default()));
+    let root = Rng::seed_from(1);
+    let mock = MockChannel {
+        silence: 3,
+        snr_db: 300.0, // effectively noise-free
+    };
+    let mut session = Session::new(
+        Box::new(mock),
+        Box::new(AnalogOta),
+        root.stream("channel"),
+        root.stream("noise"),
+        1,
+    );
+    session.add_observer(Box::new(CountingObserver { starts: counts.clone() }));
+
+    session.begin_round(1);
+    let stats = session.aggregate(1, &plane, &precisions);
+    session.end_round(&mpota::metrics::RoundRecord::default());
+    session.begin_round(2);
+    session.aggregate(2, &plane, &precisions);
+    session.end_round(&mpota::metrics::RoundRecord::default());
+
+    // the mock silenced exactly one client
+    assert_eq!(stats.participants, K - 1);
+    assert_eq!(session.channel_model_name(), "mock");
+    let c = counts.borrow();
+    assert_eq!(c.round_start, 2);
+    assert_eq!(c.channel, 2, "one channel draw per analog round");
+    assert_eq!(c.aggregate, 2);
+    assert_eq!(c.round_end, 2);
+
+    // unit gains + no noise: the aggregate is the mean of the non-silenced
+    // payloads to float accuracy
+    let mut want = vec![0.0f32; N];
+    let mut kk = 0usize;
+    for (k, row) in (0..K).map(|k| (k, plane.row(k))) {
+        if k == 3 {
+            continue;
+        }
+        kk += 1;
+        for (w, &x) in want.iter_mut().zip(row.iter()) {
+            *w += x;
+        }
+    }
+    for w in want.iter_mut() {
+        *w /= kk as f32;
+    }
+    let max_diff = session
+        .result()
+        .iter()
+        .zip(want.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "max diff {max_diff}");
+}
+
+/// Custom aggregator: coordinate-wise trimmed mean (drops the single min
+/// and max across clients per element) — a Byzantine-robust baseline, and
+/// proof the seam supports aggregation rules the enum never knew about.
+struct TrimmedMean;
+
+impl Aggregator for TrimmedMean {
+    fn aggregate_into(
+        &mut self,
+        plane: &PayloadPlane,
+        _ctx: &mut AggCtx<'_>,
+        scratch: &mut AggScratch,
+    ) -> AggregateStats {
+        let k = plane.k();
+        let n = plane.n();
+        let out = scratch.agg_mut();
+        out.resize(n, 0.0);
+        out.fill(0.0);
+        assert!(k > 2, "trimmed mean needs at least 3 clients");
+        for i in 0..n {
+            let mut sum = 0.0f32;
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for kk in 0..k {
+                let v = plane.row(kk)[i];
+                sum += v;
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            out[i] = (sum - lo - hi) / (k - 2) as f32;
+        }
+        AggregateStats { participants: k, ..Default::default() }
+    }
+
+    fn needs_channel(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "trimmed-mean"
+    }
+}
+
+#[test]
+fn custom_aggregator_runs_through_the_session() {
+    let rows = vec![
+        vec![0.0f32, 10.0, -5.0],
+        vec![1.0f32, 20.0, 0.0],
+        vec![2.0f32, 30.0, 5.0],
+        vec![100.0f32, -100.0, 100.0], // outlier the trim removes
+    ];
+    let plane = PayloadPlane::from_rows(&rows);
+    let precisions = vec![Precision::of(32); 4];
+    let root = Rng::seed_from(5);
+    let mut session = Session::new(
+        Box::new(RayleighPilot::new(ChannelConfig::default())),
+        Box::new(TrimmedMean),
+        root.stream("channel"),
+        root.stream("noise"),
+        1,
+    );
+    let stats = session.aggregate(1, &plane, &precisions);
+    assert_eq!(stats.participants, 4);
+    assert_eq!(session.aggregator_name(), "trimmed-mean");
+    // element 0: drop 0 and 100 -> (1+2)/2; element 1: drop -100 and 30
+    // -> (10+20)/2; element 2: drop -5 and 100 -> (0+5)/2
+    assert_eq!(session.result(), &[1.5, 15.0, 2.5]);
+}
+
+#[test]
+fn session_rounds_reuse_buffers_and_stay_deterministic() {
+    // two identically-seeded sessions stay in lockstep over many rounds
+    let plane = quantized_plane(16);
+    let precisions = mixed_precisions();
+    let mut s1 = default_session(Box::new(AnalogOta), 2024, 1);
+    let mut s2 = default_session(Box::new(AnalogOta), 2024, 4);
+    for t in 1..=4 {
+        let a = s1.aggregate(t, &plane, &precisions);
+        let b = s2.aggregate(t, &plane, &precisions);
+        assert_eq!(s1.result(), s2.result(), "round {t}");
+        assert_eq!(a.participants, b.participants);
+        assert_eq!(a.mse_vs_ideal.to_bits(), b.mse_vs_ideal.to_bits());
+    }
+}
