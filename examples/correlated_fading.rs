@@ -1,0 +1,163 @@
+//! Channel-realism demo: temporally correlated fading, path-loss
+//! geometry, and feedback-driven precision policies — no PJRT artifacts
+//! needed, everything runs on the channel subsystem directly.
+//!
+//! 1. Gauss-Markov AR(1) fading: how ρ turns independent per-round fades
+//!    into persistent ones (empirical lag-1 autocorrelation and the
+//!    probability that a silenced client stays silenced next round).
+//! 2. Path-loss geometry: the per-client SNR asymmetry a disc placement
+//!    with log-distance path loss + shadowing produces.
+//! 3. Feedback policies: the precision ladders `LossPlateau` and
+//!    `EnergyBudget` walk in response to a synthetic run history.
+//!
+//! ```sh
+//! cargo run --release --example correlated_fading
+//! ```
+
+use mpota::channel::{ChannelConfig, RoundChannel};
+use mpota::metrics::RoundRecord;
+use mpota::quant::Precision;
+use mpota::rng::Rng;
+use mpota::sim::{
+    ChannelModel, EnergyBudget, GaussMarkov, LossPlateau, PathLossGeometry,
+    PolicyCtx, PrecisionPolicy,
+};
+
+const CLIENTS: usize = 15;
+const ROUNDS: usize = 400;
+
+fn main() -> anyhow::Result<()> {
+    correlated_fading();
+    path_loss_geometry();
+    feedback_policies()?;
+    Ok(())
+}
+
+/// Drive a model for `ROUNDS` rounds and report temporal statistics.
+fn correlated_fading() {
+    println!("== Gauss-Markov correlated fading ({CLIENTS} clients, {ROUNDS} rounds)\n");
+    println!(
+        "{:>6} {:>10} {:>14} {:>16}",
+        "rho", "lag1-acf", "P(silenced)", "P(stay silenced)"
+    );
+    for rho in [0.0f32, 0.5, 0.9, 0.99] {
+        let mut cfg = ChannelConfig::default();
+        cfg.rho = rho;
+        let mut model = GaussMarkov::new(cfg);
+        let mut rng = Rng::seed_from(7);
+        let mut rc = RoundChannel::empty();
+        let mut prev_h = vec![mpota::channel::C32::ZERO; CLIENTS];
+        let mut prev_silenced = vec![false; CLIENTS];
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        let (mut silenced, mut stay, mut stay_base) = (0usize, 0usize, 0usize);
+        for t in 0..ROUNDS {
+            model.draw_into(CLIENTS, &mut rng, &mut rc);
+            for (k, c) in rc.clients.iter().enumerate() {
+                let now_silenced = c.effective_gain.is_none();
+                if t > 0 {
+                    num += (c.h.re * prev_h[k].re + c.h.im * prev_h[k].im) as f64;
+                    den += prev_h[k].norm_sq() as f64;
+                    if prev_silenced[k] {
+                        stay_base += 1;
+                        if now_silenced {
+                            stay += 1;
+                        }
+                    }
+                }
+                silenced += now_silenced as usize;
+                prev_h[k] = c.h;
+                prev_silenced[k] = now_silenced;
+            }
+        }
+        let p_sil = silenced as f64 / (ROUNDS * CLIENTS) as f64;
+        let p_stay = if stay_base > 0 {
+            stay as f64 / stay_base as f64
+        } else {
+            f64::NAN
+        };
+        println!(
+            "{rho:>6.2} {:>10.3} {:>13.1}% {:>15.1}%",
+            num / den,
+            100.0 * p_sil,
+            100.0 * p_stay
+        );
+    }
+    println!(
+        "\n(i.i.d. fading forgets a deep fade immediately; at high rho a\n\
+         silenced client tends to STAY silenced — exactly the correlated\n\
+         outage pattern the paper's i.i.d. assumption hides)\n"
+    );
+}
+
+fn path_loss_geometry() {
+    println!("== Path-loss geometry ({CLIENTS} clients on a 100 m disc)\n");
+    let mut cfg = ChannelConfig::default();
+    cfg.model = mpota::channel::FadingKind::PathLoss;
+    let mut model = PathLossGeometry::new(cfg);
+    let mut rng = Rng::seed_from(11);
+    let mut rc = RoundChannel::empty();
+    let mut silenced = vec![0usize; CLIENTS];
+    for _ in 0..ROUNDS {
+        model.draw_into(CLIENTS, &mut rng, &mut rc);
+        for (k, c) in rc.clients.iter().enumerate() {
+            silenced[k] += c.effective_gain.is_none() as usize;
+        }
+    }
+    println!(
+        "{:>7} {:>10} {:>11} {:>11} {:>10}",
+        "client", "dist (m)", "shadow dB", "gain dB", "silenced"
+    );
+    let mut order: Vec<usize> = (0..CLIENTS).collect();
+    let sites = model.sites().to_vec();
+    order.sort_by(|&a, &b| sites[a].distance.partial_cmp(&sites[b].distance).unwrap());
+    for k in order {
+        let s = &sites[k];
+        println!(
+            "{k:>7} {:>10.1} {:>11.1} {:>11.1} {:>9.1}%",
+            s.distance,
+            s.shadow_db,
+            20.0 * (s.amp as f64).log10(),
+            100.0 * silenced[k] as f64 / ROUNDS as f64
+        );
+    }
+    println!(
+        "\n(near/unshadowed clients transmit nearly every round; far or\n\
+         shadowed ones fall below the truncation threshold persistently)\n"
+    );
+}
+
+fn feedback_policies() -> anyhow::Result<()> {
+    println!("== Feedback precision policies (synthetic 30-round history)\n");
+    let mut plateau: Box<dyn PrecisionPolicy> =
+        Box::new(LossPlateau::new().with_patience(4));
+    let mut budget: Box<dyn PrecisionPolicy> = Box::new(EnergyBudget::new(1.0));
+    let mut out: Vec<Precision> = Vec::new();
+    let mut rec = RoundRecord::default();
+    println!("{:>6} {:>12} {:>14} {:>16}", "round", "loss", "plateau bits", "budget bits");
+    for t in 1..=30 {
+        let prev = if t == 1 { None } else { Some(&rec) };
+        let ctx = PolicyCtx { round: t, clients: CLIENTS, snr_db: 20.0, prev };
+        plateau.assign_into(&ctx, &mut out)?;
+        let p_bits = out[0].bits();
+        budget.assign_into(&ctx, &mut out)?;
+        let b_bits = out[0].bits();
+        // synthetic run: loss improves early then plateaus; energy accrues
+        // ~0.6 J per round against the 15 J fleet budget
+        let loss = if t < 10 { 2.0 / t as f64 } else { 0.21 };
+        if t % 5 == 0 || t == 1 {
+            println!("{t:>6} {loss:>12.3} {p_bits:>14} {b_bits:>16}");
+        }
+        rec = RoundRecord {
+            round: t,
+            server_loss: loss,
+            energy_joules: 0.6 * t as f64,
+            evaluated: true,
+            ..Default::default()
+        };
+    }
+    println!(
+        "\n(loss-plateau promotes precision once improvement stalls;\n\
+         energy-budget demotes it as the fleet burns through its cap)"
+    );
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! First-order Gauss-Markov (AR(1)) evolution for temporally correlated
+//! block fading.
+//!
+//! The paper (and the seed reproduction) draw an independent Rayleigh
+//! coefficient per (client, round).  Real deployments are not i.i.d.: a
+//! client in a deep fade this round tends to still be in one next round.
+//! The standard discrete-time model for that memory is the first-order
+//! Gauss-Markov process over the complex coefficient,
+//!
+//! ```text
+//! h(t) = ρ · h(t-1) + sqrt(1 - ρ²) · w(t),      w(t) ~ CN(0, 1)
+//! ```
+//!
+//! which keeps the marginal distribution CN(0, 1) (unit-power Rayleigh
+//! magnitude, exactly as [`crate::channel::fading`]) while giving the
+//! sequence lag-1 autocorrelation `E[h(t)·h*(t-1)] = ρ`.  Physically ρ
+//! relates to the Doppler spread through Jakes' model, `ρ = J₀(2π f_d T)`:
+//! ρ = 0 recovers the i.i.d. per-round draw, ρ → 1 a quasi-static channel
+//! that barely moves between rounds.
+
+use crate::channel::complex::C32;
+
+/// One AR(1) step: `ρ·prev + sqrt(1-ρ²)·innovation`.
+///
+/// `rho == 0` is special-cased to return the innovation *bit-exactly*
+/// (no `0·prev + 1·w` float round trip), which is what pins the
+/// [`crate::sim::GaussMarkov`] channel model at ρ = 0 to the i.i.d.
+/// Rayleigh path bit-for-bit per seed.
+#[inline]
+pub fn ar1_step(prev: C32, rho: f32, innovation: C32) -> C32 {
+    if rho == 0.0 {
+        return innovation;
+    }
+    prev.scale(rho) + innovation.scale((1.0 - rho * rho).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::fading::rayleigh_coeff;
+    use crate::rng::Rng;
+
+    #[test]
+    fn rho_zero_returns_innovation_bit_exactly() {
+        let mut rng = Rng::seed_from(5);
+        for _ in 0..100 {
+            let prev = rayleigh_coeff(&mut rng);
+            let w = rayleigh_coeff(&mut rng);
+            let h = ar1_step(prev, 0.0, w);
+            assert_eq!(h.re.to_bits(), w.re.to_bits());
+            assert_eq!(h.im.to_bits(), w.im.to_bits());
+        }
+    }
+
+    #[test]
+    fn process_stays_unit_power() {
+        // the sqrt(1-rho^2) innovation scaling keeps the marginal CN(0,1)
+        for rho in [0.3f32, 0.7, 0.95] {
+            let mut rng = Rng::seed_from(6);
+            let mut h = rayleigh_coeff(&mut rng); // stationary init
+            let n = 100_000;
+            let mut pow = 0.0f64;
+            for _ in 0..n {
+                h = ar1_step(h, rho, rayleigh_coeff(&mut rng));
+                pow += h.norm_sq() as f64;
+            }
+            pow /= n as f64;
+            // high rho => strongly correlated samples => wider CI
+            assert!((pow - 1.0).abs() < 0.1, "rho={rho}: E|h|^2 = {pow}");
+        }
+    }
+
+    #[test]
+    fn lag1_autocorrelation_tracks_rho() {
+        let rho = 0.8f32;
+        let mut rng = Rng::seed_from(7);
+        let mut h = rayleigh_coeff(&mut rng);
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for _ in 0..200_000 {
+            let prev = h;
+            h = ar1_step(h, rho, rayleigh_coeff(&mut rng));
+            num += (h.re * prev.re + h.im * prev.im) as f64; // Re(h·prev*)
+            den += prev.norm_sq() as f64;
+        }
+        let acf = num / den;
+        assert!((acf - rho as f64).abs() < 0.01, "acf {acf} vs rho {rho}");
+    }
+}

@@ -1,0 +1,155 @@
+//! Per-client path-loss geometry: clients placed on a disc around the
+//! server, log-distance path loss plus log-normal shadowing — PERSISTENT
+//! per-client SNR asymmetry instead of the seed's symmetric fleet.
+//!
+//! A client at distance `d` from the server has large-scale power gain
+//!
+//! ```text
+//! G(d) [dB] = -10 · α · log10(d / d₀) + X,      X ~ N(0, σ_sh²)  [dB]
+//! ```
+//!
+//! with path-loss exponent `α` and shadowing standard deviation `σ_sh`.
+//! Distances are drawn area-uniformly over the annulus
+//! `[REF_DISTANCE, radius]` (uniform client density on the disc), ONCE per
+//! run — near/far and lucky/shadowed clients keep their advantage every
+//! round, which is exactly the heterogeneity i.i.d. fading averages away.
+//!
+//! The fleet is normalized to mean unit power gain so the server-side SNR
+//! knob keeps its calibrated meaning; what changes is the *spread* across
+//! clients.  The composite per-round channel is `h_k(t) = a_k · g_k(t)`
+//! with the fixed amplitude scale `a_k = sqrt(G_k)` from here and the
+//! unit-power small-scale Rayleigh draw `g_k(t)` from
+//! [`crate::channel::fading`].
+
+use crate::rng::Rng;
+
+/// Reference distance d₀ in meters: the closest a client can sit, and the
+/// distance at which the un-normalized path gain is 0 dB.
+pub const REF_DISTANCE: f32 = 10.0;
+
+/// One client's placement and fixed large-scale channel state.
+#[derive(Clone, Copy, Debug)]
+pub struct Site {
+    /// Distance from the server in meters.
+    pub distance: f32,
+    /// This client's log-normal shadowing realisation in dB.
+    pub shadow_db: f32,
+    /// Amplitude scale `a_k = sqrt(normalized power gain)` applied to the
+    /// small-scale fading draw each round.
+    pub amp: f32,
+}
+
+/// Log-distance path gain in dB at distance `d` (no shadowing):
+/// `-10·α·log10(d/d₀)`.
+pub fn path_gain_db(distance: f32, alpha: f32) -> f32 {
+    -10.0 * alpha * (distance / REF_DISTANCE).log10()
+}
+
+/// Place `n` clients area-uniformly on the annulus `[REF_DISTANCE,
+/// radius]` and compute their shadowed, fleet-normalized amplitude
+/// scales.  Consumes exactly one uniform and one normal draw per client —
+/// deterministic per RNG state.
+pub fn place_clients(
+    n: usize,
+    radius: f32,
+    alpha: f32,
+    shadowing_db: f32,
+    rng: &mut Rng,
+) -> Vec<Site> {
+    assert!(n > 0, "need at least one client");
+    assert!(
+        radius > REF_DISTANCE,
+        "cell radius {radius} must exceed the reference distance {REF_DISTANCE}"
+    );
+    let r0_sq = REF_DISTANCE * REF_DISTANCE;
+    let r_sq = radius * radius;
+    let mut sites = Vec::with_capacity(n);
+    let mut mean_gain = 0.0f64;
+    for _ in 0..n {
+        // area-uniform over the annulus: d = sqrt(u·(R² - d₀²) + d₀²)
+        let u = rng.uniform() as f32;
+        let distance = (u * (r_sq - r0_sq) + r0_sq).sqrt();
+        let shadow_db = rng.normal_f32(0.0, shadowing_db);
+        let gain_db = path_gain_db(distance, alpha) + shadow_db;
+        // amp temporarily holds the raw linear POWER gain; the
+        // normalization pass below converts it to the amplitude scale
+        let gain = 10f32.powf(gain_db / 10.0);
+        mean_gain += gain as f64;
+        sites.push(Site { distance, shadow_db, amp: gain });
+    }
+    mean_gain /= n as f64;
+    for s in &mut sites {
+        s.amp = ((s.amp as f64 / mean_gain).sqrt()) as f32;
+    }
+    sites
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_respects_the_annulus_and_normalization() {
+        let mut rng = Rng::seed_from(31);
+        let sites = place_clients(200, 100.0, 3.0, 6.0, &mut rng);
+        assert_eq!(sites.len(), 200);
+        let mut mean_pow = 0.0f64;
+        for s in &sites {
+            assert!(
+                (REF_DISTANCE..=100.0).contains(&s.distance),
+                "distance {} outside annulus",
+                s.distance
+            );
+            assert!(s.amp > 0.0);
+            mean_pow += (s.amp as f64) * (s.amp as f64);
+        }
+        mean_pow /= sites.len() as f64;
+        assert!((mean_pow - 1.0).abs() < 1e-3, "mean power gain {mean_pow}");
+    }
+
+    #[test]
+    fn without_shadowing_gain_is_monotone_in_distance() {
+        let mut rng = Rng::seed_from(32);
+        let mut sites = place_clients(50, 300.0, 2.8, 0.0, &mut rng);
+        sites.sort_by(|a, b| a.distance.partial_cmp(&b.distance).unwrap());
+        for w in sites.windows(2) {
+            assert!(
+                w[0].amp > w[1].amp,
+                "closer client must have the larger gain: {:?} vs {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn farther_cells_spread_the_gains_wider() {
+        let spread = |radius: f32| {
+            let mut rng = Rng::seed_from(33);
+            let sites = place_clients(100, radius, 3.0, 0.0, &mut rng);
+            let dbs: Vec<f64> =
+                sites.iter().map(|s| 20.0 * (s.amp as f64).log10()).collect();
+            let lo = dbs.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = dbs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            hi - lo
+        };
+        assert!(spread(500.0) > spread(50.0) + 10.0);
+    }
+
+    #[test]
+    fn deterministic_per_rng_state() {
+        let a = place_clients(20, 120.0, 3.0, 4.0, &mut Rng::seed_from(34));
+        let b = place_clients(20, 120.0, 3.0, 4.0, &mut Rng::seed_from(34));
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.distance.to_bits(), y.distance.to_bits());
+            assert_eq!(x.amp.to_bits(), y.amp.to_bits());
+        }
+    }
+
+    #[test]
+    fn path_gain_reference_point() {
+        assert_eq!(path_gain_db(REF_DISTANCE, 3.0), 0.0);
+        // one decade out at alpha=3: -30 dB
+        assert!((path_gain_db(REF_DISTANCE * 10.0, 3.0) + 30.0).abs() < 1e-4);
+    }
+}

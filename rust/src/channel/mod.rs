@@ -11,7 +11,9 @@
 //!    and the server AWGN level for the OTA superposition (`crate::ota`).
 
 pub mod complex;
+pub mod correlated;
 pub mod fading;
+pub mod geometry;
 pub mod pilot;
 pub mod precode;
 
@@ -34,6 +36,17 @@ pub enum FadingKind {
     /// AWGN remains (a perfectly-aligned OTA uplink; consumes no
     /// channel-RNG draws).
     Awgn,
+    /// Temporally correlated block fading: each client's coefficient
+    /// evolves as a first-order Gauss-Markov (AR(1)) process with
+    /// coefficient [`ChannelConfig::rho`] (see [`correlated`]); ρ = 0 is
+    /// bit-identical to `Rayleigh`.  Pilot estimation and precoding are
+    /// unchanged.
+    GaussMarkov,
+    /// Spatial asymmetry: clients placed on a disc with log-distance path
+    /// loss + log-normal shadowing (see [`geometry`]), so per-client mean
+    /// SNR differs persistently across the run; small-scale fading stays
+    /// Rayleigh.
+    PathLoss,
 }
 
 impl std::str::FromStr for FadingKind {
@@ -42,7 +55,12 @@ impl std::str::FromStr for FadingKind {
         match s.to_ascii_lowercase().as_str() {
             "rayleigh" => Ok(FadingKind::Rayleigh),
             "awgn" | "none" => Ok(FadingKind::Awgn),
-            other => bail!("unknown channel model '{other}' (rayleigh|awgn)"),
+            "gauss_markov" | "gauss-markov" | "ar1" => Ok(FadingKind::GaussMarkov),
+            "path_loss" | "path-loss" | "geometry" => Ok(FadingKind::PathLoss),
+            other => bail!(
+                "unknown channel model '{other}' \
+                 (rayleigh|awgn|gauss_markov|path_loss)"
+            ),
         }
     }
 }
@@ -55,6 +73,8 @@ impl std::fmt::Display for FadingKind {
             match self {
                 FadingKind::Rayleigh => "rayleigh",
                 FadingKind::Awgn => "awgn",
+                FadingKind::GaussMarkov => "gauss_markov",
+                FadingKind::PathLoss => "path_loss",
             }
         )
     }
@@ -75,6 +95,17 @@ pub struct ChannelConfig {
     pub perfect_csi: bool,
     /// Which built-in physical-layer model to simulate.
     pub model: FadingKind,
+    /// AR(1) temporal-correlation coefficient ρ ∈ [0, 1) for the
+    /// `gauss_markov` model (0 = i.i.d. per round, identical to
+    /// `rayleigh`; unused by the other models).
+    pub rho: f32,
+    /// Path-loss exponent α for the `path_loss` model.
+    pub path_loss_exp: f32,
+    /// Log-normal shadowing standard deviation (dB) for `path_loss`.
+    pub shadowing_db: f32,
+    /// Cell radius in meters for `path_loss`: clients are placed
+    /// area-uniformly between [`geometry::REF_DISTANCE`] and this.
+    pub cell_radius: f32,
 }
 
 impl Default for ChannelConfig {
@@ -86,7 +117,43 @@ impl Default for ChannelConfig {
             truncation: precode::DEFAULT_TRUNCATION,
             perfect_csi: false,
             model: FadingKind::Rayleigh,
+            rho: 0.0,
+            path_loss_exp: 3.0,
+            shadowing_db: 6.0,
+            cell_radius: 100.0,
         }
+    }
+}
+
+impl ChannelConfig {
+    /// Validate the channel knobs (called from `RunConfig::validate`, and
+    /// per sweep cell so `channel_model`-axis overrides are checked too
+    /// instead of panicking inside a model constructor mid-sweep).
+    pub fn validate(&self) -> Result<()> {
+        if !self.snr_db.is_finite() {
+            bail!("snr_db must be finite");
+        }
+        if !(0.0..1.0).contains(&self.rho) {
+            bail!("rho {} must be in [0, 1)", self.rho);
+        }
+        if !(self.path_loss_exp > 0.0 && self.path_loss_exp.is_finite()) {
+            bail!("path_loss_exp must be positive and finite");
+        }
+        if !(self.shadowing_db >= 0.0 && self.shadowing_db.is_finite()) {
+            bail!("shadowing_db must be non-negative and finite");
+        }
+        if self.model == FadingKind::PathLoss
+            && !(self.cell_radius > geometry::REF_DISTANCE
+                && self.cell_radius.is_finite())
+        {
+            bail!(
+                "cell_radius {} must be finite and exceed the reference \
+                 distance {}",
+                self.cell_radius,
+                geometry::REF_DISTANCE
+            );
+        }
+        Ok(())
     }
 }
 
@@ -147,15 +214,31 @@ impl RoundChannel {
         self.clients.clear();
         for _ in 0..num_clients {
             let h = fading::rayleigh_coeff(rng);
-            let h_est = if cfg.perfect_csi {
-                h
-            } else {
-                pilot::estimate(h, pilot, cfg.pilot_noise_var, rng)
-            };
-            let pc = precode::channel_inversion(h_est, cfg.truncation);
-            let effective_gain = precode::effective_gain(h, &pc);
-            self.clients.push(ClientChannel { h, h_est, precode: pc, effective_gain });
+            self.push_from_h(cfg, h, rng, pilot);
         }
+    }
+
+    /// Run the estimation + precoding tail of the §III-A pipeline for one
+    /// client whose true channel this round is `h`, and append its state.
+    /// RNG consumption (pilot reception noise) is identical for every
+    /// fading model that feeds this, which is what keeps alternate models
+    /// (e.g. AR(1) with ρ = 0) bit-compatible with the i.i.d. path when
+    /// their fading draws coincide.
+    pub fn push_from_h(
+        &mut self,
+        cfg: &ChannelConfig,
+        h: C32,
+        rng: &mut Rng,
+        pilot: &[C32],
+    ) {
+        let h_est = if cfg.perfect_csi {
+            h
+        } else {
+            pilot::estimate(h, pilot, cfg.pilot_noise_var, rng)
+        };
+        let pc = precode::channel_inversion(h_est, cfg.truncation);
+        let effective_gain = precode::effective_gain(h, &pc);
+        self.clients.push(ClientChannel { h, h_est, precode: pc, effective_gain });
     }
 
     /// Indices of clients actually transmitting this round.

@@ -5,7 +5,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::channel::{ChannelConfig, FadingKind};
+use crate::channel::ChannelConfig;
 use crate::fl::scheme::Scheme;
 use crate::json::{self, Value};
 
@@ -20,6 +20,15 @@ pub enum PolicyKind {
     /// whose quantization noise still sits at/below the channel noise
     /// floor (≈6 dB per bit); see `sim::SnrAdaptive`.
     SnrAdaptive,
+    /// Feedback policy: start cheap and promote the fleet one precision
+    /// level whenever the global loss has stalled for
+    /// `RunConfig::plateau_patience` rounds (reads the previous round's
+    /// record through `sim::PolicyCtx::prev`); see `sim::LossPlateau`.
+    LossPlateau,
+    /// Feedback policy: start rich and demote the fleet down the
+    /// precision ladder as cumulative fleet energy approaches
+    /// `clients × RunConfig::energy_budget_j`; see `sim::EnergyBudget`.
+    EnergyBudget,
 }
 
 impl std::str::FromStr for PolicyKind {
@@ -28,7 +37,12 @@ impl std::str::FromStr for PolicyKind {
         match s.to_ascii_lowercase().as_str() {
             "static" | "scheme" => Ok(PolicyKind::Static),
             "snr-adaptive" | "snr_adaptive" | "snr" => Ok(PolicyKind::SnrAdaptive),
-            other => bail!("unknown precision policy '{other}' (static|snr-adaptive)"),
+            "loss-plateau" | "loss_plateau" | "plateau" => Ok(PolicyKind::LossPlateau),
+            "energy-budget" | "energy_budget" | "energy" => Ok(PolicyKind::EnergyBudget),
+            other => bail!(
+                "unknown precision policy '{other}' \
+                 (static|snr-adaptive|loss-plateau|energy-budget)"
+            ),
         }
     }
 }
@@ -41,6 +55,8 @@ impl std::fmt::Display for PolicyKind {
             match self {
                 PolicyKind::Static => "static",
                 PolicyKind::SnrAdaptive => "snr-adaptive",
+                PolicyKind::LossPlateau => "loss-plateau",
+                PolicyKind::EnergyBudget => "energy-budget",
             }
         )
     }
@@ -134,6 +150,12 @@ pub struct RunConfig {
     pub scheme: Scheme,
     /// Per-round precision policy (static scheme by default).
     pub policy: PolicyKind,
+    /// Rounds without global-loss improvement before the `loss-plateau`
+    /// policy promotes the fleet one precision level.
+    pub plateau_patience: usize,
+    /// Per-client energy cap (J) steering the `energy-budget` policy
+    /// (the fleet budget is `clients ×` this).
+    pub energy_budget_j: f64,
     /// Local SGD steps per client per round.
     pub local_steps: usize,
     /// Client learning rate.
@@ -176,6 +198,8 @@ impl Default for RunConfig {
             rounds: 100,
             scheme: Scheme::parse("16,8,4").expect("static scheme"),
             policy: PolicyKind::Static,
+            plateau_patience: 5,
+            energy_budget_j: 5.0,
             local_steps: 4,
             lr: 0.05,
             train_samples: 3840,
@@ -226,8 +250,12 @@ impl RunConfig {
         if self.threads == 0 {
             bail!("threads must be positive (1 = sequential)");
         }
-        if !(self.channel.snr_db.is_finite()) {
-            bail!("snr_db must be finite");
+        self.channel.validate()?;
+        if self.plateau_patience == 0 {
+            bail!("plateau_patience must be positive");
+        }
+        if !(self.energy_budget_j > 0.0 && self.energy_budget_j.is_finite()) {
+            bail!("energy_budget_j must be positive and finite");
         }
         Ok(())
     }
@@ -264,6 +292,12 @@ impl RunConfig {
                 "truncation" => self.channel.truncation = val.as_f64()? as f32,
                 "perfect_csi" => self.channel.perfect_csi = val.as_bool()?,
                 "channel_model" => self.channel.model = val.as_str()?.parse()?,
+                "rho" => self.channel.rho = val.as_f64()? as f32,
+                "path_loss_exp" => self.channel.path_loss_exp = val.as_f64()? as f32,
+                "shadowing_db" => self.channel.shadowing_db = val.as_f64()? as f32,
+                "cell_radius" => self.channel.cell_radius = val.as_f64()? as f32,
+                "plateau_patience" => self.plateau_patience = val.as_usize()?,
+                "energy_budget_j" => self.energy_budget_j = val.as_f64()?,
                 // exact integer parse: f64 would silently corrupt seeds
                 // above 2^53
                 "seed" => self.seed = val.as_u64()?,
@@ -312,6 +346,12 @@ impl RunConfig {
         o.set("truncation", Value::Num(self.channel.truncation as f64));
         o.set("perfect_csi", Value::Bool(self.channel.perfect_csi));
         o.set("channel_model", Value::Str(self.channel.model.to_string()));
+        o.set("rho", Value::Num(self.channel.rho as f64));
+        o.set("path_loss_exp", Value::Num(self.channel.path_loss_exp as f64));
+        o.set("shadowing_db", Value::Num(self.channel.shadowing_db as f64));
+        o.set("cell_radius", Value::Num(self.channel.cell_radius as f64));
+        o.set("plateau_patience", Value::Num(self.plateau_patience as f64));
+        o.set("energy_budget_j", Value::Num(self.energy_budget_j));
         o.set("seed", Value::from_u64(self.seed));
         o.set(
             "init_params",
@@ -331,6 +371,7 @@ impl RunConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::channel::FadingKind;
 
     #[test]
     fn default_is_valid() {
@@ -415,7 +456,13 @@ mod tests {
         c.channel.pilot_noise_var = 0.125;
         c.channel.truncation = 0.25;
         c.channel.perfect_csi = true;
-        c.channel.model = FadingKind::Awgn;
+        c.channel.model = FadingKind::GaussMarkov;
+        c.channel.rho = 0.875;
+        c.channel.path_loss_exp = 2.5;
+        c.channel.shadowing_db = 4.0;
+        c.channel.cell_radius = 250.0;
+        c.plateau_patience = 3;
+        c.energy_budget_j = 0.75;
         c.seed = (1u64 << 53) + 12345;
         c.init_params = Some(PathBuf::from("runs/warm.f32.bin"));
         c.workers = 2;
@@ -455,15 +502,81 @@ mod tests {
             "snr-adaptive".parse::<PolicyKind>().unwrap(),
             PolicyKind::SnrAdaptive
         );
+        assert_eq!(
+            "loss-plateau".parse::<PolicyKind>().unwrap(),
+            PolicyKind::LossPlateau
+        );
+        assert_eq!(
+            "energy_budget".parse::<PolicyKind>().unwrap(),
+            PolicyKind::EnergyBudget
+        );
         assert!("smoke".parse::<PolicyKind>().is_err());
+        assert_eq!(
+            "gauss_markov".parse::<FadingKind>().unwrap(),
+            FadingKind::GaussMarkov
+        );
+        assert_eq!(
+            "path-loss".parse::<FadingKind>().unwrap(),
+            FadingKind::PathLoss
+        );
         let mut c = RunConfig::default();
         c.apply_json(
-            &json::parse(r#"{"policy": "snr-adaptive", "channel_model": "awgn"}"#)
-                .unwrap(),
+            &json::parse(
+                r#"{"policy": "snr-adaptive", "channel_model": "awgn"}"#,
+            )
+            .unwrap(),
         )
         .unwrap();
         assert_eq!(c.policy, PolicyKind::SnrAdaptive);
         assert_eq!(c.channel.model, FadingKind::Awgn);
+    }
+
+    #[test]
+    fn channel_realism_knobs_validate() {
+        let mut c = RunConfig::default();
+        c.channel.rho = 1.0; // AR(1) requires rho < 1
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.channel.rho = -0.1;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.channel.rho = 0.95;
+        c.validate().unwrap();
+
+        let mut c = RunConfig::default();
+        c.channel.model = FadingKind::PathLoss;
+        c.validate().unwrap();
+        c.channel.cell_radius = 5.0; // inside the reference distance
+        assert!(c.validate().is_err());
+        // the radius knob is only checked for the model that reads it
+        c.channel.model = FadingKind::Rayleigh;
+        c.validate().unwrap();
+
+        let mut c = RunConfig::default();
+        c.plateau_patience = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.energy_budget_j = 0.0;
+        assert!(c.validate().is_err());
+
+        // JSON overrides reach the new knobs
+        let mut c = RunConfig::default();
+        c.apply_json(
+            &json::parse(
+                r#"{"channel_model": "gauss_markov", "rho": 0.9,
+                    "path_loss_exp": 2.2, "shadowing_db": 8.0,
+                    "cell_radius": 400.0, "plateau_patience": 2,
+                    "energy_budget_j": 1.25}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.channel.model, FadingKind::GaussMarkov);
+        assert_eq!(c.channel.rho, 0.9);
+        assert_eq!(c.channel.cell_radius, 400.0);
+        assert_eq!(c.plateau_patience, 2);
+        assert_eq!(c.energy_budget_j, 1.25);
+        c.validate().unwrap();
     }
 
     #[test]

@@ -313,6 +313,7 @@ impl Coordinator {
             )?;
             rec.server_accuracy = eval.accuracy;
             rec.server_loss = eval.loss;
+            rec.evaluated = true;
         } else if let Some(prev) = self.log.rounds.last() {
             rec.server_accuracy = prev.server_accuracy;
             rec.server_loss = prev.server_loss;

@@ -25,11 +25,13 @@
 //!
 //! [`sim`] decomposes the round loop into pluggable traits over the
 //! kernels substrate: [`sim::Aggregator`] (analog OTA / digital / ideal /
-//! custom), [`sim::ChannelModel`] (Rayleigh+pilot / AWGN / custom),
-//! [`sim::PrecisionPolicy`] (static scheme / SNR-adaptive / custom) and
-//! [`sim::RoundObserver`] event sinks.  [`sim::Experiment`] is the
-//! builder-style entry point; [`sim::sweep`] runs config grids in one
-//! process over a shared runtime and scratch arena (`mpota sweep`).
+//! custom), [`sim::ChannelModel`] (Rayleigh+pilot / AWGN / AR(1)
+//! Gauss-Markov correlated fading / path-loss geometry / custom),
+//! [`sim::PrecisionPolicy`] (static scheme / SNR-adaptive / loss-plateau
+//! and energy-budget feedback / custom) and [`sim::RoundObserver`] event
+//! sinks.  [`sim::Experiment`] is the builder-style entry point;
+//! [`sim::sweep`] runs config grids in one process over a shared runtime
+//! and scratch arena (`mpota sweep`).
 //!
 //! ## The kernels layer (§Perf)
 //!

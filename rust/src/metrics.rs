@@ -34,6 +34,11 @@ pub struct RoundRecord {
     pub energy_joules: f64,
     /// Wall-clock seconds spent in this round.
     pub wall_secs: f64,
+    /// Whether `server_accuracy`/`server_loss` come from a FRESH
+    /// evaluation this round (false on non-eval rounds, where they are
+    /// carried forward from the last evaluation).  Feedback policies
+    /// that react to the loss must ignore carried-forward rounds.
+    pub evaluated: bool,
 }
 
 /// Accumulated log for a full run.
@@ -112,6 +117,7 @@ impl RunLog {
             o.set("ota_mse", Value::Num(r.ota_mse));
             o.set("energy_j", Value::Num(r.energy_joules));
             o.set("wall_s", Value::Num(r.wall_secs));
+            o.set("evaluated", Value::Bool(r.evaluated));
             out.push_str(&o.to_string());
             out.push('\n');
         }

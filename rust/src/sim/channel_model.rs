@@ -4,26 +4,44 @@
 //! The built-in [`RayleighPilot`] model reproduces the paper's §III-A
 //! pipeline (Rayleigh block fading → pilot LS estimation → truncated
 //! channel inversion) with RNG consumption identical to the pre-redesign
-//! coordinator, so default runs stay bit-identical per seed.  Alternate
-//! fading/CSI models implement the same trait and plug into a
+//! coordinator, so default runs stay bit-identical per seed.  The
+//! channel-realism models relax the paper's i.i.d.-per-round assumption
+//! along the two axes real deployments violate it:
+//!
+//! * **time** — [`GaussMarkov`] evolves each client's coefficient as an
+//!   AR(1) process ([`crate::channel::correlated`]), so fades persist
+//!   across rounds; ρ = 0 is pinned bit-identical to [`RayleighPilot`];
+//! * **space** — [`PathLossGeometry`] places clients on a disc with
+//!   log-distance path loss + shadowing
+//!   ([`crate::channel::geometry`]), so per-client mean SNR differs
+//!   persistently across the run.
+//!
+//! All models implement the same trait and plug into a
 //! [`crate::sim::Session`] or [`crate::sim::Experiment`] without touching
 //! the round loop.
 
 use crate::channel::{
-    pilot, ChannelConfig, ClientChannel, FadingKind, Precode, RoundChannel, C32,
+    correlated, fading, geometry, pilot, ChannelConfig, ClientChannel, FadingKind,
+    Precode, RoundChannel, C32,
 };
 use crate::rng::Rng;
 
 /// Draws one round's channel realisation.
 ///
 /// Contract: `draw_into` must fully overwrite `out` (the buffer is reused
-/// round to round), must not allocate once `out` has warmed to fleet
-/// capacity, and must consume `rng` deterministically — the same state in
-/// always yields the same realisation out.
+/// round to round), must consume `rng` deterministically — the same model
+/// state and RNG state in always yield the same realisation out — and
+/// must not allocate once `out` AND the model's own state have warmed to
+/// fleet capacity.  Models MAY carry mutable state across rounds (that is
+/// the whole point of correlated fading); such state must be (re)built
+/// from the draw inputs on the first call, never eagerly per round, so
+/// the steady-state round loop stays allocation-free
+/// (`rust/tests/alloc_counter.rs` pins this through `Box<dyn
+/// ChannelModel>`).
 pub trait ChannelModel {
     /// Fill `out` with `num_clients` client-channel states plus the server
     /// noise level for this round.
-    fn draw_into(&self, num_clients: usize, rng: &mut Rng, out: &mut RoundChannel);
+    fn draw_into(&mut self, num_clients: usize, rng: &mut Rng, out: &mut RoundChannel);
 
     /// Short model name for labels/reports.
     fn name(&self) -> &'static str;
@@ -39,18 +57,20 @@ pub struct RayleighPilot {
 }
 
 impl RayleighPilot {
+    /// Model from the run's channel config.
     pub fn new(cfg: ChannelConfig) -> Self {
         let pilot = pilot::pilot_sequence(cfg.pilot_len);
         RayleighPilot { cfg, pilot }
     }
 
+    /// The channel config this model was built from.
     pub fn config(&self) -> &ChannelConfig {
         &self.cfg
     }
 }
 
 impl ChannelModel for RayleighPilot {
-    fn draw_into(&self, num_clients: usize, rng: &mut Rng, out: &mut RoundChannel) {
+    fn draw_into(&mut self, num_clients: usize, rng: &mut Rng, out: &mut RoundChannel) {
         out.draw_into(&self.cfg, num_clients, rng, &self.pilot);
     }
 
@@ -64,11 +84,12 @@ impl ChannelModel for RayleighPilot {
 /// Consumes no RNG draws — the receiver noise is injected downstream by
 /// the aggregator from its own stream.
 pub struct Awgn {
+    /// Server receiver SNR in dB.
     pub snr_db: f32,
 }
 
 impl ChannelModel for Awgn {
-    fn draw_into(&self, num_clients: usize, _rng: &mut Rng, out: &mut RoundChannel) {
+    fn draw_into(&mut self, num_clients: usize, _rng: &mut Rng, out: &mut RoundChannel) {
         out.snr_db = self.snr_db;
         out.clients.clear();
         for _ in 0..num_clients {
@@ -86,11 +107,147 @@ impl ChannelModel for Awgn {
     }
 }
 
+/// Temporally correlated block fading: each client's coefficient evolves
+/// as a first-order Gauss-Markov process,
+/// `h(t) = ρ·h(t-1) + sqrt(1-ρ²)·w(t)` with `w ~ CN(0,1)`
+/// ([`correlated::ar1_step`]); pilot estimation and precoding are exactly
+/// the [`RayleighPilot`] tail.
+///
+/// Round 1 draws from the stationary distribution (the plain Rayleigh
+/// coefficient), and the per-round RNG consumption is identical to
+/// [`RayleighPilot`] for EVERY ρ — so ρ = 0 reproduces the i.i.d. path
+/// bit-for-bit per seed (`rust/tests/sim.rs` pins this), and changing ρ
+/// alone never shifts any downstream RNG stream.
+pub struct GaussMarkov {
+    cfg: ChannelConfig,
+    pilot: Vec<C32>,
+    /// Per-client AR(1) coefficients; client k uses `rhos[k % len]`, so a
+    /// single entry broadcasts to the whole fleet.
+    rhos: Vec<f32>,
+    /// h(t-1) per client, sized on the first draw and reused after.
+    state: Vec<C32>,
+    /// Whether `state` holds a previous round (false before round 1 and
+    /// after a fleet resize).
+    warm: bool,
+}
+
+impl GaussMarkov {
+    /// Model from the run's channel config: every client shares
+    /// [`ChannelConfig::rho`].
+    pub fn new(cfg: ChannelConfig) -> Self {
+        let rho = cfg.rho;
+        GaussMarkov::with_rhos(cfg, vec![rho])
+    }
+
+    /// Heterogeneous-mobility form: client `k` evolves with
+    /// `rhos[k % rhos.len()]` (static clients near 1, vehicular clients
+    /// near 0).  Panics if any ρ is outside `[0, 1)` or the list is
+    /// empty.
+    pub fn with_rhos(cfg: ChannelConfig, rhos: Vec<f32>) -> Self {
+        assert!(!rhos.is_empty(), "need at least one rho");
+        for &r in &rhos {
+            assert!((0.0..1.0).contains(&r), "rho {r} must be in [0, 1)");
+        }
+        let pilot = pilot::pilot_sequence(cfg.pilot_len);
+        GaussMarkov { cfg, pilot, rhos, state: Vec::new(), warm: false }
+    }
+
+    /// The AR(1) coefficient client `k` evolves with.
+    pub fn rho_for(&self, k: usize) -> f32 {
+        self.rhos[k % self.rhos.len()]
+    }
+}
+
+impl ChannelModel for GaussMarkov {
+    fn draw_into(&mut self, num_clients: usize, rng: &mut Rng, out: &mut RoundChannel) {
+        if self.state.len() != num_clients {
+            // first round (or a fleet resize): restart from stationarity
+            self.state.clear();
+            self.state.resize(num_clients, C32::ZERO);
+            self.warm = false;
+        }
+        out.snr_db = self.cfg.snr_db;
+        out.clients.clear();
+        for k in 0..num_clients {
+            let w = fading::rayleigh_coeff(rng);
+            let h = if self.warm {
+                correlated::ar1_step(self.state[k], self.rho_for(k), w)
+            } else {
+                w // stationary init: exactly the i.i.d. draw
+            };
+            self.state[k] = h;
+            out.push_from_h(&self.cfg, h, rng, &self.pilot);
+        }
+        self.warm = true;
+    }
+
+    fn name(&self) -> &'static str {
+        "gauss_markov"
+    }
+}
+
+/// Spatial asymmetry: clients placed on a disc with log-distance path
+/// loss and log-normal shadowing ([`geometry::place_clients`]).  The
+/// geometry is drawn ONCE, lazily, from the round's channel RNG stream —
+/// deterministic per seed and fixed for the whole run — and every round's
+/// channel is `h_k(t) = a_k · g_k(t)`: the client's fixed amplitude scale
+/// times a fresh unit-power Rayleigh draw.  Far or heavily-shadowed
+/// clients therefore face persistently worse SNR (and more
+/// truncation-silencing) than near ones.
+pub struct PathLossGeometry {
+    cfg: ChannelConfig,
+    pilot: Vec<C32>,
+    sites: Vec<geometry::Site>,
+}
+
+impl PathLossGeometry {
+    /// Model from the run's channel config
+    /// ([`ChannelConfig::cell_radius`], [`ChannelConfig::path_loss_exp`],
+    /// [`ChannelConfig::shadowing_db`]).
+    pub fn new(cfg: ChannelConfig) -> Self {
+        let pilot = pilot::pilot_sequence(cfg.pilot_len);
+        PathLossGeometry { cfg, pilot, sites: Vec::new() }
+    }
+
+    /// The fixed per-client geometry (empty until the first draw).
+    pub fn sites(&self) -> &[geometry::Site] {
+        &self.sites
+    }
+}
+
+impl ChannelModel for PathLossGeometry {
+    fn draw_into(&mut self, num_clients: usize, rng: &mut Rng, out: &mut RoundChannel) {
+        if self.sites.len() != num_clients {
+            // one-time placement from the same stream: deterministic per
+            // seed, persistent across rounds
+            self.sites = geometry::place_clients(
+                num_clients,
+                self.cfg.cell_radius,
+                self.cfg.path_loss_exp,
+                self.cfg.shadowing_db,
+                rng,
+            );
+        }
+        out.snr_db = self.cfg.snr_db;
+        out.clients.clear();
+        for site in &self.sites {
+            let h = fading::rayleigh_coeff(rng).scale(site.amp);
+            out.push_from_h(&self.cfg, h, rng, &self.pilot);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "path_loss"
+    }
+}
+
 /// The built-in model named by a [`ChannelConfig`].
 pub fn from_config(cfg: &ChannelConfig) -> Box<dyn ChannelModel> {
     match cfg.model {
         FadingKind::Rayleigh => Box::new(RayleighPilot::new(cfg.clone())),
         FadingKind::Awgn => Box::new(Awgn { snr_db: cfg.snr_db }),
+        FadingKind::GaussMarkov => Box::new(GaussMarkov::new(cfg.clone())),
+        FadingKind::PathLoss => Box::new(PathLossGeometry::new(cfg.clone())),
     }
 }
 
@@ -101,7 +258,7 @@ mod tests {
     #[test]
     fn rayleigh_model_matches_direct_draw() {
         let cfg = ChannelConfig::default();
-        let model = RayleighPilot::new(cfg.clone());
+        let mut model = RayleighPilot::new(cfg.clone());
         let pilot = pilot::pilot_sequence(cfg.pilot_len);
         let mut r1 = Rng::seed_from(314);
         let mut r2 = Rng::seed_from(314);
@@ -123,7 +280,7 @@ mod tests {
 
     #[test]
     fn awgn_model_is_unit_gain_and_rng_free() {
-        let model = Awgn { snr_db: 10.0 };
+        let mut model = Awgn { snr_db: 10.0 };
         let mut rng = Rng::seed_from(7);
         let before = rng.clone();
         let mut rc = RoundChannel::empty();
@@ -142,5 +299,82 @@ mod tests {
         assert_eq!(from_config(&cfg).name(), "rayleigh");
         cfg.model = FadingKind::Awgn;
         assert_eq!(from_config(&cfg).name(), "awgn");
+        cfg.model = FadingKind::GaussMarkov;
+        assert_eq!(from_config(&cfg).name(), "gauss_markov");
+        cfg.model = FadingKind::PathLoss;
+        assert_eq!(from_config(&cfg).name(), "path_loss");
+    }
+
+    #[test]
+    fn gauss_markov_rho_zero_equals_rayleigh_pilot() {
+        let cfg = ChannelConfig::default();
+        assert_eq!(cfg.rho, 0.0);
+        let mut gm = GaussMarkov::new(cfg.clone());
+        let mut rp = RayleighPilot::new(cfg);
+        let mut r1 = Rng::seed_from(99);
+        let mut r2 = Rng::seed_from(99);
+        let mut a = RoundChannel::empty();
+        let mut b = RoundChannel::empty();
+        for t in 0..4 {
+            gm.draw_into(9, &mut r1, &mut a);
+            rp.draw_into(9, &mut r2, &mut b);
+            for (x, y) in a.clients.iter().zip(b.clients.iter()) {
+                assert_eq!(x.h, y.h, "round {t}");
+                assert_eq!(x.h_est, y.h_est, "round {t}");
+                assert_eq!(x.effective_gain, y.effective_gain, "round {t}");
+            }
+        }
+        assert_eq!(r1.next_u64(), r2.next_u64());
+    }
+
+    #[test]
+    fn gauss_markov_high_rho_correlates_rounds() {
+        let mut cfg = ChannelConfig::default();
+        cfg.rho = 0.98;
+        cfg.perfect_csi = true;
+        let mut model = GaussMarkov::new(cfg);
+        let mut rng = Rng::seed_from(4);
+        let mut rc = RoundChannel::empty();
+        model.draw_into(5, &mut rng, &mut rc);
+        let first: Vec<C32> = rc.clients.iter().map(|c| c.h).collect();
+        model.draw_into(5, &mut rng, &mut rc);
+        for (c, f) in rc.clients.iter().zip(first.iter()) {
+            // at rho=0.98 consecutive rounds stay close; an i.i.d. draw
+            // would move by O(1) in expectation
+            assert!((c.h - *f).abs() < 0.8, "jump {:?} -> {:?}", f, c.h);
+        }
+    }
+
+    #[test]
+    fn gauss_markov_per_client_rhos_broadcast() {
+        let model =
+            GaussMarkov::with_rhos(ChannelConfig::default(), vec![0.1, 0.5, 0.9]);
+        assert_eq!(model.rho_for(0), 0.1);
+        assert_eq!(model.rho_for(4), 0.5);
+        assert_eq!(model.rho_for(8), 0.9);
+    }
+
+    #[test]
+    fn path_loss_geometry_is_persistent_and_asymmetric() {
+        let mut cfg = ChannelConfig::default();
+        cfg.model = FadingKind::PathLoss;
+        let mut model = PathLossGeometry::new(cfg);
+        assert!(model.sites().is_empty());
+        let mut rng = Rng::seed_from(15);
+        let mut rc = RoundChannel::empty();
+        model.draw_into(12, &mut rng, &mut rc);
+        let first: Vec<f32> = model.sites().iter().map(|s| s.amp).collect();
+        assert_eq!(first.len(), 12);
+        // asymmetry: amplitude scales genuinely differ across the fleet
+        let (lo, hi) = first
+            .iter()
+            .fold((f32::INFINITY, 0.0f32), |(l, h), &a| (l.min(a), h.max(a)));
+        assert!(hi / lo > 1.5, "gain spread {lo}..{hi} too flat");
+        // persistence: the same sites back every round
+        for _ in 0..3 {
+            model.draw_into(12, &mut rng, &mut rc);
+            let again: Vec<f32> = model.sites().iter().map(|s| s.amp).collect();
+            assert_eq!(first, again);
+        }
     }
 }

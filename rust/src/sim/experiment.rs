@@ -15,6 +15,29 @@
 //! # }
 //! ```
 //!
+//! Channel realism and feedback policies plug in through the same seams —
+//! no new plumbing:
+//!
+//! ```no_run
+//! use mpota::config::RunConfig;
+//! use mpota::sim::{Experiment, GaussMarkov, LossPlateau};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut cfg = RunConfig::default();
+//! cfg.channel.rho = 0.9; // fades persist across rounds
+//! let mut exp = Experiment::builder(cfg.clone())
+//!     .channel_model(GaussMarkov::new(cfg.channel.clone()))
+//!     .policy(LossPlateau::new().with_patience(3))
+//!     .build()?;
+//! let report = exp.run()?;
+//! # let _ = report;
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! (Setting `cfg.channel.model`/`cfg.policy` instead selects the same
+//! parts from the config without touching the builder.)
+//!
 //! Multi-run drivers share one runtime and recycle the scratch arena:
 //!
 //! ```no_run

@@ -10,10 +10,14 @@
 //!   model ([`AnalogOta`], [`DigitalOrthogonal`], [`IdealFedAvg`]);
 //! * [`ChannelModel`] — per-round channel draw ([`RayleighPilot`] is the
 //!   paper's Rayleigh+pilot+inversion pipeline, [`Awgn`] a no-fading
-//!   alternative);
+//!   alternative, [`GaussMarkov`] adds AR(1) temporal correlation and
+//!   [`PathLossGeometry`] persistent per-client path-loss/shadowing
+//!   asymmetry);
 //! * [`PrecisionPolicy`] — per-round client bit assignment
 //!   ([`StaticScheme`] reproduces the paper's fixed groups,
-//!   [`SnrAdaptive`] picks bits from the channel SNR);
+//!   [`SnrAdaptive`] picks bits from the channel SNR, and the feedback
+//!   policies [`LossPlateau`] / [`EnergyBudget`] react to the previous
+//!   round's record via [`PolicyCtx::prev`]);
 //! * [`RoundObserver`] — event sink for progress/logging/instrumentation.
 //!
 //! [`Session`] wires the server-side seams together over one reusable
@@ -40,10 +44,14 @@ pub mod sweep;
 pub use aggregator::{
     AggCtx, AggScratch, Aggregator, AnalogOta, DigitalOrthogonal, IdealFedAvg,
 };
-pub use channel_model::{Awgn, ChannelModel, RayleighPilot};
+pub use channel_model::{
+    Awgn, ChannelModel, GaussMarkov, PathLossGeometry, RayleighPilot,
+};
 pub use experiment::{Experiment, ExperimentBuilder};
 pub use observer::{ProgressPrinter, RoundObserver};
-pub use policy::{PolicyCtx, PrecisionPolicy, SnrAdaptive, StaticScheme};
+pub use policy::{
+    EnergyBudget, LossPlateau, PolicyCtx, PrecisionPolicy, SnrAdaptive, StaticScheme,
+};
 pub use sweep::{SweepReport, SweepSpec};
 
 use std::rc::Rc;

@@ -6,8 +6,13 @@
 //! construction, so default runs are bit-identical per seed.  The trait
 //! generalizes that to a per-round callback: [`SnrAdaptive`] is a built-in
 //! dynamic policy (bit selection from the channel SNR, with optional
-//! precision annealing over rounds), and custom policies can react to the
-//! previous round's record (loss plateau, OTA MSE, energy budget, ...).
+//! precision annealing over rounds), and the FEEDBACK policies react to
+//! the previous round's record through [`PolicyCtx::prev`]:
+//! [`LossPlateau`] promotes the fleet when the global loss stalls,
+//! [`EnergyBudget`] demotes it as cumulative fleet energy approaches a
+//! cap (the per-round-precision energy accrual in
+//! [`crate::coordinator::ClientState`] is what makes that cap
+//! meaningful).  Custom policies are plain trait impls.
 
 use anyhow::Result;
 
@@ -190,6 +195,203 @@ impl PrecisionPolicy for SnrAdaptive {
     }
 }
 
+/// Feedback policy: start cheap, PROMOTE the whole fleet one precision
+/// level whenever the global loss plateaus.
+///
+/// Intuition: early training tolerates coarse updates (the gradient
+/// signal dwarfs the quantization noise), so the fleet starts at the
+/// cheapest ladder level; once the previous rounds' server loss has not
+/// improved by `min_delta` for `patience` consecutive observed rounds,
+/// the remaining error floor is blamed on quantization and every client
+/// is promoted one level up the ladder.
+///
+/// Feedback-state discipline: the policy reads [`PolicyCtx::prev`] and
+/// keys every internal update on `prev.round`, so repeated calls with
+/// the same context are idempotent — which is exactly what the
+/// construction-time double assignment of round 1 requires (`prev` is
+/// `None` there, so nothing updates at all).  Records whose loss is
+/// carried forward from an earlier evaluation
+/// (`RoundRecord::evaluated == false`, i.e. non-eval rounds under
+/// `eval_every > 1`) are ignored entirely: `patience` counts *fresh
+/// evaluations* without improvement, not wall-clock rounds.
+pub struct LossPlateau {
+    /// Candidate levels, descending bits (the scheme ladder).
+    ladder: Vec<Precision>,
+    /// Ladder index the fleet starts at (default: the cheapest level).
+    start: usize,
+    /// Observed fresh evaluations without improvement before a promotion.
+    patience: usize,
+    /// Minimum loss decrease that counts as improvement.
+    min_delta: f64,
+    // feedback state, keyed by the last observed round
+    idx: usize,
+    best_loss: f64,
+    since_improve: usize,
+    last_seen: usize,
+}
+
+impl LossPlateau {
+    /// Plateau policy with the default ladder, starting at the cheapest
+    /// level with a patience of 5 rounds.
+    pub fn new() -> Self {
+        let ladder: Vec<Precision> =
+            SCHEME_LEVELS.iter().map(|&b| Precision::of(b)).collect();
+        let start = ladder.len() - 1;
+        LossPlateau {
+            ladder,
+            start,
+            patience: 5,
+            min_delta: 1e-3,
+            idx: start,
+            best_loss: f64::INFINITY,
+            since_improve: 0,
+            last_seen: 0,
+        }
+    }
+
+    /// Observed rounds without improvement before promoting (must be
+    /// positive).
+    pub fn with_patience(mut self, patience: usize) -> Self {
+        assert!(patience > 0, "patience must be positive");
+        self.patience = patience;
+        self
+    }
+
+    /// Minimum loss decrease that counts as improvement.
+    pub fn with_min_delta(mut self, min_delta: f64) -> Self {
+        self.min_delta = min_delta;
+        self
+    }
+
+    /// Start the fleet at `bits` instead of the cheapest ladder level.
+    /// Panics if `bits` is not a ladder level.
+    pub fn with_start_bits(mut self, bits: u8) -> Self {
+        let i = self
+            .ladder
+            .iter()
+            .position(|p| p.bits() == bits)
+            .expect("start bits must be a ladder level");
+        self.start = i;
+        self.idx = i;
+        self
+    }
+
+    /// The precision currently assigned to the fleet (diagnostics).
+    pub fn current_bits(&self) -> u8 {
+        self.ladder[self.idx].bits()
+    }
+}
+
+impl Default for LossPlateau {
+    fn default() -> Self {
+        LossPlateau::new()
+    }
+}
+
+impl PrecisionPolicy for LossPlateau {
+    fn assign_into(
+        &mut self,
+        ctx: &PolicyCtx<'_>,
+        out: &mut Vec<Precision>,
+    ) -> Result<()> {
+        if let Some(prev) = ctx.prev {
+            // only FRESH evaluations carry information: with
+            // `eval_every > 1` the coordinator carries the last eval's
+            // loss forward on non-eval rounds (`evaluated == false`), and
+            // counting those as stalls would promote on a schedule
+            // instead of on the loss trend
+            if prev.evaluated && prev.round > self.last_seen {
+                self.last_seen = prev.round;
+                if prev.server_loss < self.best_loss - self.min_delta {
+                    self.best_loss = prev.server_loss;
+                    self.since_improve = 0;
+                } else {
+                    self.since_improve += 1;
+                    if self.since_improve >= self.patience && self.idx > 0 {
+                        self.idx -= 1; // promote: one level UP the ladder
+                        self.since_improve = 0;
+                    }
+                }
+            }
+        }
+        out.clear();
+        out.resize(ctx.clients, self.ladder[self.idx]);
+        Ok(())
+    }
+
+    fn levels(&self) -> Vec<Precision> {
+        // promotion only walks UP from the start level
+        self.ladder[..=self.start].to_vec()
+    }
+
+    fn label(&self) -> String {
+        format!("loss-plateau/p{}", self.patience)
+    }
+}
+
+/// Feedback policy: start rich, DEMOTE the fleet down the ladder as
+/// cumulative fleet energy approaches its budget.
+///
+/// The previous round's record carries the cumulative fleet energy
+/// accrued at the precision each MAC actually ran at
+/// ([`RoundRecord::energy_joules`]); with a ladder of L levels the fleet
+/// is demoted one level for every `1/L` of the budget spent, so it lands
+/// on the cheapest level as the budget runs out instead of overshooting
+/// it.  Stateless: the assignment is a pure function of `ctx`, and since
+/// cumulative energy never decreases, precision is monotone
+/// non-increasing over a run.
+pub struct EnergyBudget {
+    /// Candidate levels, descending bits.
+    ladder: Vec<Precision>,
+    /// Per-client energy cap in joules; the fleet budget is
+    /// `ctx.clients ×` this.
+    budget_j: f64,
+}
+
+impl EnergyBudget {
+    /// Budget policy over the default ladder.  Panics unless the
+    /// per-client budget is positive and finite.
+    pub fn new(budget_j: f64) -> Self {
+        assert!(
+            budget_j > 0.0 && budget_j.is_finite(),
+            "energy budget must be positive and finite"
+        );
+        EnergyBudget {
+            ladder: SCHEME_LEVELS.iter().map(|&b| Precision::of(b)).collect(),
+            budget_j,
+        }
+    }
+
+    /// The per-client energy cap in joules.
+    pub fn budget_j(&self) -> f64 {
+        self.budget_j
+    }
+}
+
+impl PrecisionPolicy for EnergyBudget {
+    fn assign_into(
+        &mut self,
+        ctx: &PolicyCtx<'_>,
+        out: &mut Vec<Precision>,
+    ) -> Result<()> {
+        let spent = ctx.prev.map(|r| r.energy_joules).unwrap_or(0.0);
+        let frac = spent / (self.budget_j * ctx.clients as f64);
+        let idx =
+            ((frac * self.ladder.len() as f64) as usize).min(self.ladder.len() - 1);
+        out.clear();
+        out.resize(ctx.clients, self.ladder[idx]);
+        Ok(())
+    }
+
+    fn levels(&self) -> Vec<Precision> {
+        self.ladder.clone()
+    }
+
+    fn label(&self) -> String {
+        format!("energy-budget/{}J", self.budget_j)
+    }
+}
+
 /// The built-in policy named by the config's [`PolicyKind`].
 pub fn from_config(kind: PolicyKind, cfg: &RunConfig) -> Box<dyn PrecisionPolicy> {
     match kind {
@@ -197,6 +399,10 @@ pub fn from_config(kind: PolicyKind, cfg: &RunConfig) -> Box<dyn PrecisionPolicy
         PolicyKind::SnrAdaptive => {
             Box::new(SnrAdaptive::new().with_snr_hint(cfg.channel.snr_db))
         }
+        PolicyKind::LossPlateau => {
+            Box::new(LossPlateau::new().with_patience(cfg.plateau_patience))
+        }
+        PolicyKind::EnergyBudget => Box::new(EnergyBudget::new(cfg.energy_budget_j)),
     }
 }
 
@@ -267,6 +473,121 @@ mod tests {
             from_config(cfg.policy, &cfg).levels(),
             vec![Precision::of(8)]
         );
+    }
+
+    fn rec(round: usize, loss: f64, energy: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            server_loss: loss,
+            energy_joules: energy,
+            evaluated: true,
+            ..Default::default()
+        }
+    }
+
+    fn fctx<'a>(
+        round: usize,
+        clients: usize,
+        prev: &'a RoundRecord,
+    ) -> PolicyCtx<'a> {
+        PolicyCtx { round, clients, snr_db: 20.0, prev: Some(prev) }
+    }
+
+    #[test]
+    fn loss_plateau_promotes_on_stall_and_is_idempotent() {
+        let mut p = LossPlateau::new().with_patience(2);
+        let mut out = Vec::new();
+        // round 1 (twice — construction + first round): no prev, cheapest
+        for _ in 0..2 {
+            p.assign_into(&ctx(1, 3, 20.0), &mut out).unwrap();
+            assert_eq!(out, vec![Precision::of(4); 3]);
+        }
+        // improving loss: stays cheap
+        let r1 = rec(1, 1.0, 0.0);
+        p.assign_into(&fctx(2, 3, &r1), &mut out).unwrap();
+        assert_eq!(p.current_bits(), 4);
+        // re-invoking with the SAME observed round must not double-count
+        p.assign_into(&fctx(2, 3, &r1), &mut out).unwrap();
+        assert_eq!(p.current_bits(), 4);
+        // stalled loss: promote after `patience` stalled observations
+        let mut bits = Vec::new();
+        let recs: Vec<RoundRecord> = (2..=8).map(|t| rec(t, 1.0, 0.0)).collect();
+        for (i, r) in recs.iter().enumerate() {
+            p.assign_into(&fctx(i + 3, 3, r), &mut out).unwrap();
+            bits.push(out[0].bits());
+        }
+        assert_eq!(bits, vec![4, 6, 6, 8, 8, 12, 12]);
+        assert_eq!(p.levels().len(), SCHEME_LEVELS.len());
+        assert_eq!(p.label(), "loss-plateau/p2");
+    }
+
+    #[test]
+    fn loss_plateau_start_bits_and_improvement_reset() {
+        let mut p = LossPlateau::new().with_patience(1).with_start_bits(8);
+        let mut out = Vec::new();
+        p.assign_into(&ctx(1, 2, 20.0), &mut out).unwrap();
+        assert_eq!(p.current_bits(), 8);
+        // levels(): only the start level and everything above it
+        assert_eq!(
+            p.levels().iter().map(|l| l.bits()).collect::<Vec<_>>(),
+            vec![32, 24, 16, 12, 8]
+        );
+        // a genuine improvement resets the stall counter
+        let improving = [rec(1, 2.0, 0.0), rec(2, 1.0, 0.0), rec(3, 0.5, 0.0)];
+        for (i, r) in improving.iter().enumerate() {
+            p.assign_into(&fctx(i + 2, 2, r), &mut out).unwrap();
+        }
+        // first observation sets the baseline; each later one improves
+        assert_eq!(p.current_bits(), 8);
+    }
+
+    #[test]
+    fn loss_plateau_ignores_carried_forward_losses() {
+        // eval_every > 1: non-eval rounds carry the last loss forward
+        // with `evaluated == false` — they must not count as stalls, or
+        // the policy would promote on a schedule instead of on the trend
+        let mut p = LossPlateau::new().with_patience(2);
+        let mut out = Vec::new();
+        for t in 2..=12 {
+            let mut r = rec(t - 1, 1.0, 0.0);
+            r.evaluated = (t - 1) % 5 == 0; // fresh eval every 5th round
+            p.assign_into(&fctx(t, 3, &r), &mut out).unwrap();
+        }
+        // only rounds 5 and 10 were fresh: baseline + one stall — no
+        // promotion despite 11 wall-clock rounds of flat loss
+        assert_eq!(p.current_bits(), 4);
+    }
+
+    #[test]
+    fn energy_budget_demotes_as_budget_depletes() {
+        let mut p = EnergyBudget::new(1.0); // 1 J per client
+        let mut out = Vec::new();
+        // no history: full precision
+        p.assign_into(&ctx(1, 4, 20.0), &mut out).unwrap();
+        assert_eq!(out, vec![Precision::of(32); 4]);
+        // fleet budget = 4 J, ladder has 7 levels
+        let cases = [(0.0, 32u8), (2.0, 12), (3.9, 4), (100.0, 4)];
+        for (spent, bits) in cases {
+            let r = rec(1, 0.0, spent);
+            p.assign_into(&fctx(2, 4, &r), &mut out).unwrap();
+            assert_eq!(out[0].bits(), bits, "spent {spent}");
+        }
+        assert_eq!(p.levels().len(), SCHEME_LEVELS.len());
+        assert_eq!(p.label(), "energy-budget/1J");
+    }
+
+    #[test]
+    fn feedback_policies_from_config() {
+        let mut cfg = RunConfig::default();
+        cfg.policy = PolicyKind::LossPlateau;
+        cfg.plateau_patience = 3;
+        assert_eq!(
+            from_config(cfg.policy, &cfg).label(),
+            "loss-plateau/p3"
+        );
+        cfg.policy = PolicyKind::EnergyBudget;
+        cfg.energy_budget_j = 2.5;
+        assert_eq!(from_config(cfg.policy, &cfg).label(), "energy-budget/2.5J");
     }
 
     #[test]

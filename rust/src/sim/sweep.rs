@@ -1,6 +1,7 @@
-//! The sweep driver: run a scheme × SNR × aggregator config grid in ONE
-//! process, reusing one runtime and one scratch arena across cells, and
-//! emit a consolidated JSON report (`mpota sweep` on the CLI).
+//! The sweep driver: run a scheme × SNR × aggregator × channel-model ×
+//! policy config grid in ONE process, reusing one runtime and one scratch
+//! arena across cells, and emit a consolidated JSON report (`mpota sweep`
+//! on the CLI).
 //!
 //! Two modes:
 //!
@@ -16,6 +17,14 @@
 //!   seed, so cells see *paired* channel/payload realisations — the grid
 //!   isolates the scheme/SNR/architecture effect.  This is the mode CI
 //!   exercises.
+//!
+//! Cell isolation: every cell constructs a FRESH
+//! [`crate::sim::ChannelModel`] and [`crate::sim::PrecisionPolicy`] from
+//! its own config — stateful parts (AR(1)
+//! fading memory, path-loss geometry, plateau counters) never leak
+//! across cells, so enumerating the grid in a different order yields
+//! bit-identical per-cell results (`cell_order_is_immaterial` pins
+//! this).  Only inert *buffers* (the scratch arena) are recycled.
 
 use std::path::Path;
 use std::rc::Rc;
@@ -23,10 +32,12 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::channel::FadingKind;
 use crate::config::{Aggregation, PolicyKind, RunConfig};
 use crate::fl::{self, Scheme};
 use crate::json::Value;
 use crate::kernels::PayloadPlane;
+use crate::metrics::RoundRecord;
 use crate::quant;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
@@ -34,7 +45,8 @@ use crate::tensor;
 
 use super::{aggregator, channel_model, policy, Arena, Experiment, PolicyCtx, Session};
 
-/// A config grid: the base run crossed with schemes × SNRs × aggregators.
+/// A config grid: the base run crossed with schemes × SNRs × aggregators
+/// × channel models × precision policies.
 pub struct SweepSpec {
     /// Every cell starts from this config.
     pub base: RunConfig,
@@ -44,18 +56,25 @@ pub struct SweepSpec {
     pub snrs_db: Vec<f32>,
     /// Aggregation architectures to sweep.
     pub aggregations: Vec<Aggregation>,
+    /// Channel models to sweep (each cell builds a FRESH instance from
+    /// its config, so stateful models never share state across cells).
+    pub channel_models: Vec<FadingKind>,
+    /// Precision policies to sweep (fresh per cell, like the models).
+    pub policies: Vec<PolicyKind>,
     /// Payload length for the channel-only mode (full FL runs use the
     /// model's parameter count instead).
     pub payload_len: usize,
 }
 
 impl SweepSpec {
-    /// A 1×1×1 grid over the base config; widen the axes from there.
+    /// A 1×1×1×1×1 grid over the base config; widen the axes from there.
     pub fn new(base: RunConfig) -> Self {
         SweepSpec {
             schemes: vec![base.scheme.clone()],
             snrs_db: vec![base.channel.snr_db],
             aggregations: vec![base.aggregation],
+            channel_models: vec![base.channel.model],
+            policies: vec![base.policy],
             payload_len: 4096,
             base,
         }
@@ -63,30 +82,72 @@ impl SweepSpec {
 
     /// Number of grid cells.
     pub fn grid_size(&self) -> usize {
-        self.schemes.len() * self.snrs_db.len() * self.aggregations.len()
+        self.schemes.len()
+            * self.snrs_db.len()
+            * self.aggregations.len()
+            * self.channel_models.len()
+            * self.policies.len()
     }
 
-    /// Reject grids whose axes the per-cell policy would silently ignore:
-    /// a non-static precision policy never reads the cell's scheme, so a
+    /// Reject grids whose axes a per-cell policy would silently ignore: a
+    /// non-static precision policy never reads the cell's scheme, so a
     /// multi-scheme grid would emit identical results under different
-    /// scheme labels.
+    /// scheme labels.  Also pre-validates the channel knobs against every
+    /// model on the `channel_models` axis, so a bad `--rho`/`--cell-radius`
+    /// is a clean error up front instead of a panic inside a model
+    /// constructor mid-sweep.
     fn validate(&self) -> Result<()> {
-        if self.base.policy != PolicyKind::Static && self.schemes.len() > 1 {
-            bail!(
-                "policy '{}' ignores the scheme; a multi-scheme sweep axis \
-                 requires the static policy",
-                self.base.policy
-            );
+        if self.schemes.len() > 1 {
+            if let Some(p) =
+                self.policies.iter().find(|&&p| p != PolicyKind::Static)
+            {
+                bail!(
+                    "policy '{p}' ignores the scheme; a multi-scheme sweep \
+                     axis requires static-only policies"
+                );
+            }
+        }
+        for &model in &self.channel_models {
+            let mut ch = self.base.channel.clone();
+            ch.model = model;
+            ch.validate()?;
         }
         Ok(())
     }
 
-    fn cell_config(&self, scheme: &Scheme, snr_db: f32, agg: Aggregation) -> RunConfig {
+    fn cell_config(
+        &self,
+        scheme: &Scheme,
+        snr_db: f32,
+        agg: Aggregation,
+        model: FadingKind,
+        pol: PolicyKind,
+    ) -> RunConfig {
         let mut cfg = self.base.clone();
         cfg.scheme = scheme.clone();
         cfg.channel.snr_db = snr_db;
         cfg.aggregation = agg;
+        cfg.channel.model = model;
+        cfg.policy = pol;
         cfg
+    }
+
+    /// Enumerate the grid in canonical axis order (schemes outermost,
+    /// policies innermost).
+    fn cells_iter(&self) -> Vec<(&Scheme, f32, Aggregation, FadingKind, PolicyKind)> {
+        let mut cells = Vec::with_capacity(self.grid_size());
+        for scheme in &self.schemes {
+            for &snr in &self.snrs_db {
+                for &agg in &self.aggregations {
+                    for &model in &self.channel_models {
+                        for &pol in &self.policies {
+                            cells.push((scheme, snr, agg, model, pol));
+                        }
+                    }
+                }
+            }
+        }
+        cells
     }
 
     fn grid_json(&self) -> Value {
@@ -110,6 +171,21 @@ impl SweepSpec {
                     .iter()
                     .map(|a| Value::Str(a.to_string()))
                     .collect(),
+            ),
+        );
+        g.set(
+            "channel_models",
+            Value::Array(
+                self.channel_models
+                    .iter()
+                    .map(|m| Value::Str(m.to_string()))
+                    .collect(),
+            ),
+        );
+        g.set(
+            "policies",
+            Value::Array(
+                self.policies.iter().map(|p| Value::Str(p.to_string())).collect(),
             ),
         );
         g
@@ -163,47 +239,44 @@ pub fn run_fl_sweep_on(spec: &SweepSpec, runtime: Rc<Runtime>) -> Result<SweepRe
     let t0 = Instant::now();
     let mut arena = Arena::default();
     let mut cells = Vec::new();
-    for scheme in &spec.schemes {
-        for &snr in &spec.snrs_db {
-            for &agg in &spec.aggregations {
-                let cfg = spec.cell_config(scheme, snr, agg);
-                let cell_t0 = Instant::now();
-                let mut exp = Experiment::builder(cfg)
-                    .runtime(runtime.clone())
-                    .arena(arena)
-                    .build()?;
-                let report = exp.run()?;
-                arena = exp.into_arena();
+    for (scheme, snr, agg, model, pol) in spec.cells_iter() {
+        let cfg = spec.cell_config(scheme, snr, agg, model, pol);
+        let cell_t0 = Instant::now();
+        // the builder constructs fresh channel-model/policy instances from
+        // this cell's config — no mutable state crosses cell boundaries
+        let mut exp = Experiment::builder(cfg)
+            .runtime(runtime.clone())
+            .arena(arena)
+            .build()?;
+        let report = exp.run()?;
+        arena = exp.into_arena();
 
-                let mean_mse = mean_of(report.log.rounds.iter().map(|r| r.ota_mse));
-                let mut c = Value::object();
-                c.set("scheme", Value::Str(scheme.to_string()));
-                c.set("snr_db", Value::Num(snr as f64));
-                c.set("aggregation", Value::Str(agg.to_string()));
-                c.set("label", Value::Str(report.label.clone()));
-                c.set("final_accuracy", Value::Num(report.final_accuracy));
-                c.set("final_loss", Value::Num(report.final_loss));
-                c.set(
-                    "best_accuracy",
-                    Value::Num(report.log.best_accuracy()),
-                );
-                c.set(
-                    "rounds_to_90",
-                    match report.rounds_to_90 {
-                        Some(r) => Value::Num(r as f64),
-                        None => Value::Null,
-                    },
-                );
-                c.set("mean_ota_mse", Value::Num(mean_mse));
-                c.set("energy_j", Value::Num(report.energy.actual_joules));
-                c.set(
-                    "energy_saving_vs_32_pct",
-                    Value::Num(report.energy.saving_vs_32()),
-                );
-                c.set("wall_secs", Value::Num(cell_t0.elapsed().as_secs_f64()));
-                cells.push(c);
-            }
-        }
+        let mean_mse = mean_of(report.log.rounds.iter().map(|r| r.ota_mse));
+        let mut c = Value::object();
+        c.set("scheme", Value::Str(scheme.to_string()));
+        c.set("snr_db", Value::Num(snr as f64));
+        c.set("aggregation", Value::Str(agg.to_string()));
+        c.set("channel_model", Value::Str(model.to_string()));
+        c.set("policy", Value::Str(pol.to_string()));
+        c.set("label", Value::Str(report.label.clone()));
+        c.set("final_accuracy", Value::Num(report.final_accuracy));
+        c.set("final_loss", Value::Num(report.final_loss));
+        c.set("best_accuracy", Value::Num(report.log.best_accuracy()));
+        c.set(
+            "rounds_to_90",
+            match report.rounds_to_90 {
+                Some(r) => Value::Num(r as f64),
+                None => Value::Null,
+            },
+        );
+        c.set("mean_ota_mse", Value::Num(mean_mse));
+        c.set("energy_j", Value::Num(report.energy.actual_joules));
+        c.set(
+            "energy_saving_vs_32_pct",
+            Value::Num(report.energy.saving_vs_32()),
+        );
+        c.set("wall_secs", Value::Num(cell_t0.elapsed().as_secs_f64()));
+        cells.push(c);
     }
     Ok(SweepReport { json: consolidated(spec, "fl", cells, t0.elapsed().as_secs_f64()) })
 }
@@ -229,91 +302,106 @@ pub fn run_channel_sweep(spec: &SweepSpec) -> Result<SweepReport> {
     let mut ideal = Vec::new();
 
     let mut cells = Vec::new();
-    for scheme in &spec.schemes {
-        for &snr in &spec.snrs_db {
-            for &agg in &spec.aggregations {
-                let cfg = spec.cell_config(scheme, snr, agg);
-                let cell_t0 = Instant::now();
-                // identical streams per cell => paired realisations
-                let mut payload_rng = root.stream("sweep-payload");
-                let mut session = Session::with_state(
-                    channel_model::from_config(&cfg.channel),
-                    aggregator::from_config(cfg.aggregation),
-                    root.stream("sweep-channel"),
-                    root.stream("sweep-noise"),
-                    cfg.threads,
-                    std::mem::take(&mut agg_scratch),
-                    std::mem::take(&mut round_channel),
-                );
-                let mut pol = policy::from_config(cfg.policy, &cfg);
+    for (scheme, snr, agg, model, polkind) in spec.cells_iter() {
+        let cfg = spec.cell_config(scheme, snr, agg, model, polkind);
+        let cell_t0 = Instant::now();
+        // identical streams per cell => paired realisations; the channel
+        // model and policy are FRESH instances (any fading memory,
+        // geometry or plateau state starts clean for every cell)
+        let mut payload_rng = root.stream("sweep-payload");
+        let mut session = Session::with_state(
+            channel_model::from_config(&cfg.channel),
+            aggregator::from_config(cfg.aggregation),
+            root.stream("sweep-channel"),
+            root.stream("sweep-noise"),
+            cfg.threads,
+            std::mem::take(&mut agg_scratch),
+            std::mem::take(&mut round_channel),
+        );
+        let mut pol = policy::from_config(cfg.policy, &cfg);
 
-                let mut mse_sum = 0.0f64;
-                let mut part_sum = 0usize;
-                let mut channel_uses = 0u64;
-                let mut bits = 0u64;
-                let mut lost_rounds = 0usize;
-                for t in 1..=rounds {
-                    pol.assign_into(
-                        &PolicyCtx {
-                            round: t,
-                            clients,
-                            snr_db: cfg.channel.snr_db,
-                            prev: None,
-                        },
-                        &mut assigned,
-                    )?;
-                    plane.reset(clients, n);
-                    for (k, &p) in assigned.iter().enumerate() {
-                        let row = plane.row_mut(k);
-                        payload_rng.fill_normal(row, 0.0, 1.0);
-                        quant::fake_quant_inplace(row, p);
-                    }
-                    fl::mean_plane_into(&plane, &mut ideal, cfg.threads);
-                    let stats = session.aggregate(t, &plane, &assigned);
-                    if stats.participants > 0 {
-                        mse_sum += tensor::mse(session.result(), &ideal);
-                    } else {
-                        // fully-silenced round: total loss, not 0-MSE —
-                        // excluded from the mean and counted separately
-                        lost_rounds += 1;
-                    }
-                    part_sum += stats.participants;
-                    channel_uses += stats.channel_uses;
-                    bits += stats.bits_transmitted;
-                }
-
-                let mut c = Value::object();
-                c.set("scheme", Value::Str(scheme.to_string()));
-                c.set("snr_db", Value::Num(snr as f64));
-                c.set("aggregation", Value::Str(agg.to_string()));
-                c.set("rounds", Value::Num(rounds as f64));
-                let delivered = rounds - lost_rounds;
-                c.set(
-                    "mean_mse_vs_ideal",
-                    if delivered > 0 {
-                        Value::Num(mse_sum / delivered as f64)
-                    } else {
-                        Value::Null // every round lost: no MSE to report
-                    },
-                );
-                c.set("lost_rounds", Value::Num(lost_rounds as f64));
-                c.set(
-                    "mean_participants",
-                    Value::Num(part_sum as f64 / rounds as f64),
-                );
-                c.set(
-                    "channel_uses_per_round",
-                    Value::Num(channel_uses as f64 / rounds as f64),
-                );
-                c.set("bits_per_round", Value::Num(bits as f64 / rounds as f64));
-                c.set("wall_secs", Value::Num(cell_t0.elapsed().as_secs_f64()));
-                cells.push(c);
-
-                let (a, ch) = session.into_state();
-                agg_scratch = a;
-                round_channel = ch;
+        let mut mse_sum = 0.0f64;
+        let mut part_sum = 0usize;
+        let mut channel_uses = 0u64;
+        let mut bits = 0u64;
+        let mut lost_rounds = 0usize;
+        // feedback loop for reactive policies: carry a synthetic record of
+        // the previous aggregation round (no training here, so the
+        // loss/energy fields stay at their defaults — loss-plateau then
+        // walks its ladder on the stalled loss, energy-budget stays put)
+        let mut prev: Option<RoundRecord> = None;
+        for t in 1..=rounds {
+            pol.assign_into(
+                &PolicyCtx {
+                    round: t,
+                    clients,
+                    snr_db: cfg.channel.snr_db,
+                    prev: prev.as_ref(),
+                },
+                &mut assigned,
+            )?;
+            plane.reset(clients, n);
+            for (k, &p) in assigned.iter().enumerate() {
+                let row = plane.row_mut(k);
+                payload_rng.fill_normal(row, 0.0, 1.0);
+                quant::fake_quant_inplace(row, p);
             }
+            fl::mean_plane_into(&plane, &mut ideal, cfg.threads);
+            let stats = session.aggregate(t, &plane, &assigned);
+            if stats.participants > 0 {
+                mse_sum += tensor::mse(session.result(), &ideal);
+            } else {
+                // fully-silenced round: total loss, not 0-MSE —
+                // excluded from the mean and counted separately
+                lost_rounds += 1;
+            }
+            part_sum += stats.participants;
+            channel_uses += stats.channel_uses;
+            bits += stats.bits_transmitted;
+            prev = Some(RoundRecord {
+                round: t,
+                participants: stats.participants,
+                ota_mse: stats.mse_vs_ideal,
+                // the synthetic loss (0.0) counts as a fresh observation
+                // so loss-plateau exercises its ladder in channel-only
+                // mode; energy stays 0, so energy-budget stays put
+                evaluated: true,
+                ..Default::default()
+            });
         }
+
+        let mut c = Value::object();
+        c.set("scheme", Value::Str(scheme.to_string()));
+        c.set("snr_db", Value::Num(snr as f64));
+        c.set("aggregation", Value::Str(agg.to_string()));
+        c.set("channel_model", Value::Str(model.to_string()));
+        c.set("policy", Value::Str(polkind.to_string()));
+        c.set("rounds", Value::Num(rounds as f64));
+        let delivered = rounds - lost_rounds;
+        c.set(
+            "mean_mse_vs_ideal",
+            if delivered > 0 {
+                Value::Num(mse_sum / delivered as f64)
+            } else {
+                Value::Null // every round lost: no MSE to report
+            },
+        );
+        c.set("lost_rounds", Value::Num(lost_rounds as f64));
+        c.set(
+            "mean_participants",
+            Value::Num(part_sum as f64 / rounds as f64),
+        );
+        c.set(
+            "channel_uses_per_round",
+            Value::Num(channel_uses as f64 / rounds as f64),
+        );
+        c.set("bits_per_round", Value::Num(bits as f64 / rounds as f64));
+        c.set("wall_secs", Value::Num(cell_t0.elapsed().as_secs_f64()));
+        cells.push(c);
+
+        let (a, ch) = session.into_state();
+        agg_scratch = a;
+        round_channel = ch;
     }
     let mut json = consolidated(spec, "channel-only", cells, t0.elapsed().as_secs_f64());
     json.set("payload_len", Value::Num(n as f64));
@@ -405,12 +493,120 @@ mod tests {
     #[test]
     fn scheme_axis_requires_static_policy() {
         let mut spec = tiny_spec();
-        spec.base.policy = PolicyKind::SnrAdaptive;
+        spec.policies = vec![PolicyKind::SnrAdaptive];
         // two schemes the policy would never read: reject loudly
         assert!(run_channel_sweep(&spec).is_err());
         // a single-scheme grid is fine (the axis carries no information)
         spec.schemes.truncate(1);
         assert_eq!(run_channel_sweep(&spec).unwrap().cells(), 4);
+        // a mixed policy axis still trips on its non-static member
+        let mut spec = tiny_spec();
+        spec.policies = vec![PolicyKind::Static, PolicyKind::LossPlateau];
+        assert!(run_channel_sweep(&spec).is_err());
+    }
+
+    #[test]
+    fn channel_model_and_policy_axes_widen_the_grid() {
+        let mut spec = tiny_spec();
+        spec.schemes.truncate(1);
+        spec.snrs_db.truncate(1);
+        spec.aggregations = vec![Aggregation::OtaAnalog];
+        spec.channel_models =
+            vec![FadingKind::Rayleigh, FadingKind::GaussMarkov, FadingKind::PathLoss];
+        spec.policies = vec![PolicyKind::Static, PolicyKind::LossPlateau];
+        spec.base.channel.rho = 0.9;
+        spec.base.rounds = 6;
+        assert_eq!(spec.grid_size(), 6);
+        let report = run_channel_sweep(&spec).unwrap();
+        assert_eq!(report.cells(), 6);
+        let cells = report.json.get("cells").unwrap().as_array().unwrap();
+        for c in cells {
+            let m = c.get("channel_model").unwrap().as_str().unwrap();
+            assert!(["rayleigh", "gauss_markov", "path_loss"].contains(&m));
+            let p = c.get("policy").unwrap().as_str().unwrap();
+            assert!(["static", "loss-plateau"].contains(&p));
+            // every cell delivered at least some rounds
+            assert!(c.get("mean_mse_vs_ideal").unwrap().as_f64().unwrap() >= 0.0);
+        }
+        // gauss_markov at rho=0 is the rayleigh cell bit-for-bit
+        let mut pin = tiny_spec();
+        pin.schemes.truncate(1);
+        pin.snrs_db.truncate(1);
+        pin.aggregations = vec![Aggregation::OtaAnalog];
+        pin.base.channel.rho = 0.0;
+        pin.channel_models = vec![FadingKind::Rayleigh, FadingKind::GaussMarkov];
+        let rep = run_channel_sweep(&pin).unwrap();
+        let cs = rep.json.get("cells").unwrap().as_array().unwrap();
+        assert_eq!(
+            cs[0].get("mean_mse_vs_ideal"),
+            cs[1].get("mean_mse_vs_ideal"),
+            "rho=0 gauss_markov must reproduce the rayleigh cell"
+        );
+    }
+
+    #[test]
+    fn invalid_channel_knobs_error_instead_of_panicking() {
+        // a bad --rho must be a clean error, not a panic mid-sweep
+        let mut spec = tiny_spec();
+        spec.channel_models = vec![FadingKind::GaussMarkov];
+        spec.base.channel.rho = 1.5;
+        assert!(run_channel_sweep(&spec).is_err());
+        // cell_radius inside the reference distance, with path_loss on
+        // the axis (the base model may be something else entirely)
+        let mut spec = tiny_spec();
+        spec.channel_models = vec![FadingKind::Rayleigh, FadingKind::PathLoss];
+        spec.base.channel.cell_radius = 5.0;
+        assert!(run_channel_sweep(&spec).is_err());
+        // ...but a rayleigh-only grid never reads the radius knob
+        let mut spec = tiny_spec();
+        spec.base.channel.cell_radius = 5.0;
+        assert_eq!(run_channel_sweep(&spec).unwrap().cells(), 8);
+    }
+
+    #[test]
+    fn cell_order_is_immaterial() {
+        // stateful channel models must not leak state across cells: the
+        // same grid enumerated in a different axis order yields
+        // bit-identical per-cell results
+        let mut spec = tiny_spec();
+        spec.base.channel.rho = 0.8;
+        spec.channel_models = vec![
+            FadingKind::GaussMarkov,
+            FadingKind::Rayleigh,
+            FadingKind::PathLoss,
+        ];
+        let a = run_channel_sweep(&spec).unwrap();
+
+        let mut rev = tiny_spec();
+        rev.base.channel.rho = 0.8;
+        rev.channel_models = vec![
+            FadingKind::PathLoss,
+            FadingKind::Rayleigh,
+            FadingKind::GaussMarkov,
+        ];
+        rev.schemes.reverse();
+        rev.snrs_db.reverse();
+        rev.aggregations.reverse();
+        let b = run_channel_sweep(&rev).unwrap();
+
+        let (ca, cb) = (
+            a.json.get("cells").unwrap().as_array().unwrap(),
+            b.json.get("cells").unwrap().as_array().unwrap(),
+        );
+        assert_eq!(ca.len(), cb.len());
+        let coord_keys = ["scheme", "snr_db", "aggregation", "channel_model", "policy"];
+        for x in ca {
+            let y = cb
+                .iter()
+                .find(|y| coord_keys.iter().all(|k| x.get(k) == y.get(k)))
+                .unwrap_or_else(|| panic!("no matching cell for {x:?}"));
+            for key in
+                ["mean_mse_vs_ideal", "lost_rounds", "mean_participants",
+                 "bits_per_round", "channel_uses_per_round"]
+            {
+                assert_eq!(x.get(key), y.get(key), "{key} differs across orders");
+            }
+        }
     }
 
     #[test]

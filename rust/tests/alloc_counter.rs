@@ -9,6 +9,12 @@
 //! through `Box<dyn Aggregator>`, `Box<dyn ChannelModel>`,
 //! `Box<dyn PrecisionPolicy>` and `Box<dyn RoundObserver>`.
 //!
+//! The channel-realism parts are pinned through the same window: the
+//! STATEFUL channel models (`GaussMarkov` AR(1) memory, `PathLossGeometry`
+//! site table) build their state on the warmup rounds and must then mutate
+//! it in place, and the feedback policies (`LossPlateau`, `EnergyBudget`)
+//! must react to the previous round's record with scalar state only.
+//!
 //! Scope: this is the post-training half of `Coordinator::round()` — the
 //! client PJRT dispatch (`Runtime::train_step`) allocates literals inside
 //! the runtime and is explicitly outside the arena contract (and cannot
@@ -53,8 +59,9 @@ use mpota::ota::AggregateStats;
 use mpota::quant::{self, Precision, Rounding};
 use mpota::rng::Rng;
 use mpota::sim::{
-    AnalogOta, DigitalOrthogonal, IdealFedAvg, PolicyCtx, PrecisionPolicy,
-    RayleighPilot, RoundObserver, Session, StaticScheme,
+    AnalogOta, DigitalOrthogonal, EnergyBudget, GaussMarkov, IdealFedAvg,
+    LossPlateau, PathLossGeometry, PolicyCtx, PrecisionPolicy, RayleighPilot,
+    RoundObserver, Session, StaticScheme,
 };
 use mpota::tensor;
 
@@ -118,12 +125,37 @@ fn steady_state_round_path_is_allocation_free() {
         1,
     );
     let mut ideal = Session::new(
-        Box::new(RayleighPilot::new(cfg)),
+        Box::new(RayleighPilot::new(cfg.clone())),
         Box::new(IdealFedAvg),
         root.stream("channel-i"),
         root.stream("noise-i"),
         1,
     );
+    // stateful channel models: AR(1) fading memory + path-loss site table
+    // are built on the warmup rounds, then mutated in place
+    let mut gm_cfg = cfg.clone();
+    gm_cfg.rho = 0.9;
+    let mut gauss_markov = Session::new(
+        Box::new(GaussMarkov::new(gm_cfg)),
+        Box::new(AnalogOta),
+        root.stream("channel-gm"),
+        root.stream("noise-gm"),
+        1,
+    );
+    let mut path_loss = Session::new(
+        Box::new(PathLossGeometry::new(cfg)),
+        Box::new(AnalogOta),
+        root.stream("channel-pl"),
+        root.stream("noise-pl"),
+        1,
+    );
+    // feedback policies through Box<dyn>, fed a synthetic previous-round
+    // record (scalar fields only — mutating it allocates nothing)
+    let mut plateau: Box<dyn PrecisionPolicy> =
+        Box::new(LossPlateau::new().with_patience(2));
+    let mut energy: Box<dyn PrecisionPolicy> = Box::new(EnergyBudget::new(1.0));
+    let mut prev = RoundRecord::default();
+    let mut fb_assigned: Vec<Precision> = Vec::new();
 
     // the coordinator-side round scratch
     let mut assigned: Vec<Precision> = Vec::new();
@@ -176,6 +208,21 @@ fn steady_state_round_path_is_allocation_free() {
         let istats = ideal.aggregate(t, &plane, &precisions);
         assert_eq!(istats.participants, selected.len());
         std::hint::black_box((digital.result().len(), ideal.result().len()));
+        // stateful channel models over the same plane: AR(1) memory and
+        // the path-loss site table must mutate in place
+        let gstats = gauss_markov.aggregate(t, &plane, &precisions);
+        let pstats = path_loss.aggregate(t, &plane, &precisions);
+        std::hint::black_box((gstats.participants, pstats.participants));
+        // feedback policies react to the previous round's record
+        prev.round = t;
+        prev.server_loss = 1.0 / t as f64;
+        prev.energy_joules += 0.25;
+        prev.evaluated = true;
+        let fb_ctx = PolicyCtx { round: t, clients: k, snr_db: 20.0, prev: Some(&prev) };
+        plateau.assign_into(&fb_ctx, &mut fb_assigned).unwrap();
+        std::hint::black_box(fb_assigned[0]);
+        energy.assign_into(&fb_ctx, &mut fb_assigned).unwrap();
+        std::hint::black_box(fb_assigned[0]);
     };
 
     // warmup: two rounds grow every buffer to steady-state capacity

@@ -14,13 +14,14 @@
 use mpota::channel::{pilot, ChannelConfig, ClientChannel, Precode, RoundChannel, C32};
 use mpota::fl::{self, Scheme};
 use mpota::kernels::PayloadPlane;
+use mpota::metrics::RoundRecord;
 use mpota::ota::{self, AggregateStats};
 use mpota::quant::{fake_quant, Precision};
 use mpota::rng::Rng;
 use mpota::sim::{
     AggCtx, AggScratch, Aggregator, AnalogOta, ChannelModel, DigitalOrthogonal,
-    IdealFedAvg, PolicyCtx, PrecisionPolicy, RayleighPilot, RoundObserver, Session,
-    StaticScheme,
+    EnergyBudget, GaussMarkov, IdealFedAvg, LossPlateau, PathLossGeometry, PolicyCtx,
+    PrecisionPolicy, RayleighPilot, RoundObserver, Session, StaticScheme,
 };
 
 const K: usize = 15;
@@ -178,7 +179,7 @@ struct MockChannel {
 }
 
 impl ChannelModel for MockChannel {
-    fn draw_into(&self, num_clients: usize, _rng: &mut Rng, out: &mut RoundChannel) {
+    fn draw_into(&mut self, num_clients: usize, _rng: &mut Rng, out: &mut RoundChannel) {
         out.snr_db = self.snr_db;
         out.clients.clear();
         for k in 0..num_clients {
@@ -378,4 +379,140 @@ fn session_rounds_reuse_buffers_and_stay_deterministic() {
         assert_eq!(a.participants, b.participants);
         assert_eq!(a.mse_vs_ideal.to_bits(), b.mse_vs_ideal.to_bits());
     }
+}
+
+// ------------------------------------------------- channel-realism pins
+
+fn seeded_session(
+    model: Box<dyn ChannelModel>,
+    seed: u64,
+    threads: usize,
+) -> Session {
+    let root = Rng::seed_from(seed);
+    Session::new(
+        model,
+        Box::new(AnalogOta),
+        root.stream("channel"),
+        root.stream("noise"),
+        threads,
+    )
+}
+
+#[test]
+fn gauss_markov_rho_zero_bit_identical_to_rayleigh_pilot() {
+    // the acceptance pin: GaussMarkov with rho=0 IS the i.i.d. paper
+    // pipeline — same channels, same aggregates, same RNG consumption,
+    // at every thread count
+    let plane = quantized_plane(21);
+    let precisions = mixed_precisions();
+    let cfg = ChannelConfig::default();
+    assert_eq!(cfg.rho, 0.0, "default config must be the i.i.d. channel");
+    for threads in [1usize, 4] {
+        let mut gm = seeded_session(Box::new(GaussMarkov::new(cfg.clone())), 555, threads);
+        let mut rp =
+            seeded_session(Box::new(RayleighPilot::new(cfg.clone())), 555, threads);
+        for t in 1..=4 {
+            let a = gm.aggregate(t, &plane, &precisions);
+            let b = rp.aggregate(t, &plane, &precisions);
+            assert_eq!(gm.result(), rp.result(), "t={t} threads={threads}");
+            assert_eq!(a.participants, b.participants);
+            assert_eq!(
+                a.mse_vs_ideal.to_bits(),
+                b.mse_vs_ideal.to_bits(),
+                "t={t} threads={threads}"
+            );
+            for (x, y) in gm.channel().clients.iter().zip(rp.channel().clients.iter())
+            {
+                assert_eq!(x.h, y.h);
+                assert_eq!(x.h_est, y.h_est);
+                assert_eq!(x.effective_gain, y.effective_gain);
+            }
+        }
+    }
+}
+
+#[test]
+fn stateful_channel_models_are_thread_count_invariant() {
+    // bit-identical multi-round trajectories at threads=1 vs threads=4
+    // for the stateful models (the channel draw itself is sequential; the
+    // aggregation kernels must not perturb it or the results)
+    let plane = quantized_plane(22);
+    let precisions = mixed_precisions();
+    let mut gm_cfg = ChannelConfig::default();
+    gm_cfg.rho = 0.85;
+    let builders: Vec<Box<dyn Fn() -> Box<dyn ChannelModel>>> = vec![
+        Box::new({
+            let c = gm_cfg.clone();
+            move || -> Box<dyn ChannelModel> { Box::new(GaussMarkov::new(c.clone())) }
+        }),
+        Box::new(|| -> Box<dyn ChannelModel> {
+            Box::new(PathLossGeometry::new(ChannelConfig::default()))
+        }),
+    ];
+    for mk in &builders {
+        let mut s1 = seeded_session(mk(), 777, 1);
+        let mut s4 = seeded_session(mk(), 777, 4);
+        for t in 1..=4 {
+            let a = s1.aggregate(t, &plane, &precisions);
+            let b = s4.aggregate(t, &plane, &precisions);
+            assert_eq!(s1.result(), s4.result(), "round {t}");
+            assert_eq!(a.participants, b.participants);
+            assert_eq!(a.mse_vs_ideal.to_bits(), b.mse_vs_ideal.to_bits());
+        }
+    }
+}
+
+#[test]
+fn gauss_markov_nonzero_rho_diverges_from_iid_after_round_one() {
+    // sanity inverse of the rho=0 pin: with memory the trajectories must
+    // actually differ from round 2 on (round 1 is the stationary init)
+    let plane = quantized_plane(23);
+    let precisions = mixed_precisions();
+    let mut cfg = ChannelConfig::default();
+    cfg.rho = 0.9;
+    let mut gm = seeded_session(Box::new(GaussMarkov::new(cfg.clone())), 888, 1);
+    cfg.rho = 0.0;
+    let mut id = seeded_session(Box::new(GaussMarkov::new(cfg)), 888, 1);
+    gm.aggregate(1, &plane, &precisions);
+    id.aggregate(1, &plane, &precisions);
+    assert_eq!(gm.result(), id.result(), "round 1 is the stationary draw");
+    gm.aggregate(2, &plane, &precisions);
+    id.aggregate(2, &plane, &precisions);
+    assert_ne!(gm.result(), id.result(), "rho=0.9 must correlate round 2");
+}
+
+#[test]
+fn feedback_policies_work_through_trait_objects() {
+    // Box<dyn PrecisionPolicy> end to end, driven by a synthetic record
+    // stream: plateau promotes on stalled loss, budget demotes on spend
+    let mut plateau: Box<dyn PrecisionPolicy> =
+        Box::new(LossPlateau::new().with_patience(2));
+    let mut budget: Box<dyn PrecisionPolicy> = Box::new(EnergyBudget::new(1.0));
+    let mut out = Vec::new();
+    let clients = 6usize;
+    let mut plateau_bits = Vec::new();
+    let mut budget_bits = Vec::new();
+    let mut rec = RoundRecord::default();
+    for t in 1..=9 {
+        let prev = if t == 1 { None } else { Some(&rec) };
+        let ctx = PolicyCtx { round: t, clients, snr_db: 20.0, prev };
+        plateau.assign_into(&ctx, &mut out).unwrap();
+        plateau_bits.push(out[0].bits());
+        budget.assign_into(&ctx, &mut out).unwrap();
+        budget_bits.push(out[0].bits());
+        // synthesize the round's record: loss stalls at 1.0, energy
+        // accrues 1 J per round against a 6 J fleet budget
+        rec = RoundRecord {
+            round: t,
+            server_loss: 1.0,
+            energy_joules: t as f64,
+            evaluated: true,
+            ..Default::default()
+        };
+    }
+    // loss stalls from the second observation on; patience 2
+    assert_eq!(plateau_bits, vec![4, 4, 4, 6, 6, 8, 8, 12, 12]);
+    // energy: spent = (t-1) J of the 6 J fleet budget; with a 7-level
+    // ladder the index is floor(7·(t-1)/6), capped at the cheapest level
+    assert_eq!(budget_bits, vec![32, 24, 16, 12, 8, 6, 4, 4, 4]);
 }
