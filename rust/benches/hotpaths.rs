@@ -10,6 +10,9 @@
 //!   * receiver-noise fill (sequential vs skip-ahead parallel Box-Muller)
 //!   * digital-baseline aggregation (frame encode/decode vs fused plane)
 //!   * fedavg (vec-of-vecs vs plane), channel round draw, data generation
+//!   * exec-pool dispatch latency (persistent parked pool vs per-call
+//!     scoped spawning) and `workers`-scaling of the client
+//!     quantize/modulate phase (row-partitioned plane writes)
 //!   * PJRT train-step + eval dispatch (artifacts + `pjrt` feature only)
 //!
 //! Run: `cargo bench --bench hotpaths`
@@ -272,6 +275,72 @@ fn main() {
         std::hint::black_box(img);
     });
 
+    // --- exec-pool dispatch latency ----------------------------------------
+    // tiny per-task work (1k-element sum): what remains is the cost of
+    // getting 4 tasks onto threads and back — per-call scoped spawning
+    // pays thread creation + stack allocation; the parked pool only pays
+    // a wake + join handshake
+    let tiny: Vec<f32> = (0..1024).map(|i| (i % 97) as f32).collect();
+    let spawn_lat = res.bench("dispatch scoped-spawn 4 threads (1k sum)", 0, || {
+        let mut acc = [0.0f32; 4];
+        std::thread::scope(|s| {
+            for (i, slot) in acc.iter_mut().enumerate() {
+                let tiny = &tiny;
+                s.spawn(move || {
+                    *slot = tiny.iter().sum::<f32>() + i as f32;
+                });
+            }
+        });
+        std::hint::black_box(acc);
+    });
+    let pool_lat = res.bench("dispatch pool broadcast 4 tasks (1k sum)", 0, || {
+        let acc: [std::sync::atomic::AtomicU32; 4] =
+            std::array::from_fn(|_| std::sync::atomic::AtomicU32::new(0));
+        let tiny_ref = &tiny;
+        let acc_ref = &acc;
+        let task = |i: usize| {
+            let v = tiny_ref.iter().sum::<f32>() + i as f32;
+            acc_ref[i].store(v.to_bits(), std::sync::atomic::Ordering::Relaxed);
+        };
+        mpota::exec::pool().broadcast(4, &task);
+        std::hint::black_box(&acc);
+    });
+
+    // --- client-phase workers scaling --------------------------------------
+    // the quantize/modulate half of local_round_into, row-partitioned
+    // across pool workers exactly like the coordinator's client phase
+    // (K clients' payload rows, mixed 16/8/4-bit fused quantize-into)
+    let mut cplane = vec![0.0f32; k * n];
+    let levels = [Precision::of(16), Precision::of(8), Precision::of(4)];
+    let theta_src = &payloads[0];
+    let client_phase = |workers: usize, buf: &mut [f32]| {
+        par::par_row_partition_mut(workers, k, buf, |r0, chunk| {
+            for (i, row) in chunk.chunks_mut(n).enumerate() {
+                quant::fake_quant_into(
+                    row,
+                    theta_src,
+                    levels[(r0 + i) % 3],
+                    Rounding::Nearest,
+                    1,
+                );
+            }
+        });
+    };
+    let cp_w1 = res.bench("client phase quantize/modulate workers=1", k * n * 4, || {
+        client_phase(1, &mut cplane);
+        std::hint::black_box(&cplane);
+    });
+    // label with the EFFECTIVE worker count (bounded by the K rows), so
+    // the recorded key never overstates the measured parallelism
+    let cp_workers = ncpu.min(k);
+    let cp_wn = (cp_workers > 1).then(|| {
+        let label = format!("client phase quantize/modulate workers={cp_workers}");
+        res.bench(&label, k * n * 4, || {
+            client_phase(cp_workers, &mut cplane);
+            std::hint::black_box(&cplane);
+        })
+    });
+
     // --- PJRT dispatch (needs artifacts + the pjrt feature) ----------------
     let dir = std::path::PathBuf::from("artifacts");
     if cfg!(feature = "pjrt") && dir.join("manifest.json").exists() {
@@ -329,6 +398,16 @@ fn main() {
         speedup(&mut speedups, &format!("quant_float16_fused_t{ncpu}"), q16_scalar, t);
     }
     speedup(&mut speedups, "fedavg_mean_plane", mean_scalar, mean_fused);
+    speedup(&mut speedups, "pool_dispatch_vs_spawn", spawn_lat, pool_lat);
+    if let Some(t) = cp_wn {
+        let cp_workers = ncpu.min(k);
+        speedup(
+            &mut speedups,
+            &format!("client_phase_workers_{cp_workers}"),
+            cp_w1,
+            t,
+        );
+    }
 
     let mut doc = res.to_json(k, n, ncpu);
     doc.set("speedups", speedups);

@@ -1,14 +1,21 @@
 //! Per-client state machine: owns a data shard, a precision level, and a
 //! private RNG stream; executes the paper's Alg. 1 step 2 (quantize the
-//! broadcast model, train locally) against the PJRT runtime.
+//! broadcast model, train locally) against a [`crate::exec::TrainStep`]
+//! backend (the PJRT runtime directly, the cross-thread PJRT gateway, or
+//! an injected pure-rust trainer).
+//!
+//! Every client's stochastic behaviour (batch shuffles) flows from its
+//! OWN RNG stream and all cross-round state is client-owned, so the
+//! round trajectory is independent of WHERE the client executes — the
+//! foundation of the `workers`-bit-identity contract.
 
 use anyhow::Result;
 
 use crate::data::{BatchIter, Dataset, SAMPLE_LEN};
 use crate::energy;
+use crate::exec::TrainStep;
 use crate::quant::{self, Precision};
 use crate::rng::Rng;
-use crate::runtime::Runtime;
 
 /// Client-side metrics from one local round.
 #[derive(Clone, Copy, Debug, Default)]
@@ -83,10 +90,9 @@ impl ClientState {
     /// precision — coarse clients contribute small zero-mean-ish deltas
     /// instead of dragging the global weights onto their coarse grid (the
     /// failure mode EXPERIMENTS.md §Fig3-ablation demonstrates).
-    pub fn local_round(
+    pub fn local_round<S: TrainStep + ?Sized>(
         &mut self,
-        runtime: &Runtime,
-        variant: &str,
+        step: &S,
         data: &Dataset,
         theta_global: &[f32],
         lr: f32,
@@ -97,8 +103,7 @@ impl ClientState {
     ) -> Result<(Vec<f32>, LocalStats)> {
         let mut payload = vec![0.0f32; theta_global.len()];
         let stats = self.local_round_into(
-            runtime,
-            variant,
+            step,
             data,
             theta_global,
             lr,
@@ -115,13 +120,14 @@ impl ClientState {
     /// Zero-alloc form of [`local_round`]: the payload is written straight
     /// into `payload_out` (the client's payload-plane row) and all model
     /// buffers are client-owned scratch reused across rounds.  The only
-    /// remaining per-round allocations happen inside the PJRT dispatch
-    /// (`Runtime::train_step` literals), outside the arena contract.
+    /// remaining per-round allocations happen inside the train-step
+    /// dispatch (PJRT literals / backend output), outside the arena
+    /// contract.  Runs unchanged on the coordinator thread or on a pool
+    /// worker — `step` decides where the SGD step actually executes.
     #[allow(clippy::too_many_arguments)]
-    pub fn local_round_into(
+    pub fn local_round_into<S: TrainStep + ?Sized>(
         &mut self,
-        runtime: &Runtime,
-        variant: &str,
+        step: &S,
         data: &Dataset,
         theta_global: &[f32],
         lr: f32,
@@ -164,8 +170,7 @@ impl ClientState {
             self.global_idx.clear();
             self.global_idx.extend(idx.iter().map(|&i| self.shard[i]));
             data.gather(&self.global_idx, &mut self.img_buf, &mut self.label_buf);
-            let out = runtime.train_step(
-                variant,
+            let out = step.train_step(
                 self.precision,
                 &self.theta,
                 &self.img_buf,

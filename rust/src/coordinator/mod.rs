@@ -17,10 +17,15 @@
 //! config-selected defaults, which reproduce the pre-redesign enum
 //! dispatch bit-for-bit per seed (`rust/tests/sim.rs`).
 //!
-//! Scheduling note: the PJRT client is `Rc`-based (not `Send`) and this
-//! testbed has one core, so client work is interleaved on the coordinator
-//! thread; the per-client state machines in [`client`] keep the design
-//! ready for a multi-queue runtime.
+//! Scheduling: with `RunConfig::workers > 1` the client phase (step 2 —
+//! re-quantize, local SGD orchestration, payload diff into the plane
+//! row) is partitioned across the persistent [`crate::exec`] pool, each
+//! worker owning a contiguous slot range and its disjoint plane rows.
+//! The PJRT client is `Rc`-based (not `Send`), so its dispatches funnel
+//! back to the coordinator thread through [`crate::exec::TrainService`];
+//! an injected `Sync` [`crate::exec::TrainBackend`] runs on the workers
+//! directly.  Per-client RNG/state makes the trajectory bit-identical at
+//! every worker count (`rust/tests/sim.rs`).
 
 pub mod client;
 pub mod pretrain;
@@ -37,14 +42,17 @@ use anyhow::{Context, Result};
 use crate::config::RunConfig;
 use crate::data::{equal_shards, Dataset};
 use crate::energy;
+use crate::exec;
 use crate::fl::Selection;
-use crate::kernels::PayloadPlane;
+use crate::kernels::{par, PayloadPlane};
 use crate::metrics::{RoundRecord, RunLog};
 use crate::quant::{self, Precision};
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::sim;
 use crate::tensor;
+
+use client::LocalStats;
 
 /// Round scratch arena for the coordinator-side buffers (participant
 /// list, payload plane, per-round precision assignments), allocated once
@@ -63,6 +71,76 @@ pub struct RoundScratch {
     pub(crate) precisions: Vec<Precision>,
     /// Per-client precision assignment for the full fleet (policy output).
     pub(crate) assigned: Vec<Precision>,
+    /// Per-slot client training stats (parallel workers write disjoint
+    /// entries; the coordinator sums them in slot order afterwards, so
+    /// the reduction is bit-identical at every worker count).
+    pub(crate) stats: Vec<LocalStats>,
+    /// Per-worker first-error slots for the partitioned client phase.
+    pub(crate) errors: Vec<Option<anyhow::Error>>,
+}
+
+/// Read-only context shared by every client-phase pool task.
+struct ClientPhaseEnv<'a> {
+    workers: usize,
+    kk: usize,
+    n: usize,
+    selected: &'a [usize],
+    data: &'a Dataset,
+    theta: &'a [f32],
+    lr: f32,
+    local_steps: usize,
+    macs_per_sample: u64,
+    transmit_weights: bool,
+    layout: &'a crate::tensor::ParamLayout,
+    threads: usize,
+}
+
+/// One worker's share of the client phase: slots
+/// `[chunk_start(kk, workers, w), +chunk_len)` — contiguous, so the plane
+/// rows and stats entries it writes are disjoint from every other
+/// worker's; client indices come from `selected`, whose entries are
+/// pairwise distinct.
+fn run_client_slots<S: exec::TrainStep + ?Sized>(
+    env: &ClientPhaseEnv<'_>,
+    clients: &exec::DisjointMut<'_, ClientState>,
+    plane: exec::SendPtr<f32>,
+    stats: exec::SendPtr<LocalStats>,
+    errors: exec::SendPtr<Option<anyhow::Error>>,
+    w: usize,
+    step: &S,
+) {
+    let lo = par::chunk_start(env.kk, env.workers, w);
+    let hi = lo + par::chunk_len(env.kk, env.workers, w);
+    for slot in lo..hi {
+        let k = env.selected[slot];
+        // SAFETY: `selected` indices are pairwise distinct (Selection
+        // contract) and each slot belongs to exactly one worker range, so
+        // no client, plane row or stats entry is aliased; the buffers
+        // outlive the blocking pool dispatch.
+        let c = unsafe { clients.get(k) };
+        let row = unsafe { plane.slice_at(slot * env.n, env.n) };
+        let res = c.local_round_into(
+            step,
+            env.data,
+            env.theta,
+            env.lr,
+            env.local_steps,
+            env.macs_per_sample,
+            env.transmit_weights,
+            env.layout,
+            env.threads,
+            row,
+        );
+        match res {
+            Ok(s) => unsafe { *stats.at(slot) = s },
+            Err(e) => {
+                // first error wins for this worker; stop its share so a
+                // broken backend fails fast instead of spinning
+                unsafe { *errors.at(w) = Some(e) };
+                return;
+            }
+        }
+    }
 }
 
 /// Orchestrates one full federated run.
@@ -82,6 +160,10 @@ pub struct Coordinator {
     scratch: RoundScratch,
     session: sim::Session,
     policy: Box<dyn sim::PrecisionPolicy>,
+    /// Injected training/eval backend; `None` = the PJRT runtime.
+    backend: Option<Box<dyn exec::TrainBackend>>,
+    /// PJRT request funnel for the `workers > 1` client phase.
+    train_svc: exec::TrainService,
 }
 
 impl Coordinator {
@@ -192,6 +274,8 @@ impl Coordinator {
             scratch,
             session,
             policy,
+            backend: parts.backend,
+            train_svc: exec::TrainService::new(),
         })
     }
 
@@ -246,32 +330,14 @@ impl Coordinator {
         let kk = self.scratch.selected.len();
 
         // Steps 1-2: broadcast + local training per selected client, each
-        // payload fused-quantized straight into its payload-plane row.
-        self.scratch.plane.reset(kk, self.theta.len());
-        self.scratch.precisions.clear();
+        // payload fused-quantized straight into its payload-plane row —
+        // partitioned across the exec pool when `cfg.workers > 1`.
+        self.client_phase(kk, threads)?;
         let mut train_loss = 0.0f64;
         let mut train_acc = 0.0f64;
-        let transmit_weights =
-            matches!(self.cfg.transmit, crate::config::Transmit::Weights);
-        for slot in 0..kk {
-            let k = self.scratch.selected[slot];
-            let c = &mut self.clients[k];
-            let stats = c.local_round_into(
-                &self.runtime,
-                &self.cfg.variant,
-                &self.train_data,
-                &self.theta,
-                self.cfg.lr,
-                self.cfg.local_steps,
-                self.macs_per_sample,
-                transmit_weights,
-                &self.layout,
-                threads,
-                self.scratch.plane.row_mut(slot),
-            )?;
-            self.scratch.precisions.push(c.precision);
-            train_loss += stats.mean_loss;
-            train_acc += stats.mean_acc;
+        for s in &self.scratch.stats {
+            train_loss += s.mean_loss;
+            train_acc += s.mean_acc;
         }
         train_loss /= kk as f64;
         train_acc /= kk as f64;
@@ -305,12 +371,7 @@ impl Coordinator {
             ..Default::default()
         };
         if t % self.cfg.eval_every == 0 || t == self.cfg.rounds {
-            let eval = self.runtime.evaluate(
-                &self.cfg.variant,
-                &self.theta,
-                &self.test_data.images,
-                &self.test_data.labels,
-            )?;
+            let eval = self.evaluate_theta(&self.theta)?;
             rec.server_accuracy = eval.accuracy;
             rec.server_loss = eval.loss;
             rec.evaluated = true;
@@ -321,6 +382,185 @@ impl Coordinator {
         rec.wall_secs = t0.elapsed().as_secs_f64();
         self.session.end_round(&rec);
         Ok(rec)
+    }
+
+    /// Alg. 1 steps 1-2 for every selected client: re-quantize the
+    /// broadcast model, run local SGD, write the payload into the
+    /// client's plane row, and record per-slot [`LocalStats`].
+    ///
+    /// With `cfg.workers > 1` (and an enabled exec pool) the selected
+    /// slots are partitioned into contiguous ranges across pool workers;
+    /// each worker mutates only its own clients, its disjoint plane rows
+    /// and its per-slot stats entries.  Per-client RNG streams and
+    /// client-owned scratch make the result bit-identical to the
+    /// sequential pass for every worker count.  The PJRT runtime is not
+    /// `Send`, so its train steps funnel back to this thread through
+    /// [`exec::TrainService`]; an injected `Sync` backend is called from
+    /// the workers directly.
+    fn client_phase(&mut self, kk: usize, threads: usize) -> Result<()> {
+        let n = self.theta.len();
+        self.scratch.plane.reset(kk, n);
+        self.scratch.precisions.clear();
+        for slot in 0..kk {
+            let k = self.scratch.selected[slot];
+            self.scratch.precisions.push(self.clients[k].precision);
+        }
+        self.scratch.stats.clear();
+        self.scratch.stats.resize(kk, LocalStats::default());
+        let transmit_weights =
+            matches!(self.cfg.transmit, crate::config::Transmit::Weights);
+
+        let pool = exec::pool();
+        let workers = if pool.max_workers() == 0 || exec::must_inline() {
+            1 // pool disabled (or we are already on a pool thread): serial
+        } else {
+            self.cfg.workers.min(kk).max(1)
+        };
+
+        if workers <= 1 {
+            for slot in 0..kk {
+                let k = self.scratch.selected[slot];
+                let c = &mut self.clients[k];
+                let stats = match &self.backend {
+                    Some(b) => c.local_round_into(
+                        b.as_ref(),
+                        &self.train_data,
+                        &self.theta,
+                        self.cfg.lr,
+                        self.cfg.local_steps,
+                        self.macs_per_sample,
+                        transmit_weights,
+                        &self.layout,
+                        threads,
+                        self.scratch.plane.row_mut(slot),
+                    )?,
+                    None => c.local_round_into(
+                        &exec::RuntimeStep {
+                            runtime: &self.runtime,
+                            variant: &self.cfg.variant,
+                        },
+                        &self.train_data,
+                        &self.theta,
+                        self.cfg.lr,
+                        self.cfg.local_steps,
+                        self.macs_per_sample,
+                        transmit_weights,
+                        &self.layout,
+                        threads,
+                        self.scratch.plane.row_mut(slot),
+                    )?,
+                };
+                self.scratch.stats[slot] = stats;
+            }
+            return Ok(());
+        }
+
+        let RoundScratch { selected, plane, stats, errors, .. } = &mut self.scratch;
+        let selected: &[usize] = selected;
+        errors.clear();
+        errors.resize_with(workers, || None);
+        let plane_ptr = exec::SendPtr::from_mut(plane.as_mut_slice());
+        let stats_ptr = exec::SendPtr::from_mut(&mut stats[..]);
+        let errs_ptr = exec::SendPtr::from_mut(&mut errors[..]);
+        let clients = exec::DisjointMut::new(&mut self.clients);
+        let env = ClientPhaseEnv {
+            workers,
+            kk,
+            n,
+            selected,
+            data: &self.train_data,
+            theta: &self.theta,
+            lr: self.cfg.lr,
+            local_steps: self.cfg.local_steps,
+            macs_per_sample: self.macs_per_sample,
+            transmit_weights,
+            layout: &self.layout,
+            threads,
+        };
+
+        match &self.backend {
+            Some(b) => {
+                // Sync backend: workers train their clients directly.
+                let backend: &dyn exec::TrainBackend = b.as_ref();
+                let task = |w: usize| {
+                    run_client_slots(
+                        &env, &clients, plane_ptr, stats_ptr, errs_ptr, w, backend,
+                    );
+                };
+                pool.broadcast(workers, &task);
+            }
+            None => {
+                // PJRT: workers drive the round loop, every train step
+                // funnels back to this thread, which sits in `serve`.
+                let svc = &self.train_svc;
+                svc.reset(workers);
+                let runtime = &self.runtime;
+                let variant = self.cfg.variant.as_str();
+                let task = |w: usize| {
+                    // detach on EVERY exit — a panicking task must still
+                    // release the serve loop or it would wait forever
+                    struct DetachGuard<'a>(&'a exec::TrainService);
+                    impl Drop for DetachGuard<'_> {
+                        fn drop(&mut self) {
+                            self.0.detach();
+                        }
+                    }
+                    let _guard = DetachGuard(svc);
+                    let step = exec::GatewayStep::new(svc);
+                    run_client_slots(
+                        &env, &clients, plane_ptr, stats_ptr, errs_ptr, w, &step,
+                    );
+                };
+                // If the runtime panics mid-serve, fail the remaining
+                // requests so every worker task can finish and detach
+                // (keeping the dispatch deadlock-free), then re-raise.
+                let mut serve_panic: Option<Box<dyn std::any::Any + Send>> = None;
+                pool.host_broadcast(workers, &task, &mut || {
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        svc.serve(|call| {
+                            runtime.train_step(
+                                variant,
+                                call.precision,
+                                call.theta,
+                                call.images,
+                                call.labels,
+                                call.lr,
+                            )
+                        })
+                    }));
+                    if let Err(p) = r {
+                        serve_panic = Some(p);
+                        svc.serve(|_| {
+                            Err(anyhow::anyhow!("PJRT runtime panicked mid-round"))
+                        });
+                    }
+                });
+                if let Some(p) = serve_panic {
+                    std::panic::resume_unwind(p);
+                }
+            }
+        }
+
+        for e in self.scratch.errors.iter_mut() {
+            if let Some(err) = e.take() {
+                return Err(err);
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate a flat model on the held-out test set through the
+    /// configured backend (PJRT by default).
+    fn evaluate_theta(&self, theta: &[f32]) -> Result<crate::runtime::EvalResult> {
+        match &self.backend {
+            Some(b) => b.evaluate(theta, &self.test_data.images, &self.test_data.labels),
+            None => self.runtime.evaluate(
+                &self.cfg.variant,
+                theta,
+                &self.test_data.images,
+                &self.test_data.labels,
+            ),
+        }
     }
 
     /// Execute round `t` AND append its record to the run log — the
@@ -338,9 +578,13 @@ impl Coordinator {
     /// Run all configured rounds and produce the final report.
     pub fn run(&mut self) -> Result<RunReport> {
         let t0 = Instant::now();
-        self.runtime
-            .warmup(&self.cfg.variant, &self.policy.levels())
-            .context("artifact warmup")?;
+        match &self.backend {
+            Some(b) => b.warmup(&self.policy.levels()).context("backend warmup")?,
+            None => self
+                .runtime
+                .warmup(&self.cfg.variant, &self.policy.levels())
+                .context("artifact warmup")?,
+        }
         for t in 1..=self.cfg.rounds {
             self.step(t)?;
         }
@@ -354,24 +598,14 @@ impl Coordinator {
         let mut requant = Vec::new();
         for p in self.policy.levels() {
             let q = self.requantize_global(p);
-            let eval = self.runtime.evaluate(
-                &self.cfg.variant,
-                &q,
-                &self.test_data.images,
-                &self.test_data.labels,
-            )?;
+            let eval = self.evaluate_theta(&q)?;
             requant.push(RequantEval {
                 precision: p,
                 accuracy: eval.accuracy,
                 loss: eval.loss,
             });
         }
-        let final_eval = self.runtime.evaluate(
-            &self.cfg.variant,
-            &self.theta,
-            &self.test_data.images,
-            &self.test_data.labels,
-        )?;
+        let final_eval = self.evaluate_theta(&self.theta)?;
         Ok(RunReport {
             label: self.log.label.clone(),
             final_accuracy: final_eval.accuracy,
@@ -427,13 +661,9 @@ impl Coordinator {
         quant::fake_quant_layout(&self.theta, &self.layout, p, quant::Rounding::Nearest)
     }
 
-    /// Evaluate an arbitrary flat model on the held-out test set.
+    /// Evaluate an arbitrary flat model on the held-out test set (through
+    /// the injected backend when one is configured).
     pub fn evaluate_model(&self, theta: &[f32]) -> Result<crate::runtime::EvalResult> {
-        self.runtime.evaluate(
-            &self.cfg.variant,
-            theta,
-            &self.test_data.images,
-            &self.test_data.labels,
-        )
+        self.evaluate_theta(theta)
     }
 }

@@ -1,0 +1,114 @@
+//! The execution runtime: one persistent worker pool behind every layer
+//! of parallelism in the system.
+//!
+//! Three layers dispatch onto the same [`ExecPool`]:
+//!
+//! * **intra-kernel** ([`crate::kernels::par`], [`crate::kernels::fused`],
+//!   [`crate::rng::Rng::add_normal2`]) — the element axis of one vector
+//!   op, gated by `RunConfig.threads`;
+//! * **inter-client** ([`crate::coordinator::Coordinator`]) — local
+//!   training + quantize/modulate partitioned across clients, gated by
+//!   `RunConfig.workers`, with the PJRT dispatch funnelled back to the
+//!   runtime-owning thread through [`TrainService`] (the PJRT client is
+//!   `Rc`-based and must not migrate threads);
+//! * **inter-cell** ([`crate::sim::sweep`]) — independent sweep cells,
+//!   bounded by `RunConfig.workers`.
+//!
+//! Nested dispatches run inline automatically (a client task's kernels do
+//! not re-enter the pool), so the layers compose without deadlock and the
+//! chunk-grid determinism contract holds end to end: results are
+//! bit-identical per seed for every `{threads, workers}` combination.
+//!
+//! [`TrainStep`] / [`TrainBackend`] are the training seams the client
+//! round loop runs against: the PJRT [`Runtime`](crate::runtime::Runtime)
+//! (directly on the coordinator thread, or through the [`TrainService`]
+//! funnel when clients train on pool workers), or an injected pure-rust
+//! backend (tests, alternative trainers) that is `Sync` and therefore
+//! runs on the workers directly.
+
+pub mod pool;
+pub mod service;
+pub mod train;
+
+pub use pool::{must_inline, pool, ExecPool};
+pub use service::{GatewayStep, TrainCall, TrainService};
+pub use train::{RuntimeStep, TrainBackend, TrainStep};
+
+/// Lifetime-erased base pointer for handing DISJOINT regions of one
+/// buffer to pool tasks (each task reconstructs its own chunk slice, so a
+/// single `Fn`-shared closure can write a partitioned buffer).
+pub(crate) struct SendPtr<T>(*mut T);
+
+// manual impls: a derive would add spurious `T: Clone/Copy` bounds (the
+// pointer itself is always Copy, e.g. for `SendPtr<Option<anyhow::Error>>`)
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+// SAFETY: SendPtr is only used to hand non-overlapping regions of one
+// live buffer to pool tasks; callers uphold disjointness (documented at
+// every `slice_at`/`at` call site).
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub(crate) fn from_mut(s: &mut [T]) -> Self {
+        SendPtr(s.as_mut_ptr())
+    }
+
+    /// Reborrow `[off, off + len)` of the underlying buffer.
+    ///
+    /// # Safety
+    /// The range must be in bounds of the original buffer, the buffer must
+    /// outlive the returned slice, and no two live borrows may overlap.
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn slice_at<'a>(self, off: usize, len: usize) -> &'a mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(off), len)
+    }
+
+    /// Reborrow element `i` of the underlying buffer.
+    ///
+    /// # Safety
+    /// Same aliasing/lifetime rules as [`slice_at`](Self::slice_at).
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn at<'a>(self, i: usize) -> &'a mut T {
+        &mut *self.0.add(i)
+    }
+}
+
+/// Shared handle over one `&mut [T]` that hands out `&mut` elements at
+/// pairwise-DISTINCT indices to concurrent pool tasks (the client
+/// partition indexes clients through the round's `selected` list, whose
+/// entries are distinct by construction).
+pub(crate) struct DisjointMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: see `get` — callers never alias an index.
+unsafe impl<T: Send> Send for DisjointMut<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointMut<'_, T> {}
+
+impl<'a, T> DisjointMut<'a, T> {
+    pub(crate) fn new(s: &'a mut [T]) -> Self {
+        DisjointMut {
+            ptr: s.as_mut_ptr(),
+            len: s.len(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Mutable access to element `i`.
+    ///
+    /// # Safety
+    /// No two concurrently-live references may target the same index.
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn get(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len, "index {i} out of bounds ({})", self.len);
+        &mut *self.ptr.add(i)
+    }
+}

@@ -1,0 +1,511 @@
+//! [`ExecPool`] — the persistent, parked worker pool every parallel
+//! dispatch in the crate runs on.
+//!
+//! The PR-1 kernels spawned `std::thread::scope` workers per call, which
+//! allocates a stack per chunk per dispatch and pays thread-creation
+//! latency on every parallel kernel.  The pool spawns its workers ONCE
+//! (lazily, up to a cap) and parks them on a condvar between jobs; a
+//! dispatch installs a lifetime-erased job descriptor, wakes the workers,
+//! and blocks until every task has run — no heap allocation anywhere on
+//! the dispatch path, so the `threads > 1` round loop is zero-alloc in
+//! steady state just like the sequential one (`tests/alloc_counter.rs`).
+//!
+//! # Dispatch model
+//!
+//! A job is `tasks` indexed closures `f(0..tasks)`.  Workers (and, for
+//! [`broadcast`](ExecPool::broadcast), the calling thread) claim task
+//! indices from a shared atomic counter until none remain.  Which thread
+//! runs which index is scheduling-dependent — callers must make tasks
+//! independent and deterministic by INDEX (disjoint output regions,
+//! per-index RNG state), which is exactly the kernels-layer chunk-grid
+//! contract, so results are bit-identical no matter how tasks land on
+//! threads.
+//!
+//! # Nesting
+//!
+//! Dispatching from inside a pool task (or while the current thread is
+//! already mid-dispatch) runs the inner job inline on the current thread:
+//! inner parallelism would otherwise deadlock waiting for workers the
+//! outer job occupies.  This keeps layered parallelism safe by
+//! construction — e.g. client-partitioned training whose per-client
+//! kernels are themselves chunk-parallel.
+//!
+//! # Safety
+//!
+//! The job descriptor stores raw pointers to the caller's closure and
+//! counters (all on the caller's stack).  The dispatch cannot return
+//! until every worker that copied the descriptor has dropped it
+//! (`refs == 0`) and every task has finished (`done == tasks`), and the
+//! descriptor is cleared under the same lock, so no worker can observe a
+//! dangling job.  Task panics are caught, forwarded, and re-raised on the
+//! calling thread after the job is fully retired.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+thread_local! {
+    /// Set for the lifetime of a pool worker thread.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+    /// Set on any thread for the duration of a pool dispatch it initiated.
+    static IN_DISPATCH: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True on threads that must run nested dispatches inline (pool workers,
+/// and any thread currently driving a dispatch of its own).
+pub fn must_inline() -> bool {
+    IN_POOL_WORKER.with(|c| c.get()) || IN_DISPATCH.with(|c| c.get())
+}
+
+/// First panic payload captured from a task (re-raised by the caller).
+type PanicSlot = Mutex<Option<Box<dyn std::any::Any + Send>>>;
+
+/// Lifetime-erased job descriptor; every pointer targets the dispatching
+/// caller's stack frame, which outlives the job (see module Safety notes).
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+    next: *const AtomicUsize,
+    done: *const AtomicUsize,
+    slots: *const AtomicUsize,
+    panic: *const PanicSlot,
+    tasks: usize,
+}
+
+// SAFETY: the raw pointers are only dereferenced while the dispatching
+// caller is blocked inside `dispatch` (it waits for `refs == 0` before
+// returning), so the pointees are always live.
+unsafe impl Send for Job {}
+
+struct State {
+    /// Bumped once per installed job so sleeping workers can tell a new
+    /// job from a spurious wakeup.
+    epoch: u64,
+    job: Option<Job>,
+    /// Workers currently holding a copy of `job`.
+    refs: usize,
+    spawned: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between jobs.
+    work_cv: Condvar,
+    /// Dispatchers park here while their job drains (and while waiting
+    /// for a previous dispatcher's job to clear).
+    done_cv: Condvar,
+}
+
+/// Persistent parked worker pool; see the module docs.
+pub struct ExecPool {
+    shared: Arc<Shared>,
+    cap: usize,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl ExecPool {
+    /// Pool that will spawn at most `cap` worker threads (lazily, on the
+    /// first dispatch that needs them).  `cap = 0` disables the pool:
+    /// every dispatch runs inline on the caller.
+    pub fn new(cap: usize) -> ExecPool {
+        ExecPool {
+            shared: Arc::new(Shared {
+                state: Mutex::new(State {
+                    epoch: 0,
+                    job: None,
+                    refs: 0,
+                    spawned: 0,
+                    shutdown: false,
+                }),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+            }),
+            cap,
+            handles: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Maximum worker threads this pool may spawn.
+    pub fn max_workers(&self) -> usize {
+        self.cap
+    }
+
+    /// Run `f(0)…f(tasks-1)`, the calling thread participating alongside
+    /// the pool workers; returns when every task has finished.  Runs
+    /// inline (sequentially) when the pool is disabled, the job is
+    /// trivial, or the current thread is already inside a dispatch.
+    pub fn broadcast(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        self.dispatch(tasks, tasks, f, None);
+    }
+
+    /// [`broadcast`](Self::broadcast) with at most `concurrency` threads
+    /// (caller included) executing tasks at any moment — bounds peak
+    /// memory when tasks own large scratch (e.g. parallel sweep cells).
+    pub fn broadcast_limit(
+        &self,
+        tasks: usize,
+        concurrency: usize,
+        f: &(dyn Fn(usize) + Sync),
+    ) {
+        self.dispatch(tasks, concurrency, f, None);
+    }
+
+    /// Run every task on pool workers ONLY, while the calling thread runs
+    /// `host()` — a serve loop for requests the tasks funnel back (see
+    /// [`crate::exec::TrainService`]).  `host` must return once all tasks
+    /// have signalled it (the pool then waits for the stragglers).
+    ///
+    /// Requires an enabled pool and a caller that is not itself a pool
+    /// worker; the coordinator guards both before choosing this path.
+    pub fn host_broadcast(
+        &self,
+        tasks: usize,
+        f: &(dyn Fn(usize) + Sync),
+        host: &mut dyn FnMut(),
+    ) {
+        self.dispatch(tasks, tasks, f, Some(host));
+    }
+
+    fn ensure_workers(&self, want: usize) {
+        let want = want.min(self.cap);
+        let mut st = self.shared.state.lock().unwrap();
+        if st.spawned >= want {
+            return;
+        }
+        let mut handles = self.handles.lock().unwrap();
+        while st.spawned < want {
+            let shared = Arc::clone(&self.shared);
+            let h = std::thread::Builder::new()
+                .name("mpota-exec".into())
+                .spawn(move || worker_loop(shared))
+                .expect("spawning exec pool worker");
+            handles.push(h);
+            st.spawned += 1;
+        }
+    }
+
+    fn dispatch(
+        &self,
+        tasks: usize,
+        concurrency: usize,
+        f: &(dyn Fn(usize) + Sync),
+        host: Option<&mut dyn FnMut()>,
+    ) {
+        if tasks == 0 {
+            return;
+        }
+        let caller_runs = host.is_none();
+        if caller_runs
+            && (tasks == 1 || concurrency <= 1 || self.cap == 0 || must_inline())
+        {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        assert!(
+            self.cap > 0 && !must_inline(),
+            "host dispatch needs pool workers and a top-level caller"
+        );
+
+        // Concurrency slots available to WORKERS (the caller, when it
+        // participates, is the extra executor on top of these).
+        let worker_slots = concurrency
+            .saturating_sub(usize::from(caller_runs))
+            .min(tasks)
+            .max(1);
+        self.ensure_workers(worker_slots);
+
+        let next = AtomicUsize::new(0);
+        let done = AtomicUsize::new(0);
+        let slots = AtomicUsize::new(worker_slots);
+        let panic_slot: PanicSlot = Mutex::new(None);
+        let job = Job {
+            f: f as *const (dyn Fn(usize) + Sync),
+            next: &next,
+            done: &done,
+            slots: &slots,
+            panic: &panic_slot,
+            tasks,
+        };
+
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            // serialize with dispatches from other threads
+            while st.job.is_some() {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = Some(job);
+            st.epoch = st.epoch.wrapping_add(1);
+            drop(st);
+            self.shared.work_cv.notify_all();
+        }
+
+        IN_DISPATCH.with(|c| c.set(true));
+        struct DispatchGuard;
+        impl Drop for DispatchGuard {
+            fn drop(&mut self) {
+                IN_DISPATCH.with(|c| c.set(false));
+            }
+        }
+        let _guard = DispatchGuard;
+
+        // The host runs under catch_unwind: letting a panic unwind this
+        // frame while workers hold the Job (raw pointers into this stack)
+        // would be a use-after-free, and st.job would never clear.  The
+        // panic is re-raised only after the job is fully retired — hosts
+        // must therefore make sure the worker tasks can still complete
+        // when the host fails early (the TrainService host drains its
+        // queue with errors before returning).
+        let mut host_panic = None;
+        if caller_runs {
+            run_tasks(&job);
+        } else if let Some(h) = host {
+            host_panic = catch_unwind(AssertUnwindSafe(|| h())).err();
+        }
+
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.refs > 0 || done.load(Ordering::Acquire) < tasks {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+            drop(st);
+            // wake any dispatcher queued behind this job
+            self.shared.done_cv.notify_all();
+        }
+
+        let p = panic_slot.lock().unwrap().take();
+        if let Some(p) = p {
+            resume_unwind(p);
+        }
+        if let Some(p) = host_panic {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Claim-and-run loop shared by workers and participating callers.
+fn run_tasks(job: &Job) {
+    // SAFETY: `dispatch` keeps every pointee alive until the job retires.
+    let f = unsafe { &*job.f };
+    let next = unsafe { &*job.next };
+    let done = unsafe { &*job.done };
+    loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.tasks {
+            break;
+        }
+        let r = catch_unwind(AssertUnwindSafe(|| f(i)));
+        done.fetch_add(1, Ordering::Release);
+        if let Err(p) = r {
+            let slot = unsafe { &*job.panic };
+            let mut g = slot.lock().unwrap();
+            if g.is_none() {
+                *g = Some(p);
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    IN_POOL_WORKER.with(|c| c.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if let Some(job) = st.job {
+                        // join only while the job has a concurrency slot;
+                        // the claim happens under the state lock, so the
+                        // caller cannot retire the job concurrently
+                        let claimed = unsafe { &*job.slots }
+                            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |s| {
+                                s.checked_sub(1)
+                            })
+                            .is_ok();
+                        if claimed {
+                            st.refs += 1;
+                            break job;
+                        }
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        run_tasks(&job);
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.refs -= 1;
+        }
+        shared.done_cv.notify_all();
+    }
+}
+
+static GLOBAL_POOL: OnceLock<ExecPool> = OnceLock::new();
+
+/// The process-wide pool every parallel kernel, client partition and
+/// sweep cell dispatches on (created on first use; workers spawn lazily
+/// as dispatches need them).
+///
+/// Sizing: `MPOTA_POOL_SIZE` when set (`0` disables the pool entirely —
+/// every dispatch then runs inline, which is the bit-identical sequential
+/// path); otherwise `max(available_parallelism - 1, 7)` so the
+/// determinism contract's `threads = 4`-class test dispatches exercise
+/// real cross-thread execution even on small CI boxes.
+pub fn pool() -> &'static ExecPool {
+    GLOBAL_POOL.get_or_init(|| ExecPool::new(default_cap()))
+}
+
+fn default_cap() -> usize {
+    if let Ok(v) = std::env::var("MPOTA_POOL_SIZE") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n;
+        }
+    }
+    crate::kernels::par::auto_threads().saturating_sub(1).max(7)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadcast_runs_each_task_exactly_once() {
+        let pool = ExecPool::new(3);
+        for tasks in [1usize, 2, 5, 16, 33] {
+            let counts: Vec<AtomicUsize> =
+                (0..tasks).map(|_| AtomicUsize::new(0)).collect();
+            let f = |i: usize| {
+                counts[i].fetch_add(1, Ordering::Relaxed);
+            };
+            pool.broadcast(tasks, &f);
+            for (i, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "task {i} of {tasks}");
+            }
+        }
+    }
+
+    #[test]
+    fn disabled_pool_runs_inline() {
+        let pool = ExecPool::new(0);
+        let hits = AtomicUsize::new(0);
+        let f = |_: usize| {
+            assert!(!IN_POOL_WORKER.with(|c| c.get()));
+            hits.fetch_add(1, Ordering::Relaxed);
+        };
+        pool.broadcast(6, &f);
+        assert_eq!(hits.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn nested_dispatch_runs_inline_without_deadlock() {
+        let pool = ExecPool::new(2);
+        let total = AtomicUsize::new(0);
+        let f = |_: usize| {
+            let inner = |_: usize| {
+                total.fetch_add(1, Ordering::Relaxed);
+            };
+            // whether this task landed on a worker or on the dispatching
+            // caller, the nested dispatch must run inline
+            pool.broadcast(4, &inner);
+        };
+        pool.broadcast(3, &f);
+        assert_eq!(total.load(Ordering::Relaxed), 12);
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_the_same_workers() {
+        let pool = ExecPool::new(2);
+        let sum = AtomicUsize::new(0);
+        for round in 0..50 {
+            let f = |i: usize| {
+                sum.fetch_add(i + round, Ordering::Relaxed);
+            };
+            pool.broadcast(4, &f);
+        }
+        // Σ_round Σ_i (i + round) = 50·6 + 4·Σ(0..50)
+        assert_eq!(sum.load(Ordering::Relaxed), 50 * 6 + 4 * 1225);
+        assert!(pool.shared.state.lock().unwrap().spawned <= 2);
+    }
+
+    #[test]
+    fn concurrency_limit_bounds_parallelism() {
+        let pool = ExecPool::new(4);
+        let active = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let f = |_: usize| {
+            let a = active.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(a, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            active.fetch_sub(1, Ordering::SeqCst);
+        };
+        pool.broadcast_limit(12, 2, &f);
+        let p = peak.load(Ordering::SeqCst);
+        assert!(p <= 2, "peak concurrency {p} exceeded the limit");
+    }
+
+    #[test]
+    fn host_broadcast_runs_tasks_on_workers_only() {
+        let pool = ExecPool::new(2);
+        let sum = AtomicUsize::new(0);
+        let f = |i: usize| {
+            assert!(IN_POOL_WORKER.with(|c| c.get()), "task ran on the host");
+            sum.fetch_add(i + 1, Ordering::Relaxed);
+        };
+        let mut host_ran = false;
+        pool.host_broadcast(4, &f, &mut || {
+            host_ran = true;
+        });
+        assert!(host_ran);
+        assert_eq!(sum.load(Ordering::Relaxed), 1 + 2 + 3 + 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn task_panics_propagate_to_the_caller() {
+        let pool = ExecPool::new(2);
+        let f = |i: usize| {
+            if i == 3 {
+                panic!("boom");
+            }
+        };
+        pool.broadcast(8, &f);
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_job() {
+        let pool = ExecPool::new(2);
+        let f = |_: usize| panic!("transient");
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| pool.broadcast(4, &f)));
+        assert!(r.is_err());
+        // the pool must still dispatch correctly afterwards
+        let hits = AtomicUsize::new(0);
+        let g = |_: usize| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        };
+        pool.broadcast(5, &g);
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+    }
+}

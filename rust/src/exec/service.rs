@@ -1,0 +1,279 @@
+//! [`TrainService`] — the cross-thread funnel that lets client-partitioned
+//! training run on pool workers while every PJRT dispatch stays on the
+//! thread that owns the (single-threaded, `Rc`-based) runtime.
+//!
+//! Shape: the coordinator arms the service for `tasks` worker tasks,
+//! dispatches them with [`crate::exec::ExecPool::host_broadcast`], and —
+//! as the host — sits in [`TrainService::serve`] executing queued
+//! train-step requests against the runtime.  Each worker task drives its
+//! clients' round loop through a [`GatewayStep`]: a train step enqueues a
+//! request (raw views of the worker's buffers plus a stack reply slot)
+//! and blocks until the host writes the result back.  When a task
+//! finishes its clients it [`detach`](TrainService::detach)es; once every
+//! task has detached and the queue is drained, `serve` returns and the
+//! pool retires the job.
+//!
+//! Concurrency win: the non-PJRT majority of client work (re-quantizing
+//! the broadcast model, batch gathers, payload diffs, per-client RNG) runs
+//! concurrently across workers; only the PJRT executions serialize, as
+//! they must.  Requests carry pointers, not copies — the payload buffers
+//! never cross the channel.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::quant::Precision;
+use crate::runtime::TrainOutput;
+
+use super::train::TrainStep;
+
+/// Borrowed view of one train-step request, as handed to the serve
+/// closure on the runtime-owning thread.
+pub struct TrainCall<'a> {
+    pub precision: Precision,
+    pub lr: f32,
+    pub theta: &'a [f32],
+    pub images: &'a [f32],
+    pub labels: &'a [i32],
+}
+
+/// Raw (ptr, len) view of a caller-owned slice.
+struct RawSlice<T> {
+    ptr: *const T,
+    len: usize,
+}
+
+impl<T> RawSlice<T> {
+    fn of(s: &[T]) -> Self {
+        RawSlice { ptr: s.as_ptr(), len: s.len() }
+    }
+
+    /// # Safety
+    /// The source slice must outlive every use (the submitting worker
+    /// blocks on its reply, keeping its buffers alive).
+    unsafe fn as_slice<'a>(&self) -> &'a [T] {
+        std::slice::from_raw_parts(self.ptr, self.len)
+    }
+}
+
+struct TrainReq {
+    precision: Precision,
+    lr: f32,
+    theta: RawSlice<f32>,
+    images: RawSlice<f32>,
+    labels: RawSlice<i32>,
+    reply: *const ReplySlot,
+}
+
+// SAFETY: every pointer targets the submitting worker's stack/buffers,
+// which stay alive because the worker blocks on `reply` until the host
+// has consumed the request and written the result.
+unsafe impl Send for TrainReq {}
+
+#[derive(Default)]
+struct ReplySlot {
+    m: Mutex<Option<Result<TrainOutput>>>,
+    cv: Condvar,
+}
+
+struct ServiceState {
+    queue: VecDeque<TrainReq>,
+    /// Worker tasks still attached to the current dispatch.
+    attached: usize,
+}
+
+/// The request funnel; one lives in the coordinator and is re-armed per
+/// round (buffers recycle — the queue never exceeds the worker count).
+pub struct TrainService {
+    state: Mutex<ServiceState>,
+    cv: Condvar,
+}
+
+impl Default for TrainService {
+    fn default() -> Self {
+        TrainService::new()
+    }
+}
+
+impl TrainService {
+    pub fn new() -> Self {
+        TrainService {
+            state: Mutex::new(ServiceState { queue: VecDeque::new(), attached: 0 }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Arm the service for a dispatch of `tasks` worker tasks; each task
+    /// must call [`detach`](Self::detach) exactly once when done.
+    pub fn reset(&self, tasks: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.attached = tasks;
+        st.queue.clear();
+    }
+
+    /// A worker task has finished its training work.
+    pub fn detach(&self) {
+        {
+            let mut st = self.state.lock().unwrap();
+            st.attached = st.attached.saturating_sub(1);
+        }
+        self.cv.notify_all();
+    }
+
+    fn submit(&self, req: TrainReq) {
+        {
+            let mut st = self.state.lock().unwrap();
+            st.queue.push_back(req);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Execute queued requests with `exec` (on the thread that owns the
+    /// single-threaded runtime) until every attached task has detached
+    /// and the queue is drained.
+    pub fn serve(&self, mut exec: impl FnMut(TrainCall<'_>) -> Result<TrainOutput>) {
+        loop {
+            let req = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if let Some(r) = st.queue.pop_front() {
+                        break Some(r);
+                    }
+                    if st.attached == 0 {
+                        break None;
+                    }
+                    st = self.cv.wait(st).unwrap();
+                }
+            };
+            let Some(req) = req else { return };
+            // SAFETY: the submitting worker blocks on `reply` until we
+            // store the result, so all views are live (see TrainReq).
+            let out = exec(TrainCall {
+                precision: req.precision,
+                lr: req.lr,
+                theta: unsafe { req.theta.as_slice() },
+                images: unsafe { req.images.as_slice() },
+                labels: unsafe { req.labels.as_slice() },
+            });
+            let reply = unsafe { &*req.reply };
+            {
+                let mut g = reply.m.lock().unwrap();
+                *g = Some(out);
+            }
+            reply.cv.notify_one();
+        }
+    }
+}
+
+/// Worker-side [`TrainStep`] that funnels every call through the service.
+pub struct GatewayStep<'a> {
+    svc: &'a TrainService,
+}
+
+impl<'a> GatewayStep<'a> {
+    pub fn new(svc: &'a TrainService) -> Self {
+        GatewayStep { svc }
+    }
+}
+
+impl TrainStep for GatewayStep<'_> {
+    fn train_step(
+        &self,
+        precision: Precision,
+        theta: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<TrainOutput> {
+        let reply = ReplySlot::default();
+        self.svc.submit(TrainReq {
+            precision,
+            lr,
+            theta: RawSlice::of(theta),
+            images: RawSlice::of(images),
+            labels: RawSlice::of(labels),
+            reply: &reply,
+        });
+        let mut g = reply.m.lock().unwrap();
+        loop {
+            if let Some(out) = g.take() {
+                return out;
+            }
+            g = reply.cv.wait(g).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_funnels_worker_calls_to_a_single_threaded_executor() {
+        let svc = TrainService::new();
+        svc.reset(3);
+        // deliberately !Sync executor state: the whole point of the funnel
+        let served = std::cell::Cell::new(0u32);
+        std::thread::scope(|s| {
+            for w in 0..3u32 {
+                let svc = &svc;
+                s.spawn(move || {
+                    let step = GatewayStep::new(svc);
+                    for i in 0..5u32 {
+                        let theta = vec![w as f32, i as f32];
+                        let out = step
+                            .train_step(Precision::of(8), &theta, &[1.0], &[2], 0.1)
+                            .unwrap();
+                        assert_eq!(out.new_theta, vec![w as f32 + 1.0, i as f32 + 1.0]);
+                        assert_eq!(out.loss, 0.5);
+                        assert_eq!(out.correct, 1.0);
+                    }
+                    svc.detach();
+                });
+            }
+            svc.serve(|call| {
+                served.set(served.get() + 1);
+                assert_eq!(call.images, &[1.0]);
+                assert_eq!(call.labels, &[2]);
+                Ok(TrainOutput {
+                    new_theta: call.theta.iter().map(|v| v + 1.0).collect(),
+                    loss: 0.5,
+                    correct: call.labels.len() as f32,
+                })
+            });
+        });
+        assert_eq!(served.get(), 15);
+    }
+
+    #[test]
+    fn errors_flow_back_to_the_submitting_worker() {
+        let svc = TrainService::new();
+        svc.reset(1);
+        std::thread::scope(|s| {
+            let svc_ref = &svc;
+            s.spawn(move || {
+                let step = GatewayStep::new(svc_ref);
+                let err = step
+                    .train_step(Precision::of(4), &[0.0], &[0.0], &[0], 0.1)
+                    .unwrap_err();
+                assert!(err.to_string().contains("no device"), "{err}");
+                svc_ref.detach();
+            });
+            svc.serve(|_| anyhow::bail!("no device"));
+        });
+    }
+
+    #[test]
+    fn serve_returns_immediately_when_nothing_attached() {
+        let svc = TrainService::new();
+        svc.reset(0);
+        let mut calls = 0;
+        svc.serve(|_| {
+            calls += 1;
+            anyhow::bail!("unreachable")
+        });
+        assert_eq!(calls, 0);
+    }
+}

@@ -1,0 +1,93 @@
+//! The training seams the client round loop executes against.
+//!
+//! [`TrainStep`] is the per-call interface [`crate::coordinator::client`]
+//! uses for one SGD minibatch step; [`TrainBackend`] is the injectable
+//! whole-backend seam (train + evaluate + warmup) for runs that do not go
+//! through PJRT — it is `Send + Sync`, so client-partitioned training
+//! calls it from pool workers directly.  The PJRT runtime itself is
+//! single-threaded (`Rc`-based client); it participates either as
+//! [`RuntimeStep`] on the coordinator thread (`workers = 1`) or behind
+//! the [`crate::exec::TrainService`] funnel (`workers > 1`).
+
+use anyhow::Result;
+
+use crate::quant::Precision;
+use crate::runtime::{EvalResult, Runtime, TrainOutput};
+
+/// One SGD minibatch step at a given precision — the client state
+/// machine's only dependency on the execution backend.
+pub trait TrainStep {
+    fn train_step(
+        &self,
+        precision: Precision,
+        theta: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<TrainOutput>;
+}
+
+/// A full training/evaluation backend that can replace PJRT for a run
+/// (injected through `sim::ExperimentBuilder::backend`).  Must be `Sync`:
+/// with `RunConfig.workers > 1` the client partition calls `train_step`
+/// concurrently from pool workers.
+pub trait TrainBackend: Send + Sync {
+    fn train_step(
+        &self,
+        precision: Precision,
+        theta: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<TrainOutput>;
+
+    /// Evaluate a flat model over a labelled set.
+    fn evaluate(&self, theta: &[f32], images: &[f32], labels: &[i32])
+        -> Result<EvalResult>;
+
+    /// Pre-run warmup for the levels a policy may assign (PJRT compiles
+    /// artifacts here; pure-rust backends usually need nothing).
+    fn warmup(&self, levels: &[Precision]) -> Result<()> {
+        let _ = levels;
+        Ok(())
+    }
+}
+
+/// An injected backend object is usable wherever a [`TrainStep`] is
+/// expected (the coordinator hands `&dyn TrainBackend` to the client
+/// round loop directly — on the coordinator thread or on pool workers).
+/// A concrete impl on the trait object (rather than a blanket impl) keeps
+/// coherence with the other `TrainStep` implementors.
+impl TrainStep for dyn TrainBackend {
+    fn train_step(
+        &self,
+        precision: Precision,
+        theta: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<TrainOutput> {
+        TrainBackend::train_step(self, precision, theta, images, labels, lr)
+    }
+}
+
+/// Direct PJRT dispatch on the thread that owns the runtime — the
+/// `workers = 1` path, byte-for-byte the historical call.
+pub struct RuntimeStep<'a> {
+    pub runtime: &'a Runtime,
+    pub variant: &'a str,
+}
+
+impl TrainStep for RuntimeStep<'_> {
+    fn train_step(
+        &self,
+        precision: Precision,
+        theta: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<TrainOutput> {
+        self.runtime
+            .train_step(self.variant, precision, theta, images, labels, lr)
+    }
+}

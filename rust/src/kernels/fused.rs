@@ -10,7 +10,9 @@
 //! f32 additions in the same (ascending client) order as the scalar
 //! sweeps — accumulators are independent, so fusing them changes nothing.
 //! Chunk-parallel execution only partitions the element axis (disjoint
-//! output chunks, deterministic grid), so it is bit-identical too.
+//! output chunks, deterministic grid), so it is bit-identical too; chunks
+//! dispatch onto the persistent [`crate::exec`] pool (no per-call thread
+//! spawning, no steady-state allocation).
 
 use crate::channel::C32;
 use crate::kernels::{par, PayloadPlane};
@@ -75,25 +77,25 @@ pub fn superpose(
         work(0, y_re, y_im, ideal);
         return;
     }
-    std::thread::scope(|s| {
-        let work = &work;
-        let mut yr_rest = y_re;
-        let mut yi_rest = y_im;
-        let mut id_rest = ideal;
-        let mut off = 0usize;
-        for c in 0..chunks {
-            let len = par::chunk_len(n, chunks, c);
-            let (yr, r1) = std::mem::take(&mut yr_rest).split_at_mut(len);
-            yr_rest = r1;
-            let (yi, r2) = std::mem::take(&mut yi_rest).split_at_mut(len);
-            yi_rest = r2;
-            let (id, r3) = std::mem::take(&mut id_rest).split_at_mut(len);
-            id_rest = r3;
-            let o = off;
-            off += len;
-            s.spawn(move || work(o, yr, yi, id));
-        }
-    });
+    let yr_base = crate::exec::SendPtr::from_mut(y_re);
+    let yi_base = crate::exec::SendPtr::from_mut(y_im);
+    let id_base = crate::exec::SendPtr::from_mut(ideal);
+    let task = move |c: usize| {
+        let start = par::chunk_start(n, chunks, c);
+        let len = par::chunk_len(n, chunks, c);
+        // SAFETY: the deterministic chunk grid yields disjoint ranges of
+        // the three equal-length accumulators; each task index runs
+        // exactly once and the dispatch blocks until all tasks finish.
+        let (yr, yi, id) = unsafe {
+            (
+                yr_base.slice_at(start, len),
+                yi_base.slice_at(start, len),
+                id_base.slice_at(start, len),
+            )
+        };
+        work(start, yr, yi, id);
+    };
+    crate::exec::pool().broadcast(chunks, &task);
 }
 
 #[cfg(test)]

@@ -14,10 +14,12 @@
 //!   accumulates `y_re`, `y_im` and the noise-free `ideal` in ONE sweep
 //!   over each payload row (the scalar path reads every payload three
 //!   times), and [`fused::axpy2`] is the per-row building block.
-//! * [`par`] — scoped `std::thread` chunk-parallelism (no external deps):
-//!   N is split into contiguous column chunks, each worker owns a disjoint
+//! * [`par`] — chunk-parallelism over the persistent [`crate::exec`]
+//!   worker pool (no external deps, no per-call thread spawning): N is
+//!   split into contiguous column chunks, each pool task owns a disjoint
 //!   output chunk, and chunk boundaries depend only on N and the chunk
-//!   count — never on scheduling.
+//!   count — never on scheduling.  [`par::par_row_partition_mut`] is the
+//!   row-aligned variant used to partition clients / sweep cells.
 //!
 //! # Determinism-under-parallelism contract
 //!
@@ -31,9 +33,9 @@
 //!   under any association, so chunked reduction changes nothing.
 //! * Order-sensitive f64 reductions (signal power, MSE diagnostics) stay
 //!   sequential — they are O(N) and cheap.
-//! * Receiver-noise generation keeps ONE logical RNG stream: workers
-//!   clone the generator and fast-forward (`Rng::clone_skip`) to their
-//!   chunk's draw offset, exploiting the fixed two-draws-per-pair shape of
+//! * Receiver-noise generation keeps ONE logical RNG stream: a cursor
+//!   sweep precomputes the generator state at every chunk's draw offset
+//!   (`Rng::clone_skip`), exploiting the fixed two-draws-per-pair shape of
 //!   the pairwise Box-Muller fill (see `Rng::add_normal2`).  The draws a
 //!   chunk consumes are exactly the draws the sequential pass would have
 //!   used at those positions.

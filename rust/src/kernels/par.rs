@@ -1,14 +1,24 @@
-//! Scoped-thread chunk-parallelism helpers (no external crates).
+//! Chunk-parallelism helpers over the persistent [`crate::exec`] pool
+//! (no external crates).
 //!
 //! Work is split into contiguous chunks whose boundaries depend only on
 //! the element count and chunk count — never on scheduling — so parallel
 //! results are reproducible.  Below [`MIN_CHUNK_LEN`] elements per chunk
-//! the spawn overhead dominates and the helpers fall back to the inline
-//! sequential path (which also keeps the `threads = 1` round loop free of
-//! heap allocation; spawning scoped threads allocates their stacks).
+//! the dispatch overhead dominates and the helpers fall back to the inline
+//! sequential path.  Dispatch runs on the parked worker pool
+//! ([`crate::exec::pool`]): no threads are spawned per call and the
+//! `threads > 1` path performs no heap allocation in steady state
+//! (`rust/tests/alloc_counter.rs`), which scoped spawning could not offer
+//! (it allocates a stack per chunk per call).
 
 /// Smallest worthwhile per-chunk element count for f32 sweeps.
 pub const MIN_CHUNK_LEN: usize = 4096;
+
+/// Upper bound on chunks per dispatch.  Lets hot paths precompute
+/// per-chunk state (e.g. skip-ahead RNG clones) in fixed-size stack
+/// tables; results are bit-identical at ANY chunk count, so the clamp
+/// only bounds how wide a single dispatch goes.
+pub const MAX_CHUNKS: usize = 16;
 
 /// Hardware parallelism (1 if it cannot be determined).
 pub fn auto_threads() -> usize {
@@ -28,7 +38,7 @@ pub fn env_threads() -> usize {
 
 /// Number of chunks actually worth using for `n` elements at `threads`.
 pub fn effective_chunks(threads: usize, n: usize) -> usize {
-    threads.min(n / MIN_CHUNK_LEN).max(1)
+    threads.min(MAX_CHUNKS).min(n / MIN_CHUNK_LEN).max(1)
 }
 
 /// Length of chunk `i` of `chunks` over `n` elements (balanced split:
@@ -45,7 +55,8 @@ pub fn chunk_start(n: usize, chunks: usize, i: usize) -> usize {
 }
 
 /// Run `f(offset, chunk)` over disjoint contiguous chunks of `buf`,
-/// in parallel when `threads > 1` and the buffer is large enough.
+/// in parallel on the exec pool when `threads > 1` and the buffer is
+/// large enough.
 ///
 /// `f` must be oblivious to chunking (pure elementwise work): the chunk
 /// grid is deterministic, so results are identical for any thread count.
@@ -60,19 +71,53 @@ where
         f(0, buf);
         return;
     }
-    std::thread::scope(|s| {
-        let f = &f;
-        let mut rest = buf;
-        let mut off = 0usize;
-        for c in 0..chunks {
-            let len = chunk_len(n, chunks, c);
-            let (head, tail) = std::mem::take(&mut rest).split_at_mut(len);
-            rest = tail;
-            let o = off;
-            off += len;
-            s.spawn(move || f(o, head));
-        }
-    });
+    let base = crate::exec::SendPtr::from_mut(buf);
+    let task = move |c: usize| {
+        let start = chunk_start(n, chunks, c);
+        let len = chunk_len(n, chunks, c);
+        // SAFETY: the deterministic chunk grid partitions [0, n) into
+        // disjoint ranges and the pool runs each task index exactly once,
+        // so no two live chunk borrows overlap; `buf` outlives the
+        // dispatch because `broadcast` blocks until every task finishes.
+        let chunk = unsafe { base.slice_at(start, len) };
+        f(start, chunk);
+    };
+    crate::exec::pool().broadcast(chunks, &task);
+}
+
+/// Partition `buf` — a row-major `rows × (buf.len() / rows)` matrix —
+/// into up to `parts` contiguous ROW ranges (balanced grid) and run
+/// `f(first_row, rows_chunk)` for each range on the exec pool.
+///
+/// This is the inter-client / inter-cell partitioning primitive: unlike
+/// [`par_chunks_mut`] there is no minimum-size fallback (the unit of work
+/// is a whole row — a client payload — not an element), and `parts = 1`
+/// is the exact sequential path.
+pub fn par_row_partition_mut<T, F>(parts: usize, rows: usize, buf: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if rows == 0 {
+        return;
+    }
+    assert_eq!(buf.len() % rows, 0, "buf must be rows x row_len");
+    let row_len = buf.len() / rows;
+    let parts = parts.min(rows).max(1);
+    if parts <= 1 {
+        f(0, buf);
+        return;
+    }
+    let base = crate::exec::SendPtr::from_mut(buf);
+    let task = move |p: usize| {
+        let r0 = chunk_start(rows, parts, p);
+        let nrows = chunk_len(rows, parts, p);
+        // SAFETY: disjoint row ranges from the deterministic grid; one
+        // task per index; `buf` outlives the blocking dispatch.
+        let chunk = unsafe { base.slice_at(r0 * row_len, nrows * row_len) };
+        f(r0, chunk);
+    };
+    crate::exec::pool().broadcast(parts, &task);
 }
 
 #[cfg(test)]
@@ -99,6 +144,8 @@ mod tests {
         assert_eq!(effective_chunks(8, MIN_CHUNK_LEN * 3), 3);
         assert_eq!(effective_chunks(2, MIN_CHUNK_LEN * 100), 2);
         assert_eq!(effective_chunks(1, 1_000_000), 1);
+        // the fixed-table clamp
+        assert_eq!(effective_chunks(64, MIN_CHUNK_LEN * 100), MAX_CHUNKS);
     }
 
     #[test]
@@ -114,5 +161,33 @@ mod tests {
         par_chunks_mut(1, &mut seq, work);
         par_chunks_mut(4, &mut par, work);
         assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn par_row_partition_matches_sequential() {
+        let (rows, row_len) = (10usize, 37usize);
+        let mut seq: Vec<f32> = (0..rows * row_len).map(|i| i as f32).collect();
+        let mut par = seq.clone();
+        let work = |r0: usize, chunk: &mut [f32]| {
+            for (i, row) in chunk.chunks_mut(37).enumerate() {
+                let scale = (r0 + i + 1) as f32;
+                for v in row.iter_mut() {
+                    *v *= scale;
+                }
+            }
+        };
+        par_row_partition_mut(1, rows, &mut seq, work);
+        par_row_partition_mut(4, rows, &mut par, work);
+        assert_eq!(seq, par);
+        // more parts than rows clamps; zero rows is a no-op
+        let mut tiny = vec![1.0f32; 3];
+        par_row_partition_mut(8, 3, &mut tiny, |_, c| {
+            for v in c.iter_mut() {
+                *v += 1.0;
+            }
+        });
+        assert_eq!(tiny, vec![2.0; 3]);
+        let mut empty: Vec<f32> = Vec::new();
+        par_row_partition_mut(4, 0, &mut empty, |_, _| unreachable!());
     }
 }

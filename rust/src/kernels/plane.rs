@@ -78,6 +78,14 @@ impl PayloadPlane {
     pub fn as_slice(&self) -> &[f32] {
         &self.data
     }
+
+    /// The whole K×N buffer, row-major, mutable — the entry point for
+    /// row-partitioned parallel writers (each worker owns a contiguous
+    /// row range, so rows stay disjoint; see
+    /// [`crate::kernels::par::par_row_partition_mut`]).
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
 }
 
 #[cfg(test)]

@@ -38,13 +38,23 @@
 //! The round hot path — quantize + modulate K payloads, superpose, inject
 //! AWGN, average — runs on [`kernels`]: a contiguous K×N
 //! [`kernels::PayloadPlane`] instead of `&[Vec<f32>]`, fused single-pass
-//! kernels ([`kernels::fused`]), and scoped-thread chunk-parallelism
-//! ([`kernels::par`]) gated by the `RunConfig::threads` knob.  The layer
-//! honours a strict determinism contract: for a fixed seed, results are
-//! bit-identical to the sequential scalar path at every thread count (see
-//! the module docs and `rust/tests/kernels.rs`).  The coordinator reuses a
-//! round scratch arena so steady-state rounds perform no heap allocation
-//! outside PJRT dispatch (`rust/tests/alloc_counter.rs`).
+//! kernels ([`kernels::fused`]), and chunk-parallelism ([`kernels::par`])
+//! gated by the `RunConfig::threads` knob.  The layer honours a strict
+//! determinism contract: for a fixed seed, results are bit-identical to
+//! the sequential scalar path at every thread count (see the module docs
+//! and `rust/tests/kernels.rs`).  The coordinator reuses a round scratch
+//! arena so steady-state rounds perform no heap allocation outside PJRT
+//! dispatch (`rust/tests/alloc_counter.rs`).
+//!
+//! ## The execution runtime (§Scale)
+//!
+//! All parallelism dispatches onto ONE persistent, parked worker pool
+//! ([`exec::ExecPool`]): intra-kernel chunks (`RunConfig::threads`),
+//! inter-client local training and inter-cell sweep parallelism (both
+//! `RunConfig::workers`).  PJRT stays on its owning thread behind the
+//! [`exec::TrainService`] funnel; nested dispatches run inline, and the
+//! bit-identity contract holds for every `{threads, workers}` combination
+//! (`rust/tests/sim.rs`).
 
 pub mod channel;
 pub mod cli;
@@ -52,6 +62,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod energy;
+pub mod exec;
 pub mod fl;
 pub mod json;
 pub mod kernels;

@@ -41,6 +41,28 @@ pub struct RoundRecord {
     pub evaluated: bool,
 }
 
+impl RoundRecord {
+    /// The canonical JSONL-line object for one round; `label` tags the
+    /// originating run (scheme/policy/cell coordinates).  Shared by the
+    /// post-hoc [`RunLog::to_jsonl`] export and the streaming
+    /// [`crate::sim::JsonlStreamer`], so both emit identical lines.
+    pub fn to_json(&self, label: &str) -> Value {
+        let mut o = Value::object();
+        o.set("label", Value::Str(label.to_string()));
+        o.set("round", Value::Num(self.round as f64));
+        o.set("server_acc", Value::Num(self.server_accuracy));
+        o.set("server_loss", Value::Num(self.server_loss));
+        o.set("train_loss", Value::Num(self.train_loss));
+        o.set("train_acc", Value::Num(self.train_accuracy));
+        o.set("participants", Value::Num(self.participants as f64));
+        o.set("ota_mse", Value::Num(self.ota_mse));
+        o.set("energy_j", Value::Num(self.energy_joules));
+        o.set("wall_s", Value::Num(self.wall_secs));
+        o.set("evaluated", Value::Bool(self.evaluated));
+        o
+    }
+}
+
 /// Accumulated log for a full run.
 #[derive(Clone, Debug, Default)]
 pub struct RunLog {
@@ -103,22 +125,12 @@ impl RunLog {
     // ------------------------------------------------------------- export
 
     /// One JSON object per round (JSONL) — machine-readable run record.
+    /// (For long runs, prefer streaming the same lines live with
+    /// `--stream` / [`crate::sim::JsonlStreamer`].)
     pub fn to_jsonl(&self) -> String {
         let mut out = String::new();
         for r in &self.rounds {
-            let mut o = Value::object();
-            o.set("label", Value::Str(self.label.clone()));
-            o.set("round", Value::Num(r.round as f64));
-            o.set("server_acc", Value::Num(r.server_accuracy));
-            o.set("server_loss", Value::Num(r.server_loss));
-            o.set("train_loss", Value::Num(r.train_loss));
-            o.set("train_acc", Value::Num(r.train_accuracy));
-            o.set("participants", Value::Num(r.participants as f64));
-            o.set("ota_mse", Value::Num(r.ota_mse));
-            o.set("energy_j", Value::Num(r.energy_joules));
-            o.set("wall_s", Value::Num(r.wall_secs));
-            o.set("evaluated", Value::Bool(r.evaluated));
-            out.push_str(&o.to_string());
+            out.push_str(&r.to_json(&self.label).to_string());
             out.push('\n');
         }
         out

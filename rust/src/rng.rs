@@ -209,7 +209,8 @@ impl Rng {
 
     /// Add N(0, std²) noise to `re` then `im` — bit-identical to
     /// `self.add_normal(re, std); self.add_normal(im, std);` for EVERY
-    /// thread count, parallel when profitable.
+    /// thread count, parallel (on the [`crate::exec`] pool) when
+    /// profitable.
     ///
     /// Exactness argument: for even lengths the sequential pass consumes
     /// exactly one u64 draw per element (two per Box-Muller pair: u1, u2)
@@ -217,12 +218,13 @@ impl Rng {
     /// every element is known in advance — element `i` of `re` starts at
     /// draw `i`, element `i` of `im` at draw `n + i`.  A single cursor
     /// sweep clones the generator state at each pair-aligned chunk
-    /// boundary (in draw order), workers fill their disjoint chunks with
-    /// exactly the draws the sequential pass would have used there, and
-    /// the owning generator lands past all `2n` draws.  Odd lengths
-    /// interact with the spare
-    /// cache and fall back to the sequential pass (the OTA payload length
-    /// is the model parameter count — even for every shipped variant).
+    /// boundary (in draw order) into a fixed stack table
+    /// ([`crate::kernels::par::MAX_CHUNKS`] bounds the grid), pool tasks
+    /// fill their disjoint chunks with exactly the draws the sequential
+    /// pass would have used there, and the owning generator lands past
+    /// all `2n` draws.  Odd lengths interact with the spare cache and
+    /// fall back to the sequential pass (the OTA payload length is the
+    /// model parameter count — even for every shipped variant).
     pub fn add_normal2(&mut self, re: &mut [f32], im: &mut [f32], std: f32, threads: usize) {
         use crate::kernels::par;
         assert_eq!(re.len(), im.len(), "noise component length mismatch");
@@ -234,60 +236,71 @@ impl Rng {
             self.add_normal(im, std);
             return;
         }
+        let pairs = total / 2;
         // One cursor sweeps the stream ONCE on this thread, cloning the
         // generator state at each segment boundary (boundaries are visited
-        // in increasing draw order), so workers start with zero skipping
-        // and the total fast-forward work is O(2n) instead of O(threads·n).
+        // in increasing draw order), so pool tasks start with zero
+        // skipping and the total fast-forward work is O(2n) instead of
+        // O(threads·n).  The table lives on the stack: the parallel noise
+        // path stays allocation-free.
         let mut cursor = self.clone_skip(0);
         let mut pos = 0u64;
-        let pairs = total / 2;
-        std::thread::scope(|s| {
-            let mut re_rest = re;
-            let mut im_rest = im;
-            for c in 0..chunks {
-                // global element range of this chunk over the virtual
-                // [re || im] stream, aligned to Box-Muller pairs
-                let p0 = par::chunk_start(pairs, chunks, c);
-                let p1 = p0 + par::chunk_len(pairs, chunks, c);
-                let (g0, g1) = (2 * p0, 2 * p1);
-                let re_lo = g0.min(n);
-                let re_hi = g1.min(n);
-                let im_lo = g0.max(n) - n;
-                let im_hi = g1.max(n) - n;
-                let (re_part, rest) =
-                    std::mem::take(&mut re_rest).split_at_mut(re_hi - re_lo);
-                re_rest = rest;
-                let (im_part, rest) =
-                    std::mem::take(&mut im_rest).split_at_mut(im_hi - im_lo);
-                im_rest = rest;
-                let re_rng = if re_part.is_empty() {
-                    None
-                } else {
-                    cursor.skip(re_lo as u64 - pos);
-                    pos = re_lo as u64;
-                    Some(cursor.clone())
-                };
-                let im_rng = if im_part.is_empty() {
-                    None
-                } else {
-                    cursor.skip((n + im_lo) as u64 - pos);
-                    pos = (n + im_lo) as u64;
-                    Some(cursor.clone())
-                };
-                s.spawn(move || {
-                    if let Some(mut r) = re_rng {
-                        r.add_normal(re_part, std);
-                    }
-                    if let Some(mut r) = im_rng {
-                        r.add_normal(im_part, std);
-                    }
-                });
+        let mut table: [(Option<Rng>, Option<Rng>); par::MAX_CHUNKS] =
+            std::array::from_fn(|_| (None, None));
+        for c in 0..chunks {
+            let (re_lo, re_hi, im_lo, im_hi) = noise_chunk_ranges(n, pairs, chunks, c);
+            if re_hi > re_lo {
+                cursor.skip(re_lo as u64 - pos);
+                pos = re_lo as u64;
+                table[c].0 = Some(cursor.clone());
             }
-        });
+            if im_hi > im_lo {
+                cursor.skip((n + im_lo) as u64 - pos);
+                pos = (n + im_lo) as u64;
+                table[c].1 = Some(cursor.clone());
+            }
+        }
+        let re_base = crate::exec::SendPtr::from_mut(re);
+        let im_base = crate::exec::SendPtr::from_mut(im);
+        let table_ref = &table;
+        let task = move |c: usize| {
+            let (re_lo, re_hi, im_lo, im_hi) = noise_chunk_ranges(n, pairs, chunks, c);
+            if re_hi > re_lo {
+                // SAFETY: chunk ranges are disjoint across task indices
+                // and each index runs exactly once; the buffers outlive
+                // the blocking dispatch.
+                let part = unsafe { re_base.slice_at(re_lo, re_hi - re_lo) };
+                let mut r = table_ref[c].0.clone().expect("re state precomputed");
+                r.add_normal(part, std);
+            }
+            if im_hi > im_lo {
+                // SAFETY: as above, over the `im` buffer.
+                let part = unsafe { im_base.slice_at(im_lo, im_hi - im_lo) };
+                let mut r = table_ref[c].1.clone().expect("im state precomputed");
+                r.add_normal(part, std);
+            }
+        };
+        crate::exec::pool().broadcast(chunks, &task);
         // land the owning generator exactly where the sequential pass would
         cursor.skip(total as u64 - pos);
         self.s = cursor.s;
     }
+}
+
+/// Element ranges of chunk `c` over the virtual `[re || im]` draw stream,
+/// aligned to Box-Muller pairs: returns `(re_lo, re_hi, im_lo, im_hi)`
+/// with the `im` range already translated to `im`-local indices.
+fn noise_chunk_ranges(
+    n: usize,
+    pairs: usize,
+    chunks: usize,
+    c: usize,
+) -> (usize, usize, usize, usize) {
+    use crate::kernels::par;
+    let p0 = par::chunk_start(pairs, chunks, c);
+    let p1 = p0 + par::chunk_len(pairs, chunks, c);
+    let (g0, g1) = (2 * p0, 2 * p1);
+    (g0.min(n), g1.min(n), g0.max(n) - n, g1.max(n) - n)
 }
 
 #[cfg(test)]

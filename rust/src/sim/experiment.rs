@@ -183,6 +183,15 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Replace the PJRT training/eval backend with a pure-rust one
+    /// (deterministic test trainers, alternative execution engines).  The
+    /// backend is `Sync`, so `RunConfig::workers > 1` trains clients on
+    /// pool workers calling it directly.
+    pub fn backend(mut self, b: impl crate::exec::TrainBackend + 'static) -> Self {
+        self.parts.backend = Some(Box::new(b));
+        self
+    }
+
     /// Attach a round observer (repeatable).
     pub fn observe(mut self, o: impl RoundObserver + 'static) -> Self {
         self.parts.observers.push(Box::new(o));

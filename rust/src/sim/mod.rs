@@ -48,7 +48,7 @@ pub use channel_model::{
     Awgn, ChannelModel, GaussMarkov, PathLossGeometry, RayleighPilot,
 };
 pub use experiment::{Experiment, ExperimentBuilder};
-pub use observer::{ProgressPrinter, RoundObserver};
+pub use observer::{JsonlStreamer, ProgressPrinter, RoundObserver};
 pub use policy::{
     EnergyBudget, LossPlateau, PolicyCtx, PrecisionPolicy, SnrAdaptive, StaticScheme,
 };
@@ -87,6 +87,9 @@ pub struct SimParts {
     pub aggregator: Option<Box<dyn Aggregator>>,
     pub policy: Option<Box<dyn PrecisionPolicy>>,
     pub observers: Vec<Box<dyn RoundObserver>>,
+    /// Replacement training/eval backend (`None` = PJRT).  Must be `Sync`
+    /// — with `RunConfig::workers > 1` it is called from pool workers.
+    pub backend: Option<Box<dyn crate::exec::TrainBackend>>,
     /// Recycled scratch arena from a previous run.
     pub arena: Option<Arena>,
 }

@@ -50,3 +50,82 @@ impl RoundObserver for ProgressPrinter {
         );
     }
 }
+
+/// Streams one JSON line per finished round to a file, written (and
+/// therefore durable) at every round boundary — the long-run replacement
+/// for the post-hoc `RunLog` JSONL export: a crashed or killed run keeps
+/// every completed round on disk.  Lines are exactly the
+/// [`RoundRecord::to_json`] shape `RunLog::to_jsonl` emits, tagged with
+/// an optional label (sweeps tag each cell's coordinates).
+///
+/// Wired as `--stream <path>` on `mpota train` and `mpota sweep`.
+pub struct JsonlStreamer {
+    out: std::fs::File,
+    label: String,
+    /// Latched on the first write error so a full disk degrades to one
+    /// warning instead of a panic mid-run.
+    failed: bool,
+}
+
+impl JsonlStreamer {
+    /// Create (truncate) `path` and stream into it.
+    pub fn create(path: &std::path::Path) -> anyhow::Result<Self> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        Ok(JsonlStreamer {
+            out: std::fs::File::create(path)?,
+            label: String::new(),
+            failed: false,
+        })
+    }
+
+    /// Append to `path` (creating it if absent) — multi-cell sweeps open
+    /// the shared stream this way for every cell after the first.
+    pub fn append(path: &std::path::Path) -> anyhow::Result<Self> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        Ok(JsonlStreamer {
+            out: std::fs::OpenOptions::new().create(true).append(true).open(path)?,
+            label: String::new(),
+            failed: false,
+        })
+    }
+
+    /// Tag subsequent lines with `label` (builder-style).
+    pub fn with_label(mut self, label: impl Into<String>) -> Self {
+        self.label = label.into();
+        self
+    }
+
+    /// Tag subsequent lines with `label` (serial sweeps retag per cell).
+    pub fn set_label(&mut self, label: impl Into<String>) {
+        self.label = label.into();
+    }
+
+    /// Write one record now (used directly by the channel-only sweep,
+    /// which drives no full `RoundObserver` lifecycle).
+    pub fn push(&mut self, r: &RoundRecord) {
+        if self.failed {
+            return;
+        }
+        use std::io::Write;
+        let mut line = r.to_json(&self.label).to_string();
+        line.push('\n');
+        if let Err(e) = self.out.write_all(line.as_bytes()) {
+            eprintln!("warning: round stream write failed ({e}); disabling stream");
+            self.failed = true;
+        }
+    }
+}
+
+impl RoundObserver for JsonlStreamer {
+    fn on_round_end(&mut self, r: &RoundRecord) {
+        self.push(r);
+    }
+}

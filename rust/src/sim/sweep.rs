@@ -25,6 +25,22 @@
 //! across cells, so enumerating the grid in a different order yields
 //! bit-identical per-cell results (`cell_order_is_immaterial` pins
 //! this).  Only inert *buffers* (the scratch arena) are recycled.
+//!
+//! Cell parallelism: channel-only cells are independent, so with
+//! `RunConfig::workers > 1` they run concurrently on the persistent
+//! [`crate::exec`] pool (bounded by `workers`, each task owning fresh
+//! buffers) and fill their canonical grid slot — the consolidated report
+//! is byte-identical to the serial run's regardless of completion order
+//! (`parallel_sweep_matches_serial_cell_for_cell`; CI diffs the two
+//! modulo per-cell wall-clock).  Full-FL cells stay serial: they share
+//! one PJRT runtime, which is single-threaded by construction (`Rc`-based
+//! client) — inside each cell the client phase still parallelizes via
+//! `workers`.
+//!
+//! Streaming: `SweepSpec::stream` (CLI `--stream`) appends every cell's
+//! per-round records to one JSONL file, each line tagged with its cell's
+//! coordinates.  One file means one writer, so streaming forces the
+//! serial path for channel-only sweeps.
 
 use std::path::Path;
 use std::rc::Rc;
@@ -64,6 +80,10 @@ pub struct SweepSpec {
     /// Payload length for the channel-only mode (full FL runs use the
     /// model's parameter count instead).
     pub payload_len: usize,
+    /// Stream every cell's per-round records (JSONL, one shared file,
+    /// lines tagged with the cell coordinates).  One file means one
+    /// writer: streaming channel-only sweeps run serially.
+    pub stream: Option<std::path::PathBuf>,
 }
 
 impl SweepSpec {
@@ -76,6 +96,7 @@ impl SweepSpec {
             channel_models: vec![base.channel.model],
             policies: vec![base.policy],
             payload_len: 4096,
+            stream: None,
             base,
         }
     }
@@ -239,15 +260,26 @@ pub fn run_fl_sweep_on(spec: &SweepSpec, runtime: Rc<Runtime>) -> Result<SweepRe
     let t0 = Instant::now();
     let mut arena = Arena::default();
     let mut cells = Vec::new();
-    for (scheme, snr, agg, model, pol) in spec.cells_iter() {
+    // Cells run serially: they share ONE PJRT runtime, which is
+    // single-threaded by construction (Rc-based client).  `workers` still
+    // parallelizes the client phase INSIDE each cell.
+    for (i, (scheme, snr, agg, model, pol)) in spec.cells_iter().into_iter().enumerate() {
         let cfg = spec.cell_config(scheme, snr, agg, model, pol);
         let cell_t0 = Instant::now();
         // the builder constructs fresh channel-model/policy instances from
         // this cell's config — no mutable state crosses cell boundaries
-        let mut exp = Experiment::builder(cfg)
-            .runtime(runtime.clone())
-            .arena(arena)
-            .build()?;
+        let mut builder = Experiment::builder(cfg).runtime(runtime.clone()).arena(arena);
+        if let Some(path) = &spec.stream {
+            // one shared JSONL file: first cell truncates, the rest append
+            let streamer = if i == 0 {
+                crate::sim::JsonlStreamer::create(path)?
+            } else {
+                crate::sim::JsonlStreamer::append(path)?
+            };
+            builder = builder
+                .observe(streamer.with_label(cell_label(scheme, snr, agg, model, pol)));
+        }
+        let mut exp = builder.build()?;
         let report = exp.run()?;
         arena = exp.into_arena();
 
@@ -281,131 +313,232 @@ pub fn run_fl_sweep_on(spec: &SweepSpec, runtime: Rc<Runtime>) -> Result<SweepRe
     Ok(SweepReport { json: consolidated(spec, "fl", cells, t0.elapsed().as_secs_f64()) })
 }
 
-/// Aggregation-only sweep: no training, no artifacts — synthetic payloads
-/// through the cell's policy, channel model and aggregator.  Rows hold
-/// the fake-quantized decimal payloads (what analog clients transmit);
-/// the digital baseline re-encodes them for transport.
-pub fn run_channel_sweep(spec: &SweepSpec) -> Result<SweepReport> {
-    spec.validate()?;
-    let t0 = Instant::now();
+/// Per-cell scratch for the channel-only sweep — recycled across cells in
+/// the serial path, fresh per pool task in the parallel path.
+struct CellBufs {
+    agg: super::AggScratch,
+    channel: crate::channel::RoundChannel,
+    plane: PayloadPlane,
+    assigned: Vec<crate::quant::Precision>,
+    ideal: Vec<f32>,
+}
+
+impl Default for CellBufs {
+    fn default() -> Self {
+        CellBufs {
+            agg: super::AggScratch::default(),
+            channel: crate::channel::RoundChannel::empty(),
+            plane: PayloadPlane::new(),
+            assigned: Vec::new(),
+            ideal: Vec::new(),
+        }
+    }
+}
+
+/// Human-readable cell coordinates (report summaries, stream labels).
+fn cell_label(
+    scheme: &Scheme,
+    snr: f32,
+    agg: Aggregation,
+    model: FadingKind,
+    pol: PolicyKind,
+) -> String {
+    format!("{scheme}@{snr}dB@{agg}@{model}/{pol}")
+}
+
+/// One channel-only grid cell: synthetic payloads through a FRESH policy,
+/// channel model and aggregator built from the cell's config.  Every cell
+/// re-derives the same RNG streams from the root seed (paired
+/// realisations), touches nothing outside `bufs`, and is therefore safe
+/// to run on any pool worker — results depend only on the cell config.
+#[allow(clippy::too_many_arguments)]
+fn channel_cell(
+    spec: &SweepSpec,
+    scheme: &Scheme,
+    snr: f32,
+    agg: Aggregation,
+    model: FadingKind,
+    polkind: PolicyKind,
+    bufs: &mut CellBufs,
+    mut stream: Option<&mut crate::sim::JsonlStreamer>,
+) -> Result<Value> {
     let base = &spec.base;
     let n = spec.payload_len;
     let rounds = base.rounds;
     let clients = base.clients;
     let root = Rng::seed_from(base.seed);
+    let cfg = spec.cell_config(scheme, snr, agg, model, polkind);
+    let cell_t0 = Instant::now();
+    // identical streams per cell => paired realisations; the channel
+    // model and policy are FRESH instances (any fading memory,
+    // geometry or plateau state starts clean for every cell)
+    let mut payload_rng = root.stream("sweep-payload");
+    let mut session = Session::with_state(
+        channel_model::from_config(&cfg.channel),
+        aggregator::from_config(cfg.aggregation),
+        root.stream("sweep-channel"),
+        root.stream("sweep-noise"),
+        cfg.threads,
+        std::mem::take(&mut bufs.agg),
+        std::mem::take(&mut bufs.channel),
+    );
+    let mut pol = policy::from_config(cfg.policy, &cfg);
 
-    // cross-cell recycled buffers (the one arena of the sweep)
-    let mut agg_scratch = super::AggScratch::default();
-    let mut round_channel = crate::channel::RoundChannel::empty();
-    let mut plane = PayloadPlane::new();
-    let mut assigned = Vec::new();
-    let mut ideal = Vec::new();
-
-    let mut cells = Vec::new();
-    for (scheme, snr, agg, model, polkind) in spec.cells_iter() {
-        let cfg = spec.cell_config(scheme, snr, agg, model, polkind);
-        let cell_t0 = Instant::now();
-        // identical streams per cell => paired realisations; the channel
-        // model and policy are FRESH instances (any fading memory,
-        // geometry or plateau state starts clean for every cell)
-        let mut payload_rng = root.stream("sweep-payload");
-        let mut session = Session::with_state(
-            channel_model::from_config(&cfg.channel),
-            aggregator::from_config(cfg.aggregation),
-            root.stream("sweep-channel"),
-            root.stream("sweep-noise"),
-            cfg.threads,
-            std::mem::take(&mut agg_scratch),
-            std::mem::take(&mut round_channel),
-        );
-        let mut pol = policy::from_config(cfg.policy, &cfg);
-
-        let mut mse_sum = 0.0f64;
-        let mut part_sum = 0usize;
-        let mut channel_uses = 0u64;
-        let mut bits = 0u64;
-        let mut lost_rounds = 0usize;
-        // feedback loop for reactive policies: carry a synthetic record of
-        // the previous aggregation round (no training here, so the
-        // loss/energy fields stay at their defaults — loss-plateau then
-        // walks its ladder on the stalled loss, energy-budget stays put)
-        let mut prev: Option<RoundRecord> = None;
-        for t in 1..=rounds {
-            pol.assign_into(
-                &PolicyCtx {
-                    round: t,
-                    clients,
-                    snr_db: cfg.channel.snr_db,
-                    prev: prev.as_ref(),
-                },
-                &mut assigned,
-            )?;
-            plane.reset(clients, n);
-            for (k, &p) in assigned.iter().enumerate() {
-                let row = plane.row_mut(k);
-                payload_rng.fill_normal(row, 0.0, 1.0);
-                quant::fake_quant_inplace(row, p);
-            }
-            fl::mean_plane_into(&plane, &mut ideal, cfg.threads);
-            let stats = session.aggregate(t, &plane, &assigned);
-            if stats.participants > 0 {
-                mse_sum += tensor::mse(session.result(), &ideal);
-            } else {
-                // fully-silenced round: total loss, not 0-MSE —
-                // excluded from the mean and counted separately
-                lost_rounds += 1;
-            }
-            part_sum += stats.participants;
-            channel_uses += stats.channel_uses;
-            bits += stats.bits_transmitted;
-            prev = Some(RoundRecord {
+    let mut mse_sum = 0.0f64;
+    let mut part_sum = 0usize;
+    let mut channel_uses = 0u64;
+    let mut bits = 0u64;
+    let mut lost_rounds = 0usize;
+    // feedback loop for reactive policies: carry a synthetic record of
+    // the previous aggregation round (no training here, so the
+    // loss/energy fields stay at their defaults — loss-plateau then
+    // walks its ladder on the stalled loss, energy-budget stays put)
+    let mut prev: Option<RoundRecord> = None;
+    for t in 1..=rounds {
+        pol.assign_into(
+            &PolicyCtx {
                 round: t,
-                participants: stats.participants,
-                ota_mse: stats.mse_vs_ideal,
-                // the synthetic loss (0.0) counts as a fresh observation
-                // so loss-plateau exercises its ladder in channel-only
-                // mode; energy stays 0, so energy-budget stays put
-                evaluated: true,
-                ..Default::default()
-            });
-        }
-
-        let mut c = Value::object();
-        c.set("scheme", Value::Str(scheme.to_string()));
-        c.set("snr_db", Value::Num(snr as f64));
-        c.set("aggregation", Value::Str(agg.to_string()));
-        c.set("channel_model", Value::Str(model.to_string()));
-        c.set("policy", Value::Str(polkind.to_string()));
-        c.set("rounds", Value::Num(rounds as f64));
-        let delivered = rounds - lost_rounds;
-        c.set(
-            "mean_mse_vs_ideal",
-            if delivered > 0 {
-                Value::Num(mse_sum / delivered as f64)
-            } else {
-                Value::Null // every round lost: no MSE to report
+                clients,
+                snr_db: cfg.channel.snr_db,
+                prev: prev.as_ref(),
             },
-        );
-        c.set("lost_rounds", Value::Num(lost_rounds as f64));
-        c.set(
-            "mean_participants",
-            Value::Num(part_sum as f64 / rounds as f64),
-        );
-        c.set(
-            "channel_uses_per_round",
-            Value::Num(channel_uses as f64 / rounds as f64),
-        );
-        c.set("bits_per_round", Value::Num(bits as f64 / rounds as f64));
-        c.set("wall_secs", Value::Num(cell_t0.elapsed().as_secs_f64()));
-        cells.push(c);
-
-        let (a, ch) = session.into_state();
-        agg_scratch = a;
-        round_channel = ch;
+            &mut bufs.assigned,
+        )?;
+        bufs.plane.reset(clients, n);
+        for (k, &p) in bufs.assigned.iter().enumerate() {
+            let row = bufs.plane.row_mut(k);
+            payload_rng.fill_normal(row, 0.0, 1.0);
+            quant::fake_quant_inplace(row, p);
+        }
+        fl::mean_plane_into(&bufs.plane, &mut bufs.ideal, cfg.threads);
+        let stats = session.aggregate(t, &bufs.plane, &bufs.assigned);
+        if stats.participants > 0 {
+            mse_sum += tensor::mse(session.result(), &bufs.ideal);
+        } else {
+            // fully-silenced round: total loss, not 0-MSE —
+            // excluded from the mean and counted separately
+            lost_rounds += 1;
+        }
+        part_sum += stats.participants;
+        channel_uses += stats.channel_uses;
+        bits += stats.bits_transmitted;
+        let rec = RoundRecord {
+            round: t,
+            participants: stats.participants,
+            ota_mse: stats.mse_vs_ideal,
+            // the synthetic loss (0.0) counts as a fresh observation
+            // so loss-plateau exercises its ladder in channel-only
+            // mode; energy stays 0, so energy-budget stays put
+            evaluated: true,
+            ..Default::default()
+        };
+        if let Some(s) = stream.as_mut() {
+            s.push(&rec);
+        }
+        prev = Some(rec);
     }
+
+    let mut c = Value::object();
+    c.set("scheme", Value::Str(scheme.to_string()));
+    c.set("snr_db", Value::Num(snr as f64));
+    c.set("aggregation", Value::Str(agg.to_string()));
+    c.set("channel_model", Value::Str(model.to_string()));
+    c.set("policy", Value::Str(polkind.to_string()));
+    c.set("rounds", Value::Num(rounds as f64));
+    let delivered = rounds - lost_rounds;
+    c.set(
+        "mean_mse_vs_ideal",
+        if delivered > 0 {
+            Value::Num(mse_sum / delivered as f64)
+        } else {
+            Value::Null // every round lost: no MSE to report
+        },
+    );
+    c.set("lost_rounds", Value::Num(lost_rounds as f64));
+    c.set(
+        "mean_participants",
+        Value::Num(part_sum as f64 / rounds as f64),
+    );
+    c.set(
+        "channel_uses_per_round",
+        Value::Num(channel_uses as f64 / rounds as f64),
+    );
+    c.set("bits_per_round", Value::Num(bits as f64 / rounds as f64));
+    c.set("wall_secs", Value::Num(cell_t0.elapsed().as_secs_f64()));
+
+    let (a, ch) = session.into_state();
+    bufs.agg = a;
+    bufs.channel = ch;
+    Ok(c)
+}
+
+/// Aggregation-only sweep: no training, no artifacts — synthetic payloads
+/// through the cell's policy, channel model and aggregator.  Rows hold
+/// the fake-quantized decimal payloads (what analog clients transmit);
+/// the digital baseline re-encodes them for transport.
+///
+/// With `spec.base.workers > 1`, independent cells run CONCURRENTLY on
+/// the exec pool (bounded by `workers`); each task owns fresh buffers and
+/// fills its canonical grid slot, so the consolidated report is identical
+/// to the serial run's (up to per-cell wall-clock).  Streaming
+/// (`spec.stream`) shares one JSONL writer and therefore runs serially.
+pub fn run_channel_sweep(spec: &SweepSpec) -> Result<SweepReport> {
+    spec.validate()?;
+    let t0 = Instant::now();
+    let coords = spec.cells_iter();
+    let bound = spec.base.workers.min(coords.len()).max(1);
+    let parallel = bound > 1
+        && spec.stream.is_none()
+        && crate::exec::pool().max_workers() > 0
+        && !crate::exec::must_inline();
+
+    let cells: Vec<Value> = if parallel {
+        let slots: Vec<std::sync::OnceLock<Result<Value>>> =
+            (0..coords.len()).map(|_| std::sync::OnceLock::new()).collect();
+        let task = |i: usize| {
+            let (scheme, snr, agg, model, pol) = coords[i];
+            let mut bufs = CellBufs::default();
+            let r = channel_cell(spec, scheme, snr, agg, model, pol, &mut bufs, None);
+            let _ = slots[i].set(r);
+        };
+        crate::exec::pool().broadcast_limit(coords.len(), bound, &task);
+        let mut out = Vec::with_capacity(slots.len());
+        // canonical grid order regardless of completion order; the first
+        // failing cell (in grid order) propagates, like the serial path
+        for s in slots {
+            out.push(s.into_inner().expect("sweep cell completed")?);
+        }
+        out
+    } else {
+        // serial: one recycled buffer set (the sweep's arena), optional
+        // shared JSONL stream retagged per cell
+        let mut bufs = CellBufs::default();
+        let mut stream = match &spec.stream {
+            Some(p) => Some(crate::sim::JsonlStreamer::create(p)?),
+            None => None,
+        };
+        let mut out = Vec::with_capacity(coords.len());
+        for (scheme, snr, agg, model, pol) in coords {
+            if let Some(s) = stream.as_mut() {
+                s.set_label(cell_label(scheme, snr, agg, model, pol));
+            }
+            out.push(channel_cell(
+                spec,
+                scheme,
+                snr,
+                agg,
+                model,
+                pol,
+                &mut bufs,
+                stream.as_mut(),
+            )?);
+        }
+        out
+    };
+
     let mut json = consolidated(spec, "channel-only", cells, t0.elapsed().as_secs_f64());
-    json.set("payload_len", Value::Num(n as f64));
-    json.set("clients", Value::Num(clients as f64));
+    json.set("payload_len", Value::Num(spec.payload_len as f64));
+    json.set("clients", Value::Num(spec.base.clients as f64));
     Ok(SweepReport { json })
 }
 
@@ -607,6 +740,64 @@ mod tests {
                 assert_eq!(x.get(key), y.get(key), "{key} differs across orders");
             }
         }
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_cell_for_cell() {
+        // workers > 1 runs cells concurrently on the exec pool; the
+        // report must be identical to the serial run, cell for cell, in
+        // canonical grid order (wall_secs is the only timing field)
+        let mut spec = tiny_spec();
+        spec.base.channel.rho = 0.7;
+        spec.channel_models = vec![FadingKind::Rayleigh, FadingKind::GaussMarkov];
+        let serial = run_channel_sweep(&spec).unwrap();
+        spec.base.workers = 4;
+        let parallel = run_channel_sweep(&spec).unwrap();
+        let (ca, cb) = (
+            serial.json.get("cells").unwrap().as_array().unwrap(),
+            parallel.json.get("cells").unwrap().as_array().unwrap(),
+        );
+        assert_eq!(ca.len(), cb.len());
+        assert_eq!(ca.len(), spec.grid_size());
+        for (x, y) in ca.iter().zip(cb.iter()) {
+            for key in [
+                "scheme",
+                "snr_db",
+                "aggregation",
+                "channel_model",
+                "policy",
+                "mean_mse_vs_ideal",
+                "lost_rounds",
+                "mean_participants",
+                "bits_per_round",
+                "channel_uses_per_round",
+            ] {
+                assert_eq!(x.get(key), y.get(key), "{key} differs serial vs parallel");
+            }
+        }
+    }
+
+    #[test]
+    fn channel_sweep_streams_jsonl_per_round() {
+        let mut spec = tiny_spec();
+        spec.schemes.truncate(1);
+        spec.snrs_db.truncate(1);
+        spec.aggregations = vec![Aggregation::OtaAnalog];
+        let path = std::env::temp_dir().join("mpota_sweep_stream_test.jsonl");
+        let _ = std::fs::remove_file(&path);
+        spec.stream = Some(path.clone());
+        let rep = run_channel_sweep(&spec).unwrap();
+        assert_eq!(rep.cells(), 1);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), spec.base.rounds, "one JSONL line per round");
+        for (i, line) in lines.iter().enumerate() {
+            let v = crate::json::parse(line).unwrap();
+            assert_eq!(v.get("round").unwrap().as_usize().unwrap(), i + 1);
+            let label = v.get("label").unwrap().as_str().unwrap().to_string();
+            assert!(label.contains("16,8,4"), "label {label}");
+        }
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -18,9 +18,15 @@
 //! Scope: this is the post-training half of `Coordinator::round()` — the
 //! client PJRT dispatch (`Runtime::train_step`) allocates literals inside
 //! the runtime and is explicitly outside the arena contract (and cannot
-//! run without artifacts anyway).  `threads = 1` (the steady-state
-//! default): spawning scoped worker threads allocates their stacks, which
-//! is the documented cost of opting into `threads > 1`.
+//! run without artifacts anyway).
+//!
+//! PARALLEL phases: since the kernels moved onto the persistent
+//! [`mpota::exec`] pool, the `threads > 1` aggregation path and the
+//! `workers > 1` client-partition path are ALSO zero-alloc in steady
+//! state — pool workers spawn once during warmup and park between jobs;
+//! a dispatch installs a stack-allocated job descriptor and wakes them.
+//! Phases 2 and 3 pin exactly that (the counting allocator is
+//! process-global, so allocations on pool worker threads count too).
 //!
 //! This file intentionally contains a single #[test]: the counter is
 //! process-global and other tests running in parallel would pollute it.
@@ -255,6 +261,78 @@ fn steady_state_round_path_is_allocation_free() {
         after - before,
         0,
         "steady-state round path allocated {} times through the trait seams",
+        after - before
+    );
+
+    // ---- phase 2: threads=4 aggregation through the persistent pool ----
+    // superposition chunks the element axis (n=10k → 2 chunks) and the
+    // noise fill chunks 2n draws (→ 4 chunks); both dispatch onto the
+    // exec pool.  Warmup spawns+parks the workers and grows the scratch;
+    // steady state must then allocate NOTHING — on any thread.
+    let mut analog4 = Session::new(
+        Box::new(RayleighPilot::new(ChannelConfig::default())),
+        Box::new(AnalogOta),
+        root.stream("channel-p4"),
+        root.stream("noise-p4"),
+        4,
+    );
+    for t in 1..=2 {
+        let s = analog4.aggregate(t, &plane, &precisions);
+        std::hint::black_box(s.participants);
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for t in 3..=8 {
+        let s = analog4.aggregate(t, &plane, &precisions);
+        std::hint::black_box(s.participants);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state threads=4 pooled aggregation allocated {} times",
+        after - before
+    );
+
+    // ---- phase 3: workers=4 client partition writing disjoint rows ----
+    // the coordinator's client-phase shape without PJRT: four pool
+    // workers each fused-quantize their contiguous rows of the plane
+    // (the quantize/modulate half of local_round_into)
+    let mut wplane = PayloadPlane::new();
+    wplane.reset(8, n);
+    let levels = [Precision::of(16), Precision::of(8), Precision::of(4)];
+    let theta_ref: &[f32] = &theta;
+    let layout_ref = &layout;
+    let run_partition = |wplane: &mut PayloadPlane| {
+        let rows = wplane.k();
+        mpota::kernels::par::par_row_partition_mut(
+            4,
+            rows,
+            wplane.as_mut_slice(),
+            |r0, chunk| {
+                for (i, row) in chunk.chunks_mut(n).enumerate() {
+                    quant::fake_quant_layout_into(
+                        row,
+                        theta_ref,
+                        layout_ref,
+                        levels[(r0 + i) % 3],
+                        Rounding::Nearest,
+                        1,
+                    );
+                }
+            },
+        );
+    };
+    run_partition(&mut wplane);
+    run_partition(&mut wplane);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..6 {
+        run_partition(&mut wplane);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state workers=4 client partition allocated {} times",
         after - before
     );
 }
