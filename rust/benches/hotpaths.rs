@@ -24,6 +24,7 @@
 use std::time::Instant;
 
 use mpota::channel::{ChannelConfig, RoundChannel};
+use mpota::fl::Selection;
 use mpota::json::Value;
 use mpota::kernels::{par, PayloadPlane};
 use mpota::ota::{self, analog::OtaScratch};
@@ -341,6 +342,96 @@ fn main() {
         })
     });
 
+    // --- massive-fleet sharded round ---------------------------------------
+    // N = 1M clients, K = 64 selected, 4096-element payloads.  The seed
+    // path materialized a 0..N permutation buffer per round (dense
+    // partial Fisher-Yates) and the full K×n plane, aggregated one-shot;
+    // the fleet path samples K with Floyd's algorithm (O(K) state) and
+    // streams 16-row shards through the persistent air accumulator.
+    // Results are bit-identical by the shard-invariance contract; the
+    // speedup is the removed O(N) per-round selection work (and the K×n
+    // plane shrinking to shard×n is the memory win).
+    let (fleet_dense, fleet_sharded) = {
+        let fleet = 1_000_000usize;
+        let ksel = 64usize;
+        let nn = 4096usize;
+        let shard = 16usize;
+        let fcfg = ChannelConfig::default();
+        let mut fch_rng = Rng::seed_from(21);
+        let fround = RoundChannel::draw(&fcfg, ksel, &mut fch_rng);
+        let fbytes = ksel * nn * 4;
+        let mut dense_sel: Vec<usize> = Vec::new();
+        let mut fplane = PayloadPlane::zeros(ksel, nn);
+        let mut fscratch = OtaScratch::new();
+        let dense = res.bench(
+            "fleet round dense-select unsharded (N=1M K=64)",
+            fbytes,
+            || {
+                // seed-era UniformK: full 0..N permutation scratch
+                let mut srng = Rng::seed_from(55);
+                dense_sel.clear();
+                dense_sel.extend(0..fleet);
+                for i in 0..ksel {
+                    let j = i + srng.below(fleet - i);
+                    dense_sel.swap(i, j);
+                }
+                dense_sel.truncate(ksel);
+                dense_sel.sort_unstable();
+                // whole-round K×n plane, aggregated one-shot
+                let mut prng = Rng::seed_from(13);
+                for r in 0..ksel {
+                    prng.fill_normal(fplane.row_mut(r), 0.0, 1.0);
+                }
+                let mut noise_rng = Rng::seed_from(7);
+                let stats = ota::analog::aggregate_plane_into(
+                    &fplane,
+                    &fround,
+                    &mut noise_rng,
+                    &mut fscratch,
+                    1,
+                );
+                std::hint::black_box((&dense_sel, stats.participants));
+            },
+        );
+        let mut sel: Vec<usize> = Vec::new();
+        let mut splane = PayloadPlane::zeros(shard, nn);
+        let sharded = res.bench(
+            "fleet round sampled sharded s=16 (N=1M K=64)",
+            fbytes,
+            || {
+                let mut srng = Rng::seed_from(55);
+                Selection::SampledK(ksel).select_into(fleet, 1, &mut srng, &mut sel);
+                let mut prng = Rng::seed_from(13);
+                let mut noise_rng = Rng::seed_from(7);
+                ota::analog::begin_plane_into(nn, &mut fscratch);
+                let mut lo = 0usize;
+                while lo < ksel {
+                    let hi = (lo + shard).min(ksel);
+                    splane.reset(hi - lo, nn);
+                    for r in 0..(hi - lo) {
+                        prng.fill_normal(splane.row_mut(r), 0.0, 1.0);
+                    }
+                    ota::analog::accumulate_plane_into(
+                        &splane,
+                        lo,
+                        &fround,
+                        &mut fscratch,
+                        1,
+                    );
+                    lo = hi;
+                }
+                let stats = ota::analog::finalize_plane_into(
+                    &fround,
+                    &mut noise_rng,
+                    &mut fscratch,
+                    1,
+                );
+                std::hint::black_box((&sel, stats.participants));
+            },
+        );
+        (dense, sharded)
+    };
+
     // --- PJRT dispatch (needs artifacts + the pjrt feature) ----------------
     let dir = std::path::PathBuf::from("artifacts");
     if cfg!(feature = "pjrt") && dir.join("manifest.json").exists() {
@@ -399,6 +490,7 @@ fn main() {
     }
     speedup(&mut speedups, "fedavg_mean_plane", mean_scalar, mean_fused);
     speedup(&mut speedups, "pool_dispatch_vs_spawn", spawn_lat, pool_lat);
+    speedup(&mut speedups, "fleet_scaling_k1000000", fleet_dense, fleet_sharded);
     if let Some(t) = cp_wn {
         let cp_workers = ncpu.min(k);
         speedup(

@@ -20,6 +20,15 @@
 //! with the fixed amplitude scale `a_k = sqrt(G_k)` from here and the
 //! unit-power small-scale Rayleigh draw `g_k(t)` from
 //! [`crate::channel::fading`].
+//!
+//! Fleet scaling: the site table is built LAZILY on the first draw and
+//! sized to the round's PARTICIPANT SLOTS (K), never the fleet (N) — a
+//! million-client run with `clients_per_round = 64` places exactly 64
+//! sites.  Under partial participation the persistent asymmetry therefore
+//! attaches to the slot, modelling a fixed set of K occupied positions
+//! whose occupants are re-selected each round; state stays O(K) by
+//! construction (the [`crate::sim::ChannelModel`] fleet-scaling
+//! contract).
 
 use crate::rng::Rng;
 

@@ -62,6 +62,53 @@ impl std::fmt::Display for PolicyKind {
     }
 }
 
+/// How the K participants are drawn from the N-client fleet each round
+/// (the config-file name for the [`crate::fl::Selection`] variants).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectionKind {
+    /// The historical default: everyone when `clients_per_round ==
+    /// clients`, else uniform-without-replacement (partial Fisher-Yates).
+    Auto,
+    /// Uniform without replacement via partial Fisher-Yates (the
+    /// historical RNG draw order; O(K) scratch since the sparse rewrite).
+    Uniform,
+    /// Uniform without replacement via Floyd's sampling — O(K) draws and
+    /// O(K) state, the massive-fleet selector.
+    Sampled,
+    /// Deterministic rotation through client blocks.
+    RoundRobin,
+}
+
+impl std::str::FromStr for SelectionKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(SelectionKind::Auto),
+            "uniform" | "fisher-yates" | "fisher_yates" => Ok(SelectionKind::Uniform),
+            "sampled" | "floyd" => Ok(SelectionKind::Sampled),
+            "round-robin" | "round_robin" | "rotate" => Ok(SelectionKind::RoundRobin),
+            other => bail!(
+                "unknown selection '{other}' (auto|uniform|sampled|round-robin)"
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for SelectionKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}",
+            match self {
+                SelectionKind::Auto => "auto",
+                SelectionKind::Uniform => "uniform",
+                SelectionKind::Sampled => "sampled",
+                SelectionKind::RoundRobin => "round-robin",
+            }
+        )
+    }
+}
+
 /// What clients put on the air each round.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Transmit {
@@ -143,6 +190,18 @@ pub struct RunConfig {
     pub clients: usize,
     /// Clients selected per round K (paper: all 15).
     pub clients_per_round: usize,
+    /// How the K participants are drawn from the fleet (`Auto` reproduces
+    /// the historical behavior; `Sampled` is the O(K) massive-fleet
+    /// selector).
+    pub selection: SelectionKind,
+    /// Streaming-shard size for the round pipeline: the round's K
+    /// selected clients are processed `shard_size` at a time through a
+    /// small reusable payload plane that is fused-superposed into a
+    /// persistent air accumulator, making round memory O(shard_size·N +
+    /// K) instead of O(K·N).  `0` (the default) means one shard — the
+    /// historical whole-round plane.  Trajectories are bit-identical per
+    /// seed for EVERY shard size (`rust/tests/shard_invariance.rs`).
+    pub shard_size: usize,
     /// Communication rounds T (paper: 100).
     pub rounds: usize,
     /// Precision scheme (paper §IV-A2) — the static assignment used by
@@ -195,6 +254,8 @@ impl Default for RunConfig {
             variant: "base".to_string(),
             clients: 15,
             clients_per_round: 15,
+            selection: SelectionKind::Auto,
+            shard_size: 0,
             rounds: 100,
             scheme: Scheme::parse("16,8,4").expect("static scheme"),
             policy: PolicyKind::Static,
@@ -218,6 +279,20 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
+    /// Effective streaming-shard length for a round of `kk` participants:
+    /// `shard_size == 0` means one whole-round shard, anything else is
+    /// clamped to `[1, kk]`.  The single source of truth for the clamp —
+    /// the coordinator round loop and the channel-only sweep cells both
+    /// use it, so the shard-invariance contract cannot drift between
+    /// them.
+    pub fn shard_len(&self, kk: usize) -> usize {
+        if self.shard_size == 0 {
+            kk
+        } else {
+            self.shard_size.min(kk).max(1)
+        }
+    }
+
     /// Validate cross-field invariants.
     pub fn validate(&self) -> Result<()> {
         if self.clients == 0 || self.rounds == 0 {
@@ -275,6 +350,8 @@ impl RunConfig {
                 "variant" => self.variant = val.as_str()?.to_string(),
                 "clients" => self.clients = val.as_usize()?,
                 "clients_per_round" => self.clients_per_round = val.as_usize()?,
+                "selection" => self.selection = val.as_str()?.parse()?,
+                "shard_size" => self.shard_size = val.as_usize()?,
                 "rounds" => self.rounds = val.as_usize()?,
                 "scheme" => self.scheme = Scheme::parse(val.as_str()?)?,
                 "policy" => self.policy = val.as_str()?.parse()?,
@@ -331,6 +408,8 @@ impl RunConfig {
         o.set("variant", Value::Str(self.variant.clone()));
         o.set("clients", Value::Num(self.clients as f64));
         o.set("clients_per_round", Value::Num(self.clients_per_round as f64));
+        o.set("selection", Value::Str(self.selection.to_string()));
+        o.set("shard_size", Value::Num(self.shard_size as f64));
         o.set("rounds", Value::Num(self.rounds as f64));
         o.set("scheme", Value::Str(self.scheme.to_string()));
         o.set("policy", Value::Str(self.policy.to_string()));
@@ -442,6 +521,8 @@ mod tests {
         c.variant = "wide".into();
         c.clients = 30;
         c.clients_per_round = 10;
+        c.selection = SelectionKind::Sampled;
+        c.shard_size = 4;
         c.rounds = 7;
         c.scheme = Scheme::parse("24,12,6").unwrap();
         c.policy = PolicyKind::SnrAdaptive;
@@ -577,6 +658,52 @@ mod tests {
         assert_eq!(c.plateau_patience, 2);
         assert_eq!(c.energy_budget_j, 1.25);
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn selection_and_shard_size_parse_and_roundtrip() {
+        assert_eq!("auto".parse::<SelectionKind>().unwrap(), SelectionKind::Auto);
+        assert_eq!(
+            "uniform".parse::<SelectionKind>().unwrap(),
+            SelectionKind::Uniform
+        );
+        assert_eq!(
+            "sampled".parse::<SelectionKind>().unwrap(),
+            SelectionKind::Sampled
+        );
+        assert_eq!("floyd".parse::<SelectionKind>().unwrap(), SelectionKind::Sampled);
+        assert_eq!(
+            "round-robin".parse::<SelectionKind>().unwrap(),
+            SelectionKind::RoundRobin
+        );
+        assert!("lottery".parse::<SelectionKind>().is_err());
+
+        let mut c = RunConfig::default();
+        c.apply_json(
+            &json::parse(r#"{"selection": "sampled", "shard_size": 16}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.selection, SelectionKind::Sampled);
+        assert_eq!(c.shard_size, 16);
+        c.validate().unwrap();
+        // shard_size 0 (one shard) and any positive value are both valid
+        c.shard_size = 0;
+        c.validate().unwrap();
+        c.shard_size = 10_000;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn shard_len_clamps_to_the_round() {
+        let mut c = RunConfig::default();
+        c.shard_size = 0; // one whole-round shard
+        assert_eq!(c.shard_len(15), 15);
+        c.shard_size = 4;
+        assert_eq!(c.shard_len(15), 4);
+        c.shard_size = 99; // larger than the round: clamp to K
+        assert_eq!(c.shard_len(15), 15);
+        c.shard_size = 4; // smaller round than the shard
+        assert_eq!(c.shard_len(3), 3);
     }
 
     #[test]

@@ -17,7 +17,15 @@
 //! config-selected defaults, which reproduce the pre-redesign enum
 //! dispatch bit-for-bit per seed (`rust/tests/sim.rs`).
 //!
-//! Scheduling: with `RunConfig::workers > 1` the client phase (step 2 —
+//! Scheduling: the round streams its K selected clients through
+//! fixed-size SHARDS (`RunConfig::shard_size`; `0` = one whole-round
+//! shard, the historical path): each shard fills a small reusable
+//! [`PayloadPlane`] and is immediately fused-superposed into the
+//! session's persistent air accumulator before the next shard reuses the
+//! buffers — round memory is O(shard_size·N + K) instead of O(K·N), and
+//! the trajectory is bit-identical per seed for EVERY `{shard_size,
+//! threads, workers}` combination (`rust/tests/shard_invariance.rs`).
+//! With `RunConfig::workers > 1` each shard's client phase (step 2 —
 //! re-quantize, local SGD orchestration, payload diff into the plane
 //! row) is partitioned across the persistent [`crate::exec`] pool, each
 //! worker owning a contiguous slot range and its disjoint plane rows.
@@ -65,9 +73,13 @@ use client::LocalStats;
 pub struct RoundScratch {
     /// Participant indices for the round.
     pub(crate) selected: Vec<usize>,
-    /// K×N decimal payload rows (the superposition input).
+    /// shard×N decimal payload rows (the superposition input).  With
+    /// `RunConfig::shard_size == 0` this is the whole round's K×N plane;
+    /// otherwise it holds one shard at a time and is recycled shard to
+    /// shard — the O(shard·N) round-memory contract.
     pub(crate) plane: PayloadPlane,
-    /// Per-participant precision levels (aligned with plane rows).
+    /// Per-participant precision levels (aligned with ROUND slots, all K
+    /// of them — shards index it at `lo..hi`).
     pub(crate) precisions: Vec<Precision>,
     /// Per-client precision assignment for the full fleet (policy output).
     pub(crate) assigned: Vec<Precision>,
@@ -232,11 +244,11 @@ impl Coordinator {
             None => runtime.init_params(&cfg.variant)?,
         };
 
-        let selection = if cfg.clients_per_round == cfg.clients {
-            Selection::All
-        } else {
-            Selection::UniformK(cfg.clients_per_round)
-        };
+        // `Auto` reproduces the historical mapping (everyone at K == N,
+        // else uniform Fisher-Yates); `Sampled` is the O(K) massive-fleet
+        // selector (Floyd's algorithm).
+        let selection =
+            Selection::from_config(cfg.selection, cfg.clients, cfg.clients_per_round);
 
         let aggregator = parts
             .aggregator
@@ -328,11 +340,61 @@ impl Coordinator {
             &mut self.scratch.selected,
         );
         let kk = self.scratch.selected.len();
+        let n = self.theta.len();
 
-        // Steps 1-2: broadcast + local training per selected client, each
-        // payload fused-quantized straight into its payload-plane row —
-        // partitioned across the exec pool when `cfg.workers > 1`.
-        self.client_phase(kk, threads)?;
+        // Per-participant precisions and stats slots (aligned with the
+        // round's slot order, shared by every shard of the round).
+        self.scratch.precisions.clear();
+        for slot in 0..kk {
+            let k = self.scratch.selected[slot];
+            self.scratch.precisions.push(self.clients[k].precision);
+        }
+        self.scratch.stats.clear();
+        self.scratch.stats.resize(kk, LocalStats::default());
+
+        // Steps 1-4, streamed in shards: each shard of selected clients
+        // trains (partitioned across the exec pool when `cfg.workers >
+        // 1`) into a small reusable payload plane which is immediately
+        // fused-superposed into the session's persistent air accumulator
+        // — round memory is O(shard_size·N + K), not O(K·N), and the
+        // trajectory is bit-identical for EVERY shard size
+        // (`rust/tests/shard_invariance.rs`).  `shard_size == 0` runs one
+        // whole-round shard (the historical path).
+        let shard_len = self.cfg.shard_len(kk);
+        let stats = if self.session.supports_streaming() {
+            // channel draw happens up front (same per-stream RNG
+            // consumption as the post-training draw: the streams are
+            // independent), so every shard superposes through its slots'
+            // gains as soon as its clients finish
+            self.session.begin_aggregate(t, kk, n);
+            let mut lo = 0usize;
+            while lo < kk {
+                let hi = (lo + shard_len).min(kk);
+                self.client_phase(lo, hi, threads)?;
+                self.session.accumulate_shard(
+                    &self.scratch.plane,
+                    lo,
+                    &self.scratch.precisions[lo..hi],
+                );
+                lo = hi;
+            }
+            self.session.finalize_aggregate(t, &self.scratch.precisions)
+        } else {
+            // custom aggregator without the streaming protocol: the
+            // historical whole-plane round (and an explicit error rather
+            // than a silently-ignored shard_size)
+            anyhow::ensure!(
+                shard_len >= kk,
+                "aggregator '{}' does not support streaming; remove \
+                 shard_size (currently {}) or use a streaming aggregator",
+                self.session.aggregator_name(),
+                self.cfg.shard_size
+            );
+            self.client_phase(0, kk, threads)?;
+            self.session
+                .aggregate(t, &self.scratch.plane, &self.scratch.precisions)
+        };
+
         let mut train_loss = 0.0f64;
         let mut train_acc = 0.0f64;
         for s in &self.scratch.stats {
@@ -341,11 +403,6 @@ impl Coordinator {
         }
         train_loss /= kk as f64;
         train_acc /= kk as f64;
-
-        // Steps 3-4: channel draw + aggregation through the trait seams.
-        let stats =
-            self.session
-                .aggregate(t, &self.scratch.plane, &self.scratch.precisions);
         let participants = stats.participants;
         if participants > 0 {
             let agg = self.session.result();
@@ -384,29 +441,26 @@ impl Coordinator {
         Ok(rec)
     }
 
-    /// Alg. 1 steps 1-2 for every selected client: re-quantize the
-    /// broadcast model, run local SGD, write the payload into the
-    /// client's plane row, and record per-slot [`LocalStats`].
+    /// Alg. 1 steps 1-2 for ONE SHARD of selected clients — round slots
+    /// `lo..hi`: re-quantize the broadcast model, run local SGD, write
+    /// each payload into its shard-local plane row (`slot - lo`), and
+    /// record per-slot [`LocalStats`] at the GLOBAL slot index.  The
+    /// plane is reset to the shard's shape (capacity reused, so a
+    /// steady-state round stays allocation-free at any shard size).
     ///
-    /// With `cfg.workers > 1` (and an enabled exec pool) the selected
+    /// With `cfg.workers > 1` (and an enabled exec pool) the shard's
     /// slots are partitioned into contiguous ranges across pool workers;
     /// each worker mutates only its own clients, its disjoint plane rows
     /// and its per-slot stats entries.  Per-client RNG streams and
     /// client-owned scratch make the result bit-identical to the
-    /// sequential pass for every worker count.  The PJRT runtime is not
-    /// `Send`, so its train steps funnel back to this thread through
-    /// [`exec::TrainService`]; an injected `Sync` backend is called from
-    /// the workers directly.
-    fn client_phase(&mut self, kk: usize, threads: usize) -> Result<()> {
+    /// sequential pass for every worker count AND every shard partition.
+    /// The PJRT runtime is not `Send`, so its train steps funnel back to
+    /// this thread through [`exec::TrainService`]; an injected `Sync`
+    /// backend is called from the workers directly.
+    fn client_phase(&mut self, lo: usize, hi: usize, threads: usize) -> Result<()> {
         let n = self.theta.len();
-        self.scratch.plane.reset(kk, n);
-        self.scratch.precisions.clear();
-        for slot in 0..kk {
-            let k = self.scratch.selected[slot];
-            self.scratch.precisions.push(self.clients[k].precision);
-        }
-        self.scratch.stats.clear();
-        self.scratch.stats.resize(kk, LocalStats::default());
+        let count = hi - lo;
+        self.scratch.plane.reset(count, n);
         let transmit_weights =
             matches!(self.cfg.transmit, crate::config::Transmit::Weights);
 
@@ -414,11 +468,12 @@ impl Coordinator {
         let workers = if pool.max_workers() == 0 || exec::must_inline() {
             1 // pool disabled (or we are already on a pool thread): serial
         } else {
-            self.cfg.workers.min(kk).max(1)
+            self.cfg.workers.min(count).max(1)
         };
 
         if workers <= 1 {
-            for slot in 0..kk {
+            for r in 0..count {
+                let slot = lo + r;
                 let k = self.scratch.selected[slot];
                 let c = &mut self.clients[k];
                 let stats = match &self.backend {
@@ -432,7 +487,7 @@ impl Coordinator {
                         transmit_weights,
                         &self.layout,
                         threads,
-                        self.scratch.plane.row_mut(slot),
+                        self.scratch.plane.row_mut(r),
                     )?,
                     None => c.local_round_into(
                         &exec::RuntimeStep {
@@ -447,7 +502,7 @@ impl Coordinator {
                         transmit_weights,
                         &self.layout,
                         threads,
-                        self.scratch.plane.row_mut(slot),
+                        self.scratch.plane.row_mut(r),
                     )?,
                 };
                 self.scratch.stats[slot] = stats;
@@ -456,16 +511,18 @@ impl Coordinator {
         }
 
         let RoundScratch { selected, plane, stats, errors, .. } = &mut self.scratch;
-        let selected: &[usize] = selected;
+        // shard-local views: worker slot indices run 0..count over these
+        let selected: &[usize] = &selected[lo..hi];
+        let stats: &mut [LocalStats] = &mut stats[lo..hi];
         errors.clear();
         errors.resize_with(workers, || None);
         let plane_ptr = exec::SendPtr::from_mut(plane.as_mut_slice());
-        let stats_ptr = exec::SendPtr::from_mut(&mut stats[..]);
+        let stats_ptr = exec::SendPtr::from_mut(stats);
         let errs_ptr = exec::SendPtr::from_mut(&mut errors[..]);
         let clients = exec::DisjointMut::new(&mut self.clients);
         let env = ClientPhaseEnv {
             workers,
-            kk,
+            kk: count,
             n,
             selected,
             data: &self.train_data,

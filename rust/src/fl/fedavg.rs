@@ -65,7 +65,28 @@ pub fn mean_plane_into(
         return;
     }
     let f = 1.0f32 / k as f32;
-    crate::kernels::par::par_chunks_mut(threads, out.as_mut_slice(), |off, chunk| {
+    mean_plane_accumulate(plane, f, out.as_mut_slice(), threads);
+}
+
+/// Add `f · row` for every row of `plane` into `out` — NO reset, NO final
+/// scale.  This is the streaming-shard kernel behind [`mean_plane_into`]:
+/// accumulating a round's shards in slot order with `f = 1/K_total` over a
+/// pre-zeroed `out` reproduces the one-shot mean bit-for-bit for every
+/// shard partition, because per element the same f32 contributions arrive
+/// in the same ascending client order and the chunk grid depends only on
+/// `out.len()` and `threads`.
+pub fn mean_plane_accumulate(
+    plane: &crate::kernels::PayloadPlane,
+    f: f32,
+    out: &mut [f32],
+    threads: usize,
+) {
+    let k = plane.k();
+    if k == 0 {
+        return;
+    }
+    assert_eq!(plane.n(), out.len(), "accumulator length mismatch");
+    crate::kernels::par::par_chunks_mut(threads, out, |off, chunk| {
         for ki in 0..k {
             let row = &plane.row(ki)[off..off + chunk.len()];
             for (o, &x) in chunk.iter_mut().zip(row.iter()) {
@@ -161,6 +182,41 @@ mod tests {
     #[should_panic(expected = "weights must sum positive")]
     fn zero_weights_panic() {
         let _ = fedavg(&[vec![1.0]], &[0.0]);
+    }
+
+    #[test]
+    fn sharded_mean_accumulation_matches_one_shot_bitwise() {
+        // splitting the rows into arbitrary shard partitions and
+        // accumulating in slot order must reproduce the one-shot mean
+        // bit-for-bit (the streaming round's ideal-reference contract)
+        let mut rng = crate::rng::Rng::seed_from(61);
+        let k = 9usize;
+        let n = 20_000usize;
+        let rows: Vec<Vec<f32>> = (0..k)
+            .map(|_| {
+                let mut v = vec![0.0f32; n];
+                rng.fill_normal(&mut v, 0.0, 1.5);
+                v
+            })
+            .collect();
+        let plane = crate::kernels::PayloadPlane::from_rows(&rows);
+        for threads in [1usize, 4] {
+            let mut want = Vec::new();
+            mean_plane_into(&plane, &mut want, threads);
+            for shard in [1usize, 2, 4, 9] {
+                let f = 1.0f32 / k as f32;
+                let mut acc = vec![0.0f32; n];
+                let mut lo = 0usize;
+                while lo < k {
+                    let hi = (lo + shard).min(k);
+                    let shard_plane =
+                        crate::kernels::PayloadPlane::from_rows(&rows[lo..hi]);
+                    mean_plane_accumulate(&shard_plane, f, &mut acc, threads);
+                    lo = hi;
+                }
+                assert_eq!(acc, want, "shard={shard} threads={threads}");
+            }
+        }
     }
 
     #[test]

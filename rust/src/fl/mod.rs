@@ -7,6 +7,8 @@ pub mod fedavg;
 pub mod scheme;
 pub mod selection;
 
-pub use fedavg::{fedavg, fedavg_plane_into, mean, mean_plane_into};
+pub use fedavg::{
+    fedavg, fedavg_plane_into, mean, mean_plane_accumulate, mean_plane_into,
+};
 pub use scheme::Scheme;
 pub use selection::Selection;

@@ -103,6 +103,31 @@ impl Scheme {
         Ok(())
     }
 
+    /// Expand the assignment at the SELECTED client indices only — the
+    /// O(K) massive-fleet form: client `k`'s group is `k / (clients /
+    /// groups)`, identical to the full [`client_precisions`] expansion at
+    /// index `k`, without materializing the fleet.
+    ///
+    /// [`client_precisions`]: Self::client_precisions
+    pub fn selected_precisions_into(
+        &self,
+        clients: usize,
+        selected: &[usize],
+        out: &mut Vec<Precision>,
+    ) -> Result<()> {
+        let g = self.groups.len();
+        if clients % g != 0 {
+            bail!("{clients} clients do not divide into {g} equal groups");
+        }
+        let per = clients / g;
+        out.clear();
+        for &k in selected {
+            debug_assert!(k < clients, "client index {k} out of the {clients}-fleet");
+            out.push(self.groups[k / per]);
+        }
+        Ok(())
+    }
+
     /// Distinct levels, high to low.
     pub fn distinct_levels(&self) -> Vec<Precision> {
         let mut ls = self.groups.clone();
@@ -181,6 +206,23 @@ mod tests {
         let s = Scheme::parse("16,8,4").unwrap();
         assert!(s.client_precisions(16).is_err());
         assert!(s.client_precisions(3).is_ok());
+    }
+
+    #[test]
+    fn selected_expansion_matches_full_expansion() {
+        let s = Scheme::parse("16,8,4").unwrap();
+        let full = s.client_precisions(15).unwrap();
+        let mut out = Vec::new();
+        // every client, a sparse subset, and an unsorted subset
+        let all: Vec<usize> = (0..15).collect();
+        s.selected_precisions_into(15, &all, &mut out).unwrap();
+        assert_eq!(out, full);
+        let subset = [0usize, 4, 5, 9, 10, 14];
+        s.selected_precisions_into(15, &subset, &mut out).unwrap();
+        let want: Vec<_> = subset.iter().map(|&k| full[k]).collect();
+        assert_eq!(out, want);
+        // divisibility is still enforced
+        assert!(s.selected_precisions_into(16, &subset, &mut out).is_err());
     }
 
     #[test]

@@ -1,5 +1,12 @@
 //! Per-round client selection (paper §II-A: "N clients, at each
 //! communication round, K of them are selected").
+//!
+//! Massive-fleet contract: every variant selects K from N using O(K)
+//! scratch — `UniformK` runs a SPARSE partial Fisher-Yates (identical RNG
+//! draws and output to the historical dense permutation, so existing
+//! per-seed pins hold), and `SampledK` uses Floyd's sampling algorithm
+//! (K draws, K state) so selecting 64 participants from a 10M-client
+//! fleet touches 10M-independent memory.
 
 use crate::rng::Rng;
 
@@ -8,13 +15,43 @@ use crate::rng::Rng;
 pub enum Selection {
     /// All N clients every round (the paper's evaluation setting).
     All,
-    /// Uniformly random K without replacement.
+    /// Uniformly random K without replacement (partial Fisher-Yates; the
+    /// historical draw order, kept RNG-compatible for existing pins).
     UniformK(usize),
+    /// Uniformly random K without replacement via Floyd's sampling —
+    /// O(K) memory AND O(K) RNG draws, the massive-fleet selector.  The
+    /// draw sequence differs from [`UniformK`](Selection::UniformK) (both
+    /// are uniform; trajectories are pinned per selector).
+    SampledK(usize),
     /// Deterministic rotation: rounds cycle through client blocks.
     RoundRobinK(usize),
 }
 
 impl Selection {
+    /// The selector a [`crate::config::RunConfig`] names: `Auto`
+    /// reproduces the historical coordinator behavior (everyone when
+    /// `K == N`, else `UniformK`); the explicit kinds map literally.
+    pub fn from_config(
+        kind: crate::config::SelectionKind,
+        clients: usize,
+        k: usize,
+    ) -> Selection {
+        use crate::config::SelectionKind as SK;
+        let k = k.min(clients);
+        match kind {
+            SK::Auto => {
+                if k == clients {
+                    Selection::All
+                } else {
+                    Selection::UniformK(k)
+                }
+            }
+            SK::Uniform => Selection::UniformK(k),
+            SK::Sampled => Selection::SampledK(k),
+            SK::RoundRobin => Selection::RoundRobinK(k),
+        }
+    }
+
     /// Client indices participating in `round` (1-based round index).
     pub fn select(&self, clients: usize, round: usize, rng: &mut Rng) -> Vec<usize> {
         let mut out = Vec::new();
@@ -25,6 +62,10 @@ impl Selection {
     /// Fill `out` with the round's participant indices, reusing its
     /// capacity (the zero-alloc round-loop form).  RNG consumption and
     /// results are identical to [`select`](Selection::select).
+    ///
+    /// Scratch bound: `All` grows `out` to N; every K-selector touches
+    /// only O(K) entries of `out` (capacity included), so fleet size
+    /// never enters the round's memory footprint.
     pub fn select_into(
         &self,
         clients: usize,
@@ -37,14 +78,65 @@ impl Selection {
             Selection::All => out.extend(0..clients),
             Selection::UniformK(k) => {
                 let k = k.min(clients);
-                // partial Fisher-Yates, draw-for-draw the same as
-                // Rng::choose_k, over the reused buffer
-                out.extend(0..clients);
+                // SPARSE partial Fisher-Yates: draw-for-draw and
+                // output-identical to the historical dense
+                // `extend(0..N); swap(i, j)` implementation (pinned by
+                // `select_into_matches_legacy_choose_k_draws`), but
+                // tracking only the O(k) touched positions.  Positions
+                // < k live in `out[..k]`; a displaced value at a
+                // position >= k is kept as a (position, value) pair
+                // appended after index k in the same buffer, so the
+                // buffer never grows past 3k entries even for
+                // multi-million-client fleets.
+                out.extend(0..k);
                 for i in 0..k {
                     let j = i + rng.below(clients - i);
-                    out.swap(i, j);
+                    if j < k {
+                        out.swap(i, j);
+                    } else {
+                        // locate the displaced-pair entry for position j
+                        let mut pair = None;
+                        let mut idx = k;
+                        while idx < out.len() {
+                            if out[idx] == j {
+                                pair = Some(idx);
+                                break;
+                            }
+                            idx += 2;
+                        }
+                        match pair {
+                            Some(idx) => {
+                                let vj = out[idx + 1];
+                                out[idx + 1] = out[i];
+                                out[i] = vj;
+                            }
+                            None => {
+                                // position j still holds its identity
+                                let vi = out[i];
+                                out[i] = j;
+                                out.push(j);
+                                out.push(vi);
+                            }
+                        }
+                    }
                 }
                 out.truncate(k);
+                out.sort_unstable();
+            }
+            Selection::SampledK(k) => {
+                let k = k.min(clients);
+                // Floyd's sampling: for j in N-k..N draw t in [0, j];
+                // insert t unless already chosen, else insert j.  Each
+                // k-subset has probability 1/C(N, k); exactly k RNG
+                // draws and k entries of state.
+                for j in (clients - k)..clients {
+                    let t = rng.below(j + 1);
+                    if out.contains(&t) {
+                        out.push(j);
+                    } else {
+                        out.push(t);
+                    }
+                }
                 out.sort_unstable();
             }
             Selection::RoundRobinK(k) => {
@@ -59,6 +151,7 @@ impl Selection {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testing;
 
     #[test]
     fn all_selects_everyone() {
@@ -105,6 +198,7 @@ mod tests {
     fn k_clamped_to_n() {
         let mut rng = Rng::seed_from(5);
         assert_eq!(Selection::UniformK(99).select(4, 1, &mut rng).len(), 4);
+        assert_eq!(Selection::SampledK(99).select(4, 1, &mut rng).len(), 4);
     }
 
     #[test]
@@ -121,5 +215,112 @@ mod tests {
             assert_eq!(out, legacy, "round {round}");
         }
         assert_eq!(legacy_rng.next_u64(), new_rng.next_u64());
+    }
+
+    #[test]
+    fn sparse_uniform_k_matches_dense_at_every_shape() {
+        // the sparse Fisher-Yates must equal the dense reference for any
+        // (n, k), including k == n and repeated collisions
+        for (n, k, seed) in
+            [(15usize, 6usize, 7u64), (8, 8, 8), (100, 1, 9), (50, 49, 10), (2, 1, 11)]
+        {
+            let mut dense_rng = Rng::seed_from(seed);
+            let mut sparse_rng = Rng::seed_from(seed);
+            let mut out = Vec::new();
+            for round in 1..30 {
+                let mut dense = dense_rng.choose_k(n, k);
+                dense.sort_unstable();
+                Selection::UniformK(k).select_into(n, round, &mut sparse_rng, &mut out);
+                assert_eq!(out, dense, "n={n} k={k} round={round}");
+            }
+            assert_eq!(dense_rng.next_u64(), sparse_rng.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_k_scratch_stays_o_k_for_huge_fleets() {
+        // the dense implementation grew `out` to N; the sparse one must
+        // stay within 3k entries of capacity even at N = 10^7
+        let mut rng = Rng::seed_from(12);
+        let mut out = Vec::new();
+        for round in 1..5 {
+            Selection::UniformK(64).select_into(10_000_000, round, &mut rng, &mut out);
+            assert_eq!(out.len(), 64);
+            // the buffer holds at most 3k entries; amortized doubling
+            // growth can at most round that up to 4k — either way it is
+            // O(K), ten-thousand-fold below the dense O(N)
+            assert!(
+                out.capacity() <= 4 * 64 + 16,
+                "capacity {} exceeds the O(K) bound",
+                out.capacity()
+            );
+            assert!(out.windows(2).all(|w| w[0] < w[1]), "sorted, distinct");
+            assert!(out.iter().all(|&c| c < 10_000_000), "in range");
+        }
+    }
+
+    #[test]
+    fn property_sampled_k_without_replacement_and_in_range() {
+        // satellite pin: SampledK draws are distinct and in-range for N
+        // up to 10^7, across many (n, k, seed) shapes
+        testing::check(
+            "sampled-k-valid",
+            48,
+            |rng| {
+                let n = match rng.below(3) {
+                    0 => 1 + rng.below(100),
+                    1 => 1 + rng.below(100_000),
+                    _ => 10_000_000,
+                };
+                let k = 1 + rng.below(64.min(n));
+                let seed = rng.next_u64();
+                (n, k, seed)
+            },
+            |&(n, k, seed)| {
+                let mut rng = Rng::seed_from(seed);
+                let mut out = Vec::new();
+                for round in 1..4 {
+                    Selection::SampledK(k).select_into(n, round, &mut rng, &mut out);
+                    if out.len() != k {
+                        return false;
+                    }
+                    // sorted output: distinctness is adjacency
+                    if !out.windows(2).all(|w| w[0] < w[1]) {
+                        return false;
+                    }
+                    if !out.iter().all(|&c| c < n) {
+                        return false;
+                    }
+                    if out.capacity() > 4 * k + 16 {
+                        return false; // O(K) scratch contract
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn sampled_k_is_deterministic_and_seed_sensitive() {
+        let a = Selection::SampledK(5).select(1000, 1, &mut Rng::seed_from(77));
+        let b = Selection::SampledK(5).select(1000, 1, &mut Rng::seed_from(77));
+        let c = Selection::SampledK(5).select(1000, 1, &mut Rng::seed_from(78));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn from_config_maps_kinds() {
+        use crate::config::SelectionKind as SK;
+        assert_eq!(Selection::from_config(SK::Auto, 10, 10), Selection::All);
+        assert_eq!(Selection::from_config(SK::Auto, 10, 4), Selection::UniformK(4));
+        assert_eq!(Selection::from_config(SK::Uniform, 10, 4), Selection::UniformK(4));
+        assert_eq!(Selection::from_config(SK::Sampled, 10, 4), Selection::SampledK(4));
+        assert_eq!(
+            Selection::from_config(SK::RoundRobin, 10, 4),
+            Selection::RoundRobinK(4)
+        );
+        // K clamps to the fleet
+        assert_eq!(Selection::from_config(SK::Sampled, 3, 9), Selection::SampledK(3));
     }
 }

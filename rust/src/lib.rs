@@ -55,6 +55,14 @@
 //! [`exec::TrainService`] funnel; nested dispatches run inline, and the
 //! bit-identity contract holds for every `{threads, workers}` combination
 //! (`rust/tests/sim.rs`).
+//!
+//! Massive fleets stream: the round pipeline processes its K selected
+//! clients in `RunConfig::shard_size`-row payload shards folded into a
+//! persistent air accumulator (round memory O(shard·N + K), not O(K·N)),
+//! selection is O(K) for any fleet (sparse Fisher-Yates or Floyd's
+//! sampling via `RunConfig::selection`), and trajectories are
+//! bit-identical per seed at every shard size
+//! (`rust/tests/shard_invariance.rs`; README §"Fleet scaling").
 
 pub mod channel;
 pub mod cli;

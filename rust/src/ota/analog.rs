@@ -24,14 +24,24 @@ use crate::tensor;
 /// Reusable server-side buffers for the analog aggregation (one per run,
 /// owned by the coordinator's round scratch arena): the complex receive
 /// accumulators, the noise-free ideal, and the active-client gain list.
-/// After [`aggregate_plane_into`] returns, `y_re` holds the aggregated
-/// MEAN vector.
+/// After [`aggregate_plane_into`] (or [`finalize_plane_into`]) returns,
+/// `y_re` holds the aggregated MEAN vector.
+///
+/// The accumulators are N-sized (one air channel), NOT K-sized: a round
+/// streamed through [`begin_plane_into`] → [`accumulate_plane_into`] →
+/// [`finalize_plane_into`] only ever materializes one shard of payloads
+/// next to them, which is what makes O(shard·N) round memory possible for
+/// massive fleets.
 #[derive(Clone, Debug, Default)]
 pub struct OtaScratch {
     pub y_re: Vec<f32>,
     pub y_im: Vec<f32>,
     pub ideal: Vec<f32>,
+    /// The CURRENT shard's active (row, gain) list — shard-local row
+    /// indices, rebuilt per [`accumulate_plane_into`] call.
     pub active: Vec<(usize, C32)>,
+    /// Participants accumulated across shards since [`begin_plane_into`].
+    pub active_total: usize,
 }
 
 impl OtaScratch {
@@ -95,25 +105,56 @@ pub fn aggregate_plane_into(
         round.clients.len(),
         "one payload per client required"
     );
-    let n = plane.n();
+    begin_plane_into(plane.n(), scratch);
+    accumulate_plane_into(plane, 0, round, scratch, threads);
+    finalize_plane_into(round, rng, scratch, threads)
+}
+
+/// Start a STREAMED (sharded) analog aggregation round with N-element
+/// payloads: zero the air accumulators and the participant count.  Follow
+/// with any number of [`accumulate_plane_into`] calls over consecutive
+/// slot ranges and one [`finalize_plane_into`].  A single-shard stream is
+/// exactly [`aggregate_plane_into`] — the one-shot entry is implemented
+/// on these three functions, so the two paths share every instruction.
+pub fn begin_plane_into(n: usize, scratch: &mut OtaScratch) {
     scratch.reset(n);
+    scratch.active_total = 0;
+}
+
+/// Superpose ONE SHARD of payload rows through the channel gains of slots
+/// `slot0 .. slot0 + plane.k()` of the round realisation, adding onto the
+/// accumulated partial sums.
+///
+/// Bit-exactness across shard partitions: per element, every accumulator
+/// receives the f32 contributions in ascending global slot order no
+/// matter how the slots are cut into shards (the fused kernel sweeps the
+/// shard's rows in order, and shards arrive in order), so any
+/// `shard_size` reproduces the unsharded superposition bit-for-bit.
+pub fn accumulate_plane_into(
+    plane: &PayloadPlane,
+    slot0: usize,
+    round: &RoundChannel,
+    scratch: &mut OtaScratch,
+    threads: usize,
+) {
+    assert!(
+        slot0 + plane.k() <= round.clients.len(),
+        "shard slots {}..{} exceed the round's {} channel draws",
+        slot0,
+        slot0 + plane.k(),
+        round.clients.len()
+    );
     scratch.active.clear();
-    for (k, c) in round.clients.iter().enumerate() {
-        if let Some(g) = c.effective_gain {
-            scratch.active.push((k, g));
+    for r in 0..plane.k() {
+        if let Some(g) = round.clients[slot0 + r].effective_gain {
+            scratch.active.push((r, g));
         }
     }
-    let participants = scratch.active.len();
-    let mut stats = AggregateStats {
-        participants,
-        channel_uses: n as u64,
-        ..Default::default()
-    };
-    if participants == 0 {
-        return stats;
+    scratch.active_total += scratch.active.len();
+    if scratch.active.is_empty() {
+        return;
     }
-
-    // --- superposition: y = Σ_k g_k · x_k (fused complex accumulate) ----
+    // --- superposition: y += Σ_k g_k · x_k (fused complex accumulate) ---
     fused::superpose(
         plane,
         &scratch.active,
@@ -122,6 +163,29 @@ pub fn aggregate_plane_into(
         &mut scratch.ideal,
         threads,
     );
+}
+
+/// Finish a streamed analog aggregation: inject receiver noise calibrated
+/// to the ACCUMULATED signal power, demodulate, and scale to the
+/// participant mean.  On return `scratch.y_re` holds the aggregated MEAN
+/// vector (all-zeros with `participants == 0` when every slot was
+/// truncation-silenced — the "round lost" case).
+pub fn finalize_plane_into(
+    round: &RoundChannel,
+    rng: &mut Rng,
+    scratch: &mut OtaScratch,
+    threads: usize,
+) -> AggregateStats {
+    let n = scratch.y_re.len();
+    let participants = scratch.active_total;
+    let mut stats = AggregateStats {
+        participants,
+        channel_uses: n as u64,
+        ..Default::default()
+    };
+    if participants == 0 {
+        return stats;
+    }
 
     // --- receiver noise calibrated to received signal power -------------
     // (f64 reduction stays sequential: its summation order is part of the
@@ -270,6 +334,52 @@ mod tests {
         let rc = perfect_round(2, 20.0);
         let mut rng = Rng::seed_from(14);
         let _ = aggregate(&[vec![0.0; 3], vec![0.0; 4]], &rc, &mut rng);
+    }
+
+    #[test]
+    fn sharded_stream_matches_one_shot_bitwise() {
+        // the shard-invariance kernel contract: any shard partition of
+        // the round's slots, streamed through begin/accumulate/finalize,
+        // reproduces the one-shot aggregation bit-for-bit — including
+        // noise draws, participants and MSE — at every thread count
+        let ps = payloads(15, 20_000, 91);
+        let rc = perfect_round(15, 20.0); // noise_var > 0: real noise path
+        let plane = crate::kernels::PayloadPlane::from_rows(&ps);
+        let mut want_scratch = OtaScratch::new();
+        let mut r0 = Rng::seed_from(17);
+        let want_stats =
+            aggregate_plane_into(&plane, &rc, &mut r0, &mut want_scratch, 1);
+        for threads in [1usize, 4] {
+            for shard in [1usize, 4, 7, 15] {
+                let mut rng = Rng::seed_from(17);
+                let mut scratch = OtaScratch::new();
+                begin_plane_into(20_000, &mut scratch);
+                let mut lo = 0usize;
+                while lo < 15 {
+                    let hi = (lo + shard).min(15);
+                    let shard_plane =
+                        crate::kernels::PayloadPlane::from_rows(&ps[lo..hi]);
+                    accumulate_plane_into(&shard_plane, lo, &rc, &mut scratch, threads);
+                    lo = hi;
+                }
+                let stats = finalize_plane_into(&rc, &mut rng, &mut scratch, threads);
+                assert_eq!(
+                    scratch.y_re, want_scratch.y_re,
+                    "shard={shard} threads={threads}"
+                );
+                assert_eq!(stats.participants, want_stats.participants);
+                assert_eq!(
+                    stats.mse_vs_ideal.to_bits(),
+                    want_stats.mse_vs_ideal.to_bits(),
+                    "shard={shard} threads={threads}"
+                );
+                assert_eq!(
+                    stats.noise_var.to_bits(),
+                    want_stats.noise_var.to_bits(),
+                    "shard={shard} threads={threads}"
+                );
+            }
+        }
     }
 
     #[test]

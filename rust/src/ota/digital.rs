@@ -125,12 +125,39 @@ pub fn aggregate_plane_into(
     out: &mut Vec<f32>,
     threads: usize,
 ) -> AggregateStats {
-    assert_eq!(plane.k(), precisions.len());
     let n = plane.n();
     let k = plane.k();
     out.resize(n, 0.0);
     out.fill(0.0);
     let mut stats = AggregateStats::default();
+    accumulate_plane_into(plane, precisions, out.as_mut_slice(), threads, &mut stats);
+    if k > 0 {
+        tensor::scale_par(out, 1.0 / k as f32, threads);
+    }
+    stats.participants = k;
+    stats
+}
+
+/// Accumulate ONE SHARD of the digital baseline into `out` — NO reset, NO
+/// final scale: per row, fused encode→decode at the row's precision
+/// (element-parallel) added onto the partial sum, plus wire-stats accrual
+/// (channel uses, bits on wire) into `stats`.
+///
+/// The streaming form of [`aggregate_plane_into`]: shards accumulated in
+/// slot order over a pre-zeroed `out`, followed by one `1/K_total` scale,
+/// reproduce the one-shot path bit-for-bit for every shard partition (per
+/// element, the same decoded contributions arrive in the same ascending
+/// client order).
+pub fn accumulate_plane_into(
+    plane: &PayloadPlane,
+    precisions: &[Precision],
+    out: &mut [f32],
+    threads: usize,
+    stats: &mut AggregateStats,
+) {
+    assert_eq!(plane.k(), precisions.len());
+    let n = plane.n();
+    assert_eq!(out.len(), n, "accumulator length mismatch");
     for (row_i, &p) in precisions.iter().enumerate() {
         let row = plane.row(row_i);
         stats.channel_uses += n as u64;
@@ -139,7 +166,7 @@ pub fn aggregate_plane_into(
             Format::FixedPoint => {
                 let ap = fixed::params(row, p.bits());
                 let max_code = p.max_code();
-                par::par_chunks_mut(threads, out.as_mut_slice(), |off, chunk| {
+                par::par_chunks_mut(threads, out, |off, chunk| {
                     let r = &row[off..off + chunk.len()];
                     for (o, &v) in chunk.iter_mut().zip(r.iter()) {
                         *o += fixed::decode(fixed::encode(v, ap, max_code), ap);
@@ -148,7 +175,7 @@ pub fn aggregate_plane_into(
             }
             Format::FloatTrunc | Format::Identity => {
                 let mask = float::mask(p.bits()).expect("validated level");
-                par::par_chunks_mut(threads, out.as_mut_slice(), |off, chunk| {
+                par::par_chunks_mut(threads, out, |off, chunk| {
                     let r = &row[off..off + chunk.len()];
                     for (o, &v) in chunk.iter_mut().zip(r.iter()) {
                         *o += f32::from_bits(v.to_bits() & mask);
@@ -157,11 +184,6 @@ pub fn aggregate_plane_into(
             }
         }
     }
-    if k > 0 {
-        tensor::scale_par(out, 1.0 / k as f32, threads);
-    }
-    stats.participants = k;
-    stats
 }
 
 #[cfg(test)]
@@ -218,6 +240,34 @@ mod tests {
         let (agg, stats) = aggregate(&[], &[]);
         assert!(agg.is_empty());
         assert_eq!(stats.participants, 0);
+    }
+
+    #[test]
+    fn sharded_accumulation_matches_one_shot_bitwise() {
+        let raw: Vec<Vec<f32>> = (0..6).map(|i| payload(20_000, 80 + i)).collect();
+        let ps: Vec<Precision> =
+            [32u8, 24, 16, 12, 8, 4].iter().map(|&b| Precision::of(b)).collect();
+        let plane = PayloadPlane::from_rows(&raw);
+        for threads in [1usize, 4] {
+            let mut want = Vec::new();
+            let want_stats = aggregate_plane_into(&plane, &ps, &mut want, threads);
+            for shard in [1usize, 2, 4, 6] {
+                let mut acc = vec![0.0f32; 20_000];
+                let mut stats = AggregateStats::default();
+                let mut lo = 0usize;
+                while lo < 6 {
+                    let hi = (lo + shard).min(6);
+                    let sp = PayloadPlane::from_rows(&raw[lo..hi]);
+                    accumulate_plane_into(&sp, &ps[lo..hi], &mut acc, threads, &mut stats);
+                    lo = hi;
+                }
+                tensor::scale_par(&mut acc, 1.0 / 6.0f32, threads);
+                stats.participants = 6;
+                assert_eq!(acc, want, "shard={shard} threads={threads}");
+                assert_eq!(stats.channel_uses, want_stats.channel_uses);
+                assert_eq!(stats.bits_transmitted, want_stats.bits_transmitted);
+            }
+        }
     }
 
     #[test]

@@ -39,6 +39,12 @@ pub struct AggScratch {
     ota: OtaScratch,
     agg: Vec<f32>,
     slot: Slot,
+    /// Streaming-round bookkeeping: wire stats accumulated across shards
+    /// (digital bits / channel uses), reset by `begin_into`.
+    partial: AggregateStats,
+    /// The streaming round's TOTAL participant count, set at `begin_into`
+    /// (the `1/K` scale denominator for the mean-style aggregators).
+    total_k: usize,
 }
 
 impl AggScratch {
@@ -106,6 +112,54 @@ pub trait Aggregator {
         true
     }
 
+    /// Whether this aggregator implements the STREAMING (sharded) round
+    /// protocol: [`begin_into`](Self::begin_into) → N ×
+    /// [`accumulate_into`](Self::accumulate_into) over consecutive slot
+    /// ranges → [`finalize_into`](Self::finalize_into).
+    ///
+    /// Contract: a streamed round must produce BIT-IDENTICAL results to
+    /// [`aggregate_into`](Self::aggregate_into) over the concatenated
+    /// shards, for every shard partition — the round loop's
+    /// shard-invariance guarantee rests on it
+    /// (`rust/tests/shard_invariance.rs`).  Default `false`: the
+    /// coordinator then materializes the whole K×N plane and rejects
+    /// `shard_size < K`.
+    fn supports_streaming(&self) -> bool {
+        false
+    }
+
+    /// Start a streaming round of `total_k` payload rows of `n` elements.
+    fn begin_into(&mut self, total_k: usize, n: usize, scratch: &mut AggScratch) {
+        let _ = (total_k, n, scratch);
+        unimplemented!("aggregator does not support streaming rounds")
+    }
+
+    /// Fold one shard — rows `slot0 .. slot0 + shard.k()` of the round —
+    /// into the accumulator state.  `ctx.precisions` holds the SHARD's
+    /// precisions (aligned with its rows); `ctx.channel` the full round
+    /// realisation (index it at `slot0 + row`).
+    fn accumulate_into(
+        &mut self,
+        shard: &PayloadPlane,
+        slot0: usize,
+        ctx: &mut AggCtx<'_>,
+        scratch: &mut AggScratch,
+    ) {
+        let _ = (shard, slot0, ctx, scratch);
+        unimplemented!("aggregator does not support streaming rounds")
+    }
+
+    /// Finish the streaming round (noise/scale/diagnostics);
+    /// `scratch.result()` holds the mean vector afterwards.
+    fn finalize_into(
+        &mut self,
+        ctx: &mut AggCtx<'_>,
+        scratch: &mut AggScratch,
+    ) -> AggregateStats {
+        let _ = (ctx, scratch);
+        unimplemented!("aggregator does not support streaming rounds")
+    }
+
     /// Short architecture name for labels/reports ("ota", "digital", ...).
     fn name(&self) -> &'static str;
 }
@@ -123,6 +177,43 @@ impl Aggregator for AnalogOta {
     ) -> AggregateStats {
         ota::analog::aggregate_plane_into(
             plane,
+            ctx.channel,
+            ctx.noise_rng,
+            scratch.ota_mut(),
+            ctx.threads,
+        )
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
+
+    fn begin_into(&mut self, _total_k: usize, n: usize, scratch: &mut AggScratch) {
+        ota::analog::begin_plane_into(n, scratch.ota_mut());
+    }
+
+    fn accumulate_into(
+        &mut self,
+        shard: &PayloadPlane,
+        slot0: usize,
+        ctx: &mut AggCtx<'_>,
+        scratch: &mut AggScratch,
+    ) {
+        ota::analog::accumulate_plane_into(
+            shard,
+            slot0,
+            ctx.channel,
+            scratch.ota_mut(),
+            ctx.threads,
+        );
+    }
+
+    fn finalize_into(
+        &mut self,
+        ctx: &mut AggCtx<'_>,
+        scratch: &mut AggScratch,
+    ) -> AggregateStats {
+        ota::analog::finalize_plane_into(
             ctx.channel,
             ctx.noise_rng,
             scratch.ota_mut(),
@@ -159,6 +250,53 @@ impl Aggregator for DigitalOrthogonal {
         false
     }
 
+    fn supports_streaming(&self) -> bool {
+        true
+    }
+
+    fn begin_into(&mut self, total_k: usize, n: usize, scratch: &mut AggScratch) {
+        scratch.total_k = total_k;
+        scratch.partial = AggregateStats::default();
+        let out = scratch.agg_mut();
+        out.resize(n, 0.0);
+        out.fill(0.0);
+    }
+
+    fn accumulate_into(
+        &mut self,
+        shard: &PayloadPlane,
+        _slot0: usize,
+        ctx: &mut AggCtx<'_>,
+        scratch: &mut AggScratch,
+    ) {
+        scratch.slot = Slot::Agg;
+        ota::digital::accumulate_plane_into(
+            shard,
+            ctx.precisions,
+            scratch.agg.as_mut_slice(),
+            ctx.threads,
+            &mut scratch.partial,
+        );
+    }
+
+    fn finalize_into(
+        &mut self,
+        ctx: &mut AggCtx<'_>,
+        scratch: &mut AggScratch,
+    ) -> AggregateStats {
+        scratch.slot = Slot::Agg;
+        if scratch.total_k > 0 {
+            crate::tensor::scale_par(
+                &mut scratch.agg,
+                1.0 / scratch.total_k as f32,
+                ctx.threads,
+            );
+        }
+        let mut stats = scratch.partial.clone();
+        stats.participants = scratch.total_k;
+        stats
+    }
+
     fn name(&self) -> &'static str {
         "digital"
     }
@@ -183,6 +321,47 @@ impl Aggregator for IdealFedAvg {
 
     fn needs_channel(&self) -> bool {
         false
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
+
+    fn begin_into(&mut self, total_k: usize, n: usize, scratch: &mut AggScratch) {
+        scratch.total_k = total_k;
+        let out = scratch.agg_mut();
+        out.resize(n, 0.0);
+        out.fill(0.0);
+    }
+
+    fn accumulate_into(
+        &mut self,
+        shard: &PayloadPlane,
+        _slot0: usize,
+        ctx: &mut AggCtx<'_>,
+        scratch: &mut AggScratch,
+    ) {
+        if scratch.total_k == 0 {
+            return;
+        }
+        // the 1/K weight is applied per contribution, exactly like the
+        // one-shot `mean_plane_into` — which is what keeps any shard
+        // partition bit-identical to the unsharded mean
+        let f = 1.0f32 / scratch.total_k as f32;
+        scratch.slot = Slot::Agg;
+        fl::mean_plane_accumulate(shard, f, scratch.agg.as_mut_slice(), ctx.threads);
+    }
+
+    fn finalize_into(
+        &mut self,
+        _ctx: &mut AggCtx<'_>,
+        scratch: &mut AggScratch,
+    ) -> AggregateStats {
+        scratch.slot = Slot::Agg;
+        AggregateStats {
+            participants: scratch.total_k,
+            ..Default::default()
+        }
     }
 
     fn name(&self) -> &'static str {

@@ -32,12 +32,19 @@ use crate::rng::Rng;
 /// round to round), must consume `rng` deterministically — the same model
 /// state and RNG state in always yield the same realisation out — and
 /// must not allocate once `out` AND the model's own state have warmed to
-/// fleet capacity.  Models MAY carry mutable state across rounds (that is
+/// capacity.  Models MAY carry mutable state across rounds (that is
 /// the whole point of correlated fading); such state must be (re)built
 /// from the draw inputs on the first call, never eagerly per round, so
 /// the steady-state round loop stays allocation-free
 /// (`rust/tests/alloc_counter.rs` pins this through `Box<dyn
 /// ChannelModel>`).
+///
+/// Fleet-scaling contract: `num_clients` is the number of PARTICIPANT
+/// SLOTS this round (K), not the fleet size N — stateful models key
+/// their memory by slot and are therefore lazily sized O(K), never
+/// O(fleet): a 1M-client run with `clients_per_round = 64` builds
+/// channel state for 64 slots only
+/// (`rust/tests/channel_stats.rs::million_client_fleet_round_state_is_o_shard_not_o_fleet`).
 pub trait ChannelModel {
     /// Fill `out` with `num_clients` client-channel states plus the server
     /// noise level for this round.

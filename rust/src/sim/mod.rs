@@ -26,13 +26,27 @@
 //! over both.  Multi-run drivers ([`sweep`], benches) recycle one
 //! [`Arena`] and one `Rc<Runtime>` across runs.
 //!
+//! # Streaming (sharded) rounds
+//!
+//! Aggregators that implement the streaming protocol
+//! ([`Aggregator::supports_streaming`] — all three built-ins do) let the
+//! round pipeline fold the K participants in shard-size payload planes:
+//! [`Session::begin_aggregate`] → N × [`Session::accumulate_shard`] →
+//! [`Session::finalize_aggregate`].  Round memory becomes
+//! O(shard·N + K) instead of O(K·N) — the massive-fleet mode — and every
+//! shard partition is bit-identical to the one-shot
+//! [`Session::aggregate`] (the one-shot built-ins are implemented ON the
+//! streaming pieces, so the paths share each instruction;
+//! `rust/tests/shard_invariance.rs` pins full runs).
+//!
 //! # Determinism and allocation contracts
 //!
 //! The PR-1 contracts survive the trait seams and are re-pinned through
 //! them: with the default parts, results are bit-identical per seed to the
 //! pre-redesign enum paths at every thread count (`rust/tests/sim.rs`),
 //! and a steady-state round performs zero heap allocation through the
-//! trait objects (`rust/tests/alloc_counter.rs`).
+//! trait objects (`rust/tests/alloc_counter.rs`) — including the sharded
+//! streaming path at `shard_size < K`.
 
 pub mod aggregator;
 pub mod channel_model;
@@ -204,6 +218,82 @@ impl Session {
             threads: self.threads,
         };
         let stats = self.aggregator.aggregate_into(plane, &mut ctx, &mut self.scratch);
+        for obs in &mut self.observers {
+            obs.on_aggregate(t, &stats);
+        }
+        stats
+    }
+
+    /// Whether the configured aggregator implements the streaming
+    /// (sharded) round protocol — see [`Aggregator::supports_streaming`].
+    pub fn supports_streaming(&self) -> bool {
+        self.aggregator.supports_streaming()
+    }
+
+    /// Start a STREAMING aggregation round of `total_k` participants with
+    /// N-element payloads: draw the round's channel realisation for ALL
+    /// `total_k` slots up front (identical RNG consumption to the
+    /// one-shot [`aggregate`](Self::aggregate), and skipped — draws
+    /// included — when the aggregator needs no channel) and reset the
+    /// accumulator state.  Follow with [`accumulate_shard`] calls over
+    /// consecutive slot ranges and one [`finalize_aggregate`].
+    ///
+    /// Memory contract: the session-side state is O(total_k + N) — the
+    /// channel realisation plus the air accumulators — never O(K·N); the
+    /// caller streams payload shards through a small reusable plane.
+    ///
+    /// [`accumulate_shard`]: Self::accumulate_shard
+    /// [`finalize_aggregate`]: Self::finalize_aggregate
+    pub fn begin_aggregate(&mut self, t: usize, total_k: usize, n: usize) {
+        if self.aggregator.needs_channel() {
+            self.channel_model.draw_into(
+                total_k,
+                &mut self.channel_rng,
+                &mut self.round_channel,
+            );
+            for obs in &mut self.observers {
+                obs.on_channel(t, &self.round_channel);
+            }
+        }
+        self.aggregator.begin_into(total_k, n, &mut self.scratch);
+    }
+
+    /// Fold one shard — rows `slot0 .. slot0 + shard.k()` of the round,
+    /// with the SHARD's precisions (aligned with its rows) — into the
+    /// round accumulator.
+    pub fn accumulate_shard(
+        &mut self,
+        shard: &PayloadPlane,
+        slot0: usize,
+        precisions: &[Precision],
+    ) {
+        let mut ctx = AggCtx {
+            channel: &self.round_channel,
+            precisions,
+            noise_rng: &mut self.noise_rng,
+            threads: self.threads,
+        };
+        self.aggregator.accumulate_into(shard, slot0, &mut ctx, &mut self.scratch);
+    }
+
+    /// Finish the streaming round (noise injection, scaling, diagnostics)
+    /// and notify observers; [`result`](Self::result) holds the
+    /// aggregated mean afterwards.  A single-shard stream produces
+    /// bit-identical results to [`aggregate`](Self::aggregate) — the
+    /// built-in aggregators implement the one-shot entry on the streaming
+    /// pieces.
+    pub fn finalize_aggregate(
+        &mut self,
+        t: usize,
+        precisions: &[Precision],
+    ) -> AggregateStats {
+        let mut ctx = AggCtx {
+            channel: &self.round_channel,
+            precisions,
+            noise_rng: &mut self.noise_rng,
+            threads: self.threads,
+        };
+        let stats = self.aggregator.finalize_into(&mut ctx, &mut self.scratch);
         for obs in &mut self.observers {
             obs.on_aggregate(t, &stats);
         }

@@ -51,6 +51,33 @@ pub trait PrecisionPolicy {
     fn assign_into(&mut self, ctx: &PolicyCtx<'_>, out: &mut Vec<Precision>)
         -> Result<()>;
 
+    /// Fill `out` with one precision per SELECTED participant (aligned
+    /// with `selected`) — the O(K) massive-fleet form.  The result must
+    /// equal gathering the fleet-wide [`assign_into`](Self::assign_into)
+    /// output at the selected indices, and any feedback-state update must
+    /// happen exactly once per observed round (the round loop calls
+    /// exactly one of the two assignment methods per round, with the same
+    /// `ctx` rules).
+    ///
+    /// The default materializes the fleet assignment and gathers — O(N)
+    /// and allocating, correct for any custom policy; the built-in
+    /// policies override it with allocation-free O(K) implementations so
+    /// a 10M-client fleet never materializes fleet-sized state.
+    fn assign_selected_into(
+        &mut self,
+        ctx: &PolicyCtx<'_>,
+        selected: &[usize],
+        out: &mut Vec<Precision>,
+    ) -> Result<()> {
+        let mut fleet = Vec::new();
+        self.assign_into(ctx, &mut fleet)?;
+        out.clear();
+        for &k in selected {
+            out.push(fleet[k]);
+        }
+        Ok(())
+    }
+
     /// Every level the policy may ever assign — drives artifact warmup and
     /// the end-of-run requantization report.
     fn levels(&self) -> Vec<Precision>;
@@ -77,6 +104,15 @@ impl PrecisionPolicy for StaticScheme {
         out: &mut Vec<Precision>,
     ) -> Result<()> {
         self.scheme.client_precisions_into(ctx.clients, out)
+    }
+
+    fn assign_selected_into(
+        &mut self,
+        ctx: &PolicyCtx<'_>,
+        selected: &[usize],
+        out: &mut Vec<Precision>,
+    ) -> Result<()> {
+        self.scheme.selected_precisions_into(ctx.clients, selected, out)
     }
 
     fn levels(&self) -> Vec<Precision> {
@@ -153,20 +189,39 @@ impl Default for SnrAdaptive {
     }
 }
 
+impl SnrAdaptive {
+    /// The (uniform) fleet level for this round's context.
+    fn level_for(&self, ctx: &PolicyCtx<'_>) -> Precision {
+        let mut idx = self.base_index(ctx.snr_db);
+        if self.anneal_every > 0 {
+            idx = (idx + (ctx.round.saturating_sub(1)) / self.anneal_every)
+                .min(self.ladder.len() - 1);
+        }
+        self.ladder[idx]
+    }
+}
+
 impl PrecisionPolicy for SnrAdaptive {
     fn assign_into(
         &mut self,
         ctx: &PolicyCtx<'_>,
         out: &mut Vec<Precision>,
     ) -> Result<()> {
-        let mut idx = self.base_index(ctx.snr_db);
-        if self.anneal_every > 0 {
-            idx = (idx + (ctx.round.saturating_sub(1)) / self.anneal_every)
-                .min(self.ladder.len() - 1);
-        }
-        let p = self.ladder[idx];
+        let p = self.level_for(ctx);
         out.clear();
         out.resize(ctx.clients, p);
+        Ok(())
+    }
+
+    fn assign_selected_into(
+        &mut self,
+        ctx: &PolicyCtx<'_>,
+        selected: &[usize],
+        out: &mut Vec<Precision>,
+    ) -> Result<()> {
+        let p = self.level_for(ctx);
+        out.clear();
+        out.resize(selected.len(), p);
         Ok(())
     }
 
@@ -288,12 +343,11 @@ impl Default for LossPlateau {
     }
 }
 
-impl PrecisionPolicy for LossPlateau {
-    fn assign_into(
-        &mut self,
-        ctx: &PolicyCtx<'_>,
-        out: &mut Vec<Precision>,
-    ) -> Result<()> {
+impl LossPlateau {
+    /// Observe the previous round's record (idempotent per observed
+    /// round) and return the fleet's current level — the shared state
+    /// step behind both assignment forms.
+    fn observe(&mut self, ctx: &PolicyCtx<'_>) -> Precision {
         if let Some(prev) = ctx.prev {
             // only FRESH evaluations carry information: with
             // `eval_every > 1` the coordinator carries the last eval's
@@ -314,8 +368,31 @@ impl PrecisionPolicy for LossPlateau {
                 }
             }
         }
+        self.ladder[self.idx]
+    }
+}
+
+impl PrecisionPolicy for LossPlateau {
+    fn assign_into(
+        &mut self,
+        ctx: &PolicyCtx<'_>,
+        out: &mut Vec<Precision>,
+    ) -> Result<()> {
+        let p = self.observe(ctx);
         out.clear();
-        out.resize(ctx.clients, self.ladder[self.idx]);
+        out.resize(ctx.clients, p);
+        Ok(())
+    }
+
+    fn assign_selected_into(
+        &mut self,
+        ctx: &PolicyCtx<'_>,
+        selected: &[usize],
+        out: &mut Vec<Precision>,
+    ) -> Result<()> {
+        let p = self.observe(ctx);
+        out.clear();
+        out.resize(selected.len(), p);
         Ok(())
     }
 
@@ -368,18 +445,39 @@ impl EnergyBudget {
     }
 }
 
+impl EnergyBudget {
+    /// The (uniform) fleet level for this round's context — a pure
+    /// function of the previous round's cumulative energy.
+    fn level_for(&self, ctx: &PolicyCtx<'_>) -> Precision {
+        let spent = ctx.prev.map(|r| r.energy_joules).unwrap_or(0.0);
+        let frac = spent / (self.budget_j * ctx.clients as f64);
+        let idx =
+            ((frac * self.ladder.len() as f64) as usize).min(self.ladder.len() - 1);
+        self.ladder[idx]
+    }
+}
+
 impl PrecisionPolicy for EnergyBudget {
     fn assign_into(
         &mut self,
         ctx: &PolicyCtx<'_>,
         out: &mut Vec<Precision>,
     ) -> Result<()> {
-        let spent = ctx.prev.map(|r| r.energy_joules).unwrap_or(0.0);
-        let frac = spent / (self.budget_j * ctx.clients as f64);
-        let idx =
-            ((frac * self.ladder.len() as f64) as usize).min(self.ladder.len() - 1);
+        let p = self.level_for(ctx);
         out.clear();
-        out.resize(ctx.clients, self.ladder[idx]);
+        out.resize(ctx.clients, p);
+        Ok(())
+    }
+
+    fn assign_selected_into(
+        &mut self,
+        ctx: &PolicyCtx<'_>,
+        selected: &[usize],
+        out: &mut Vec<Precision>,
+    ) -> Result<()> {
+        let p = self.level_for(ctx);
+        out.clear();
+        out.resize(selected.len(), p);
         Ok(())
     }
 
@@ -588,6 +686,76 @@ mod tests {
         cfg.policy = PolicyKind::EnergyBudget;
         cfg.energy_budget_j = 2.5;
         assert_eq!(from_config(cfg.policy, &cfg).label(), "energy-budget/2.5J");
+    }
+
+    #[test]
+    fn assign_selected_matches_fleet_gather_for_every_builtin() {
+        // the O(K) overrides must equal gathering the fleet assignment at
+        // the selected indices — including feedback-state evolution
+        let selected = [0usize, 2, 7, 8, 11];
+        let clients = 12usize;
+        let mk: Vec<Box<dyn Fn() -> Box<dyn PrecisionPolicy>>> = vec![
+            Box::new(|| -> Box<dyn PrecisionPolicy> {
+                Box::new(StaticScheme::new(Scheme::parse("16,8,4").unwrap()))
+            }),
+            Box::new(|| -> Box<dyn PrecisionPolicy> {
+                Box::new(SnrAdaptive::new().with_annealing(2))
+            }),
+            Box::new(|| -> Box<dyn PrecisionPolicy> {
+                Box::new(LossPlateau::new().with_patience(1))
+            }),
+            Box::new(|| -> Box<dyn PrecisionPolicy> {
+                Box::new(EnergyBudget::new(0.5))
+            }),
+        ];
+        for make in &mk {
+            let mut fleet_pol = make();
+            let mut sel_pol = make();
+            let mut fleet = Vec::new();
+            let mut sel = Vec::new();
+            for t in 1..=8 {
+                let r = rec(t.max(2) - 1, 1.0, (t as f64 - 1.0) * 0.8);
+                let prev = if t == 1 { None } else { Some(&r) };
+                let ctx = PolicyCtx { round: t, clients, snr_db: 20.0, prev };
+                fleet_pol.assign_into(&ctx, &mut fleet).unwrap();
+                sel_pol.assign_selected_into(&ctx, &selected, &mut sel).unwrap();
+                let want: Vec<Precision> =
+                    selected.iter().map(|&k| fleet[k]).collect();
+                assert_eq!(sel, want, "{} round {t}", fleet_pol.label());
+            }
+        }
+    }
+
+    #[test]
+    fn default_assign_selected_gathers_from_custom_policies() {
+        // a custom policy that only implements assign_into still works
+        // through the default (materialize + gather) path
+        struct OddEven;
+        impl PrecisionPolicy for OddEven {
+            fn assign_into(
+                &mut self,
+                ctx: &PolicyCtx<'_>,
+                out: &mut Vec<Precision>,
+            ) -> Result<()> {
+                out.clear();
+                for k in 0..ctx.clients {
+                    out.push(Precision::of(if k % 2 == 0 { 16 } else { 4 }));
+                }
+                Ok(())
+            }
+            fn levels(&self) -> Vec<Precision> {
+                vec![Precision::of(16), Precision::of(4)]
+            }
+            fn label(&self) -> String {
+                "odd-even".into()
+            }
+        }
+        let mut p = OddEven;
+        let mut out = Vec::new();
+        p.assign_selected_into(&ctx(1, 10, 20.0), &[1, 2, 5, 8], &mut out)
+            .unwrap();
+        let bits: Vec<u8> = out.iter().map(|p| p.bits()).collect();
+        assert_eq!(bits, vec![4, 16, 4, 16]);
     }
 
     #[test]

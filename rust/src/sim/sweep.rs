@@ -1,7 +1,16 @@
 //! The sweep driver: run a scheme × SNR × aggregator × channel-model ×
-//! policy config grid in ONE process, reusing one runtime and one scratch
-//! arena across cells, and emit a consolidated JSON report (`mpota sweep`
-//! on the CLI).
+//! policy × fleet × shard-size config grid in ONE process, reusing one
+//! runtime and one scratch arena across cells, and emit a consolidated
+//! JSON report (`mpota sweep` on the CLI).
+//!
+//! Fleet scaling: channel-only cells select K = `clients_per_round`
+//! participants per round from the cell's fleet (`RunConfig::selection`;
+//! `sampled` = Floyd's O(K) sampler) and stream them through the
+//! aggregator in `shard_size`-row shards, so a 100k- or 1M-client cell
+//! runs in O(shard·payload_len + K) memory.  The `fleets` / `shard_sizes`
+//! axes sweep both knobs; shard size never changes results (the
+//! shard-invariance contract — `sharded_cells_match_unsharded_bit_for_bit`
+//! and the CI byte-diff pin it).
 //!
 //! Two modes:
 //!
@@ -77,6 +86,18 @@ pub struct SweepSpec {
     pub channel_models: Vec<FadingKind>,
     /// Precision policies to sweep (fresh per cell, like the models).
     pub policies: Vec<PolicyKind>,
+    /// Fleet sizes N to sweep (each cell sets `clients`; the base's
+    /// `clients_per_round` is clamped to the cell's fleet).  Massive
+    /// fleets pair naturally with `base.selection = Sampled` and a
+    /// `shard_sizes` axis: per-round state stays O(K), round memory
+    /// O(shard·payload_len).
+    pub fleets: Vec<usize>,
+    /// Streaming-shard sizes to sweep (each cell sets `shard_size`; `0` =
+    /// one whole-round shard).  Results are bit-identical across this
+    /// axis by the shard-invariance contract — sweeping it measures
+    /// memory/wall-clock, and CI byte-diffs the reports to pin the
+    /// contract end to end.
+    pub shard_sizes: Vec<usize>,
     /// Payload length for the channel-only mode (full FL runs use the
     /// model's parameter count instead).
     pub payload_len: usize,
@@ -87,7 +108,7 @@ pub struct SweepSpec {
 }
 
 impl SweepSpec {
-    /// A 1×1×1×1×1 grid over the base config; widen the axes from there.
+    /// A 1×…×1 grid over the base config; widen the axes from there.
     pub fn new(base: RunConfig) -> Self {
         SweepSpec {
             schemes: vec![base.scheme.clone()],
@@ -95,6 +116,8 @@ impl SweepSpec {
             aggregations: vec![base.aggregation],
             channel_models: vec![base.channel.model],
             policies: vec![base.policy],
+            fleets: vec![base.clients],
+            shard_sizes: vec![base.shard_size],
             payload_len: 4096,
             stream: None,
             base,
@@ -108,6 +131,8 @@ impl SweepSpec {
             * self.aggregations.len()
             * self.channel_models.len()
             * self.policies.len()
+            * self.fleets.len()
+            * self.shard_sizes.len()
     }
 
     /// Reject grids whose axes a per-cell policy would silently ignore: a
@@ -133,9 +158,29 @@ impl SweepSpec {
             ch.model = model;
             ch.validate()?;
         }
+        for &fleet in &self.fleets {
+            if fleet == 0 {
+                bail!("fleet size must be positive");
+            }
+            // a static policy expands the scheme over the fleet — check
+            // divisibility up front (modulo only: never materialize the
+            // fleet-sized expansion here)
+            if self.policies.iter().any(|&p| p == PolicyKind::Static) {
+                for scheme in &self.schemes {
+                    let g = scheme.groups().len();
+                    if fleet % g != 0 {
+                        bail!(
+                            "fleet {fleet} does not divide into the {g} groups \
+                             of scheme '{scheme}'"
+                        );
+                    }
+                }
+            }
+        }
         Ok(())
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn cell_config(
         &self,
         scheme: &Scheme,
@@ -143,6 +188,8 @@ impl SweepSpec {
         agg: Aggregation,
         model: FadingKind,
         pol: PolicyKind,
+        fleet: usize,
+        shard: usize,
     ) -> RunConfig {
         let mut cfg = self.base.clone();
         cfg.scheme = scheme.clone();
@@ -150,19 +197,31 @@ impl SweepSpec {
         cfg.aggregation = agg;
         cfg.channel.model = model;
         cfg.policy = pol;
+        cfg.clients = fleet;
+        cfg.clients_per_round = self.base.clients_per_round.min(fleet);
+        cfg.shard_size = shard;
         cfg
     }
 
     /// Enumerate the grid in canonical axis order (schemes outermost,
-    /// policies innermost).
-    fn cells_iter(&self) -> Vec<(&Scheme, f32, Aggregation, FadingKind, PolicyKind)> {
+    /// shard sizes innermost).
+    #[allow(clippy::type_complexity)]
+    fn cells_iter(
+        &self,
+    ) -> Vec<(&Scheme, f32, Aggregation, FadingKind, PolicyKind, usize, usize)> {
         let mut cells = Vec::with_capacity(self.grid_size());
         for scheme in &self.schemes {
             for &snr in &self.snrs_db {
                 for &agg in &self.aggregations {
                     for &model in &self.channel_models {
                         for &pol in &self.policies {
-                            cells.push((scheme, snr, agg, model, pol));
+                            for &fleet in &self.fleets {
+                                for &shard in &self.shard_sizes {
+                                    cells.push((
+                                        scheme, snr, agg, model, pol, fleet, shard,
+                                    ));
+                                }
+                            }
                         }
                     }
                 }
@@ -207,6 +266,16 @@ impl SweepSpec {
             "policies",
             Value::Array(
                 self.policies.iter().map(|p| Value::Str(p.to_string())).collect(),
+            ),
+        );
+        g.set(
+            "fleets",
+            Value::Array(self.fleets.iter().map(|&n| Value::Num(n as f64)).collect()),
+        );
+        g.set(
+            "shard_sizes",
+            Value::Array(
+                self.shard_sizes.iter().map(|&s| Value::Num(s as f64)).collect(),
             ),
         );
         g
@@ -263,8 +332,10 @@ pub fn run_fl_sweep_on(spec: &SweepSpec, runtime: Rc<Runtime>) -> Result<SweepRe
     // Cells run serially: they share ONE PJRT runtime, which is
     // single-threaded by construction (Rc-based client).  `workers` still
     // parallelizes the client phase INSIDE each cell.
-    for (i, (scheme, snr, agg, model, pol)) in spec.cells_iter().into_iter().enumerate() {
-        let cfg = spec.cell_config(scheme, snr, agg, model, pol);
+    for (i, (scheme, snr, agg, model, pol, fleet, shard)) in
+        spec.cells_iter().into_iter().enumerate()
+    {
+        let cfg = spec.cell_config(scheme, snr, agg, model, pol, fleet, shard);
         let cell_t0 = Instant::now();
         // the builder constructs fresh channel-model/policy instances from
         // this cell's config — no mutable state crosses cell boundaries
@@ -276,8 +347,9 @@ pub fn run_fl_sweep_on(spec: &SweepSpec, runtime: Rc<Runtime>) -> Result<SweepRe
             } else {
                 crate::sim::JsonlStreamer::append(path)?
             };
-            builder = builder
-                .observe(streamer.with_label(cell_label(scheme, snr, agg, model, pol)));
+            builder = builder.observe(streamer.with_label(cell_label(
+                scheme, snr, agg, model, pol, fleet, shard,
+            )));
         }
         let mut exp = builder.build()?;
         let report = exp.run()?;
@@ -290,6 +362,8 @@ pub fn run_fl_sweep_on(spec: &SweepSpec, runtime: Rc<Runtime>) -> Result<SweepRe
         c.set("aggregation", Value::Str(agg.to_string()));
         c.set("channel_model", Value::Str(model.to_string()));
         c.set("policy", Value::Str(pol.to_string()));
+        c.set("clients", Value::Num(fleet as f64));
+        c.set("shard_size", Value::Num(shard as f64));
         c.set("label", Value::Str(report.label.clone()));
         c.set("final_accuracy", Value::Num(report.final_accuracy));
         c.set("final_loss", Value::Num(report.final_loss));
@@ -314,11 +388,14 @@ pub fn run_fl_sweep_on(spec: &SweepSpec, runtime: Rc<Runtime>) -> Result<SweepRe
 }
 
 /// Per-cell scratch for the channel-only sweep — recycled across cells in
-/// the serial path, fresh per pool task in the parallel path.
+/// the serial path, fresh per pool task in the parallel path.  Sized
+/// O(shard·payload_len + K), never O(fleet): `selected`/`assigned` hold
+/// the round's K participants and `plane` one shard of payloads.
 struct CellBufs {
     agg: super::AggScratch,
     channel: crate::channel::RoundChannel,
     plane: PayloadPlane,
+    selected: Vec<usize>,
     assigned: Vec<crate::quant::Precision>,
     ideal: Vec<f32>,
 }
@@ -329,6 +406,7 @@ impl Default for CellBufs {
             agg: super::AggScratch::default(),
             channel: crate::channel::RoundChannel::empty(),
             plane: PayloadPlane::new(),
+            selected: Vec::new(),
             assigned: Vec::new(),
             ideal: Vec::new(),
         }
@@ -336,14 +414,19 @@ impl Default for CellBufs {
 }
 
 /// Human-readable cell coordinates (report summaries, stream labels).
+/// Includes every grid axis — cells differing only in fleet or shard
+/// size must still tag their streamed JSONL rows distinguishably.
+#[allow(clippy::too_many_arguments)]
 fn cell_label(
     scheme: &Scheme,
     snr: f32,
     agg: Aggregation,
     model: FadingKind,
     pol: PolicyKind,
+    fleet: usize,
+    shard: usize,
 ) -> String {
-    format!("{scheme}@{snr}dB@{agg}@{model}/{pol}")
+    format!("{scheme}@{snr}dB@{agg}@{model}/{pol}@n{fleet}/s{shard}")
 }
 
 /// One channel-only grid cell: synthetic payloads through a FRESH policy,
@@ -351,6 +434,15 @@ fn cell_label(
 /// re-derives the same RNG streams from the root seed (paired
 /// realisations), touches nothing outside `bufs`, and is therefore safe
 /// to run on any pool worker — results depend only on the cell config.
+///
+/// Massive-fleet shape: the round selects K = `clients_per_round`
+/// participants from the cell's N-client fleet (`cfg.selection`; Floyd's
+/// `sampled` keeps selection state O(K)) and streams them through the
+/// aggregator `shard_size` at a time — per-round state is O(shard·n + K)
+/// regardless of N, and results are bit-identical across shard sizes
+/// (shard-invariance contract; CI byte-diffs sharded vs unsharded
+/// reports).  With K == N and no shard cap this reproduces the historical
+/// whole-fleet cell draw-for-draw.
 #[allow(clippy::too_many_arguments)]
 fn channel_cell(
     spec: &SweepSpec,
@@ -359,20 +451,25 @@ fn channel_cell(
     agg: Aggregation,
     model: FadingKind,
     polkind: PolicyKind,
+    fleet: usize,
+    shard_size: usize,
     bufs: &mut CellBufs,
     mut stream: Option<&mut crate::sim::JsonlStreamer>,
 ) -> Result<Value> {
     let base = &spec.base;
     let n = spec.payload_len;
     let rounds = base.rounds;
-    let clients = base.clients;
     let root = Rng::seed_from(base.seed);
-    let cfg = spec.cell_config(scheme, snr, agg, model, polkind);
+    let cfg = spec.cell_config(scheme, snr, agg, model, polkind, fleet, shard_size);
+    let clients = cfg.clients;
+    let selection =
+        fl::Selection::from_config(cfg.selection, clients, cfg.clients_per_round);
     let cell_t0 = Instant::now();
     // identical streams per cell => paired realisations; the channel
     // model and policy are FRESH instances (any fading memory,
     // geometry or plateau state starts clean for every cell)
     let mut payload_rng = root.stream("sweep-payload");
+    let mut select_rng = root.stream("sweep-select");
     let mut session = Session::with_state(
         channel_model::from_config(&cfg.channel),
         aggregator::from_config(cfg.aggregation),
@@ -381,6 +478,10 @@ fn channel_cell(
         cfg.threads,
         std::mem::take(&mut bufs.agg),
         std::mem::take(&mut bufs.channel),
+    );
+    anyhow::ensure!(
+        session.supports_streaming(),
+        "channel-only cells require a streaming aggregator"
     );
     let mut pol = policy::from_config(cfg.policy, &cfg);
 
@@ -395,23 +496,40 @@ fn channel_cell(
     // walks its ladder on the stalled loss, energy-budget stays put)
     let mut prev: Option<RoundRecord> = None;
     for t in 1..=rounds {
-        pol.assign_into(
+        selection.select_into(clients, t, &mut select_rng, &mut bufs.selected);
+        let kk = bufs.selected.len();
+        pol.assign_selected_into(
             &PolicyCtx {
                 round: t,
                 clients,
                 snr_db: cfg.channel.snr_db,
                 prev: prev.as_ref(),
             },
+            &bufs.selected,
             &mut bufs.assigned,
         )?;
-        bufs.plane.reset(clients, n);
-        for (k, &p) in bufs.assigned.iter().enumerate() {
-            let row = bufs.plane.row_mut(k);
-            payload_rng.fill_normal(row, 0.0, 1.0);
-            quant::fake_quant_inplace(row, p);
+        let shard = cfg.shard_len(kk);
+        // the noise-free participant mean, accumulated shard by shard
+        // with the SAME per-contribution 1/K weighting as the one-shot
+        // `mean_plane_into` — bit-identical at every shard size
+        bufs.ideal.resize(n, 0.0);
+        bufs.ideal.fill(0.0);
+        let f = 1.0f32 / kk as f32;
+        session.begin_aggregate(t, kk, n);
+        let mut lo = 0usize;
+        while lo < kk {
+            let hi = (lo + shard).min(kk);
+            bufs.plane.reset(hi - lo, n);
+            for r in 0..(hi - lo) {
+                let row = bufs.plane.row_mut(r);
+                payload_rng.fill_normal(row, 0.0, 1.0);
+                quant::fake_quant_inplace(row, bufs.assigned[lo + r]);
+            }
+            fl::mean_plane_accumulate(&bufs.plane, f, &mut bufs.ideal, cfg.threads);
+            session.accumulate_shard(&bufs.plane, lo, &bufs.assigned[lo..hi]);
+            lo = hi;
         }
-        fl::mean_plane_into(&bufs.plane, &mut bufs.ideal, cfg.threads);
-        let stats = session.aggregate(t, &bufs.plane, &bufs.assigned);
+        let stats = session.finalize_aggregate(t, &bufs.assigned);
         if stats.participants > 0 {
             mse_sum += tensor::mse(session.result(), &bufs.ideal);
         } else {
@@ -444,6 +562,9 @@ fn channel_cell(
     c.set("aggregation", Value::Str(agg.to_string()));
     c.set("channel_model", Value::Str(model.to_string()));
     c.set("policy", Value::Str(polkind.to_string()));
+    c.set("clients", Value::Num(clients as f64));
+    c.set("clients_per_round", Value::Num(cfg.clients_per_round as f64));
+    c.set("shard_size", Value::Num(cfg.shard_size as f64));
     c.set("rounds", Value::Num(rounds as f64));
     let delivered = rounds - lost_rounds;
     c.set(
@@ -496,9 +617,11 @@ pub fn run_channel_sweep(spec: &SweepSpec) -> Result<SweepReport> {
         let slots: Vec<std::sync::OnceLock<Result<Value>>> =
             (0..coords.len()).map(|_| std::sync::OnceLock::new()).collect();
         let task = |i: usize| {
-            let (scheme, snr, agg, model, pol) = coords[i];
+            let (scheme, snr, agg, model, pol, fleet, shard) = coords[i];
             let mut bufs = CellBufs::default();
-            let r = channel_cell(spec, scheme, snr, agg, model, pol, &mut bufs, None);
+            let r = channel_cell(
+                spec, scheme, snr, agg, model, pol, fleet, shard, &mut bufs, None,
+            );
             let _ = slots[i].set(r);
         };
         crate::exec::pool().broadcast_limit(coords.len(), bound, &task);
@@ -518,9 +641,9 @@ pub fn run_channel_sweep(spec: &SweepSpec) -> Result<SweepReport> {
             None => None,
         };
         let mut out = Vec::with_capacity(coords.len());
-        for (scheme, snr, agg, model, pol) in coords {
+        for (scheme, snr, agg, model, pol, fleet, shard) in coords {
             if let Some(s) = stream.as_mut() {
-                s.set_label(cell_label(scheme, snr, agg, model, pol));
+                s.set_label(cell_label(scheme, snr, agg, model, pol, fleet, shard));
             }
             out.push(channel_cell(
                 spec,
@@ -529,6 +652,8 @@ pub fn run_channel_sweep(spec: &SweepSpec) -> Result<SweepReport> {
                 agg,
                 model,
                 pol,
+                fleet,
+                shard,
                 &mut bufs,
                 stream.as_mut(),
             )?);
@@ -775,6 +900,89 @@ mod tests {
                 assert_eq!(x.get(key), y.get(key), "{key} differs serial vs parallel");
             }
         }
+    }
+
+    #[test]
+    fn sharded_cells_match_unsharded_bit_for_bit() {
+        // the sweep-level shard-invariance pin: the same cell swept over
+        // shard_sizes {0, 1, 3} produces identical science fields —
+        // wall_secs is the only field allowed to differ
+        let mut spec = tiny_spec();
+        spec.schemes.truncate(1);
+        spec.snrs_db.truncate(1);
+        spec.shard_sizes = vec![0, 1, 3];
+        assert_eq!(spec.grid_size(), 6);
+        let rep = run_channel_sweep(&spec).unwrap();
+        let cells = rep.json.get("cells").unwrap().as_array().unwrap();
+        assert_eq!(cells.len(), 6);
+        for agg in ["ota", "ideal"] {
+            let group: Vec<_> = cells
+                .iter()
+                .filter(|c| c.get("aggregation").unwrap().as_str().unwrap() == agg)
+                .collect();
+            assert_eq!(group.len(), 3);
+            for c in &group[1..] {
+                for key in [
+                    "mean_mse_vs_ideal",
+                    "lost_rounds",
+                    "mean_participants",
+                    "bits_per_round",
+                    "channel_uses_per_round",
+                ] {
+                    assert_eq!(
+                        group[0].get(key),
+                        c.get(key),
+                        "{agg}: {key} differs across shard sizes"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn massive_fleet_cell_selects_k_and_shards() {
+        // a 100k-client fleet with K=64 sampled participants in 16-row
+        // shards: the cell runs in O(shard·n + K) state and reports at
+        // most K participants per round
+        let mut base = RunConfig::default();
+        base.rounds = 2;
+        base.clients = 100_000;
+        base.clients_per_round = 64;
+        base.selection = crate::config::SelectionKind::Sampled;
+        base.shard_size = 16;
+        base.scheme = Scheme::parse("16,8").unwrap();
+        let mut spec = SweepSpec::new(base);
+        spec.payload_len = 512;
+        spec.aggregations = vec![Aggregation::OtaAnalog];
+        let rep = run_channel_sweep(&spec).unwrap();
+        let cells = rep.json.get("cells").unwrap().as_array().unwrap();
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert_eq!(c.get("clients").unwrap().as_f64().unwrap(), 100_000.0);
+        assert_eq!(c.get("clients_per_round").unwrap().as_f64().unwrap(), 64.0);
+        assert_eq!(c.get("shard_size").unwrap().as_f64().unwrap(), 16.0);
+        // truncation silences a minority of slots at 20 dB; never more
+        // than the K selected participate
+        let mp = c.get("mean_participants").unwrap().as_f64().unwrap();
+        assert!(mp > 32.0 && mp <= 64.0, "mean participants {mp}");
+    }
+
+    #[test]
+    fn fleet_axis_widens_the_grid_and_validates_divisibility() {
+        let mut spec = tiny_spec();
+        spec.schemes.truncate(1); // "16,8,4": 3 groups
+        spec.snrs_db.truncate(1);
+        spec.aggregations = vec![Aggregation::Ideal];
+        spec.fleets = vec![6, 12];
+        assert_eq!(spec.grid_size(), 2);
+        let rep = run_channel_sweep(&spec).unwrap();
+        let cells = rep.json.get("cells").unwrap().as_array().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].get("clients").unwrap().as_f64().unwrap(), 6.0);
+        assert_eq!(cells[1].get("clients").unwrap().as_f64().unwrap(), 12.0);
+        // a fleet the static scheme cannot divide is a clean up-front error
+        spec.fleets = vec![6, 7];
+        assert!(run_channel_sweep(&spec).is_err());
     }
 
     #[test]

@@ -160,6 +160,112 @@ fn fnv(s: &str) -> u64 {
     h
 }
 
+// ---------------------------------------------------------------------
+// Deterministic mock execution backend (shared by the integration test
+// binaries: `tests/sim.rs` full-run pins, `tests/shard_invariance.rs`).
+// ---------------------------------------------------------------------
+
+/// Model size of the mock variant: large enough that `threads = 4`
+/// actually chunks the kernels (and even, per the noise determinism
+/// contract).
+pub const MOCK_PARAMS: usize = 20_480;
+
+/// Write a minimal artifacts dir (manifest + init blob) so
+/// `Runtime::load` succeeds without PJRT; all execution then goes through
+/// [`MockTrainer`].  `tag` keeps concurrent test binaries/dirs apart.
+pub fn mock_artifacts_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("mpota_sim_fixture_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = format!(
+        r#"{{
+          "version": 1, "train_batch": 8, "eval_batch": 16,
+          "image": [32, 32, 3], "classes": 43, "padded_classes": 64,
+          "flagship": "mock", "train_levels": [32, 16, 8, 4],
+          "ota": {{"artifact": "ota.hlo.txt", "clients": 15, "chunk": 1024}},
+          "goldens": "goldens.json",
+          "variants": {{
+            "mock": {{
+              "param_count": {MOCK_PARAMS},
+              "params": [["w", [160, 128]]],
+              "artifacts": {{}},
+              "init": "mock_init.f32.bin",
+              "macs_per_sample": 1000
+            }}
+          }}
+        }}"#
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    let mut init = vec![0.0f32; MOCK_PARAMS];
+    Rng::seed_from(7).stream("mock-init").fill_normal(&mut init, 0.0, 0.1);
+    crate::tensor::write_f32_file(&dir.join("mock_init.f32.bin"), &init).unwrap();
+    dir
+}
+
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Deterministic, `Sync`, pure-function trainer: the "SGD step" is an
+/// integer-mixed pseudo-gradient of (precision, labels, image statistic),
+/// so outputs depend only on the call's inputs — never on which thread or
+/// in which order clients execute.  That makes it the reference backend
+/// for the workers/shard bit-identity contracts.
+#[derive(Clone)]
+pub struct MockTrainer;
+
+impl crate::exec::TrainBackend for MockTrainer {
+    fn train_step(
+        &self,
+        p: crate::quant::Precision,
+        theta: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+    ) -> anyhow::Result<crate::runtime::TrainOutput> {
+        let mut h = 0xABCD_EF01_2345_6789u64 ^ (p.bits() as u64);
+        for &l in labels {
+            h = mix(h ^ l as u64);
+        }
+        let mut s = 0.0f64;
+        let mut i = 0usize;
+        while i < images.len() {
+            s += images[i] as f64;
+            i += 257;
+        }
+        h = mix(h ^ s.to_bits());
+        let mut new_theta = theta.to_vec();
+        for (i, t) in new_theta.iter_mut().enumerate() {
+            let g = (mix(h ^ i as u64) >> 40) as f32 / (1u64 << 24) as f32 - 0.5;
+            *t -= lr * (0.1 * g + 0.05 * *t);
+        }
+        Ok(crate::runtime::TrainOutput {
+            new_theta,
+            loss: (mix(h ^ 1) % 1000) as f32 / 1000.0,
+            correct: (mix(h ^ 2) % (labels.len() as u64 + 1)) as f32,
+        })
+    }
+
+    fn evaluate(
+        &self,
+        theta: &[f32],
+        _images: &[f32],
+        labels: &[i32],
+    ) -> anyhow::Result<crate::runtime::EvalResult> {
+        let mut h = 0u64;
+        for &t in theta.iter().step_by(97) {
+            h = mix(h ^ t.to_bits() as u64);
+        }
+        Ok(crate::runtime::EvalResult {
+            loss: (h % 100_000) as f64 / 100_000.0,
+            accuracy: (mix(h) % 1000) as f64 / 1000.0,
+            samples: labels.len(),
+        })
+    }
+}
+
 /// Relative-or-absolute closeness for float comparisons in tests.
 pub fn close(a: f64, b: f64, rel: f64, abs: f64) -> bool {
     let diff = (a - b).abs();

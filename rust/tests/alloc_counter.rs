@@ -335,4 +335,76 @@ fn steady_state_round_path_is_allocation_free() {
         "steady-state workers=4 client partition allocated {} times",
         after - before
     );
+
+    // ---- phase 4: sharded streaming rounds (shard_size < K, workers=4) ----
+    // the massive-fleet round shape end to end: Floyd's SampledK selection
+    // (O(K) state), the client quantize/modulate phase row-partitioned
+    // across 4 pool workers PER SHARD, each shard folded into the
+    // session's persistent air accumulator via the streaming seam, one
+    // noise+scale finalize — zero allocation once warm, at threads=4
+    let mut sh_session = Session::new(
+        Box::new(RayleighPilot::new(ChannelConfig::default())),
+        Box::new(AnalogOta),
+        root.stream("channel-sh"),
+        root.stream("noise-sh"),
+        4,
+    );
+    let mut sh_select_rng = root.stream("select-sh");
+    let sh_selection = Selection::SampledK(6);
+    let fleet = 1_000usize;
+    let shard = 3usize; // 2 shards of 3 rows: genuinely sharded (< K)
+    let mut sh_selected: Vec<usize> = Vec::new();
+    let mut sh_plane = PayloadPlane::new();
+    let sh_precisions: Vec<Precision> =
+        (0..shard).map(|i| levels[i % levels.len()]).collect();
+    let sh_round = |t: usize,
+                    session: &mut Session,
+                    select_rng: &mut Rng,
+                    selected: &mut Vec<usize>,
+                    plane: &mut PayloadPlane| {
+        sh_selection.select_into(fleet, t, select_rng, selected);
+        let kk = selected.len();
+        session.begin_aggregate(t, kk, n);
+        let mut lo = 0usize;
+        while lo < kk {
+            let hi = (lo + shard).min(kk);
+            plane.reset(hi - lo, n);
+            mpota::kernels::par::par_row_partition_mut(
+                4,
+                hi - lo,
+                plane.as_mut_slice(),
+                |r0, chunk| {
+                    for (i, row) in chunk.chunks_mut(n).enumerate() {
+                        quant::fake_quant_layout_into(
+                            row,
+                            theta_ref,
+                            layout_ref,
+                            levels[(lo + r0 + i) % levels.len()],
+                            Rounding::Nearest,
+                            1,
+                        );
+                    }
+                },
+            );
+            session.accumulate_shard(plane, lo, &sh_precisions[..hi - lo]);
+            lo = hi;
+        }
+        let stats = session.finalize_aggregate(t, &sh_precisions);
+        std::hint::black_box(stats.participants);
+    };
+    for t in 1..=2 {
+        sh_round(t, &mut sh_session, &mut sh_select_rng, &mut sh_selected, &mut sh_plane);
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for t in 3..=8 {
+        sh_round(t, &mut sh_session, &mut sh_select_rng, &mut sh_selected, &mut sh_plane);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state sharded (shard={shard} < K=6, workers=4) rounds \
+         allocated {} times",
+        after - before
+    );
 }

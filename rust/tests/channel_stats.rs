@@ -1,22 +1,84 @@
-//! Statistical property suite for the channel-realism subsystem.
+//! Statistical property suite for the channel-realism subsystem AND the
+//! massive-fleet sampling layer.
 //!
-//! These tests pin the DISTRIBUTIONAL claims the new channel models make,
-//! not just their plumbing:
+//! These tests pin the DISTRIBUTIONAL claims the models and samplers
+//! make, not just their plumbing:
 //!
 //! * [`GaussMarkov`] draws have empirical lag-1 autocorrelation ≈ ρ and
 //!   stay unit power (the AR(1) innovation scaling is correct);
 //! * [`PathLossGeometry`] mean SNR decays monotonically with distance
 //!   (and the empirical received power tracks the site gains);
 //! * [`RayleighPilot`] magnitudes pass a Kolmogorov–Smirnov-style bound
-//!   against the Rayleigh CDF `F(x) = 1 - exp(-x²)` (unit-power, σ=1/√2).
+//!   against the Rayleigh CDF `F(x) = 1 - exp(-x²)` (unit-power, σ=1/√2);
+//! * `Selection::SampledK` (Floyd's algorithm) selects each client with
+//!   equal frequency — a chi-square uniformity bound over ≥ 20k rounds;
+//! * a 1,000,000-client fleet's sharded round loop materializes only
+//!   O(K + shard·n) state — asserted with a per-THREAD counting
+//!   allocator (a fleet-sized `Vec` of anything would blow the byte
+//!   budget by 10×), and zero allocations once warm.
 //!
 //! Everything is seeded, so each test is deterministic: the tolerances
 //! are several standard errors wide at these sample sizes, and a seed
 //! that passes once passes forever.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
 use mpota::channel::{geometry, ChannelConfig, FadingKind, RoundChannel, C32};
+use mpota::fl::{Scheme, Selection};
+use mpota::kernels::PayloadPlane;
+use mpota::quant;
 use mpota::rng::Rng;
-use mpota::sim::{ChannelModel, GaussMarkov, PathLossGeometry, RayleighPilot};
+use mpota::sim::{
+    AnalogOta, ChannelModel, GaussMarkov, PathLossGeometry, PolicyCtx,
+    PrecisionPolicy, RayleighPilot, Session, StaticScheme,
+};
+
+// ---------------------------------------------------------------------
+// Per-thread counting allocator: only the thread that opted in (via
+// `TRACKING`) is counted, so the massive-fleet memory test is immune to
+// the other tests in this binary running concurrently on their threads.
+// const-initialized TLS cells never allocate on access (no lazy init),
+// and `try_with` guards TLS teardown.
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static TRACKING: Cell<bool> = const { Cell::new(false) };
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static THREAD_BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+struct ThreadCountingAlloc;
+
+impl ThreadCountingAlloc {
+    fn record(bytes: usize) {
+        let _ = TRACKING.try_with(|t| {
+            if t.get() {
+                let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+                let _ = THREAD_BYTES.try_with(|c| c.set(c.get() + bytes as u64));
+            }
+        });
+    }
+}
+
+unsafe impl GlobalAlloc for ThreadCountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ThreadCountingAlloc::record(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ThreadCountingAlloc::record(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: ThreadCountingAlloc = ThreadCountingAlloc;
 
 /// Drive `model` for `rounds` rounds of `clients` and return the pooled
 /// (lag-1 autocorrelation, mean power) of the true channel coefficients.
@@ -248,6 +310,160 @@ fn gauss_markov_trajectories_are_seed_deterministic() {
     };
     assert_eq!(run(42), run(42), "same seed must give identical trajectories");
     assert_ne!(run(42), run(43), "different seeds must differ");
+}
+
+#[test]
+fn sampled_k_selection_frequency_is_uniform() {
+    // Floyd's sampling must select every client with equal probability:
+    // chi-square over a 40-client fleet, K=4 per round, 25k rounds
+    // (100k draws, expected 2500 per client).  df = 39: mean 39, std
+    // ~8.8 — the 80 bound is ~4.6σ (p < 1e-4), and the fixed seed makes
+    // the statistic a constant anyway.
+    let n = 40usize;
+    let k = 4usize;
+    let rounds = 25_000usize;
+    let sel = Selection::SampledK(k);
+    let mut rng = Rng::seed_from(7777);
+    let mut counts = vec![0u64; n];
+    let mut out = Vec::new();
+    for t in 1..=rounds {
+        sel.select_into(n, t, &mut rng, &mut out);
+        assert_eq!(out.len(), k);
+        assert!(out.windows(2).all(|w| w[0] < w[1]), "sorted, distinct");
+        for &c in &out {
+            counts[c] += 1;
+        }
+    }
+    let expected = (rounds * k) as f64 / n as f64;
+    let chi2: f64 = counts
+        .iter()
+        .map(|&c| {
+            let d = c as f64 - expected;
+            d * d / expected
+        })
+        .sum();
+    assert!(chi2 < 80.0, "chi-square {chi2:.2} over {n} cells (exp {expected})");
+    // and no client is starved or doubled
+    for (c, &cnt) in counts.iter().enumerate() {
+        assert!(
+            (cnt as f64) > 0.7 * expected && (cnt as f64) < 1.3 * expected,
+            "client {c} selected {cnt} times (expected ~{expected})"
+        );
+    }
+}
+
+#[test]
+fn million_client_fleet_round_state_is_o_shard_not_o_fleet() {
+    // A full sharded channel-only round loop over a 1,000,000-client
+    // fleet: SampledK selection (O(K) state), per-participant policy
+    // assignment (O(K)), 16-row payload shards streamed into the air
+    // accumulator (O(shard·n)).  The per-thread counting allocator
+    // proves (a) the COLD START — construction + first rounds, every
+    // buffer growing to capacity — stays under 1 MB total, an order of
+    // magnitude below what any fleet-sized vector would cost (1M × 8-byte
+    // indices = 8 MB; even 1M × 1-byte levels = 1 MB), and (b) warm
+    // rounds allocate NOTHING.
+    const FLEET: usize = 1_000_000;
+    const KSEL: usize = 64;
+    const SHARD: usize = 16;
+    const N: usize = 2048;
+
+    TRACKING.with(|t| t.set(true));
+    let base_allocs = THREAD_ALLOCS.with(|c| c.get());
+    let base_bytes = THREAD_BYTES.with(|c| c.get());
+
+    let root = Rng::seed_from(9000);
+    let mut select_rng = root.stream("select");
+    let mut payload_rng = root.stream("payload");
+    let mut session = Session::new(
+        Box::new(RayleighPilot::new(ChannelConfig::default())),
+        Box::new(AnalogOta),
+        root.stream("channel"),
+        root.stream("noise"),
+        1,
+    );
+    let mut policy = StaticScheme::new(Scheme::parse("16,8").unwrap());
+    let selection = Selection::SampledK(KSEL);
+    let mut selected: Vec<usize> = Vec::new();
+    let mut assigned = Vec::new();
+    let mut plane = PayloadPlane::new();
+
+    let round = |t: usize,
+                 session: &mut Session,
+                 select_rng: &mut Rng,
+                 payload_rng: &mut Rng,
+                 policy: &mut StaticScheme,
+                 selected: &mut Vec<usize>,
+                 assigned: &mut Vec<mpota::quant::Precision>,
+                 plane: &mut PayloadPlane| {
+        selection.select_into(FLEET, t, select_rng, selected);
+        let kk = selected.len();
+        policy
+            .assign_selected_into(
+                &PolicyCtx { round: t, clients: FLEET, snr_db: 20.0, prev: None },
+                &selected[..],
+                assigned,
+            )
+            .unwrap();
+        session.begin_aggregate(t, kk, N);
+        let mut lo = 0usize;
+        while lo < kk {
+            let hi = (lo + SHARD).min(kk);
+            plane.reset(hi - lo, N);
+            for r in 0..(hi - lo) {
+                let row = plane.row_mut(r);
+                payload_rng.fill_normal(row, 0.0, 1.0);
+                quant::fake_quant_inplace(row, assigned[lo + r]);
+            }
+            session.accumulate_shard(plane, lo, &assigned[lo..hi]);
+            lo = hi;
+        }
+        let stats = session.finalize_aggregate(t, &assigned[..]);
+        assert!(stats.participants <= KSEL);
+        std::hint::black_box(stats.participants);
+    };
+
+    // cold start: build + grow every buffer over three rounds
+    for t in 1..=3 {
+        round(
+            t,
+            &mut session,
+            &mut select_rng,
+            &mut payload_rng,
+            &mut policy,
+            &mut selected,
+            &mut assigned,
+            &mut plane,
+        );
+    }
+    let cold_bytes = THREAD_BYTES.with(|c| c.get()) - base_bytes;
+    let cold_allocs = THREAD_ALLOCS.with(|c| c.get()) - base_allocs;
+    assert!(
+        cold_bytes < 1 << 20,
+        "cold start allocated {cold_bytes} bytes over {cold_allocs} allocations \
+         — fleet-sized state materialized?"
+    );
+
+    // warm rounds: the steady-state loop allocates nothing at all
+    let warm_before = THREAD_ALLOCS.with(|c| c.get());
+    for t in 4..=24 {
+        round(
+            t,
+            &mut session,
+            &mut select_rng,
+            &mut payload_rng,
+            &mut policy,
+            &mut selected,
+            &mut assigned,
+            &mut plane,
+        );
+    }
+    let warm = THREAD_ALLOCS.with(|c| c.get()) - warm_before;
+    TRACKING.with(|t| t.set(false));
+    assert_eq!(
+        warm, 0,
+        "steady-state 1M-fleet sharded rounds allocated {warm} times"
+    );
 }
 
 #[test]

@@ -1,0 +1,211 @@
+//! SHARD-INVARIANCE pins for the streaming round pipeline.
+//!
+//! The coordinator streams each round's K selected clients through
+//! `RunConfig::shard_size`-row payload shards: every shard trains on the
+//! exec pool, fills a small reusable plane, and is fused-superposed into
+//! the session's persistent air accumulator before the next shard reuses
+//! the buffers (round memory O(shard·N + K) instead of O(K·N)).
+//!
+//! The repo's hard contract is that this is a pure memory/scheduling
+//! transformation: for a fixed seed, FULL-RUN trajectories — global model
+//! bits, per-round train loss, OTA MSE, server loss, participants, final
+//! report — are bit-identical across every `shard_size` × `threads` ×
+//! `workers` combination, under every channel model.  These tests mirror
+//! the PR-4 determinism pins in `tests/sim.rs` (same deterministic mock
+//! `TrainBackend`, now shared via `mpota::testing`), adding the shard
+//! axis.
+
+use std::rc::Rc;
+
+use mpota::channel::FadingKind;
+use mpota::config::{RunConfig, SelectionKind};
+use mpota::coordinator::RunReport;
+use mpota::fl::Scheme;
+use mpota::runtime::Runtime;
+use mpota::sim::Experiment;
+use mpota::testing::{mock_artifacts_dir, MockTrainer};
+
+fn base_cfg(model: FadingKind, dir: &std::path::Path) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.artifacts_dir = dir.to_path_buf();
+    cfg.variant = "mock".into();
+    cfg.clients = 6;
+    cfg.clients_per_round = 6;
+    cfg.rounds = 3;
+    cfg.train_samples = 96;
+    cfg.test_samples = 32;
+    cfg.scheme = Scheme::parse("16,8,4").unwrap();
+    cfg.channel.model = model;
+    if model == FadingKind::GaussMarkov {
+        cfg.channel.rho = 0.85;
+    }
+    cfg
+}
+
+/// Run the full experiment and flatten everything comparable to bits.
+fn run(cfg: RunConfig, rt: Rc<Runtime>) -> (Vec<u32>, RunReport) {
+    let mut exp = Experiment::builder(cfg)
+        .runtime(rt)
+        .backend(MockTrainer)
+        .build()
+        .unwrap();
+    let report = exp.run().unwrap();
+    let bits: Vec<u32> = exp.global_model().iter().map(|v| v.to_bits()).collect();
+    (bits, report)
+}
+
+fn assert_trajectories_equal(
+    label: &str,
+    (theta_ref, rep_ref): &(Vec<u32>, RunReport),
+    (theta, rep): &(Vec<u32>, RunReport),
+) {
+    assert_eq!(theta_ref, theta, "{label}: global model diverged");
+    assert_eq!(rep_ref.log.rounds.len(), rep.log.rounds.len(), "{label}");
+    for (a, b) in rep_ref.log.rounds.iter().zip(rep.log.rounds.iter()) {
+        assert_eq!(a.participants, b.participants, "{label} round {}", a.round);
+        assert_eq!(
+            a.train_loss.to_bits(),
+            b.train_loss.to_bits(),
+            "{label} round {}",
+            a.round
+        );
+        assert_eq!(
+            a.train_accuracy.to_bits(),
+            b.train_accuracy.to_bits(),
+            "{label} round {}",
+            a.round
+        );
+        assert_eq!(
+            a.ota_mse.to_bits(),
+            b.ota_mse.to_bits(),
+            "{label} round {}",
+            a.round
+        );
+        assert_eq!(
+            a.server_loss.to_bits(),
+            b.server_loss.to_bits(),
+            "{label} round {}",
+            a.round
+        );
+        assert_eq!(
+            a.energy_joules.to_bits(),
+            b.energy_joules.to_bits(),
+            "{label} round {}",
+            a.round
+        );
+    }
+    assert_eq!(
+        rep_ref.final_accuracy.to_bits(),
+        rep.final_accuracy.to_bits(),
+        "{label}: final accuracy"
+    );
+    assert_eq!(
+        rep_ref.final_loss.to_bits(),
+        rep.final_loss.to_bits(),
+        "{label}: final loss"
+    );
+}
+
+#[test]
+fn full_runs_bit_identical_across_shard_sizes_threads_and_workers() {
+    // the acceptance pin: shard_size ∈ {1, 3, K} × {threads, workers} ∈
+    // {1, 4}, under rayleigh, gauss_markov and path_loss, all reproduce
+    // the unsharded sequential trajectory bit for bit
+    let dir = mock_artifacts_dir("shardinv_full");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    for model in
+        [FadingKind::Rayleigh, FadingKind::GaussMarkov, FadingKind::PathLoss]
+    {
+        // reference: unsharded (shard_size 0 = one whole-round shard),
+        // sequential
+        let reference = run(base_cfg(model, &dir), rt.clone());
+        assert_eq!(reference.1.log.rounds.len(), 3);
+        for shard in [1usize, 3, 6] {
+            for (threads, workers) in [(1usize, 1usize), (4, 1), (1, 4), (4, 4)] {
+                let mut cfg = base_cfg(model, &dir);
+                cfg.shard_size = shard;
+                cfg.threads = threads;
+                cfg.workers = workers;
+                let got = run(cfg, rt.clone());
+                assert_trajectories_equal(
+                    &format!(
+                        "{model:?} shard={shard} threads={threads} workers={workers}"
+                    ),
+                    &reference,
+                    &got,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sampled_selection_runs_are_shard_invariant_too() {
+    // K < N with the Floyd's-sampling selector: the shard axis still
+    // never changes the trajectory (selection happens before sharding,
+    // and client results are per-client deterministic)
+    let dir = mock_artifacts_dir("shardinv_sampled");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    let mk = |shard: usize, threads: usize, workers: usize| {
+        let mut cfg = base_cfg(FadingKind::Rayleigh, &dir);
+        cfg.clients = 12;
+        cfg.clients_per_round = 6;
+        cfg.selection = SelectionKind::Sampled;
+        cfg.shard_size = shard;
+        cfg.threads = threads;
+        cfg.workers = workers;
+        cfg
+    };
+    let reference = run(mk(0, 1, 1), rt.clone());
+    for r in &reference.1.log.rounds {
+        assert!(r.participants <= 6, "at most K participants");
+    }
+    for shard in [1usize, 2, 6] {
+        for (threads, workers) in [(1usize, 1usize), (4, 4)] {
+            let got = run(mk(shard, threads, workers), rt.clone());
+            assert_trajectories_equal(
+                &format!("sampled shard={shard} threads={threads} workers={workers}"),
+                &reference,
+                &got,
+            );
+        }
+    }
+}
+
+#[test]
+fn shard_size_larger_than_k_is_one_shard() {
+    // shard_size > K clamps to one whole-round shard — same trajectory
+    let dir = mock_artifacts_dir("shardinv_clamp");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    let reference = run(base_cfg(FadingKind::Rayleigh, &dir), rt.clone());
+    let mut cfg = base_cfg(FadingKind::Rayleigh, &dir);
+    cfg.shard_size = 1000;
+    let got = run(cfg, rt.clone());
+    assert_trajectories_equal("shard_size > K", &reference, &got);
+}
+
+#[test]
+fn sharded_rounds_under_every_aggregation_path() {
+    // digital and ideal aggregators stream too: sharded == unsharded per
+    // seed for each aggregation architecture
+    let dir = mock_artifacts_dir("shardinv_agg");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    for agg in [
+        mpota::config::Aggregation::OtaAnalog,
+        mpota::config::Aggregation::Digital,
+        mpota::config::Aggregation::Ideal,
+    ] {
+        let mut ref_cfg = base_cfg(FadingKind::Rayleigh, &dir);
+        ref_cfg.aggregation = agg;
+        let reference = run(ref_cfg, rt.clone());
+        for shard in [1usize, 3] {
+            let mut cfg = base_cfg(FadingKind::Rayleigh, &dir);
+            cfg.aggregation = agg;
+            cfg.shard_size = shard;
+            cfg.threads = 4;
+            cfg.workers = 4;
+            let got = run(cfg, rt.clone());
+            assert_trajectories_equal(&format!("{agg:?} shard={shard}"), &reference, &got);
+        }
+    }
+}
