@@ -13,6 +13,8 @@
 //!   * exec-pool dispatch latency (persistent parked pool vs per-call
 //!     scoped spawning) and `workers`-scaling of the client
 //!     quantize/modulate phase (row-partitioned plane writes)
+//!   * pipelined vs serial streaming round (PR-6: payload generation of
+//!     super-shard t+1 overlapping superposition of super-shard t)
 //!   * PJRT train-step + eval dispatch (artifacts + `pjrt` feature only)
 //!
 //! Run: `cargo bench --bench hotpaths`
@@ -432,6 +434,133 @@ fn main() {
         (dense, sharded)
     };
 
+    // --- pipelined vs serial round (PR-6 overlap engine) -------------------
+    // the async round engine's wall win: client payload generation of
+    // super-shard t+1 (Box-Muller fill + fused 4-bit quantize — the
+    // "training" half) overlaps the superposition of super-shard t on the
+    // exec pool, double-buffered exactly like Coordinator::pipeline_step.
+    // Bit-identity of the two paths is pinned by
+    // tests/shard_invariance.rs; this measures the overlap.
+    let (round_serial, round_pipelined) = {
+        struct SendMut<T>(*mut T);
+        unsafe impl<T> Send for SendMut<T> {}
+        unsafe impl<T> Sync for SendMut<T> {}
+
+        fn fill_shard(plane: &mut PayloadPlane, rng: &mut Rng) {
+            for r in 0..plane.k() {
+                rng.fill_normal(plane.row_mut(r), 0.0, 1.0);
+                quant::fake_quant_inplace(plane.row_mut(r), Precision::of(4));
+            }
+        }
+
+        let ksel = 16usize;
+        let nn = n; // flagship payload size
+        let step = 4usize;
+        let pcfg = ChannelConfig::default();
+        let mut pch_rng = Rng::seed_from(31);
+        let pround = RoundChannel::draw(&pcfg, ksel, &mut pch_rng);
+        let pbytes = ksel * nn * 4;
+        let mut pscratch = OtaScratch::new();
+        let mut plane_a = PayloadPlane::zeros(step, nn);
+        let mut plane_b = PayloadPlane::zeros(step, nn);
+
+        let serial = res.bench(
+            "round serial fill-then-superpose (K=16 s=4)",
+            pbytes,
+            || {
+                let mut prng = Rng::seed_from(13);
+                let mut noise_rng = Rng::seed_from(7);
+                ota::analog::begin_plane_into(nn, &mut pscratch);
+                let mut lo = 0usize;
+                while lo < ksel {
+                    let hi = (lo + step).min(ksel);
+                    plane_a.reset(hi - lo, nn);
+                    fill_shard(&mut plane_a, &mut prng);
+                    ota::analog::accumulate_plane_into(
+                        &plane_a,
+                        lo,
+                        &pround,
+                        &mut pscratch,
+                        1,
+                    );
+                    lo = hi;
+                }
+                let stats = ota::analog::finalize_plane_into(
+                    &pround,
+                    &mut noise_rng,
+                    &mut pscratch,
+                    1,
+                );
+                std::hint::black_box(stats.participants);
+            },
+        );
+        let pool = mpota::exec::pool();
+        let pipelined = res.bench(
+            "round pipelined overlap depth=1 (K=16 s=4)",
+            pbytes,
+            || {
+                let mut prng = Rng::seed_from(13);
+                let mut noise_rng = Rng::seed_from(7);
+                ota::analog::begin_plane_into(nn, &mut pscratch);
+                plane_a.reset(step, nn);
+                fill_shard(&mut plane_a, &mut prng);
+                let mut lo = 0usize; // start of the filled super-shard
+                let mut cur_in_b = true;
+                while lo + step < ksel {
+                    let cur_lo = lo + step;
+                    let cur_hi = (cur_lo + step).min(ksel);
+                    let (prev_plane, cur_plane) = if cur_in_b {
+                        (&plane_a, &mut plane_b)
+                    } else {
+                        (&plane_b, &mut plane_a)
+                    };
+                    {
+                        let scratch_ptr =
+                            SendMut(&mut pscratch as *mut OtaScratch);
+                        let prng_ptr = SendMut(&mut prng as *mut Rng);
+                        let cur_ptr = SendMut(cur_plane as *mut PayloadPlane);
+                        let prev_ref: &PayloadPlane = prev_plane;
+                        let pround_ref = &pround;
+                        let task = move |i: usize| {
+                            if i == 0 {
+                                // SAFETY: sole scratch toucher this dispatch
+                                let s = unsafe { &mut *scratch_ptr.0 };
+                                ota::analog::accumulate_plane_into(
+                                    prev_ref, lo, pround_ref, s, 1,
+                                );
+                            } else {
+                                // SAFETY: sole toucher of the idle plane+rng
+                                let p = unsafe { &mut *cur_ptr.0 };
+                                let r = unsafe { &mut *prng_ptr.0 };
+                                p.reset(cur_hi - cur_lo, nn);
+                                fill_shard(p, r);
+                            }
+                        };
+                        pool.broadcast(2, &task);
+                    }
+                    lo = cur_lo;
+                    cur_in_b = !cur_in_b;
+                }
+                let last = if cur_in_b { &plane_a } else { &plane_b };
+                ota::analog::accumulate_plane_into(
+                    last,
+                    lo,
+                    &pround,
+                    &mut pscratch,
+                    1,
+                );
+                let stats = ota::analog::finalize_plane_into(
+                    &pround,
+                    &mut noise_rng,
+                    &mut pscratch,
+                    1,
+                );
+                std::hint::black_box(stats.participants);
+            },
+        );
+        (serial, pipelined)
+    };
+
     // --- PJRT dispatch (needs artifacts + the pjrt feature) ----------------
     let dir = std::path::PathBuf::from("artifacts");
     if cfg!(feature = "pjrt") && dir.join("manifest.json").exists() {
@@ -491,6 +620,7 @@ fn main() {
     speedup(&mut speedups, "fedavg_mean_plane", mean_scalar, mean_fused);
     speedup(&mut speedups, "pool_dispatch_vs_spawn", spawn_lat, pool_lat);
     speedup(&mut speedups, "fleet_scaling_k1000000", fleet_dense, fleet_sharded);
+    speedup(&mut speedups, "pipelined_vs_serial_round", round_serial, round_pipelined);
     if let Some(t) = cp_wn {
         let cp_workers = ncpu.min(k);
         speedup(

@@ -109,6 +109,42 @@ impl std::fmt::Display for SelectionKind {
     }
 }
 
+/// Per-round dropout process for the straggler/robustness model (the
+/// config-file name for the [`crate::sim::VirtualClock`] dropout draw).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropoutKind {
+    /// Independent Bernoulli(`dropout_p`) per selected client per round.
+    Iid,
+    /// Bursty Gilbert (two-state Markov) outages: a client that drops
+    /// stays down for `dropout_burst` rounds in expectation, with the
+    /// stationary dropout probability still `dropout_p`.
+    Bursty,
+}
+
+impl std::str::FromStr for DropoutKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "iid" | "bernoulli" => Ok(DropoutKind::Iid),
+            "bursty" | "markov" | "gilbert" => Ok(DropoutKind::Bursty),
+            other => bail!("unknown dropout model '{other}' (iid|bursty)"),
+        }
+    }
+}
+
+impl std::fmt::Display for DropoutKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}",
+            match self {
+                DropoutKind::Iid => "iid",
+                DropoutKind::Bursty => "bursty",
+            }
+        )
+    }
+}
+
 /// What clients put on the air each round.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Transmit {
@@ -202,6 +238,38 @@ pub struct RunConfig {
     /// historical whole-round plane.  Trajectories are bit-identical per
     /// seed for EVERY shard size (`rust/tests/shard_invariance.rs`).
     pub shard_size: usize,
+    /// Pipelined round engine: overlap the client phase of super-shard
+    /// t+1 with the superposition of super-shard t on the exec pool,
+    /// through double-buffered shard planes.  `0` (the default) is the
+    /// serial PR-5 path; `d ≥ 1` widens each pipeline step to `d ×
+    /// shard_len` rows.  A pure scheduling transformation: trajectories
+    /// are bit-identical per seed at every depth
+    /// (`rust/tests/shard_invariance.rs`).
+    pub pipeline_depth: usize,
+    /// Per-round transmission deadline in virtual seconds; a selected
+    /// client whose simulated latency (precision-dependent compute time +
+    /// channel slot time) exceeds it is excluded from the superposition
+    /// and the aggregation divisor.  `0` (the default) disables the
+    /// straggler model entirely — the round path is then byte-identical
+    /// to the deadline-free engine (no straggler RNG draws).
+    pub deadline_s: f64,
+    /// Virtual compute seconds for one full-precision (32-bit) local
+    /// round; a b-bit client takes `compute_s · b/32` before jitter.
+    pub compute_s: f64,
+    /// Log-normal jitter sigma on the per-client compute time
+    /// (`exp(latency_jitter · z)`, z ~ N(0,1)); 0 = deterministic clock.
+    pub latency_jitter: f64,
+    /// Virtual seconds of channel slot time added to every client's
+    /// latency (synchronization + pilot overhead).
+    pub slot_s: f64,
+    /// Per-round dropout probability per selected client (stationary rate
+    /// for both dropout models).  `0` (the default) disables dropout.
+    pub dropout_p: f64,
+    /// Dropout process shape: i.i.d. Bernoulli or bursty Gilbert/Markov.
+    pub dropout_model: DropoutKind,
+    /// Mean outage length in rounds for the `bursty` dropout model
+    /// (ignored by `iid`; must be ≥ 1).
+    pub dropout_burst: f64,
     /// Communication rounds T (paper: 100).
     pub rounds: usize,
     /// Precision scheme (paper §IV-A2) — the static assignment used by
@@ -256,6 +324,14 @@ impl Default for RunConfig {
             clients_per_round: 15,
             selection: SelectionKind::Auto,
             shard_size: 0,
+            pipeline_depth: 0,
+            deadline_s: 0.0,
+            compute_s: 0.05,
+            latency_jitter: 0.25,
+            slot_s: 0.005,
+            dropout_p: 0.0,
+            dropout_model: DropoutKind::Iid,
+            dropout_burst: 3.0,
             rounds: 100,
             scheme: Scheme::parse("16,8,4").expect("static scheme"),
             policy: PolicyKind::Static,
@@ -291,6 +367,14 @@ impl RunConfig {
         } else {
             self.shard_size.min(kk).max(1)
         }
+    }
+
+    /// Whether the straggler/dropout model draws anything this run: a
+    /// positive deadline or a positive dropout rate.  When this is false
+    /// the round engine consumes ZERO straggler RNG draws and the
+    /// trajectory is byte-identical to the deadline-free engine.
+    pub fn straggler_enabled(&self) -> bool {
+        self.deadline_s > 0.0 || self.dropout_p > 0.0
     }
 
     /// Validate cross-field invariants.
@@ -332,6 +416,27 @@ impl RunConfig {
         if !(self.energy_budget_j > 0.0 && self.energy_budget_j.is_finite()) {
             bail!("energy_budget_j must be positive and finite");
         }
+        if !(self.deadline_s >= 0.0 && self.deadline_s.is_finite()) {
+            bail!("deadline_s must be >= 0 and finite (0 disables the deadline)");
+        }
+        if !(self.compute_s > 0.0 && self.compute_s.is_finite()) {
+            bail!("compute_s must be positive and finite");
+        }
+        if !(self.latency_jitter >= 0.0 && self.latency_jitter.is_finite()) {
+            bail!("latency_jitter must be >= 0 and finite");
+        }
+        if !(self.slot_s >= 0.0 && self.slot_s.is_finite()) {
+            bail!("slot_s must be >= 0 and finite");
+        }
+        if !(self.dropout_p >= 0.0 && self.dropout_p < 1.0) {
+            bail!(
+                "dropout_p {} must be in [0, 1) (1 would exclude every round)",
+                self.dropout_p
+            );
+        }
+        if !(self.dropout_burst >= 1.0 && self.dropout_burst.is_finite()) {
+            bail!("dropout_burst must be >= 1 round");
+        }
         Ok(())
     }
 
@@ -352,6 +457,14 @@ impl RunConfig {
                 "clients_per_round" => self.clients_per_round = val.as_usize()?,
                 "selection" => self.selection = val.as_str()?.parse()?,
                 "shard_size" => self.shard_size = val.as_usize()?,
+                "pipeline_depth" => self.pipeline_depth = val.as_usize()?,
+                "deadline_s" => self.deadline_s = val.as_f64()?,
+                "compute_s" => self.compute_s = val.as_f64()?,
+                "latency_jitter" => self.latency_jitter = val.as_f64()?,
+                "slot_s" => self.slot_s = val.as_f64()?,
+                "dropout_p" => self.dropout_p = val.as_f64()?,
+                "dropout_model" => self.dropout_model = val.as_str()?.parse()?,
+                "dropout_burst" => self.dropout_burst = val.as_f64()?,
                 "rounds" => self.rounds = val.as_usize()?,
                 "scheme" => self.scheme = Scheme::parse(val.as_str()?)?,
                 "policy" => self.policy = val.as_str()?.parse()?,
@@ -410,6 +523,14 @@ impl RunConfig {
         o.set("clients_per_round", Value::Num(self.clients_per_round as f64));
         o.set("selection", Value::Str(self.selection.to_string()));
         o.set("shard_size", Value::Num(self.shard_size as f64));
+        o.set("pipeline_depth", Value::Num(self.pipeline_depth as f64));
+        o.set("deadline_s", Value::Num(self.deadline_s));
+        o.set("compute_s", Value::Num(self.compute_s));
+        o.set("latency_jitter", Value::Num(self.latency_jitter));
+        o.set("slot_s", Value::Num(self.slot_s));
+        o.set("dropout_p", Value::Num(self.dropout_p));
+        o.set("dropout_model", Value::Str(self.dropout_model.to_string()));
+        o.set("dropout_burst", Value::Num(self.dropout_burst));
         o.set("rounds", Value::Num(self.rounds as f64));
         o.set("scheme", Value::Str(self.scheme.to_string()));
         o.set("policy", Value::Str(self.policy.to_string()));
@@ -523,6 +644,14 @@ mod tests {
         c.clients_per_round = 10;
         c.selection = SelectionKind::Sampled;
         c.shard_size = 4;
+        c.pipeline_depth = 2;
+        c.deadline_s = 0.5;
+        c.compute_s = 0.1;
+        c.latency_jitter = 0.5;
+        c.slot_s = 0.01;
+        c.dropout_p = 0.15;
+        c.dropout_model = DropoutKind::Bursty;
+        c.dropout_burst = 5.0;
         c.rounds = 7;
         c.scheme = Scheme::parse("24,12,6").unwrap();
         c.policy = PolicyKind::SnrAdaptive;
@@ -704,6 +833,66 @@ mod tests {
         assert_eq!(c.shard_len(15), 15);
         c.shard_size = 4; // smaller round than the shard
         assert_eq!(c.shard_len(3), 3);
+    }
+
+    #[test]
+    fn robustness_knobs_parse_validate_and_roundtrip() {
+        assert_eq!("iid".parse::<DropoutKind>().unwrap(), DropoutKind::Iid);
+        assert_eq!("bernoulli".parse::<DropoutKind>().unwrap(), DropoutKind::Iid);
+        assert_eq!("bursty".parse::<DropoutKind>().unwrap(), DropoutKind::Bursty);
+        assert_eq!("markov".parse::<DropoutKind>().unwrap(), DropoutKind::Bursty);
+        assert_eq!("gilbert".parse::<DropoutKind>().unwrap(), DropoutKind::Bursty);
+        assert!("flaky".parse::<DropoutKind>().is_err());
+
+        // defaults: straggler model fully off
+        let c = RunConfig::default();
+        assert!(!c.straggler_enabled());
+        c.validate().unwrap();
+
+        // JSON overrides reach every robustness knob
+        let mut c = RunConfig::default();
+        c.apply_json(
+            &json::parse(
+                r#"{"pipeline_depth": 2, "deadline_s": 0.4, "compute_s": 0.08,
+                    "latency_jitter": 0.3, "slot_s": 0.002, "dropout_p": 0.1,
+                    "dropout_model": "bursty", "dropout_burst": 4.0}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.pipeline_depth, 2);
+        assert_eq!(c.deadline_s, 0.4);
+        assert_eq!(c.compute_s, 0.08);
+        assert_eq!(c.latency_jitter, 0.3);
+        assert_eq!(c.slot_s, 0.002);
+        assert_eq!(c.dropout_p, 0.1);
+        assert_eq!(c.dropout_model, DropoutKind::Bursty);
+        assert_eq!(c.dropout_burst, 4.0);
+        assert!(c.straggler_enabled());
+        c.validate().unwrap();
+
+        // range checks
+        let mut c = RunConfig::default();
+        c.dropout_p = 1.0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.dropout_p = -0.1;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.dropout_burst = 0.5;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.deadline_s = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.compute_s = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.latency_jitter = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.slot_s = f64::INFINITY;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -34,6 +34,31 @@
 //! an injected `Sync` [`crate::exec::TrainBackend`] runs on the workers
 //! directly.  Per-client RNG/state makes the trajectory bit-identical at
 //! every worker count (`rust/tests/sim.rs`).
+//!
+//! **Pipelining** (`RunConfig::pipeline_depth > 0`): the streamed round
+//! overlaps the CLIENT phase of the next super-shard (`pipeline_depth ·
+//! shard_len` slots) with the SUPERPOSITION of the previous one.  Each
+//! step is ONE pool dispatch of `workers + 1` tasks: task 0 — the
+//! dispatch's sole [`sim::Session`] toucher — accumulates the previous
+//! super-shard out of one payload plane while tasks `1..=workers` train
+//! the current super-shard into the other (double-buffered) plane.  The
+//! accumulator remains the only synchronisation point, shards still
+//! arrive in ascending slot order, and nested kernels run inline on the
+//! superposing worker — so the trajectory stays bit-identical for every
+//! `pipeline_depth` (`rust/tests/shard_invariance.rs`); `0` is the
+//! serial PR-5 path.
+//!
+//! **Stragglers & dropouts**: when a [`sim::DeadlinePolicy`] is active
+//! (injected, or derived from the `deadline_s`/`dropout_p` config keys),
+//! the coordinator decides each round's exclusions up front — serially,
+//! in slot order, from the dedicated `"straggler"` RNG stream — BEFORE
+//! any training runs.  Excluded clients skip local training entirely (no
+//! energy accrued, default stats) and their plane rows are never read:
+//! the masked aggregation kernels skip them and the effective divisor
+//! follows the clients that actually transmit (ideal/digital divide by
+//! `active_k`; analog OTA's `active_total` self-adjusts).  With no
+//! policy the stream is never consumed and the round is byte-identical
+//! to the deadline-free engine.
 
 pub mod client;
 pub mod pretrain;
@@ -78,6 +103,16 @@ pub struct RoundScratch {
     /// otherwise it holds one shard at a time and is recycled shard to
     /// shard — the O(shard·N) round-memory contract.
     pub(crate) plane: PayloadPlane,
+    /// Second payload plane for the pipelined round engine: while one
+    /// plane's super-shard superposes (task 0 of the combined dispatch),
+    /// the next super-shard trains into this one.  Unused (never grown)
+    /// when `pipeline_depth == 0`.
+    pub(crate) plane2: PayloadPlane,
+    /// Round-slot participation mask (aligned with `precisions`): `true`
+    /// = the client makes the deadline and transmits.  All-true when no
+    /// deadline/dropout policy is active; excluded slots skip training
+    /// and their (stale) plane rows are never read.
+    pub(crate) included: Vec<bool>,
     /// Per-participant precision levels (aligned with ROUND slots, all K
     /// of them — shards index it at `lo..hi`).
     pub(crate) precisions: Vec<Precision>,
@@ -105,6 +140,8 @@ struct ClientPhaseEnv<'a> {
     transmit_weights: bool,
     layout: &'a crate::tensor::ParamLayout,
     threads: usize,
+    /// Shard-local participation mask; `false` slots never train.
+    included: &'a [bool],
 }
 
 /// One worker's share of the client phase: slots
@@ -124,6 +161,10 @@ fn run_client_slots<S: exec::TrainStep + ?Sized>(
     let lo = par::chunk_start(env.kk, env.workers, w);
     let hi = lo + par::chunk_len(env.kk, env.workers, w);
     for slot in lo..hi {
+        if !env.included[slot] {
+            continue; // excluded by the deadline/dropout policy: no
+                      // training, no energy, stats stay default
+        }
         let k = env.selected[slot];
         // SAFETY: `selected` indices are pairwise distinct (Selection
         // contract) and each slot belongs to exactly one worker range, so
@@ -172,6 +213,18 @@ pub struct Coordinator {
     scratch: RoundScratch,
     session: sim::Session,
     policy: Box<dyn sim::PrecisionPolicy>,
+    /// Straggler/dropout policy; `None` = every selected client makes
+    /// the deadline (the byte-identical deadline-free engine).
+    deadline: Option<Box<dyn sim::DeadlinePolicy>>,
+    /// Dedicated RNG stream for the deadline policy — derived for every
+    /// run (stream derivation consumes nothing from the root) but
+    /// consumed ONLY when a policy is active.
+    straggler_rng: Rng,
+    /// True when the aggregator is the config-selected built-in (not an
+    /// injected trait object): the pipelined engine's superposition task
+    /// runs on a pool worker and is gated to the built-ins, whose session
+    /// state is known Send-safe.
+    streaming_builtin: bool,
     /// Injected training/eval backend; `None` = the PJRT runtime.
     backend: Option<Box<dyn exec::TrainBackend>>,
     /// PJRT request funnel for the `workers > 1` client phase.
@@ -250,12 +303,49 @@ impl Coordinator {
         let selection =
             Selection::from_config(cfg.selection, cfg.clients, cfg.clients_per_round);
 
+        let streaming_builtin = parts.aggregator.is_none();
         let aggregator = parts
             .aggregator
             .unwrap_or_else(|| sim::aggregator::from_config(cfg.aggregation));
         let channel_model = parts
             .channel_model
             .unwrap_or_else(|| sim::channel_model::from_config(&cfg.channel));
+
+        // Straggler/dropout policy: injected wins; else derived from the
+        // config knobs (None when both are off).  A disabled injected
+        // policy is dropped so `deadline.is_some()` == "exclusions can
+        // happen this run".
+        let deadline = match parts.deadline {
+            Some(d) if d.enabled() => Some(d),
+            Some(_) => None,
+            None => sim::deadline::from_config(&cfg),
+        };
+
+        // Shard streaming and deadline handling both need the shard
+        // protocol — surface incompatible part/config combinations here,
+        // at build time, instead of failing (or silently mis-aggregating)
+        // rounds in.
+        if !aggregator.supports_streaming() {
+            let kk = cfg.clients_per_round;
+            anyhow::ensure!(
+                cfg.shard_len(kk) >= kk,
+                "aggregator '{}' does not support streaming rounds: \
+                 shard_size {} < clients_per_round {}; remove shard_size \
+                 or use a streaming aggregator",
+                aggregator.name(),
+                cfg.shard_size,
+                kk
+            );
+            if let Some(d) = &deadline {
+                anyhow::bail!(
+                    "aggregator '{}' does not support streaming rounds, \
+                     which straggler handling requires: disable the '{}' \
+                     deadline/dropout policy or use a streaming aggregator",
+                    aggregator.name(),
+                    d.name()
+                );
+            }
+        }
 
         let label = format!("{}@{}", policy.label(), aggregator.name());
         let mut session = sim::Session::with_state(
@@ -273,6 +363,7 @@ impl Coordinator {
 
         Ok(Coordinator {
             select_rng: root.stream("select"),
+            straggler_rng: root.stream("straggler"),
             log: RunLog::new(label),
             macs_per_sample: variant.macs_per_sample,
             layout: variant.layout.clone(),
@@ -286,6 +377,8 @@ impl Coordinator {
             scratch,
             session,
             policy,
+            deadline,
+            streaming_builtin,
             backend: parts.backend,
             train_svc: exec::TrainService::new(),
         })
@@ -352,6 +445,35 @@ impl Coordinator {
         self.scratch.stats.clear();
         self.scratch.stats.resize(kk, LocalStats::default());
 
+        // Deadline/dropout exclusion, decided up front — serially, in
+        // slot order, from the dedicated "straggler" stream (consumed
+        // only here, only when a policy is active, so the disabled path
+        // is byte-identical to the deadline-free engine).
+        self.scratch.included.clear();
+        self.scratch.included.resize(kk, true);
+        let mut active_k = kk;
+        if let Some(policy) = &mut self.deadline {
+            let RoundScratch { selected, precisions, included, .. } =
+                &mut self.scratch;
+            // the policy marks EXCLUDED slots true; invert to the
+            // inclusion mask the client phase and aggregators consume
+            included.fill(false);
+            policy.exclude_into(
+                &sim::DeadlineCtx {
+                    round: t,
+                    selected: selected.as_slice(),
+                    precisions: precisions.as_slice(),
+                },
+                &mut self.straggler_rng,
+                included.as_mut_slice(),
+            );
+            for v in included.iter_mut() {
+                *v = !*v;
+            }
+            active_k = included.iter().filter(|&&v| v).count();
+        }
+        let straggler_on = self.deadline.is_some();
+
         // Steps 1-4, streamed in shards: each shard of selected clients
         // trains (partitioned across the exec pool when `cfg.workers >
         // 1`) into a small reusable payload plane which is immediately
@@ -366,30 +488,44 @@ impl Coordinator {
             // consumption as the post-training draw: the streams are
             // independent), so every shard superposes through its slots'
             // gains as soon as its clients finish
-            self.session.begin_aggregate(t, kk, n);
-            let mut lo = 0usize;
-            while lo < kk {
-                let hi = (lo + shard_len).min(kk);
-                self.client_phase(lo, hi, threads)?;
-                self.session.accumulate_shard(
-                    &self.scratch.plane,
-                    lo,
-                    &self.scratch.precisions[lo..hi],
-                );
-                lo = hi;
+            self.session.begin_aggregate_partial(t, kk, active_k, n);
+            let pool = exec::pool();
+            // Pipelined engine: overlap the next super-shard's client
+            // phase with the previous one's superposition.  Gated to the
+            // built-in aggregators (the superposition task touches the
+            // session from a pool worker) and to runs where the pool can
+            // actually overlap work; the serial branch is bit-identical
+            // by the shard-invariance contract.
+            let pipelined = self.cfg.pipeline_depth > 0
+                && self.streaming_builtin
+                && pool.max_workers() > 0
+                && !exec::must_inline();
+            if pipelined {
+                self.pipelined_shards(kk, shard_len, threads)?;
+            } else {
+                let mut lo = 0usize;
+                while lo < kk {
+                    let hi = (lo + shard_len).min(kk);
+                    self.client_phase(lo, hi, threads)?;
+                    self.session.accumulate_shard_masked(
+                        &self.scratch.plane,
+                        lo,
+                        &self.scratch.precisions[lo..hi],
+                        if straggler_on {
+                            Some(&self.scratch.included[lo..hi])
+                        } else {
+                            None
+                        },
+                    );
+                    lo = hi;
+                }
             }
             self.session.finalize_aggregate(t, &self.scratch.precisions)
         } else {
             // custom aggregator without the streaming protocol: the
-            // historical whole-plane round (and an explicit error rather
-            // than a silently-ignored shard_size)
-            anyhow::ensure!(
-                shard_len >= kk,
-                "aggregator '{}' does not support streaming; remove \
-                 shard_size (currently {}) or use a streaming aggregator",
-                self.session.aggregator_name(),
-                self.cfg.shard_size
-            );
+            // historical whole-plane round (`from_parts` already rejected
+            // shard_size/deadline configs that need streaming)
+            debug_assert!(shard_len >= kk && !straggler_on);
             self.client_phase(0, kk, threads)?;
             self.session
                 .aggregate(t, &self.scratch.plane, &self.scratch.precisions)
@@ -401,8 +537,13 @@ impl Coordinator {
             train_loss += s.mean_loss;
             train_acc += s.mean_acc;
         }
-        train_loss /= kk as f64;
-        train_acc /= kk as f64;
+        // mean over the clients that actually trained (excluded slots
+        // contribute default-zero stats); a fully-excluded round keeps
+        // the zero sums
+        if active_k > 0 {
+            train_loss /= active_k as f64;
+            train_acc /= active_k as f64;
+        }
         let participants = stats.participants;
         if participants > 0 {
             let agg = self.session.result();
@@ -474,6 +615,9 @@ impl Coordinator {
         if workers <= 1 {
             for r in 0..count {
                 let slot = lo + r;
+                if !self.scratch.included[slot] {
+                    continue; // excluded: no training, stats stay default
+                }
                 let k = self.scratch.selected[slot];
                 let c = &mut self.clients[k];
                 let stats = match &self.backend {
@@ -510,9 +654,11 @@ impl Coordinator {
             return Ok(());
         }
 
-        let RoundScratch { selected, plane, stats, errors, .. } = &mut self.scratch;
+        let RoundScratch { selected, plane, stats, errors, included, .. } =
+            &mut self.scratch;
         // shard-local views: worker slot indices run 0..count over these
         let selected: &[usize] = &selected[lo..hi];
+        let included: &[bool] = &included[lo..hi];
         let stats: &mut [LocalStats] = &mut stats[lo..hi];
         errors.clear();
         errors.resize_with(workers, || None);
@@ -533,6 +679,7 @@ impl Coordinator {
             transmit_weights,
             layout: &self.layout,
             threads,
+            included,
         };
 
         match &self.backend {
@@ -599,6 +746,237 @@ impl Coordinator {
         }
 
         for e in self.scratch.errors.iter_mut() {
+            if let Some(err) = e.take() {
+                return Err(err);
+            }
+        }
+        Ok(())
+    }
+
+    /// The pipelined streaming round: super-shards of `pipeline_depth ·
+    /// shard_len` slots flow through two alternating payload planes; each
+    /// step is ONE pool dispatch in which task 0 superposes the PREVIOUS
+    /// super-shard while tasks `1..=workers` train the CURRENT one.  The
+    /// first super-shard trains without overlap and the last one drains
+    /// on the coordinator thread, so the accumulator still receives every
+    /// shard in ascending slot order — bit-identical to the serial loop
+    /// for every `{pipeline_depth, shard_size, threads, workers}`
+    /// combination (`rust/tests/shard_invariance.rs`).
+    fn pipelined_shards(
+        &mut self,
+        kk: usize,
+        shard_len: usize,
+        threads: usize,
+    ) -> Result<()> {
+        let step_len = shard_len
+            .saturating_mul(self.cfg.pipeline_depth)
+            .min(kk)
+            .max(1);
+        // first super-shard: nothing to overlap yet, train into plane A
+        let mut prev_lo = 0usize;
+        let mut prev_hi = step_len.min(kk);
+        self.client_phase(prev_lo, prev_hi, threads)?;
+        // `cur_in_b`: the NEXT super-shard trains into `plane2`
+        let mut cur_in_b = true;
+        let mut lo = prev_hi;
+        while lo < kk {
+            let hi = (lo + step_len).min(kk);
+            self.pipeline_step(prev_lo, prev_hi, lo, hi, cur_in_b, threads)?;
+            prev_lo = lo;
+            prev_hi = hi;
+            lo = hi;
+            cur_in_b = !cur_in_b;
+        }
+        // drain: the last trained super-shard superposes here, after
+        // every training task has retired
+        let last_plane = if cur_in_b {
+            &self.scratch.plane
+        } else {
+            &self.scratch.plane2
+        };
+        self.session.accumulate_shard_masked(
+            last_plane,
+            prev_lo,
+            &self.scratch.precisions[prev_lo..prev_hi],
+            if self.deadline.is_some() {
+                Some(&self.scratch.included[prev_lo..prev_hi])
+            } else {
+                None
+            },
+        );
+        Ok(())
+    }
+
+    /// One pipelined step: a single `workers + 1`-task dispatch in which
+    /// task 0 — the dispatch's sole [`sim::Session`] toucher — superposes
+    /// the already-trained super-shard `[prev_lo, prev_hi)` out of one
+    /// plane while tasks `1..=workers` train super-shard `[cur_lo,
+    /// cur_hi)` into the other.  Nested dispatches inside the superposing
+    /// task run inline, which the kernels-layer determinism contract
+    /// makes bit-identical to every other thread count.
+    #[allow(clippy::too_many_arguments)]
+    fn pipeline_step(
+        &mut self,
+        prev_lo: usize,
+        prev_hi: usize,
+        cur_lo: usize,
+        cur_hi: usize,
+        cur_in_b: bool,
+        threads: usize,
+    ) -> Result<()> {
+        let n = self.theta.len();
+        let count = cur_hi - cur_lo;
+        let straggler_on = self.deadline.is_some();
+        let pool = exec::pool();
+        let workers = self.cfg.workers.min(count).max(1);
+        let transmit_weights =
+            matches!(self.cfg.transmit, crate::config::Transmit::Weights);
+
+        let Coordinator {
+            cfg,
+            runtime,
+            clients,
+            train_data,
+            theta,
+            macs_per_sample,
+            layout,
+            scratch,
+            session,
+            backend,
+            train_svc,
+            ..
+        } = self;
+        let RoundScratch {
+            selected,
+            plane,
+            plane2,
+            precisions,
+            stats,
+            errors,
+            included,
+            ..
+        } = scratch;
+        let (cur_plane, prev_plane) =
+            if cur_in_b { (plane2, plane) } else { (plane, plane2) };
+        cur_plane.reset(count, n);
+
+        // shard-local views for the training tasks
+        let sel: &[usize] = &selected[cur_lo..cur_hi];
+        let inc: &[bool] = &included[cur_lo..cur_hi];
+        let stats: &mut [LocalStats] = &mut stats[cur_lo..cur_hi];
+        errors.clear();
+        errors.resize_with(workers, || None);
+        let plane_ptr = exec::SendPtr::from_mut(cur_plane.as_mut_slice());
+        let stats_ptr = exec::SendPtr::from_mut(stats);
+        let errs_ptr = exec::SendPtr::from_mut(&mut errors[..]);
+        let clients = exec::DisjointMut::new(&mut clients[..]);
+        let env = ClientPhaseEnv {
+            workers,
+            kk: count,
+            n,
+            selected: sel,
+            data: &*train_data,
+            theta: theta.as_slice(),
+            lr: cfg.lr,
+            local_steps: cfg.local_steps,
+            macs_per_sample: *macs_per_sample,
+            transmit_weights,
+            layout: &*layout,
+            threads,
+            included: inc,
+        };
+
+        // the previous super-shard's superposition inputs
+        let prev_plane: &PayloadPlane = prev_plane;
+        let prev_prec: &[Precision] = &precisions[prev_lo..prev_hi];
+        let prev_mask: Option<&[bool]> = if straggler_on {
+            Some(&included[prev_lo..prev_hi])
+        } else {
+            None
+        };
+        let session_ptr = exec::SendMutPtr::from_mut(session);
+
+        match backend {
+            Some(b) => {
+                // Sync backend: training tasks run on workers directly.
+                let backend: &dyn exec::TrainBackend = b.as_ref();
+                let task = |w: usize| {
+                    if w == 0 {
+                        // SAFETY: task 0 is this dispatch's only Session
+                        // toucher (training tasks write the OTHER plane)
+                        // and the `&mut Session` the pointer was made from
+                        // outlives the blocking dispatch.
+                        let session = unsafe { session_ptr.get() };
+                        session.accumulate_shard_masked(
+                            prev_plane, prev_lo, prev_prec, prev_mask,
+                        );
+                    } else {
+                        run_client_slots(
+                            &env, &clients, plane_ptr, stats_ptr, errs_ptr,
+                            w - 1, backend,
+                        );
+                    }
+                };
+                pool.broadcast(workers + 1, &task);
+            }
+            None => {
+                // PJRT: training tasks funnel their train steps back to
+                // this thread, which sits in `serve`; the superposition
+                // task submits no train calls and just detaches when done.
+                let svc = &*train_svc;
+                svc.reset(workers + 1);
+                let runtime = &*runtime;
+                let variant = cfg.variant.as_str();
+                let task = |w: usize| {
+                    struct DetachGuard<'a>(&'a exec::TrainService);
+                    impl Drop for DetachGuard<'_> {
+                        fn drop(&mut self) {
+                            self.0.detach();
+                        }
+                    }
+                    let _guard = DetachGuard(svc);
+                    if w == 0 {
+                        // SAFETY: sole Session toucher, as above.
+                        let session = unsafe { session_ptr.get() };
+                        session.accumulate_shard_masked(
+                            prev_plane, prev_lo, prev_prec, prev_mask,
+                        );
+                    } else {
+                        let step = exec::GatewayStep::new(svc);
+                        run_client_slots(
+                            &env, &clients, plane_ptr, stats_ptr, errs_ptr,
+                            w - 1, &step,
+                        );
+                    }
+                };
+                let mut serve_panic: Option<Box<dyn std::any::Any + Send>> = None;
+                pool.host_broadcast(workers + 1, &task, &mut || {
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        svc.serve(|call| {
+                            runtime.train_step(
+                                variant,
+                                call.precision,
+                                call.theta,
+                                call.images,
+                                call.labels,
+                                call.lr,
+                            )
+                        })
+                    }));
+                    if let Err(p) = r {
+                        serve_panic = Some(p);
+                        svc.serve(|_| {
+                            Err(anyhow::anyhow!("PJRT runtime panicked mid-round"))
+                        });
+                    }
+                });
+                if let Some(p) = serve_panic {
+                    std::panic::resume_unwind(p);
+                }
+            }
+        }
+
+        for e in errors.iter_mut() {
             if let Some(err) = e.take() {
                 return Err(err);
             }

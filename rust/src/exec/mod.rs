@@ -79,6 +79,41 @@ impl<T> SendPtr<T> {
     }
 }
 
+/// Lifetime-erased exclusive pointer to ONE value, for handing a `&mut T`
+/// to exactly one task of a pool dispatch (the pipelined round engine's
+/// superposition task is the round's sole `Session` toucher while the
+/// other tasks train the next super-shard).
+///
+/// Unlike [`SendPtr`] this wrapper is deliberately NOT `Clone`/`Copy` and
+/// carries no region arithmetic: it represents the whole value, moved
+/// into one closure.
+pub(crate) struct SendMutPtr<T>(*mut T);
+
+// SAFETY: constructed from a live `&mut T` and dereferenced by exactly
+// one pool task per dispatch (callers uphold single-toucher use; the
+// coordinator gates the pipelined path to the built-in Send-safe session
+// parts).  The borrow the pointer was made from outlives the blocking
+// dispatch.
+unsafe impl<T> Send for SendMutPtr<T> {}
+unsafe impl<T> Sync for SendMutPtr<T> {}
+
+impl<T> SendMutPtr<T> {
+    pub(crate) fn from_mut(v: &mut T) -> Self {
+        SendMutPtr(v as *mut T)
+    }
+
+    /// Reborrow the underlying value.
+    ///
+    /// # Safety
+    /// At most one live reborrow at a time, only while the original
+    /// borrow is still in scope (i.e. inside the blocking dispatch the
+    /// pointer was created for).
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn get<'a>(&self) -> &'a mut T {
+        &mut *self.0
+    }
+}
+
 /// Shared handle over one `&mut [T]` that hands out `&mut` elements at
 /// pairwise-DISTINCT indices to concurrent pool tasks (the client
 /// partition indexes clients through the round's `selected` list, whose

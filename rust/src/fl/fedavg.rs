@@ -96,6 +96,41 @@ pub fn mean_plane_accumulate(
     });
 }
 
+/// Masked form of [`mean_plane_accumulate`] for partial-participation
+/// (straggler/dropout) rounds: rows with `included[r] == false` are
+/// skipped entirely — never read (the plane holds stale data for clients
+/// the round excluded).  `None` delegates to the unmasked kernel, so the
+/// everyone-transmits path stays instruction-identical.
+pub fn mean_plane_masked_accumulate(
+    plane: &crate::kernels::PayloadPlane,
+    f: f32,
+    included: Option<&[bool]>,
+    out: &mut [f32],
+    threads: usize,
+) {
+    let mask = match included {
+        None => return mean_plane_accumulate(plane, f, out, threads),
+        Some(m) => m,
+    };
+    let k = plane.k();
+    if k == 0 {
+        return;
+    }
+    assert_eq!(mask.len(), k, "participation mask length mismatch");
+    assert_eq!(plane.n(), out.len(), "accumulator length mismatch");
+    crate::kernels::par::par_chunks_mut(threads, out, |off, chunk| {
+        for ki in 0..k {
+            if !mask[ki] {
+                continue;
+            }
+            let row = &plane.row(ki)[off..off + chunk.len()];
+            for (o, &x) in chunk.iter_mut().zip(row.iter()) {
+                *o += f * x;
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -137,6 +137,23 @@ pub fn accumulate_plane_into(
     scratch: &mut OtaScratch,
     threads: usize,
 ) {
+    accumulate_plane_masked_into(plane, slot0, round, None, scratch, threads);
+}
+
+/// Masked form of [`accumulate_plane_into`] for straggler/dropout rounds:
+/// rows with `included[r] == false` (shard-aligned mask) never join the
+/// active list — their plane rows are not read, they add no signal, and
+/// `active_total` (the 1/K_active divisor [`finalize_plane_into`] scales
+/// by) self-adjusts.  `None` is the everyone-transmits path, identical to
+/// the unmasked entry instruction for instruction.
+pub fn accumulate_plane_masked_into(
+    plane: &PayloadPlane,
+    slot0: usize,
+    round: &RoundChannel,
+    included: Option<&[bool]>,
+    scratch: &mut OtaScratch,
+    threads: usize,
+) {
     assert!(
         slot0 + plane.k() <= round.clients.len(),
         "shard slots {}..{} exceed the round's {} channel draws",
@@ -144,8 +161,14 @@ pub fn accumulate_plane_into(
         slot0 + plane.k(),
         round.clients.len()
     );
+    if let Some(mask) = included {
+        assert_eq!(mask.len(), plane.k(), "participation mask length mismatch");
+    }
     scratch.active.clear();
     for r in 0..plane.k() {
+        if included.map_or(false, |mask| !mask[r]) {
+            continue; // excluded client: slot stays silent
+        }
         if let Some(g) = round.clients[slot0 + r].effective_gain {
             scratch.active.push((r, g));
         }
@@ -380,6 +403,54 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn masked_accumulate_matches_subset_superposition_and_adjusts_divisor() {
+        // excluding rows via the participation mask must be bit-identical
+        // to superposing only the included rows through their own slots'
+        // gains, with the 1/K_active divisor following the active count
+        let ps = payloads(6, 512, 21);
+        let rc = perfect_round(6, 20.0);
+        let mask = [true, false, true, true, false, true];
+
+        let plane = crate::kernels::PayloadPlane::from_rows(&ps);
+        let mut masked = OtaScratch::new();
+        begin_plane_into(512, &mut masked);
+        accumulate_plane_masked_into(&plane, 0, &rc, Some(&mask), &mut masked, 1);
+        let mut rng = Rng::seed_from(23);
+        let got = finalize_plane_into(&rc, &mut rng, &mut masked, 1);
+
+        // reference: the included subset as its own (sub-)round
+        let sub_ps: Vec<Vec<f32>> = ps
+            .iter()
+            .zip(mask.iter())
+            .filter(|(_, &m)| m)
+            .map(|(p, _)| p.clone())
+            .collect();
+        let mut sub_rc = rc.clone();
+        let mut keep = mask.iter();
+        sub_rc.clients.retain(|_| *keep.next().unwrap());
+        let sub_plane = crate::kernels::PayloadPlane::from_rows(&sub_ps);
+        let mut want_scratch = OtaScratch::new();
+        let mut r0 = Rng::seed_from(23);
+        let want =
+            aggregate_plane_into(&sub_plane, &sub_rc, &mut r0, &mut want_scratch, 1);
+
+        assert_eq!(got.participants, 4, "divisor must track the active count");
+        assert_eq!(want.participants, 4);
+        assert_eq!(masked.y_re, want_scratch.y_re);
+        assert_eq!(got.mse_vs_ideal.to_bits(), want.mse_vs_ideal.to_bits());
+
+        // an all-true mask is the unmasked path, bit for bit
+        let mut all = OtaScratch::new();
+        begin_plane_into(512, &mut all);
+        accumulate_plane_masked_into(&plane, 0, &rc, Some(&[true; 6]), &mut all, 1);
+        let mut none = OtaScratch::new();
+        begin_plane_into(512, &mut none);
+        accumulate_plane_into(&plane, 0, &rc, &mut none, 1);
+        assert_eq!(all.y_re, none.y_re);
+        assert_eq!(all.active_total, none.active_total);
     }
 
     #[test]

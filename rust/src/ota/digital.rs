@@ -155,10 +155,33 @@ pub fn accumulate_plane_into(
     threads: usize,
     stats: &mut AggregateStats,
 ) {
+    accumulate_plane_masked_into(plane, precisions, None, out, threads, stats);
+}
+
+/// Masked form of [`accumulate_plane_into`] for partial-participation
+/// (straggler/dropout) rounds: rows with `included[r] == false` are
+/// skipped entirely — never read or decoded, and they accrue NO channel
+/// uses and NO bits (an excluded client transmits nothing in its
+/// orthogonal slot).  `None` is the everyone-transmits path, identical to
+/// the unmasked entry instruction for instruction.
+pub fn accumulate_plane_masked_into(
+    plane: &PayloadPlane,
+    precisions: &[Precision],
+    included: Option<&[bool]>,
+    out: &mut [f32],
+    threads: usize,
+    stats: &mut AggregateStats,
+) {
     assert_eq!(plane.k(), precisions.len());
+    if let Some(mask) = included {
+        assert_eq!(mask.len(), plane.k(), "participation mask length mismatch");
+    }
     let n = plane.n();
     assert_eq!(out.len(), n, "accumulator length mismatch");
     for (row_i, &p) in precisions.iter().enumerate() {
+        if included.map_or(false, |mask| !mask[row_i]) {
+            continue;
+        }
         let row = plane.row(row_i);
         stats.channel_uses += n as u64;
         stats.bits_transmitted += n as u64 * p.bits() as u64;
@@ -268,6 +291,45 @@ mod tests {
                 assert_eq!(stats.bits_transmitted, want_stats.bits_transmitted);
             }
         }
+    }
+
+    #[test]
+    fn masked_accumulation_skips_rows_and_their_wire_stats() {
+        let raw: Vec<Vec<f32>> = (0..5).map(|i| payload(400, 30 + i)).collect();
+        let ps: Vec<Precision> =
+            [32u8, 16, 8, 8, 4].iter().map(|&b| Precision::of(b)).collect();
+        let mask = [true, false, true, true, false];
+        let plane = PayloadPlane::from_rows(&raw);
+        let mut acc = vec![0.0f32; 400];
+        let mut stats = AggregateStats::default();
+        accumulate_plane_masked_into(&plane, &ps, Some(&mask), &mut acc, 1, &mut stats);
+
+        // reference: only the included rows, as their own plane
+        let sub: Vec<Vec<f32>> = raw
+            .iter()
+            .zip(mask.iter())
+            .filter(|(_, &m)| m)
+            .map(|(r, _)| r.clone())
+            .collect();
+        let sub_ps: Vec<Precision> = ps
+            .iter()
+            .zip(mask.iter())
+            .filter(|(_, &m)| m)
+            .map(|(&p, _)| p)
+            .collect();
+        let mut want = vec![0.0f32; 400];
+        let mut want_stats = AggregateStats::default();
+        accumulate_plane_into(
+            &PayloadPlane::from_rows(&sub),
+            &sub_ps,
+            &mut want,
+            1,
+            &mut want_stats,
+        );
+        assert_eq!(acc, want);
+        assert_eq!(stats.channel_uses, want_stats.channel_uses);
+        assert_eq!(stats.channel_uses, 3 * 400);
+        assert_eq!(stats.bits_transmitted, (32 + 8 + 8) * 400);
     }
 
     #[test]

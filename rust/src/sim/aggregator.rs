@@ -86,6 +86,14 @@ pub struct AggCtx<'a> {
     /// Chunk-parallelism width (1 = exact sequential path; any value is
     /// bit-identical per seed — kernels-layer determinism contract).
     pub threads: usize,
+    /// Shard-aligned participation mask for straggler/dropout rounds:
+    /// `included[r] == false` means row `r` of the shard belongs to an
+    /// EXCLUDED client — its plane row must never be read (the client
+    /// phase skipped it, the buffer holds stale data) and it contributes
+    /// no signal, channel uses or bits.  `None` (the overwhelmingly
+    /// common case) means every row transmits; aggregators must treat it
+    /// exactly like an all-true mask, instruction for instruction.
+    pub included: Option<&'a [bool]>,
 }
 
 /// One uplink architecture: superposes/averages the payload plane into the
@@ -132,6 +140,27 @@ pub trait Aggregator {
     fn begin_into(&mut self, total_k: usize, n: usize, scratch: &mut AggScratch) {
         let _ = (total_k, n, scratch);
         unimplemented!("aggregator does not support streaming rounds")
+    }
+
+    /// Partial-participation variant of [`begin_into`](Self::begin_into):
+    /// only `active_k ≤ total_k` clients will actually contribute rows
+    /// this round (the rest are straggler/dropout exclusions, masked out
+    /// of [`accumulate_into`](Self::accumulate_into) via
+    /// [`AggCtx::included`]).  Mean-style aggregators must divide by
+    /// `active_k` — the mean is over who TRANSMITTED, the paper's
+    /// `1/K_active` semantics.  The default forwards to `begin_into`
+    /// with `active_k` as the divisor-relevant count; aggregators whose
+    /// divisor self-adjusts from the data (analog OTA's `active_total`)
+    /// need no override.
+    fn begin_partial_into(
+        &mut self,
+        total_k: usize,
+        active_k: usize,
+        n: usize,
+        scratch: &mut AggScratch,
+    ) {
+        let _ = active_k;
+        self.begin_into(total_k, n, scratch);
     }
 
     /// Fold one shard — rows `slot0 .. slot0 + shard.k()` of the round —
@@ -199,10 +228,11 @@ impl Aggregator for AnalogOta {
         ctx: &mut AggCtx<'_>,
         scratch: &mut AggScratch,
     ) {
-        ota::analog::accumulate_plane_into(
+        ota::analog::accumulate_plane_masked_into(
             shard,
             slot0,
             ctx.channel,
+            ctx.included,
             scratch.ota_mut(),
             ctx.threads,
         );
@@ -262,6 +292,18 @@ impl Aggregator for DigitalOrthogonal {
         out.fill(0.0);
     }
 
+    fn begin_partial_into(
+        &mut self,
+        _total_k: usize,
+        active_k: usize,
+        n: usize,
+        scratch: &mut AggScratch,
+    ) {
+        // the 1/K scale (and the participants report) is over who
+        // TRANSMITS — excluded clients never put bits on the uplink
+        self.begin_into(active_k, n, scratch);
+    }
+
     fn accumulate_into(
         &mut self,
         shard: &PayloadPlane,
@@ -270,9 +312,10 @@ impl Aggregator for DigitalOrthogonal {
         scratch: &mut AggScratch,
     ) {
         scratch.slot = Slot::Agg;
-        ota::digital::accumulate_plane_into(
+        ota::digital::accumulate_plane_masked_into(
             shard,
             ctx.precisions,
+            ctx.included,
             scratch.agg.as_mut_slice(),
             ctx.threads,
             &mut scratch.partial,
@@ -334,6 +377,17 @@ impl Aggregator for IdealFedAvg {
         out.fill(0.0);
     }
 
+    fn begin_partial_into(
+        &mut self,
+        _total_k: usize,
+        active_k: usize,
+        n: usize,
+        scratch: &mut AggScratch,
+    ) {
+        // FedAvg over who TRANSMITS: the divisor is the active count
+        self.begin_into(active_k, n, scratch);
+    }
+
     fn accumulate_into(
         &mut self,
         shard: &PayloadPlane,
@@ -349,7 +403,13 @@ impl Aggregator for IdealFedAvg {
         // partition bit-identical to the unsharded mean
         let f = 1.0f32 / scratch.total_k as f32;
         scratch.slot = Slot::Agg;
-        fl::mean_plane_accumulate(shard, f, scratch.agg.as_mut_slice(), ctx.threads);
+        fl::mean_plane_masked_accumulate(
+            shard,
+            f,
+            ctx.included,
+            scratch.agg.as_mut_slice(),
+            ctx.threads,
+        );
     }
 
     fn finalize_into(

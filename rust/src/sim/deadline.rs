@@ -1,0 +1,357 @@
+//! Straggler and dropout modelling: the [`DeadlinePolicy`] seam and its
+//! built-in [`VirtualClock`] implementation.
+//!
+//! The paper's OTA aggregation assumes every selected client transmits in
+//! its slot; production OTA-FL faces clients that are slow, drop
+//! mid-round, or miss the transmission deadline (arXiv 2307.00974 names
+//! straggler/partial-participation handling as the open challenge, arXiv
+//! 2205.05867 shows per-client compute-time heterogeneity is the driver).
+//! This module decides, per round, WHICH selected clients are excluded;
+//! the coordinator and the aggregators handle the consequences (skipped
+//! training, masked superposition, adjusted divisor).
+//!
+//! # Determinism contract
+//!
+//! All randomness flows from the coordinator's dedicated `"straggler"`
+//! RNG stream, consumed serially in slot order with a FIXED number of
+//! draws per slot (one uniform when dropout is on, one normal when the
+//! deadline is on).  The stream is derived — and therefore consumed — ONLY
+//! when the model is enabled (`deadline_s > 0 || dropout_p > 0`), so a
+//! disabled run is byte-identical to the deadline-free engine, and an
+//! enabled run's exclusion pattern is a pure function of `(seed, round,
+//! selection, precisions)` — independent of `threads`, `workers`,
+//! `shard_size` and `pipeline_depth`.
+
+use crate::config::{DropoutKind, RunConfig};
+use crate::quant::Precision;
+use crate::rng::Rng;
+
+/// Per-round inputs to the exclusion decision.
+pub struct DeadlineCtx<'a> {
+    /// Round index (1-based, matching the coordinator).
+    pub round: usize,
+    /// Fleet client ids of the round's K selected participants, in slot
+    /// order.
+    pub selected: &'a [usize],
+    /// Per-slot precision assignment (aligned with `selected`).
+    pub precisions: &'a [Precision],
+}
+
+/// Decides which selected clients miss the round.
+pub trait DeadlinePolicy {
+    /// Whether this policy can ever exclude anyone.  When `false` the
+    /// coordinator skips the exclusion pass entirely — including its RNG
+    /// stream consumption.
+    fn enabled(&self) -> bool;
+
+    /// Fill `excluded[r] = true` for every slot `r` whose client misses
+    /// the round.  `excluded` arrives pre-sized to `ctx.selected.len()`
+    /// and all-false; implementations must be allocation-free in steady
+    /// state and must consume `rng` a deterministic number of draws per
+    /// slot.
+    fn exclude_into(&mut self, ctx: &DeadlineCtx<'_>, rng: &mut Rng, excluded: &mut [bool]);
+
+    fn name(&self) -> &'static str;
+}
+
+/// The built-in seeded virtual clock: per-client latency (precision-
+/// dependent compute time + channel slot time, log-normal jitter) checked
+/// against a transmission deadline, composed with a per-round dropout
+/// process (i.i.d. Bernoulli or bursty Gilbert/Markov outages).
+///
+/// Latency model for a `b`-bit client:
+/// `t = compute_s · (b/32) · exp(latency_jitter · z) + slot_s`,
+/// `z ~ N(0,1)` — cheaper precisions finish earlier, matching the
+/// adaptive-computation motivation.  The client is excluded when
+/// `t > deadline_s` OR its dropout process says it is down this round.
+pub struct VirtualClock {
+    deadline_s: f64,
+    compute_s: f64,
+    latency_jitter: f64,
+    slot_s: f64,
+    dropout_p: f64,
+    dropout_model: DropoutKind,
+    /// Gilbert transition probabilities (recovery, failure) — derived so
+    /// the stationary outage probability is exactly `dropout_p` with mean
+    /// outage length `dropout_burst` rounds.
+    p_recover: f64,
+    p_fail: f64,
+    /// Per-fleet-client outage state for the bursty model (all-up start).
+    down: Vec<bool>,
+}
+
+impl VirtualClock {
+    /// Build from the run config for a fleet of `clients`.
+    pub fn new(cfg: &RunConfig) -> Self {
+        let p = cfg.dropout_p;
+        let burst = cfg.dropout_burst;
+        // Gilbert: π_down = p_fail / (p_fail + p_recover) = dropout_p with
+        // p_recover = 1/burst  ⇒  p_fail = p / (burst · (1 − p))
+        let p_recover = 1.0 / burst;
+        let p_fail = if p > 0.0 { p / (burst * (1.0 - p)) } else { 0.0 };
+        VirtualClock {
+            deadline_s: cfg.deadline_s,
+            compute_s: cfg.compute_s,
+            latency_jitter: cfg.latency_jitter,
+            slot_s: cfg.slot_s,
+            dropout_p: p,
+            dropout_model: cfg.dropout_model,
+            p_recover,
+            p_fail: p_fail.min(1.0),
+            down: vec![false; cfg.clients],
+        }
+    }
+
+    /// Theoretical per-round deadline-miss probability for a `bits`-bit
+    /// client under this clock (dropout excluded):
+    /// `P(compute·(b/32)·exp(σz) + slot > D) = 1 − Φ(ln((D−slot)/(compute·b/32))/σ)`.
+    /// Used by the statistical acceptance tests; returns 0/1 at the
+    /// degenerate edges.
+    pub fn miss_probability(&self, bits: u8) -> f64 {
+        if self.deadline_s <= 0.0 {
+            return 0.0;
+        }
+        let base = self.compute_s * bits as f64 / 32.0;
+        let headroom = self.deadline_s - self.slot_s;
+        if headroom <= 0.0 {
+            return 1.0; // slot time alone blows the deadline
+        }
+        if self.latency_jitter == 0.0 {
+            return if base > headroom { 1.0 } else { 0.0 };
+        }
+        let z = (headroom / base).ln() / self.latency_jitter;
+        1.0 - normal_cdf(z)
+    }
+}
+
+/// Standard normal CDF via the Abramowitz–Stegun 7.1.26 erf
+/// approximation (|error| < 1.5e-7 — far below test tolerances).
+fn normal_cdf(z: f64) -> f64 {
+    let x = z / std::f64::consts::SQRT_2;
+    let t = 1.0 / (1.0 + 0.3275911 * x.abs());
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    let erf_abs = 1.0 - poly * (-x * x).exp();
+    let erf = if x < 0.0 { -erf_abs } else { erf_abs };
+    0.5 * (1.0 + erf)
+}
+
+impl DeadlinePolicy for VirtualClock {
+    fn enabled(&self) -> bool {
+        self.deadline_s > 0.0 || self.dropout_p > 0.0
+    }
+
+    fn exclude_into(&mut self, ctx: &DeadlineCtx<'_>, rng: &mut Rng, excluded: &mut [bool]) {
+        debug_assert_eq!(excluded.len(), ctx.selected.len());
+        for (r, (&client, p)) in
+            ctx.selected.iter().zip(ctx.precisions.iter()).enumerate()
+        {
+            // dropout first (one uniform per slot, drawn regardless of
+            // state so the draw count per slot is fixed)
+            let mut dropped = false;
+            if self.dropout_p > 0.0 {
+                let u = rng.uniform();
+                dropped = match self.dropout_model {
+                    DropoutKind::Iid => u < self.dropout_p,
+                    DropoutKind::Bursty => {
+                        let state = &mut self.down[client];
+                        *state = if *state {
+                            u >= self.p_recover // stay down unless recovered
+                        } else {
+                            u < self.p_fail
+                        };
+                        *state
+                    }
+                };
+            }
+            // deadline next (one normal per slot when armed)
+            let mut missed = false;
+            if self.deadline_s > 0.0 {
+                let z = rng.normal();
+                let latency = self.compute_s * (p.bits() as f64 / 32.0)
+                    * (self.latency_jitter * z).exp()
+                    + self.slot_s;
+                missed = latency > self.deadline_s;
+            }
+            excluded[r] = dropped || missed;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "virtual-clock"
+    }
+}
+
+/// Config-selected default policy: `None` when the straggler model is
+/// fully disabled (the coordinator then never derives the `"straggler"`
+/// stream).
+pub fn from_config(cfg: &RunConfig) -> Option<Box<dyn DeadlinePolicy>> {
+    if cfg.straggler_enabled() {
+        Some(Box::new(VirtualClock::new(cfg)))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_inputs(k: usize, bits: u8) -> (Vec<usize>, Vec<Precision>) {
+        ((0..k).collect(), vec![Precision::new(bits).unwrap(); k])
+    }
+
+    #[test]
+    fn disabled_config_yields_no_policy() {
+        assert!(from_config(&RunConfig::default()).is_none());
+        let mut cfg = RunConfig::default();
+        cfg.deadline_s = 0.3;
+        assert!(from_config(&cfg).is_some());
+        let mut cfg = RunConfig::default();
+        cfg.dropout_p = 0.1;
+        assert!(from_config(&cfg).is_some());
+    }
+
+    #[test]
+    fn exclusion_is_deterministic_per_stream() {
+        let mut cfg = RunConfig::default();
+        cfg.deadline_s = 0.06;
+        cfg.dropout_p = 0.2;
+        let (selected, precisions) = ctx_inputs(12, 8);
+        let run = |cfg: &RunConfig| {
+            let mut clock = VirtualClock::new(cfg);
+            let mut rng = Rng::seed_from(7).stream("straggler");
+            let mut out = Vec::new();
+            for round in 1..=5 {
+                let mut ex = vec![false; 12];
+                let ctx = DeadlineCtx {
+                    round,
+                    selected: &selected,
+                    precisions: &precisions,
+                };
+                clock.exclude_into(&ctx, &mut rng, &mut ex);
+                out.push(ex);
+            }
+            out
+        };
+        assert_eq!(run(&cfg), run(&cfg));
+    }
+
+    #[test]
+    fn iid_dropout_rate_matches_p() {
+        let mut cfg = RunConfig::default();
+        cfg.dropout_p = 0.3;
+        let mut clock = VirtualClock::new(&cfg);
+        let mut rng = Rng::seed_from(11).stream("straggler");
+        let (selected, precisions) = ctx_inputs(15, 8);
+        let mut ex = vec![false; 15];
+        let (mut total, mut dropped) = (0usize, 0usize);
+        for round in 1..=2000 {
+            let ctx = DeadlineCtx {
+                round,
+                selected: &selected,
+                precisions: &precisions,
+            };
+            clock.exclude_into(&ctx, &mut rng, &mut ex);
+            total += ex.len();
+            dropped += ex.iter().filter(|&&e| e).count();
+        }
+        let rate = dropped as f64 / total as f64;
+        assert!((rate - 0.3).abs() < 0.01, "iid rate {rate}");
+    }
+
+    #[test]
+    fn bursty_dropout_is_stationary_at_p_with_longer_bursts() {
+        let mut cfg = RunConfig::default();
+        cfg.dropout_p = 0.2;
+        cfg.dropout_model = DropoutKind::Bursty;
+        cfg.dropout_burst = 4.0;
+        let mut clock = VirtualClock::new(&cfg);
+        let mut rng = Rng::seed_from(13).stream("straggler");
+        let (selected, precisions) = ctx_inputs(15, 8);
+        let mut ex = vec![false; 15];
+        let (mut total, mut down) = (0usize, 0usize);
+        // per-client consecutive-down run lengths
+        let mut run_len = vec![0usize; 15];
+        let mut runs = Vec::new();
+        for round in 1..=4000 {
+            let ctx = DeadlineCtx {
+                round,
+                selected: &selected,
+                precisions: &precisions,
+            };
+            clock.exclude_into(&ctx, &mut rng, &mut ex);
+            total += ex.len();
+            for (i, &e) in ex.iter().enumerate() {
+                if e {
+                    down += 1;
+                    run_len[i] += 1;
+                } else if run_len[i] > 0 {
+                    runs.push(run_len[i]);
+                    run_len[i] = 0;
+                }
+            }
+        }
+        let rate = down as f64 / total as f64;
+        assert!((rate - 0.2).abs() < 0.02, "bursty stationary rate {rate}");
+        let mean_burst = runs.iter().sum::<usize>() as f64 / runs.len() as f64;
+        assert!(
+            (mean_burst - 4.0).abs() < 0.4,
+            "mean outage length {mean_burst} (want ≈ 4)"
+        );
+    }
+
+    #[test]
+    fn deadline_misses_match_the_lognormal_tail_per_precision() {
+        let mut cfg = RunConfig::default();
+        cfg.deadline_s = 0.055;
+        cfg.compute_s = 0.05;
+        cfg.latency_jitter = 0.25;
+        cfg.slot_s = 0.005;
+        let mut clock = VirtualClock::new(&cfg);
+        let mut rng = Rng::seed_from(17).stream("straggler");
+        for bits in [16u8, 8, 4] {
+            let (selected, precisions) = ctx_inputs(20, bits);
+            let mut ex = vec![false; 20];
+            let (mut total, mut missed) = (0usize, 0usize);
+            for round in 1..=3000 {
+                let ctx = DeadlineCtx {
+                    round,
+                    selected: &selected,
+                    precisions: &precisions,
+                };
+                clock.exclude_into(&ctx, &mut rng, &mut ex);
+                total += ex.len();
+                missed += ex.iter().filter(|&&e| e).count();
+            }
+            let rate = missed as f64 / total as f64;
+            let want = clock.miss_probability(bits);
+            assert!(
+                (rate - want).abs() < 0.01,
+                "bits={bits}: empirical {rate} vs theory {want}"
+            );
+        }
+        // cheaper precisions miss less: the ladder must be monotone
+        assert!(clock.miss_probability(4) < clock.miss_probability(8));
+        assert!(clock.miss_probability(8) < clock.miss_probability(16));
+    }
+
+    #[test]
+    fn miss_probability_edges() {
+        let mut cfg = RunConfig::default();
+        cfg.deadline_s = 0.0;
+        assert_eq!(VirtualClock::new(&cfg).miss_probability(16), 0.0);
+        let mut cfg = RunConfig::default();
+        cfg.deadline_s = 0.004;
+        cfg.slot_s = 0.005; // slot alone exceeds the deadline
+        assert_eq!(VirtualClock::new(&cfg).miss_probability(4), 1.0);
+        let mut cfg = RunConfig::default();
+        cfg.deadline_s = 10.0;
+        cfg.latency_jitter = 0.0; // deterministic clock, huge headroom
+        assert_eq!(VirtualClock::new(&cfg).miss_probability(32), 0.0);
+        // sanity: normal_cdf is a CDF
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!(normal_cdf(-6.0) < 1e-8 && normal_cdf(6.0) > 1.0 - 1e-8);
+    }
+}

@@ -183,6 +183,15 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Plug in a custom straggler/dropout policy (overrides the
+    /// `deadline_s`/`dropout_p` config-derived [`super::VirtualClock`]).
+    /// A policy whose `enabled()` is false disables straggler handling
+    /// entirely, whatever the config says.
+    pub fn deadline(mut self, d: impl super::DeadlinePolicy + 'static) -> Self {
+        self.parts.deadline = Some(Box::new(d));
+        self
+    }
+
     /// Replace the PJRT training/eval backend with a pure-rust one
     /// (deterministic test trainers, alternative execution engines).  The
     /// backend is `Sync`, so `RunConfig::workers > 1` trains clients on

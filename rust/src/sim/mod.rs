@@ -50,6 +50,7 @@
 
 pub mod aggregator;
 pub mod channel_model;
+pub mod deadline;
 pub mod experiment;
 pub mod observer;
 pub mod policy;
@@ -61,6 +62,7 @@ pub use aggregator::{
 pub use channel_model::{
     Awgn, ChannelModel, GaussMarkov, PathLossGeometry, RayleighPilot,
 };
+pub use deadline::{DeadlineCtx, DeadlinePolicy, VirtualClock};
 pub use experiment::{Experiment, ExperimentBuilder};
 pub use observer::{JsonlStreamer, ProgressPrinter, RoundObserver};
 pub use policy::{
@@ -104,6 +106,9 @@ pub struct SimParts {
     /// Replacement training/eval backend (`None` = PJRT).  Must be `Sync`
     /// — with `RunConfig::workers > 1` it is called from pool workers.
     pub backend: Option<Box<dyn crate::exec::TrainBackend>>,
+    /// Replacement straggler/dropout policy (`None` = config-selected:
+    /// [`VirtualClock`] when enabled, nothing otherwise).
+    pub deadline: Option<Box<dyn DeadlinePolicy>>,
     /// Recycled scratch arena from a previous run.
     pub arena: Option<Arena>,
 }
@@ -216,6 +221,7 @@ impl Session {
             precisions,
             noise_rng: &mut self.noise_rng,
             threads: self.threads,
+            included: None,
         };
         let stats = self.aggregator.aggregate_into(plane, &mut ctx, &mut self.scratch);
         for obs in &mut self.observers {
@@ -245,6 +251,25 @@ impl Session {
     /// [`accumulate_shard`]: Self::accumulate_shard
     /// [`finalize_aggregate`]: Self::finalize_aggregate
     pub fn begin_aggregate(&mut self, t: usize, total_k: usize, n: usize) {
+        self.begin_aggregate_partial(t, total_k, total_k, n);
+    }
+
+    /// Partial-participation variant of
+    /// [`begin_aggregate`](Self::begin_aggregate): only `active_k` of the
+    /// round's `total_k` selected clients will actually transmit (the
+    /// rest missed the deadline or dropped).  The channel is still drawn
+    /// for ALL `total_k` slots — excluded clients own their slots, the
+    /// realisation does not depend on who misses — but the aggregation
+    /// divisor tracks `active_k` (see
+    /// [`Aggregator::begin_partial_into`]).  With `active_k == total_k`
+    /// this IS `begin_aggregate`, instruction for instruction.
+    pub fn begin_aggregate_partial(
+        &mut self,
+        t: usize,
+        total_k: usize,
+        active_k: usize,
+        n: usize,
+    ) {
         if self.aggregator.needs_channel() {
             self.channel_model.draw_into(
                 total_k,
@@ -255,7 +280,7 @@ impl Session {
                 obs.on_channel(t, &self.round_channel);
             }
         }
-        self.aggregator.begin_into(total_k, n, &mut self.scratch);
+        self.aggregator.begin_partial_into(total_k, active_k, n, &mut self.scratch);
     }
 
     /// Fold one shard — rows `slot0 .. slot0 + shard.k()` of the round,
@@ -267,11 +292,28 @@ impl Session {
         slot0: usize,
         precisions: &[Precision],
     ) {
+        self.accumulate_shard_masked(shard, slot0, precisions, None);
+    }
+
+    /// Masked variant of [`accumulate_shard`](Self::accumulate_shard):
+    /// rows `r` with `included[r] == false` (shard-aligned mask) are
+    /// excluded clients — their plane rows are NEVER read (the reset
+    /// plane holds stale data for slots the client phase skipped) and
+    /// they contribute neither signal, channel uses nor bits.  `None`
+    /// means everyone transmits, bit-identical to the unmasked entry.
+    pub fn accumulate_shard_masked(
+        &mut self,
+        shard: &PayloadPlane,
+        slot0: usize,
+        precisions: &[Precision],
+        included: Option<&[bool]>,
+    ) {
         let mut ctx = AggCtx {
             channel: &self.round_channel,
             precisions,
             noise_rng: &mut self.noise_rng,
             threads: self.threads,
+            included,
         };
         self.aggregator.accumulate_into(shard, slot0, &mut ctx, &mut self.scratch);
     }
@@ -292,6 +334,7 @@ impl Session {
             precisions,
             noise_rng: &mut self.noise_rng,
             threads: self.threads,
+            included: None,
         };
         let stats = self.aggregator.finalize_into(&mut ctx, &mut self.scratch);
         for obs in &mut self.observers {

@@ -51,16 +51,25 @@ impl RoundObserver for ProgressPrinter {
     }
 }
 
-/// Streams one JSON line per finished round to a file, written (and
-/// therefore durable) at every round boundary — the long-run replacement
-/// for the post-hoc `RunLog` JSONL export: a crashed or killed run keeps
-/// every completed round on disk.  Lines are exactly the
-/// [`RoundRecord::to_json`] shape `RunLog::to_jsonl` emits, tagged with
-/// an optional label (sweeps tag each cell's coordinates).
+/// Streams one JSON line per finished round to a file — the long-run
+/// replacement for the post-hoc `RunLog` JSONL export, with an explicit
+/// crash-safety contract:
+///
+/// * every record is written as ONE complete line and flushed to the OS
+///   before [`push`](Self::push) returns, so an aborted process (panic,
+///   `SIGKILL`, `mem::forget`) leaves only whole JSONL lines behind —
+///   never a torn one (`rust/tests/robustness.rs`);
+/// * round boundaries additionally fsync ([`sync`](Self::sync), called
+///   from the `on_round_end` hook), so a machine crash loses at most the
+///   round in flight.
+///
+/// Lines are exactly the [`RoundRecord::to_json`] shape
+/// `RunLog::to_jsonl` emits, tagged with an optional label (sweeps tag
+/// each cell's coordinates).
 ///
 /// Wired as `--stream <path>` on `mpota train` and `mpota sweep`.
 pub struct JsonlStreamer {
-    out: std::fs::File,
+    out: std::io::BufWriter<std::fs::File>,
     label: String,
     /// Latched on the first write error so a full disk degrades to one
     /// warning instead of a panic mid-run.
@@ -76,7 +85,7 @@ impl JsonlStreamer {
             }
         }
         Ok(JsonlStreamer {
-            out: std::fs::File::create(path)?,
+            out: std::io::BufWriter::new(std::fs::File::create(path)?),
             label: String::new(),
             failed: false,
         })
@@ -91,7 +100,9 @@ impl JsonlStreamer {
             }
         }
         Ok(JsonlStreamer {
-            out: std::fs::OpenOptions::new().create(true).append(true).open(path)?,
+            out: std::io::BufWriter::new(
+                std::fs::OpenOptions::new().create(true).append(true).open(path)?,
+            ),
             label: String::new(),
             failed: false,
         })
@@ -109,7 +120,9 @@ impl JsonlStreamer {
     }
 
     /// Write one record now (used directly by the channel-only sweep,
-    /// which drives no full `RoundObserver` lifecycle).
+    /// which drives no full `RoundObserver` lifecycle).  The line is
+    /// flushed to the OS before this returns — an abort after `push`
+    /// cannot tear or lose it short of a machine crash.
     pub fn push(&mut self, r: &RoundRecord) {
         if self.failed {
             return;
@@ -117,8 +130,24 @@ impl JsonlStreamer {
         use std::io::Write;
         let mut line = r.to_json(&self.label).to_string();
         line.push('\n');
-        if let Err(e) = self.out.write_all(line.as_bytes()) {
+        let res = self
+            .out
+            .write_all(line.as_bytes())
+            .and_then(|()| self.out.flush());
+        if let Err(e) = res {
             eprintln!("warning: round stream write failed ({e}); disabling stream");
+            self.failed = true;
+        }
+    }
+
+    /// Force everything written so far onto stable storage (fsync) —
+    /// the round-boundary durability point.
+    pub fn sync(&mut self) {
+        if self.failed {
+            return;
+        }
+        if let Err(e) = self.out.get_ref().sync_data() {
+            eprintln!("warning: round stream sync failed ({e}); disabling stream");
             self.failed = true;
         }
     }
@@ -127,5 +156,6 @@ impl JsonlStreamer {
 impl RoundObserver for JsonlStreamer {
     fn on_round_end(&mut self, r: &RoundRecord) {
         self.push(r);
+        self.sync();
     }
 }

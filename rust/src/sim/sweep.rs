@@ -70,6 +70,21 @@ use crate::tensor;
 
 use super::{aggregator, channel_model, policy, Arena, Experiment, PolicyCtx, Session};
 
+/// One cell's grid coordinates, in canonical axis order: scheme, SNR,
+/// aggregation, channel model, policy, fleet, shard size, deadline,
+/// dropout probability.
+type CellCoord<'a> = (
+    &'a Scheme,
+    f32,
+    Aggregation,
+    FadingKind,
+    PolicyKind,
+    usize,
+    usize,
+    f64,
+    f64,
+);
+
 /// A config grid: the base run crossed with schemes × SNRs × aggregators
 /// × channel models × precision policies.
 pub struct SweepSpec {
@@ -98,6 +113,16 @@ pub struct SweepSpec {
     /// memory/wall-clock, and CI byte-diffs the reports to pin the
     /// contract end to end.
     pub shard_sizes: Vec<usize>,
+    /// Round deadlines (seconds of virtual time) to sweep (each cell sets
+    /// `deadline_s`; `0` = no deadline).  Non-zero values exclude
+    /// straggling clients per the [`crate::sim::VirtualClock`] latency
+    /// model — participation and MSE respond, the paired payload/channel
+    /// realisations do not.
+    pub deadlines: Vec<f64>,
+    /// Per-round dropout probabilities to sweep (each cell sets
+    /// `dropout_p`; `0` = nobody drops).  The drop process follows the
+    /// base config's `dropout_model`/`dropout_burst`.
+    pub dropouts: Vec<f64>,
     /// Payload length for the channel-only mode (full FL runs use the
     /// model's parameter count instead).
     pub payload_len: usize,
@@ -118,6 +143,8 @@ impl SweepSpec {
             policies: vec![base.policy],
             fleets: vec![base.clients],
             shard_sizes: vec![base.shard_size],
+            deadlines: vec![base.deadline_s],
+            dropouts: vec![base.dropout_p],
             payload_len: 4096,
             stream: None,
             base,
@@ -133,6 +160,8 @@ impl SweepSpec {
             * self.policies.len()
             * self.fleets.len()
             * self.shard_sizes.len()
+            * self.deadlines.len()
+            * self.dropouts.len()
     }
 
     /// Reject grids whose axes a per-cell policy would silently ignore: a
@@ -177,6 +206,16 @@ impl SweepSpec {
                 }
             }
         }
+        for &dl in &self.deadlines {
+            if !(dl >= 0.0 && dl.is_finite()) {
+                bail!("deadline {dl} must be a finite non-negative number of seconds");
+            }
+        }
+        for &dp in &self.dropouts {
+            if !(0.0..1.0).contains(&dp) {
+                bail!("dropout probability {dp} must be in [0, 1)");
+            }
+        }
         Ok(())
     }
 
@@ -190,6 +229,8 @@ impl SweepSpec {
         pol: PolicyKind,
         fleet: usize,
         shard: usize,
+        deadline: f64,
+        dropout: f64,
     ) -> RunConfig {
         let mut cfg = self.base.clone();
         cfg.scheme = scheme.clone();
@@ -200,15 +241,15 @@ impl SweepSpec {
         cfg.clients = fleet;
         cfg.clients_per_round = self.base.clients_per_round.min(fleet);
         cfg.shard_size = shard;
+        cfg.deadline_s = deadline;
+        cfg.dropout_p = dropout;
         cfg
     }
 
     /// Enumerate the grid in canonical axis order (schemes outermost,
-    /// shard sizes innermost).
+    /// dropout probabilities innermost).
     #[allow(clippy::type_complexity)]
-    fn cells_iter(
-        &self,
-    ) -> Vec<(&Scheme, f32, Aggregation, FadingKind, PolicyKind, usize, usize)> {
+    fn cells_iter(&self) -> Vec<CellCoord<'_>> {
         let mut cells = Vec::with_capacity(self.grid_size());
         for scheme in &self.schemes {
             for &snr in &self.snrs_db {
@@ -217,9 +258,14 @@ impl SweepSpec {
                         for &pol in &self.policies {
                             for &fleet in &self.fleets {
                                 for &shard in &self.shard_sizes {
-                                    cells.push((
-                                        scheme, snr, agg, model, pol, fleet, shard,
-                                    ));
+                                    for &dl in &self.deadlines {
+                                        for &dp in &self.dropouts {
+                                            cells.push((
+                                                scheme, snr, agg, model, pol,
+                                                fleet, shard, dl, dp,
+                                            ));
+                                        }
+                                    }
                                 }
                             }
                         }
@@ -278,6 +324,14 @@ impl SweepSpec {
                 self.shard_sizes.iter().map(|&s| Value::Num(s as f64)).collect(),
             ),
         );
+        g.set(
+            "deadlines",
+            Value::Array(self.deadlines.iter().map(|&d| Value::Num(d)).collect()),
+        );
+        g.set(
+            "dropouts",
+            Value::Array(self.dropouts.iter().map(|&d| Value::Num(d)).collect()),
+        );
         g
     }
 }
@@ -332,10 +386,11 @@ pub fn run_fl_sweep_on(spec: &SweepSpec, runtime: Rc<Runtime>) -> Result<SweepRe
     // Cells run serially: they share ONE PJRT runtime, which is
     // single-threaded by construction (Rc-based client).  `workers` still
     // parallelizes the client phase INSIDE each cell.
-    for (i, (scheme, snr, agg, model, pol, fleet, shard)) in
+    for (i, (scheme, snr, agg, model, pol, fleet, shard, dl, dp)) in
         spec.cells_iter().into_iter().enumerate()
     {
-        let cfg = spec.cell_config(scheme, snr, agg, model, pol, fleet, shard);
+        let cfg =
+            spec.cell_config(scheme, snr, agg, model, pol, fleet, shard, dl, dp);
         let cell_t0 = Instant::now();
         // the builder constructs fresh channel-model/policy instances from
         // this cell's config — no mutable state crosses cell boundaries
@@ -348,7 +403,7 @@ pub fn run_fl_sweep_on(spec: &SweepSpec, runtime: Rc<Runtime>) -> Result<SweepRe
                 crate::sim::JsonlStreamer::append(path)?
             };
             builder = builder.observe(streamer.with_label(cell_label(
-                scheme, snr, agg, model, pol, fleet, shard,
+                scheme, snr, agg, model, pol, fleet, shard, dl, dp,
             )));
         }
         let mut exp = builder.build()?;
@@ -364,6 +419,8 @@ pub fn run_fl_sweep_on(spec: &SweepSpec, runtime: Rc<Runtime>) -> Result<SweepRe
         c.set("policy", Value::Str(pol.to_string()));
         c.set("clients", Value::Num(fleet as f64));
         c.set("shard_size", Value::Num(shard as f64));
+        c.set("deadline_s", Value::Num(dl));
+        c.set("dropout_p", Value::Num(dp));
         c.set("label", Value::Str(report.label.clone()));
         c.set("final_accuracy", Value::Num(report.final_accuracy));
         c.set("final_loss", Value::Num(report.final_loss));
@@ -395,8 +452,14 @@ struct CellBufs {
     agg: super::AggScratch,
     channel: crate::channel::RoundChannel,
     plane: PayloadPlane,
+    /// Second plane for the pipelined cell (`pipeline_depth > 0`):
+    /// generation of the next super-shard overlaps superposition of the
+    /// previous one, mirroring the coordinator's round engine.
+    plane2: PayloadPlane,
     selected: Vec<usize>,
     assigned: Vec<crate::quant::Precision>,
+    /// Round-slot participation mask (deadline/dropout exclusion).
+    included: Vec<bool>,
     ideal: Vec<f32>,
 }
 
@@ -406,16 +469,55 @@ impl Default for CellBufs {
             agg: super::AggScratch::default(),
             channel: crate::channel::RoundChannel::empty(),
             plane: PayloadPlane::new(),
+            plane2: PayloadPlane::new(),
             selected: Vec::new(),
             assigned: Vec::new(),
+            included: Vec::new(),
             ideal: Vec::new(),
         }
     }
 }
 
+/// Generate one super-shard of synthetic payloads (rows `lo..hi` of the
+/// round) into `plane` and fold the included rows into the running ideal
+/// mean.  Payloads are drawn for EVERY slot — excluded ones too — so the
+/// payload stream stays paired across the deadline/dropout axes; the
+/// exclusion shows up only through the mask.
+#[allow(clippy::too_many_arguments)]
+fn gen_super_shard(
+    plane: &mut PayloadPlane,
+    lo: usize,
+    hi: usize,
+    n: usize,
+    rng: &mut Rng,
+    assigned: &[crate::quant::Precision],
+    included: &[bool],
+    mask_on: bool,
+    f: f32,
+    ideal: &mut [f32],
+    threads: usize,
+) {
+    plane.reset(hi - lo, n);
+    for r in 0..(hi - lo) {
+        let row = plane.row_mut(r);
+        rng.fill_normal(row, 0.0, 1.0);
+        quant::fake_quant_inplace(row, assigned[lo + r]);
+    }
+    fl::mean_plane_masked_accumulate(
+        plane,
+        f,
+        if mask_on { Some(&included[lo..hi]) } else { None },
+        ideal,
+        threads,
+    );
+}
+
 /// Human-readable cell coordinates (report summaries, stream labels).
 /// Includes every grid axis — cells differing only in fleet or shard
-/// size must still tag their streamed JSONL rows distinguishably.
+/// size must still tag their streamed JSONL rows distinguishably.  The
+/// deadline/dropout suffix appears ONLY when the cell actually excludes
+/// clients (non-zero knobs), so robustness-free sweeps keep the
+/// historical label shape byte for byte.
 #[allow(clippy::too_many_arguments)]
 fn cell_label(
     scheme: &Scheme,
@@ -425,8 +527,14 @@ fn cell_label(
     pol: PolicyKind,
     fleet: usize,
     shard: usize,
+    deadline: f64,
+    dropout: f64,
 ) -> String {
-    format!("{scheme}@{snr}dB@{agg}@{model}/{pol}@n{fleet}/s{shard}")
+    let mut label = format!("{scheme}@{snr}dB@{agg}@{model}/{pol}@n{fleet}/s{shard}");
+    if deadline > 0.0 || dropout > 0.0 {
+        label.push_str(&format!("@dl{deadline}@dp{dropout}"));
+    }
+    label
 }
 
 /// One channel-only grid cell: synthetic payloads through a FRESH policy,
@@ -434,6 +542,17 @@ fn cell_label(
 /// re-derives the same RNG streams from the root seed (paired
 /// realisations), touches nothing outside `bufs`, and is therefore safe
 /// to run on any pool worker — results depend only on the cell config.
+///
+/// Robustness axes: a non-zero `deadline`/`dropout` builds a fresh
+/// [`crate::sim::VirtualClock`] from the cell config and excludes the
+/// straggling/dropped slots each round — exactly the coordinator's
+/// protocol: exclusion decided up front from a dedicated `"sweep-straggler"`
+/// stream (consumed only when enabled), masked accumulation, divisor over
+/// the clients that transmit.  With `pipeline_depth > 0` the cell also
+/// mirrors the pipelined round engine: each step is one two-task pool
+/// dispatch overlapping the previous super-shard's superposition with the
+/// next one's payload generation — bit-identical to the serial loop, which
+/// the pipelined-vs-serial report diff pins in CI.
 ///
 /// Massive-fleet shape: the round selects K = `clients_per_round`
 /// participants from the cell's N-client fleet (`cfg.selection`; Floyd's
@@ -453,6 +572,8 @@ fn channel_cell(
     polkind: PolicyKind,
     fleet: usize,
     shard_size: usize,
+    deadline: f64,
+    dropout: f64,
     bufs: &mut CellBufs,
     mut stream: Option<&mut crate::sim::JsonlStreamer>,
 ) -> Result<Value> {
@@ -460,7 +581,9 @@ fn channel_cell(
     let n = spec.payload_len;
     let rounds = base.rounds;
     let root = Rng::seed_from(base.seed);
-    let cfg = spec.cell_config(scheme, snr, agg, model, polkind, fleet, shard_size);
+    let cfg = spec.cell_config(
+        scheme, snr, agg, model, polkind, fleet, shard_size, deadline, dropout,
+    );
     let clients = cfg.clients;
     let selection =
         fl::Selection::from_config(cfg.selection, clients, cfg.clients_per_round);
@@ -470,6 +593,11 @@ fn channel_cell(
     // geometry or plateau state starts clean for every cell)
     let mut payload_rng = root.stream("sweep-payload");
     let mut select_rng = root.stream("sweep-select");
+    // derived unconditionally (stream derivation consumes nothing from
+    // the root), consumed only when a deadline/dropout policy is active
+    let mut straggler_rng = root.stream("sweep-straggler");
+    let mut straggler = crate::sim::deadline::from_config(&cfg);
+    let mask_on = straggler.is_some();
     let mut session = Session::with_state(
         channel_model::from_config(&cfg.channel),
         aggregator::from_config(cfg.aggregation),
@@ -484,9 +612,16 @@ fn channel_cell(
         "channel-only cells require a streaming aggregator"
     );
     let mut pol = policy::from_config(cfg.policy, &cfg);
+    let pool = crate::exec::pool();
+    // mirror the coordinator's pipelined-engine gate (built-in
+    // aggregators only here, by construction)
+    let pipelined = cfg.pipeline_depth > 0
+        && pool.max_workers() > 0
+        && !crate::exec::must_inline();
 
     let mut mse_sum = 0.0f64;
     let mut part_sum = 0usize;
+    let mut excluded_sum = 0usize;
     let mut channel_uses = 0u64;
     let mut bits = 0u64;
     let mut lost_rounds = 0usize;
@@ -508,26 +643,129 @@ fn channel_cell(
             &bufs.selected,
             &mut bufs.assigned,
         )?;
+        // deadline/dropout exclusion: decided up front per round, then
+        // inverted into the slot inclusion mask the aggregators consume
+        bufs.included.clear();
+        bufs.included.resize(kk, !mask_on);
+        let mut active_k = kk;
+        if let Some(policy) = straggler.as_mut() {
+            policy.exclude_into(
+                &crate::sim::DeadlineCtx {
+                    round: t,
+                    selected: &bufs.selected,
+                    precisions: &bufs.assigned,
+                },
+                &mut straggler_rng,
+                &mut bufs.included,
+            );
+            active_k = 0;
+            for v in bufs.included.iter_mut() {
+                *v = !*v;
+                active_k += *v as usize;
+            }
+        }
+        excluded_sum += kk - active_k;
         let shard = cfg.shard_len(kk);
-        // the noise-free participant mean, accumulated shard by shard
-        // with the SAME per-contribution 1/K weighting as the one-shot
-        // `mean_plane_into` — bit-identical at every shard size
+        // the noise-free TRANSMITTING-participant mean, accumulated shard
+        // by shard with the SAME per-contribution 1/active_k weighting as
+        // the aggregator's divisor — bit-identical at every shard size
         bufs.ideal.resize(n, 0.0);
         bufs.ideal.fill(0.0);
-        let f = 1.0f32 / kk as f32;
-        session.begin_aggregate(t, kk, n);
-        let mut lo = 0usize;
-        while lo < kk {
-            let hi = (lo + shard).min(kk);
-            bufs.plane.reset(hi - lo, n);
-            for r in 0..(hi - lo) {
-                let row = bufs.plane.row_mut(r);
-                payload_rng.fill_normal(row, 0.0, 1.0);
-                quant::fake_quant_inplace(row, bufs.assigned[lo + r]);
+        let f = if active_k > 0 { 1.0f32 / active_k as f32 } else { 0.0 };
+        session.begin_aggregate_partial(t, kk, active_k, n);
+        if pipelined {
+            // mirror the coordinator's pipelined round engine: each step
+            // is ONE two-task dispatch — task 0 superposes the previous
+            // super-shard (sole Session toucher), task 1 generates the
+            // next one into the other plane.  Payload draws and
+            // accumulation order are identical to the serial loop, so the
+            // trajectories are bit-identical (pinned by tests + the CI
+            // report byte-diff).
+            let step = shard
+                .saturating_mul(cfg.pipeline_depth)
+                .min(kk)
+                .max(1);
+            let CellBufs { plane, plane2, assigned, included, ideal, .. } =
+                &mut *bufs;
+            let threads = cfg.threads;
+            // first super-shard generates alone (nothing to overlap yet)
+            let mut prev_hi = step.min(kk);
+            gen_super_shard(
+                plane, 0, prev_hi, n, &mut payload_rng, assigned, included,
+                mask_on, f, ideal, threads,
+            );
+            let mut prev_lo = 0usize;
+            let mut cur_in_b = true; // next generation targets plane2
+            while prev_hi < kk {
+                let cur_lo = prev_hi;
+                let cur_hi = (cur_lo + step).min(kk);
+                let (cur_plane, prev_plane): (&mut PayloadPlane, &PayloadPlane) =
+                    if cur_in_b {
+                        (&mut *plane2, &*plane)
+                    } else {
+                        (&mut *plane, &*plane2)
+                    };
+                let prev_prec = &assigned[prev_lo..prev_hi];
+                let prev_mask =
+                    if mask_on { Some(&included[prev_lo..prev_hi]) } else { None };
+                let session_ptr = crate::exec::SendMutPtr::from_mut(&mut session);
+                let plane_ptr = crate::exec::SendMutPtr::from_mut(cur_plane);
+                let rng_ptr = crate::exec::SendMutPtr::from_mut(&mut payload_rng);
+                let ideal_ptr = crate::exec::SendMutPtr::from_mut(ideal);
+                let assigned_ref: &[crate::quant::Precision] = assigned.as_slice();
+                let included_ref: &[bool] = included.as_slice();
+                let task = |w: usize| {
+                    if w == 0 {
+                        // SAFETY: sole Session toucher of this dispatch;
+                        // the borrow outlives the blocking broadcast.
+                        let session = unsafe { session_ptr.get() };
+                        session.accumulate_shard_masked(
+                            prev_plane, prev_lo, prev_prec, prev_mask,
+                        );
+                    } else {
+                        // SAFETY: sole toucher of the generation-side
+                        // buffers (cur plane, payload RNG, ideal) — the
+                        // superpose task reads only the OTHER plane.
+                        let cur = unsafe { plane_ptr.get() };
+                        let rng = unsafe { rng_ptr.get() };
+                        let ideal = unsafe { ideal_ptr.get() };
+                        gen_super_shard(
+                            cur, cur_lo, cur_hi, n, rng, assigned_ref,
+                            included_ref, mask_on, f, ideal, threads,
+                        );
+                    }
+                };
+                pool.broadcast(2, &task);
+                prev_lo = cur_lo;
+                prev_hi = cur_hi;
+                cur_in_b = !cur_in_b;
             }
-            fl::mean_plane_accumulate(&bufs.plane, f, &mut bufs.ideal, cfg.threads);
-            session.accumulate_shard(&bufs.plane, lo, &bufs.assigned[lo..hi]);
-            lo = hi;
+            // drain: the last generated super-shard superposes serially
+            let last_plane: &PayloadPlane =
+                if cur_in_b { &*plane } else { &*plane2 };
+            session.accumulate_shard_masked(
+                last_plane,
+                prev_lo,
+                &assigned[prev_lo..prev_hi],
+                if mask_on { Some(&included[prev_lo..prev_hi]) } else { None },
+            );
+        } else {
+            let mut lo = 0usize;
+            while lo < kk {
+                let hi = (lo + shard).min(kk);
+                gen_super_shard(
+                    &mut bufs.plane, lo, hi, n, &mut payload_rng,
+                    &bufs.assigned, &bufs.included, mask_on, f,
+                    &mut bufs.ideal, cfg.threads,
+                );
+                session.accumulate_shard_masked(
+                    &bufs.plane,
+                    lo,
+                    &bufs.assigned[lo..hi],
+                    if mask_on { Some(&bufs.included[lo..hi]) } else { None },
+                );
+                lo = hi;
+            }
         }
         let stats = session.finalize_aggregate(t, &bufs.assigned);
         if stats.participants > 0 {
@@ -565,6 +803,8 @@ fn channel_cell(
     c.set("clients", Value::Num(clients as f64));
     c.set("clients_per_round", Value::Num(cfg.clients_per_round as f64));
     c.set("shard_size", Value::Num(cfg.shard_size as f64));
+    c.set("deadline_s", Value::Num(deadline));
+    c.set("dropout_p", Value::Num(dropout));
     c.set("rounds", Value::Num(rounds as f64));
     let delivered = rounds - lost_rounds;
     c.set(
@@ -579,6 +819,10 @@ fn channel_cell(
     c.set(
         "mean_participants",
         Value::Num(part_sum as f64 / rounds as f64),
+    );
+    c.set(
+        "mean_excluded",
+        Value::Num(excluded_sum as f64 / rounds as f64),
     );
     c.set(
         "channel_uses_per_round",
@@ -617,10 +861,11 @@ pub fn run_channel_sweep(spec: &SweepSpec) -> Result<SweepReport> {
         let slots: Vec<std::sync::OnceLock<Result<Value>>> =
             (0..coords.len()).map(|_| std::sync::OnceLock::new()).collect();
         let task = |i: usize| {
-            let (scheme, snr, agg, model, pol, fleet, shard) = coords[i];
+            let (scheme, snr, agg, model, pol, fleet, shard, dl, dp) = coords[i];
             let mut bufs = CellBufs::default();
             let r = channel_cell(
-                spec, scheme, snr, agg, model, pol, fleet, shard, &mut bufs, None,
+                spec, scheme, snr, agg, model, pol, fleet, shard, dl, dp,
+                &mut bufs, None,
             );
             let _ = slots[i].set(r);
         };
@@ -641,9 +886,11 @@ pub fn run_channel_sweep(spec: &SweepSpec) -> Result<SweepReport> {
             None => None,
         };
         let mut out = Vec::with_capacity(coords.len());
-        for (scheme, snr, agg, model, pol, fleet, shard) in coords {
+        for (scheme, snr, agg, model, pol, fleet, shard, dl, dp) in coords {
             if let Some(s) = stream.as_mut() {
-                s.set_label(cell_label(scheme, snr, agg, model, pol, fleet, shard));
+                s.set_label(cell_label(
+                    scheme, snr, agg, model, pol, fleet, shard, dl, dp,
+                ));
             }
             out.push(channel_cell(
                 spec,
@@ -654,6 +901,8 @@ pub fn run_channel_sweep(spec: &SweepSpec) -> Result<SweepReport> {
                 pol,
                 fleet,
                 shard,
+                dl,
+                dp,
                 &mut bufs,
                 stream.as_mut(),
             )?);
@@ -1006,6 +1255,120 @@ mod tests {
             assert!(label.contains("16,8,4"), "label {label}");
         }
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn deadline_dropout_axes_widen_the_grid_and_exclude_clients() {
+        let mut spec = tiny_spec();
+        spec.schemes.truncate(1);
+        spec.snrs_db.truncate(1);
+        spec.aggregations = vec![Aggregation::Ideal];
+        spec.base.rounds = 8;
+        spec.dropouts = vec![0.0, 0.4];
+        assert_eq!(spec.grid_size(), 2);
+        let rep = run_channel_sweep(&spec).unwrap();
+        let cells = rep.json.get("cells").unwrap().as_array().unwrap();
+        assert_eq!(cells.len(), 2);
+        let (clean, lossy) = (&cells[0], &cells[1]);
+        assert_eq!(clean.get("dropout_p").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(lossy.get("dropout_p").unwrap().as_f64().unwrap(), 0.4);
+        // the clean cell excludes nobody; the lossy cell excludes some
+        // and reports fewer mean participants
+        assert_eq!(clean.get("mean_excluded").unwrap().as_f64().unwrap(), 0.0);
+        assert!(lossy.get("mean_excluded").unwrap().as_f64().unwrap() > 0.0);
+        assert!(
+            lossy.get("mean_participants").unwrap().as_f64().unwrap()
+                < clean.get("mean_participants").unwrap().as_f64().unwrap()
+        );
+        // divisor exactness under partial participation: the noise-free
+        // oracle still matches the ideal aggregator bit for bit
+        if lossy.get("lost_rounds").unwrap().as_f64().unwrap()
+            < spec.base.rounds as f64
+        {
+            assert_eq!(
+                lossy.get("mean_mse_vs_ideal").unwrap().as_f64().unwrap(),
+                0.0
+            );
+        }
+        // deadline axis widens the grid the same way
+        let mut spec = tiny_spec();
+        spec.deadlines = vec![0.0, 0.06];
+        assert_eq!(spec.grid_size(), 16);
+    }
+
+    #[test]
+    fn excluded_cells_are_shard_invariant() {
+        // the exclusion mask is decided per round, independent of the
+        // shard partition — sharded and unsharded lossy cells must agree
+        // on every science field
+        let mut spec = tiny_spec();
+        spec.schemes.truncate(1);
+        spec.snrs_db.truncate(1);
+        spec.base.rounds = 6;
+        spec.dropouts = vec![0.3];
+        spec.deadlines = vec![0.06];
+        spec.shard_sizes = vec![0, 1, 3];
+        let rep = run_channel_sweep(&spec).unwrap();
+        let cells = rep.json.get("cells").unwrap().as_array().unwrap();
+        assert_eq!(cells.len(), 6);
+        for agg in ["ota", "ideal"] {
+            let group: Vec<_> = cells
+                .iter()
+                .filter(|c| c.get("aggregation").unwrap().as_str().unwrap() == agg)
+                .collect();
+            assert_eq!(group.len(), 3);
+            for c in &group[1..] {
+                for key in [
+                    "mean_mse_vs_ideal",
+                    "lost_rounds",
+                    "mean_participants",
+                    "mean_excluded",
+                    "bits_per_round",
+                ] {
+                    assert_eq!(
+                        group[0].get(key),
+                        c.get(key),
+                        "{agg}: {key} differs across shard sizes under exclusion"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_cells_match_serial_bit_for_bit() {
+        // pipeline_depth only changes WHEN superposition happens relative
+        // to generation, never the draws or the accumulation order — the
+        // report's science fields are bit-identical, with and without
+        // active exclusion
+        let mut spec = tiny_spec();
+        spec.base.rounds = 4;
+        spec.shard_sizes = vec![2];
+        spec.dropouts = vec![0.0, 0.25];
+        let serial = run_channel_sweep(&spec).unwrap();
+        spec.base.pipeline_depth = 2;
+        let piped = run_channel_sweep(&spec).unwrap();
+        let (ca, cb) = (
+            serial.json.get("cells").unwrap().as_array().unwrap(),
+            piped.json.get("cells").unwrap().as_array().unwrap(),
+        );
+        assert_eq!(ca.len(), cb.len());
+        for (x, y) in ca.iter().zip(cb.iter()) {
+            for key in [
+                "scheme",
+                "snr_db",
+                "aggregation",
+                "dropout_p",
+                "mean_mse_vs_ideal",
+                "lost_rounds",
+                "mean_participants",
+                "mean_excluded",
+                "bits_per_round",
+                "channel_uses_per_round",
+            ] {
+                assert_eq!(x.get(key), y.get(key), "{key} differs serial vs pipelined");
+            }
+        }
     }
 
     #[test]

@@ -65,9 +65,10 @@ use mpota::ota::AggregateStats;
 use mpota::quant::{self, Precision, Rounding};
 use mpota::rng::Rng;
 use mpota::sim::{
-    AnalogOta, DigitalOrthogonal, EnergyBudget, GaussMarkov, IdealFedAvg,
-    LossPlateau, PathLossGeometry, PolicyCtx, PrecisionPolicy, RayleighPilot,
-    RoundObserver, Session, StaticScheme,
+    AnalogOta, DeadlineCtx, DeadlinePolicy, DigitalOrthogonal, EnergyBudget,
+    GaussMarkov, IdealFedAvg, LossPlateau, PathLossGeometry, PolicyCtx,
+    PrecisionPolicy, RayleighPilot, RoundObserver, Session, StaticScheme,
+    VirtualClock,
 };
 use mpota::tensor;
 
@@ -405,6 +406,208 @@ fn steady_state_round_path_is_allocation_free() {
         0,
         "steady-state sharded (shard={shard} < K=6, workers=4) rounds \
          allocated {} times",
+        after - before
+    );
+
+    // ---- phase 5: straggler-masked streaming rounds (PR-6 dropout path) ----
+    // the deadline+dropout round shape: VirtualClock exclusion into a
+    // reusable mask (fixed 2 RNG draws per slot), partial-participation
+    // begin, per-shard masked accumulate skipping excluded rows — all
+    // through the same warm buffers
+    let mut dl_cfg = mpota::config::RunConfig::default();
+    dl_cfg.clients = fleet;
+    dl_cfg.deadline_s = 0.019;
+    dl_cfg.compute_s = 0.05;
+    dl_cfg.latency_jitter = 0.25;
+    dl_cfg.slot_s = 0.005;
+    dl_cfg.dropout_p = 0.2;
+    let mut clock = VirtualClock::new(&dl_cfg); // fleet `down` table: one-time
+    let mut straggler_rng = root.stream("straggler-ac");
+    let mut dl_session = Session::new(
+        Box::new(RayleighPilot::new(ChannelConfig::default())),
+        Box::new(AnalogOta),
+        root.stream("channel-dl"),
+        root.stream("noise-dl"),
+        4,
+    );
+    let mut dl_select_rng = root.stream("select-dl");
+    let dl_selection = Selection::SampledK(6);
+    let mut dl_selected: Vec<usize> = Vec::new();
+    let mut dl_plane = PayloadPlane::new();
+    let mut included: Vec<bool> = Vec::new();
+    let dl_precisions: Vec<Precision> =
+        (0..6).map(|i| levels[i % levels.len()]).collect();
+    let dl_round = |t: usize,
+                    clock: &mut VirtualClock,
+                    straggler_rng: &mut Rng,
+                    session: &mut Session,
+                    select_rng: &mut Rng,
+                    selected: &mut Vec<usize>,
+                    plane: &mut PayloadPlane,
+                    included: &mut Vec<bool>| {
+        dl_selection.select_into(fleet, t, select_rng, selected);
+        let kk = selected.len();
+        included.clear();
+        included.resize(kk, false);
+        clock.exclude_into(
+            &DeadlineCtx {
+                round: t,
+                selected: selected.as_slice(),
+                precisions: &dl_precisions[..kk],
+            },
+            straggler_rng,
+            included,
+        );
+        let mut active_k = 0usize;
+        for v in included.iter_mut() {
+            *v = !*v; // excluded mask -> inclusion mask, like the coordinator
+            active_k += *v as usize;
+        }
+        session.begin_aggregate_partial(t, kk, active_k, n);
+        let mut lo = 0usize;
+        while lo < kk {
+            let hi = (lo + shard).min(kk);
+            plane.reset(hi - lo, n);
+            for r in 0..hi - lo {
+                if included[lo + r] {
+                    quant::fake_quant_layout_into(
+                        plane.row_mut(r),
+                        theta_ref,
+                        layout_ref,
+                        dl_precisions[lo + r],
+                        Rounding::Nearest,
+                        1,
+                    );
+                }
+            }
+            session.accumulate_shard_masked(
+                plane,
+                lo,
+                &dl_precisions[lo..hi],
+                Some(&included[lo..hi]),
+            );
+            lo = hi;
+        }
+        let stats = session.finalize_aggregate(t, &dl_precisions[..kk]);
+        std::hint::black_box(stats.participants);
+    };
+    for t in 1..=2 {
+        dl_round(
+            t,
+            &mut clock,
+            &mut straggler_rng,
+            &mut dl_session,
+            &mut dl_select_rng,
+            &mut dl_selected,
+            &mut dl_plane,
+            &mut included,
+        );
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for t in 3..=8 {
+        dl_round(
+            t,
+            &mut clock,
+            &mut straggler_rng,
+            &mut dl_session,
+            &mut dl_select_rng,
+            &mut dl_selected,
+            &mut dl_plane,
+            &mut included,
+        );
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state straggler-masked rounds allocated {} times",
+        after - before
+    );
+
+    // ---- phase 6: pipelined double-buffered streaming (PR-6 overlap) ----
+    // the pipelined round's dispatch shape: one pool broadcast whose task
+    // 0 superposes the PREVIOUS super-shard into the session while task 1
+    // fills the NEXT plane — both planes and the session warm, nothing
+    // allocated per round on any thread
+    struct SendMut<T>(*mut T);
+    unsafe impl<T> Send for SendMut<T> {}
+    unsafe impl<T> Sync for SendMut<T> {}
+
+    let pool = mpota::exec::pool();
+    let mut pl_session = Session::new(
+        Box::new(RayleighPilot::new(ChannelConfig::default())),
+        Box::new(AnalogOta),
+        root.stream("channel-pipe"),
+        root.stream("noise-pipe"),
+        1,
+    );
+    let mut plane_a = PayloadPlane::new();
+    let mut plane_b = PayloadPlane::new();
+    let pl_precisions: Vec<Precision> =
+        (0..6).map(|i| levels[i % levels.len()]).collect();
+    let pl_round = |t: usize,
+                    session: &mut Session,
+                    pa: &mut PayloadPlane,
+                    pb: &mut PayloadPlane| {
+        session.begin_aggregate(t, 6, n);
+        // first super-shard fills with no overlap partner
+        pa.reset(3, n);
+        for r in 0..3 {
+            quant::fake_quant_layout_into(
+                pa.row_mut(r),
+                theta_ref,
+                layout_ref,
+                pl_precisions[r],
+                Rounding::Nearest,
+                1,
+            );
+        }
+        // overlapped step: superpose rows 0..3 while rows 3..6 fill
+        {
+            let session_ptr = SendMut(&mut *session as *mut Session);
+            let pb_ptr = SendMut(&mut *pb as *mut PayloadPlane);
+            let pa_ref: &PayloadPlane = pa;
+            let prec = &pl_precisions;
+            let task = move |i: usize| {
+                if i == 0 {
+                    // SAFETY: sole toucher of the session in this dispatch
+                    let s = unsafe { &mut *session_ptr.0 };
+                    s.accumulate_shard(pa_ref, 0, &prec[0..3]);
+                } else {
+                    // SAFETY: sole toucher of plane B in this dispatch
+                    let p = unsafe { &mut *pb_ptr.0 };
+                    p.reset(3, n);
+                    for r in 0..3 {
+                        quant::fake_quant_layout_into(
+                            p.row_mut(r),
+                            theta_ref,
+                            layout_ref,
+                            prec[3 + r],
+                            Rounding::Nearest,
+                            1,
+                        );
+                    }
+                }
+            };
+            pool.broadcast(2, &task);
+        }
+        // drain the last super-shard on the caller
+        session.accumulate_shard(pb, 3, &pl_precisions[3..6]);
+        let stats = session.finalize_aggregate(t, &pl_precisions);
+        std::hint::black_box(stats.participants);
+    };
+    for t in 1..=2 {
+        pl_round(t, &mut pl_session, &mut plane_a, &mut plane_b);
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for t in 3..=8 {
+        pl_round(t, &mut pl_session, &mut plane_a, &mut plane_b);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state pipelined double-buffered rounds allocated {} times",
         after - before
     );
 }

@@ -1,0 +1,221 @@
+//! Statistical acceptance tests for the deadline/dropout straggler engine
+//! (PR 6): empirical exclusion rates match the configured processes, the
+//! partial-participation divisor is exact, and convergence degrades
+//! monotonically with dropout.
+//!
+//! All fixtures run the deterministic mock backend, so every assertion
+//! here is reproducible bit-for-bit; the "statistical" part is that the
+//! tolerances were sized from the binomial standard error of the fixture
+//! (≥ 3σ margins), not hand-tuned to the seed.
+
+use std::rc::Rc;
+
+use mpota::channel::FadingKind;
+use mpota::config::{Aggregation, RunConfig};
+use mpota::coordinator::RunReport;
+use mpota::fl::Scheme;
+use mpota::kernels::PayloadPlane;
+use mpota::quant::Precision;
+use mpota::rng::Rng;
+use mpota::runtime::Runtime;
+use mpota::sim::{aggregator, channel_model, Experiment, Session, VirtualClock};
+use mpota::testing::{mock_artifacts_dir, MockTrainer};
+
+fn base_cfg(dir: &std::path::Path) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.artifacts_dir = dir.to_path_buf();
+    cfg.variant = "mock".into();
+    cfg.clients = 6;
+    cfg.clients_per_round = 6;
+    cfg.rounds = 3;
+    cfg.train_samples = 96;
+    cfg.test_samples = 32;
+    cfg.scheme = Scheme::parse("16,8,4").unwrap();
+    cfg.channel.model = FadingKind::Rayleigh;
+    cfg
+}
+
+fn run(cfg: RunConfig, rt: Rc<Runtime>) -> (Vec<u32>, RunReport) {
+    let mut exp = Experiment::builder(cfg)
+        .runtime(rt)
+        .backend(MockTrainer)
+        .build()
+        .unwrap();
+    let report = exp.run().unwrap();
+    let bits: Vec<u32> = exp.global_model().iter().map(|v| v.to_bits()).collect();
+    (bits, report)
+}
+
+/// Fraction of selected slots excluded over the whole run.
+fn exclusion_rate(report: &RunReport, k: usize) -> f64 {
+    let rounds = report.log.rounds.len();
+    let present: usize = report.log.rounds.iter().map(|r| r.participants).sum();
+    1.0 - present as f64 / (rounds * k) as f64
+}
+
+#[test]
+fn empirical_dropout_exclusion_rate_matches_p() {
+    // i.i.d. Bernoulli(0.25) dropout over 150 rounds x 6 slots = 900
+    // draws: the empirical exclusion rate must land within 0.05 of p
+    // (3.5 sigma of the binomial mean)
+    let dir = mock_artifacts_dir("dropstats_rate");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    let mut cfg = base_cfg(&dir);
+    cfg.rounds = 150;
+    cfg.dropout_p = 0.25;
+    cfg.aggregation = Aggregation::Ideal;
+    let (_, report) = run(cfg, rt);
+    let rate = exclusion_rate(&report, 6);
+    assert!(
+        (rate - 0.25).abs() < 0.05,
+        "empirical dropout rate {rate:.4} not within 0.05 of p = 0.25"
+    );
+    // and the process actually varies round to round (not a stuck mask)
+    let parts: Vec<usize> =
+        report.log.rounds.iter().map(|r| r.participants).collect();
+    assert!(parts.iter().any(|&p| p != parts[0]), "dropout mask never varied");
+}
+
+#[test]
+fn deadline_misses_match_the_virtual_clock_theory() {
+    // all-8-bit fleet under a deadline chosen to sit well inside the
+    // lognormal latency distribution (analytic miss prob ~ 0.325):
+    // the empirical rate over 200 rounds x 6 slots = 1200 samples must
+    // match VirtualClock::miss_probability within 0.05 (3.7 sigma)
+    let dir = mock_artifacts_dir("dropstats_deadline");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    let mut cfg = base_cfg(&dir);
+    cfg.rounds = 200;
+    cfg.scheme = Scheme::parse("8,8,8").unwrap();
+    cfg.aggregation = Aggregation::Ideal;
+    cfg.deadline_s = 0.019;
+    cfg.compute_s = 0.05;
+    cfg.latency_jitter = 0.25;
+    cfg.slot_s = 0.005;
+    let theory = VirtualClock::new(&cfg).miss_probability(8);
+    assert!(
+        theory > 0.05 && theory < 0.95,
+        "fixture is degenerate: analytic miss probability {theory:.4}"
+    );
+    let (_, report) = run(cfg, rt);
+    let rate = exclusion_rate(&report, 6);
+    assert!(
+        (rate - theory).abs() < 0.05,
+        "empirical miss rate {rate:.4} not within 0.05 of theory {theory:.4}"
+    );
+}
+
+#[test]
+fn partial_participation_divisor_is_exact() {
+    // session-level pin: with 2 of 4 slots transmitting, the ideal
+    // aggregate is EXACTLY (r0 + r2) / 2 — the divisor is the number of
+    // transmitters, not the number of selected clients
+    let cfg = RunConfig::default();
+    let n = 33usize;
+    let root = Rng::seed_from(7);
+    // strictly positive rows so the f32 sum has no signed-zero edge cases
+    let rows: Vec<Vec<f32>> = (0..4)
+        .map(|k| (0..n).map(|i| 1.0 + k as f32 + i as f32 * 0.25).collect())
+        .collect();
+    let plane = PayloadPlane::from_rows(&rows);
+    let precisions = vec![Precision::of(8); 4];
+    let mask = [true, false, true, false];
+
+    let mut session = Session::new(
+        channel_model::from_config(&cfg.channel),
+        aggregator::from_config(Aggregation::Ideal),
+        root.stream("channel"),
+        root.stream("noise"),
+        1,
+    );
+    session.begin_aggregate_partial(1, 4, 2, n);
+    session.accumulate_shard_masked(&plane, 0, &precisions, Some(&mask));
+    let stats = session.finalize_aggregate(1, &precisions);
+    assert_eq!(stats.participants, 2, "ideal participants over transmitters");
+    for i in 0..n {
+        let want = 0.5f32 * rows[0][i] + 0.5f32 * rows[2][i];
+        assert_eq!(
+            session.result()[i].to_bits(),
+            want.to_bits(),
+            "ideal divisor not exact at element {i}"
+        );
+    }
+
+    // digital baseline: masked rows consume neither bits nor channel uses
+    let mut session = Session::new(
+        channel_model::from_config(&cfg.channel),
+        aggregator::from_config(Aggregation::Digital),
+        root.stream("channel"),
+        root.stream("noise"),
+        1,
+    );
+    session.begin_aggregate_partial(1, 4, 2, n);
+    session.accumulate_shard_masked(&plane, 0, &precisions, Some(&mask));
+    let stats = session.finalize_aggregate(1, &precisions);
+    assert_eq!(stats.participants, 2, "digital participants over transmitters");
+    assert_eq!(stats.bits_transmitted, 2 * 8 * n as u64);
+    assert_eq!(stats.channel_uses, 2 * n as u64);
+}
+
+#[test]
+fn convergence_degrades_monotonically_with_dropout() {
+    // i.i.d. dropout draws one uniform per slot from the dedicated
+    // "straggler" stream REGARDLESS of p, so runs differing only in p
+    // compare the SAME uniforms against nested thresholds: exclusion sets
+    // are nested (E(0.3) is a subset of E(0.6)) and participation is
+    // monotone by construction, not just in expectation
+    let dir = mock_artifacts_dir("dropstats_monotone");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    let mk = |p: f64| {
+        let mut cfg = base_cfg(&dir);
+        cfg.rounds = 24;
+        cfg.aggregation = Aggregation::OtaAnalog;
+        cfg.channel.snr_db = 0.0; // noise-dominated: divisor loss visible
+        cfg.dropout_p = p;
+        cfg
+    };
+    let runs: Vec<(Vec<u32>, RunReport)> =
+        [0.0, 0.3, 0.6].iter().map(|&p| run(mk(p), rt.clone())).collect();
+
+    // per-round nesting: participants never increase with p
+    for (a, b) in runs.windows(2).map(|w| (&w[0].1, &w[1].1)) {
+        for (ra, rb) in a.log.rounds.iter().zip(b.log.rounds.iter()) {
+            assert!(
+                rb.participants <= ra.participants,
+                "round {}: participation rose with dropout_p",
+                ra.round
+            );
+        }
+    }
+    // and strictly fewer slots delivered in total at each step up in p
+    let totals: Vec<usize> = runs
+        .iter()
+        .map(|(_, r)| r.log.rounds.iter().map(|x| x.participants).sum())
+        .collect();
+    assert!(
+        totals[0] > totals[1] && totals[1] > totals[2],
+        "total participation not strictly decreasing: {totals:?}"
+    );
+
+    // OTA error grows as the divisor shrinks (1/active_k^2 noise scaling):
+    // mean over delivered rounds at p = 0.6 exceeds the clean run
+    let mean_mse = |r: &RunReport| {
+        let delivered: Vec<f64> = r
+            .log
+            .rounds
+            .iter()
+            .filter(|x| x.participants > 0)
+            .map(|x| x.ota_mse)
+            .collect();
+        assert!(!delivered.is_empty());
+        delivered.iter().sum::<f64>() / delivered.len() as f64
+    };
+    assert!(
+        mean_mse(&runs[2].1) > mean_mse(&runs[0].1),
+        "mean OTA MSE did not grow under heavy dropout"
+    );
+
+    // dropout changes the trajectory: lossy finals differ from the clean one
+    assert_ne!(runs[0].0, runs[1].0, "p = 0.3 reproduced the clean model");
+    assert_ne!(runs[0].0, runs[2].0, "p = 0.6 reproduced the clean model");
+}

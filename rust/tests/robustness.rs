@@ -1,0 +1,296 @@
+//! Robustness pins for PR 6: crash-safe JSONL streaming, build-time
+//! rejection of incompatible aggregator/straggler combinations (with
+//! stable error text), and exec-pool panic hygiene mid-pipelined-round.
+
+use std::rc::Rc;
+
+use mpota::config::RunConfig;
+use mpota::fl::Scheme;
+use mpota::kernels::PayloadPlane;
+use mpota::metrics::RoundRecord;
+use mpota::ota::AggregateStats;
+use mpota::runtime::{EvalResult, Runtime, TrainOutput};
+use mpota::sim::{AggCtx, AggScratch, Aggregator, Experiment, JsonlStreamer};
+use mpota::testing::{mock_artifacts_dir, MockTrainer};
+
+fn base_cfg(dir: &std::path::Path) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.artifacts_dir = dir.to_path_buf();
+    cfg.variant = "mock".into();
+    cfg.clients = 6;
+    cfg.clients_per_round = 6;
+    cfg.rounds = 3;
+    cfg.train_samples = 96;
+    cfg.test_samples = 32;
+    cfg.scheme = Scheme::parse("16,8,4").unwrap();
+    cfg
+}
+
+// ---------------------------------------------------------------------
+// Satellite 1: JsonlStreamer crash safety.
+// ---------------------------------------------------------------------
+
+#[test]
+fn aborted_stream_leaves_only_whole_jsonl_lines() {
+    // every push flushes one complete line to the OS, so a process abort
+    // (simulated here by mem::forget: Drop — and the BufWriter's final
+    // flush — never runs) can tear or lose NOTHING already pushed
+    let path = std::env::temp_dir().join("mpota_robustness_abort.jsonl");
+    let _ = std::fs::remove_file(&path);
+    let mut stream =
+        JsonlStreamer::create(&path).unwrap().with_label("abort-test");
+    for t in 0..17usize {
+        let mut r = RoundRecord::default();
+        r.round = t;
+        r.server_accuracy = 0.01 * t as f64;
+        r.participants = 6;
+        r.evaluated = true;
+        stream.push(&r);
+        if t % 5 == 4 {
+            stream.sync(); // the round-boundary fsync point
+        }
+    }
+    std::mem::forget(stream); // abort mid-run: no Drop, no final flush
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.ends_with('\n'), "file does not end on a line boundary");
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 17, "pushed lines went missing");
+    for (t, line) in lines.iter().enumerate() {
+        let v = mpota::json::parse(line)
+            .unwrap_or_else(|e| panic!("torn JSONL line {t}: {e}"));
+        assert_eq!(v.get("round").unwrap().as_usize().unwrap(), t);
+        assert_eq!(v.get("label").unwrap().as_str().unwrap(), "abort-test");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn streamer_observer_records_every_round_of_a_run() {
+    // the observer wiring end-to-end: one line per round, all parseable,
+    // matching the run's own log
+    let dir = mock_artifacts_dir("robust_stream");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    let path = std::env::temp_dir().join("mpota_robustness_observer.jsonl");
+    let _ = std::fs::remove_file(&path);
+    let mut exp = Experiment::builder(base_cfg(&dir))
+        .runtime(rt)
+        .backend(MockTrainer)
+        .observe(JsonlStreamer::create(&path).unwrap().with_label("run"))
+        .build()
+        .unwrap();
+    let report = exp.run().unwrap();
+    drop(exp);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), report.log.rounds.len());
+    for (line, rec) in lines.iter().zip(report.log.rounds.iter()) {
+        let v = mpota::json::parse(line).unwrap();
+        assert_eq!(v.get("round").unwrap().as_usize().unwrap(), rec.round);
+        assert_eq!(
+            v.get("participants").unwrap().as_usize().unwrap(),
+            rec.participants
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------
+// Satellite 2: non-streaming aggregators are rejected at BUILD time when
+// the run needs the shard protocol — with both conflicting values named.
+// ---------------------------------------------------------------------
+
+/// Minimal custom aggregator WITHOUT streaming support (the default):
+/// plain mean over the materialized whole-round plane.
+struct PlaneMean;
+
+impl Aggregator for PlaneMean {
+    fn aggregate_into(
+        &mut self,
+        plane: &PayloadPlane,
+        _ctx: &mut AggCtx<'_>,
+        scratch: &mut AggScratch,
+    ) -> AggregateStats {
+        let (k, n) = (plane.k(), plane.n());
+        let out = scratch.agg_mut();
+        out.clear();
+        out.resize(n, 0.0);
+        if k > 0 {
+            let f = 1.0 / k as f32;
+            for r in 0..k {
+                for (o, &x) in out.iter_mut().zip(plane.row(r).iter()) {
+                    *o += f * x;
+                }
+            }
+        }
+        AggregateStats { participants: k, ..Default::default() }
+    }
+
+    fn needs_channel(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "plane-mean"
+    }
+}
+
+#[test]
+fn non_streaming_aggregator_still_runs_whole_round_planes() {
+    // control: with no shard_size and no straggler knobs the one-shot
+    // protocol is used and the custom aggregator works end to end
+    let dir = mock_artifacts_dir("robust_nonstream_ok");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    let mut exp = Experiment::builder(base_cfg(&dir))
+        .runtime(rt)
+        .backend(MockTrainer)
+        .aggregator(PlaneMean)
+        .build()
+        .unwrap();
+    let report = exp.run().unwrap();
+    assert_eq!(report.log.rounds.len(), 3);
+    assert!(report.log.rounds.iter().all(|r| r.participants == 6));
+}
+
+#[test]
+fn sharded_run_with_non_streaming_aggregator_fails_at_build_time() {
+    let dir = mock_artifacts_dir("robust_nonstream_shard");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    let mut cfg = base_cfg(&dir);
+    cfg.shard_size = 2; // < clients_per_round = 6
+    let err = Experiment::builder(cfg)
+        .runtime(rt)
+        .backend(MockTrainer)
+        .aggregator(PlaneMean)
+        .build()
+        .err()
+        .expect("shard_size < K with a non-streaming aggregator must not build");
+    let msg = err.to_string();
+    // the pinned shape: aggregator name + BOTH conflicting values + a fix
+    assert!(
+        msg.contains(
+            "aggregator 'plane-mean' does not support streaming rounds: \
+             shard_size 2 < clients_per_round 6"
+        ),
+        "unexpected error text: {msg}"
+    );
+    assert!(
+        msg.contains("remove shard_size or use a streaming aggregator"),
+        "error names no remedy: {msg}"
+    );
+}
+
+#[test]
+fn straggler_run_with_non_streaming_aggregator_fails_at_build_time() {
+    // deadline/dropout handling is built on the masked shard protocol, so
+    // it is rejected up front too — naming the policy to disable
+    let dir = mock_artifacts_dir("robust_nonstream_straggler");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    let mut cfg = base_cfg(&dir);
+    cfg.dropout_p = 0.25;
+    let err = Experiment::builder(cfg)
+        .runtime(rt)
+        .backend(MockTrainer)
+        .aggregator(PlaneMean)
+        .build()
+        .err()
+        .expect("straggler knobs with a non-streaming aggregator must not build");
+    let msg = err.to_string();
+    assert!(
+        msg.contains(
+            "aggregator 'plane-mean' does not support streaming rounds, \
+             which straggler handling requires"
+        ),
+        "unexpected error text: {msg}"
+    );
+    assert!(
+        msg.contains("disable the 'virtual-clock' deadline/dropout policy"),
+        "error names no remedy: {msg}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Satellite 3: a panic on a pool worker mid-pipelined-round propagates to
+// the caller without poisoning the process-global pool or the arena.
+// ---------------------------------------------------------------------
+
+/// MockTrainer that panics for every 4-bit client — under the "16,8,4"
+/// scheme that detonates mid-round, while other clients of the same
+/// dispatch are still training and the previous super-shard is being
+/// superposed.
+struct PanicAt4Bits;
+
+impl mpota::exec::TrainBackend for PanicAt4Bits {
+    fn train_step(
+        &self,
+        p: mpota::quant::Precision,
+        theta: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+    ) -> anyhow::Result<TrainOutput> {
+        if p.bits() == 4 {
+            panic!("injected trainer panic");
+        }
+        MockTrainer.train_step(p, theta, images, labels, lr)
+    }
+
+    fn evaluate(
+        &self,
+        theta: &[f32],
+        images: &[f32],
+        labels: &[i32],
+    ) -> anyhow::Result<EvalResult> {
+        MockTrainer.evaluate(theta, images, labels)
+    }
+}
+
+#[test]
+fn worker_panic_mid_pipelined_round_propagates_and_pool_survives() {
+    let dir = mock_artifacts_dir("robust_panic");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    let mk = |depth: usize| {
+        let mut cfg = base_cfg(&dir);
+        cfg.shard_size = 1;
+        cfg.pipeline_depth = depth;
+        cfg.workers = 4;
+        cfg
+    };
+
+    // the panic travels off the worker and out of run() with its payload
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut exp = Experiment::builder(mk(2))
+            .runtime(rt.clone())
+            .backend(PanicAt4Bits)
+            .build()
+            .unwrap();
+        exp.run().map(|r| r.log.rounds.len())
+    }));
+    let payload = result.expect_err("injected panic was swallowed");
+    let msg = payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_default();
+    assert!(
+        msg.contains("injected trainer panic"),
+        "panic payload was replaced: {msg:?}"
+    );
+
+    // the process-global pool is unpoisoned: a fresh pipelined experiment
+    // on the SAME pool still reproduces the serial trajectory bit for bit
+    let run = |cfg: RunConfig| {
+        let mut exp = Experiment::builder(cfg)
+            .runtime(rt.clone())
+            .backend(MockTrainer)
+            .build()
+            .unwrap();
+        let report = exp.run().unwrap();
+        let bits: Vec<u32> =
+            exp.global_model().iter().map(|v| v.to_bits()).collect();
+        (bits, report.final_loss.to_bits())
+    };
+    let serial = run(base_cfg(&dir));
+    let pipelined = run(mk(2));
+    assert_eq!(serial, pipelined, "pool state leaked across the panic");
+}

@@ -140,6 +140,92 @@ fn full_runs_bit_identical_across_shard_sizes_threads_and_workers() {
 }
 
 #[test]
+fn pipelined_rounds_bit_identical_across_depths() {
+    // the PR-6 acceptance pin: pipeline_depth ∈ {0, 1, 2} × shard_size ∈
+    // {1, 3, K} × {threads, workers} ∈ {1, 4} all reproduce the serial
+    // trajectory bit for bit — pipelining only changes WHEN superposition
+    // happens relative to training, never the draws or the accumulation
+    // order
+    let dir = mock_artifacts_dir("shardinv_pipe");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    let reference = run(base_cfg(FadingKind::Rayleigh, &dir), rt.clone());
+    for depth in [0usize, 1, 2] {
+        for shard in [1usize, 3, 6] {
+            for (threads, workers) in [(1usize, 1usize), (4, 4)] {
+                let mut cfg = base_cfg(FadingKind::Rayleigh, &dir);
+                cfg.pipeline_depth = depth;
+                cfg.shard_size = shard;
+                cfg.threads = threads;
+                cfg.workers = workers;
+                let got = run(cfg, rt.clone());
+                assert_trajectories_equal(
+                    &format!(
+                        "depth={depth} shard={shard} threads={threads} \
+                         workers={workers}"
+                    ),
+                    &reference,
+                    &got,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn straggler_runs_invariant_across_pipeline_shard_and_workers() {
+    // exclusion is decided up front per round from its own RNG stream, so
+    // a lossy run is ALSO bit-identical across every scheduling axis
+    let dir = mock_artifacts_dir("shardinv_straggler");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    let mk = |depth: usize, shard: usize, workers: usize| {
+        let mut cfg = base_cfg(FadingKind::Rayleigh, &dir);
+        cfg.rounds = 4;
+        cfg.deadline_s = 0.055;
+        cfg.dropout_p = 0.2;
+        cfg.pipeline_depth = depth;
+        cfg.shard_size = shard;
+        cfg.workers = workers;
+        cfg
+    };
+    let reference = run(mk(0, 0, 1), rt.clone());
+    // the policy must actually bite in this fixture or the pin is vacuous
+    assert!(
+        reference.1.log.rounds.iter().any(|r| r.participants < 6),
+        "straggler fixture excluded nobody"
+    );
+    for depth in [0usize, 2] {
+        for shard in [1usize, 3] {
+            for workers in [1usize, 4] {
+                let got = run(mk(depth, shard, workers), rt.clone());
+                assert_trajectories_equal(
+                    &format!("straggler depth={depth} shard={shard} workers={workers}"),
+                    &reference,
+                    &got,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn disabled_deadline_is_byte_identical_to_the_deadline_free_engine() {
+    // deadline_s = 0 and dropout_p = 0 never derive a policy, never
+    // consume the "straggler" stream: changing the OTHER straggler knobs
+    // must leave the trajectory untouched, byte for byte (the PR-5
+    // baseline pin)
+    let dir = mock_artifacts_dir("shardinv_disabled");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    let reference = run(base_cfg(FadingKind::Rayleigh, &dir), rt.clone());
+    let mut cfg = base_cfg(FadingKind::Rayleigh, &dir);
+    cfg.compute_s = 9.0; // would exclude everyone — if a deadline existed
+    cfg.latency_jitter = 2.0;
+    cfg.slot_s = 0.5;
+    cfg.dropout_burst = 50.0;
+    let got = run(cfg, rt.clone());
+    assert_trajectories_equal("disabled straggler knobs", &reference, &got);
+}
+
+#[test]
 fn sampled_selection_runs_are_shard_invariant_too() {
     // K < N with the Floyd's-sampling selector: the shard axis still
     // never changes the trajectory (selection happens before sharding,
