@@ -44,6 +44,7 @@ fn correlated_fading() {
         let mut cfg = ChannelConfig::default();
         cfg.rho = rho;
         let mut model = GaussMarkov::new(cfg);
+        // mpota-lint: allow(R4): example binary — its own entry point with a demo seed
         let mut rng = Rng::seed_from(7);
         let mut rc = RoundChannel::empty();
         let mut prev_h = vec![mpota::channel::C32::ZERO; CLIENTS];
@@ -94,6 +95,7 @@ fn path_loss_geometry() {
     let mut cfg = ChannelConfig::default();
     cfg.model = mpota::channel::FadingKind::PathLoss;
     let mut model = PathLossGeometry::new(cfg);
+    // mpota-lint: allow(R4): example binary — its own entry point with a demo seed
     let mut rng = Rng::seed_from(11);
     let mut rc = RoundChannel::empty();
     let mut silenced = vec![0usize; CLIENTS];

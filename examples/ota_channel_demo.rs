@@ -24,6 +24,7 @@ use mpota::tensor;
 fn main() -> anyhow::Result<()> {
     let k = 15;
     let n = 65_536;
+    // mpota-lint: allow(R4): example binary — its own entry point with a demo seed
     let root = Rng::seed_from(2025);
 
     // --- 1. fifteen clients with mixed-precision payloads ---------------

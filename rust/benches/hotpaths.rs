@@ -286,6 +286,7 @@ fn main() {
     let tiny: Vec<f32> = (0..1024).map(|i| (i % 97) as f32).collect();
     let spawn_lat = res.bench("dispatch scoped-spawn 4 threads (1k sum)", 0, || {
         let mut acc = [0.0f32; 4];
+        // mpota-lint: allow(R2): the scoped-spawn baseline this bench compares the pool against
         std::thread::scope(|s| {
             for (i, slot) in acc.iter_mut().enumerate() {
                 let tiny = &tiny;
@@ -443,6 +444,8 @@ fn main() {
     // tests/shard_invariance.rs; this measures the overlap.
     let (round_serial, round_pipelined) = {
         struct SendMut<T>(*mut T);
+        // SAFETY: each pointer is dereferenced by exactly one task of the
+        // blocking dispatch below, and the pointee outlives the dispatch.
         unsafe impl<T> Send for SendMut<T> {}
         unsafe impl<T> Sync for SendMut<T> {}
 

@@ -185,10 +185,14 @@ fn run_client_slots<S: exec::TrainStep + ?Sized>(
             row,
         );
         match res {
+            // SAFETY: `slot` belongs to exactly one worker's range, so
+            // `stats[slot]` is unaliased; `stats` outlives the dispatch.
             Ok(s) => unsafe { *stats.at(slot) = s },
             Err(e) => {
                 // first error wins for this worker; stop its share so a
-                // broken backend fails fast instead of spinning
+                // broken backend fails fast instead of spinning.
+                // SAFETY: `errors[w]` is this worker's private slot (one
+                // entry per worker index) and outlives the dispatch.
                 unsafe { *errors.at(w) = Some(e) };
                 return;
             }
@@ -250,6 +254,7 @@ impl Coordinator {
         };
         let variant = runtime.manifest.variant(&cfg.variant)?.clone();
 
+        // mpota-lint: allow(R4): the run's single root RNG — every other stream derives from it
         let root = Rng::seed_from(cfg.seed);
         let mut data_rng = root.stream("data");
         let train_data = Dataset::generate(cfg.train_samples, &mut data_rng);
@@ -517,6 +522,9 @@ impl Coordinator {
                             None
                         },
                     );
+                    // shard boundary: every range handed to the client
+                    // phase's workers must have been released
+                    exec::assert_quiescent();
                     lo = hi;
                 }
             }
@@ -530,6 +538,9 @@ impl Coordinator {
             self.session
                 .aggregate(t, &self.scratch.plane, &self.scratch.precisions)
         };
+        // round boundary: no live overlap-registry claim from this round's
+        // dispatches may survive aggregation (debug builds only)
+        exec::assert_quiescent();
 
         let mut train_loss = 0.0f64;
         let mut train_acc = 0.0f64;
@@ -782,6 +793,9 @@ impl Coordinator {
         while lo < kk {
             let hi = (lo + step_len).min(kk);
             self.pipeline_step(prev_lo, prev_hi, lo, hi, cur_in_b, threads)?;
+            // super-shard boundary: the step's dispatch has retired, so
+            // its plane/session/stats claims must all be gone
+            exec::assert_quiescent();
             prev_lo = lo;
             prev_hi = hi;
             lo = hi;

@@ -51,6 +51,7 @@ pub fn pretrain(
     runtime: &Runtime,
     cfg: &PretrainConfig,
 ) -> Result<(Vec<f32>, Vec<EpochStats>)> {
+    // mpota-lint: allow(R4): pretraining is its own entry point with its own root seed
     let root = Rng::seed_from(cfg.seed);
     // A separate corpus from FL runs (stream "pretrain" vs "data"): the
     // pretrained features must not have seen the federated test set.

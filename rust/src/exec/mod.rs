@@ -26,6 +26,8 @@
 //! backend (tests, alternative trainers) that is `Sync` and therefore
 //! runs on the workers directly.
 
+#[cfg(debug_assertions)]
+pub(crate) mod overlap;
 pub mod pool;
 pub mod service;
 pub mod train;
@@ -33,6 +35,16 @@ pub mod train;
 pub use pool::{must_inline, pool, ExecPool};
 pub use service::{GatewayStep, TrainCall, TrainService};
 pub use train::{RuntimeStep, TrainBackend, TrainStep};
+
+/// Debug-build assertion that every mutable range handed out through
+/// [`SendPtr`]/[`SendMutPtr`]/[`DisjointMut`] by a dispatch THIS thread
+/// initiated has been released — called by the round/sweep engines at
+/// shard and round boundaries.  Compiles to nothing in release builds.
+#[inline]
+pub(crate) fn assert_quiescent() {
+    #[cfg(debug_assertions)]
+    overlap::assert_quiescent();
+}
 
 /// Lifetime-erased base pointer for handing DISJOINT regions of one
 /// buffer to pool tasks (each task reconstructs its own chunk slice, so a
@@ -66,6 +78,13 @@ impl<T> SendPtr<T> {
     /// outlive the returned slice, and no two live borrows may overlap.
     #[allow(clippy::mut_from_ref)]
     pub(crate) unsafe fn slice_at<'a>(self, off: usize, len: usize) -> &'a mut [T] {
+        #[cfg(debug_assertions)]
+        {
+            // registered BEFORE the reference exists: an overlap aborts
+            // instead of materialising the aliasing &mut
+            let lo = self.0 as usize + off * std::mem::size_of::<T>();
+            overlap::claim(lo, lo + len * std::mem::size_of::<T>());
+        }
         std::slice::from_raw_parts_mut(self.0.add(off), len)
     }
 
@@ -75,6 +94,11 @@ impl<T> SendPtr<T> {
     /// Same aliasing/lifetime rules as [`slice_at`](Self::slice_at).
     #[allow(clippy::mut_from_ref)]
     pub(crate) unsafe fn at<'a>(self, i: usize) -> &'a mut T {
+        #[cfg(debug_assertions)]
+        {
+            let lo = self.0 as usize + i * std::mem::size_of::<T>();
+            overlap::claim(lo, lo + std::mem::size_of::<T>());
+        }
         &mut *self.0.add(i)
     }
 }
@@ -110,6 +134,11 @@ impl<T> SendMutPtr<T> {
     /// pointer was created for).
     #[allow(clippy::mut_from_ref)]
     pub(crate) unsafe fn get<'a>(&self) -> &'a mut T {
+        #[cfg(debug_assertions)]
+        {
+            let lo = self.0 as usize;
+            overlap::claim(lo, lo + std::mem::size_of::<T>());
+        }
         &mut *self.0
     }
 }
@@ -144,6 +173,11 @@ impl<'a, T> DisjointMut<'a, T> {
     #[allow(clippy::mut_from_ref)]
     pub(crate) unsafe fn get(&self, i: usize) -> &mut T {
         debug_assert!(i < self.len, "index {i} out of bounds ({})", self.len);
+        #[cfg(debug_assertions)]
+        {
+            let lo = self.ptr as usize + i * std::mem::size_of::<T>();
+            overlap::claim(lo, lo + std::mem::size_of::<T>());
+        }
         &mut *self.ptr.add(i)
     }
 }

@@ -1,0 +1,234 @@
+//! Debug-build overlap registry: the executable form of the `SendPtr` /
+//! `SendMutPtr` / `DisjointMut` SAFETY arguments.
+//!
+//! Every mutable range those wrappers hand to a pool task is *claimed*
+//! here (absolute byte addresses), checked against all live claims, and
+//! released when the owning dispatch retires.  The rules mirror the
+//! documented contracts exactly:
+//!
+//! * two claims from DIFFERENT tasks (or different concurrent dispatches)
+//!   must be disjoint — an overlap panics before the aliasing reference
+//!   is ever created, so the violation aborts instead of racing;
+//! * claims from the SAME task are always fine (a task reborrowing inside
+//!   its own region is the nested-kernel case);
+//! * at shard/round boundaries ([`assert_quiescent`], called by the
+//!   coordinator and sweep engines) no claim from a dispatch this thread
+//!   initiated may still be live.
+//!
+//! Only the OUTERMOST dispatch level registers claims (nested inline
+//! dispatches — a client task's chunk-parallel kernels — run under the
+//! owning task's identity, where aliasing is the task's own business and
+//! checking would be quadratic in kernel calls).  The registry reuses one
+//! global `Vec`'s capacity forever, so steady-state rounds stay
+//! allocation-free and `rust/tests/alloc_counter.rs` keeps passing in
+//! debug builds.  The whole module is compiled only under
+//! `debug_assertions`; release builds carry zero cost and byte-identical
+//! behaviour.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Per-thread dispatch context: which (dispatch, task) the code currently
+/// runs as, who initiated the dispatch, and how deeply dispatches nest.
+#[derive(Clone, Copy)]
+struct Ctx {
+    /// 0 = not inside any dispatch scope (claims are skipped).
+    dispatch: u64,
+    task: u32,
+    /// Numeric id of the thread that initiated the dispatch.
+    initiator: u64,
+    /// 1 = direct task of the outermost dispatch (claims register);
+    /// deeper levels skip.
+    depth: u32,
+}
+
+const UNSCOPED: Ctx = Ctx { dispatch: 0, task: 0, initiator: 0, depth: 0 };
+
+thread_local! {
+    static CTX: Cell<Ctx> = const { Cell::new(UNSCOPED) };
+    /// Lazily-assigned small numeric thread id (no allocation, unlike
+    /// `std::thread::current()`).
+    static THREAD_ID: Cell<u64> = const { Cell::new(0) };
+}
+
+static NEXT_DISPATCH: AtomicU64 = AtomicU64::new(1);
+static NEXT_THREAD: AtomicU64 = AtomicU64::new(1);
+
+#[derive(Clone, Copy)]
+struct Claim {
+    lo: usize,
+    hi: usize,
+    dispatch: u64,
+    task: u32,
+    initiator: u64,
+}
+
+static REGISTRY: Mutex<Vec<Claim>> = Mutex::new(Vec::new());
+
+/// Cheap numeric id for the current thread.
+pub(crate) fn thread_id() -> u64 {
+    THREAD_ID.with(|c| {
+        let v = c.get();
+        if v != 0 {
+            return v;
+        }
+        let v = NEXT_THREAD.fetch_add(1, Ordering::Relaxed);
+        c.set(v);
+        v
+    })
+}
+
+fn lock_registry() -> MutexGuard<'static, Vec<Claim>> {
+    // a deliberate-overlap panic (tests) poisons the mutex; the claim
+    // list itself is always consistent, so keep going
+    REGISTRY.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Record a mutable byte-range claim `[lo, hi)` for the current task and
+/// panic if it overlaps a live claim from any OTHER task.  No-op outside
+/// a depth-1 dispatch scope (see the module docs).
+pub(crate) fn claim(lo: usize, hi: usize) {
+    let ctx = CTX.with(|c| c.get());
+    if ctx.dispatch == 0 || ctx.depth != 1 {
+        return;
+    }
+    let mut reg = lock_registry();
+    for c in reg.iter() {
+        let same_task = c.dispatch == ctx.dispatch && c.task == ctx.task;
+        if !same_task && c.lo < hi && lo < c.hi {
+            let (clo, chi, cd, ct) = (c.lo, c.hi, c.dispatch, c.task);
+            drop(reg);
+            panic!(
+                "exec overlap registry: overlapping mutable ranges handed to \
+                 concurrent tasks: [{lo:#x}, {hi:#x}) (dispatch {}, task {}) \
+                 vs live [{clo:#x}, {chi:#x}) (dispatch {cd}, task {ct})",
+                ctx.dispatch, ctx.task
+            );
+        }
+    }
+    reg.push(Claim {
+        lo,
+        hi,
+        dispatch: ctx.dispatch,
+        task: ctx.task,
+        initiator: ctx.initiator,
+    });
+}
+
+/// Assert that no claim from a dispatch initiated by THIS thread is still
+/// live — the shard/round-boundary quiescence contract.  Claims from
+/// other threads' concurrent dispatches (parallel tests) are ignored.
+pub(crate) fn assert_quiescent() {
+    let me = thread_id();
+    let reg = lock_registry();
+    for c in reg.iter() {
+        assert!(
+            c.initiator != me,
+            "exec overlap registry: claim [{:#x}, {:#x}) (dispatch {}, task {}) \
+             is still live at a shard/round boundary",
+            c.lo,
+            c.hi,
+            c.dispatch,
+            c.task
+        );
+    }
+}
+
+/// Initiator-side handle for one pooled dispatch: allocates the dispatch
+/// id and, on drop (normal retire or unwind), releases every claim made
+/// under it.  `retain` compacts in place — capacity is never given back.
+pub(crate) struct DispatchClaims {
+    pub(crate) id: u64,
+    pub(crate) initiator: u64,
+}
+
+impl DispatchClaims {
+    pub(crate) fn begin() -> DispatchClaims {
+        DispatchClaims {
+            id: NEXT_DISPATCH.fetch_add(1, Ordering::Relaxed),
+            initiator: thread_id(),
+        }
+    }
+}
+
+impl Drop for DispatchClaims {
+    fn drop(&mut self) {
+        let mut reg = lock_registry();
+        reg.retain(|c| c.dispatch != self.id);
+    }
+}
+
+/// Worker/caller-side scope for running ONE task of a pooled dispatch:
+/// installs the task identity (depth +1) for the duration of the closure.
+pub(crate) struct TaskScope {
+    saved: Ctx,
+}
+
+impl TaskScope {
+    pub(crate) fn enter(dispatch: u64, task: u32, initiator: u64) -> TaskScope {
+        let saved = CTX.with(|c| c.get());
+        CTX.with(|c| {
+            c.set(Ctx { dispatch, task, initiator, depth: saved.depth + 1 })
+        });
+        TaskScope { saved }
+    }
+}
+
+impl Drop for TaskScope {
+    fn drop(&mut self) {
+        CTX.with(|c| c.set(self.saved));
+    }
+}
+
+/// Scope for the inline dispatch path.  At the outermost level it acts as
+/// a full dispatch (fresh id, per-iteration task identities, claims
+/// released on drop) so the disjointness contract is checked even when
+/// tasks run sequentially — the contract is about the ranges handed out,
+/// not the schedule.  Nested inside a pool task it only bumps the depth,
+/// keeping the owning task's identity.
+pub(crate) struct InlineScope {
+    saved: Ctx,
+    own: Option<DispatchClaims>,
+}
+
+impl InlineScope {
+    pub(crate) fn begin() -> InlineScope {
+        let saved = CTX.with(|c| c.get());
+        if saved.depth == 0 {
+            let d = DispatchClaims::begin();
+            CTX.with(|c| {
+                c.set(Ctx {
+                    dispatch: d.id,
+                    task: 0,
+                    initiator: d.initiator,
+                    depth: 1,
+                })
+            });
+            InlineScope { saved, own: Some(d) }
+        } else {
+            let mut ctx = saved;
+            ctx.depth += 1;
+            CTX.with(|c| c.set(ctx));
+            InlineScope { saved, own: None }
+        }
+    }
+
+    pub(crate) fn enter_task(&self, i: usize) {
+        if self.own.is_some() {
+            CTX.with(|c| {
+                let mut ctx = c.get();
+                ctx.task = i as u32;
+                c.set(ctx);
+            });
+        }
+    }
+}
+
+impl Drop for InlineScope {
+    fn drop(&mut self) {
+        // restore the context first; the owned DispatchClaims (field drop
+        // order) then releases this scope's claims
+        CTX.with(|c| c.set(self.saved));
+    }
+}

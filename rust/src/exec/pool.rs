@@ -71,6 +71,13 @@ struct Job {
     slots: *const AtomicUsize,
     panic: *const PanicSlot,
     tasks: usize,
+    /// Identity for the debug overlap registry (see `exec::overlap`):
+    /// claims made inside tasks are tagged with the dispatch they belong
+    /// to and released when it retires.
+    #[cfg(debug_assertions)]
+    dispatch: u64,
+    #[cfg(debug_assertions)]
+    initiator: u64,
 }
 
 // SAFETY: the raw pointers are only dereferenced while the dispatching
@@ -200,7 +207,15 @@ impl ExecPool {
         if caller_runs
             && (tasks == 1 || concurrency <= 1 || self.cap == 0 || must_inline())
         {
+            // the overlap registry treats an outermost inline dispatch
+            // exactly like a pooled one (fresh dispatch id, per-iteration
+            // task identity): the disjointness contract is about the
+            // ranges handed out, not the schedule they happen to run on
+            #[cfg(debug_assertions)]
+            let scope = crate::exec::overlap::InlineScope::begin();
             for i in 0..tasks {
+                #[cfg(debug_assertions)]
+                scope.enter_task(i);
                 f(i);
             }
             return;
@@ -222,6 +237,11 @@ impl ExecPool {
         let done = AtomicUsize::new(0);
         let slots = AtomicUsize::new(worker_slots);
         let panic_slot: PanicSlot = Mutex::new(None);
+        // releases this dispatch's overlap claims on drop — normal retire
+        // AND the resume_unwind path below, so no stale claim survives a
+        // panicked job
+        #[cfg(debug_assertions)]
+        let claims = crate::exec::overlap::DispatchClaims::begin();
         let job = Job {
             f: f as *const (dyn Fn(usize) + Sync),
             next: &next,
@@ -229,6 +249,10 @@ impl ExecPool {
             slots: &slots,
             panic: &panic_slot,
             tasks,
+            #[cfg(debug_assertions)]
+            dispatch: claims.id,
+            #[cfg(debug_assertions)]
+            initiator: claims.initiator,
         };
 
         {
@@ -312,9 +336,23 @@ fn run_tasks(job: &Job) {
         if i >= job.tasks {
             break;
         }
-        let r = catch_unwind(AssertUnwindSafe(|| f(i)));
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            // install the (dispatch, task) identity for the overlap
+            // registry while the closure runs
+            #[cfg(debug_assertions)]
+            let _task = crate::exec::overlap::TaskScope::enter(
+                job.dispatch,
+                i as u32,
+                job.initiator,
+            );
+            f(i)
+        }));
         done.fetch_add(1, Ordering::Release);
         if let Err(p) = r {
+            // SAFETY: `job.panic` targets the PanicSlot on the dispatching
+            // caller's stack; the caller is parked in `dispatch` until
+            // `done == tasks`, and this increment-to-done happens only
+            // after the slot write completes under its mutex.
             let slot = unsafe { &*job.panic };
             let mut g = slot.lock().unwrap();
             if g.is_none() {
@@ -337,9 +375,11 @@ fn worker_loop(shared: Arc<Shared>) {
                 if st.epoch != seen {
                     seen = st.epoch;
                     if let Some(job) = st.job {
-                        // join only while the job has a concurrency slot;
-                        // the claim happens under the state lock, so the
-                        // caller cannot retire the job concurrently
+                        // SAFETY: join only while the job has a concurrency
+                        // slot; `job.slots` targets the dispatching caller's
+                        // stack, and the claim happens under the state lock,
+                        // so the caller cannot retire the job (and pop its
+                        // frame) concurrently.
                         let claimed = unsafe { &*job.slots }
                             .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |s| {
                                 s.checked_sub(1)
@@ -492,6 +532,88 @@ mod tests {
             }
         };
         pool.broadcast(8, &f);
+    }
+
+    /// The debug overlap registry (`exec::overlap`): claims made through
+    /// `SendPtr` must be pairwise disjoint across tasks, released at
+    /// dispatch retire, and quiescent at boundaries.
+    #[cfg(debug_assertions)]
+    mod overlap_registry {
+        use super::*;
+
+        #[test]
+        fn claims_release_at_dispatch_retire_and_quiesce() {
+            let pool = ExecPool::new(2);
+            let mut buf = vec![0f32; 64];
+            let p = crate::exec::SendPtr::from_mut(&mut buf[..]);
+            let f = |i: usize| {
+                // SAFETY: tasks 0 and 1 reborrow disjoint halves of `buf`,
+                // which outlives the blocking dispatch.
+                let s = unsafe { p.slice_at(i * 32, 32) };
+                s[0] += 1.0;
+            };
+            pool.broadcast(2, &f);
+            crate::exec::assert_quiescent();
+            // the SAME ranges are claimable again by the next dispatch —
+            // the previous dispatch's claims were released at retire
+            pool.broadcast(2, &f);
+            crate::exec::assert_quiescent();
+            assert_eq!(buf[0], 2.0);
+            assert_eq!(buf[32], 2.0);
+        }
+
+        #[test]
+        fn same_task_reborrows_are_not_conflicts() {
+            let pool = ExecPool::new(2);
+            let mut buf = vec![0f32; 64];
+            let p = crate::exec::SendPtr::from_mut(&mut buf[..]);
+            let f = |i: usize| {
+                // SAFETY: each task stays inside its own half, and the
+                // second (overlapping) reborrow happens after the first
+                // reference is dead — the nested-kernel pattern the
+                // same-task rule exists for.
+                unsafe { p.slice_at(i * 32, 32) }[0] += 1.0;
+                unsafe { p.slice_at(i * 32 + 4, 8) }[0] += 1.0;
+            };
+            pool.broadcast(2, &f);
+            crate::exec::assert_quiescent();
+            assert_eq!(buf[0], 1.0);
+            assert_eq!(buf[4], 1.0);
+        }
+
+        #[test]
+        #[should_panic(expected = "overlapping")]
+        fn deliberate_overlap_is_caught_on_a_pooled_dispatch() {
+            let pool = ExecPool::new(2);
+            let mut buf = vec![0f32; 64];
+            let p = crate::exec::SendPtr::from_mut(&mut buf[..]);
+            let f = |_i: usize| {
+                // SAFETY: deliberately NOT upheld — both tasks claim rows
+                // [0, 32).  The registry panics on the second claim BEFORE
+                // the aliasing &mut is created, so the losing task never
+                // touches the buffer.
+                let s = unsafe { p.slice_at(0, 32) };
+                s[0] += 1.0;
+            };
+            pool.broadcast(2, &f);
+        }
+
+        #[test]
+        #[should_panic(expected = "overlapping")]
+        fn deliberate_overlap_is_caught_on_the_inline_path_too() {
+            // cap = 0: the dispatch runs inline, yet the handed-out ranges
+            // must still be pairwise disjoint — the contract is about the
+            // ranges handed out, not the schedule they happen to run on
+            let pool = ExecPool::new(0);
+            let mut buf = vec![0f32; 64];
+            let p = crate::exec::SendPtr::from_mut(&mut buf[..]);
+            let f = |_i: usize| {
+                // SAFETY: deliberately NOT upheld, as above.
+                let s = unsafe { p.slice_at(8, 16) };
+                s[0] += 1.0;
+            };
+            pool.broadcast(2, &f);
+        }
     }
 
     #[test]

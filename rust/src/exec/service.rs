@@ -149,15 +149,21 @@ impl TrainService {
             };
             let Some(req) = req else { return };
             // SAFETY: the submitting worker blocks on `reply` until we
-            // store the result, so all views are live (see TrainReq).
-            let out = exec(TrainCall {
-                precision: req.precision,
-                lr: req.lr,
-                theta: unsafe { req.theta.as_slice() },
-                images: unsafe { req.images.as_slice() },
-                labels: unsafe { req.labels.as_slice() },
-            });
-            let reply = unsafe { &*req.reply };
+            // store the result, so the raw slice views and the reply slot
+            // all target live stack/buffer memory (see TrainReq).
+            let (call, reply) = unsafe {
+                (
+                    TrainCall {
+                        precision: req.precision,
+                        lr: req.lr,
+                        theta: req.theta.as_slice(),
+                        images: req.images.as_slice(),
+                        labels: req.labels.as_slice(),
+                    },
+                    &*req.reply,
+                )
+            };
+            let out = exec(call);
             {
                 let mut g = reply.m.lock().unwrap();
                 *g = Some(out);
@@ -216,23 +222,25 @@ mod tests {
         svc.reset(3);
         // deliberately !Sync executor state: the whole point of the funnel
         let served = std::cell::Cell::new(0u32);
-        std::thread::scope(|s| {
-            for w in 0..3u32 {
-                let svc = &svc;
-                s.spawn(move || {
-                    let step = GatewayStep::new(svc);
-                    for i in 0..5u32 {
-                        let theta = vec![w as f32, i as f32];
-                        let out = step
-                            .train_step(Precision::of(8), &theta, &[1.0], &[2], 0.1)
-                            .unwrap();
-                        assert_eq!(out.new_theta, vec![w as f32 + 1.0, i as f32 + 1.0]);
-                        assert_eq!(out.loss, 0.5);
-                        assert_eq!(out.correct, 1.0);
-                    }
-                    svc.detach();
-                });
+        // worker tasks run on an ExecPool via host_broadcast — the exact
+        // dispatch shape the coordinator uses in production (the PR-4
+        // version spawned ad-hoc std::thread::scope threads here, which
+        // bypassed the pool this service is designed around)
+        let pool = crate::exec::ExecPool::new(3);
+        let task = |w: usize| {
+            let step = GatewayStep::new(&svc);
+            for i in 0..5u32 {
+                let theta = vec![w as f32, i as f32];
+                let out = step
+                    .train_step(Precision::of(8), &theta, &[1.0], &[2], 0.1)
+                    .unwrap();
+                assert_eq!(out.new_theta, vec![w as f32 + 1.0, i as f32 + 1.0]);
+                assert_eq!(out.loss, 0.5);
+                assert_eq!(out.correct, 1.0);
             }
+            svc.detach();
+        };
+        pool.host_broadcast(3, &task, &mut || {
             svc.serve(|call| {
                 served.set(served.get() + 1);
                 assert_eq!(call.images, &[1.0]);
@@ -251,16 +259,16 @@ mod tests {
     fn errors_flow_back_to_the_submitting_worker() {
         let svc = TrainService::new();
         svc.reset(1);
-        std::thread::scope(|s| {
-            let svc_ref = &svc;
-            s.spawn(move || {
-                let step = GatewayStep::new(svc_ref);
-                let err = step
-                    .train_step(Precision::of(4), &[0.0], &[0.0], &[0], 0.1)
-                    .unwrap_err();
-                assert!(err.to_string().contains("no device"), "{err}");
-                svc_ref.detach();
-            });
+        let pool = crate::exec::ExecPool::new(1);
+        let task = |_w: usize| {
+            let step = GatewayStep::new(&svc);
+            let err = step
+                .train_step(Precision::of(4), &[0.0], &[0.0], &[0], 0.1)
+                .unwrap_err();
+            assert!(err.to_string().contains("no device"), "{err}");
+            svc.detach();
+        };
+        pool.host_broadcast(1, &task, &mut || {
             svc.serve(|_| anyhow::bail!("no device"));
         });
     }

@@ -75,6 +75,7 @@ pub fn mean_plane_into(
 /// shard partition, because per element the same f32 contributions arrive
 /// in the same ascending client order and the chunk grid depends only on
 /// `out.len()` and `threads`.
+// mpota-lint: zero-alloc-hot
 pub fn mean_plane_accumulate(
     plane: &crate::kernels::PayloadPlane,
     f: f32,
@@ -101,6 +102,7 @@ pub fn mean_plane_accumulate(
 /// skipped entirely — never read (the plane holds stale data for clients
 /// the round excluded).  `None` delegates to the unmasked kernel, so the
 /// everyone-transmits path stays instruction-identical.
+// mpota-lint: zero-alloc-hot
 pub fn mean_plane_masked_accumulate(
     plane: &crate::kernels::PayloadPlane,
     f: f32,

@@ -19,6 +19,7 @@ use crate::kernels::{par, PayloadPlane};
 
 /// Fused complex axpy: `y_re += g.re * x` and `y_im += g.im * x` in one
 /// pass over `x`.
+// mpota-lint: zero-alloc-hot
 pub fn axpy2(y_re: &mut [f32], y_im: &mut [f32], g: C32, x: &[f32]) {
     assert_eq!(y_re.len(), x.len());
     assert_eq!(y_im.len(), x.len());
@@ -31,6 +32,7 @@ pub fn axpy2(y_re: &mut [f32], y_im: &mut [f32], g: C32, x: &[f32]) {
 
 /// Fused complex axpy plus ideal accumulation: one pass updating
 /// `y_re += g.re * x`, `y_im += g.im * x`, `ideal += x`.
+// mpota-lint: zero-alloc-hot
 pub fn axpy3(y_re: &mut [f32], y_im: &mut [f32], ideal: &mut [f32], g: C32, x: &[f32]) {
     assert_eq!(y_re.len(), x.len());
     assert_eq!(y_im.len(), x.len());
@@ -51,6 +53,7 @@ pub fn axpy3(y_re: &mut [f32], y_im: &mut [f32], ideal: &mut [f32], g: C32, x: &
 /// Accumulators must be pre-zeroed (or hold a prior partial sum) — the
 /// kernel only adds.  With `threads > 1` the element axis is chunked; the
 /// per-element result is bit-identical for any thread count.
+// mpota-lint: zero-alloc-hot
 pub fn superpose(
     plane: &PayloadPlane,
     active: &[(usize, C32)],
@@ -139,7 +142,9 @@ mod tests {
 
     #[test]
     fn fused_matches_three_sweeps_bitwise() {
-        for (k, n, seed) in [(4usize, 257usize, 1u64), (15, 20_001, 2), (1, 64, 3)] {
+        // the middle case shrinks under Miri but stays odd and multi-chunk
+        let big = if cfg!(miri) { (5usize, 8_193usize, 2u64) } else { (15, 20_001, 2) };
+        for (k, n, seed) in [(4usize, 257usize, 1u64), big, (1, 64, 3)] {
             let (plane, active) = plane_and_gains(k, n, seed);
             let (want_re, want_im, want_id) = reference(&plane, &active, n);
             for threads in [1usize, 4] {

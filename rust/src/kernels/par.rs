@@ -60,6 +60,7 @@ pub fn chunk_start(n: usize, chunks: usize, i: usize) -> usize {
 ///
 /// `f` must be oblivious to chunking (pure elementwise work): the chunk
 /// grid is deterministic, so results are identical for any thread count.
+// mpota-lint: zero-alloc-hot
 pub fn par_chunks_mut<T, F>(threads: usize, buf: &mut [T], f: F)
 where
     T: Send,
@@ -93,6 +94,7 @@ where
 /// [`par_chunks_mut`] there is no minimum-size fallback (the unit of work
 /// is a whole row — a client payload — not an element), and `parts = 1`
 /// is the exact sequential path.
+// mpota-lint: zero-alloc-hot
 pub fn par_row_partition_mut<T, F>(parts: usize, rows: usize, buf: &mut [T], f: F)
 where
     T: Send,

@@ -116,6 +116,7 @@ pub fn aggregate_plane_into(
 /// slot ranges and one [`finalize_plane_into`].  A single-shard stream is
 /// exactly [`aggregate_plane_into`] — the one-shot entry is implemented
 /// on these three functions, so the two paths share every instruction.
+// mpota-lint: zero-alloc-hot
 pub fn begin_plane_into(n: usize, scratch: &mut OtaScratch) {
     scratch.reset(n);
     scratch.active_total = 0;
@@ -130,6 +131,7 @@ pub fn begin_plane_into(n: usize, scratch: &mut OtaScratch) {
 /// matter how the slots are cut into shards (the fused kernel sweeps the
 /// shard's rows in order, and shards arrive in order), so any
 /// `shard_size` reproduces the unsharded superposition bit-for-bit.
+// mpota-lint: zero-alloc-hot
 pub fn accumulate_plane_into(
     plane: &PayloadPlane,
     slot0: usize,
@@ -146,6 +148,7 @@ pub fn accumulate_plane_into(
 /// `active_total` (the 1/K_active divisor [`finalize_plane_into`] scales
 /// by) self-adjusts.  `None` is the everyone-transmits path, identical to
 /// the unmasked entry instruction for instruction.
+// mpota-lint: zero-alloc-hot
 pub fn accumulate_plane_masked_into(
     plane: &PayloadPlane,
     slot0: usize,
@@ -193,6 +196,7 @@ pub fn accumulate_plane_masked_into(
 /// participant mean.  On return `scratch.y_re` holds the aggregated MEAN
 /// vector (all-zeros with `participants == 0` when every slot was
 /// truncation-silenced — the "round lost" case).
+// mpota-lint: zero-alloc-hot
 pub fn finalize_plane_into(
     round: &RoundChannel,
     rng: &mut Rng,

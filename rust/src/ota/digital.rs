@@ -148,6 +148,7 @@ pub fn aggregate_plane_into(
 /// reproduce the one-shot path bit-for-bit for every shard partition (per
 /// element, the same decoded contributions arrive in the same ascending
 /// client order).
+// mpota-lint: zero-alloc-hot
 pub fn accumulate_plane_into(
     plane: &PayloadPlane,
     precisions: &[Precision],
@@ -164,6 +165,7 @@ pub fn accumulate_plane_into(
 /// uses and NO bits (an excluded client transmits nothing in its
 /// orthogonal slot).  `None` is the everyone-transmits path, identical to
 /// the unmasked entry instruction for instruction.
+// mpota-lint: zero-alloc-hot
 pub fn accumulate_plane_masked_into(
     plane: &PayloadPlane,
     precisions: &[Precision],

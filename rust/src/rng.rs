@@ -153,6 +153,7 @@ impl Rng {
     /// Hot-path form: consumes Box-Muller PAIRS directly (no spare-cache
     /// branch per element), which measures ~25% faster than per-element
     /// `normal_f32` on the OTA noise-injection path (EXPERIMENTS.md §Perf).
+    // mpota-lint: zero-alloc-hot
     pub fn fill_normal(&mut self, out: &mut [f32], mean: f32, std: f32) {
         let mut i = 0usize;
         while i + 1 < out.len() {
@@ -172,6 +173,7 @@ impl Rng {
 
     /// Add N(0, std²) noise to a slice in place (single pass, no scratch
     /// buffer — the OTA AWGN hot path).
+    // mpota-lint: zero-alloc-hot
     pub fn add_normal(&mut self, out: &mut [f32], std: f32) {
         let mut i = 0usize;
         while i + 1 < out.len() {
@@ -225,6 +227,7 @@ impl Rng {
     /// all `2n` draws.  Odd lengths interact with the spare cache and
     /// fall back to the sequential pass (the OTA payload length is the
     /// model parameter count — even for every shipped variant).
+    // mpota-lint: zero-alloc-hot
     pub fn add_normal2(&mut self, re: &mut [f32], im: &mut [f32], std: f32, threads: usize) {
         use crate::kernels::par;
         assert_eq!(re.len(), im.len(), "noise component length mismatch");
@@ -351,7 +354,11 @@ mod tests {
         }
     }
 
+    // statistical moment checks draw 50k–100k samples — prohibitively
+    // slow under the Miri interpreter and not what Miri is for (they
+    // carry no unsafe); the CI Miri job skips them
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn uniform_mean_near_half() {
         let mut r = Rng::seed_from(11);
         let n = 50_000;
@@ -360,6 +367,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn normal_moments() {
         let mut r = Rng::seed_from(5);
         let n = 100_000;
@@ -371,6 +379,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn rayleigh_mean_matches_theory() {
         // E[Rayleigh(sigma)] = sigma * sqrt(pi/2)
         let mut r = Rng::seed_from(9);
@@ -382,6 +391,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn below_is_in_range_and_covers() {
         let mut r = Rng::seed_from(13);
         let mut seen = [false; 10];
@@ -423,7 +433,9 @@ mod tests {
     #[test]
     fn add_normal2_bit_identical_any_thread_count() {
         // large enough to cross the parallel threshold, even length
-        for n in [20_000usize, 16_384] {
+        // (shrunk under Miri — still multi-chunk, interpreter-affordable)
+        let sizes: [usize; 2] = if cfg!(miri) { [8_192, 4_096] } else { [20_000, 16_384] };
+        for n in sizes {
             let mut want_re = vec![0.25f32; n];
             let mut want_im = vec![-0.5f32; n];
             let mut seq = Rng::seed_from(4242);
@@ -444,7 +456,8 @@ mod tests {
 
     #[test]
     fn add_normal2_odd_length_falls_back_exactly() {
-        let n = 12_345usize; // odd: exercises the spare-normal tail path
+        // odd: exercises the spare-normal tail path
+        let n = if cfg!(miri) { 4_097usize } else { 12_345 };
         let mut want_re = vec![0.0f32; n];
         let mut want_im = vec![0.0f32; n];
         let mut seq = Rng::seed_from(99);

@@ -580,6 +580,7 @@ fn channel_cell(
     let base = &spec.base;
     let n = spec.payload_len;
     let rounds = base.rounds;
+    // mpota-lint: allow(R4): each sweep cell reseeds from the sweep's base seed by design
     let root = Rng::seed_from(base.seed);
     let cfg = spec.cell_config(
         scheme, snr, agg, model, polkind, fleet, shard_size, deadline, dropout,
@@ -736,6 +737,11 @@ fn channel_cell(
                     }
                 };
                 pool.broadcast(2, &task);
+                // super-shard boundary: the step dispatch retired, so its
+                // session/plane/rng claims must be gone (debug registry;
+                // trivially true when this cell runs nested in a sweep
+                // worker, where claims belong to the outer dispatch)
+                crate::exec::assert_quiescent();
                 prev_lo = cur_lo;
                 prev_hi = cur_hi;
                 cur_in_b = !cur_in_b;
@@ -768,6 +774,8 @@ fn channel_cell(
             }
         }
         let stats = session.finalize_aggregate(t, &bufs.assigned);
+        // round boundary for the overlap registry (debug builds only)
+        crate::exec::assert_quiescent();
         if stats.participants > 0 {
             mse_sum += tensor::mse(session.result(), &bufs.ideal);
         } else {

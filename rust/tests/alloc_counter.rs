@@ -38,16 +38,20 @@ struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: every method delegates to `System` verbatim — the only addition
+// is a relaxed atomic count — so System's GlobalAlloc contract carries over.
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc(layout)
     }
 
+    // SAFETY: forwarded to `System` unchanged.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
 
+    // SAFETY: forwarded to `System` unchanged (plus the count).
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)
@@ -530,6 +534,8 @@ fn steady_state_round_path_is_allocation_free() {
     // fills the NEXT plane — both planes and the session warm, nothing
     // allocated per round on any thread
     struct SendMut<T>(*mut T);
+    // SAFETY: each pointer is dereferenced by exactly one task of the
+    // blocking dispatch below, and the pointee outlives the dispatch.
     unsafe impl<T> Send for SendMut<T> {}
     unsafe impl<T> Sync for SendMut<T> {}
 

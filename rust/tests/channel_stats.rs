@@ -61,16 +61,20 @@ impl ThreadCountingAlloc {
     }
 }
 
+// SAFETY: every method delegates to `System` verbatim — the only addition
+// is a thread-local count — so System's GlobalAlloc contract carries over.
 unsafe impl GlobalAlloc for ThreadCountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ThreadCountingAlloc::record(layout.size());
         System.alloc(layout)
     }
 
+    // SAFETY: forwarded to `System` unchanged.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
 
+    // SAFETY: forwarded to `System` unchanged (plus the count).
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ThreadCountingAlloc::record(new_size);
         System.realloc(ptr, layout, new_size)

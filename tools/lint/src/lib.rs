@@ -1,0 +1,1221 @@
+//! `mpota-lint` — invariant-enforcing static analysis for the mpota
+//! OTA-FL reproduction.
+//!
+//! The repo's standing contracts (per-seed bit-identity across
+//! `{pipeline_depth, shard_size, threads, workers}`, zero-alloc
+//! steady-state rounds, one sanctioned thread spawner, one sanctioned
+//! randomness root) are enforced dynamically by the test suites — but a
+//! dynamic test only catches the schedule it happens to run.  This tool
+//! is the static complement: a hand-rolled Rust lexer (no external
+//! crates, matching the product crate's no-deps idiom) walks
+//! `rust/src`, `rust/benches`, `rust/tests` and `examples/` and enforces
+//! six repo-specific rules with `file:line` diagnostics:
+//!
+//! * **R1** — every `unsafe` block / fn / impl is immediately preceded
+//!   by a `// SAFETY:` comment (a `# Safety` doc section counts for
+//!   `unsafe fn` declarations).
+//! * **R2** — no `std::thread::{spawn, scope, Builder}` outside
+//!   `exec/pool.rs`: the parked pool is the only sanctioned spawner.
+//! * **R3** — no `HashMap` / `HashSet` on result-feeding paths: their
+//!   iteration order is nondeterministic and breaks the bit-identity
+//!   contract.  (Test-only code is exempt.)
+//! * **R4** — no RNG construction or seeding outside `rng.rs`: all
+//!   randomness must derive from the run root via the named skip-ahead
+//!   stream API (`stream` / `substream`).  (Tests and benches, which
+//!   are their own entry points, are exempt.)
+//! * **R5** — no allocating calls inside functions tagged
+//!   `// mpota-lint: zero-alloc-hot` — the static complement to the
+//!   counting-allocator audit in `rust/tests/alloc_counter.rs`.
+//! * **R6** — unsafe-count ratchet: each file's `unsafe` site count
+//!   must not exceed its committed baseline
+//!   (`tools/lint/baseline.json`).
+//!
+//! Escapes: `// mpota-lint: allow(<rule>): <mandatory reason>` on the
+//! violating line (trailing) or in the comment block immediately above
+//! it.  An allow without a reason is itself a violation.  R6 has no
+//! inline escape — raising a file's unsafe budget is a deliberate edit
+//! to the committed baseline.
+//!
+//! Output: human diagnostics on stderr/stdout (via the callers) and a
+//! machine-readable `LINT_report.json` at the repo root; nonzero exit
+//! on any violation.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// The directories scanned, relative to the repo root.
+pub const SCAN_DIRS: [&str; 4] = ["rust/src", "rust/benches", "rust/tests", "examples"];
+
+/// Default location of the unsafe-ratchet baseline, relative to root.
+pub const BASELINE_REL: &str = "tools/lint/baseline.json";
+
+/// Default location of the machine-readable report, relative to root.
+pub const REPORT_REL: &str = "LINT_report.json";
+
+// ---------------------------------------------------------------------------
+// Rules and diagnostics
+// ---------------------------------------------------------------------------
+
+/// A lint rule (R1–R6) or the escape-syntax meta rule.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Rule {
+    R1,
+    R2,
+    R3,
+    R4,
+    R5,
+    R6,
+    /// Malformed `mpota-lint:` directives (missing reason, unknown rule).
+    Escape,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::R1 => "R1",
+            Rule::R2 => "R2",
+            Rule::R3 => "R3",
+            Rule::R4 => "R4",
+            Rule::R5 => "R5",
+            Rule::R6 => "R6",
+            Rule::Escape => "escape",
+        }
+    }
+
+    fn from_id(s: &str) -> Option<Rule> {
+        match s {
+            "R1" => Some(Rule::R1),
+            "R2" => Some(Rule::R2),
+            "R3" => Some(Rule::R3),
+            "R4" => Some(Rule::R4),
+            "R5" => Some(Rule::R5),
+            "R6" => Some(Rule::R6),
+            _ => None,
+        }
+    }
+}
+
+/// One violation, anchored to a repo-relative `file:line`.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+/// One `mpota-lint: allow(...)` escape found in the tree.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub reason: String,
+}
+
+/// Scan result for a single source file.
+#[derive(Clone, Debug, Default)]
+pub struct FileScan {
+    pub diagnostics: Vec<Diagnostic>,
+    pub allows: Vec<Allow>,
+    pub unsafe_count: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+enum TokData {
+    Ident(String),
+    Punct(char),
+}
+
+#[derive(Clone, Debug)]
+struct Tok {
+    line: usize,
+    data: TokData,
+}
+
+impl Tok {
+    fn is_ident(&self, s: &str) -> bool {
+        matches!(&self.data, TokData::Ident(t) if t == s)
+    }
+
+    fn ident(&self) -> Option<&str> {
+        match &self.data {
+            TokData::Ident(t) => Some(t.as_str()),
+            TokData::Punct(_) => None,
+        }
+    }
+
+    fn is_punct(&self, c: char) -> bool {
+        matches!(&self.data, TokData::Punct(p) if *p == c)
+    }
+}
+
+/// Per-line facts the rule checks consume (1-indexed; entry 0 unused).
+#[derive(Clone, Debug, Default)]
+struct LineInfo {
+    /// Concatenated comment text on this line (line + block comments).
+    comment: String,
+    has_comment: bool,
+    /// Any non-comment token starts on this line.
+    has_code: bool,
+    /// An `unsafe` keyword token starts on this line.
+    has_unsafe: bool,
+    /// The raw line starts with an attribute (`#[` / `#![`).
+    attr_only: bool,
+}
+
+impl LineInfo {
+    fn comment_only(&self) -> bool {
+        self.has_comment && !self.has_code
+    }
+}
+
+struct Lexed {
+    toks: Vec<Tok>,
+    lines: Vec<LineInfo>,
+}
+
+/// Tokenize Rust source into idents and punctuation, stripping comments
+/// (recorded per line), string/char literals and numbers.  This is not a
+/// full Rust lexer — it only needs to be exact about what is and is not
+/// code, so that keyword matches never fire inside comments or strings.
+fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let nlines = src.lines().count();
+    let mut lines = vec![LineInfo::default(); nlines + 2];
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    let n = chars.len();
+
+    let record_comment = |lines: &mut [LineInfo], line: usize, text: &str| {
+        let li = &mut lines[line];
+        li.has_comment = true;
+        if !li.comment.is_empty() {
+            li.comment.push(' ');
+        }
+        li.comment.push_str(text);
+    };
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (also covers /// and //! doc comments)
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            let text: String = chars[start..i].iter().collect();
+            record_comment(&mut lines, line, &text);
+            continue;
+        }
+        // block comment, possibly nested / multi-line
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            let mut text = String::new();
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    record_comment(&mut lines, line, &text);
+                    text.clear();
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    text.push(chars[i]);
+                    i += 1;
+                }
+            }
+            record_comment(&mut lines, line, &text);
+            continue;
+        }
+        // raw strings and raw identifiers: r"..", r#".."#, br".."; r#ident
+        if (c == 'r' || c == 'b') && i + 1 < n {
+            let raw_at = if c == 'b' && chars[i + 1] == 'r' { i + 2 } else { i + 1 };
+            let mut h = raw_at;
+            while h < n && chars[h] == '#' {
+                h += 1;
+            }
+            let hashes = h - raw_at;
+            let is_raw_str = (c == 'r' || chars.get(i + 1) == Some(&'r'))
+                && h < n
+                && chars[h] == '"'
+                && (c != 'b' || chars[i + 1] == 'r');
+            if is_raw_str {
+                // skip to the matching `"###` terminator
+                i = h + 1;
+                'raw: while i < n {
+                    if chars[i] == '\n' {
+                        line += 1;
+                        i += 1;
+                        continue;
+                    }
+                    if chars[i] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && i + 1 + k < n && chars[i + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            i += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+            if c == 'r' && hashes == 1 && h < n && is_ident_start(chars[h]) {
+                // raw identifier r#type: lex the ident, drop the prefix
+                i = h;
+                let start = i;
+                while i < n && is_ident_continue(chars[i]) {
+                    i += 1;
+                }
+                let text: String = chars[start..i].iter().collect();
+                push_ident(&mut toks, &mut lines, line, text);
+                continue;
+            }
+        }
+        // byte string b"..." / byte char b'x'
+        if c == 'b' && i + 1 < n && (chars[i + 1] == '"' || chars[i + 1] == '\'') {
+            i += 1;
+            // fall through to the string/char branches below on next loop
+            let quote = chars[i];
+            i = skip_quoted(&chars, i, quote, &mut line);
+            continue;
+        }
+        // string literal
+        if c == '"' {
+            i = skip_quoted(&chars, i, '"', &mut line);
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                i = skip_quoted(&chars, i, '\'', &mut line);
+                continue;
+            }
+            if i + 2 < n && is_ident_start(chars[i + 1]) && chars[i + 2] != '\'' {
+                // lifetime: skip the tick and its ident
+                i += 1;
+                while i < n && is_ident_continue(chars[i]) {
+                    i += 1;
+                }
+                continue;
+            }
+            i = skip_quoted(&chars, i, '\'', &mut line);
+            continue;
+        }
+        // number literal (digits + alphanumeric suffix/radix chars)
+        if c.is_ascii_digit() {
+            while i < n && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            lines[line].has_code = true;
+            continue;
+        }
+        // identifier / keyword
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_continue(chars[i]) {
+                i += 1;
+            }
+            let text: String = chars[start..i].iter().collect();
+            push_ident(&mut toks, &mut lines, line, text);
+            continue;
+        }
+        // punctuation
+        toks.push(Tok { line, data: TokData::Punct(c) });
+        lines[line].has_code = true;
+        i += 1;
+    }
+
+    // attribute lines, from the raw text
+    for (idx, raw) in src.lines().enumerate() {
+        let t = raw.trim_start();
+        if t.starts_with("#[") || t.starts_with("#![") {
+            lines[idx + 1].attr_only = true;
+        }
+    }
+
+    Lexed { toks, lines }
+}
+
+fn push_ident(toks: &mut Vec<Tok>, lines: &mut [LineInfo], line: usize, text: String) {
+    lines[line].has_code = true;
+    if text == "unsafe" {
+        lines[line].has_unsafe = true;
+    }
+    toks.push(Tok { line, data: TokData::Ident(text) });
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Skip a quoted literal starting at the opening quote; returns the index
+/// one past the closing quote, tracking newlines (multi-line strings).
+fn skip_quoted(chars: &[char], open: usize, quote: char, line: &mut usize) -> usize {
+    let n = chars.len();
+    let mut i = open + 1;
+    while i < n {
+        let c = chars[i];
+        if c == '\\' {
+            i += 2;
+            continue;
+        }
+        if c == '\n' {
+            *line += 1;
+            i += 1;
+            continue;
+        }
+        if c == quote {
+            return i + 1;
+        }
+        i += 1;
+    }
+    i
+}
+
+// ---------------------------------------------------------------------------
+// Directives: allow(...) escapes and zero-alloc-hot markers
+// ---------------------------------------------------------------------------
+
+struct Directives {
+    allows: Vec<Allow>,
+    /// Lines carrying a `zero-alloc-hot` marker.
+    hot_markers: Vec<usize>,
+    /// Malformed-directive diagnostics.
+    errors: Vec<Diagnostic>,
+}
+
+fn parse_directives(rel: &str, lines: &[LineInfo]) -> Directives {
+    let mut out = Directives { allows: Vec::new(), hot_markers: Vec::new(), errors: Vec::new() };
+    for (lno, li) in lines.iter().enumerate() {
+        if !li.has_comment {
+            continue;
+        }
+        let text = li.comment.as_str();
+        let mut from = 0usize;
+        while let Some(pos) = text[from..].find("mpota-lint:") {
+            let at = from + pos + "mpota-lint:".len();
+            let rest = text[at..].trim_start();
+            from = at;
+            if let Some(inner) = rest.strip_prefix("allow(") {
+                let Some(close) = inner.find(')') else {
+                    out.errors.push(Diagnostic {
+                        file: rel.to_string(),
+                        line: lno,
+                        rule: Rule::Escape,
+                        message: "unterminated `mpota-lint: allow(` directive".into(),
+                    });
+                    continue;
+                };
+                let rule_id = inner[..close].trim();
+                let tail = inner[close + 1..].trim_start();
+                let Some(rule) = Rule::from_id(rule_id) else {
+                    out.errors.push(Diagnostic {
+                        file: rel.to_string(),
+                        line: lno,
+                        rule: Rule::Escape,
+                        message: format!("allow(...) names unknown rule '{rule_id}'"),
+                    });
+                    continue;
+                };
+                if rule == Rule::R6 {
+                    out.errors.push(Diagnostic {
+                        file: rel.to_string(),
+                        line: lno,
+                        rule: Rule::Escape,
+                        message: "R6 (unsafe ratchet) has no inline escape — edit \
+                                  tools/lint/baseline.json deliberately"
+                            .into(),
+                    });
+                    continue;
+                }
+                let reason = tail.strip_prefix(':').map(str::trim).unwrap_or("");
+                if reason.is_empty() {
+                    out.errors.push(Diagnostic {
+                        file: rel.to_string(),
+                        line: lno,
+                        rule: Rule::Escape,
+                        message: format!(
+                            "allow({rule_id}) without a reason — write \
+                             `mpota-lint: allow({rule_id}): <why this is sound>`"
+                        ),
+                    });
+                    continue;
+                }
+                out.allows.push(Allow {
+                    file: rel.to_string(),
+                    line: lno,
+                    rule,
+                    reason: reason.to_string(),
+                });
+            } else if rest.starts_with("zero-alloc-hot") {
+                out.hot_markers.push(lno);
+            } else {
+                let word: String =
+                    rest.chars().take_while(|c| !c.is_whitespace()).collect();
+                out.errors.push(Diagnostic {
+                    file: rel.to_string(),
+                    line: lno,
+                    rule: Rule::Escape,
+                    message: format!("unknown mpota-lint directive '{word}'"),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Shared walk: does an annotation in the comment block above cover `line`?
+// ---------------------------------------------------------------------------
+
+/// Walk upward from `line` through attribute lines and lines that are
+/// themselves part of the same `unsafe` group, into the contiguous
+/// comment block immediately above; `pred` is evaluated on every comment
+/// line (and on `line` itself, covering trailing comments).
+fn comment_scope_satisfies<F>(lines: &[LineInfo], line: usize, pred: F) -> bool
+where
+    F: Fn(usize) -> bool,
+{
+    if pred(line) {
+        return true;
+    }
+    let mut i = line.saturating_sub(1);
+    while i >= 1 {
+        let li = &lines[i];
+        if li.comment_only() {
+            // scan the whole contiguous comment block
+            let mut j = i;
+            while j >= 1 && lines[j].comment_only() {
+                if pred(j) {
+                    return true;
+                }
+                j -= 1;
+            }
+            return false;
+        }
+        if li.attr_only || li.has_unsafe {
+            i -= 1;
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Per-file scan
+// ---------------------------------------------------------------------------
+
+/// Which rules apply to a file, derived from its repo-relative path.
+struct Scope {
+    r2: bool,
+    r3: bool,
+    r4: bool,
+}
+
+fn scope_for(rel: &str) -> Scope {
+    let tests = rel.starts_with("rust/tests/");
+    let benches = rel.starts_with("rust/benches/");
+    Scope {
+        // exec/pool.rs is the one sanctioned spawner
+        r2: !rel.ends_with("exec/pool.rs"),
+        // test binaries never feed round results
+        r3: !tests,
+        // rng.rs owns construction; tests and benches are their own
+        // seeded entry points
+        r4: !rel.ends_with("src/rng.rs") && !tests && !benches,
+    }
+}
+
+const R5_PATH_TYPES: [&str; 10] = [
+    "Vec", "Box", "String", "VecDeque", "BTreeMap", "BTreeSet", "HashMap",
+    "HashSet", "Rc", "Arc",
+];
+const R5_PATH_FNS: [&str; 5] = ["new", "with_capacity", "from", "from_iter", "pin"];
+const R5_METHODS: [&str; 4] = ["to_vec", "to_owned", "to_string", "collect"];
+const R5_MACROS: [&str; 2] = ["vec", "format"];
+const R4_IDENTS: [&str; 5] =
+    ["seed_from", "thread_rng", "from_entropy", "StdRng", "SmallRng"];
+
+/// Scan one file's source.  `baseline_unsafe` is the committed R6 budget
+/// for this file (0 when absent from the baseline).
+pub fn scan_source(rel: &str, src: &str, baseline_unsafe: usize) -> FileScan {
+    let lexed = lex(src);
+    let toks = &lexed.toks;
+    let lines = &lexed.lines;
+    let scope = scope_for(rel);
+    let directives = parse_directives(rel, lines);
+    let test_spans = test_token_spans(toks);
+    let in_test = |ti: usize| test_spans.iter().any(|&(lo, hi)| ti >= lo && ti < hi);
+
+    let mut raw: Vec<Diagnostic> = Vec::new();
+    let mut unsafe_count = 0usize;
+
+    // --- token-stream rules -------------------------------------------
+    for ti in 0..toks.len() {
+        let tok = &toks[ti];
+        let Some(id) = tok.ident() else { continue };
+        match id {
+            "unsafe" => {
+                unsafe_count += 1;
+                let (kind, fn_like) = match toks.get(ti + 1) {
+                    Some(t) if t.is_ident("fn") => ("fn", true),
+                    Some(t) if t.is_ident("impl") => ("impl", false),
+                    Some(t) if t.is_ident("trait") => ("trait", false),
+                    Some(t) if t.is_ident("extern") => ("extern block", true),
+                    _ => ("block", false),
+                };
+                let covered = comment_scope_satisfies(lines, tok.line, |l| {
+                    let li = &lines[l];
+                    li.has_comment
+                        && (li.comment.contains("SAFETY:")
+                            || (fn_like && li.comment.contains("# Safety")))
+                });
+                if !covered {
+                    raw.push(Diagnostic {
+                        file: rel.to_string(),
+                        line: tok.line,
+                        rule: Rule::R1,
+                        message: format!(
+                            "`unsafe` {kind} without an immediately preceding \
+                             `// SAFETY:` comment stating the aliasing/lifetime \
+                             argument"
+                        ),
+                    });
+                }
+            }
+            "thread" if scope.r2 => {
+                if let Some(m) = path_call(toks, ti, &["spawn", "scope", "Builder"]) {
+                    raw.push(Diagnostic {
+                        file: rel.to_string(),
+                        line: tok.line,
+                        rule: Rule::R2,
+                        message: format!(
+                            "`std::thread::{m}` outside exec/pool.rs — the parked \
+                             `exec::pool()` is the only sanctioned spawner \
+                             (dispatch with broadcast/host_broadcast)"
+                        ),
+                    });
+                }
+            }
+            "HashMap" | "HashSet" if scope.r3 && !in_test(ti) => {
+                raw.push(Diagnostic {
+                    file: rel.to_string(),
+                    line: tok.line,
+                    rule: Rule::R3,
+                    message: format!(
+                        "`{id}` on a result-feeding path — its iteration order is \
+                         nondeterministic and breaks the per-seed bit-identity \
+                         contract; use BTreeMap/BTreeSet/Vec"
+                    ),
+                });
+            }
+            _ if scope.r4 && R4_IDENTS.contains(&id) && !in_test(ti) => {
+                raw.push(Diagnostic {
+                    file: rel.to_string(),
+                    line: tok.line,
+                    rule: Rule::R4,
+                    message: format!(
+                        "RNG construction/seeding (`{id}`) outside rng.rs — all \
+                         randomness must derive from the run root via the named \
+                         stream API (`stream`/`substream`)"
+                    ),
+                });
+            }
+            _ => {}
+        }
+    }
+
+    // --- R5: allocating calls inside zero-alloc-hot functions ----------
+    for &marker_line in &directives.hot_markers {
+        match hot_fn_body(toks, marker_line) {
+            Some((body_lo, body_hi)) => {
+                scan_hot_body(rel, toks, body_lo, body_hi, &mut raw);
+            }
+            None => raw.push(Diagnostic {
+                file: rel.to_string(),
+                line: marker_line,
+                rule: Rule::Escape,
+                message: "`zero-alloc-hot` marker is not followed by a fn with a body"
+                    .into(),
+            }),
+        }
+    }
+
+    // --- R6: unsafe-count ratchet --------------------------------------
+    if unsafe_count > baseline_unsafe {
+        let first_line =
+            toks.iter().find(|t| t.is_ident("unsafe")).map(|t| t.line).unwrap_or(1);
+        raw.push(Diagnostic {
+            file: rel.to_string(),
+            line: first_line,
+            rule: Rule::R6,
+            message: format!(
+                "unsafe-count ratchet: {unsafe_count} unsafe sites exceed the \
+                 committed baseline of {baseline_unsafe} \
+                 (tools/lint/baseline.json) — shrink the unsafe surface or raise \
+                 the baseline deliberately"
+            ),
+        });
+    }
+
+    // --- apply allow escapes -------------------------------------------
+    let mut diagnostics: Vec<Diagnostic> = directives.errors;
+    for d in raw {
+        let suppressed = d.rule != Rule::R6
+            && comment_scope_satisfies(lines, d.line, |l| {
+                directives.allows.iter().any(|a| a.rule == d.rule && a.line == l)
+            });
+        if !suppressed {
+            diagnostics.push(d);
+        }
+    }
+    diagnostics.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+
+    FileScan { diagnostics, allows: directives.allows, unsafe_count }
+}
+
+/// If `toks[ti]` starts a `<ident>::<one of tails>` path, return the tail.
+fn path_call<'a>(toks: &[Tok], ti: usize, tails: &[&'a str]) -> Option<&'a str> {
+    if !(toks.get(ti + 1)?.is_punct(':') && toks.get(ti + 2)?.is_punct(':')) {
+        return None;
+    }
+    let m = toks.get(ti + 3)?.ident()?;
+    tails.iter().find(|t| **t == m).copied()
+}
+
+/// Token spans (half-open index ranges) of `#[cfg(test)]` items.
+fn test_token_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut ti = 0usize;
+    while ti < toks.len() {
+        // match `# [ cfg ( ... test ... ) ]`
+        if toks[ti].is_punct('#')
+            && toks.get(ti + 1).map(|t| t.is_punct('[')).unwrap_or(false)
+            && toks.get(ti + 2).map(|t| t.is_ident("cfg")).unwrap_or(false)
+            && toks.get(ti + 3).map(|t| t.is_punct('(')).unwrap_or(false)
+        {
+            let mut j = ti + 4;
+            let mut depth = 1usize;
+            // `cfg(not(test))` must NOT count as a test region
+            let negated = toks.get(j).map(|t| t.is_ident("not")).unwrap_or(false);
+            let mut saw_test = false;
+            while j < toks.len() && depth > 0 {
+                if toks[j].is_punct('(') {
+                    depth += 1;
+                } else if toks[j].is_punct(')') {
+                    depth -= 1;
+                } else if toks[j].is_ident("test") {
+                    saw_test = true;
+                }
+                j += 1;
+            }
+            let saw_test = saw_test && !negated;
+            // expect the closing `]`
+            if saw_test && toks.get(j).map(|t| t.is_punct(']')).unwrap_or(false) {
+                if let Some(span) = item_body_span(toks, j + 1) {
+                    spans.push(span);
+                    ti = span.1;
+                    continue;
+                }
+            }
+        }
+        ti += 1;
+    }
+    spans
+}
+
+/// From the first token after an attribute, find the annotated item's
+/// body span: the half-open token range covering `{ ... }`.  Returns
+/// `None` when a `;` terminates the item first (no body).
+fn item_body_span(toks: &[Tok], mut ti: usize) -> Option<(usize, usize)> {
+    let start = ti;
+    // skip any further attributes
+    while toks.get(ti)?.is_punct('#') {
+        if !toks.get(ti + 1)?.is_punct('[') {
+            break;
+        }
+        let mut depth = 1usize;
+        ti += 2;
+        while depth > 0 {
+            let t = toks.get(ti)?;
+            if t.is_punct('[') {
+                depth += 1;
+            } else if t.is_punct(']') {
+                depth -= 1;
+            }
+            ti += 1;
+        }
+    }
+    loop {
+        let t = toks.get(ti)?;
+        if t.is_punct(';') {
+            return None;
+        }
+        if t.is_punct('{') {
+            break;
+        }
+        ti += 1;
+    }
+    let body_lo = ti;
+    let mut depth = 0usize;
+    while let Some(t) = toks.get(ti) {
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return Some((start, ti + 1));
+            }
+        }
+        ti += 1;
+    }
+    Some((body_lo, toks.len()))
+}
+
+/// Body token range of the fn a `zero-alloc-hot` marker (at `marker_line`)
+/// tags: the next `fn` token after the marker, then its `{ ... }`.
+fn hot_fn_body(toks: &[Tok], marker_line: usize) -> Option<(usize, usize)> {
+    let fn_ti = toks
+        .iter()
+        .position(|t| t.line > marker_line && t.is_ident("fn"))?;
+    let mut ti = fn_ti;
+    loop {
+        let t = toks.get(ti)?;
+        if t.is_punct(';') {
+            return None;
+        }
+        if t.is_punct('{') {
+            break;
+        }
+        ti += 1;
+    }
+    let lo = ti;
+    let mut depth = 0usize;
+    while let Some(t) = toks.get(ti) {
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return Some((lo, ti + 1));
+            }
+        }
+        ti += 1;
+    }
+    Some((lo, toks.len()))
+}
+
+fn scan_hot_body(
+    rel: &str,
+    toks: &[Tok],
+    lo: usize,
+    hi: usize,
+    out: &mut Vec<Diagnostic>,
+) {
+    let mut push = |line: usize, what: String| {
+        out.push(Diagnostic {
+            file: rel.to_string(),
+            line,
+            rule: Rule::R5,
+            message: format!(
+                "allocating call `{what}` inside a `zero-alloc-hot` function — \
+                 the steady-state round path must not touch the heap \
+                 (rust/tests/alloc_counter.rs pins this dynamically)"
+            ),
+        });
+    };
+    for ti in lo..hi.min(toks.len()) {
+        let tok = &toks[ti];
+        if let Some(id) = tok.ident() {
+            if R5_PATH_TYPES.contains(&id) {
+                if let Some(m) = path_call(toks, ti, &R5_PATH_FNS) {
+                    push(tok.line, format!("{id}::{m}"));
+                    continue;
+                }
+            }
+            if R5_MACROS.contains(&id)
+                && toks.get(ti + 1).map(|t| t.is_punct('!')).unwrap_or(false)
+            {
+                push(tok.line, format!("{id}!"));
+                continue;
+            }
+        }
+        if tok.is_punct('.') {
+            if let Some(m) = toks.get(ti + 1).and_then(|t| t.ident()) {
+                if R5_METHODS.contains(&m) {
+                    push(toks[ti + 1].line, format!(".{m}()"));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Whole-tree run
+// ---------------------------------------------------------------------------
+
+/// Options for a whole-repo lint run.
+pub struct Options {
+    /// Repo root (the directory holding `rust/` and `tools/`).
+    pub root: PathBuf,
+    /// Where to write the machine-readable report; `None` means the
+    /// default `<root>/LINT_report.json`.
+    pub report: Option<PathBuf>,
+    /// Unsafe-ratchet baseline; defaults to `tools/lint/baseline.json`.
+    pub baseline: Option<PathBuf>,
+    /// Rewrite the baseline from the current counts instead of checking.
+    pub update_baseline: bool,
+}
+
+impl Options {
+    pub fn at_root(root: PathBuf) -> Options {
+        Options { root, report: None, baseline: None, update_baseline: false }
+    }
+}
+
+/// Result of a whole-repo run (the report JSON is also returned so
+/// callers can print or re-route it).
+pub struct Outcome {
+    pub files_scanned: usize,
+    pub diagnostics: Vec<Diagnostic>,
+    pub allows: Vec<Allow>,
+    pub unsafe_counts: BTreeMap<String, usize>,
+    pub baseline: BTreeMap<String, usize>,
+    pub report_json: String,
+}
+
+impl Outcome {
+    pub fn clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+}
+
+/// Lint the repo at `opts.root`: scan every `.rs` file under
+/// [`SCAN_DIRS`], check R1–R6, write the report, and return the outcome.
+pub fn run(opts: &Options) -> Result<Outcome, String> {
+    let baseline_path = opts
+        .baseline
+        .clone()
+        .unwrap_or_else(|| opts.root.join(BASELINE_REL));
+    let baseline = if baseline_path.exists() {
+        parse_baseline(
+            &fs::read_to_string(&baseline_path)
+                .map_err(|e| format!("reading {}: {e}", baseline_path.display()))?,
+        )
+        .map_err(|e| format!("parsing {}: {e}", baseline_path.display()))?
+    } else {
+        BTreeMap::new()
+    };
+
+    let mut files: Vec<PathBuf> = Vec::new();
+    for dir in SCAN_DIRS {
+        let d = opts.root.join(dir);
+        if d.is_dir() {
+            collect_rs(&d, &mut files)?;
+        }
+    }
+    files.sort();
+
+    let mut diagnostics: Vec<Diagnostic> = Vec::new();
+    let mut allows: Vec<Allow> = Vec::new();
+    let mut unsafe_counts: BTreeMap<String, usize> = BTreeMap::new();
+    for path in &files {
+        let rel = rel_path(&opts.root, path);
+        let src = fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let base = if opts.update_baseline {
+            usize::MAX // ratchet off while re-baselining
+        } else {
+            baseline.get(&rel).copied().unwrap_or(0)
+        };
+        let scan = scan_source(&rel, &src, base);
+        diagnostics.extend(scan.diagnostics);
+        allows.extend(scan.allows);
+        if scan.unsafe_count > 0 {
+            unsafe_counts.insert(rel, scan.unsafe_count);
+        }
+    }
+
+    if opts.update_baseline {
+        fs::write(&baseline_path, baseline_json(&unsafe_counts))
+            .map_err(|e| format!("writing {}: {e}", baseline_path.display()))?;
+    }
+
+    let report_json = report_json(files.len(), &diagnostics, &allows, &unsafe_counts, {
+        if opts.update_baseline { &unsafe_counts } else { &baseline }
+    });
+    if let Some(report_path) =
+        opts.report.clone().or_else(|| Some(opts.root.join(REPORT_REL)))
+    {
+        fs::write(&report_path, &report_json)
+            .map_err(|e| format!("writing {}: {e}", report_path.display()))?;
+    }
+
+    Ok(Outcome {
+        files_scanned: files.len(),
+        diagnostics,
+        allows,
+        unsafe_counts,
+        baseline: if opts.update_baseline { BTreeMap::new() } else { baseline },
+        report_json,
+    })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        fs::read_dir(dir).map_err(|e| format!("reading {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("reading {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let mut s = String::new();
+    for comp in rel.components() {
+        if !s.is_empty() {
+            s.push('/');
+        }
+        s.push_str(&comp.as_os_str().to_string_lossy());
+    }
+    s
+}
+
+/// Locate the repo root by walking up from `start` until a directory
+/// holding both `rust/src/lib.rs` and `tools/lint` is found.
+pub fn discover_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = start.to_path_buf();
+    loop {
+        if dir.join("rust/src/lib.rs").is_file() && dir.join("tools/lint").is_dir() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hand-rolled JSON (emission + the flat string->number baseline parser)
+// ---------------------------------------------------------------------------
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn baseline_json(counts: &BTreeMap<String, usize>) -> String {
+    let mut s = String::from("{\n");
+    let mut first = true;
+    for (k, v) in counts {
+        if !first {
+            s.push_str(",\n");
+        }
+        first = false;
+        s.push_str(&format!("  \"{}\": {v}", json_escape(k)));
+    }
+    s.push_str("\n}\n");
+    s
+}
+
+/// Parse a flat `{ "path": count, ... }` object.
+fn parse_baseline(src: &str) -> Result<BTreeMap<String, usize>, String> {
+    let mut out = BTreeMap::new();
+    let chars: Vec<char> = src.chars().collect();
+    let mut i = 0usize;
+    let n = chars.len();
+    let skip_ws = |i: &mut usize| {
+        while *i < n && chars[*i].is_whitespace() {
+            *i += 1;
+        }
+    };
+    skip_ws(&mut i);
+    if i >= n || chars[i] != '{' {
+        return Err("expected '{'".into());
+    }
+    i += 1;
+    loop {
+        skip_ws(&mut i);
+        if i < n && chars[i] == '}' {
+            return Ok(out);
+        }
+        if i >= n || chars[i] != '"' {
+            return Err("expected '\"' starting a key".into());
+        }
+        i += 1;
+        let mut key = String::new();
+        while i < n && chars[i] != '"' {
+            if chars[i] == '\\' && i + 1 < n {
+                i += 1;
+            }
+            key.push(chars[i]);
+            i += 1;
+        }
+        i += 1; // closing quote
+        skip_ws(&mut i);
+        if i >= n || chars[i] != ':' {
+            return Err(format!("expected ':' after key '{key}'"));
+        }
+        i += 1;
+        skip_ws(&mut i);
+        let mut num = String::new();
+        while i < n && chars[i].is_ascii_digit() {
+            num.push(chars[i]);
+            i += 1;
+        }
+        let v: usize =
+            num.parse().map_err(|_| format!("bad count for key '{key}'"))?;
+        out.insert(key, v);
+        skip_ws(&mut i);
+        if i < n && chars[i] == ',' {
+            i += 1;
+            continue;
+        }
+        skip_ws(&mut i);
+        if i < n && chars[i] == '}' {
+            return Ok(out);
+        }
+        return Err("expected ',' or '}'".into());
+    }
+}
+
+fn report_json(
+    files_scanned: usize,
+    diagnostics: &[Diagnostic],
+    allows: &[Allow],
+    unsafe_counts: &BTreeMap<String, usize>,
+    baseline: &BTreeMap<String, usize>,
+) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"tool\": \"mpota-lint\",\n");
+    s.push_str(&format!("  \"files_scanned\": {files_scanned},\n"));
+    s.push_str(&format!("  \"clean\": {},\n", diagnostics.is_empty()));
+
+    // per-rule violation counts
+    s.push_str("  \"rule_counts\": {");
+    let all_rules =
+        [Rule::R1, Rule::R2, Rule::R3, Rule::R4, Rule::R5, Rule::R6, Rule::Escape];
+    for (i, r) in all_rules.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        let c = diagnostics.iter().filter(|d| d.rule == *r).count();
+        s.push_str(&format!("\"{}\": {c}", r.id()));
+    }
+    s.push_str("},\n");
+
+    s.push_str("  \"violations\": [");
+    for (i, d) in diagnostics.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "\n    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \
+             \"message\": \"{}\"}}",
+            json_escape(&d.file),
+            d.line,
+            d.rule.id(),
+            json_escape(&d.message)
+        ));
+    }
+    if diagnostics.is_empty() {
+        s.push_str("],\n");
+    } else {
+        s.push_str("\n  ],\n");
+    }
+
+    s.push_str("  \"allows\": [");
+    for (i, a) in allows.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "\n    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \
+             \"reason\": \"{}\"}}",
+            json_escape(&a.file),
+            a.line,
+            a.rule.id(),
+            json_escape(&a.reason)
+        ));
+    }
+    if allows.is_empty() {
+        s.push_str("],\n");
+    } else {
+        s.push_str("\n  ],\n");
+    }
+
+    // unsafe ratchet state: current count vs committed baseline, per file
+    s.push_str("  \"unsafe\": {\n");
+    s.push_str(&format!(
+        "    \"total\": {},\n",
+        unsafe_counts.values().sum::<usize>()
+    ));
+    s.push_str("    \"files\": {");
+    let mut first = true;
+    for (k, v) in unsafe_counts {
+        if !first {
+            s.push(',');
+        }
+        first = false;
+        let base = baseline.get(k).copied().unwrap_or(0);
+        s.push_str(&format!(
+            "\n      \"{}\": {{\"count\": {v}, \"baseline\": {base}}}",
+            json_escape(k)
+        ));
+    }
+    if unsafe_counts.is_empty() {
+        s.push_str("}\n");
+    } else {
+        s.push_str("\n    }\n");
+    }
+    s.push_str("  }\n");
+    s.push_str("}\n");
+    s
+}

@@ -1,0 +1,88 @@
+//! `mpota-lint` CLI: lint the repo, print `file:line` diagnostics, write
+//! `LINT_report.json` at the repo root, exit nonzero on violations.
+//!
+//!     cargo run -p mpota-lint [-- --root <dir>] [--report <path>]
+//!                             [--baseline <path>] [--update-baseline]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut report: Option<PathBuf> = None;
+    let mut baseline: Option<PathBuf> = None;
+    let mut update_baseline = false;
+
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => root = args.next().map(PathBuf::from),
+            "--report" => report = args.next().map(PathBuf::from),
+            "--baseline" => baseline = args.next().map(PathBuf::from),
+            "--update-baseline" => update_baseline = true,
+            "--help" | "-h" => {
+                println!(
+                    "mpota-lint: repo-invariant static analysis (rules R1-R6)\n\
+                     \n\
+                     USAGE: mpota-lint [--root <dir>] [--report <path>]\n\
+                            [--baseline <path>] [--update-baseline]\n\
+                     \n\
+                     Walks rust/src, rust/benches, rust/tests, examples/ and\n\
+                     writes LINT_report.json at the repo root.  Exits 1 on\n\
+                     violations.  Escape hatch:\n\
+                     // mpota-lint: allow(<rule>): <mandatory reason>"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("mpota-lint: unknown option '{other}' (see --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let root = match root.or_else(|| {
+        std::env::current_dir()
+            .ok()
+            .and_then(|d| mpota_lint::discover_root(&d))
+            .or_else(|| {
+                // fall back to the manifest location (tools/lint -> repo root)
+                let mf = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+                mf.parent().and_then(|p| p.parent()).map(|p| p.to_path_buf())
+            })
+    }) {
+        Some(r) => r,
+        None => {
+            eprintln!("mpota-lint: could not locate the repo root (use --root)");
+            return ExitCode::from(2);
+        }
+    };
+
+    let opts = mpota_lint::Options { root, report, baseline, update_baseline };
+    match mpota_lint::run(&opts) {
+        Ok(outcome) => {
+            for d in &outcome.diagnostics {
+                println!("{}:{}: [{}] {}", d.file, d.line, d.rule.id(), d.message);
+            }
+            let unsafe_total: usize = outcome.unsafe_counts.values().sum();
+            eprintln!(
+                "mpota-lint: {} files, {} violation(s), {} allow(s), \
+                 {} unsafe site(s) across {} file(s)",
+                outcome.files_scanned,
+                outcome.diagnostics.len(),
+                outcome.allows.len(),
+                unsafe_total,
+                outcome.unsafe_counts.len(),
+            );
+            if outcome.clean() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("mpota-lint: error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,8 @@
+// Fixture: an allow(...) with no reason is itself a violation AND does
+// not suppress the rule it names. Expected: one `escape` diagnostic plus
+// the original R2.
+
+pub fn fan_out() {
+    // mpota-lint: allow(R2)
+    std::thread::scope(|_s| {});
+}

@@ -1,0 +1,7 @@
+// Fixture: allow(...) naming a rule that does not exist. Expected: one
+// `escape` diagnostic plus the original R2 (nothing was suppressed).
+
+pub fn fan_out() {
+    // mpota-lint: allow(R9): there is no rule nine
+    std::thread::scope(|_s| {});
+}

@@ -1,0 +1,7 @@
+// Fixture: the allow(...) escape suppresses R1. Expected: clean.
+
+pub fn read_first(v: &[u8]) -> u8 {
+    let p = v.as_ptr();
+    // mpota-lint: allow(R1): fixture exercising the escape hatch syntax
+    unsafe { *p }
+}

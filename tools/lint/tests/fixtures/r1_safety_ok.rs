@@ -1,0 +1,8 @@
+// Fixture: the same unsafe block, properly annotated. Expected: clean.
+
+pub fn read_first(v: &[u8]) -> u8 {
+    let p = v.as_ptr();
+    // SAFETY: every caller checks `!v.is_empty()`, so `p` points at the
+    // live first element of `v` for the duration of the read.
+    unsafe { *p }
+}

@@ -1,0 +1,7 @@
+// Fixture: an `unsafe` block with no SAFETY comment anywhere near it.
+// Expected: exactly one R1 diagnostic (with baseline_unsafe = 1).
+
+pub fn read_first(v: &[u8]) -> u8 {
+    let p = v.as_ptr();
+    unsafe { *p }
+}

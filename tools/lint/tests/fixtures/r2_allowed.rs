@@ -1,0 +1,11 @@
+// Fixture: the same scoped spawn, escaped with a reasoned allow.
+// Expected: clean.
+
+pub fn fan_out(xs: &mut [u32]) {
+    // mpota-lint: allow(R2): fixture; baseline comparison against raw scoped spawn
+    std::thread::scope(|s| {
+        for x in xs.iter_mut() {
+            s.spawn(move || *x += 1);
+        }
+    });
+}

@@ -1,0 +1,11 @@
+// Fixture: a raw scoped spawn outside exec/pool.rs.
+// Expected: exactly one R2 diagnostic (`s.spawn` is a method call on the
+// scope handle, not `std::thread::spawn`, so only `thread::scope` fires).
+
+pub fn fan_out(xs: &mut [u32]) {
+    std::thread::scope(|s| {
+        for x in xs.iter_mut() {
+            s.spawn(move || *x += 1);
+        }
+    });
+}

@@ -1,0 +1,10 @@
+// Fixture: the same HashMap, escaped with a reasoned allow (trailing
+// comment form). Expected: clean.
+
+pub fn tally(keys: &[u32]) -> usize {
+    let mut m = std::collections::HashMap::new(); // mpota-lint: allow(R3): fixture; len() only, never iterated
+    for k in keys {
+        *m.entry(*k).or_insert(0usize) += 1;
+    }
+    m.len()
+}

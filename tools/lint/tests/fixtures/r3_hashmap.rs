@@ -1,0 +1,10 @@
+// Fixture: a HashMap on a non-test path.
+// Expected: exactly one R3 diagnostic (one `HashMap` ident).
+
+pub fn tally(keys: &[u32]) -> usize {
+    let mut m = std::collections::HashMap::new();
+    for k in keys {
+        *m.entry(*k).or_insert(0usize) += 1;
+    }
+    m.len()
+}

@@ -1,0 +1,16 @@
+// Fixture: HashMap inside a #[cfg(test)] mod is exempt from R3.
+// Expected: clean.
+
+pub fn noop() {}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn scratch_map_is_fine_here() {
+        let mut m: HashMap<u32, u32> = HashMap::new();
+        m.insert(1, 2);
+        assert_eq!(m.len(), 1);
+    }
+}

@@ -1,0 +1,7 @@
+// Fixture: the same seeding, escaped with a reasoned allow.
+// Expected: clean.
+
+pub fn fresh() -> Rng {
+    // mpota-lint: allow(R4): fixture; the one sanctioned root seed in this snippet
+    Rng::seed_from(0xC0FFEE)
+}

@@ -1,0 +1,6 @@
+// Fixture: RNG seeding outside rng.rs.
+// Expected: exactly one R4 diagnostic.
+
+pub fn fresh() -> Rng {
+    Rng::seed_from(0xC0FFEE)
+}

@@ -1,0 +1,10 @@
+// Fixture: an allocating call inside a zero-alloc-hot function.
+// Expected: exactly one R5 diagnostic (the `.to_vec()`).
+
+// mpota-lint: zero-alloc-hot
+pub fn axpy(dst: &mut [f32], src: &[f32]) {
+    let tmp = src.to_vec();
+    for (d, s) in dst.iter_mut().zip(tmp.iter()) {
+        *d += *s;
+    }
+}

@@ -1,0 +1,11 @@
+// Fixture: the same allocating call, escaped with a reasoned allow.
+// Expected: clean.
+
+// mpota-lint: zero-alloc-hot
+pub fn axpy(dst: &mut [f32], src: &[f32]) {
+    // mpota-lint: allow(R5): fixture; scratch copy happens once at warmup, not per round
+    let tmp = src.to_vec();
+    for (d, s) in dst.iter_mut().zip(tmp.iter()) {
+        *d += *s;
+    }
+}

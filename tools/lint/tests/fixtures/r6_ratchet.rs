@@ -1,0 +1,14 @@
+// Fixture: two properly-annotated unsafe sites. With baseline_unsafe = 1
+// the ratchet (R6) fires once; with baseline_unsafe = 2 the file is clean.
+
+pub fn first(v: &[u8]) -> u8 {
+    let p = v.as_ptr();
+    // SAFETY: callers check `!v.is_empty()`; `p` targets the live v[0].
+    unsafe { *p }
+}
+
+pub fn second(v: &[u8]) -> u8 {
+    let p = v.as_ptr();
+    // SAFETY: callers check `v.len() > 1`; `p.add(1)` targets the live v[1].
+    unsafe { *p.add(1) }
+}

@@ -1,0 +1,159 @@
+//! Fixture corpus for the lint rules: each known-bad snippet triggers
+//! exactly the one rule it targets, and each `allow(...)` escape
+//! suppresses it.  Fixtures are data (read, lexed, scanned) — they are
+//! never compiled, so they can reference types that don't exist.
+
+use mpota_lint::{scan_source, Rule};
+use std::path::Path;
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name);
+    std::fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("reading fixture {}: {e}", p.display()))
+}
+
+/// Scan a fixture as if it lived on a rule-bearing path (`rust/src/...`),
+/// returning just the fired rules in order.
+fn rules_of(name: &str, baseline_unsafe: usize) -> Vec<Rule> {
+    let rel = format!("rust/src/fixtures/{name}");
+    let scan = scan_source(&rel, &fixture(name), baseline_unsafe);
+    scan.diagnostics.iter().map(|d| d.rule).collect()
+}
+
+#[test]
+fn r1_unsafe_without_safety_comment_fires_once() {
+    assert_eq!(rules_of("r1_unsafe_no_comment.rs", 1), vec![Rule::R1]);
+}
+
+#[test]
+fn r1_safety_comment_satisfies() {
+    assert_eq!(rules_of("r1_safety_ok.rs", 1), Vec::<Rule>::new());
+}
+
+#[test]
+fn r1_allow_escape_suppresses() {
+    assert_eq!(rules_of("r1_allowed.rs", 1), Vec::<Rule>::new());
+}
+
+#[test]
+fn r2_thread_scope_fires_once() {
+    assert_eq!(rules_of("r2_thread_scope.rs", 0), vec![Rule::R2]);
+}
+
+#[test]
+fn r2_allow_escape_suppresses() {
+    assert_eq!(rules_of("r2_allowed.rs", 0), Vec::<Rule>::new());
+}
+
+#[test]
+fn r2_is_exempt_inside_exec_pool() {
+    // the same source scanned at the sanctioned spawner's path is clean
+    let src = fixture("r2_thread_scope.rs");
+    let scan = scan_source("rust/src/exec/pool.rs", &src, 0);
+    assert!(scan.diagnostics.is_empty(), "{:?}", scan.diagnostics);
+}
+
+#[test]
+fn r3_hashmap_fires_once() {
+    assert_eq!(rules_of("r3_hashmap.rs", 0), vec![Rule::R3]);
+}
+
+#[test]
+fn r3_trailing_allow_escape_suppresses() {
+    assert_eq!(rules_of("r3_allowed.rs", 0), Vec::<Rule>::new());
+}
+
+#[test]
+fn r3_cfg_test_mod_is_exempt() {
+    assert_eq!(rules_of("r3_test_exempt.rs", 0), Vec::<Rule>::new());
+}
+
+#[test]
+fn r4_seeding_fires_once() {
+    assert_eq!(rules_of("r4_seed.rs", 0), vec![Rule::R4]);
+}
+
+#[test]
+fn r4_allow_escape_suppresses() {
+    assert_eq!(rules_of("r4_allowed.rs", 0), Vec::<Rule>::new());
+}
+
+#[test]
+fn r4_is_exempt_in_rng_rs_tests_and_benches() {
+    let src = fixture("r4_seed.rs");
+    for rel in ["rust/src/rng.rs", "rust/tests/foo.rs", "rust/benches/foo.rs"] {
+        let scan = scan_source(rel, &src, 0);
+        assert!(scan.diagnostics.is_empty(), "{rel}: {:?}", scan.diagnostics);
+    }
+}
+
+#[test]
+fn r5_alloc_in_hot_fn_fires_once() {
+    assert_eq!(rules_of("r5_alloc_in_hot.rs", 0), vec![Rule::R5]);
+}
+
+#[test]
+fn r5_allow_escape_suppresses() {
+    assert_eq!(rules_of("r5_allowed.rs", 0), Vec::<Rule>::new());
+}
+
+#[test]
+fn r6_ratchet_fires_when_count_exceeds_baseline() {
+    assert_eq!(rules_of("r6_ratchet.rs", 1), vec![Rule::R6]);
+    assert_eq!(rules_of("r6_ratchet.rs", 2), Vec::<Rule>::new());
+}
+
+#[test]
+fn r6_has_no_inline_escape() {
+    // an allow(R6) is rejected as a malformed escape, and the ratchet
+    // still fires
+    let src = "// mpota-lint: allow(R6): trying to dodge the ratchet\n\
+               pub fn f(v: &[u8]) -> u8 {\n\
+                   let p = v.as_ptr();\n\
+                   // SAFETY: fixture; callers check !v.is_empty().\n\
+                   unsafe { *p }\n\
+               }\n";
+    let scan = scan_source("rust/src/fixtures/r6_allow.rs", src, 0);
+    let rules: Vec<Rule> = scan.diagnostics.iter().map(|d| d.rule).collect();
+    assert!(rules.contains(&Rule::Escape), "{rules:?}");
+    assert!(rules.contains(&Rule::R6), "{rules:?}");
+}
+
+#[test]
+fn allow_without_reason_is_a_violation_and_does_not_suppress() {
+    let rules = rules_of("allow_missing_reason.rs", 0);
+    assert!(rules.contains(&Rule::Escape), "{rules:?}");
+    assert!(rules.contains(&Rule::R2), "{rules:?}");
+    assert_eq!(rules.len(), 2, "{rules:?}");
+}
+
+#[test]
+fn allow_unknown_rule_is_a_violation_and_does_not_suppress() {
+    let rules = rules_of("allow_unknown_rule.rs", 0);
+    assert!(rules.contains(&Rule::Escape), "{rules:?}");
+    assert!(rules.contains(&Rule::R2), "{rules:?}");
+    assert_eq!(rules.len(), 2, "{rules:?}");
+}
+
+#[test]
+fn keywords_inside_strings_and_comments_do_not_fire() {
+    let src = r#"
+pub fn doc() -> &'static str {
+    // std::thread::spawn in a comment is not code
+    "std::thread::spawn(HashMap::new(), Rng::seed_from(0), unsafe)"
+}
+"#;
+    let scan = scan_source("rust/src/fixtures/strings.rs", src, 0);
+    assert!(scan.diagnostics.is_empty(), "{:?}", scan.diagnostics);
+    assert_eq!(scan.unsafe_count, 0);
+}
+
+#[test]
+fn diagnostics_carry_file_and_line() {
+    let scan =
+        scan_source("rust/src/fixtures/r4_seed.rs", &fixture("r4_seed.rs"), 0);
+    assert_eq!(scan.diagnostics.len(), 1);
+    let d = &scan.diagnostics[0];
+    assert_eq!(d.file, "rust/src/fixtures/r4_seed.rs");
+    assert_eq!(d.line, 5, "seed_from sits on line 5 of the fixture");
+}

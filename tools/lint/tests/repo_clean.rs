@@ -1,0 +1,50 @@
+//! Integration test: the real source tree lints clean.  This is the
+//! in-`cargo test` mirror of the CI `cargo run -p mpota-lint` gate, so a
+//! violation fails the suite with the exact `file:line` diagnostics.
+
+use std::path::Path;
+
+#[test]
+fn repo_lints_clean_against_committed_baseline() {
+    let root = mpota_lint::discover_root(Path::new(env!("CARGO_MANIFEST_DIR")))
+        .expect("repo root (rust/src/lib.rs + tools/lint) not found");
+    // write the report to a scratch path: the committed LINT_report.json
+    // is refreshed by the CI lint step, not by test runs
+    let report = std::env::temp_dir().join("mpota_lint_repo_clean_report.json");
+    let opts = mpota_lint::Options {
+        root,
+        report: Some(report),
+        baseline: None,
+        update_baseline: false,
+    };
+    let outcome = mpota_lint::run(&opts).expect("lint run failed");
+    assert!(
+        outcome.files_scanned >= 30,
+        "suspiciously few files scanned: {}",
+        outcome.files_scanned
+    );
+    if !outcome.clean() {
+        let mut msg = String::new();
+        for d in &outcome.diagnostics {
+            msg.push_str(&format!(
+                "{}:{}: [{}] {}\n",
+                d.file,
+                d.line,
+                d.rule.id(),
+                d.message
+            ));
+        }
+        panic!("repo is not lint-clean:\n{msg}");
+    }
+    // every allow escape in the tree carries a reason (the parser rejects
+    // reasonless allows, but pin it explicitly as an acceptance criterion)
+    for a in &outcome.allows {
+        assert!(
+            !a.reason.trim().is_empty(),
+            "{}:{} allow({}) without a reason",
+            a.file,
+            a.line,
+            a.rule.id()
+        );
+    }
+}
