@@ -15,6 +15,8 @@
 //!     quantize/modulate phase (row-partitioned plane writes)
 //!   * pipelined vs serial streaming round (PR-6: payload generation of
 //!     super-shard t+1 overlapping superposition of super-shard t)
+//!   * id-keyed stateful channel draws (all-resident slot==id hits vs a
+//!     constantly-evicting Floyd-sampled 64-of-1M `draw_for`)
 //!   * PJRT train-step + eval dispatch (artifacts + `pjrt` feature only)
 //!
 //! Run: `cargo bench --bench hotpaths`
@@ -32,6 +34,7 @@ use mpota::kernels::{par, PayloadPlane};
 use mpota::ota::{self, analog::OtaScratch};
 use mpota::quant::{self, Precision, Rounding};
 use mpota::rng::Rng;
+use mpota::sim::{ChannelModel, GaussMarkov};
 
 /// Per-label wall-clock budget (ms), overridable for CI smoke runs.
 fn bench_budget_ms() -> u64 {
@@ -435,6 +438,44 @@ fn main() {
         (dense, sharded)
     };
 
+    // --- id-keyed channel state: the LRU path's round overhead -------------
+    // the identity-keying fix routes every stateful channel draw through a
+    // bounded id-keyed LRU (capacity 2·K).  Baseline: the slot==id compat
+    // path with a fully resident window (full participation — every lookup
+    // an LRU hit, the cheapest the keyed path gets).  Contender: Floyd's
+    // sampling of 64 identities out of 1M, where virtually every id is a
+    // fresh insert that evicts the LRU tail (the worst case the fix must
+    // not slow down).  The recorded ratio ≈ 1.0 is the claim: keying
+    // per-client fading state by identity costs nothing at round scale.
+    let (idlru_hit, idlru_miss) = {
+        let ksel = 64usize;
+        let fleet = 1_000_000usize;
+        let rounds_per_iter = 8usize;
+        let mut gm_cfg = ChannelConfig::default();
+        gm_cfg.rho = 0.9;
+        let mut hit_model = GaussMarkov::new(gm_cfg.clone());
+        let mut rc = RoundChannel::empty();
+        let hit = res.bench("channel GaussMarkov slot==id K=64 resident-hits", 0, || {
+            let mut ch_rng = Rng::seed_from(17);
+            for _ in 0..rounds_per_iter {
+                hit_model.draw_into(ksel, &mut ch_rng, &mut rc);
+            }
+            std::hint::black_box(rc.clients.len());
+        });
+        let mut miss_model = GaussMarkov::new(gm_cfg);
+        let mut sel: Vec<usize> = Vec::new();
+        let miss = res.bench("channel GaussMarkov draw_for 64-of-1M evicting", 0, || {
+            let mut srng = Rng::seed_from(55);
+            let mut ch_rng = Rng::seed_from(17);
+            for t in 1..=rounds_per_iter {
+                Selection::SampledK(ksel).select_into(fleet, t, &mut srng, &mut sel);
+                miss_model.draw_for(&sel, &mut ch_rng, &mut rc);
+            }
+            std::hint::black_box(rc.clients.len());
+        });
+        (hit, miss)
+    };
+
     // --- pipelined vs serial round (PR-6 overlap engine) -------------------
     // the async round engine's wall win: client payload generation of
     // super-shard t+1 (Box-Muller fill + fused 4-bit quantize — the
@@ -623,6 +664,7 @@ fn main() {
     speedup(&mut speedups, "fedavg_mean_plane", mean_scalar, mean_fused);
     speedup(&mut speedups, "pool_dispatch_vs_spawn", spawn_lat, pool_lat);
     speedup(&mut speedups, "fleet_scaling_k1000000", fleet_dense, fleet_sharded);
+    speedup(&mut speedups, "fleet_round_id_lru", idlru_hit, idlru_miss);
     speedup(&mut speedups, "pipelined_vs_serial_round", round_serial, round_pipelined);
     if let Some(t) = cp_wn {
         let cp_workers = ncpu.min(k);

@@ -21,14 +21,16 @@
 //! unit-power small-scale Rayleigh draw `g_k(t)` from
 //! [`crate::channel::fading`].
 //!
-//! Fleet scaling: the site table is built LAZILY on the first draw and
-//! sized to the round's PARTICIPANT SLOTS (K), never the fleet (N) — a
-//! million-client run with `clients_per_round = 64` places exactly 64
-//! sites.  Under partial participation the persistent asymmetry therefore
-//! attaches to the slot, modelling a fixed set of K occupied positions
-//! whose occupants are re-selected each round; state stays O(K) by
-//! construction (the [`crate::sim::ChannelModel`] fleet-scaling
-//! contract).
+//! Fleet scaling: sites are placed LAZILY, one per CLIENT IDENTITY, the
+//! first round that client is selected — a million-client run with
+//! `clients_per_round = 64` places exactly the clients that ever
+//! participate, and [`crate::sim::PathLossGeometry`] caps the resident
+//! set with a bounded id-keyed LRU so memory stays O(K) even when
+//! selection churns through the fleet.  The persistent asymmetry
+//! attaches to the client, not the participant slot: a far client drawn
+//! via [`place_one_raw`] keeps its distance and shadowing realisation
+//! every time it reappears, whichever slot it lands in (the
+//! [`crate::sim::ChannelModel`] fleet-scaling contract).
 
 use crate::rng::Rng;
 
@@ -54,6 +56,25 @@ pub fn path_gain_db(distance: f32, alpha: f32) -> f32 {
     -10.0 * alpha * (distance / REF_DISTANCE).log10()
 }
 
+/// Place ONE client area-uniformly on the annulus `[REF_DISTANCE,
+/// radius]` and compute its shadowed path gain.  Consumes exactly one
+/// uniform and one normal draw — deterministic per RNG state.  The
+/// returned [`Site::amp`] holds the RAW linear POWER gain, not the
+/// amplitude scale; callers normalize against a fleet mean and take the
+/// square root ([`place_clients`] does both, [`crate::sim::PathLossGeometry`]
+/// normalizes incrementally as ids first appear).
+pub fn place_one_raw(radius: f32, alpha: f32, shadowing_db: f32, rng: &mut Rng) -> Site {
+    let r0_sq = REF_DISTANCE * REF_DISTANCE;
+    let r_sq = radius * radius;
+    // area-uniform over the annulus: d = sqrt(u·(R² - d₀²) + d₀²)
+    let u = rng.uniform() as f32;
+    let distance = (u * (r_sq - r0_sq) + r0_sq).sqrt();
+    let shadow_db = rng.normal_f32(0.0, shadowing_db);
+    let gain_db = path_gain_db(distance, alpha) + shadow_db;
+    let gain = 10f32.powf(gain_db / 10.0);
+    Site { distance, shadow_db, amp: gain }
+}
+
 /// Place `n` clients area-uniformly on the annulus `[REF_DISTANCE,
 /// radius]` and compute their shadowed, fleet-normalized amplitude
 /// scales.  Consumes exactly one uniform and one normal draw per client —
@@ -70,21 +91,14 @@ pub fn place_clients(
         radius > REF_DISTANCE,
         "cell radius {radius} must exceed the reference distance {REF_DISTANCE}"
     );
-    let r0_sq = REF_DISTANCE * REF_DISTANCE;
-    let r_sq = radius * radius;
     let mut sites = Vec::with_capacity(n);
     let mut mean_gain = 0.0f64;
     for _ in 0..n {
-        // area-uniform over the annulus: d = sqrt(u·(R² - d₀²) + d₀²)
-        let u = rng.uniform() as f32;
-        let distance = (u * (r_sq - r0_sq) + r0_sq).sqrt();
-        let shadow_db = rng.normal_f32(0.0, shadowing_db);
-        let gain_db = path_gain_db(distance, alpha) + shadow_db;
         // amp temporarily holds the raw linear POWER gain; the
         // normalization pass below converts it to the amplitude scale
-        let gain = 10f32.powf(gain_db / 10.0);
-        mean_gain += gain as f64;
-        sites.push(Site { distance, shadow_db, amp: gain });
+        let site = place_one_raw(radius, alpha, shadowing_db, rng);
+        mean_gain += site.amp as f64;
+        sites.push(site);
     }
     mean_gain /= n as f64;
     for s in &mut sites {

@@ -29,6 +29,12 @@ pub enum PolicyKind {
     /// precision ladder as cumulative fleet energy approaches
     /// `clients × RunConfig::energy_budget_j`; see `sim::EnergyBudget`.
     EnergyBudget,
+    /// Per-client profiling planner: accumulates each client's
+    /// channel/energy/loss history in a bounded id-keyed LRU and assigns
+    /// precision per client from its own effective SNR, demoting clients
+    /// past `RunConfig::energy_budget_j` (0 = no cap); see
+    /// `sim::ProfilingPlanner`.
+    Profiling,
 }
 
 impl std::str::FromStr for PolicyKind {
@@ -39,9 +45,10 @@ impl std::str::FromStr for PolicyKind {
             "snr-adaptive" | "snr_adaptive" | "snr" => Ok(PolicyKind::SnrAdaptive),
             "loss-plateau" | "loss_plateau" | "plateau" => Ok(PolicyKind::LossPlateau),
             "energy-budget" | "energy_budget" | "energy" => Ok(PolicyKind::EnergyBudget),
+            "profiling" | "profile" => Ok(PolicyKind::Profiling),
             other => bail!(
                 "unknown precision policy '{other}' \
-                 (static|snr-adaptive|loss-plateau|energy-budget)"
+                 (static|snr-adaptive|loss-plateau|energy-budget|profiling)"
             ),
         }
     }
@@ -57,6 +64,7 @@ impl std::fmt::Display for PolicyKind {
                 PolicyKind::SnrAdaptive => "snr-adaptive",
                 PolicyKind::LossPlateau => "loss-plateau",
                 PolicyKind::EnergyBudget => "energy-budget",
+                PolicyKind::Profiling => "profiling",
             }
         )
     }
@@ -389,8 +397,9 @@ impl RunConfig {
                 self.clients
             );
         }
-        // the scheme must expand over the SELECTED set each round
-        self.scheme.client_precisions(self.clients)?;
+        // the scheme must expand over the SELECTED set each round — O(1)
+        // divisibility check, no fleet-sized materialization
+        self.scheme.check_divides(self.clients)?;
         if self.local_steps == 0 {
             bail!("local_steps must be positive");
         }

@@ -1,0 +1,186 @@
+//! Lazy, identity-keyed client fleet.
+//!
+//! The pre-fix coordinator materialized every [`ClientState`] eagerly at
+//! build time — a `Vec` of N clients, each owning its shard indices and
+//! training buffers.  At paper scale (N = 15) that is free; at massive
+//! fleets (N = 1M, K = 64 selected per round) it is O(N) memory and
+//! build latency for clients that are never selected.
+//!
+//! [`ClientFleet`] replaces the eager `Vec` with a bounded
+//! [`IdLru`]`<ClientState>` keyed by CLIENT IDENTITY and capped at 2·K
+//! (a round can never evict its own participants — see the LRU's
+//! capacity protocol), so coordinator-side client memory is O(K), not
+//! O(fleet).  Two invariants make the lazy fleet bit-identical to the
+//! eager one wherever the eager one could run:
+//!
+//! * **Shard assignment is positional, not sequential.**  The fleet
+//!   performs the exact `equal_shards` shuffle once at build time
+//!   (consuming the same `"shard"` RNG stream draw-for-draw) and keeps
+//!   the shuffled sample order; client `id`'s shard is the slice
+//!   `order[id·per .. (id+1)·per]`, recovered at materialization time —
+//!   identical indices regardless of WHEN (or whether) the client
+//!   materializes.
+//! * **Client RNG is a pure function of identity.**  [`ClientState::new`]
+//!   derives `root.stream("client").substream(id)` — stream derivation
+//!   consumes nothing — so a client first selected in round 900 starts
+//!   the same batch sequence it would have started in round 1.
+//!
+//! Eviction (a client unselected long enough to fall off the 2·K window)
+//! folds its cumulative energy/MACs into fleet-level scalars before the
+//! state drops, so end-of-run energy accounting stays exact; a re-selected
+//! client rematerializes with fresh training state (batch iterator
+//! restarts), which is the documented trade of the bounded window and
+//! only arises under random selection at K ≪ N — where no eager-fleet
+//! baseline exists to diverge from.
+
+use crate::fl::IdLru;
+use crate::quant::Precision;
+use crate::rng::Rng;
+
+use super::client::ClientState;
+
+/// Bounded, identity-keyed collection of materialized clients plus the
+/// recipe (sample order + root RNG) to materialize any of the N fleet
+/// members on demand.
+pub struct ClientFleet {
+    /// Materialized clients, keyed by client id, capacity 2·K.
+    lru: IdLru<ClientState>,
+    /// The `equal_shards` shuffled sample order over the training corpus;
+    /// client `id` owns `order[id·per .. (id+1)·per]`.
+    order: Vec<usize>,
+    /// Samples per client (`train_n / clients`).
+    per: usize,
+    train_batch: usize,
+    /// The run's root RNG — clients derive their private streams from it
+    /// by id (derivation consumes nothing).
+    root: Rng,
+    /// Energy folded in from evicted clients (exact total accounting).
+    evicted_energy_j: f64,
+    /// MACs folded in from evicted clients (counterfactual reports).
+    evicted_macs: f64,
+}
+
+impl ClientFleet {
+    /// Build the fleet recipe: performs the `equal_shards` shuffle on
+    /// `shard_rng` (identical RNG consumption to the eager constructor)
+    /// but materializes NO clients.
+    pub fn new(
+        train_n: usize,
+        clients: usize,
+        train_batch: usize,
+        root: Rng,
+        shard_rng: &mut Rng,
+    ) -> Self {
+        let per = train_n / clients;
+        let mut order: Vec<usize> = (0..train_n).collect();
+        shard_rng.shuffle(&mut order);
+        ClientFleet {
+            lru: IdLru::new(),
+            order,
+            per,
+            train_batch,
+            root,
+            evicted_energy_j: 0.0,
+            evicted_macs: 0.0,
+        }
+    }
+
+    /// Grow the LRU window to hold a round of `kk` participants without
+    /// evicting any of them (capacity 2·kk, monotone — see
+    /// [`IdLru::reserve`]).
+    pub fn reserve_round(&mut self, kk: usize) {
+        self.lru.reserve(2 * kk.max(1));
+    }
+
+    /// Materialize (or touch) client `id` at this round's `precision`;
+    /// returns its LRU slot, stable for the whole round (the capacity
+    /// protocol guarantees no same-round eviction).  A first-time or
+    /// re-entering client is built from the positional shard recipe; a
+    /// resident one just gets its precision updated.  An eviction folds
+    /// the departing client's energy/MACs into the fleet scalars.
+    pub fn materialize(&mut self, id: usize, precision: Precision) -> u32 {
+        let ClientFleet {
+            lru,
+            order,
+            per,
+            train_batch,
+            root,
+            evicted_energy_j,
+            evicted_macs,
+        } = self;
+        let (slot, fresh, evicted) = lru.get_or_insert_with(id, || {
+            ClientState::new(
+                id,
+                precision,
+                order[id * *per..(id + 1) * *per].to_vec(),
+                *train_batch,
+                root,
+            )
+        });
+        if let Some(old) = evicted {
+            *evicted_energy_j += old.energy_joules;
+            *evicted_macs += old.macs_spent;
+        }
+        if !fresh {
+            lru.value_mut(slot).precision = precision;
+        }
+        slot
+    }
+
+    /// Materialized-client count (≤ 2·K, never O(fleet)).
+    pub fn resident(&self) -> usize {
+        self.lru.len()
+    }
+
+    /// The materialized client at LRU `slot` (from [`materialize`]).
+    ///
+    /// [`materialize`]: Self::materialize
+    pub fn value(&self, slot: u32) -> &ClientState {
+        self.lru.value(slot)
+    }
+
+    /// Mutable access by LRU slot.
+    pub fn value_mut(&mut self, slot: u32) -> &mut ClientState {
+        self.lru.value_mut(slot)
+    }
+
+    /// The materialized client with identity `id`, if resident.
+    pub fn get(&self, id: usize) -> Option<&ClientState> {
+        self.lru.get(id)
+    }
+
+    /// All materialized clients as one slice (LRU slot order) — the
+    /// client phase builds its [`crate::exec::DisjointMut`] view over
+    /// this; round slots index into it via the materialized slot slab.
+    pub fn values_mut(&mut self) -> &mut [ClientState] {
+        self.lru.values_mut()
+    }
+
+    /// Cumulative fleet energy: residents (summed in ascending-id order,
+    /// matching the eager fleet's id-order sum when nothing has evicted)
+    /// plus the energy folded in from evicted clients.
+    pub fn actual_energy_joules(&self) -> f64 {
+        let mut total = self.evicted_energy_j;
+        for &(_, slot) in self.lru.entries() {
+            total += self.lru.value(slot).energy_joules;
+        }
+        total
+    }
+
+    /// Per-client MACs for the counterfactual energy report: residents in
+    /// ascending-id order, plus (when any client evicted) one pooled
+    /// entry for the departed — counterfactual joules are linear in MACs,
+    /// so pooling preserves the totals.
+    pub fn macs_spent(&self) -> Vec<f64> {
+        let mut macs: Vec<f64> = self
+            .lru
+            .entries()
+            .iter()
+            .map(|&(_, slot)| self.lru.value(slot).macs_spent)
+            .collect();
+        if self.evicted_macs > 0.0 {
+            macs.push(self.evicted_macs);
+        }
+        macs
+    }
+}

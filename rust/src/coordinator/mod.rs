@@ -2,8 +2,9 @@
 //! machine over the substrate modules.
 //!
 //! Per communication round t (Alg. 1):
-//!   1. the precision policy assigns each client's level, the coordinator
-//!      broadcasts θ^(t-1) to the selected clients;
+//!   1. the coordinator selects the round's K participants, the precision
+//!      policy assigns each SELECTED client's level (O(K) — never a
+//!      fleet-sized vector), and θ^(t-1) is broadcast to them;
 //!   2. each client re-quantizes to its precision q_k and trains locally
 //!      (PJRT execution of the `train_q{b}` artifact — [`client`]);
 //!   3. the [`crate::sim::Session`] draws the round's channel through the
@@ -59,12 +60,26 @@
 //! `active_k`; analog OTA's `active_total` self-adjusts).  With no
 //! policy the stream is never consumed and the round is byte-identical
 //! to the deadline-free engine.
+//!
+//! **Fleet scaling**: the coordinator holds NO fleet-sized client state.
+//! Selection runs FIRST; the round's K selected identities are assigned
+//! precisions through [`sim::PrecisionPolicy::assign_selected_into`]
+//! (O(K)) and materialized on demand in the identity-keyed bounded
+//! [`fleet::ClientFleet`] window (capacity 2·K — a round never evicts
+//! its own participants), so a 1M-client run's coordinator memory stays
+//! O(K + shard·N).  After aggregation the round's per-participant
+//! measurements (|h|, this-round energy, local loss) are fed back to the
+//! policy as a [`sim::RoundFeedback`] keyed by client identity — the
+//! [`sim::ProfilingPlanner`] builds its per-client precision plan from
+//! exactly this stream.
 
 pub mod client;
+pub mod fleet;
 pub mod pretrain;
 pub mod report;
 
 pub use client::ClientState;
+pub use fleet::ClientFleet;
 pub use report::{EnergyReport, RequantEval, RunReport};
 
 use std::rc::Rc;
@@ -73,7 +88,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::config::RunConfig;
-use crate::data::{equal_shards, Dataset};
+use crate::data::Dataset;
 use crate::energy;
 use crate::exec;
 use crate::fl::Selection;
@@ -116,8 +131,19 @@ pub struct RoundScratch {
     /// Per-participant precision levels (aligned with ROUND slots, all K
     /// of them — shards index it at `lo..hi`).
     pub(crate) precisions: Vec<Precision>,
-    /// Per-client precision assignment for the full fleet (policy output).
-    pub(crate) assigned: Vec<Precision>,
+    /// LRU slots of the round's materialized participants (aligned with
+    /// `selected`): the client phase reaches its [`ClientState`]s through
+    /// this slab, never by fleet index.
+    pub(crate) slab: Vec<u32>,
+    /// Per-participant cumulative energy BEFORE the round — the feedback
+    /// baseline (this round's spend = after − before).
+    pub(crate) fb_energy0: Vec<f64>,
+    /// Per-participant channel amplitude |h| (policy feedback).
+    pub(crate) gains: Vec<f32>,
+    /// Per-participant this-round energy in joules (policy feedback).
+    pub(crate) fb_energy: Vec<f64>,
+    /// Per-participant local training loss (policy feedback).
+    pub(crate) fb_loss: Vec<f64>,
     /// Per-slot client training stats (parallel workers write disjoint
     /// entries; the coordinator sums them in slot order afterwards, so
     /// the reduction is bit-identical at every worker count).
@@ -131,7 +157,9 @@ struct ClientPhaseEnv<'a> {
     workers: usize,
     kk: usize,
     n: usize,
-    selected: &'a [usize],
+    /// Shard-local fleet-LRU slots (the round slab at `lo..hi`): entry
+    /// `r` is where slot `lo + r`'s materialized client lives.
+    slots: &'a [u32],
     data: &'a Dataset,
     theta: &'a [f32],
     lr: f32,
@@ -147,8 +175,11 @@ struct ClientPhaseEnv<'a> {
 /// One worker's share of the client phase: slots
 /// `[chunk_start(kk, workers, w), +chunk_len)` — contiguous, so the plane
 /// rows and stats entries it writes are disjoint from every other
-/// worker's; client indices come from `selected`, whose entries are
-/// pairwise distinct.
+/// worker's; client LRU slots come from the round slab (`env.slots`),
+/// whose entries are pairwise distinct (the round's identities are
+/// pairwise distinct, the id-keyed LRU maps distinct resident ids to
+/// distinct slots, and the 2·K capacity protocol rules out mid-round
+/// eviction).
 fn run_client_slots<S: exec::TrainStep + ?Sized>(
     env: &ClientPhaseEnv<'_>,
     clients: &exec::DisjointMut<'_, ClientState>,
@@ -165,12 +196,13 @@ fn run_client_slots<S: exec::TrainStep + ?Sized>(
             continue; // excluded by the deadline/dropout policy: no
                       // training, no energy, stats stay default
         }
-        let k = env.selected[slot];
-        // SAFETY: `selected` indices are pairwise distinct (Selection
-        // contract) and each slot belongs to exactly one worker range, so
-        // no client, plane row or stats entry is aliased; the buffers
-        // outlive the blocking pool dispatch.
-        let c = unsafe { clients.get(k) };
+        let s = env.slots[slot] as usize;
+        // SAFETY: slab entries are pairwise distinct (distinct round
+        // identities map to distinct LRU slots; the 2·K capacity protocol
+        // rules out mid-round eviction) and each slot belongs to exactly
+        // one worker range, so no client, plane row or stats entry is
+        // aliased; the buffers outlive the blocking pool dispatch.
+        let c = unsafe { clients.get(s) };
         let row = unsafe { plane.slice_at(slot * env.n, env.n) };
         let res = c.local_round_into(
             step,
@@ -204,7 +236,9 @@ fn run_client_slots<S: exec::TrainStep + ?Sized>(
 pub struct Coordinator {
     pub cfg: RunConfig,
     pub runtime: Rc<Runtime>,
-    clients: Vec<ClientState>,
+    /// Identity-keyed lazy client window: O(K) materialized clients, the
+    /// rest of the fleet exists only as the shard/RNG recipe.
+    fleet: ClientFleet,
     train_data: Dataset,
     test_data: Dataset,
     /// Global model (flat decimal values).
@@ -237,8 +271,8 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Build everything with the config-selected default parts: runtime,
-    /// data, shards, clients, initial model, static-scheme policy, the
-    /// configured channel model and aggregator.
+    /// data, the lazy client fleet, initial model, static-scheme policy,
+    /// the configured channel model and aggregator.
     pub fn new(cfg: RunConfig) -> Result<Self> {
         Coordinator::from_parts(cfg, sim::SimParts::default())
     }
@@ -267,26 +301,33 @@ impl Coordinator {
         let sim::Arena { round: mut scratch, agg, channel } =
             parts.arena.unwrap_or_default();
 
-        // round-1 assignment doubles as the construction-time precisions
-        policy.assign_into(
+        // Construction-time policy validation: an empty-selection round-1
+        // assignment surfaces config errors (e.g. scheme divisibility)
+        // before any round runs, without materializing a fleet-sized
+        // vector.  Policies observe the same round-1/prev-None call the
+        // eager constructor made, so feedback-policy state is unchanged.
+        policy.assign_selected_into(
             &sim::PolicyCtx {
                 round: 1,
                 clients: cfg.clients,
                 snr_db: cfg.channel.snr_db,
                 prev: None,
             },
-            &mut scratch.assigned,
+            &[],
+            &mut scratch.precisions,
         )?;
 
+        // The fleet recipe performs the exact `equal_shards` shuffle
+        // (same "shard"-stream consumption) but materializes no clients —
+        // they are built on first selection, keyed by identity.
         let mut shard_rng = root.stream("shard");
-        let shards = equal_shards(train_data.n, cfg.clients, &mut shard_rng);
-        let clients: Vec<ClientState> = shards
-            .into_iter()
-            .zip(scratch.assigned.iter())
-            .map(|(s, &p)| {
-                ClientState::new(s.client, p, s.indices, runtime.manifest.train_batch, &root)
-            })
-            .collect();
+        let fleet = ClientFleet::new(
+            train_data.n,
+            cfg.clients,
+            runtime.manifest.train_batch,
+            root.clone(),
+            &mut shard_rng,
+        );
 
         let theta = match &cfg.init_params {
             Some(path) => {
@@ -374,7 +415,7 @@ impl Coordinator {
             layout: variant.layout.clone(),
             cfg,
             runtime,
-            clients,
+            fleet,
             train_data,
             test_data,
             theta,
@@ -416,21 +457,11 @@ impl Coordinator {
         let threads = self.cfg.threads;
         self.session.begin_round(t);
 
-        // Step 0: per-round precision assignment (static policy: the same
-        // fleet assignment every round).
-        self.policy.assign_into(
-            &sim::PolicyCtx {
-                round: t,
-                clients: self.cfg.clients,
-                snr_db: self.cfg.channel.snr_db,
-                prev: self.log.rounds.last(),
-            },
-            &mut self.scratch.assigned,
-        )?;
-        for (c, &p) in self.clients.iter_mut().zip(self.scratch.assigned.iter()) {
-            c.precision = p;
-        }
-
+        // Step 0a: participant selection — FIRST, so the policy assigns
+        // (and the fleet materializes) only the K selected identities.
+        // The policy consumes no selection RNG and selection consumes no
+        // policy state, so hoisting selection leaves every stream's draw
+        // sequence untouched.
         self.selection.select_into(
             self.cfg.clients,
             t,
@@ -440,13 +471,36 @@ impl Coordinator {
         let kk = self.scratch.selected.len();
         let n = self.theta.len();
 
-        // Per-participant precisions and stats slots (aligned with the
-        // round's slot order, shared by every shard of the round).
-        self.scratch.precisions.clear();
-        for slot in 0..kk {
-            let k = self.scratch.selected[slot];
-            self.scratch.precisions.push(self.clients[k].precision);
+        // Step 0b: per-round precision assignment at the selected
+        // identities only (O(K); equals gathering the fleet-wide
+        // assignment at `selected` — the PrecisionPolicy contract).
+        {
+            let RoundScratch { selected, precisions, .. } = &mut self.scratch;
+            self.policy.assign_selected_into(
+                &sim::PolicyCtx {
+                    round: t,
+                    clients: self.cfg.clients,
+                    snr_db: self.cfg.channel.snr_db,
+                    prev: self.log.rounds.last(),
+                },
+                selected,
+                precisions,
+            )?;
         }
+
+        // Step 0c: materialize the round's clients in the identity-keyed
+        // fleet window (capacity 2·K — no same-round eviction) and record
+        // each one's LRU slot plus pre-round energy (feedback baseline).
+        self.fleet.reserve_round(kk);
+        self.scratch.slab.clear();
+        self.scratch.fb_energy0.clear();
+        for slot in 0..kk {
+            let id = self.scratch.selected[slot];
+            let s = self.fleet.materialize(id, self.scratch.precisions[slot]);
+            self.scratch.slab.push(s);
+            self.scratch.fb_energy0.push(self.fleet.value(s).energy_joules);
+        }
+
         self.scratch.stats.clear();
         self.scratch.stats.resize(kk, LocalStats::default());
 
@@ -491,9 +545,16 @@ impl Coordinator {
         let stats = if self.session.supports_streaming() {
             // channel draw happens up front (same per-stream RNG
             // consumption as the post-training draw: the streams are
-            // independent), so every shard superposes through its slots'
-            // gains as soon as its clients finish
-            self.session.begin_aggregate_partial(t, kk, active_k, n);
+            // independent), FOR the round's selected identities — so
+            // stateful channel models follow the client, not the slot —
+            // and every shard superposes through its slots' gains as soon
+            // as its clients finish
+            self.session.begin_aggregate_partial_for(
+                t,
+                &self.scratch.selected,
+                active_k,
+                n,
+            );
             let pool = exec::pool();
             // Pipelined engine: overlap the next super-shard's client
             // phase with the previous one's superposition.  Gated to the
@@ -535,8 +596,12 @@ impl Coordinator {
             // shard_size/deadline configs that need streaming)
             debug_assert!(shard_len >= kk && !straggler_on);
             self.client_phase(0, kk, threads)?;
-            self.session
-                .aggregate(t, &self.scratch.plane, &self.scratch.precisions)
+            self.session.aggregate_for(
+                t,
+                &self.scratch.selected,
+                &self.scratch.plane,
+                &self.scratch.precisions,
+            )
         };
         // round boundary: no live overlap-registry claim from this round's
         // dispatches may survive aggregation (debug builds only)
@@ -567,6 +632,43 @@ impl Coordinator {
                 crate::config::Transmit::Weights => self.theta.copy_from_slice(agg),
             }
         } // else: round lost to deep fades; keep θ^(t-1)
+
+        // Post-round policy feedback: per-participant |h|, this-round
+        // energy and local loss, keyed by the round's identities.  The
+        // default policies ignore it (no-op default); the profiling
+        // planner folds it into its bounded per-client history.  All
+        // buffers come from the scratch arena — zero-alloc once warm.
+        {
+            let ch = self.session.channel();
+            let have_ch =
+                self.session.needs_channel() && ch.clients.len() == kk;
+            let RoundScratch {
+                selected,
+                slab,
+                fb_energy0,
+                gains,
+                fb_energy,
+                fb_loss,
+                stats: local_stats,
+                ..
+            } = &mut self.scratch;
+            gains.clear();
+            fb_energy.clear();
+            fb_loss.clear();
+            for slot in 0..kk {
+                gains.push(if have_ch { ch.clients[slot].h.abs() } else { 1.0 });
+                let after = self.fleet.value(slab[slot]).energy_joules;
+                fb_energy.push(after - fb_energy0[slot]);
+                fb_loss.push(local_stats[slot].mean_loss);
+            }
+            self.policy.observe_feedback(&sim::RoundFeedback {
+                round: t,
+                ids: selected.as_slice(),
+                gains: gains.as_slice(),
+                energy_j: fb_energy.as_slice(),
+                losses: fb_loss.as_slice(),
+            });
+        }
 
         // Evaluation + energy accounting.
         let mut rec = RoundRecord {
@@ -629,8 +731,7 @@ impl Coordinator {
                 if !self.scratch.included[slot] {
                     continue; // excluded: no training, stats stay default
                 }
-                let k = self.scratch.selected[slot];
-                let c = &mut self.clients[k];
+                let c = self.fleet.value_mut(self.scratch.slab[slot]);
                 let stats = match &self.backend {
                     Some(b) => c.local_round_into(
                         b.as_ref(),
@@ -665,10 +766,10 @@ impl Coordinator {
             return Ok(());
         }
 
-        let RoundScratch { selected, plane, stats, errors, included, .. } =
+        let RoundScratch { slab, plane, stats, errors, included, .. } =
             &mut self.scratch;
         // shard-local views: worker slot indices run 0..count over these
-        let selected: &[usize] = &selected[lo..hi];
+        let slots: &[u32] = &slab[lo..hi];
         let included: &[bool] = &included[lo..hi];
         let stats: &mut [LocalStats] = &mut stats[lo..hi];
         errors.clear();
@@ -676,12 +777,12 @@ impl Coordinator {
         let plane_ptr = exec::SendPtr::from_mut(plane.as_mut_slice());
         let stats_ptr = exec::SendPtr::from_mut(stats);
         let errs_ptr = exec::SendPtr::from_mut(&mut errors[..]);
-        let clients = exec::DisjointMut::new(&mut self.clients);
+        let clients = exec::DisjointMut::new(self.fleet.values_mut());
         let env = ClientPhaseEnv {
             workers,
             kk: count,
             n,
-            selected,
+            slots,
             data: &self.train_data,
             theta: &self.theta,
             lr: self.cfg.lr,
@@ -849,7 +950,7 @@ impl Coordinator {
         let Coordinator {
             cfg,
             runtime,
-            clients,
+            fleet,
             train_data,
             theta,
             macs_per_sample,
@@ -861,7 +962,7 @@ impl Coordinator {
             ..
         } = self;
         let RoundScratch {
-            selected,
+            slab,
             plane,
             plane2,
             precisions,
@@ -875,7 +976,7 @@ impl Coordinator {
         cur_plane.reset(count, n);
 
         // shard-local views for the training tasks
-        let sel: &[usize] = &selected[cur_lo..cur_hi];
+        let slots: &[u32] = &slab[cur_lo..cur_hi];
         let inc: &[bool] = &included[cur_lo..cur_hi];
         let stats: &mut [LocalStats] = &mut stats[cur_lo..cur_hi];
         errors.clear();
@@ -883,12 +984,12 @@ impl Coordinator {
         let plane_ptr = exec::SendPtr::from_mut(cur_plane.as_mut_slice());
         let stats_ptr = exec::SendPtr::from_mut(stats);
         let errs_ptr = exec::SendPtr::from_mut(&mut errors[..]);
-        let clients = exec::DisjointMut::new(&mut clients[..]);
+        let clients = exec::DisjointMut::new(fleet.values_mut());
         let env = ClientPhaseEnv {
             workers,
             kk: count,
             n,
-            selected: sel,
+            slots,
             data: &*train_data,
             theta: theta.as_slice(),
             lr: cfg.lr,
@@ -1072,12 +1173,12 @@ impl Coordinator {
     /// client accrues energy at the precision it actually ran each round,
     /// so dynamic policies are accounted correctly.
     pub fn actual_energy_joules(&self) -> f64 {
-        self.clients.iter().map(|c| c.energy_joules).sum()
+        self.fleet.actual_energy_joules()
     }
 
     /// Energy actuals + homogeneous counterfactuals over the same MACs.
     pub fn energy_report(&self) -> EnergyReport {
-        let macs: Vec<f64> = self.clients.iter().map(|c| c.macs_spent).collect();
+        let macs = self.fleet.macs_spent();
         EnergyReport {
             actual_joules: self.actual_energy_joules(),
             all32_joules: energy::Meter::counterfactual_joules(&macs, Precision::of(32)),

@@ -1,0 +1,355 @@
+//! `IdLru` — a client-**identity**-keyed bounded LRU slab.
+//!
+//! The fleet-scaling substrate for every piece of persistent per-client
+//! state (GaussMarkov fading memory, path-loss sites, `ClientState`,
+//! profiling history): state is keyed by CLIENT ID, never by the
+//! participant slot a client happens to occupy this round, and total
+//! memory is bounded by the configured capacity — O(K), never O(fleet).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Determinism** — no hash collections anywhere (lint rule R3):
+//!    the id index is a sorted `Vec<(id, slot)>` probed by binary
+//!    search, so every iteration order is a pure function of the ids.
+//! 2. **Zero-alloc warm rounds** — all three backing vectors reserve
+//!    capacity up front (`reserve`); inserts within capacity use
+//!    `Vec::push`/`Vec::insert` below capacity and evictions recycle
+//!    the LRU slot in place, so a round over resident-or-evictable ids
+//!    touches the heap only while capacity is still growing.
+//! 3. **Stable slots** — a resident value never moves: `slot_of` /
+//!    `value_mut` indices stay valid across touches and unrelated
+//!    evictions, which lets callers hold `u32` slots for a whole round
+//!    (the coordinator's slab-indexed client phase relies on this).
+//!
+//! Capacity protocol: callers `reserve(2 * K)` at the top of each round
+//! (monotone — capacity never shrinks).  With capacity ≥ 2K, one round's
+//! K participants can never evict each other: eviction only fires when
+//! the LRU is full of OLDER entries, and at 2K at least K of them are
+//! from previous rounds.
+//!
+//! Recency: `get_or_insert_with` is the only *touching* accessor (it
+//! front-moves the entry); `get`/`slot_of` deliberately do not touch, so
+//! read-only probes (diagnostics, tests) cannot perturb eviction order.
+
+/// Sentinel link: "no slot".
+const NIL: u32 = u32::MAX;
+
+#[derive(Clone, Debug)]
+struct Meta {
+    /// The client id owning this slot.
+    id: usize,
+    /// More-recently-used neighbour (toward `head`).
+    prev: u32,
+    /// Less-recently-used neighbour (toward `tail`).
+    next: u32,
+}
+
+/// Bounded, id-keyed LRU slab. See the module docs for the contract.
+#[derive(Clone, Debug, Default)]
+pub struct IdLru<T> {
+    /// Slot-indexed values (parallel to `meta`).
+    values: Vec<T>,
+    /// Slot-indexed ids + intrusive recency links.
+    meta: Vec<Meta>,
+    /// `(id, slot)` pairs sorted by id — the deterministic index.
+    index: Vec<(usize, u32)>,
+    /// Most-recently-used slot (NIL when empty).
+    head: u32,
+    /// Least-recently-used slot (NIL when empty) — the eviction victim.
+    tail: u32,
+    /// Maximum resident entries; 0 until the first `reserve`.
+    cap: usize,
+}
+
+impl<T> IdLru<T> {
+    /// An empty LRU with zero capacity — `reserve` before inserting.
+    pub fn new() -> Self {
+        IdLru {
+            values: Vec::new(),
+            meta: Vec::new(),
+            index: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            cap: 0,
+        }
+    }
+
+    /// Grow (never shrink) the capacity to at least `cap` entries and
+    /// pre-reserve the backing vectors, so inserts up to `cap` are
+    /// allocation-free.  Warm-round no-op once sized.
+    pub fn reserve(&mut self, cap: usize) {
+        if cap <= self.cap {
+            return;
+        }
+        self.cap = cap;
+        self.values.reserve(cap - self.values.len());
+        self.meta.reserve(cap - self.meta.len());
+        self.index.reserve(cap - self.index.len());
+    }
+
+    /// Resident entry count.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Current capacity bound.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Is `id` resident?  Does not touch recency.
+    pub fn contains(&self, id: usize) -> bool {
+        self.index.binary_search_by_key(&id, |e| e.0).is_ok()
+    }
+
+    /// Resident slot of `id`, if any.  Does not touch recency.
+    pub fn slot_of(&self, id: usize) -> Option<u32> {
+        self.index
+            .binary_search_by_key(&id, |e| e.0)
+            .ok()
+            .map(|i| self.index[i].1)
+    }
+
+    /// Resident value of `id`, if any.  Does not touch recency.
+    pub fn get(&self, id: usize) -> Option<&T> {
+        self.slot_of(id).map(|s| &self.values[s as usize])
+    }
+
+    /// Value at a slot previously returned by `get_or_insert_with` /
+    /// `slot_of`.
+    pub fn value(&self, slot: u32) -> &T {
+        &self.values[slot as usize]
+    }
+
+    /// Mutable value at a slot.
+    pub fn value_mut(&mut self, slot: u32) -> &mut T {
+        &mut self.values[slot as usize]
+    }
+
+    /// All resident values in slot order (slot order is insertion order
+    /// of the slots, NOT recency and NOT id order).
+    pub fn values(&self) -> &[T] {
+        &self.values
+    }
+
+    /// All resident values, mutably, in slot order.
+    pub fn values_mut(&mut self) -> &mut [T] {
+        &mut self.values
+    }
+
+    /// The `(id, slot)` index, sorted by id — the deterministic
+    /// iteration order for reductions over residents.
+    pub fn entries(&self) -> &[(usize, u32)] {
+        &self.index
+    }
+
+    /// Look up `id`, inserting `make()` if absent (evicting the
+    /// least-recently-used entry when full).  Returns
+    /// `(slot, fresh, evicted)`: `fresh` is true when `make` ran, and
+    /// `evicted` carries the displaced value (its id left the index).
+    /// This is the one *touching* accessor — the entry becomes MRU.
+    ///
+    /// Panics if called with zero capacity (`reserve` first).
+    pub fn get_or_insert_with<F: FnOnce() -> T>(
+        &mut self,
+        id: usize,
+        make: F,
+    ) -> (u32, bool, Option<T>) {
+        match self.index.binary_search_by_key(&id, |e| e.0) {
+            Ok(i) => {
+                let slot = self.index[i].1;
+                self.touch(slot);
+                (slot, false, None)
+            }
+            Err(i) => {
+                assert!(self.cap > 0, "IdLru: reserve a capacity before inserting");
+                if self.values.len() < self.cap {
+                    // room: append a new slot
+                    let slot = self.values.len() as u32;
+                    self.values.push(make());
+                    self.meta.push(Meta { id, prev: NIL, next: NIL });
+                    self.link_front(slot);
+                    self.index.insert(i, (id, slot));
+                    (slot, true, None)
+                } else {
+                    // full: recycle the least-recently-used slot
+                    let slot = self.tail;
+                    let old_id = self.meta[slot as usize].id;
+                    let old = std::mem::replace(&mut self.values[slot as usize], make());
+                    let old_i = self
+                        .index
+                        .binary_search_by_key(&old_id, |e| e.0)
+                        .expect("IdLru: tail id missing from index");
+                    self.index.remove(old_i);
+                    // re-probe: removing old_id may shift the target
+                    let new_i = self
+                        .index
+                        .binary_search_by_key(&id, |e| e.0)
+                        .expect_err("IdLru: inserting an id that is already resident");
+                    self.index.insert(new_i, (id, slot));
+                    self.meta[slot as usize].id = id;
+                    self.touch(slot);
+                    (slot, true, Some(old))
+                }
+            }
+        }
+    }
+
+    /// Detach `slot` from the recency list.
+    fn unlink(&mut self, slot: u32) {
+        let Meta { prev, next, .. } = self.meta[slot as usize];
+        if prev != NIL {
+            self.meta[prev as usize].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.meta[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    /// Attach `slot` at the head (MRU position).
+    fn link_front(&mut self, slot: u32) {
+        self.meta[slot as usize].prev = NIL;
+        self.meta[slot as usize].next = self.head;
+        if self.head != NIL {
+            self.meta[self.head as usize].prev = slot;
+        }
+        self.head = slot;
+        if self.tail == NIL {
+            self.tail = slot;
+        }
+    }
+
+    /// Move `slot` to the MRU position.
+    fn touch(&mut self, slot: u32) {
+        if self.head == slot {
+            return;
+        }
+        self.unlink(slot);
+        self.link_front(slot);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(lru: &IdLru<u64>) -> Vec<usize> {
+        lru.entries().iter().map(|&(id, _)| id).collect()
+    }
+
+    #[test]
+    fn inserts_and_looks_up_by_id() {
+        let mut lru: IdLru<u64> = IdLru::new();
+        lru.reserve(4);
+        let (s7, fresh, ev) = lru.get_or_insert_with(7, || 70);
+        assert!(fresh && ev.is_none());
+        let (s3, fresh, _) = lru.get_or_insert_with(3, || 30);
+        assert!(fresh);
+        assert_ne!(s7, s3);
+        // resident lookup: same slot, not fresh, no make() call
+        let (again, fresh, ev) = lru.get_or_insert_with(7, || unreachable!());
+        assert_eq!(again, s7);
+        assert!(!fresh && ev.is_none());
+        assert_eq!(lru.get(3), Some(&30));
+        assert_eq!(lru.get(99), None);
+        assert_eq!(ids(&lru), vec![3, 7], "index iterates in id order");
+    }
+
+    #[test]
+    fn evicts_least_recently_used_and_recycles_the_slot() {
+        let mut lru: IdLru<u64> = IdLru::new();
+        lru.reserve(2);
+        lru.get_or_insert_with(1, || 10);
+        lru.get_or_insert_with(2, || 20);
+        // touch 1 so 2 becomes LRU
+        lru.get_or_insert_with(1, || unreachable!());
+        let (slot, fresh, evicted) = lru.get_or_insert_with(3, || 33);
+        assert!(fresh);
+        assert_eq!(evicted, Some(20), "id 2 was LRU");
+        assert!(!lru.contains(2));
+        assert!(lru.contains(1) && lru.contains(3));
+        assert_eq!(lru.len(), 2);
+        // the evictee's slot was recycled in place
+        assert_eq!(lru.slot_of(3), Some(slot));
+        assert_eq!(lru.value(slot), &33);
+    }
+
+    #[test]
+    fn resident_slots_are_stable_across_touches_and_evictions() {
+        let mut lru: IdLru<u64> = IdLru::new();
+        lru.reserve(3);
+        lru.get_or_insert_with(10, || 1);
+        let (s20, _, _) = lru.get_or_insert_with(20, || 2);
+        lru.get_or_insert_with(30, || 3);
+        // touch 20, then force an eviction (victim: 10)
+        lru.get_or_insert_with(20, || unreachable!());
+        let (_, _, evicted) = lru.get_or_insert_with(40, || 4);
+        assert_eq!(evicted, Some(1));
+        assert_eq!(lru.slot_of(20), Some(s20), "resident slot moved");
+        assert_eq!(lru.value(s20), &2);
+    }
+
+    #[test]
+    fn reserve_is_monotone_and_grows_capacity() {
+        let mut lru: IdLru<u64> = IdLru::new();
+        lru.reserve(4);
+        assert_eq!(lru.capacity(), 4);
+        lru.reserve(2); // shrink request: ignored
+        assert_eq!(lru.capacity(), 4);
+        lru.reserve(8);
+        assert_eq!(lru.capacity(), 8);
+        for id in 0..8 {
+            lru.get_or_insert_with(id, || id as u64);
+        }
+        assert_eq!(lru.len(), 8);
+        assert_eq!(ids(&lru), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn cap_2k_never_evicts_the_current_round() {
+        // the capacity protocol: with cap = 2K, inserting K fresh ids
+        // can only evict ids from PREVIOUS rounds
+        let k = 8usize;
+        let mut lru: IdLru<usize> = IdLru::new();
+        lru.reserve(2 * k);
+        for round in 0..50 {
+            let base = round * 1000;
+            for j in 0..k {
+                let id = base + j;
+                let (_, _, evicted) = lru.get_or_insert_with(id, || id);
+                if let Some(old) = evicted {
+                    assert!(old < base, "evicted a current-round participant");
+                }
+            }
+            for j in 0..k {
+                assert!(lru.contains(base + j), "round member evicted mid-round");
+            }
+        }
+        assert_eq!(lru.len(), 2 * k);
+    }
+
+    #[test]
+    fn eviction_keeps_the_index_sorted() {
+        let mut lru: IdLru<u64> = IdLru::new();
+        lru.reserve(3);
+        for id in [5usize, 1, 9, 4, 7, 2, 8] {
+            lru.get_or_insert_with(id, || id as u64);
+            let got = ids(&lru);
+            let mut want = got.clone();
+            want.sort_unstable();
+            assert_eq!(got, want);
+            for &(id, slot) in lru.entries() {
+                assert_eq!(lru.value(slot), &(id as u64));
+            }
+        }
+    }
+}

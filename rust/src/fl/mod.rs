@@ -4,11 +4,13 @@
 //! module holds the pure-math pieces it composes.
 
 pub mod fedavg;
+pub mod id_lru;
 pub mod scheme;
 pub mod selection;
 
 pub use fedavg::{
     fedavg, fedavg_plane_into, mean, mean_plane_accumulate, mean_plane_into,
 };
+pub use id_lru::IdLru;
 pub use scheme::Scheme;
 pub use selection::Selection;

@@ -73,6 +73,18 @@ impl Scheme {
         self.groups.windows(2).all(|w| w[0] == w[1])
     }
 
+    /// O(1) check that `clients` divides evenly into the groups — the
+    /// single source of the divisibility error every expansion (and
+    /// `RunConfig::validate`) reports, so a 10M-client config validates
+    /// without materializing a fleet-sized assignment.
+    pub fn check_divides(&self, clients: usize) -> Result<()> {
+        let g = self.groups.len();
+        if clients % g != 0 {
+            bail!("{clients} clients do not divide into {g} equal groups");
+        }
+        Ok(())
+    }
+
     /// Expand to per-client precisions: `clients` must divide evenly into
     /// the groups (paper: 15 clients / 3 groups = 5 each).
     pub fn client_precisions(&self, clients: usize) -> Result<Vec<Precision>> {
@@ -89,11 +101,8 @@ impl Scheme {
         clients: usize,
         out: &mut Vec<Precision>,
     ) -> Result<()> {
-        let g = self.groups.len();
-        if clients % g != 0 {
-            bail!("{clients} clients do not divide into {g} equal groups");
-        }
-        let per = clients / g;
+        self.check_divides(clients)?;
+        let per = clients / self.groups.len();
         out.clear();
         for &p in &self.groups {
             for _ in 0..per {
@@ -115,11 +124,8 @@ impl Scheme {
         selected: &[usize],
         out: &mut Vec<Precision>,
     ) -> Result<()> {
-        let g = self.groups.len();
-        if clients % g != 0 {
-            bail!("{clients} clients do not divide into {g} equal groups");
-        }
-        let per = clients / g;
+        self.check_divides(clients)?;
+        let per = clients / self.groups.len();
         out.clear();
         for &k in selected {
             debug_assert!(k < clients, "client index {k} out of the {clients}-fleet");

@@ -24,31 +24,49 @@ use crate::channel::{
     correlated, fading, geometry, pilot, ChannelConfig, ClientChannel, FadingKind,
     Precode, RoundChannel, C32,
 };
+use crate::fl::IdLru;
 use crate::rng::Rng;
 
 /// Draws one round's channel realisation.
 ///
-/// Contract: `draw_into` must fully overwrite `out` (the buffer is reused
-/// round to round), must consume `rng` deterministically — the same model
-/// state and RNG state in always yield the same realisation out — and
-/// must not allocate once `out` AND the model's own state have warmed to
-/// capacity.  Models MAY carry mutable state across rounds (that is
-/// the whole point of correlated fading); such state must be (re)built
-/// from the draw inputs on the first call, never eagerly per round, so
-/// the steady-state round loop stays allocation-free
+/// Contract: `draw_into`/`draw_for` must fully overwrite `out` (the
+/// buffer is reused round to round), must consume `rng` deterministically
+/// — the same model state and RNG state in always yield the same
+/// realisation out — and must not allocate once `out` AND the model's own
+/// state have warmed to capacity.  Models MAY carry mutable state across
+/// rounds (that is the whole point of correlated fading); such state must
+/// be (re)built from the draw inputs on the first call, never eagerly per
+/// round, so the steady-state round loop stays allocation-free
 /// (`rust/tests/alloc_counter.rs` pins this through `Box<dyn
 /// ChannelModel>`).
 ///
-/// Fleet-scaling contract: `num_clients` is the number of PARTICIPANT
-/// SLOTS this round (K), not the fleet size N — stateful models key
-/// their memory by slot and are therefore lazily sized O(K), never
-/// O(fleet): a 1M-client run with `clients_per_round = 64` builds
-/// channel state for 64 slots only
+/// Fleet-scaling contract: persistent per-client state is keyed by
+/// CLIENT IDENTITY, never by the participant slot a client happens to
+/// occupy this round, and it lives in a bounded id-keyed LRU
+/// ([`crate::fl::IdLru`]) of capacity 2·K — so a far client keeps its
+/// site and a slow-moving client keeps its fade across random
+/// (`UniformK`/`SampledK`) selection, whichever slot it lands in, while
+/// memory stays O(K), never O(fleet): a 1M-client run with
+/// `clients_per_round = 64` holds channel state for at most 128 resident
+/// clients
 /// (`rust/tests/channel_stats.rs::million_client_fleet_round_state_is_o_shard_not_o_fleet`).
+/// A client evicted after long absence re-enters from the stationary
+/// distribution, exactly like a first-time participant.
 pub trait ChannelModel {
     /// Fill `out` with `num_clients` client-channel states plus the server
-    /// noise level for this round.
+    /// noise level for this round, treating slot `k` as client id `k`
+    /// (full participation / round-robin, where slot == id).
     fn draw_into(&mut self, num_clients: usize, rng: &mut Rng, out: &mut RoundChannel);
+
+    /// Identity-aware entry: fill `out` with one client-channel state per
+    /// entry of `ids` (this round's selected client identities, pairwise
+    /// distinct), in slot order.  Stateful models key their memory by
+    /// these ids; the default delegates to [`ChannelModel::draw_into`],
+    /// which is exact for stateless models (the realisation does not
+    /// depend on who transmits).
+    fn draw_for(&mut self, ids: &[usize], rng: &mut Rng, out: &mut RoundChannel) {
+        self.draw_into(ids.len(), rng, out);
+    }
 
     /// Short model name for labels/reports.
     fn name(&self) -> &'static str;
@@ -128,14 +146,18 @@ impl ChannelModel for Awgn {
 pub struct GaussMarkov {
     cfg: ChannelConfig,
     pilot: Vec<C32>,
-    /// Per-client AR(1) coefficients; client k uses `rhos[k % len]`, so a
-    /// single entry broadcasts to the whole fleet.
+    /// Per-client AR(1) coefficients; client ID `k` uses `rhos[k % len]`,
+    /// so a single entry broadcasts to the whole fleet.  The coefficient
+    /// attaches to the identity, not the slot: a heterogeneous-mobility
+    /// fleet keeps each client's mobility profile under random selection.
     rhos: Vec<f32>,
-    /// h(t-1) per client, sized on the first draw and reused after.
-    state: Vec<C32>,
-    /// Whether `state` holds a previous round (false before round 1 and
-    /// after a fleet resize).
-    warm: bool,
+    /// h(t-1) per client ID — bounded id-keyed LRU (capacity 2·K).  A
+    /// client absent long enough to be evicted re-enters from the
+    /// stationary distribution; a client that merely skips rounds (or
+    /// survives a K-shrinking deadline/dropout round) keeps its fade.
+    lru: IdLru<C32>,
+    /// Identity list scratch for the slot==id compat path (`draw_into`).
+    ids_scratch: Vec<usize>,
 }
 
 impl GaussMarkov {
@@ -146,7 +168,7 @@ impl GaussMarkov {
         GaussMarkov::with_rhos(cfg, vec![rho])
     }
 
-    /// Heterogeneous-mobility form: client `k` evolves with
+    /// Heterogeneous-mobility form: client ID `k` evolves with
     /// `rhos[k % rhos.len()]` (static clients near 1, vehicular clients
     /// near 0).  Panics if any ρ is outside `[0, 1)` or the list is
     /// empty.
@@ -156,36 +178,53 @@ impl GaussMarkov {
             assert!((0.0..1.0).contains(&r), "rho {r} must be in [0, 1)");
         }
         let pilot = pilot::pilot_sequence(cfg.pilot_len);
-        GaussMarkov { cfg, pilot, rhos, state: Vec::new(), warm: false }
+        GaussMarkov { cfg, pilot, rhos, lru: IdLru::new(), ids_scratch: Vec::new() }
     }
 
-    /// The AR(1) coefficient client `k` evolves with.
+    /// The AR(1) coefficient client ID `k` evolves with.
     pub fn rho_for(&self, k: usize) -> f32 {
         self.rhos[k % self.rhos.len()]
+    }
+
+    /// The resident h(t-1) of client `id`, if it has fading memory
+    /// (selected recently enough not to have been evicted).  Read-only —
+    /// does not perturb recency.
+    pub fn h_for(&self, id: usize) -> Option<C32> {
+        self.lru.get(id).copied()
     }
 }
 
 impl ChannelModel for GaussMarkov {
     fn draw_into(&mut self, num_clients: usize, rng: &mut Rng, out: &mut RoundChannel) {
-        if self.state.len() != num_clients {
-            // first round (or a fleet resize): restart from stationarity
-            self.state.clear();
-            self.state.resize(num_clients, C32::ZERO);
-            self.warm = false;
-        }
+        // slot==id compat path (full participation / round-robin)
+        let mut ids = std::mem::take(&mut self.ids_scratch);
+        ids.clear();
+        ids.extend(0..num_clients);
+        self.draw_for(&ids, rng, out);
+        self.ids_scratch = ids;
+    }
+
+    fn draw_for(&mut self, ids: &[usize], rng: &mut Rng, out: &mut RoundChannel) {
+        // capacity 2·K: this round's participants can never evict each
+        // other (see the IdLru capacity protocol)
+        self.lru.reserve(2 * ids.len());
         out.snr_db = self.cfg.snr_db;
         out.clients.clear();
-        for k in 0..num_clients {
+        for &id in ids {
+            // one stationary draw per slot regardless of residency, so
+            // RNG consumption is selection-independent per slot
             let w = fading::rayleigh_coeff(rng);
-            let h = if self.warm {
-                correlated::ar1_step(self.state[k], self.rho_for(k), w)
-            } else {
+            let rho = self.rhos[id % self.rhos.len()];
+            let (slot, fresh, _evicted) = self.lru.get_or_insert_with(id, || C32::ZERO);
+            let s = self.lru.value_mut(slot);
+            let h = if fresh {
                 w // stationary init: exactly the i.i.d. draw
+            } else {
+                correlated::ar1_step(*s, rho, w)
             };
-            self.state[k] = h;
+            *s = h;
             out.push_from_h(&self.cfg, h, rng, &self.pilot);
         }
-        self.warm = true;
     }
 
     fn name(&self) -> &'static str {
@@ -194,17 +233,32 @@ impl ChannelModel for GaussMarkov {
 }
 
 /// Spatial asymmetry: clients placed on a disc with log-distance path
-/// loss and log-normal shadowing ([`geometry::place_clients`]).  The
-/// geometry is drawn ONCE, lazily, from the round's channel RNG stream —
-/// deterministic per seed and fixed for the whole run — and every round's
+/// loss and log-normal shadowing ([`geometry::place_one_raw`]).  A
+/// client's site is drawn ONCE, lazily, the first round that client is
+/// selected — deterministic per seed and persistent for as long as the
+/// client stays resident in the bounded id-keyed LRU — and every round's
 /// channel is `h_k(t) = a_k · g_k(t)`: the client's fixed amplitude scale
 /// times a fresh unit-power Rayleigh draw.  Far or heavily-shadowed
 /// clients therefore face persistently worse SNR (and more
-/// truncation-silencing) than near ones.
+/// truncation-silencing) than near ones, whichever slot they occupy.
+///
+/// Normalization: the FIRST cohort is normalized to mean unit power gain
+/// (exactly [`geometry::place_clients`] under full participation, so the
+/// SNR knob keeps its calibrated meaning); later first-timers are
+/// normalized against that same stored mean, so one client's gain never
+/// depends on who else shows up.
 pub struct PathLossGeometry {
     cfg: ChannelConfig,
     pilot: Vec<C32>,
-    sites: Vec<geometry::Site>,
+    /// Per-client-ID site — bounded id-keyed LRU (capacity 2·K).  An
+    /// evicted client re-enters with a freshly drawn site, like a new
+    /// arrival at a new position.
+    lru: IdLru<geometry::Site>,
+    /// Mean raw power gain of the first cohort, the fleet normalizer for
+    /// every later placement (None until the first non-empty draw).
+    mean_gain: Option<f64>,
+    /// Identity list scratch for the slot==id compat path (`draw_into`).
+    ids_scratch: Vec<usize>,
 }
 
 impl PathLossGeometry {
@@ -213,32 +267,93 @@ impl PathLossGeometry {
     /// [`ChannelConfig::shadowing_db`]).
     pub fn new(cfg: ChannelConfig) -> Self {
         let pilot = pilot::pilot_sequence(cfg.pilot_len);
-        PathLossGeometry { cfg, pilot, sites: Vec::new() }
+        PathLossGeometry {
+            cfg,
+            pilot,
+            lru: IdLru::new(),
+            mean_gain: None,
+            ids_scratch: Vec::new(),
+        }
     }
 
-    /// The fixed per-client geometry (empty until the first draw).
+    /// The resident per-client geometry in placement order (empty until
+    /// the first draw).  Under full participation placement order is id
+    /// order, matching the pre-id-keyed slot table.
     pub fn sites(&self) -> &[geometry::Site] {
-        &self.sites
+        self.lru.values()
+    }
+
+    /// The resident site of client `id`, if it has been placed (selected
+    /// recently enough not to have been evicted).  Read-only — does not
+    /// perturb recency.
+    pub fn site_for(&self, id: usize) -> Option<&geometry::Site> {
+        self.lru.get(id)
     }
 }
 
 impl ChannelModel for PathLossGeometry {
     fn draw_into(&mut self, num_clients: usize, rng: &mut Rng, out: &mut RoundChannel) {
-        if self.sites.len() != num_clients {
-            // one-time placement from the same stream: deterministic per
-            // seed, persistent across rounds
-            self.sites = geometry::place_clients(
-                num_clients,
-                self.cfg.cell_radius,
-                self.cfg.path_loss_exp,
-                self.cfg.shadowing_db,
-                rng,
-            );
-        }
+        // slot==id compat path (full participation / round-robin)
+        let mut ids = std::mem::take(&mut self.ids_scratch);
+        ids.clear();
+        ids.extend(0..num_clients);
+        self.draw_for(&ids, rng, out);
+        self.ids_scratch = ids;
+    }
+
+    fn draw_for(&mut self, ids: &[usize], rng: &mut Rng, out: &mut RoundChannel) {
         out.snr_db = self.cfg.snr_db;
         out.clients.clear();
-        for site in &self.sites {
-            let h = fading::rayleigh_coeff(rng).scale(site.amp);
+        if ids.is_empty() {
+            return; // nothing to place — keep mean_gain unset
+        }
+        // capacity 2·K: this round's participants can never evict each
+        // other (see the IdLru capacity protocol)
+        self.lru.reserve(2 * ids.len());
+        let radius = self.cfg.cell_radius;
+        let alpha = self.cfg.path_loss_exp;
+        let shadow = self.cfg.shadowing_db;
+        match self.mean_gain {
+            None => {
+                // first cohort: place everyone, then normalize the cohort
+                // to mean unit power gain — bit-identical to
+                // geometry::place_clients under full participation
+                let mut mean = 0.0f64;
+                for &id in ids {
+                    let site = geometry::place_one_raw(radius, alpha, shadow, rng);
+                    mean += site.amp as f64;
+                    self.lru.get_or_insert_with(id, || site);
+                }
+                mean /= ids.len() as f64;
+                for s in self.lru.values_mut() {
+                    s.amp = ((s.amp as f64 / mean).sqrt()) as f32;
+                }
+                self.mean_gain = Some(mean);
+            }
+            Some(mean) => {
+                // later rounds: place only unseen ids, normalized against
+                // the stored first-cohort mean; residents just refresh
+                // their recency
+                for &id in ids {
+                    let (slot, fresh, _evicted) = self
+                        .lru
+                        .get_or_insert_with(id, || {
+                            geometry::place_one_raw(radius, alpha, shadow, rng)
+                        });
+                    if fresh {
+                        let s = self.lru.value_mut(slot);
+                        s.amp = ((s.amp as f64 / mean).sqrt()) as f32;
+                    }
+                }
+            }
+        }
+        for &id in ids {
+            let amp = self
+                .lru
+                .get(id)
+                .expect("capacity 2K keeps the round's ids resident")
+                .amp;
+            let h = fading::rayleigh_coeff(rng).scale(amp);
             out.push_from_h(&self.cfg, h, rng, &self.pilot);
         }
     }
@@ -359,6 +474,125 @@ mod tests {
         assert_eq!(model.rho_for(0), 0.1);
         assert_eq!(model.rho_for(4), 0.5);
         assert_eq!(model.rho_for(8), 0.9);
+    }
+
+    #[test]
+    fn gauss_markov_state_follows_the_client_id_across_slots() {
+        let mut cfg = ChannelConfig::default();
+        cfg.rho = 0.9;
+        let mut model = GaussMarkov::new(cfg);
+        let mut rng = Rng::seed_from(21);
+        let mut rc = RoundChannel::empty();
+        model.draw_for(&[5, 9], &mut rng, &mut rc);
+        let h5 = model.h_for(5).expect("id 5 resident");
+        let h9 = model.h_for(9).expect("id 9 resident");
+        assert_eq!(h5, rc.clients[0].h);
+        assert_eq!(h9, rc.clients[1].h);
+        assert_eq!(model.h_for(0), None, "never-selected id has no state");
+        // swapped slots: slot 0 must continue id 9's OWN fade, exactly
+        let mut probe = rng.clone();
+        model.draw_for(&[9, 5], &mut rng, &mut rc);
+        let w0 = fading::rayleigh_coeff(&mut probe);
+        assert_eq!(
+            rc.clients[0].h,
+            correlated::ar1_step(h9, 0.9, w0),
+            "slot 0 must continue id 9's state, not the old slot-0 state"
+        );
+        // a round without id 5 leaves its memory untouched
+        let h5_now = model.h_for(5).unwrap();
+        model.draw_for(&[9], &mut rng, &mut rc);
+        assert_eq!(model.h_for(5), Some(h5_now));
+    }
+
+    #[test]
+    fn gauss_markov_heterogeneous_rho_attaches_to_the_id() {
+        let cfg = ChannelConfig::default();
+        let mut model = GaussMarkov::with_rhos(cfg, vec![0.1, 0.5, 0.9]);
+        let mut rng = Rng::seed_from(8);
+        let mut rc = RoundChannel::empty();
+        model.draw_for(&[2], &mut rng, &mut rc);
+        let h2 = rc.clients[0].h;
+        let mut probe = rng.clone();
+        model.draw_for(&[2], &mut rng, &mut rc);
+        let w = fading::rayleigh_coeff(&mut probe);
+        // id 2 evolves with rhos[2 % 3] = 0.9 even though it occupies
+        // slot 0 — slot-keyed indexing would use rhos[0] = 0.1
+        assert_eq!(rc.clients[0].h, correlated::ar1_step(h2, 0.9, w));
+        assert_ne!(rc.clients[0].h, correlated::ar1_step(h2, 0.1, w));
+    }
+
+    #[test]
+    fn gauss_markov_varying_k_keeps_surviving_clients_fade() {
+        // deadline/dropout rounds shrink K between rounds; survivors must
+        // keep their h(t-1) instead of restarting from stationarity
+        let mut cfg = ChannelConfig::default();
+        cfg.rho = 0.9;
+        let mut model = GaussMarkov::new(cfg);
+        let mut rng = Rng::seed_from(77);
+        let mut rc = RoundChannel::empty();
+        model.draw_for(&[0, 1, 2, 3], &mut rng, &mut rc);
+        let h1 = model.h_for(1).unwrap();
+        let mut probe = rng.clone();
+        model.draw_for(&[1, 3], &mut rng, &mut rc); // K shrank: 4 -> 2
+        let w = fading::rayleigh_coeff(&mut probe);
+        assert_eq!(
+            rc.clients[0].h,
+            correlated::ar1_step(h1, 0.9, w),
+            "survivor restarted from stationarity on a fleet resize"
+        );
+    }
+
+    #[test]
+    fn path_loss_sites_follow_the_client_id_across_slots() {
+        let mut cfg = ChannelConfig::default();
+        cfg.model = FadingKind::PathLoss;
+        let mut model = PathLossGeometry::new(cfg);
+        let mut rng = Rng::seed_from(12);
+        let mut rc = RoundChannel::empty();
+        model.draw_for(&[4, 11, 30], &mut rng, &mut rc);
+        let site11 = *model.site_for(11).expect("placed on first selection");
+        // first cohort is normalized to mean unit power gain
+        let mean_pow: f64 = model
+            .sites()
+            .iter()
+            .map(|s| (s.amp as f64) * (s.amp as f64))
+            .sum::<f64>()
+            / 3.0;
+        assert!((mean_pow - 1.0).abs() < 1e-3, "mean power gain {mean_pow}");
+        // reselected in a different slot: same site, bit for bit
+        model.draw_for(&[11], &mut rng, &mut rc);
+        let again = model.site_for(11).unwrap();
+        assert_eq!(site11.amp.to_bits(), again.amp.to_bits());
+        assert_eq!(site11.distance.to_bits(), again.distance.to_bits());
+        // a later first-timer gets placed against the stored normalizer
+        assert_eq!(model.site_for(99), None);
+        model.draw_for(&[99, 11], &mut rng, &mut rc);
+        assert!(model.site_for(99).unwrap().amp > 0.0);
+        assert_eq!(model.sites().len(), 4, "one site per distinct id");
+    }
+
+    #[test]
+    fn path_loss_empty_round_is_a_no_op() {
+        let mut cfg = ChannelConfig::default();
+        cfg.model = FadingKind::PathLoss;
+        let mut model = PathLossGeometry::new(cfg);
+        let mut rng = Rng::seed_from(5);
+        let before = rng.clone();
+        let mut rc = RoundChannel::empty();
+        model.draw_for(&[], &mut rng, &mut rc);
+        assert!(rc.clients.is_empty());
+        assert!(model.sites().is_empty());
+        assert_eq!(rng.next_u64(), before.clone().next_u64());
+        // the normalizer is still unset: the NEXT non-empty cohort
+        // calibrates it
+        model.draw_for(&[3, 8], &mut rng, &mut rc);
+        let mean_pow: f64 = model
+            .sites()
+            .iter()
+            .map(|s| (s.amp as f64) * (s.amp as f64))
+            .sum::<f64>()
+            / 2.0;
+        assert!((mean_pow - 1.0).abs() < 1e-3);
     }
 
     #[test]

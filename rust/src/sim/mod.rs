@@ -66,7 +66,8 @@ pub use deadline::{DeadlineCtx, DeadlinePolicy, VirtualClock};
 pub use experiment::{Experiment, ExperimentBuilder};
 pub use observer::{JsonlStreamer, ProgressPrinter, RoundObserver};
 pub use policy::{
-    EnergyBudget, LossPlateau, PolicyCtx, PrecisionPolicy, SnrAdaptive, StaticScheme,
+    EnergyBudget, LossPlateau, PolicyCtx, PrecisionPolicy, ProfilingPlanner,
+    RoundFeedback, SnrAdaptive, StaticScheme,
 };
 pub use sweep::{SweepReport, SweepSpec};
 
@@ -188,6 +189,14 @@ impl Session {
         &self.round_channel
     }
 
+    /// Whether the configured aggregator consumes a channel realisation —
+    /// i.e. whether [`channel`](Self::channel) holds THIS round's draw
+    /// after aggregation (an ideal aggregator never draws, so the buffer
+    /// may hold a stale realisation from a previous run of the arena).
+    pub fn needs_channel(&self) -> bool {
+        self.aggregator.needs_channel()
+    }
+
     /// Notify observers that round `t` is starting.
     pub fn begin_round(&mut self, t: usize) {
         for obs in &mut self.observers {
@@ -209,6 +218,45 @@ impl Session {
         if self.aggregator.needs_channel() {
             self.channel_model.draw_into(
                 plane.k(),
+                &mut self.channel_rng,
+                &mut self.round_channel,
+            );
+            for obs in &mut self.observers {
+                obs.on_channel(t, &self.round_channel);
+            }
+        }
+        let mut ctx = AggCtx {
+            channel: &self.round_channel,
+            precisions,
+            noise_rng: &mut self.noise_rng,
+            threads: self.threads,
+            included: None,
+        };
+        let stats = self.aggregator.aggregate_into(plane, &mut ctx, &mut self.scratch);
+        for obs in &mut self.observers {
+            obs.on_aggregate(t, &stats);
+        }
+        stats
+    }
+
+    /// Identity-aware one-shot aggregation: like
+    /// [`aggregate`](Self::aggregate) but the channel is drawn FOR the
+    /// round's selected client identities (`ids`, slot-ordered, aligned
+    /// with the plane rows), so stateful channel models key their
+    /// persistent state by client rather than by slot.  With
+    /// `ids == [0, 1, .., k-1]` (full participation / round-robin) this
+    /// is `aggregate`, instruction for instruction.
+    pub fn aggregate_for(
+        &mut self,
+        t: usize,
+        ids: &[usize],
+        plane: &PayloadPlane,
+        precisions: &[Precision],
+    ) -> AggregateStats {
+        debug_assert_eq!(ids.len(), plane.k());
+        if self.aggregator.needs_channel() {
+            self.channel_model.draw_for(
+                ids,
                 &mut self.channel_rng,
                 &mut self.round_channel,
             );
@@ -281,6 +329,34 @@ impl Session {
             }
         }
         self.aggregator.begin_partial_into(total_k, active_k, n, &mut self.scratch);
+    }
+
+    /// Identity-aware variant of
+    /// [`begin_aggregate_partial`](Self::begin_aggregate_partial): the
+    /// channel is drawn FOR the round's selected client identities
+    /// (`ids`, slot-ordered — one slot per selected client, excluded
+    /// clients included), so stateful channel models key their persistent
+    /// state by client rather than by slot.  With `ids == [0, 1, ..,
+    /// k-1]` this is `begin_aggregate_partial`, instruction for
+    /// instruction.
+    pub fn begin_aggregate_partial_for(
+        &mut self,
+        t: usize,
+        ids: &[usize],
+        active_k: usize,
+        n: usize,
+    ) {
+        if self.aggregator.needs_channel() {
+            self.channel_model.draw_for(
+                ids,
+                &mut self.channel_rng,
+                &mut self.round_channel,
+            );
+            for obs in &mut self.observers {
+                obs.on_channel(t, &self.round_channel);
+            }
+        }
+        self.aggregator.begin_partial_into(ids.len(), active_k, n, &mut self.scratch);
     }
 
     /// Fold one shard — rows `slot0 .. slot0 + shard.k()` of the round,

@@ -12,14 +12,37 @@
 //! [`EnergyBudget`] demotes it as cumulative fleet energy approaches a
 //! cap (the per-round-precision energy accrual in
 //! [`crate::coordinator::ClientState`] is what makes that cap
-//! meaningful).  Custom policies are plain trait impls.
+//! meaningful).  [`ProfilingPlanner`] goes one step further: it
+//! accumulates PER-CLIENT channel/energy/loss profiles in a bounded
+//! id-keyed LRU (fed by [`RoundFeedback`] after each round) and assigns
+//! precision per client rather than fleet-wide.  Custom policies are
+//! plain trait impls.
 
 use anyhow::Result;
 
 use crate::config::{PolicyKind, RunConfig};
 use crate::fl::scheme::{Scheme, SCHEME_LEVELS};
+use crate::fl::IdLru;
 use crate::metrics::RoundRecord;
 use crate::quant::Precision;
+
+/// One finished round's per-participant measurements, fed back to the
+/// policy after aggregation (see
+/// [`PrecisionPolicy::observe_feedback`]).  All slices are slot-aligned
+/// with `ids` (this round's selected client identities).
+pub struct RoundFeedback<'a> {
+    /// 1-based communication round that just finished.
+    pub round: usize,
+    /// Selected client identities, in slot order.
+    pub ids: &'a [usize],
+    /// Per-participant channel amplitude |h| observed this round (1.0
+    /// when the aggregator drew no channel).
+    pub gains: &'a [f32],
+    /// Per-participant energy spent THIS round, in joules.
+    pub energy_j: &'a [f64],
+    /// Per-participant local training loss this round.
+    pub losses: &'a [f64],
+}
 
 /// Everything a policy may consult when assigning the round's precisions.
 pub struct PolicyCtx<'a> {
@@ -40,12 +63,13 @@ pub struct PolicyCtx<'a> {
 /// drawn from [`levels`](Self::levels), and allocates nothing once `out`
 /// has warmed to fleet capacity (the zero-alloc round contract).
 ///
-/// `assign_into` must be a pure function of the policy's configuration
-/// and `ctx` — NOT of how many times it has been called: the coordinator
-/// invokes it once at construction (with `round: 1, prev: None`, to size
-/// the client fleet) and then once per round, so round 1 is assigned
-/// twice.  Derive any "progress" from `ctx.round`/`ctx.prev`, never from
-/// an internal call counter.
+/// Assignment must be a pure function of the policy's configuration and
+/// `ctx` — NOT of how many times it has been called: the coordinator
+/// invokes [`assign_selected_into`](Self::assign_selected_into) once at
+/// construction (with `round: 1, prev: None` and an empty selection, to
+/// validate the configuration) and then once per round, so round 1 is
+/// assigned twice.  Derive any "progress" from `ctx.round`/`ctx.prev`,
+/// never from an internal call counter.
 pub trait PrecisionPolicy {
     /// Fill `out` with one precision per client for this round.
     fn assign_into(&mut self, ctx: &PolicyCtx<'_>, out: &mut Vec<Precision>)
@@ -77,6 +101,15 @@ pub trait PrecisionPolicy {
         }
         Ok(())
     }
+
+    /// Observe one finished round's per-participant measurements.  The
+    /// round loop calls this at most once per round, after aggregation;
+    /// implementations must be idempotent per `fb.round` (key internal
+    /// updates on it) and must not allocate once their per-client state
+    /// has warmed to capacity.  The default ignores feedback — the
+    /// ladder/fleet-wide policies derive everything from
+    /// [`PolicyCtx::prev`].
+    fn observe_feedback(&mut self, _fb: &RoundFeedback<'_>) {}
 
     /// Every level the policy may ever assign — drives artifact warmup and
     /// the end-of-run requantization report.
@@ -490,6 +523,179 @@ impl PrecisionPolicy for EnergyBudget {
     }
 }
 
+/// One client's accumulated profile: channel-gain and loss EWMAs plus
+/// cumulative energy, grown one round at a time from [`RoundFeedback`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Profile {
+    /// EWMA of the observed channel amplitude |h|.
+    pub gain_ewma: f32,
+    /// EWMA of the local training loss.
+    pub loss_ewma: f64,
+    /// Cumulative energy this client has spent, in joules.
+    pub energy_j: f64,
+    /// Rounds this client has been observed in.
+    pub seen: u32,
+}
+
+/// PER-CLIENT profiling planner: the payoff of identity-keyed state.
+///
+/// Where every other built-in assigns one level to the whole fleet, this
+/// policy accumulates a per-client [`Profile`] (channel-gain EWMA,
+/// cumulative energy, loss EWMA) in a bounded id-keyed LRU
+/// ([`crate::fl::IdLru`], memory O(K) like the channel models) and picks
+/// each client's level from ITS OWN effective SNR: a client whose fade or
+/// geometry persistently attenuates its uplink by 20·log10(gain) dB gets
+/// correspondingly fewer bits — precision the receiver noise floor would
+/// destroy anyway — while a well-placed client keeps transmitting rich
+/// payloads.  A positive per-client energy cap additionally demotes
+/// clients that have spent past it one ladder rung (per-client
+/// [`EnergyBudget`], not fleet-averaged).
+///
+/// Unprofiled clients (first selection, or evicted after long absence)
+/// fall back to the configured SNR — exactly [`SnrAdaptive`]'s choice —
+/// so the policy degrades gracefully to the fleet-wide baseline.
+///
+/// Assignment is a pure read of the profiles (the idempotency contract);
+/// all state evolution happens in
+/// [`observe_feedback`](PrecisionPolicy::observe_feedback), keyed on the
+/// feedback round.
+pub struct ProfilingPlanner {
+    /// Candidate levels, descending bits (the full scheme ladder).
+    ladder: Vec<Precision>,
+    /// Per-client-ID profiles — bounded id-keyed LRU (capacity 2·K).
+    profiles: IdLru<Profile>,
+    /// Per-client cumulative energy cap in joules (0 = no cap): a client
+    /// past it is demoted one ladder rung.
+    energy_cap_j: f64,
+    /// Last feedback round folded in (idempotency guard).
+    last_round: usize,
+}
+
+/// EWMA smoothing factor for the per-client gain/loss trackers.
+const PROFILE_EWMA_ALPHA: f64 = 0.25;
+
+impl ProfilingPlanner {
+    /// Planner over the full scheme ladder.  `energy_cap_j <= 0` disables
+    /// the per-client energy demotion.
+    pub fn new(energy_cap_j: f64) -> Self {
+        ProfilingPlanner {
+            ladder: SCHEME_LEVELS.iter().map(|&b| Precision::of(b)).collect(),
+            profiles: IdLru::new(),
+            energy_cap_j,
+            last_round: 0,
+        }
+    }
+
+    /// The accumulated profile of client `id`, if it is resident
+    /// (observed recently enough not to have been evicted).  Read-only —
+    /// does not perturb recency.
+    pub fn profile_for(&self, id: usize) -> Option<&Profile> {
+        self.profiles.get(id)
+    }
+
+    /// Ladder index of the cheapest level still reaching the SNR target
+    /// (the [`SnrAdaptive`] rule).
+    fn base_index(&self, snr_db: f32) -> usize {
+        let target_bits = (snr_db / 6.02).ceil();
+        let mut idx = 0usize;
+        for (i, p) in self.ladder.iter().enumerate() {
+            if (p.bits() as f32) >= target_bits {
+                idx = i;
+            } else {
+                break;
+            }
+        }
+        idx
+    }
+
+    /// This round's level for client `id` — a pure function of the
+    /// resident profiles and `ctx`.
+    fn level_for_id(&self, id: usize, ctx: &PolicyCtx<'_>) -> Precision {
+        let profile = self.profiles.get(id);
+        let eff_snr_db = match profile {
+            // the client's own link: configured SNR shifted by its
+            // observed mean power gain, 20·log10(|h|) dB
+            Some(p) if p.seen > 0 => {
+                ctx.snr_db + 20.0 * p.gain_ewma.max(1e-6).log10()
+            }
+            _ => ctx.snr_db,
+        };
+        let mut idx = self.base_index(eff_snr_db);
+        if let Some(p) = profile {
+            if self.energy_cap_j > 0.0
+                && p.energy_j > self.energy_cap_j
+                && idx + 1 < self.ladder.len()
+            {
+                idx += 1; // over budget: one rung cheaper
+            }
+        }
+        self.ladder[idx]
+    }
+}
+
+impl PrecisionPolicy for ProfilingPlanner {
+    fn assign_into(
+        &mut self,
+        ctx: &PolicyCtx<'_>,
+        out: &mut Vec<Precision>,
+    ) -> Result<()> {
+        out.clear();
+        for id in 0..ctx.clients {
+            out.push(self.level_for_id(id, ctx));
+        }
+        Ok(())
+    }
+
+    fn assign_selected_into(
+        &mut self,
+        ctx: &PolicyCtx<'_>,
+        selected: &[usize],
+        out: &mut Vec<Precision>,
+    ) -> Result<()> {
+        out.clear();
+        for &id in selected {
+            out.push(self.level_for_id(id, ctx));
+        }
+        Ok(())
+    }
+
+    fn observe_feedback(&mut self, fb: &RoundFeedback<'_>) {
+        if fb.round <= self.last_round {
+            return; // already folded in (idempotency per observed round)
+        }
+        self.last_round = fb.round;
+        self.profiles.reserve(2 * fb.ids.len());
+        for (slot, &id) in fb.ids.iter().enumerate() {
+            let gain = fb.gains.get(slot).copied().unwrap_or(1.0);
+            let energy = fb.energy_j.get(slot).copied().unwrap_or(0.0);
+            let loss = fb.losses.get(slot).copied().unwrap_or(0.0);
+            let (ps, fresh, _evicted) =
+                self.profiles.get_or_insert_with(id, Profile::default);
+            let p = self.profiles.value_mut(ps);
+            if fresh {
+                // seed the trackers with the first observation
+                p.gain_ewma = gain;
+                p.loss_ewma = loss;
+            } else {
+                let a = PROFILE_EWMA_ALPHA;
+                p.gain_ewma = ((1.0 - a) * p.gain_ewma as f64 + a * gain as f64) as f32;
+                p.loss_ewma = (1.0 - a) * p.loss_ewma + a * loss;
+            }
+            p.energy_j += energy;
+            p.seen += 1;
+        }
+    }
+
+    fn levels(&self) -> Vec<Precision> {
+        // any client may land anywhere on the ladder
+        self.ladder.clone()
+    }
+
+    fn label(&self) -> String {
+        "profiling".to_string()
+    }
+}
+
 /// The built-in policy named by the config's [`PolicyKind`].
 pub fn from_config(kind: PolicyKind, cfg: &RunConfig) -> Box<dyn PrecisionPolicy> {
     match kind {
@@ -501,6 +707,7 @@ pub fn from_config(kind: PolicyKind, cfg: &RunConfig) -> Box<dyn PrecisionPolicy
             Box::new(LossPlateau::new().with_patience(cfg.plateau_patience))
         }
         PolicyKind::EnergyBudget => Box::new(EnergyBudget::new(cfg.energy_budget_j)),
+        PolicyKind::Profiling => Box::new(ProfilingPlanner::new(cfg.energy_budget_j)),
     }
 }
 
@@ -686,6 +893,8 @@ mod tests {
         cfg.policy = PolicyKind::EnergyBudget;
         cfg.energy_budget_j = 2.5;
         assert_eq!(from_config(cfg.policy, &cfg).label(), "energy-budget/2.5J");
+        cfg.policy = PolicyKind::Profiling;
+        assert_eq!(from_config(cfg.policy, &cfg).label(), "profiling");
     }
 
     #[test]
@@ -707,6 +916,9 @@ mod tests {
             Box::new(|| -> Box<dyn PrecisionPolicy> {
                 Box::new(EnergyBudget::new(0.5))
             }),
+            Box::new(|| -> Box<dyn PrecisionPolicy> {
+                Box::new(ProfilingPlanner::new(0.5))
+            }),
         ];
         for make in &mk {
             let mut fleet_pol = make();
@@ -722,8 +934,71 @@ mod tests {
                 let want: Vec<Precision> =
                     selected.iter().map(|&k| fleet[k]).collect();
                 assert_eq!(sel, want, "{} round {t}", fleet_pol.label());
+                // identical per-round feedback to both instances, so
+                // profile-driven policies stay gather-consistent too
+                let gains = [2.0f32, 1.0, 0.4, 0.05, 1.5];
+                let energy = [0.1f64 * t as f64; 5];
+                let losses = [1.0 / t as f64; 5];
+                let fb = RoundFeedback {
+                    round: t,
+                    ids: &selected,
+                    gains: &gains,
+                    energy_j: &energy,
+                    losses: &losses,
+                };
+                fleet_pol.observe_feedback(&fb);
+                sel_pol.observe_feedback(&fb);
             }
         }
+    }
+
+    #[test]
+    fn profiling_planner_assigns_per_client_from_observed_gains() {
+        let mut p = ProfilingPlanner::new(0.0);
+        let mut out = Vec::new();
+        // unprofiled: everyone at the SnrAdaptive baseline (20 dB -> 4 bit)
+        p.assign_selected_into(&ctx(1, 10, 20.0), &[3, 6], &mut out).unwrap();
+        assert_eq!(out, vec![Precision::of(4); 2]);
+        // observe: client 3 has a strong link (|h| = 10 -> +20 dB), client
+        // 6 a deeply attenuated one (|h| = 0.01 -> -40 dB)
+        let fb = RoundFeedback {
+            round: 1,
+            ids: &[3, 6],
+            gains: &[10.0, 0.01],
+            energy_j: &[0.0, 0.0],
+            losses: &[0.5, 0.5],
+        };
+        p.observe_feedback(&fb);
+        // idempotent per observed round
+        p.observe_feedback(&fb);
+        assert_eq!(p.profile_for(3).unwrap().seen, 1);
+        assert_eq!(p.profile_for(9), None);
+        // 20 + 20 = 40 dB -> 8-bit; 20 - 40 dB < 0 -> cheapest; id 9 is
+        // unprofiled -> baseline.  DIFFERENT levels in the same round:
+        // the per-client assignment no fleet-wide policy can express.
+        p.assign_selected_into(&ctx(2, 10, 20.0), &[3, 6, 9], &mut out).unwrap();
+        let bits: Vec<u8> = out.iter().map(|p| p.bits()).collect();
+        assert_eq!(bits, vec![8, 4, 4]);
+        assert_eq!(p.label(), "profiling");
+        assert_eq!(p.levels().len(), SCHEME_LEVELS.len());
+    }
+
+    #[test]
+    fn profiling_planner_energy_cap_demotes_overspenders() {
+        let mut p = ProfilingPlanner::new(1.0);
+        let mut out = Vec::new();
+        let fb = RoundFeedback {
+            round: 1,
+            ids: &[0, 1],
+            gains: &[1.0, 1.0],
+            energy_j: &[2.0, 0.1],
+            losses: &[0.0, 0.0],
+        };
+        p.observe_feedback(&fb);
+        // 45 dB baseline is 8-bit; client 0 blew its 1 J cap -> 6-bit
+        p.assign_selected_into(&ctx(2, 4, 45.0), &[0, 1], &mut out).unwrap();
+        let bits: Vec<u8> = out.iter().map(|p| p.bits()).collect();
+        assert_eq!(bits, vec![6, 8]);
     }
 
     #[test]

@@ -68,7 +68,10 @@ use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::tensor;
 
-use super::{aggregator, channel_model, policy, Arena, Experiment, PolicyCtx, Session};
+use super::{
+    aggregator, channel_model, policy, Arena, Experiment, PolicyCtx,
+    RoundFeedback, Session,
+};
 
 /// One cell's grid coordinates, in canonical axis order: scheme, SNR,
 /// aggregation, channel model, policy, fleet, shard size, deadline,
@@ -461,6 +464,11 @@ struct CellBufs {
     /// Round-slot participation mask (deadline/dropout exclusion).
     included: Vec<bool>,
     ideal: Vec<f32>,
+    /// Per-participant |h| for the policy feedback (profiling planner).
+    gains: Vec<f32>,
+    /// All-zero f64 scratch passed as the feedback's energy AND loss
+    /// slices (channel-only cells train nothing and spend nothing).
+    zeros: Vec<f64>,
 }
 
 impl Default for CellBufs {
@@ -474,6 +482,8 @@ impl Default for CellBufs {
             assigned: Vec::new(),
             included: Vec::new(),
             ideal: Vec::new(),
+            gains: Vec::new(),
+            zeros: Vec::new(),
         }
     }
 }
@@ -673,7 +683,10 @@ fn channel_cell(
         bufs.ideal.resize(n, 0.0);
         bufs.ideal.fill(0.0);
         let f = if active_k > 0 { 1.0f32 / active_k as f32 } else { 0.0 };
-        session.begin_aggregate_partial(t, kk, active_k, n);
+        // identity-aware draw: stateful channel models (gauss-markov
+        // fading memory, path-loss geometry) follow the SELECTED client
+        // ids, not the round slots — same RNG consumption either way
+        session.begin_aggregate_partial_for(t, &bufs.selected, active_k, n);
         if pipelined {
             // mirror the coordinator's pipelined round engine: each step
             // is ONE two-task dispatch — task 0 superposes the previous
@@ -776,6 +789,29 @@ fn channel_cell(
         let stats = session.finalize_aggregate(t, &bufs.assigned);
         // round boundary for the overlap registry (debug builds only)
         crate::exec::assert_quiescent();
+        // per-round policy feedback, keyed by the selected identities:
+        // |h| from the round's realisation when one was drawn; energy and
+        // loss stay zero (channel-only cells train nothing).  The default
+        // policies no-op; the profiling planner accumulates its per-id
+        // channel history from exactly this stream.
+        {
+            let ch = session.channel();
+            let have_ch = session.needs_channel() && ch.clients.len() == kk;
+            bufs.gains.clear();
+            for slot in 0..kk {
+                bufs.gains
+                    .push(if have_ch { ch.clients[slot].h.abs() } else { 1.0 });
+            }
+            bufs.zeros.clear();
+            bufs.zeros.resize(kk, 0.0);
+            pol.observe_feedback(&RoundFeedback {
+                round: t,
+                ids: &bufs.selected,
+                gains: &bufs.gains,
+                energy_j: &bufs.zeros,
+                losses: &bufs.zeros,
+            });
+        }
         if stats.participants > 0 {
             mse_sum += tensor::mse(session.result(), &bufs.ideal);
         } else {

@@ -12,10 +12,17 @@
 //!   against the Rayleigh CDF `F(x) = 1 - exp(-x²)` (unit-power, σ=1/√2);
 //! * `Selection::SampledK` (Floyd's algorithm) selects each client with
 //!   equal frequency — a chi-square uniformity bound over ≥ 20k rounds;
+//! * persistent channel state follows the CLIENT IDENTITY through random
+//!   selection, never the participant slot: under `SampledK` a far
+//!   [`PathLossGeometry`] client stays persistently weak (its empirical
+//!   power matches its OWN site gain), and each [`GaussMarkov`] client's
+//!   lag-1 autocorrelation matches its OWN ρ — both fail on slot-keyed
+//!   state, which averages every client toward the fleet mean;
 //! * a 1,000,000-client fleet's sharded round loop materializes only
 //!   O(K + shard·n) state — asserted with a per-THREAD counting
 //!   allocator (a fleet-sized `Vec` of anything would blow the byte
-//!   budget by 10×), and zero allocations once warm.
+//!   budget by 10×), and zero allocations once warm — including the
+//!   id-keyed stateful-channel path (bounded LRU, capacity 2·K).
 //!
 //! Everything is seeded, so each test is deterministic: the tolerances
 //! are several standard errors wide at these sample sizes, and a seed
@@ -357,6 +364,142 @@ fn sampled_k_selection_frequency_is_uniform() {
 }
 
 #[test]
+fn path_loss_far_client_stays_weak_under_sampled_k() {
+    // THE slot-aliasing regression: persistent channel state must follow
+    // the client IDENTITY, not the participant slot.  Slot-keyed geometry
+    // hands site k to whichever client lands in slot k this round, so
+    // under random selection every client's long-run received power
+    // averages over ALL sites and the fleet looks artificially
+    // homogeneous.  Id-keyed geometry keeps a far client persistently
+    // weak, whichever slot it occupies.
+    //
+    // Drive PathLossGeometry with SampledK(8) of 16 for 500 rounds and
+    // check every client's empirical mean power against its OWN site
+    // power gain.  |h|²/amp² is Exp(1) per observation and each client is
+    // observed ~250 times (SE ≤ 0.082 at the ≥ 150 floor we assert), so
+    // the [0.5, 1.6] ratio window is > 6 standard errors wide — while
+    // under slot keying the extreme-site clients' ratios collapse toward
+    // 1/gain², far outside the window for any cohort with ≥ 4× gain
+    // spread (the default α = 3 over a 10..100 m disc plus 6 dB
+    // shadowing gives much more).
+    let n = 16usize;
+    let k = 8usize;
+    let rounds = 500usize;
+    let mut cfg = ChannelConfig::default();
+    cfg.model = FadingKind::PathLoss;
+    cfg.perfect_csi = true;
+    let mut model = PathLossGeometry::new(cfg);
+    let sel = Selection::SampledK(k);
+    let mut sel_rng = Rng::seed_from(8100);
+    let mut ch_rng = Rng::seed_from(8200);
+    let mut rc = RoundChannel::empty();
+    let mut selected: Vec<usize> = Vec::new();
+    let mut pow = vec![0.0f64; n];
+    let mut obs = vec![0u64; n];
+    for t in 1..=rounds {
+        sel.select_into(n, t, &mut sel_rng, &mut selected);
+        model.draw_for(&selected, &mut ch_rng, &mut rc);
+        for (slot, &id) in selected.iter().enumerate() {
+            pow[id] += rc.clients[slot].h.norm_sq() as f64;
+            obs[id] += 1;
+        }
+    }
+    // capacity 2·K = 16 = N: nobody is ever evicted, every site resident
+    let mut gain_lo = (f64::INFINITY, 0usize);
+    let mut gain_hi = (0.0f64, 0usize);
+    let mut emp = vec![0.0f64; n];
+    for id in 0..n {
+        assert!(obs[id] >= 150, "client {id} observed only {} times", obs[id]);
+        let amp = model.site_for(id).expect("capacity 2K keeps N=16 resident").amp
+            as f64;
+        let gain = amp * amp;
+        emp[id] = pow[id] / obs[id] as f64;
+        let ratio = emp[id] / gain;
+        assert!(
+            (0.5..=1.6).contains(&ratio),
+            "client {id}: empirical power {:.3} vs own site gain² {gain:.3} \
+             (ratio {ratio:.2}) — channel state slot-aliased?",
+            emp[id]
+        );
+        if gain < gain_lo.0 {
+            gain_lo = (gain, id);
+        }
+        if gain > gain_hi.0 {
+            gain_hi = (gain, id);
+        }
+    }
+    // the geometry really is asymmetric at this seed…
+    let geo_spread = gain_hi.0 / gain_lo.0;
+    assert!(geo_spread > 4.0, "site gain spread {geo_spread:.2} too flat");
+    // …and the EMPIRICAL spread tracks it: the far client's received
+    // power stays persistently below the near client's by (almost) the
+    // full geometric ratio — slot-keyed state would flatten this to ~1.
+    let emp_spread = emp[gain_hi.1] / emp[gain_lo.1];
+    assert!(
+        emp_spread > geo_spread * 0.3,
+        "near/far empirical spread {emp_spread:.2} vs geometric \
+         {geo_spread:.2} — far client not persistently weak?"
+    );
+}
+
+#[test]
+fn gauss_markov_acf_follows_client_id_under_sampled_k() {
+    // Companion slot-aliasing regression for the TIME axis: each selected
+    // client advances its OWN AR(1) chain by one step per participation,
+    // so the lag-1 autocorrelation over one client's consecutive
+    // observations is that client's ρ — whichever slots it occupied.
+    // Slot-keyed state splices different clients' chains together and
+    // drags every per-client ACF toward a selection-averaged value.
+    //
+    // SampledK(4) of 8 for 6000 rounds: each client is observed ~3000
+    // times (~3000 consecutive pairs; we assert ≥ 2000), so the ratio
+    // estimator's standard error is ≤ √((1−ρ²)/2000) ≤ 0.023 and the
+    // 0.1 tolerance is > 4σ — while the per-client ρs below span
+    // 0.05..0.9, far more than 0.1 apart.
+    let n = 8usize;
+    let k = 4usize;
+    let rounds = 6000usize;
+    let rhos = vec![0.05f32, 0.9, 0.3, 0.7, 0.15, 0.8, 0.45, 0.6];
+    let mut cfg = ChannelConfig::default();
+    cfg.perfect_csi = true;
+    let mut model = GaussMarkov::with_rhos(cfg, rhos.clone());
+    let sel = Selection::SampledK(k);
+    let mut sel_rng = Rng::seed_from(8300);
+    let mut ch_rng = Rng::seed_from(8400);
+    let mut rc = RoundChannel::empty();
+    let mut selected: Vec<usize> = Vec::new();
+    let mut prev: Vec<Option<C32>> = vec![None; n];
+    let mut num = vec![0.0f64; n];
+    let mut den = vec![0.0f64; n];
+    let mut pairs = vec![0u64; n];
+    for t in 1..=rounds {
+        sel.select_into(n, t, &mut sel_rng, &mut selected);
+        model.draw_for(&selected, &mut ch_rng, &mut rc);
+        for (slot, &id) in selected.iter().enumerate() {
+            let h = rc.clients[slot].h;
+            if let Some(p) = prev[id] {
+                // Re(h(t)·h*(t_prev)) over |h(t_prev)|²: conditional on
+                // the previous observation, E[Re(h·p*)] = ρ·|p|²
+                num[id] += (h.re * p.re + h.im * p.im) as f64;
+                den[id] += p.norm_sq() as f64;
+                pairs[id] += 1;
+            }
+            prev[id] = Some(h);
+        }
+    }
+    for id in 0..n {
+        assert!(pairs[id] >= 2000, "client {id}: only {} pairs", pairs[id]);
+        let acf = num[id] / den[id];
+        assert!(
+            (acf - rhos[id] as f64).abs() < 0.1,
+            "client {id}: lag-1 ACF {acf:.3} vs own rho {} — \
+             AR(1) state slot-aliased?",
+            rhos[id]
+        );
+    }
+}
+
+#[test]
 fn million_client_fleet_round_state_is_o_shard_not_o_fleet() {
     // A full sharded channel-only round loop over a 1,000,000-client
     // fleet: SampledK selection (O(K) state), per-participant policy
@@ -467,6 +610,99 @@ fn million_client_fleet_round_state_is_o_shard_not_o_fleet() {
     assert_eq!(
         warm, 0,
         "steady-state 1M-fleet sharded rounds allocated {warm} times"
+    );
+}
+
+#[test]
+fn million_client_fleet_id_keyed_channel_state_is_o_k() {
+    // The id-keyed sibling of the test above: a STATEFUL channel model
+    // (GaussMarkov, per-client AR(1) memory) driven through the
+    // identity-aware `begin_aggregate_partial_for` entry over a
+    // 1,000,000-client fleet.  The model's per-client state lives in a
+    // bounded id-keyed LRU of capacity 2·K = 128 — so (a) the cold start
+    // stays under 1 MB (fleet-keyed state would need megabytes for 1M
+    // clients), and (b) warm rounds allocate NOTHING even though every
+    // round materializes ~K never-seen client ids: at capacity the LRU
+    // recycles the least-recently-used slot in place.
+    const FLEET: usize = 1_000_000;
+    const KSEL: usize = 64;
+    const SHARD: usize = 16;
+    const N: usize = 2048;
+
+    TRACKING.with(|t| t.set(true));
+    let base_allocs = THREAD_ALLOCS.with(|c| c.get());
+    let base_bytes = THREAD_BYTES.with(|c| c.get());
+
+    let root = Rng::seed_from(9100);
+    let mut select_rng = root.stream("select");
+    let mut payload_rng = root.stream("payload");
+    let mut cfg = ChannelConfig::default();
+    cfg.rho = 0.9;
+    let mut session = Session::new(
+        Box::new(GaussMarkov::new(cfg)),
+        Box::new(AnalogOta),
+        root.stream("channel"),
+        root.stream("noise"),
+        1,
+    );
+    let mut policy = StaticScheme::new(Scheme::parse("16,8").unwrap());
+    let selection = Selection::SampledK(KSEL);
+    let mut selected: Vec<usize> = Vec::new();
+    let mut assigned = Vec::new();
+    let mut plane = PayloadPlane::new();
+
+    let mut round = |t: usize| {
+        selection.select_into(FLEET, t, &mut select_rng, &mut selected);
+        let kk = selected.len();
+        policy
+            .assign_selected_into(
+                &PolicyCtx { round: t, clients: FLEET, snr_db: 20.0, prev: None },
+                &selected[..],
+                &mut assigned,
+            )
+            .unwrap();
+        session.begin_aggregate_partial_for(t, &selected, kk, N);
+        let mut lo = 0usize;
+        while lo < kk {
+            let hi = (lo + SHARD).min(kk);
+            plane.reset(hi - lo, N);
+            for r in 0..(hi - lo) {
+                let row = plane.row_mut(r);
+                payload_rng.fill_normal(row, 0.0, 1.0);
+                quant::fake_quant_inplace(row, assigned[lo + r]);
+            }
+            session.accumulate_shard(&plane, lo, &assigned[lo..hi]);
+            lo = hi;
+        }
+        let stats = session.finalize_aggregate(t, &assigned[..]);
+        assert!(stats.participants <= KSEL);
+        std::hint::black_box(stats.participants);
+    };
+
+    // cold start: LRU + every buffer grows to capacity
+    for t in 1..=3 {
+        round(t);
+    }
+    let cold_bytes = THREAD_BYTES.with(|c| c.get()) - base_bytes;
+    let cold_allocs = THREAD_ALLOCS.with(|c| c.get()) - base_allocs;
+    assert!(
+        cold_bytes < 1 << 20,
+        "cold start allocated {cold_bytes} bytes over {cold_allocs} allocations \
+         — fleet-keyed channel state materialized?"
+    );
+
+    // warm rounds: fresh ids keep arriving (64-of-1M reselection is
+    // vanishingly unlikely), yet the in-place LRU recycling keeps the
+    // loop allocation-free
+    let warm_before = THREAD_ALLOCS.with(|c| c.get());
+    for t in 4..=24 {
+        round(t);
+    }
+    let warm = THREAD_ALLOCS.with(|c| c.get()) - warm_before;
+    TRACKING.with(|t| t.set(false));
+    assert_eq!(
+        warm, 0,
+        "steady-state id-keyed stateful-channel rounds allocated {warm} times"
     );
 }
 

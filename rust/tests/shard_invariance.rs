@@ -259,6 +259,90 @@ fn sampled_selection_runs_are_shard_invariant_too() {
 }
 
 #[test]
+fn id_keyed_channel_state_runs_are_invariant_across_every_axis() {
+    // The client-identity pin, cross-axis: under SampledK (K < N) the
+    // STATEFUL channel models key their per-client memory (AR(1) fades,
+    // geometry sites) by client id in a bounded LRU, and the lazy
+    // ClientFleet materializes clients on first selection.  None of that
+    // may depend on HOW the round is scheduled: pipeline_depth ×
+    // shard_size × threads × workers all reproduce the serial unsharded
+    // trajectory bit for bit, per channel model.  (Slot-keyed state
+    // passed this family only under full participation, where slot == id
+    // hides the aliasing; K < N with persistent state is exactly the
+    // regime the id-keying fix exists for.)
+    let dir = mock_artifacts_dir("shardinv_idkeyed");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    let mk = |model: FadingKind, depth: usize, shard: usize, threads: usize, workers: usize| {
+        let mut cfg = base_cfg(model, &dir);
+        cfg.clients = 12;
+        cfg.clients_per_round = 4;
+        cfg.rounds = 5; // enough rounds that ids re-enter in new slots
+        cfg.selection = SelectionKind::Sampled;
+        cfg.pipeline_depth = depth;
+        cfg.shard_size = shard;
+        cfg.threads = threads;
+        cfg.workers = workers;
+        cfg
+    };
+    for model in [FadingKind::GaussMarkov, FadingKind::PathLoss] {
+        let reference = run(mk(model, 0, 0, 1, 1), rt.clone());
+        assert_eq!(reference.1.log.rounds.len(), 5);
+        for depth in [0usize, 2] {
+            for shard in [1usize, 3] {
+                for (threads, workers) in [(1usize, 4usize), (4, 4)] {
+                    let got = run(mk(model, depth, shard, threads, workers), rt.clone());
+                    assert_trajectories_equal(
+                        &format!(
+                            "{model:?} depth={depth} shard={shard} \
+                             threads={threads} workers={workers}"
+                        ),
+                        &reference,
+                        &got,
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn profiling_policy_feedback_is_schedule_invariant() {
+    // The ProfilingPlanner folds per-round feedback (per-client channel
+    // gains, energy spend, local losses) into its history — all of it
+    // assembled AFTER the round's client phase from id-keyed state.  The
+    // planner's precision decisions (and hence the whole trajectory) must
+    // be identical across scheduling axes, or feedback would be reading
+    // schedule-dependent state.
+    let dir = mock_artifacts_dir("shardinv_profiling");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    let mk = |depth: usize, shard: usize, workers: usize| {
+        let mut cfg = base_cfg(FadingKind::GaussMarkov, &dir);
+        cfg.clients = 12;
+        cfg.clients_per_round = 4;
+        cfg.rounds = 5;
+        cfg.selection = SelectionKind::Sampled;
+        cfg.policy = mpota::config::PolicyKind::Profiling;
+        cfg.pipeline_depth = depth;
+        cfg.shard_size = shard;
+        cfg.workers = workers;
+        cfg
+    };
+    let reference = run(mk(0, 0, 1), rt.clone());
+    for depth in [0usize, 2] {
+        for shard in [1usize, 3] {
+            for workers in [1usize, 4] {
+                let got = run(mk(depth, shard, workers), rt.clone());
+                assert_trajectories_equal(
+                    &format!("profiling depth={depth} shard={shard} workers={workers}"),
+                    &reference,
+                    &got,
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn shard_size_larger_than_k_is_one_shard() {
     // shard_size > K clamps to one whole-round shard — same trajectory
     let dir = mock_artifacts_dir("shardinv_clamp");
