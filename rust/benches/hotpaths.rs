@@ -17,6 +17,8 @@
 //!     super-shard t+1 overlapping superposition of super-shard t)
 //!   * id-keyed stateful channel draws (all-resident slot==id hits vs a
 //!     constantly-evicting Floyd-sampled 64-of-1M `draw_for`)
+//!   * bit-packed payload transport (PR-9: f32-staged fused superpose vs
+//!     the unpack-fuse-superpose packed kernel at 4/8/16-bit widths)
 //!   * PJRT train-step + eval dispatch (artifacts + `pjrt` feature only)
 //!
 //! Run: `cargo bench --bench hotpaths`
@@ -27,10 +29,10 @@
 
 use std::time::Instant;
 
-use mpota::channel::{ChannelConfig, RoundChannel};
+use mpota::channel::{ChannelConfig, RoundChannel, C32};
 use mpota::fl::Selection;
 use mpota::json::Value;
-use mpota::kernels::{par, PayloadPlane};
+use mpota::kernels::{fused, par, PackedPlane, PayloadPlane};
 use mpota::ota::{self, analog::OtaScratch};
 use mpota::quant::{self, Precision, Rounding};
 use mpota::rng::Rng;
@@ -605,6 +607,71 @@ fn main() {
         (serial, pipelined)
     };
 
+    // --- packed planes: bit-packed transport vs f32 staging (PR-9) ---------
+    // K = 64 uniform-width rows at the flagship payload size.  Baseline:
+    // fake-quantize every row into an f32 plane and run the fused f32
+    // superpose — what the packed-off transport streams.  Contender: pack
+    // the SAME raw rows and run the unpack-fuse-superpose kernel over the
+    // packed words.  The two paths are bit-identical by construction
+    // (pinned in tests/packed_plane.rs), so the speedup is pure memory
+    // traffic: a 4-bit row moves 1/8th of the bytes of its f32 form.
+    let packed_pairs = {
+        let pk = 64usize;
+        let mut prng = root.stream("packed-bench");
+        let mut raw = PayloadPlane::zeros(pk, n);
+        for r in 0..pk {
+            prng.fill_normal(raw.row_mut(r), 0.0, 1.0);
+        }
+        // all rows active, unit-magnitude rotating gains
+        let active: Vec<(usize, C32)> =
+            (0..pk).map(|r| (r, C32::from_polar(1.0, 0.37 * r as f32))).collect();
+        let mut y_re = vec![0.0f32; n];
+        let mut y_im = vec![0.0f32; n];
+        let mut ideal = vec![0.0f32; n];
+        let mut fq_plane = PayloadPlane::zeros(pk, n);
+        let mut packed = PackedPlane::new();
+        let mut pairs: Vec<(u8, f64, f64, usize)> = Vec::new();
+        for bits in [4u8, 8, 16] {
+            let p = Precision::of(bits);
+            let precisions = vec![p; pk];
+            // stage both transports from the same raw rows
+            packed.reset(&precisions, n);
+            for r in 0..pk {
+                let row = fq_plane.row_mut(r);
+                row.copy_from_slice(raw.row(r));
+                quant::fake_quant_inplace(row, p);
+                packed.pack_row(r, raw.row(r));
+            }
+            let base = res.bench(
+                &format!("superpose f32-staged {bits}-bit rows (K=64)"),
+                pk * n * 4,
+                || {
+                    y_re.fill(0.0);
+                    y_im.fill(0.0);
+                    ideal.fill(0.0);
+                    fused::superpose(&fq_plane, &active, &mut y_re, &mut y_im, &mut ideal, 1);
+                    std::hint::black_box((&y_re, &y_im, &ideal));
+                },
+            );
+            let pk_bytes: usize = (0..pk).map(|r| packed.row_bytes(r)).sum();
+            let pkd = res.bench(
+                &format!("superpose bit-packed {bits}-bit rows (K=64)"),
+                pk_bytes,
+                || {
+                    y_re.fill(0.0);
+                    y_im.fill(0.0);
+                    ideal.fill(0.0);
+                    fused::superpose_packed(
+                        &packed, &active, &mut y_re, &mut y_im, &mut ideal, 1,
+                    );
+                    std::hint::black_box((&y_re, &y_im, &ideal));
+                },
+            );
+            pairs.push((bits, base, pkd, packed.row_bytes(0)));
+        }
+        pairs
+    };
+
     // --- PJRT dispatch (needs artifacts + the pjrt feature) ----------------
     let dir = std::path::PathBuf::from("artifacts");
     if cfg!(feature = "pjrt") && dir.join("manifest.json").exists() {
@@ -666,6 +733,9 @@ fn main() {
     speedup(&mut speedups, "fleet_scaling_k1000000", fleet_dense, fleet_sharded);
     speedup(&mut speedups, "fleet_round_id_lru", idlru_hit, idlru_miss);
     speedup(&mut speedups, "pipelined_vs_serial_round", round_serial, round_pipelined);
+    for &(bits, base, pkd, _) in &packed_pairs {
+        speedup(&mut speedups, &format!("packed_superpose_{bits}bit_vs_f32"), base, pkd);
+    }
     if let Some(t) = cp_wn {
         let cp_workers = ncpu.min(k);
         speedup(
@@ -678,6 +748,13 @@ fn main() {
 
     let mut doc = res.to_json(k, n, ncpu);
     doc.set("speedups", speedups);
+    // packed storage footprint at the flagship payload size (bytes/row)
+    let mut bytes_row = Value::object();
+    bytes_row.set("f32", Value::Num((n * 4) as f64));
+    for &(bits, _, _, b) in &packed_pairs {
+        bytes_row.set(&format!("{bits}bit"), Value::Num(b as f64));
+    }
+    doc.set("packed_plane_bytes_per_row", bytes_row);
     let path = std::env::var("MPOTA_BENCH_JSON").unwrap_or_else(|_| {
         // cargo runs benches with CWD = package root (rust/); the perf
         // trajectory file lives at the repo root next to ROADMAP.md

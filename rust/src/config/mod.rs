@@ -254,6 +254,15 @@ pub struct RunConfig {
     /// are bit-identical per seed at every depth
     /// (`rust/tests/shard_invariance.rs`).
     pub pipeline_depth: usize,
+    /// Bit-packed transport planes: stage each streaming shard as a
+    /// [`crate::kernels::PackedPlane`] — every row stored at its assigned
+    /// precision (4-bit rows cost 4 bits/value) — and fold it through the
+    /// packed fused kernels, which decode codes inline during
+    /// superposition.  On by default; results are bit-identical to the
+    /// f32 staging path (`decode(pack(x)) == fake_quant(x)` exactly), so
+    /// this is purely a memory-traffic/bandwidth optimization.  `false`
+    /// restores the f32 transport plane.
+    pub packed_planes: bool,
     /// Per-round transmission deadline in virtual seconds; a selected
     /// client whose simulated latency (precision-dependent compute time +
     /// channel slot time) exceeds it is excluded from the superposition
@@ -333,6 +342,7 @@ impl Default for RunConfig {
             selection: SelectionKind::Auto,
             shard_size: 0,
             pipeline_depth: 0,
+            packed_planes: true,
             deadline_s: 0.0,
             compute_s: 0.05,
             latency_jitter: 0.25,
@@ -467,6 +477,7 @@ impl RunConfig {
                 "selection" => self.selection = val.as_str()?.parse()?,
                 "shard_size" => self.shard_size = val.as_usize()?,
                 "pipeline_depth" => self.pipeline_depth = val.as_usize()?,
+                "packed_planes" => self.packed_planes = val.as_bool()?,
                 "deadline_s" => self.deadline_s = val.as_f64()?,
                 "compute_s" => self.compute_s = val.as_f64()?,
                 "latency_jitter" => self.latency_jitter = val.as_f64()?,
@@ -533,6 +544,7 @@ impl RunConfig {
         o.set("selection", Value::Str(self.selection.to_string()));
         o.set("shard_size", Value::Num(self.shard_size as f64));
         o.set("pipeline_depth", Value::Num(self.pipeline_depth as f64));
+        o.set("packed_planes", Value::Bool(self.packed_planes));
         o.set("deadline_s", Value::Num(self.deadline_s));
         o.set("compute_s", Value::Num(self.compute_s));
         o.set("latency_jitter", Value::Num(self.latency_jitter));
@@ -612,7 +624,8 @@ mod tests {
         let mut c = RunConfig::default();
         let v = json::parse(
             r#"{"rounds": 7, "scheme": "8,8,8", "snr_db": 12.5,
-                "aggregation": "digital", "perfect_csi": true}"#,
+                "aggregation": "digital", "perfect_csi": true,
+                "packed_planes": false}"#,
         )
         .unwrap();
         c.apply_json(&v).unwrap();
@@ -621,6 +634,7 @@ mod tests {
         assert_eq!(c.channel.snr_db, 12.5);
         assert_eq!(c.aggregation, Aggregation::Digital);
         assert!(c.channel.perfect_csi);
+        assert!(!c.packed_planes, "packed_planes default is on; override off");
     }
 
     #[test]
@@ -654,6 +668,7 @@ mod tests {
         c.selection = SelectionKind::Sampled;
         c.shard_size = 4;
         c.pipeline_depth = 2;
+        c.packed_planes = false; // off its default (true)
         c.deadline_s = 0.5;
         c.compute_s = 0.1;
         c.latency_jitter = 0.5;

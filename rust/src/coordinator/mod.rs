@@ -92,7 +92,7 @@ use crate::data::Dataset;
 use crate::energy;
 use crate::exec;
 use crate::fl::Selection;
-use crate::kernels::{par, PayloadPlane};
+use crate::kernels::{par, PackedPlane, PayloadPlane};
 use crate::metrics::{RoundRecord, RunLog};
 use crate::quant::{self, Precision};
 use crate::rng::Rng;
@@ -123,6 +123,14 @@ pub struct RoundScratch {
     /// the next super-shard trains into this one.  Unused (never grown)
     /// when `pipeline_depth == 0`.
     pub(crate) plane2: PayloadPlane,
+    /// Bit-packed transport staging buffer (`RunConfig::packed_planes`):
+    /// each trained shard's included rows are packed here at their
+    /// assigned precision immediately before accumulation, so the
+    /// aggregators fold codes instead of f32 rows.  ONE buffer suffices
+    /// even in the pipelined engine — staging and superposition both
+    /// happen inside the dispatch's single session-touching task.  Never
+    /// grown when packed transport is off.
+    pub(crate) packed: PackedPlane,
     /// Round-slot participation mask (aligned with `precisions`): `true`
     /// = the client makes the deadline and transmits.  All-true when no
     /// deadline/dropout policy is active; excluded slots skip training
@@ -229,6 +237,47 @@ fn run_client_slots<S: exec::TrainStep + ?Sized>(
                 return;
             }
         }
+    }
+}
+
+/// Transmission staging, f32 form: fake-quantize each included row of a
+/// trained shard to its assigned precision in place — what the client
+/// radio actually puts on the air.  Excluded rows hold stale data and are
+/// never read downstream, so they are skipped here too.
+fn stage_quant_shard(
+    plane: &mut PayloadPlane,
+    precisions: &[Precision],
+    included: Option<&[bool]>,
+) {
+    debug_assert_eq!(plane.k(), precisions.len());
+    for r in 0..plane.k() {
+        if included.map_or(false, |m| !m[r]) {
+            continue;
+        }
+        quant::fake_quant_inplace(plane.row_mut(r), precisions[r]);
+    }
+}
+
+/// Transmission staging, packed form: pack each included row's RAW values
+/// into the bit-packed plane at its assigned precision.  The stored codes
+/// decode to exactly `fake_quant(row)` bit-for-bit, so the two staging
+/// forms feed the aggregators identical per-element contributions —
+/// `packed_planes` on/off is a pure storage choice
+/// (`rust/tests/shard_invariance.rs` pins the trajectories against each
+/// other).
+fn stage_pack_shard(
+    packed: &mut PackedPlane,
+    plane: &PayloadPlane,
+    precisions: &[Precision],
+    included: Option<&[bool]>,
+) {
+    debug_assert_eq!(plane.k(), precisions.len());
+    packed.reset(precisions, plane.n());
+    for r in 0..plane.k() {
+        if included.map_or(false, |m| !m[r]) {
+            continue; // stale words: the masked kernels never decode them
+        }
+        packed.pack_row(r, plane.row(r));
     }
 }
 
@@ -533,6 +582,20 @@ impl Coordinator {
         }
         let straggler_on = self.deadline.is_some();
 
+        // Transmission staging for built-in streaming rounds: each
+        // trained shard is quantized to its assigned precisions before it
+        // hits the air.  `packed_on` stages rows as bit-packed codes and
+        // folds them through the packed kernel protocol; otherwise the
+        // rows are fake-quantized in place.  The two are bit-identical
+        // (`decode(pack(x)) == fake_quant(x)` exactly —
+        // `rust/tests/shard_invariance.rs` pins the trajectories against
+        // each other).  Injected aggregators keep the historical raw-row
+        // plane.
+        let packed_on = self.cfg.packed_planes
+            && self.streaming_builtin
+            && self.session.supports_packed();
+        let stage_fq = self.streaming_builtin && !packed_on;
+
         // Steps 1-4, streamed in shards: each shard of selected clients
         // trains (partitioned across the exec pool when `cfg.workers >
         // 1`) into a small reusable payload plane which is immediately
@@ -567,22 +630,53 @@ impl Coordinator {
                 && pool.max_workers() > 0
                 && !exec::must_inline();
             if pipelined {
-                self.pipelined_shards(kk, shard_len, threads)?;
+                self.pipelined_shards(kk, shard_len, threads, packed_on, stage_fq)?;
             } else {
                 let mut lo = 0usize;
                 while lo < kk {
                     let hi = (lo + shard_len).min(kk);
                     self.client_phase(lo, hi, threads)?;
-                    self.session.accumulate_shard_masked(
-                        &self.scratch.plane,
-                        lo,
-                        &self.scratch.precisions[lo..hi],
-                        if straggler_on {
-                            Some(&self.scratch.included[lo..hi])
+                    // transmission staging: quantize or bit-pack the
+                    // trained rows at their assigned precisions
+                    {
+                        let RoundScratch {
+                            plane, packed, precisions, included, ..
+                        } = &mut self.scratch;
+                        let prec = &precisions[lo..hi];
+                        let mask = if straggler_on {
+                            Some(&included[lo..hi])
                         } else {
                             None
-                        },
-                    );
+                        };
+                        if packed_on {
+                            stage_pack_shard(packed, plane, prec, mask);
+                        } else if stage_fq {
+                            stage_quant_shard(plane, prec, mask);
+                        }
+                    }
+                    if packed_on {
+                        self.session.accumulate_packed_shard_masked(
+                            &self.scratch.packed,
+                            lo,
+                            &self.scratch.precisions[lo..hi],
+                            if straggler_on {
+                                Some(&self.scratch.included[lo..hi])
+                            } else {
+                                None
+                            },
+                        );
+                    } else {
+                        self.session.accumulate_shard_masked(
+                            &self.scratch.plane,
+                            lo,
+                            &self.scratch.precisions[lo..hi],
+                            if straggler_on {
+                                Some(&self.scratch.included[lo..hi])
+                            } else {
+                                None
+                            },
+                        );
+                    }
                     // shard boundary: every range handed to the client
                     // phase's workers must have been released
                     exec::assert_quiescent();
@@ -879,6 +973,8 @@ impl Coordinator {
         kk: usize,
         shard_len: usize,
         threads: usize,
+        packed_on: bool,
+        stage_fq: bool,
     ) -> Result<()> {
         let step_len = shard_len
             .saturating_mul(self.cfg.pipeline_depth)
@@ -893,7 +989,9 @@ impl Coordinator {
         let mut lo = prev_hi;
         while lo < kk {
             let hi = (lo + step_len).min(kk);
-            self.pipeline_step(prev_lo, prev_hi, lo, hi, cur_in_b, threads)?;
+            self.pipeline_step(
+                prev_lo, prev_hi, lo, hi, cur_in_b, threads, packed_on, stage_fq,
+            )?;
             // super-shard boundary: the step's dispatch has retired, so
             // its plane/session/stats claims must all be gone
             exec::assert_quiescent();
@@ -902,23 +1000,46 @@ impl Coordinator {
             lo = hi;
             cur_in_b = !cur_in_b;
         }
-        // drain: the last trained super-shard superposes here, after
-        // every training task has retired
-        let last_plane = if cur_in_b {
-            &self.scratch.plane
-        } else {
-            &self.scratch.plane2
-        };
-        self.session.accumulate_shard_masked(
-            last_plane,
-            prev_lo,
-            &self.scratch.precisions[prev_lo..prev_hi],
-            if self.deadline.is_some() {
-                Some(&self.scratch.included[prev_lo..prev_hi])
+        // drain: the last trained super-shard stages and superposes here,
+        // after every training task has retired
+        let straggler_on = self.deadline.is_some();
+        {
+            let RoundScratch { plane, plane2, packed, precisions, included, .. } =
+                &mut self.scratch;
+            let last = if cur_in_b { plane } else { plane2 };
+            let prec = &precisions[prev_lo..prev_hi];
+            let mask = if straggler_on {
+                Some(&included[prev_lo..prev_hi])
             } else {
                 None
-            },
-        );
+            };
+            if packed_on {
+                stage_pack_shard(packed, last, prec, mask);
+            } else if stage_fq {
+                stage_quant_shard(last, prec, mask);
+            }
+        }
+        let prec = &self.scratch.precisions[prev_lo..prev_hi];
+        let mask = if straggler_on {
+            Some(&self.scratch.included[prev_lo..prev_hi])
+        } else {
+            None
+        };
+        if packed_on {
+            self.session.accumulate_packed_shard_masked(
+                &self.scratch.packed,
+                prev_lo,
+                prec,
+                mask,
+            );
+        } else {
+            let last_plane = if cur_in_b {
+                &self.scratch.plane
+            } else {
+                &self.scratch.plane2
+            };
+            self.session.accumulate_shard_masked(last_plane, prev_lo, prec, mask);
+        }
         Ok(())
     }
 
@@ -938,6 +1059,8 @@ impl Coordinator {
         cur_hi: usize,
         cur_in_b: bool,
         threads: usize,
+        packed_on: bool,
+        stage_fq: bool,
     ) -> Result<()> {
         let n = self.theta.len();
         let count = cur_hi - cur_lo;
@@ -965,6 +1088,7 @@ impl Coordinator {
             slab,
             plane,
             plane2,
+            packed,
             precisions,
             stats,
             errors,
@@ -1001,8 +1125,12 @@ impl Coordinator {
             included: inc,
         };
 
-        // the previous super-shard's superposition inputs
-        let prev_plane: &PayloadPlane = prev_plane;
+        // the previous super-shard's superposition inputs — STAGED
+        // (fake-quantized in place, or bit-packed into the packed buffer)
+        // inside task 0, the dispatch's sole toucher of the previous
+        // plane and the packed staging buffer
+        let prev_plane_ptr = exec::SendMutPtr::from_mut(prev_plane);
+        let packed_ptr = exec::SendMutPtr::from_mut(packed);
         let prev_prec: &[Precision] = &precisions[prev_lo..prev_hi];
         let prev_mask: Option<&[bool]> = if straggler_on {
             Some(&included[prev_lo..prev_hi])
@@ -1018,13 +1146,30 @@ impl Coordinator {
                 let task = |w: usize| {
                     if w == 0 {
                         // SAFETY: task 0 is this dispatch's only Session
-                        // toucher (training tasks write the OTHER plane)
-                        // and the `&mut Session` the pointer was made from
+                        // toucher and the only toucher of the previous
+                        // (already-trained) plane and the packed staging
+                        // buffer — training tasks write the OTHER plane —
+                        // and every `&mut` the pointers were made from
                         // outlives the blocking dispatch.
                         let session = unsafe { session_ptr.get() };
-                        session.accumulate_shard_masked(
-                            prev_plane, prev_lo, prev_prec, prev_mask,
-                        );
+                        // SAFETY: as above.
+                        let prev = unsafe { prev_plane_ptr.get() };
+                        if packed_on {
+                            // SAFETY: as above — task 0 solely owns the
+                            // packed staging buffer for this dispatch.
+                            let packed = unsafe { packed_ptr.get() };
+                            stage_pack_shard(packed, prev, prev_prec, prev_mask);
+                            session.accumulate_packed_shard_masked(
+                                packed, prev_lo, prev_prec, prev_mask,
+                            );
+                        } else {
+                            if stage_fq {
+                                stage_quant_shard(prev, prev_prec, prev_mask);
+                            }
+                            session.accumulate_shard_masked(
+                                prev, prev_lo, prev_prec, prev_mask,
+                            );
+                        }
                     } else {
                         run_client_slots(
                             &env, &clients, plane_ptr, stats_ptr, errs_ptr,
@@ -1051,11 +1196,27 @@ impl Coordinator {
                     }
                     let _guard = DetachGuard(svc);
                     if w == 0 {
-                        // SAFETY: sole Session toucher, as above.
+                        // SAFETY: sole toucher of Session, previous plane
+                        // and packed staging buffer, as above.
                         let session = unsafe { session_ptr.get() };
-                        session.accumulate_shard_masked(
-                            prev_plane, prev_lo, prev_prec, prev_mask,
-                        );
+                        // SAFETY: as above.
+                        let prev = unsafe { prev_plane_ptr.get() };
+                        if packed_on {
+                            // SAFETY: as above — task 0 solely owns the
+                            // packed staging buffer for this dispatch.
+                            let packed = unsafe { packed_ptr.get() };
+                            stage_pack_shard(packed, prev, prev_prec, prev_mask);
+                            session.accumulate_packed_shard_masked(
+                                packed, prev_lo, prev_prec, prev_mask,
+                            );
+                        } else {
+                            if stage_fq {
+                                stage_quant_shard(prev, prev_prec, prev_mask);
+                            }
+                            session.accumulate_shard_masked(
+                                prev, prev_lo, prev_prec, prev_mask,
+                            );
+                        }
                     } else {
                         let step = exec::GatewayStep::new(svc);
                         run_client_slots(

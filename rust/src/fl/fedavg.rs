@@ -133,6 +133,40 @@ pub fn mean_plane_masked_accumulate(
     });
 }
 
+/// [`mean_plane_masked_accumulate`] over a bit-packed shard: decodes each
+/// included row's codes inline and adds `f · decode(row)` onto `out` — no
+/// intermediate f32 row.  Bit-identical to the f32 kernel over the
+/// fake-quantized rows the packed rows decode to (same ascending client
+/// order, same per-element op order, same chunk grid).
+// mpota-lint: zero-alloc-hot
+pub fn mean_packed_masked_accumulate(
+    packed: &crate::kernels::PackedPlane,
+    f: f32,
+    included: Option<&[bool]>,
+    out: &mut [f32],
+    threads: usize,
+) {
+    let k = packed.k();
+    if k == 0 {
+        return;
+    }
+    if let Some(mask) = included {
+        assert_eq!(mask.len(), k, "participation mask length mismatch");
+    }
+    assert_eq!(packed.n(), out.len(), "accumulator length mismatch");
+    crate::kernels::par::par_chunks_mut(threads, out, |off, chunk| {
+        for ki in 0..k {
+            if included.map_or(false, |mask| !mask[ki]) {
+                continue;
+            }
+            let row = packed.row(ki);
+            for (j, o) in chunk.iter_mut().enumerate() {
+                *o += f * row.get(off + j);
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -9,7 +9,8 @@ pub mod scheme;
 pub mod selection;
 
 pub use fedavg::{
-    fedavg, fedavg_plane_into, mean, mean_plane_accumulate, mean_plane_into,
+    fedavg, fedavg_plane_into, mean, mean_packed_masked_accumulate,
+    mean_plane_accumulate, mean_plane_into, mean_plane_masked_accumulate,
 };
 pub use id_lru::IdLru;
 pub use scheme::Scheme;

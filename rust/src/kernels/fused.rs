@@ -6,34 +6,150 @@
 //! update all accumulators in the same pass, which roughly triples the
 //! arithmetic per byte moved on this memory-bound loop.
 //!
+//! Two storage forms feed the superposition:
+//!
+//! * [`PayloadPlane`] — unit-stride f32 rows, swept 8 lanes at a time
+//!   through the portable [`F32x8`] chunks ([`superpose`]);
+//! * [`PackedPlane`] — rows bit-packed at their assigned precision,
+//!   decoded and accumulated in ONE sweep ([`superpose_packed`]): codes
+//!   stream out of the packed words, de-quantize in-register and fold
+//!   straight into the accumulators — no intermediate f32 row is ever
+//!   materialized, so a 4-bit row moves 1/8th of the bytes.
+//!
 //! Bit-exactness: per element, each accumulator receives exactly the same
 //! f32 additions in the same (ascending client) order as the scalar
-//! sweeps — accumulators are independent, so fusing them changes nothing.
-//! Chunk-parallel execution only partitions the element axis (disjoint
-//! output chunks, deterministic grid), so it is bit-identical too; chunks
-//! dispatch onto the persistent [`crate::exec`] pool (no per-call thread
-//! spawning, no steady-state allocation).
+//! sweeps — accumulators are independent, lanes are independent (rustc
+//! performs no FMA contraction), and the packed decode is the exact
+//! fake-quant op sequence — so fusing, vectorizing and packing change
+//! nothing.  The scalar-reference fallbacks ([`axpy3_scalar`], the packed
+//! rows' [`PackedRow::get`]) stay as the golden anchors.  Chunk-parallel
+//! execution only partitions the element axis (disjoint output chunks,
+//! deterministic grid), so it is bit-identical too; chunks dispatch onto
+//! the persistent [`crate::exec`] pool (no per-call thread spawning, no
+//! steady-state allocation).
 
 use crate::channel::C32;
-use crate::kernels::{par, PayloadPlane};
+use crate::kernels::packed::{PackedRow, RowKind};
+use crate::kernels::{par, PackedPlane, PayloadPlane};
+
+/// Portable 8-lane f32 vector: a plain `[f32; 8]` whose per-lane ops the
+/// optimizer lowers to one AVX/NEON register operation each.  Lanes are
+/// independent and every op is the scalar op applied per lane — rustc
+/// never contracts separate mul/add into an FMA — so lane-parallel sweeps
+/// are bit-identical to the scalar reference.
+#[derive(Clone, Copy)]
+struct F32x8([f32; 8]);
+
+impl F32x8 {
+    const LANES: usize = 8;
+
+    #[inline(always)]
+    fn splat(v: f32) -> Self {
+        F32x8([v; 8])
+    }
+
+    #[inline(always)]
+    fn load(s: &[f32]) -> Self {
+        let mut v = [0.0f32; 8];
+        v.copy_from_slice(&s[..8]);
+        F32x8(v)
+    }
+
+    #[inline(always)]
+    fn store(self, d: &mut [f32]) {
+        d[..8].copy_from_slice(&self.0);
+    }
+
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        let mut r = [0.0f32; 8];
+        for l in 0..8 {
+            r[l] = self.0[l] + o.0[l];
+        }
+        F32x8(r)
+    }
+
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        let mut r = [0.0f32; 8];
+        for l in 0..8 {
+            r[l] = self.0[l] - o.0[l];
+        }
+        F32x8(r)
+    }
+
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        let mut r = [0.0f32; 8];
+        for l in 0..8 {
+            r[l] = self.0[l] * o.0[l];
+        }
+        F32x8(r)
+    }
+}
 
 /// Fused complex axpy: `y_re += g.re * x` and `y_im += g.im * x` in one
-/// pass over `x`.
+/// pass over `x` — 8-lane main loop, scalar tail.
 // mpota-lint: zero-alloc-hot
 pub fn axpy2(y_re: &mut [f32], y_im: &mut [f32], g: C32, x: &[f32]) {
     assert_eq!(y_re.len(), x.len());
     assert_eq!(y_im.len(), x.len());
-    for i in 0..x.len() {
+    let n = x.len();
+    let gre = F32x8::splat(g.re);
+    let gim = F32x8::splat(g.im);
+    let mut i = 0;
+    while i + F32x8::LANES <= n {
+        let xv = F32x8::load(&x[i..]);
+        F32x8::load(&y_re[i..]).add(gre.mul(xv)).store(&mut y_re[i..]);
+        F32x8::load(&y_im[i..]).add(gim.mul(xv)).store(&mut y_im[i..]);
+        i += F32x8::LANES;
+    }
+    while i < n {
         let v = x[i];
         y_re[i] += g.re * v;
         y_im[i] += g.im * v;
+        i += 1;
     }
 }
 
 /// Fused complex axpy plus ideal accumulation: one pass updating
-/// `y_re += g.re * x`, `y_im += g.im * x`, `ideal += x`.
+/// `y_re += g.re * x`, `y_im += g.im * x`, `ideal += x` — 8-lane main
+/// loop, scalar tail.  [`axpy3_scalar`] is the bit-identical reference.
 // mpota-lint: zero-alloc-hot
 pub fn axpy3(y_re: &mut [f32], y_im: &mut [f32], ideal: &mut [f32], g: C32, x: &[f32]) {
+    assert_eq!(y_re.len(), x.len());
+    assert_eq!(y_im.len(), x.len());
+    assert_eq!(ideal.len(), x.len());
+    let n = x.len();
+    let gre = F32x8::splat(g.re);
+    let gim = F32x8::splat(g.im);
+    let mut i = 0;
+    while i + F32x8::LANES <= n {
+        let xv = F32x8::load(&x[i..]);
+        F32x8::load(&y_re[i..]).add(gre.mul(xv)).store(&mut y_re[i..]);
+        F32x8::load(&y_im[i..]).add(gim.mul(xv)).store(&mut y_im[i..]);
+        F32x8::load(&ideal[i..]).add(xv).store(&mut ideal[i..]);
+        i += F32x8::LANES;
+    }
+    while i < n {
+        let v = x[i];
+        y_re[i] += g.re * v;
+        y_im[i] += g.im * v;
+        ideal[i] += v;
+        i += 1;
+    }
+}
+
+/// Scalar reference for [`axpy3`] — the pre-SIMD sweep, kept verbatim as
+/// the golden anchor the vectorized path is pinned bit-identical to.
+// mpota-lint: zero-alloc-hot
+pub fn axpy3_scalar(
+    y_re: &mut [f32],
+    y_im: &mut [f32],
+    ideal: &mut [f32],
+    g: C32,
+    x: &[f32],
+) {
     assert_eq!(y_re.len(), x.len());
     assert_eq!(y_im.len(), x.len());
     assert_eq!(ideal.len(), x.len());
@@ -101,9 +217,166 @@ pub fn superpose(
     crate::exec::pool().broadcast(chunks, &task);
 }
 
+/// One packed row's fused decode-and-accumulate over the element window
+/// `[off, off + yr.len())`: `y += g · decode(row)`, `ideal += decode(row)`
+/// without materializing the decoded row.  Scalar heads align the global
+/// element index to an 8-lane boundary so the vector groups never
+/// straddle a code mid-word; scalar tails finish the remainder through
+/// the same [`PackedRow::get`] reference decode.
+// mpota-lint: zero-alloc-hot
+#[inline]
+fn accum_packed_row(
+    row: PackedRow<'_>,
+    g: C32,
+    off: usize,
+    y_re: &mut [f32],
+    y_im: &mut [f32],
+    ideal: &mut [f32],
+) {
+    let len = y_re.len();
+    let gre = F32x8::splat(g.re);
+    let gim = F32x8::splat(g.im);
+
+    // the shared scalar step (head / tail / non-pow2 widths)
+    macro_rules! scalar_at {
+        ($i:expr) => {{
+            let v = row.get(off + $i);
+            y_re[$i] += g.re * v;
+            y_im[$i] += g.im * v;
+            ideal[$i] += v;
+        }};
+    }
+    // fold one decoded 8-lane group into the accumulators at `i`
+    macro_rules! lanes_at {
+        ($i:expr, $v:expr) => {{
+            let v: F32x8 = $v;
+            F32x8::load(&y_re[$i..]).add(gre.mul(v)).store(&mut y_re[$i..]);
+            F32x8::load(&y_im[$i..]).add(gim.mul(v)).store(&mut y_im[$i..]);
+            F32x8::load(&ideal[$i..]).add(v).store(&mut ideal[$i..]);
+        }};
+    }
+
+    let mut i = 0usize;
+    match row.kind {
+        RowKind::Fixed if row.bits.is_power_of_two() => {
+            // 2/4/8-bit codes: at a global index divisible by 8 a group
+            // of 8 codes spans whole half-words/words, so per-lane
+            // extraction never crosses a word boundary mid-code
+            while i < len && (off + i) % F32x8::LANES != 0 {
+                scalar_at!(i);
+                i += 1;
+            }
+            let b = row.bits as usize;
+            let mask = ((1u64 << row.bits) - 1) as u32;
+            let scale = F32x8::splat(row.params.scale);
+            let zp = F32x8::splat(row.params.zero_point);
+            while i + F32x8::LANES <= len {
+                let e = off + i;
+                let mut lane = [0.0f32; 8];
+                for l in 0..8 {
+                    let bit = (e + l) * b;
+                    lane[l] = ((row.words[bit / 32] >> (bit % 32)) & mask) as f32;
+                }
+                // decode: (code - zp) * scale — the exact scalar op order
+                lanes_at!(i, F32x8(lane).sub(zp).mul(scale));
+                i += F32x8::LANES;
+            }
+        }
+        RowKind::Fixed => {
+            // 3/6-bit codes straddle word boundaries: the u64-window
+            // scalar decode is the whole path
+        }
+        RowKind::Trunc16 => {
+            while i < len && (off + i) % F32x8::LANES != 0 {
+                scalar_at!(i);
+                i += 1;
+            }
+            while i + F32x8::LANES <= len {
+                let w0 = (off + i) / 2; // even global index: half 0 first
+                let mut lane = [0.0f32; 8];
+                for l in 0..8 {
+                    let w = row.words[w0 + l / 2];
+                    lane[l] = f32::from_bits(((w >> (16 * (l & 1))) & 0xFFFF) << 16);
+                }
+                lanes_at!(i, F32x8(lane));
+                i += F32x8::LANES;
+            }
+        }
+        RowKind::Words => {
+            while i + F32x8::LANES <= len {
+                let w = &row.words[off + i..off + i + 8];
+                let mut lane = [0.0f32; 8];
+                for (d, &wv) in lane.iter_mut().zip(w) {
+                    *d = f32::from_bits(wv);
+                }
+                lanes_at!(i, F32x8(lane));
+                i += F32x8::LANES;
+            }
+        }
+    }
+    while i < len {
+        scalar_at!(i);
+        i += 1;
+    }
+}
+
+/// Packed-plane form of [`superpose`]: for each `(row, g)` in `active`
+/// (ascending row order), decode row `row` of the packed plane AND
+/// accumulate `y_re += g.re · x`, `y_im += g.im · x`, `ideal += x` in the
+/// same sweep — the unpack-fuse-superpose path.  Bit-identical to
+/// [`superpose`] over the fake-quantized f32 rows the packed rows decode
+/// to, at every thread count (disjoint element chunks, deterministic
+/// grid, lane-independent decode).
+// mpota-lint: zero-alloc-hot
+pub fn superpose_packed(
+    plane: &PackedPlane,
+    active: &[(usize, C32)],
+    y_re: &mut [f32],
+    y_im: &mut [f32],
+    ideal: &mut [f32],
+    threads: usize,
+) {
+    let n = plane.n();
+    assert_eq!(y_re.len(), n);
+    assert_eq!(y_im.len(), n);
+    assert_eq!(ideal.len(), n);
+
+    let work = |off: usize, yr: &mut [f32], yi: &mut [f32], id: &mut [f32]| {
+        for &(k, g) in active {
+            accum_packed_row(plane.row(k), g, off, yr, yi, id);
+        }
+    };
+
+    let chunks = par::effective_chunks(threads, n);
+    if chunks <= 1 {
+        work(0, y_re, y_im, ideal);
+        return;
+    }
+    let yr_base = crate::exec::SendPtr::from_mut(y_re);
+    let yi_base = crate::exec::SendPtr::from_mut(y_im);
+    let id_base = crate::exec::SendPtr::from_mut(ideal);
+    let task = move |c: usize| {
+        let start = par::chunk_start(n, chunks, c);
+        let len = par::chunk_len(n, chunks, c);
+        // SAFETY: the deterministic chunk grid yields disjoint ranges of
+        // the three equal-length accumulators; each task index runs
+        // exactly once and the dispatch blocks until all tasks finish.
+        let (yr, yi, id) = unsafe {
+            (
+                yr_base.slice_at(start, len),
+                yi_base.slice_at(start, len),
+                id_base.slice_at(start, len),
+            )
+        };
+        work(start, yr, yi, id);
+    };
+    crate::exec::pool().broadcast(chunks, &task);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::{self, Precision};
     use crate::rng::Rng;
     use crate::tensor;
 
@@ -160,6 +433,27 @@ mod tests {
     }
 
     #[test]
+    fn vector_axpy3_matches_scalar_reference_bitwise() {
+        let mut rng = Rng::seed_from(19);
+        for n in [1usize, 7, 8, 9, 64, 333] {
+            let mut x = vec![0.0f32; n];
+            rng.fill_normal(&mut x, 0.0, 2.0);
+            let g = C32::new(rng.normal_f32(1.0, 0.3), rng.normal_f32(0.0, 0.3));
+            let mut yr = vec![0.25f32; n];
+            let mut yi = vec![-0.75f32; n];
+            let mut id = vec![0.5f32; n];
+            let mut wr = yr.clone();
+            let mut wi = yi.clone();
+            let mut wid = id.clone();
+            axpy3(&mut yr, &mut yi, &mut id, g, &x);
+            axpy3_scalar(&mut wr, &mut wi, &mut wid, g, &x);
+            assert_eq!(yr, wr, "n={n}");
+            assert_eq!(yi, wi, "n={n}");
+            assert_eq!(id, wid, "n={n}");
+        }
+    }
+
+    #[test]
     fn axpy2_is_two_axpys() {
         let mut rng = Rng::seed_from(9);
         let mut x = vec![0.0f32; 333];
@@ -186,5 +480,61 @@ mod tests {
         assert!(y_re.iter().all(|&v| v == 1.0));
         assert!(y_im.iter().all(|&v| v == 2.0));
         assert!(ideal.iter().all(|&v| v == 3.0));
+    }
+
+    #[test]
+    fn packed_superpose_matches_f32_superpose_bitwise() {
+        // mixed-width plane: pack RAW rows; the f32 reference superposes
+        // the fake-quantized rows the packed codes decode to — the two
+        // paths must agree bit-for-bit at every thread count
+        let levels: Vec<Precision> = crate::quant::SUPPORTED_LEVELS
+            .iter()
+            .map(|&b| Precision::of(b))
+            .collect();
+        let sizes: &[usize] =
+            if cfg!(miri) { &[1, 9, 257] } else { &[1, 9, 257, 20_001] };
+        for &n in sizes {
+            let k = levels.len();
+            let mut rng = Rng::seed_from(100 + n as u64);
+            let mut packed = PackedPlane::new();
+            packed.reset(&levels, n);
+            let mut fq = PayloadPlane::zeros(k, n);
+            let mut raw = vec![0.0f32; n];
+            for (r, &p) in levels.iter().enumerate() {
+                rng.fill_normal(&mut raw, 0.0, 1.5);
+                packed.pack_row(r, &raw);
+                let q = quant::fake_quant(&raw, p);
+                fq.row_mut(r).copy_from_slice(&q);
+            }
+            let active: Vec<(usize, C32)> = (0..k)
+                .map(|i| {
+                    (i, C32::new(rng.normal_f32(1.0, 0.2), rng.normal_f32(0.0, 0.2)))
+                })
+                .collect();
+            let mut want_re = vec![0.0f32; n];
+            let mut want_im = vec![0.0f32; n];
+            let mut want_id = vec![0.0f32; n];
+            superpose(&fq, &active, &mut want_re, &mut want_im, &mut want_id, 1);
+            for threads in [1usize, 4] {
+                let mut y_re = vec![0.0f32; n];
+                let mut y_im = vec![0.0f32; n];
+                let mut ideal = vec![0.0f32; n];
+                superpose_packed(
+                    &packed, &active, &mut y_re, &mut y_im, &mut ideal, threads,
+                );
+                let same = y_re.iter().zip(want_re.iter()).all(|(a, b)| {
+                    a.to_bits() == b.to_bits()
+                });
+                assert!(same, "y_re diverged n={n} threads={threads}");
+                let same = y_im.iter().zip(want_im.iter()).all(|(a, b)| {
+                    a.to_bits() == b.to_bits()
+                });
+                assert!(same, "y_im diverged n={n} threads={threads}");
+                let same = ideal.iter().zip(want_id.iter()).all(|(a, b)| {
+                    a.to_bits() == b.to_bits()
+                });
+                assert!(same, "ideal diverged n={n} threads={threads}");
+            }
+        }
     }
 }

@@ -10,10 +10,18 @@
 //!   replaces `&[Vec<f32>]` on the aggregation path: one allocation per
 //!   run, cache-friendly row strides, stable row addresses for chunked
 //!   column sweeps.
+//! * [`packed`] — [`PackedPlane`], the bit-packed sibling: each row is
+//!   stored at its ASSIGNED precision (affine codes for fixed-point
+//!   levels, top-16-bit halves for 12/16-bit float truncation, whole
+//!   words otherwise) with a per-row `AffineParams` sidecar, so a 4-bit
+//!   row moves 1/8th of the bytes through the memory-bound superposition.
 //! * [`fused`] — single-pass kernels: the complex [`fused::superpose`]
 //!   accumulates `y_re`, `y_im` and the noise-free `ideal` in ONE sweep
 //!   over each payload row (the scalar path reads every payload three
-//!   times), and [`fused::axpy2`] is the per-row building block.
+//!   times) through portable 8-lane SIMD chunks, [`fused::axpy2`] is the
+//!   per-row building block, and [`fused::superpose_packed`] decodes
+//!   packed codes and accumulates `g·x` in the same sweep — no
+//!   intermediate f32 row is ever materialized.
 //! * [`par`] — chunk-parallelism over the persistent [`crate::exec`]
 //!   worker pool (no external deps, no per-call thread spawning): N is
 //!   split into contiguous column chunks, each pool task owns a disjoint
@@ -45,7 +53,9 @@
 //! `rust/tests/kernels.rs` enforces both against naive references.
 
 pub mod fused;
+pub mod packed;
 pub mod par;
 pub mod plane;
 
+pub use packed::PackedPlane;
 pub use plane::PayloadPlane;

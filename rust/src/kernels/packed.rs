@@ -1,0 +1,324 @@
+//! Bit-packed K×N payload plane — rows stored at their ASSIGNED precision.
+//!
+//! [`super::PayloadPlane`] spends a full f32 per value regardless of the
+//! row's precision, so a 4-bit client wastes 8× memory bandwidth in the
+//! streaming superposition hot path.  `PackedPlane` stores each row in the
+//! tightest lossless form its precision admits:
+//!
+//! | precision        | storage ([`RowKind`])          | bytes/value |
+//! |------------------|--------------------------------|-------------|
+//! | 2/3/4/6/8 (fixed)| LSB-first affine codes         | bits/8      |
+//! | 12/16 (f-trunc)  | top-16 IEEE-754 bits, 2/word   | 2           |
+//! | 24 (f-trunc)     | masked 32-bit words            | 4           |
+//! | 32 (identity)    | raw 32-bit words               | 4           |
+//!
+//! Fixed-point rows carry a per-row [`AffineParams`] sidecar (scale /
+//! zero-point) set when the row is packed.  Packing IS the transmission
+//! quantization: `decode(pack(x))` equals `fake_quant(x)` bit-for-bit
+//! (floor rounding) because the codes move losslessly and encode→decode
+//! is exactly the fake-quant op sequence (`rust/tests/packed_plane.rs`
+//! pins this against `mpota::testing`).  The fused kernels in
+//! [`super::fused`] decode codes and accumulate `g·x` in one sweep — no
+//! intermediate f32 row is ever materialized.
+//!
+//! Like the f32 plane, the buffer is allocated once per run and recycled
+//! every shard ([`reset`](PackedPlane::reset) only grows capacity).
+
+use crate::quant::fixed::{self, AffineParams};
+use crate::quant::{float, Format, Precision};
+
+/// Storage form of one packed row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowKind {
+    /// LSB-first affine integer codes, `bits` per value (fixed-point
+    /// levels 2/3/4/6/8); decodes through the row's [`AffineParams`].
+    Fixed,
+    /// Top-16 IEEE-754 bits per value, two per word (float-truncation
+    /// levels 12/16 — the 12-bit mask zeroes bits the top half keeps).
+    Trunc16,
+    /// One full 32-bit word per value: 24-bit rows store mask-truncated
+    /// floats, 32-bit rows the raw bits (both decode by `from_bits`).
+    Words,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct RowMeta {
+    kind: RowKind,
+    bits: u8,
+    /// Truncation mask applied at pack time (FloatTrunc/Identity rows).
+    mask: u32,
+    /// First word of the row in the shared word store.
+    offset: usize,
+    /// Words the row occupies.
+    len: usize,
+    /// Affine sidecar (Fixed rows; identity scale otherwise).
+    params: AffineParams,
+}
+
+/// Borrowed view of one packed row — what the fused kernels consume.
+#[derive(Clone, Copy, Debug)]
+pub struct PackedRow<'a> {
+    pub kind: RowKind,
+    pub bits: u8,
+    pub words: &'a [u32],
+    pub params: AffineParams,
+}
+
+impl PackedRow<'_> {
+    /// Decode element `i` — the scalar-reference path (golden tests, the
+    /// generic kernel tails).  The vectorized kernels inline the same
+    /// arithmetic over word-aligned lanes.
+    #[inline]
+    pub fn get(&self, i: usize) -> f32 {
+        match self.kind {
+            RowKind::Fixed => {
+                fixed::decode(fixed::unpack_code(self.words, i, self.bits), self.params)
+            }
+            RowKind::Trunc16 => {
+                let w = self.words[i / 2];
+                f32::from_bits(((w >> (16 * (i & 1))) & 0xFFFF) << 16)
+            }
+            RowKind::Words => f32::from_bits(self.words[i]),
+        }
+    }
+}
+
+/// K packed payload rows of N values each, contiguous in one word store.
+#[derive(Clone, Debug, Default)]
+pub struct PackedPlane {
+    words: Vec<u32>,
+    meta: Vec<RowMeta>,
+    n: usize,
+}
+
+fn row_kind(p: Precision) -> (RowKind, u32) {
+    match p.format() {
+        Format::FixedPoint => (RowKind::Fixed, 0),
+        Format::FloatTrunc if p.bits() <= 16 => {
+            (RowKind::Trunc16, float::mask(p.bits()).expect("validated level"))
+        }
+        Format::FloatTrunc | Format::Identity => {
+            (RowKind::Words, float::mask(p.bits()).expect("validated level"))
+        }
+    }
+}
+
+fn row_words(kind: RowKind, bits: u8, n: usize) -> usize {
+    match kind {
+        RowKind::Fixed => fixed::packed_words(n, bits),
+        RowKind::Trunc16 => n.div_ceil(2),
+        RowKind::Words => n,
+    }
+}
+
+impl PackedPlane {
+    /// Empty plane; call [`reset`](Self::reset) before use.
+    pub fn new() -> Self {
+        PackedPlane::default()
+    }
+
+    /// Reshape to one row per precision, each sized for its storage form.
+    /// Contents are unspecified afterwards (rows are meant to be packed);
+    /// no allocation happens once capacity has grown.
+    pub fn reset(&mut self, precisions: &[Precision], n: usize) {
+        self.meta.clear();
+        self.n = n;
+        let mut offset = 0usize;
+        for &p in precisions {
+            let (kind, mask) = row_kind(p);
+            let len = row_words(kind, p.bits(), n);
+            self.meta.push(RowMeta {
+                kind,
+                bits: p.bits(),
+                mask,
+                offset,
+                len,
+                params: AffineParams { scale: 1.0, zero_point: 0.0 },
+            });
+            offset += len;
+        }
+        self.words.resize(offset, 0);
+    }
+
+    /// Number of rows (clients).
+    pub fn k(&self) -> usize {
+        self.meta.len()
+    }
+
+    /// Row length (values per payload).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Storage bytes row `r` occupies in the word store.
+    pub fn row_bytes(&self, r: usize) -> usize {
+        self.meta[r].len * 4
+    }
+
+    /// Pack `src` into row `r` at the row's assigned precision — the
+    /// transmission-quantization step: the stored form decodes to exactly
+    /// `fake_quant(src, precision)` (floor rounding), bit-for-bit.
+    // mpota-lint: zero-alloc-hot
+    pub fn pack_row(&mut self, r: usize, src: &[f32]) {
+        assert_eq!(src.len(), self.n, "packed row length mismatch");
+        let m = self.meta[r];
+        let words = &mut self.words[m.offset..m.offset + m.len];
+        match m.kind {
+            RowKind::Fixed => {
+                self.meta[r].params = fixed::encode_packed(src, m.bits, words);
+            }
+            RowKind::Trunc16 => {
+                let mut it = src.chunks_exact(2);
+                for (w, pair) in words.iter_mut().zip(&mut it) {
+                    let a = (pair[0].to_bits() & m.mask) >> 16;
+                    let b = (pair[1].to_bits() & m.mask) >> 16;
+                    *w = a | (b << 16);
+                }
+                if let [last] = it.remainder() {
+                    words[m.len - 1] = (last.to_bits() & m.mask) >> 16;
+                }
+            }
+            RowKind::Words => {
+                for (w, &v) in words.iter_mut().zip(src.iter()) {
+                    *w = v.to_bits() & m.mask;
+                }
+            }
+        }
+    }
+
+    /// Borrow row `r` for decoding.
+    #[inline]
+    pub fn row(&self, r: usize) -> PackedRow<'_> {
+        let m = self.meta[r];
+        PackedRow {
+            kind: m.kind,
+            bits: m.bits,
+            words: &self.words[m.offset..m.offset + m.len],
+            params: m.params,
+        }
+    }
+
+    /// Scalar-reference unpack of row `r` into `dst` — the golden-test
+    /// decode (the fused kernels never materialize this row).
+    // mpota-lint: zero-alloc-hot
+    pub fn unpack_row_into(&self, r: usize, dst: &mut [f32]) {
+        assert_eq!(dst.len(), self.n, "unpacked row length mismatch");
+        let row = self.row(r);
+        for (i, d) in dst.iter_mut().enumerate() {
+            *d = row.get(i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant;
+    use crate::rng::Rng;
+
+    fn precisions() -> Vec<Precision> {
+        quant::SUPPORTED_LEVELS.iter().map(|&b| Precision::of(b)).collect()
+    }
+
+    #[test]
+    fn pack_unpack_is_fake_quant_at_every_level() {
+        let ps = precisions();
+        let n = 301usize;
+        let mut rng = Rng::seed_from(41);
+        let mut plane = PackedPlane::new();
+        plane.reset(&ps, n);
+        let mut rows = Vec::new();
+        for r in 0..ps.len() {
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal(&mut v, 0.0, 2.0);
+            plane.pack_row(r, &v);
+            rows.push(v);
+        }
+        let mut dst = vec![0.0f32; n];
+        for (r, &p) in ps.iter().enumerate() {
+            plane.unpack_row_into(r, &mut dst);
+            let want = quant::fake_quant(&rows[r], p);
+            for (i, (a, b)) in dst.iter().zip(want.iter()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{p} row {r} diverges at [{i}]: packed {a} vs fake-quant {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn storage_is_tight_per_kind() {
+        let ps = precisions(); // [32, 24, 16, 12, 8, 6, 4, 3, 2]
+        let n = 64usize;
+        let mut plane = PackedPlane::new();
+        plane.reset(&ps, n);
+        let bytes: Vec<usize> = (0..ps.len()).map(|r| plane.row_bytes(r)).collect();
+        assert_eq!(bytes, vec![256, 256, 128, 128, 64, 48, 32, 24, 16]);
+    }
+
+    #[test]
+    fn reset_reuses_capacity() {
+        let ps = precisions();
+        let mut plane = PackedPlane::new();
+        plane.reset(&ps, 1000);
+        let cap_w = plane.words.capacity();
+        let cap_m = plane.meta.capacity();
+        plane.reset(&ps[..3], 500);
+        plane.reset(&ps, 1000);
+        assert_eq!(plane.words.capacity(), cap_w, "reset must not reallocate");
+        assert_eq!(plane.meta.capacity(), cap_m, "reset must not reallocate");
+        assert_eq!((plane.k(), plane.n()), (ps.len(), 1000));
+    }
+
+    #[test]
+    fn odd_length_trunc16_rows_roundtrip() {
+        let ps = vec![Precision::of(16), Precision::of(12)];
+        let mut rng = Rng::seed_from(43);
+        for n in [1usize, 7, 33] {
+            let mut plane = PackedPlane::new();
+            plane.reset(&ps, n);
+            for (r, &p) in ps.iter().enumerate() {
+                let mut v = vec![0.0f32; n];
+                rng.fill_normal(&mut v, 0.0, 3.0);
+                plane.pack_row(r, &v);
+                let mut dst = vec![0.0f32; n];
+                plane.unpack_row_into(r, &mut dst);
+                let want = quant::fake_quant(&v, p);
+                assert_eq!(dst, want, "{p} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn constant_and_zero_rows_roundtrip_exactly() {
+        // the degenerate-params contract carried through packing
+        let ps = vec![
+            Precision::of(2),
+            Precision::of(3),
+            Precision::of(4),
+            Precision::of(6),
+            Precision::of(8),
+        ];
+        for c in [0.0f32, 0.7311, -42.0] {
+            let n = 19usize;
+            let mut plane = PackedPlane::new();
+            plane.reset(&ps, n);
+            let v = vec![c; n];
+            let mut dst = vec![0.0f32; n];
+            for (r, &p) in ps.iter().enumerate() {
+                plane.pack_row(r, &v);
+                plane.unpack_row_into(r, &mut dst);
+                assert!(dst.iter().all(|&d| d == c), "{p} c={c}: {dst:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_plane_is_fine() {
+        let mut plane = PackedPlane::new();
+        plane.reset(&[], 0);
+        assert_eq!((plane.k(), plane.n()), (0, 0));
+    }
+}

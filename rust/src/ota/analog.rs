@@ -16,7 +16,7 @@
 //! cross-validate the two.
 
 use crate::channel::{RoundChannel, C32};
-use crate::kernels::{fused, PayloadPlane};
+use crate::kernels::{fused, PackedPlane, PayloadPlane};
 use crate::ota::AggregateStats;
 use crate::rng::Rng;
 use crate::tensor;
@@ -183,6 +183,56 @@ pub fn accumulate_plane_masked_into(
     // --- superposition: y += Σ_k g_k · x_k (fused complex accumulate) ---
     fused::superpose(
         plane,
+        &scratch.active,
+        &mut scratch.y_re,
+        &mut scratch.y_im,
+        &mut scratch.ideal,
+        threads,
+    );
+}
+
+/// [`accumulate_plane_masked_into`] over a bit-packed shard: the rows of
+/// `packed` hold TRANSMISSION-QUANTIZED codes at each slot's assigned
+/// precision, and the fused kernel decodes + superposes them in one sweep
+/// (no intermediate f32 row).  Because `decode(pack(x)) == fake_quant(x)`
+/// bit-for-bit, this accumulates exactly what the f32 path accumulates
+/// from a fake-quantized plane — the active-list build, `active_total`
+/// accounting and chunk grid are shared instruction for instruction.
+// mpota-lint: zero-alloc-hot
+pub fn accumulate_packed_masked_into(
+    packed: &PackedPlane,
+    slot0: usize,
+    round: &RoundChannel,
+    included: Option<&[bool]>,
+    scratch: &mut OtaScratch,
+    threads: usize,
+) {
+    assert!(
+        slot0 + packed.k() <= round.clients.len(),
+        "shard slots {}..{} exceed the round's {} channel draws",
+        slot0,
+        slot0 + packed.k(),
+        round.clients.len()
+    );
+    if let Some(mask) = included {
+        assert_eq!(mask.len(), packed.k(), "participation mask length mismatch");
+    }
+    scratch.active.clear();
+    for r in 0..packed.k() {
+        if included.map_or(false, |mask| !mask[r]) {
+            continue; // excluded client: slot stays silent
+        }
+        if let Some(g) = round.clients[slot0 + r].effective_gain {
+            scratch.active.push((r, g));
+        }
+    }
+    scratch.active_total += scratch.active.len();
+    if scratch.active.is_empty() {
+        return;
+    }
+    // --- superposition: y += Σ_k g_k · decode(codes_k), fused ------------
+    fused::superpose_packed(
+        packed,
         &scratch.active,
         &mut scratch.y_re,
         &mut scratch.y_im,

@@ -8,7 +8,8 @@
 //! — before it can average.  This conversion step, and the K× channel
 //! uses, are exactly the overheads the paper's analog scheme eliminates.
 
-use crate::kernels::{par, PayloadPlane};
+use crate::kernels::packed::RowKind;
+use crate::kernels::{par, PackedPlane, PayloadPlane};
 use crate::ota::AggregateStats;
 use crate::quant::{fixed, float, Format, Precision};
 use crate::tensor;
@@ -211,6 +212,74 @@ pub fn accumulate_plane_masked_into(
     }
 }
 
+/// [`accumulate_plane_masked_into`] over a bit-packed shard.  The packed
+/// rows hold the TRANSMITTED codes; the server-side precision conversion
+/// runs on the decoded decimals exactly as the f32 path runs on a
+/// fake-quantized row: fixed-point rows re-derive an affine header from
+/// the decoded values' min/max (the same double-quantization the f32
+/// streaming path performs on its staged rows — so `packed_planes` on and
+/// off stay bit-identical), float rows re-mask (idempotent on the stored
+/// truncated bits).  No intermediate f32 row is materialized.
+// mpota-lint: zero-alloc-hot
+pub fn accumulate_packed_masked_into(
+    packed: &PackedPlane,
+    precisions: &[Precision],
+    included: Option<&[bool]>,
+    out: &mut [f32],
+    threads: usize,
+    stats: &mut AggregateStats,
+) {
+    assert_eq!(packed.k(), precisions.len());
+    if let Some(mask) = included {
+        assert_eq!(mask.len(), packed.k(), "participation mask length mismatch");
+    }
+    let n = packed.n();
+    assert_eq!(out.len(), n, "accumulator length mismatch");
+    for (row_i, &p) in precisions.iter().enumerate() {
+        if included.map_or(false, |mask| !mask[row_i]) {
+            continue;
+        }
+        let row = packed.row(row_i);
+        stats.channel_uses += n as u64;
+        stats.bits_transmitted += n as u64 * p.bits() as u64;
+        match p.format() {
+            Format::FixedPoint => {
+                // exact min/max over the decoded decimals, in the same
+                // ascending element order as `fixed::params` on a slice
+                let mut lo = f32::INFINITY;
+                let mut hi = f32::NEG_INFINITY;
+                for i in 0..n {
+                    let v = row.get(i);
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                if n == 0 {
+                    lo = 0.0;
+                    hi = 0.0;
+                }
+                let ap = fixed::params_from_range(lo, hi, p.bits());
+                let max_code = p.max_code();
+                par::par_chunks_mut(threads, out, |off, chunk| {
+                    for (j, o) in chunk.iter_mut().enumerate() {
+                        let v = row.get(off + j);
+                        *o += fixed::decode(fixed::encode(v, ap, max_code), ap);
+                    }
+                });
+            }
+            Format::FloatTrunc | Format::Identity => {
+                debug_assert!(matches!(row.kind, RowKind::Trunc16 | RowKind::Words));
+                let mask = float::mask(p.bits()).expect("validated level");
+                par::par_chunks_mut(threads, out, |off, chunk| {
+                    for (j, o) in chunk.iter_mut().enumerate() {
+                        let v = row.get(off + j);
+                        *o += f32::from_bits(v.to_bits() & mask);
+                    }
+                });
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -332,6 +401,44 @@ mod tests {
         assert_eq!(stats.channel_uses, want_stats.channel_uses);
         assert_eq!(stats.channel_uses, 3 * 400);
         assert_eq!(stats.bits_transmitted, (32 + 8 + 8) * 400);
+    }
+
+    #[test]
+    fn packed_accumulation_matches_staged_f32_accumulation_bitwise() {
+        // the packed-planes parity contract: a shard packed from RAW rows
+        // must accumulate exactly what the f32 streaming path accumulates
+        // from the same rows staged through fake_quant (both re-derive
+        // the server-side affine header from the received decimals)
+        let raw: Vec<Vec<f32>> = (0..9).map(|i| payload(5_000, 60 + i)).collect();
+        let ps: Vec<Precision> = [32u8, 24, 16, 12, 8, 6, 4, 3, 2]
+            .iter()
+            .map(|&b| Precision::of(b))
+            .collect();
+        let mut packed = PackedPlane::new();
+        packed.reset(&ps, 5_000);
+        let mut staged = PayloadPlane::zeros(9, 5_000);
+        for (r, (w, &p)) in raw.iter().zip(ps.iter()).enumerate() {
+            packed.pack_row(r, w);
+            staged.row_mut(r).copy_from_slice(&fake_quant(w, p));
+        }
+        let mask = [true, true, false, true, true, true, false, true, true];
+        for threads in [1usize, 4] {
+            let mut want = vec![0.0f32; 5_000];
+            let mut want_stats = AggregateStats::default();
+            accumulate_plane_masked_into(
+                &staged, &ps, Some(&mask), &mut want, threads, &mut want_stats,
+            );
+            let mut got = vec![0.0f32; 5_000];
+            let mut stats = AggregateStats::default();
+            accumulate_packed_masked_into(
+                &packed, &ps, Some(&mask), &mut got, threads, &mut stats,
+            );
+            let same =
+                got.iter().zip(want.iter()).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "packed digital diverged threads={threads}");
+            assert_eq!(stats.channel_uses, want_stats.channel_uses);
+            assert_eq!(stats.bits_transmitted, want_stats.bits_transmitted);
+        }
     }
 
     #[test]

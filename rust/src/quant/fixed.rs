@@ -33,6 +33,23 @@ pub fn params(w: &[f32], bits: u8) -> AffineParams {
         lo = 0.0;
         hi = 0.0;
     }
+    params_from_range(lo, hi, bits)
+}
+
+/// Scale / zero-point from a precomputed `[lo, hi]` tensor range — the
+/// [`params`] tail, split out so callers that never materialize an f32
+/// slice (the packed digital path sweeps decoded codes) derive params
+/// through the exact same arithmetic.
+pub fn params_from_range(lo: f32, hi: f32, bits: u8) -> AffineParams {
+    if hi == lo {
+        // Degenerate all-equal tensor: the span is zero, so any scale
+        // represents it.  Scale 1 makes code 0 decode to exactly `lo`
+        // (q = floor(v - lo) = 0 → (0 + lo) · 1 = lo, both roundings),
+        // where the span/levels formula would clamp the scale to 1e-12
+        // and blow the zero-point up to -lo/1e-12, recovering the
+        // constant only to float luck.
+        return AffineParams { scale: 1.0, zero_point: -lo };
+    }
     let levels = ((1u64 << bits) - 1) as f32;
     let scale = ((hi - lo) / levels).max(SCALE_EPS);
     AffineParams { scale, zero_point: -lo / scale }
@@ -119,6 +136,62 @@ pub fn encode_tensor(w: &[f32], bits: u8) -> (Vec<u32>, AffineParams) {
 /// Inverse of [`encode_tensor`].
 pub fn decode_tensor(codes: &[u32], p: AffineParams) -> Vec<f32> {
     codes.iter().map(|&c| decode(c, p)).collect()
+}
+
+/// u32 words needed to hold `n` codes of `bits` each, LSB-first.
+///
+/// [`encode_tensor`] spends a full u32 per code at any width; the packed
+/// stream spends exactly `bits` bits per code, so a 4-bit row costs n/8
+/// words instead of n.
+pub const fn packed_words(n: usize, bits: u8) -> usize {
+    (n * bits as usize).div_ceil(32)
+}
+
+/// Encode `w` into an LSB-first bit-packed code stream at `bits` per
+/// value — the storage form behind [`crate::kernels::PackedPlane`].
+/// `out` must be exactly `packed_words(w.len(), bits)` long and is fully
+/// overwritten.  Returns the affine params the codes decode with; the
+/// round trip `decode(unpack_code(..)) == fake_quant(w)` is bit-exact
+/// because pack/unpack move the integer codes losslessly and
+/// encode→decode already IS the fake-quant op sequence.
+// mpota-lint: zero-alloc-hot
+pub fn encode_packed(w: &[f32], bits: u8, out: &mut [u32]) -> AffineParams {
+    let p = params(w, bits);
+    let max_code = ((1u64 << bits) - 1) as u32;
+    assert_eq!(out.len(), packed_words(w.len(), bits), "packed row width");
+    out.fill(0);
+    let b = bits as usize;
+    for (i, &v) in w.iter().enumerate() {
+        let code = encode(v, p, max_code);
+        let off = i * b;
+        let word = off / 32;
+        let shift = off % 32;
+        out[word] |= code << shift;
+        if shift + b > 32 {
+            // 3/6-bit codes can straddle a word boundary: the high bits
+            // spill into the next word's low end
+            out[word + 1] |= code >> (32 - shift);
+        }
+    }
+    p
+}
+
+/// Extract code `idx` from an LSB-first bit-packed stream (inverse of
+/// [`encode_packed`]'s placement; straddling codes reassemble through a
+/// two-word u64 window).
+#[inline]
+pub fn unpack_code(words: &[u32], idx: usize, bits: u8) -> u32 {
+    let b = bits as usize;
+    let mask = ((1u64 << bits) - 1) as u32;
+    let off = idx * b;
+    let word = off / 32;
+    let shift = off % 32;
+    if shift + b <= 32 {
+        (words[word] >> shift) & mask
+    } else {
+        let window = words[word] as u64 | ((words[word + 1] as u64) << 32);
+        ((window >> shift) as u32) & mask
+    }
 }
 
 #[cfg(test)]
@@ -211,5 +284,74 @@ mod tests {
         let mut w: Vec<f32> = vec![];
         fake_quant_inplace(&mut w, 8);
         assert!(w.is_empty());
+    }
+
+    #[test]
+    fn constant_rows_roundtrip_exactly_at_every_width() {
+        // the degenerate all-equal case: scale 1 / zero-point -c makes
+        // code 0 decode to exactly c — bit-for-bit, both roundings, at
+        // every supported fixed-point width
+        for bits in [2u8, 3, 4, 6, 8, 16] {
+            for &c in &[0.7311f32, -42.0, 3.25e-8, -1.5e9, 1.0, -0.125] {
+                let w = vec![c; 17];
+                let p = params(&w, bits);
+                assert_eq!(p.scale, 1.0, "bits={bits} c={c}");
+                for nearest in [false, true] {
+                    let mut fq = w.clone();
+                    fake_quant_inplace_mode(&mut fq, bits, nearest);
+                    for v in &fq {
+                        assert_eq!(
+                            v.to_bits(),
+                            c.to_bits(),
+                            "bits={bits} c={c} nearest={nearest}"
+                        );
+                    }
+                }
+                let (codes, cp) = encode_tensor(&w, bits);
+                assert!(codes.iter().all(|&code| code == 0), "bits={bits} c={c}");
+                for d in decode_tensor(&codes, cp) {
+                    assert_eq!(d.to_bits(), c.to_bits(), "bits={bits} c={c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn constant_zero_rows_stay_zero_at_every_width() {
+        // ±0.0 collapses to +0.0 through the affine round trip (the
+        // zero-point negation normalises the sign), which is exact
+        for bits in [2u8, 3, 4, 6, 8, 16] {
+            for &c in &[0.0f32, -0.0] {
+                let mut w = vec![c; 9];
+                fake_quant_inplace(&mut w, bits);
+                assert!(w.iter().all(|&v| v == 0.0), "bits={bits} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_codes_roundtrip_encode_tensor_at_every_width() {
+        let mut rng = Rng::seed_from(31);
+        let w: Vec<f32> = (0..517).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        for bits in [2u8, 3, 4, 6, 8, 16] {
+            let (codes, p) = encode_tensor(&w, bits);
+            let mut packed = vec![0u32; packed_words(w.len(), bits)];
+            let pp = encode_packed(&w, bits, &mut packed);
+            assert_eq!(pp, p, "bits={bits}");
+            for (i, &c) in codes.iter().enumerate() {
+                assert_eq!(unpack_code(&packed, i, bits), c, "bits={bits} [{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_words_is_tight() {
+        assert_eq!(packed_words(0, 4), 0);
+        assert_eq!(packed_words(8, 4), 1);
+        assert_eq!(packed_words(9, 4), 2);
+        assert_eq!(packed_words(32, 2), 2);
+        assert_eq!(packed_words(11, 3), 2); // 33 bits
+        assert_eq!(packed_words(10, 16), 5);
+        assert_eq!(packed_words(5, 6), 1); // 30 bits
     }
 }

@@ -13,7 +13,7 @@
 use crate::channel::RoundChannel;
 use crate::config::Aggregation;
 use crate::fl;
-use crate::kernels::PayloadPlane;
+use crate::kernels::{PackedPlane, PayloadPlane};
 use crate::ota::{self, analog::OtaScratch, AggregateStats};
 use crate::quant::Precision;
 use crate::rng::Rng;
@@ -189,6 +189,35 @@ pub trait Aggregator {
         unimplemented!("aggregator does not support streaming rounds")
     }
 
+    /// Whether [`accumulate_packed_into`](Self::accumulate_packed_into)
+    /// is implemented: the shard arrives BIT-PACKED at each row's
+    /// assigned precision (`RunConfig.packed_planes`) and the aggregator
+    /// decodes-and-accumulates without materializing f32 rows.
+    ///
+    /// Contract: a packed stream must be bit-identical to the f32 stream
+    /// over the fake-quantized rows the packed rows decode to, for every
+    /// shard partition (`rust/tests/shard_invariance.rs` pins the round
+    /// loop both ways).  Default `false`: the coordinator then stages
+    /// shards through the f32 plane.
+    fn supports_packed(&self) -> bool {
+        false
+    }
+
+    /// Packed-shard form of [`accumulate_into`](Self::accumulate_into):
+    /// fold rows `slot0 .. slot0 + shard.k()`, decoding each row's codes
+    /// inline.  Only called when
+    /// [`supports_packed`](Self::supports_packed) returns true.
+    fn accumulate_packed_into(
+        &mut self,
+        shard: &PackedPlane,
+        slot0: usize,
+        ctx: &mut AggCtx<'_>,
+        scratch: &mut AggScratch,
+    ) {
+        let _ = (shard, slot0, ctx, scratch);
+        unimplemented!("aggregator does not support packed shards")
+    }
+
     /// Short architecture name for labels/reports ("ota", "digital", ...).
     fn name(&self) -> &'static str;
 }
@@ -249,6 +278,27 @@ impl Aggregator for AnalogOta {
             scratch.ota_mut(),
             ctx.threads,
         )
+    }
+
+    fn supports_packed(&self) -> bool {
+        true
+    }
+
+    fn accumulate_packed_into(
+        &mut self,
+        shard: &PackedPlane,
+        slot0: usize,
+        ctx: &mut AggCtx<'_>,
+        scratch: &mut AggScratch,
+    ) {
+        ota::analog::accumulate_packed_masked_into(
+            shard,
+            slot0,
+            ctx.channel,
+            ctx.included,
+            scratch.ota_mut(),
+            ctx.threads,
+        );
     }
 
     fn name(&self) -> &'static str {
@@ -313,6 +363,28 @@ impl Aggregator for DigitalOrthogonal {
     ) {
         scratch.slot = Slot::Agg;
         ota::digital::accumulate_plane_masked_into(
+            shard,
+            ctx.precisions,
+            ctx.included,
+            scratch.agg.as_mut_slice(),
+            ctx.threads,
+            &mut scratch.partial,
+        );
+    }
+
+    fn supports_packed(&self) -> bool {
+        true
+    }
+
+    fn accumulate_packed_into(
+        &mut self,
+        shard: &PackedPlane,
+        _slot0: usize,
+        ctx: &mut AggCtx<'_>,
+        scratch: &mut AggScratch,
+    ) {
+        scratch.slot = Slot::Agg;
+        ota::digital::accumulate_packed_masked_into(
             shard,
             ctx.precisions,
             ctx.included,
@@ -404,6 +476,31 @@ impl Aggregator for IdealFedAvg {
         let f = 1.0f32 / scratch.total_k as f32;
         scratch.slot = Slot::Agg;
         fl::mean_plane_masked_accumulate(
+            shard,
+            f,
+            ctx.included,
+            scratch.agg.as_mut_slice(),
+            ctx.threads,
+        );
+    }
+
+    fn supports_packed(&self) -> bool {
+        true
+    }
+
+    fn accumulate_packed_into(
+        &mut self,
+        shard: &PackedPlane,
+        _slot0: usize,
+        ctx: &mut AggCtx<'_>,
+        scratch: &mut AggScratch,
+    ) {
+        if scratch.total_k == 0 {
+            return;
+        }
+        let f = 1.0f32 / scratch.total_k as f32;
+        scratch.slot = Slot::Agg;
+        fl::mean_packed_masked_accumulate(
             shard,
             f,
             ctx.included,

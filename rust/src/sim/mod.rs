@@ -394,6 +394,38 @@ impl Session {
         self.aggregator.accumulate_into(shard, slot0, &mut ctx, &mut self.scratch);
     }
 
+    /// Whether the configured aggregator can fold bit-packed shards
+    /// directly — see [`Aggregator::supports_packed`].  Callers that
+    /// stage shards as [`crate::kernels::PackedPlane`] must check this
+    /// first and fall back to the f32 streaming entry otherwise.
+    pub fn supports_packed(&self) -> bool {
+        self.aggregator.supports_packed()
+    }
+
+    /// Packed twin of
+    /// [`accumulate_shard_masked`](Self::accumulate_shard_masked): folds a
+    /// bit-packed shard (rows stored at their transmission precision)
+    /// into the round accumulator, decoding codes inline in the fused
+    /// kernels.  Bit-identical to staging each row through
+    /// [`crate::quant::fake_quant_inplace`] and calling the f32 entry —
+    /// `decode(pack(x)) == fake_quant(x)` bit-for-bit per element.
+    pub fn accumulate_packed_shard_masked(
+        &mut self,
+        shard: &crate::kernels::PackedPlane,
+        slot0: usize,
+        precisions: &[Precision],
+        included: Option<&[bool]>,
+    ) {
+        let mut ctx = AggCtx {
+            channel: &self.round_channel,
+            precisions,
+            noise_rng: &mut self.noise_rng,
+            threads: self.threads,
+            included,
+        };
+        self.aggregator.accumulate_packed_into(shard, slot0, &mut ctx, &mut self.scratch);
+    }
+
     /// Finish the streaming round (noise injection, scaling, diagnostics)
     /// and notify observers; [`result`](Self::result) holds the
     /// aggregated mean afterwards.  A single-shard stream produces

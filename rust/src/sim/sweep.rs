@@ -61,7 +61,7 @@ use crate::channel::FadingKind;
 use crate::config::{Aggregation, PolicyKind, RunConfig};
 use crate::fl::{self, Scheme};
 use crate::json::Value;
-use crate::kernels::PayloadPlane;
+use crate::kernels::{PackedPlane, PayloadPlane};
 use crate::metrics::RoundRecord;
 use crate::quant;
 use crate::rng::Rng;
@@ -459,6 +459,11 @@ struct CellBufs {
     /// generation of the next super-shard overlaps superposition of the
     /// previous one, mirroring the coordinator's round engine.
     plane2: PayloadPlane,
+    /// Bit-packed transport twins of `plane`/`plane2`
+    /// (`RunConfig::packed_planes`): each super-shard's rows packed at
+    /// their assigned precision, folded by the packed fused kernels.
+    packed: PackedPlane,
+    packed2: PackedPlane,
     selected: Vec<usize>,
     assigned: Vec<crate::quant::Precision>,
     /// Round-slot participation mask (deadline/dropout exclusion).
@@ -478,6 +483,8 @@ impl Default for CellBufs {
             channel: crate::channel::RoundChannel::empty(),
             plane: PayloadPlane::new(),
             plane2: PayloadPlane::new(),
+            packed: PackedPlane::new(),
+            packed2: PackedPlane::new(),
             selected: Vec::new(),
             assigned: Vec::new(),
             included: Vec::new(),
@@ -493,9 +500,16 @@ impl Default for CellBufs {
 /// mean.  Payloads are drawn for EVERY slot — excluded ones too — so the
 /// payload stream stays paired across the deadline/dropout axes; the
 /// exclusion shows up only through the mask.
+///
+/// Transport staging: with `packed = None` the rows are fake-quantized in
+/// place (the f32 transport form); with `Some` the rows stay RAW and the
+/// packed plane stores the transmission codes instead — which decode to
+/// `fake_quant(row)` bit for bit, so both forms feed the ideal mean (and
+/// the aggregator) identical per-element contributions in identical order.
 #[allow(clippy::too_many_arguments)]
 fn gen_super_shard(
     plane: &mut PayloadPlane,
+    packed: Option<&mut PackedPlane>,
     lo: usize,
     hi: usize,
     n: usize,
@@ -508,18 +522,37 @@ fn gen_super_shard(
     threads: usize,
 ) {
     plane.reset(hi - lo, n);
-    for r in 0..(hi - lo) {
-        let row = plane.row_mut(r);
-        rng.fill_normal(row, 0.0, 1.0);
-        quant::fake_quant_inplace(row, assigned[lo + r]);
+    match packed {
+        None => {
+            for r in 0..(hi - lo) {
+                let row = plane.row_mut(r);
+                rng.fill_normal(row, 0.0, 1.0);
+                quant::fake_quant_inplace(row, assigned[lo + r]);
+            }
+            fl::mean_plane_masked_accumulate(
+                plane,
+                f,
+                if mask_on { Some(&included[lo..hi]) } else { None },
+                ideal,
+                threads,
+            );
+        }
+        Some(packed) => {
+            packed.reset(&assigned[lo..hi], n);
+            for r in 0..(hi - lo) {
+                let row = plane.row_mut(r);
+                rng.fill_normal(row, 0.0, 1.0);
+                packed.pack_row(r, row);
+            }
+            fl::mean_packed_masked_accumulate(
+                packed,
+                f,
+                if mask_on { Some(&included[lo..hi]) } else { None },
+                ideal,
+                threads,
+            );
+        }
     }
-    fl::mean_plane_masked_accumulate(
-        plane,
-        f,
-        if mask_on { Some(&included[lo..hi]) } else { None },
-        ideal,
-        threads,
-    );
 }
 
 /// Human-readable cell coordinates (report summaries, stream labels).
@@ -622,6 +655,11 @@ fn channel_cell(
         session.supports_streaming(),
         "channel-only cells require a streaming aggregator"
     );
+    // packed transport: stage each super-shard as a bit-packed plane and
+    // fold it through the packed fused kernels.  Bit-identical to the f32
+    // staging (decode == fake_quant per element), so the report diff in
+    // CI pins packed-on vs packed-off byte for byte modulo wall_secs.
+    let packed_on = cfg.packed_planes && session.supports_packed();
     let mut pol = policy::from_config(cfg.policy, &cfg);
     let pool = crate::exec::pool();
     // mirror the coordinator's pipelined-engine gate (built-in
@@ -699,13 +737,16 @@ fn channel_cell(
                 .saturating_mul(cfg.pipeline_depth)
                 .min(kk)
                 .max(1);
-            let CellBufs { plane, plane2, assigned, included, ideal, .. } =
-                &mut *bufs;
+            let CellBufs {
+                plane, plane2, packed, packed2, assigned, included, ideal, ..
+            } = &mut *bufs;
             let threads = cfg.threads;
             // first super-shard generates alone (nothing to overlap yet)
             let mut prev_hi = step.min(kk);
             gen_super_shard(
-                plane, 0, prev_hi, n, &mut payload_rng, assigned, included,
+                plane,
+                if packed_on { Some(&mut *packed) } else { None },
+                0, prev_hi, n, &mut payload_rng, assigned, included,
                 mask_on, f, ideal, threads,
             );
             let mut prev_lo = 0usize;
@@ -713,17 +754,22 @@ fn channel_cell(
             while prev_hi < kk {
                 let cur_lo = prev_hi;
                 let cur_hi = (cur_lo + step).min(kk);
-                let (cur_plane, prev_plane): (&mut PayloadPlane, &PayloadPlane) =
-                    if cur_in_b {
-                        (&mut *plane2, &*plane)
-                    } else {
-                        (&mut *plane, &*plane2)
-                    };
+                let (cur_plane, cur_packed, prev_plane, prev_packed): (
+                    &mut PayloadPlane,
+                    &mut PackedPlane,
+                    &PayloadPlane,
+                    &PackedPlane,
+                ) = if cur_in_b {
+                    (&mut *plane2, &mut *packed2, &*plane, &*packed)
+                } else {
+                    (&mut *plane, &mut *packed, &*plane2, &*packed2)
+                };
                 let prev_prec = &assigned[prev_lo..prev_hi];
                 let prev_mask =
                     if mask_on { Some(&included[prev_lo..prev_hi]) } else { None };
                 let session_ptr = crate::exec::SendMutPtr::from_mut(&mut session);
                 let plane_ptr = crate::exec::SendMutPtr::from_mut(cur_plane);
+                let packed_ptr = crate::exec::SendMutPtr::from_mut(cur_packed);
                 let rng_ptr = crate::exec::SendMutPtr::from_mut(&mut payload_rng);
                 let ideal_ptr = crate::exec::SendMutPtr::from_mut(ideal);
                 let assigned_ref: &[crate::quant::Precision] = assigned.as_slice();
@@ -733,18 +779,32 @@ fn channel_cell(
                         // SAFETY: sole Session toucher of this dispatch;
                         // the borrow outlives the blocking broadcast.
                         let session = unsafe { session_ptr.get() };
-                        session.accumulate_shard_masked(
-                            prev_plane, prev_lo, prev_prec, prev_mask,
-                        );
+                        if packed_on {
+                            session.accumulate_packed_shard_masked(
+                                prev_packed, prev_lo, prev_prec, prev_mask,
+                            );
+                        } else {
+                            session.accumulate_shard_masked(
+                                prev_plane, prev_lo, prev_prec, prev_mask,
+                            );
+                        }
                     } else {
                         // SAFETY: sole toucher of the generation-side
-                        // buffers (cur plane, payload RNG, ideal) — the
-                        // superpose task reads only the OTHER plane.
+                        // buffers (cur plane + its packed twin, payload
+                        // RNG, ideal) — the superpose task reads only the
+                        // OTHER plane pair.
                         let cur = unsafe { plane_ptr.get() };
                         let rng = unsafe { rng_ptr.get() };
                         let ideal = unsafe { ideal_ptr.get() };
+                        let curp = if packed_on {
+                            // SAFETY: same claim as above — generation
+                            // side owns the current packed plane.
+                            Some(unsafe { packed_ptr.get() })
+                        } else {
+                            None
+                        };
                         gen_super_shard(
-                            cur, cur_lo, cur_hi, n, rng, assigned_ref,
+                            cur, curp, cur_lo, cur_hi, n, rng, assigned_ref,
                             included_ref, mask_on, f, ideal, threads,
                         );
                     }
@@ -760,29 +820,49 @@ fn channel_cell(
                 cur_in_b = !cur_in_b;
             }
             // drain: the last generated super-shard superposes serially
-            let last_plane: &PayloadPlane =
-                if cur_in_b { &*plane } else { &*plane2 };
-            session.accumulate_shard_masked(
-                last_plane,
-                prev_lo,
-                &assigned[prev_lo..prev_hi],
-                if mask_on { Some(&included[prev_lo..prev_hi]) } else { None },
-            );
+            let (last_plane, last_packed): (&PayloadPlane, &PackedPlane) =
+                if cur_in_b { (&*plane, &*packed) } else { (&*plane2, &*packed2) };
+            if packed_on {
+                session.accumulate_packed_shard_masked(
+                    last_packed,
+                    prev_lo,
+                    &assigned[prev_lo..prev_hi],
+                    if mask_on { Some(&included[prev_lo..prev_hi]) } else { None },
+                );
+            } else {
+                session.accumulate_shard_masked(
+                    last_plane,
+                    prev_lo,
+                    &assigned[prev_lo..prev_hi],
+                    if mask_on { Some(&included[prev_lo..prev_hi]) } else { None },
+                );
+            }
         } else {
             let mut lo = 0usize;
             while lo < kk {
                 let hi = (lo + shard).min(kk);
                 gen_super_shard(
-                    &mut bufs.plane, lo, hi, n, &mut payload_rng,
+                    &mut bufs.plane,
+                    if packed_on { Some(&mut bufs.packed) } else { None },
+                    lo, hi, n, &mut payload_rng,
                     &bufs.assigned, &bufs.included, mask_on, f,
                     &mut bufs.ideal, cfg.threads,
                 );
-                session.accumulate_shard_masked(
-                    &bufs.plane,
-                    lo,
-                    &bufs.assigned[lo..hi],
-                    if mask_on { Some(&bufs.included[lo..hi]) } else { None },
-                );
+                if packed_on {
+                    session.accumulate_packed_shard_masked(
+                        &bufs.packed,
+                        lo,
+                        &bufs.assigned[lo..hi],
+                        if mask_on { Some(&bufs.included[lo..hi]) } else { None },
+                    );
+                } else {
+                    session.accumulate_shard_masked(
+                        &bufs.plane,
+                        lo,
+                        &bufs.assigned[lo..hi],
+                        if mask_on { Some(&bufs.included[lo..hi]) } else { None },
+                    );
+                }
                 lo = hi;
             }
         }
@@ -1411,6 +1491,48 @@ mod tests {
                 "channel_uses_per_round",
             ] {
                 assert_eq!(x.get(key), y.get(key), "{key} differs serial vs pipelined");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_cells_match_f32_staging_bit_for_bit() {
+        // packed transport is a pure storage transformation: the same
+        // grid with packed_planes on (the default) vs off must agree on
+        // every science field — serial, sharded AND pipelined — because
+        // decode(pack(x)) == fake_quant(x) bit for bit per element
+        let mut spec = tiny_spec();
+        spec.base.rounds = 4;
+        spec.aggregations =
+            vec![Aggregation::OtaAnalog, Aggregation::Digital, Aggregation::Ideal];
+        spec.shard_sizes = vec![0, 2];
+        assert!(spec.base.packed_planes, "packed transport is the default");
+        let on = run_channel_sweep(&spec).unwrap();
+        spec.base.packed_planes = false;
+        let off = run_channel_sweep(&spec).unwrap();
+        spec.base.packed_planes = true;
+        spec.base.pipeline_depth = 2;
+        let piped = run_channel_sweep(&spec).unwrap();
+        let ca = on.json.get("cells").unwrap().as_array().unwrap();
+        let cb = off.json.get("cells").unwrap().as_array().unwrap();
+        let cc = piped.json.get("cells").unwrap().as_array().unwrap();
+        assert_eq!(ca.len(), cb.len());
+        assert_eq!(ca.len(), cc.len());
+        assert_eq!(ca.len(), spec.grid_size());
+        for ((x, y), z) in ca.iter().zip(cb.iter()).zip(cc.iter()) {
+            for key in [
+                "scheme",
+                "snr_db",
+                "aggregation",
+                "shard_size",
+                "mean_mse_vs_ideal",
+                "lost_rounds",
+                "mean_participants",
+                "bits_per_round",
+                "channel_uses_per_round",
+            ] {
+                assert_eq!(x.get(key), y.get(key), "{key} differs packed vs f32");
+                assert_eq!(x.get(key), z.get(key), "{key} differs packed vs piped");
             }
         }
     }

@@ -616,4 +616,65 @@ fn steady_state_round_path_is_allocation_free() {
         "steady-state pipelined double-buffered rounds allocated {} times",
         after - before
     );
+
+    // ---- phase 7: bit-packed streaming shards (PR-9 packed transport) ----
+    // the packed round shape: raw client rows are bit-packed into the
+    // reusable PackedPlane (packing IS the transmission quantization) and
+    // superposed through the fused unpack-fuse kernels at threads=4.  The
+    // precisions cover every row representation — raw words (32), masked
+    // words (24), top-16 truncation (16/12) and affine code lanes (8/4).
+    // Warmup grows the word/meta buffers; steady state allocates nothing.
+    let mut pk_session = Session::new(
+        Box::new(RayleighPilot::new(ChannelConfig::default())),
+        Box::new(AnalogOta),
+        root.stream("channel-pk"),
+        root.stream("noise-pk"),
+        4,
+    );
+    assert!(pk_session.supports_packed());
+    let mut pk_plane = PayloadPlane::new();
+    let mut pk_packed = mpota::kernels::PackedPlane::new();
+    let pk_precisions: Vec<Precision> =
+        [32u8, 24, 16, 12, 8, 4].iter().map(|&b| Precision::of(b)).collect();
+    let pk_round = |t: usize,
+                    session: &mut Session,
+                    plane: &mut PayloadPlane,
+                    packed: &mut mpota::kernels::PackedPlane| {
+        session.begin_aggregate(t, 6, n);
+        let mut lo = 0usize;
+        while lo < 6 {
+            let hi = (lo + shard).min(6);
+            plane.reset(hi - lo, n);
+            for r in 0..hi - lo {
+                plane.row_mut(r).copy_from_slice(theta_ref);
+            }
+            packed.reset(&pk_precisions[lo..hi], n);
+            for r in 0..hi - lo {
+                packed.pack_row(r, plane.row(r));
+            }
+            session.accumulate_packed_shard_masked(
+                packed,
+                lo,
+                &pk_precisions[lo..hi],
+                None,
+            );
+            lo = hi;
+        }
+        let stats = session.finalize_aggregate(t, &pk_precisions);
+        std::hint::black_box(stats.participants);
+    };
+    for t in 1..=2 {
+        pk_round(t, &mut pk_session, &mut pk_plane, &mut pk_packed);
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for t in 3..=8 {
+        pk_round(t, &mut pk_session, &mut pk_plane, &mut pk_packed);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state packed streaming rounds allocated {} times",
+        after - before
+    );
 }

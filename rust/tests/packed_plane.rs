@@ -1,0 +1,197 @@
+//! Property suite for the bit-packed payload plane (PR-9).
+//!
+//! Three phases, one `#[test]` (the counting allocator is process-global,
+//! so parallel tests would pollute the phase-3 measurement — same policy
+//! as `tests/alloc_counter.rs`):
+//!
+//! 1. **Round-trip**: for every supported precision, `CASES` random
+//!    vectors (including the generator's degenerate all-zero/constant
+//!    cases) satisfy `unpack(pack(x)) == fake_quant(x)` bit for bit —
+//!    packing is exactly the transmission quantization, floor rounding.
+//! 2. **Mixed-width superposition**: a plane holding one row per
+//!    supported width superposes through `fused::superpose_packed`
+//!    bit-identically to `fused::superpose` over the fake-quantized f32
+//!    rows the packed codes decode to, at threads 1 and 4.
+//! 3. **Zero-alloc streaming**: a warm Session streaming bit-packed
+//!    shards (pack → accumulate → finalize, every row kind) performs
+//!    ZERO heap allocations per round.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: every method delegates to `System` verbatim — the only addition
+// is a relaxed atomic count — so System's GlobalAlloc contract carries over.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    // SAFETY: forwarded to `System` unchanged.
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    // SAFETY: forwarded to `System` unchanged (plus the count).
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+use mpota::channel::{ChannelConfig, C32};
+use mpota::kernels::{fused, PackedPlane, PayloadPlane};
+use mpota::quant::{self, Precision, SUPPORTED_LEVELS};
+use mpota::rng::Rng;
+use mpota::sim::{AnalogOta, RayleighPilot, Session};
+use mpota::testing;
+
+#[test]
+fn packed_plane_properties() {
+    // ---- phase 1: pack/unpack round-trip per width ----
+    for &bits in SUPPORTED_LEVELS.iter() {
+        let p = Precision::of(bits);
+        testing::check_vec(
+            &format!("packed-roundtrip-{bits}"),
+            testing::CASES,
+            2048,
+            |v| {
+                let mut plane = PackedPlane::new();
+                plane.reset(std::slice::from_ref(&p), v.len());
+                plane.pack_row(0, v);
+                let mut dst = vec![0.0f32; v.len()];
+                plane.unpack_row_into(0, &mut dst);
+                let want = quant::fake_quant(v, p);
+                dst.iter()
+                    .zip(want.iter())
+                    .all(|(a, b)| a.to_bits() == b.to_bits())
+            },
+        );
+    }
+
+    // ---- phase 2: mixed-width superposition vs the f32 reference ----
+    let levels: Vec<Precision> =
+        SUPPORTED_LEVELS.iter().map(|&b| Precision::of(b)).collect();
+    let k = levels.len();
+    // mpota-lint: allow(R4): property fixture root for this test binary
+    let root = Rng::seed_from(0x9ACC_ED01);
+    for case in 0..16u64 {
+        let mut rng = root.substream(case);
+        let n = 1 + rng.below(10_000);
+        let mut packed = PackedPlane::new();
+        packed.reset(&levels, n);
+        let mut fq = PayloadPlane::zeros(k, n);
+        let mut raw = vec![0.0f32; n];
+        for (r, &p) in levels.iter().enumerate() {
+            let scale = 10f32.powf(rng.uniform_in(-2.0, 2.0));
+            rng.fill_normal(&mut raw, 0.0, scale);
+            packed.pack_row(r, &raw);
+            let q = quant::fake_quant(&raw, p);
+            fq.row_mut(r).copy_from_slice(&q);
+        }
+        // random active subset with non-trivial complex gains
+        let active: Vec<(usize, C32)> = (0..k)
+            .filter(|_| rng.below(4) != 0)
+            .map(|i| (i, C32::new(rng.normal_f32(1.0, 0.3), rng.normal_f32(0.0, 0.3))))
+            .collect();
+        let mut want_re = vec![0.0f32; n];
+        let mut want_im = vec![0.0f32; n];
+        let mut want_id = vec![0.0f32; n];
+        fused::superpose(&fq, &active, &mut want_re, &mut want_im, &mut want_id, 1);
+        for threads in [1usize, 4] {
+            let mut y_re = vec![0.0f32; n];
+            let mut y_im = vec![0.0f32; n];
+            let mut ideal = vec![0.0f32; n];
+            fused::superpose_packed(
+                &packed, &active, &mut y_re, &mut y_im, &mut ideal, threads,
+            );
+            for (name, got, want) in [
+                ("y_re", &y_re, &want_re),
+                ("y_im", &y_im, &want_im),
+                ("ideal", &ideal, &want_id),
+            ] {
+                let diverged = got
+                    .iter()
+                    .zip(want.iter())
+                    .position(|(a, b)| a.to_bits() != b.to_bits());
+                assert_eq!(
+                    diverged, None,
+                    "case {case}: {name} diverged (n={n} threads={threads})"
+                );
+            }
+        }
+    }
+
+    // ---- phase 3: packed streaming stays zero-alloc once warm ----
+    // the streaming-round shape over every row kind: raw rows are packed
+    // into the recycled PackedPlane and superposed through the session's
+    // persistent air accumulator; after two warmup rounds grow the
+    // buffers, six more rounds must not allocate at all
+    let n = 4_096usize;
+    // mpota-lint: allow(R4): fixed seed for the zero-alloc fixture
+    let root = Rng::seed_from(77);
+    let mut session = Session::new(
+        Box::new(RayleighPilot::new(ChannelConfig::default())),
+        Box::new(AnalogOta),
+        root.stream("channel"),
+        root.stream("noise"),
+        4,
+    );
+    assert!(session.supports_packed());
+    let precisions: Vec<Precision> =
+        [32u8, 24, 16, 12, 8, 6, 4, 3, 2].iter().map(|&b| Precision::of(b)).collect();
+    let kk = precisions.len();
+    let shard = 4usize;
+    let mut src = PayloadPlane::new();
+    let mut packed = PackedPlane::new();
+    let mut fill_rng = root.stream("payloads");
+    let mut round = |t: usize,
+                     session: &mut Session,
+                     src: &mut PayloadPlane,
+                     packed: &mut PackedPlane,
+                     fill_rng: &mut Rng| {
+        session.begin_aggregate(t, kk, n);
+        let mut lo = 0usize;
+        while lo < kk {
+            let hi = (lo + shard).min(kk);
+            src.reset(hi - lo, n);
+            for r in 0..hi - lo {
+                fill_rng.fill_normal(src.row_mut(r), 0.0, 1.0);
+            }
+            packed.reset(&precisions[lo..hi], n);
+            for r in 0..hi - lo {
+                packed.pack_row(r, src.row(r));
+            }
+            session.accumulate_packed_shard_masked(
+                packed,
+                lo,
+                &precisions[lo..hi],
+                None,
+            );
+            lo = hi;
+        }
+        let stats = session.finalize_aggregate(t, &precisions);
+        std::hint::black_box(stats.participants);
+    };
+    for t in 1..=2 {
+        round(t, &mut session, &mut src, &mut packed, &mut fill_rng);
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for t in 3..=8 {
+        round(t, &mut session, &mut src, &mut packed, &mut fill_rng);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "warm packed streaming allocated {} times",
+        after - before
+    );
+}

@@ -343,6 +343,82 @@ fn profiling_policy_feedback_is_schedule_invariant() {
 }
 
 #[test]
+fn packed_transport_is_bit_identical_to_f32_staging_across_every_axis() {
+    // The PR-9 acceptance pin: bit-packed transport planes are a pure
+    // memory-layout change.  `PackedPlane::pack_row` stores each row at
+    // its assigned width and the fused unpack-superpose kernels decode
+    // exactly `fake_quant(x)` bit for bit, so packed-on trajectories
+    // reproduce packed-off trajectories across pipeline_depth ×
+    // shard_size × threads × workers, per aggregation architecture.
+    let dir = mock_artifacts_dir("shardinv_packed");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    for agg in [
+        mpota::config::Aggregation::OtaAnalog,
+        mpota::config::Aggregation::Digital,
+        mpota::config::Aggregation::Ideal,
+    ] {
+        let mut ref_cfg = base_cfg(FadingKind::Rayleigh, &dir);
+        ref_cfg.aggregation = agg;
+        ref_cfg.packed_planes = false;
+        let reference = run(ref_cfg, rt.clone());
+        for depth in [0usize, 2] {
+            for shard in [0usize, 1, 3] {
+                for (threads, workers) in [(1usize, 1usize), (4, 4)] {
+                    let mut cfg = base_cfg(FadingKind::Rayleigh, &dir);
+                    cfg.aggregation = agg;
+                    cfg.packed_planes = true;
+                    cfg.pipeline_depth = depth;
+                    cfg.shard_size = shard;
+                    cfg.threads = threads;
+                    cfg.workers = workers;
+                    let got = run(cfg, rt.clone());
+                    assert_trajectories_equal(
+                        &format!(
+                            "{agg:?} packed depth={depth} shard={shard} \
+                             threads={threads} workers={workers}"
+                        ),
+                        &reference,
+                        &got,
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_transport_covers_every_row_kind() {
+    // One scheme that exercises every PackedPlane row representation:
+    // 32-bit rows ride as raw f32 words, 24-bit as mantissa-masked words,
+    // 12-bit as top-16 truncations (two per word), 2-bit as LSB-first
+    // affine code lanes — all still bit-identical to f32 staging, sharded
+    // and pipelined.
+    let dir = mock_artifacts_dir("shardinv_packed_kinds");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    let mk = |packed: bool, depth: usize, shard: usize| {
+        let mut cfg = base_cfg(FadingKind::GaussMarkov, &dir);
+        cfg.scheme = Scheme::parse("32,24,12,2").unwrap();
+        cfg.packed_planes = packed;
+        cfg.pipeline_depth = depth;
+        cfg.shard_size = shard;
+        cfg.threads = 4;
+        cfg.workers = 4;
+        cfg
+    };
+    let reference = run(mk(false, 0, 0), rt.clone());
+    for depth in [0usize, 2] {
+        for shard in [0usize, 2] {
+            let got = run(mk(true, depth, shard), rt.clone());
+            assert_trajectories_equal(
+                &format!("row kinds depth={depth} shard={shard}"),
+                &reference,
+                &got,
+            );
+        }
+    }
+}
+
+#[test]
 fn shard_size_larger_than_k_is_one_shard() {
     // shard_size > K clamps to one whole-round shard — same trajectory
     let dir = mock_artifacts_dir("shardinv_clamp");

@@ -25,7 +25,10 @@
 //!   are their own entry points, are exempt.)
 //! * **R5** — no allocating calls inside functions tagged
 //!   `// mpota-lint: zero-alloc-hot` — the static complement to the
-//!   counting-allocator audit in `rust/tests/alloc_counter.rs`.
+//!   counting-allocator audit in `rust/tests/alloc_counter.rs`.  In
+//!   `rust/src/kernels/` the tag is itself mandatory for hot-path
+//!   kernels (fn names containing `superpose`/`axpy`/`pack`): an
+//!   untagged packed kernel is a lint failure.
 //! * **R6** — unsafe-count ratchet: each file's `unsafe` site count
 //!   must not exceed its committed baseline
 //!   (`tools/lint/baseline.json`).
@@ -562,6 +565,10 @@ const R5_PATH_TYPES: [&str; 10] = [
 const R5_PATH_FNS: [&str; 5] = ["new", "with_capacity", "from", "from_iter", "pin"];
 const R5_METHODS: [&str; 4] = ["to_vec", "to_owned", "to_string", "collect"];
 const R5_MACROS: [&str; 2] = ["vec", "format"];
+/// Hot-path kernel name fragments: a non-test `fn` in `rust/src/kernels/`
+/// whose name contains one of these IS superposition hot path and must
+/// carry the `// mpota-lint: zero-alloc-hot` tag (R5 coverage check).
+const R5_KERNEL_NAMES: [&str; 3] = ["superpose", "axpy", "pack"];
 const R4_IDENTS: [&str; 5] =
     ["seed_from", "thread_rng", "from_entropy", "StdRng", "SmallRng"];
 
@@ -667,6 +674,42 @@ pub fn scan_source(rel: &str, src: &str, baseline_unsafe: usize) -> FileScan {
                 message: "`zero-alloc-hot` marker is not followed by a fn with a body"
                     .into(),
             }),
+        }
+    }
+
+    // --- R5 coverage: kernel hot paths must carry the tag ---------------
+    // Packed/superpose/axpy kernels in rust/src/kernels/ run inside the
+    // zero-alloc streaming window; an untagged one silently escapes both
+    // the static R5 body scan and reviewer attention, so the tag itself
+    // is mandatory there.
+    if rel.starts_with("rust/src/kernels/") {
+        for ti in 0..toks.len() {
+            if !toks[ti].is_ident("fn") || in_test(ti) {
+                continue;
+            }
+            let Some(name) = toks.get(ti + 1).and_then(|t| t.ident()) else {
+                continue;
+            };
+            if !R5_KERNEL_NAMES.iter().any(|m| name.contains(m)) {
+                continue;
+            }
+            let line = toks[ti].line;
+            let tagged = comment_scope_satisfies(lines, line, |l| {
+                directives.hot_markers.contains(&l)
+            });
+            if !tagged {
+                raw.push(Diagnostic {
+                    file: rel.to_string(),
+                    line,
+                    rule: Rule::R5,
+                    message: format!(
+                        "kernel `{name}` is on the packed/superposition hot \
+                         path but is not tagged `// mpota-lint: \
+                         zero-alloc-hot` — tag it so the static allocation \
+                         scan covers its body"
+                    ),
+                });
+            }
         }
     }
 

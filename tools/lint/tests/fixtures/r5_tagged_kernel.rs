@@ -1,0 +1,10 @@
+//! Fixture: the same packed kernel WITH the zero-alloc-hot tag — clean at
+//! any path, and its body is covered by the R5 allocation scan.
+
+/// Decode-and-accumulate over a packed row (fixture body; never compiled).
+// mpota-lint: zero-alloc-hot
+pub fn superpose_packed(plane: &PackedPlane, y: &mut [f32]) {
+    for (i, d) in y.iter_mut().enumerate() {
+        *d += plane.get(i);
+    }
+}

@@ -1,0 +1,11 @@
+//! Fixture: a packed-superposition kernel WITHOUT the zero-alloc-hot tag.
+//! Scanned at a `rust/src/kernels/` path this must fire R5 (coverage);
+//! scanned anywhere else it is clean — the tag requirement is scoped to
+//! the kernel directory.
+
+/// Decode-and-accumulate over a packed row (fixture body; never compiled).
+pub fn superpose_packed(plane: &PackedPlane, y: &mut [f32]) {
+    for (i, d) in y.iter_mut().enumerate() {
+        *d += plane.get(i);
+    }
+}

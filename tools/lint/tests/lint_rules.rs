@@ -98,6 +98,34 @@ fn r5_allow_escape_suppresses() {
 }
 
 #[test]
+fn r5_untagged_packed_kernel_fires_in_kernels_dir() {
+    // a superpose/axpy/pack-named fn under rust/src/kernels/ must carry
+    // the zero-alloc-hot tag
+    let src = fixture("r5_untagged_kernel.rs");
+    let scan = scan_source("rust/src/kernels/fixture.rs", &src, 0);
+    let rules: Vec<Rule> = scan.diagnostics.iter().map(|d| d.rule).collect();
+    assert_eq!(rules, vec![Rule::R5], "{:?}", scan.diagnostics);
+}
+
+#[test]
+fn r5_tagged_packed_kernel_is_clean() {
+    let src = fixture("r5_tagged_kernel.rs");
+    let scan = scan_source("rust/src/kernels/fixture.rs", &src, 0);
+    assert!(scan.diagnostics.is_empty(), "{:?}", scan.diagnostics);
+}
+
+#[test]
+fn r5_kernel_tag_requirement_is_scoped_to_the_kernels_dir() {
+    // the same untagged source elsewhere (and in test mods) is clean
+    let src = fixture("r5_untagged_kernel.rs");
+    let scan = scan_source("rust/src/fixtures/r5_untagged_kernel.rs", &src, 0);
+    assert!(scan.diagnostics.is_empty(), "{:?}", scan.diagnostics);
+    let in_test = format!("#[cfg(test)]\nmod tests {{\n{src}\n}}\n");
+    let scan = scan_source("rust/src/kernels/fixture.rs", &in_test, 0);
+    assert!(scan.diagnostics.is_empty(), "{:?}", scan.diagnostics);
+}
+
+#[test]
 fn r6_ratchet_fires_when_count_exceeds_baseline() {
     assert_eq!(rules_of("r6_ratchet.rs", 1), vec![Rule::R6]);
     assert_eq!(rules_of("r6_ratchet.rs", 2), Vec::<Rule>::new());
