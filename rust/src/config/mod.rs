@@ -153,6 +153,44 @@ impl std::fmt::Display for DropoutKind {
     }
 }
 
+/// How the training corpus is split across clients (the config-file name
+/// for the [`crate::data`] partitioners).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionKind {
+    /// Equal-size random shards from one global shuffle — every client's
+    /// label marginal matches the corpus (the historical default).
+    Iid,
+    /// Dirichlet(α) label skew (Hsu et al.-style per-class proportion
+    /// draws): small `RunConfig::alpha` concentrates each class on few
+    /// clients, large α approaches IID.  Optional power-law sample-count
+    /// skew via `RunConfig::skew_zipf`.
+    Dirichlet,
+}
+
+impl std::str::FromStr for PartitionKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "iid" | "uniform" => Ok(PartitionKind::Iid),
+            "dirichlet" | "dir" | "non-iid" | "noniid" => Ok(PartitionKind::Dirichlet),
+            other => bail!("unknown partition '{other}' (iid|dirichlet)"),
+        }
+    }
+}
+
+impl std::fmt::Display for PartitionKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}",
+            match self {
+                PartitionKind::Iid => "iid",
+                PartitionKind::Dirichlet => "dirichlet",
+            }
+        )
+    }
+}
+
 /// What clients put on the air each round.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Transmit {
@@ -308,6 +346,19 @@ pub struct RunConfig {
     pub train_samples: usize,
     /// Held-out test samples.
     pub test_samples: usize,
+    /// How the training corpus is split across the fleet (IID equal
+    /// shards by default; `dirichlet` enables label-skewed shards).
+    pub partition: PartitionKind,
+    /// Dirichlet concentration α for the `dirichlet` partition: per-class
+    /// client proportions are drawn from Dirichlet(α), so α → 0
+    /// concentrates each class on few clients and α → ∞ approaches IID.
+    /// Ignored by the `iid` partition.
+    pub alpha: f64,
+    /// Power-law sample-count skew for the `dirichlet` partition: client
+    /// i's expected shard size is proportional to `(i+1)^-skew_zipf`
+    /// (0 = equal expected sizes).  Every client keeps at least one train
+    /// batch of samples.  Ignored by the `iid` partition.
+    pub skew_zipf: f64,
     /// Aggregation path.
     pub aggregation: Aggregation,
     /// Payload semantics (updates vs full weights).
@@ -359,6 +410,9 @@ impl Default for RunConfig {
             lr: 0.05,
             train_samples: 3840,
             test_samples: 960,
+            partition: PartitionKind::Iid,
+            alpha: 0.5,
+            skew_zipf: 0.0,
             aggregation: Aggregation::OtaAnalog,
             transmit: Transmit::Updates,
             channel: ChannelConfig::default(),
@@ -418,6 +472,12 @@ impl RunConfig {
         }
         if self.train_samples < self.clients {
             bail!("need at least one training sample per client");
+        }
+        if !(self.alpha > 0.0 && self.alpha.is_finite()) {
+            bail!("alpha {} must be positive and finite", self.alpha);
+        }
+        if !(self.skew_zipf >= 0.0 && self.skew_zipf.is_finite()) {
+            bail!("skew_zipf {} must be >= 0 and finite", self.skew_zipf);
         }
         if self.eval_every == 0 {
             bail!("eval_every must be positive");
@@ -492,6 +552,9 @@ impl RunConfig {
                 "lr" => self.lr = val.as_f64()? as f32,
                 "train_samples" => self.train_samples = val.as_usize()?,
                 "test_samples" => self.test_samples = val.as_usize()?,
+                "partition" => self.partition = val.as_str()?.parse()?,
+                "alpha" => self.alpha = val.as_f64()?,
+                "skew_zipf" => self.skew_zipf = val.as_f64()?,
                 "aggregation" => self.aggregation = val.as_str()?.parse()?,
                 "transmit" => self.transmit = val.as_str()?.parse()?,
                 "snr_db" => self.channel.snr_db = val.as_f64()? as f32,
@@ -559,6 +622,9 @@ impl RunConfig {
         o.set("lr", Value::Num(self.lr as f64));
         o.set("train_samples", Value::Num(self.train_samples as f64));
         o.set("test_samples", Value::Num(self.test_samples as f64));
+        o.set("partition", Value::Str(self.partition.to_string()));
+        o.set("alpha", Value::Num(self.alpha));
+        o.set("skew_zipf", Value::Num(self.skew_zipf));
         o.set("aggregation", Value::Str(self.aggregation.to_string()));
         o.set("transmit", Value::Str(self.transmit.to_string()));
         o.set("snr_db", Value::Num(self.channel.snr_db as f64));
@@ -683,6 +749,9 @@ mod tests {
         c.lr = 0.125;
         c.train_samples = 600;
         c.test_samples = 120;
+        c.partition = PartitionKind::Dirichlet;
+        c.alpha = 0.1;
+        c.skew_zipf = 1.5;
         c.aggregation = Aggregation::Digital;
         c.transmit = Transmit::Weights;
         c.channel.snr_db = 7.5;
@@ -916,6 +985,49 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = RunConfig::default();
         c.slot_s = f64::INFINITY;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn partition_knobs_parse_validate_and_roundtrip() {
+        assert_eq!("iid".parse::<PartitionKind>().unwrap(), PartitionKind::Iid);
+        assert_eq!(
+            "dirichlet".parse::<PartitionKind>().unwrap(),
+            PartitionKind::Dirichlet
+        );
+        assert_eq!("dir".parse::<PartitionKind>().unwrap(), PartitionKind::Dirichlet);
+        assert_eq!(
+            "non-iid".parse::<PartitionKind>().unwrap(),
+            PartitionKind::Dirichlet
+        );
+        assert!("sorted".parse::<PartitionKind>().is_err());
+
+        // JSON overrides reach the partition knobs
+        let mut c = RunConfig::default();
+        c.apply_json(
+            &json::parse(
+                r#"{"partition": "dirichlet", "alpha": 0.1, "skew_zipf": 1.2}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.partition, PartitionKind::Dirichlet);
+        assert_eq!(c.alpha, 0.1);
+        assert_eq!(c.skew_zipf, 1.2);
+        c.validate().unwrap();
+
+        // range checks: alpha must be positive, skew_zipf non-negative
+        let mut c = RunConfig::default();
+        c.alpha = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.alpha = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.skew_zipf = -0.5;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.skew_zipf = f64::INFINITY;
         assert!(c.validate().is_err());
     }
 

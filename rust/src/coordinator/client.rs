@@ -42,6 +42,10 @@ pub struct ClientState {
     theta_start: Vec<f32>,
     /// Local training state θ_k (reused across rounds).
     theta: Vec<f32>,
+    /// Double buffer for θ_k: `train_step_into` writes here, then the
+    /// buffers swap — so backends that implement the allocation-free step
+    /// keep warm rounds heap-silent.
+    theta_next: Vec<f32>,
     /// Cumulative MACs this client has spent (energy accounting).
     pub macs_spent: f64,
     /// Cumulative joules, accrued at the precision each MAC actually ran
@@ -74,6 +78,7 @@ impl ClientState {
             global_idx: Vec::with_capacity(train_batch),
             theta_start: Vec::new(),
             theta: Vec::new(),
+            theta_next: Vec::new(),
             macs_spent: 0.0,
             energy_joules: 0.0,
         }
@@ -119,10 +124,12 @@ impl ClientState {
 
     /// Zero-alloc form of [`local_round`]: the payload is written straight
     /// into `payload_out` (the client's payload-plane row) and all model
-    /// buffers are client-owned scratch reused across rounds.  The only
-    /// remaining per-round allocations happen inside the train-step
-    /// dispatch (PJRT literals / backend output), outside the arena
-    /// contract.  Runs unchanged on the coordinator thread or on a pool
+    /// buffers are client-owned scratch reused across rounds.  SGD steps
+    /// go through [`TrainStep::train_step_into`] with a swapped double
+    /// buffer, so backends implementing the in-place seam run warm rounds
+    /// without heap traffic; the PJRT default still allocates inside its
+    /// dispatch (literals / backend output), outside the arena contract.
+    /// Runs unchanged on the coordinator thread or on a pool
     /// worker — `step` decides where the SGD step actually executes.
     #[allow(clippy::too_many_arguments)]
     pub fn local_round_into<S: TrainStep + ?Sized>(
@@ -155,6 +162,7 @@ impl ClientState {
         );
         self.theta.resize(theta_global.len(), 0.0);
         self.theta.copy_from_slice(&self.theta_start);
+        self.theta_next.resize(theta_global.len(), 0.0);
 
         let mut stats = LocalStats::default();
         let batch = self.label_buf.len();
@@ -170,16 +178,17 @@ impl ClientState {
             self.global_idx.clear();
             self.global_idx.extend(idx.iter().map(|&i| self.shard[i]));
             data.gather(&self.global_idx, &mut self.img_buf, &mut self.label_buf);
-            let out = step.train_step(
+            let m = step.train_step_into(
                 self.precision,
                 &self.theta,
                 &self.img_buf,
                 &self.label_buf,
                 lr,
+                &mut self.theta_next,
             )?;
-            self.theta.copy_from_slice(&out.new_theta);
-            stats.mean_loss += out.loss as f64;
-            stats.mean_acc += out.correct as f64 / batch as f64;
+            std::mem::swap(&mut self.theta, &mut self.theta_next);
+            stats.mean_loss += m.loss as f64;
+            stats.mean_acc += m.correct as f64 / batch as f64;
             stats.steps += 1;
             stats.samples += batch as u64;
             // fwd+bwd ≈ 3x forward MACs per trained sample

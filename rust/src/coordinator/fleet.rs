@@ -33,6 +33,7 @@
 //! only arises under random selection at K ≪ N — where no eager-fleet
 //! baseline exists to diverge from.
 
+use crate::data::PartitionRecipe;
 use crate::fl::IdLru;
 use crate::quant::Precision;
 use crate::rng::Rng;
@@ -45,10 +46,16 @@ use super::client::ClientState;
 pub struct ClientFleet {
     /// Materialized clients, keyed by client id, capacity 2·K.
     lru: IdLru<ClientState>,
-    /// The `equal_shards` shuffled sample order over the training corpus;
-    /// client `id` owns `order[id·per .. (id+1)·per]`.
+    /// The shuffled (iid) or Dirichlet-assigned sample order over the
+    /// training corpus; client `id` owns `order[id·per .. (id+1)·per]`
+    /// positionally, or `order[offsets[id] .. offsets[id+1]]` when a
+    /// non-uniform recipe supplies CSR `offsets`.
     order: Vec<usize>,
-    /// Samples per client (`train_n / clients`).
+    /// CSR row offsets for unequal shards (empty for the positional
+    /// `equal_shards` path — kept empty there so the iid fleet stays
+    /// byte-identical to the historical constructor).
+    offsets: Vec<usize>,
+    /// Samples per client (`train_n / clients`), positional path only.
     per: usize,
     train_batch: usize,
     /// The run's root RNG — clients derive their private streams from it
@@ -77,7 +84,27 @@ impl ClientFleet {
         ClientFleet {
             lru: IdLru::new(),
             order,
+            offsets: Vec::new(),
             per,
+            train_batch,
+            root,
+            evicted_energy_j: 0.0,
+            evicted_macs: 0.0,
+        }
+    }
+
+    /// Build the fleet from a precomputed non-uniform [`PartitionRecipe`]
+    /// (Dirichlet label partition, possibly size-skewed): client `id`'s
+    /// shard is the CSR row `order[offsets[id] .. offsets[id+1]]` — like
+    /// the positional path, identical indices regardless of WHEN the
+    /// client materializes.
+    pub fn with_recipe(recipe: PartitionRecipe, train_batch: usize, root: Rng) -> Self {
+        let PartitionRecipe { order, offsets } = recipe;
+        ClientFleet {
+            lru: IdLru::new(),
+            order,
+            offsets,
+            per: 0,
             train_batch,
             root,
             evicted_energy_j: 0.0,
@@ -102,6 +129,7 @@ impl ClientFleet {
         let ClientFleet {
             lru,
             order,
+            offsets,
             per,
             train_batch,
             root,
@@ -109,13 +137,12 @@ impl ClientFleet {
             evicted_macs,
         } = self;
         let (slot, fresh, evicted) = lru.get_or_insert_with(id, || {
-            ClientState::new(
-                id,
-                precision,
-                order[id * *per..(id + 1) * *per].to_vec(),
-                *train_batch,
-                root,
-            )
+            let shard = if offsets.is_empty() {
+                order[id * *per..(id + 1) * *per].to_vec()
+            } else {
+                order[offsets[id]..offsets[id + 1]].to_vec()
+            };
+            ClientState::new(id, precision, shard, *train_batch, root)
         });
         if let Some(old) = evicted {
             *evicted_energy_j += old.energy_joules;

@@ -87,7 +87,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::config::RunConfig;
+use crate::config::{PartitionKind, RunConfig};
 use crate::data::Dataset;
 use crate::energy;
 use crate::exec;
@@ -366,17 +366,32 @@ impl Coordinator {
             &mut scratch.precisions,
         )?;
 
-        // The fleet recipe performs the exact `equal_shards` shuffle
-        // (same "shard"-stream consumption) but materializes no clients —
-        // they are built on first selection, keyed by identity.
+        // The fleet recipe performs the partition on the "shard" stream
+        // (iid: the exact `equal_shards` shuffle, draw-for-draw identical
+        // to the historical constructor; dirichlet: the per-class
+        // size-biased recipe) but materializes no clients — they are
+        // built on first selection, keyed by identity.
         let mut shard_rng = root.stream("shard");
-        let fleet = ClientFleet::new(
-            train_data.n,
-            cfg.clients,
-            runtime.manifest.train_batch,
-            root.clone(),
-            &mut shard_rng,
-        );
+        let fleet = match cfg.partition {
+            PartitionKind::Iid => ClientFleet::new(
+                train_data.n,
+                cfg.clients,
+                runtime.manifest.train_batch,
+                root.clone(),
+                &mut shard_rng,
+            ),
+            PartitionKind::Dirichlet => {
+                let recipe = crate::data::dirichlet_recipe(
+                    &train_data.labels,
+                    cfg.clients,
+                    cfg.alpha,
+                    cfg.skew_zipf,
+                    runtime.manifest.train_batch,
+                    &mut shard_rng,
+                )?;
+                ClientFleet::with_recipe(recipe, runtime.manifest.train_batch, root.clone())
+            }
+        };
 
         let theta = match &cfg.init_params {
             Some(path) => {
@@ -442,7 +457,13 @@ impl Coordinator {
             }
         }
 
-        let label = format!("{}@{}", policy.label(), aggregator.name());
+        let mut label = format!("{}@{}", policy.label(), aggregator.name());
+        if cfg.partition != PartitionKind::Iid {
+            // non-IID runs tag their partition so convergence grids and
+            // streamed JSONL rows stay distinguishable per alpha; IID
+            // labels keep the historical shape byte for byte
+            label.push_str(&format!("@{}(a{})", cfg.partition, cfg.alpha));
+        }
         let mut session = sim::Session::with_state(
             channel_model,
             aggregator,
@@ -1352,6 +1373,18 @@ impl Coordinator {
     /// Access the accumulated run log.
     pub fn log(&self) -> &RunLog {
         &self.log
+    }
+
+    /// The data-shard indices of a materialized client (anyone selected
+    /// within the last two rounds is still resident in the lazy fleet
+    /// window).  Diagnostics/tests accessor — panics if the client has
+    /// never been selected or has been evicted.
+    pub fn client_shard(&self, id: usize) -> &[usize] {
+        &self
+            .fleet
+            .get(id)
+            .expect("client not resident in the fleet window")
+            .shard
     }
 
     /// The server-side session (channel model, aggregator, observers).

@@ -9,5 +9,5 @@ pub mod shard;
 pub mod signs;
 
 pub use dataset::{BatchIter, Dataset};
-pub use shard::{dirichlet_shards, equal_shards, Shard};
+pub use shard::{dirichlet_recipe, dirichlet_shards, equal_shards, PartitionRecipe, Shard};
 pub use signs::{NUM_CLASSES, SAMPLE_LEN};

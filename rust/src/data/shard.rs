@@ -1,5 +1,8 @@
 //! Client data sharding (paper §IV-A1: "each client is assigned an equal
-//! subset of the data").
+//! subset of the data") and the non-IID convergence-science partitions
+//! (Dirichlet(α) label skew, power-law sample-count skew).
+
+use anyhow::{bail, Result};
 
 use crate::data::dataset::Dataset;
 use crate::rng::Rng;
@@ -27,54 +30,210 @@ pub fn equal_shards(n: usize, k: usize, rng: &mut Rng) -> Vec<Shard> {
         .collect()
 }
 
-/// Non-IID label-skewed shards (extension knob, not used by the paper's
-/// headline experiments): each client draws a Dirichlet(alpha) mixture
-/// over classes.  Lower alpha = more skew.
+/// One exact Gamma(shape, 1) draw — Marsaglia–Tsang squeeze, with the
+/// `shape < 1` boost `Gamma(shape) = Gamma(shape + 1) · U^{1/shape}`.
+/// Consumes a data-dependent number of draws from `rng`, which is fine for
+/// partition construction (a one-shot setup step on one stream, never on
+/// the per-round path).
+fn gamma(shape: f64, rng: &mut Rng) -> f64 {
+    debug_assert!(shape > 0.0 && shape.is_finite());
+    if shape < 1.0 {
+        let g = gamma(shape + 1.0, rng);
+        let u = rng.uniform().max(1e-300);
+        return g * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.normal();
+        let t = 1.0 + c * x;
+        if t <= 0.0 {
+            continue;
+        }
+        let v = t * t * t;
+        let u = rng.uniform().max(1e-300);
+        if u < 1.0 - 0.0331 * x * x * x * x {
+            return d * v;
+        }
+        if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+            return d * v;
+        }
+    }
+}
+
+/// A full client partition in CSR form: client `i` owns the corpus
+/// indices `order[offsets[i]..offsets[i+1]]`.  Variable-length shards —
+/// the Dirichlet/Zipf counterpart of the IID fleet's positional
+/// `order[i·per..(i+1)·per]` recipe.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartitionRecipe {
+    /// Corpus sample indices, grouped by owning client.
+    pub order: Vec<usize>,
+    /// `clients + 1` monotone offsets into `order`.
+    pub offsets: Vec<usize>,
+}
+
+impl PartitionRecipe {
+    pub fn clients(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Client `id`'s sample indices.
+    pub fn shard_of(&self, id: usize) -> &[usize] {
+        &self.order[self.offsets[id]..self.offsets[id + 1]]
+    }
+}
+
+/// Dirichlet(α) label-skewed partition with optional power-law
+/// sample-count skew — the convergence-science non-IID generator.
+///
+/// For every class, per-client proportions are drawn as normalized
+/// `w_i · Gamma(α)` where `w_i = (i+1)^{-skew_zipf}` (Hsu et al.-style
+/// per-class Dirichlet over clients, size-biased by the Zipf weight), and
+/// the class's shuffled samples are apportioned to those proportions by
+/// largest remainder — every sample is assigned exactly once.  Small α
+/// concentrates each class on few clients (heavy per-client label skew);
+/// large α recovers near-uniform marginals.  A deterministic repair pass
+/// then moves samples from the largest shards until every client owns at
+/// least `min_per` samples (one train batch, so `BatchIter` always has a
+/// full batch).
+///
+/// Deterministic: the output is a pure function of `(labels, clients,
+/// alpha, skew_zipf, min_per)` and the state of `rng`.
+pub fn dirichlet_recipe(
+    labels: &[i32],
+    clients: usize,
+    alpha: f64,
+    skew_zipf: f64,
+    min_per: usize,
+    rng: &mut Rng,
+) -> Result<PartitionRecipe> {
+    let n = labels.len();
+    if clients == 0 {
+        bail!("need at least one client");
+    }
+    if !(alpha > 0.0 && alpha.is_finite()) {
+        bail!("alpha {alpha} must be positive and finite");
+    }
+    if !(skew_zipf >= 0.0 && skew_zipf.is_finite()) {
+        bail!("skew_zipf {skew_zipf} must be >= 0 and finite");
+    }
+    if clients * min_per > n {
+        bail!(
+            "dirichlet partition cannot give {clients} clients at least \
+             {min_per} samples each from a {n}-sample corpus"
+        );
+    }
+
+    // Per-class sample buckets, shuffled so the concrete indices a client
+    // receives are seed-random (not corpus-order).
+    let mut per_class: Vec<Vec<usize>> =
+        vec![Vec::new(); crate::data::signs::NUM_CLASSES];
+    for (i, &l) in labels.iter().enumerate() {
+        per_class[l as usize].push(i);
+    }
+    for bucket in per_class.iter_mut() {
+        rng.shuffle(bucket);
+    }
+
+    // Zipf size weights: client i's expected share of EVERY class is
+    // proportional to (i+1)^-skew_zipf, so expected shard sizes follow
+    // the power law while alpha independently controls label skew.
+    let zipf: Vec<f64> = (0..clients)
+        .map(|i| ((i + 1) as f64).powf(-skew_zipf))
+        .collect();
+
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); clients];
+    let mut props = vec![0.0f64; clients];
+    let mut counts = vec![0usize; clients];
+    let mut frac_order: Vec<usize> = Vec::with_capacity(clients);
+    for bucket in per_class.iter() {
+        if bucket.is_empty() {
+            continue;
+        }
+        // Size-biased Dirichlet proportions over clients for this class.
+        let mut total = 0.0f64;
+        for (i, p) in props.iter_mut().enumerate() {
+            *p = zipf[i] * gamma(alpha, rng);
+            total += *p;
+        }
+        if !(total > 0.0) {
+            // all-zero underflow (absurdly small alpha): fall back to the
+            // size weights alone
+            props.copy_from_slice(&zipf);
+            total = props.iter().sum();
+        }
+        // Largest-remainder apportionment of the bucket: exact, integral,
+        // deterministic (ties broken by client index).
+        let m = bucket.len();
+        let mut assigned = 0usize;
+        for i in 0..clients {
+            let quota = m as f64 * (props[i] / total);
+            counts[i] = quota.floor() as usize;
+            props[i] = quota - counts[i] as f64; // keep the fractional part
+            assigned += counts[i];
+        }
+        frac_order.clear();
+        frac_order.extend(0..clients);
+        frac_order.sort_by(|&a, &b| {
+            props[b].partial_cmp(&props[a]).unwrap().then(a.cmp(&b))
+        });
+        for &i in frac_order.iter().take(m - assigned) {
+            counts[i] += 1;
+        }
+        let mut start = 0usize;
+        for (i, &c) in counts.iter().enumerate() {
+            shards[i].extend_from_slice(&bucket[start..start + c]);
+            start += c;
+        }
+        debug_assert_eq!(start, m, "class bucket fully apportioned");
+    }
+
+    // Floor repair: move samples from the currently-largest shard to any
+    // client below `min_per` until everyone holds a full train batch.
+    // Deterministic (first-max donor, first-min recipient) and rarely
+    // triggered outside tiny corpora or extreme alpha.
+    loop {
+        let (mut lo, mut hi) = (0usize, 0usize);
+        for i in 1..clients {
+            if shards[i].len() < shards[lo].len() {
+                lo = i;
+            }
+            if shards[i].len() > shards[hi].len() {
+                hi = i;
+            }
+        }
+        if shards[lo].len() >= min_per {
+            break;
+        }
+        let moved = shards[hi].pop().expect("donor shard non-empty");
+        shards[lo].push(moved);
+    }
+
+    let mut order = Vec::with_capacity(n);
+    let mut offsets = Vec::with_capacity(clients + 1);
+    offsets.push(0);
+    for s in &shards {
+        order.extend_from_slice(s);
+        offsets.push(order.len());
+    }
+    Ok(PartitionRecipe { order, offsets })
+}
+
+/// Non-IID label-skewed shards: each class's samples are split across
+/// clients by exact Dirichlet(alpha) proportions (see
+/// [`dirichlet_recipe`]).  Lower alpha = more skew.
 pub fn dirichlet_shards(
     data: &Dataset,
     k: usize,
     alpha: f64,
     rng: &mut Rng,
 ) -> Vec<Shard> {
-    assert!(k > 0 && alpha > 0.0);
-    // Bucket samples per class.
-    let mut per_class: Vec<Vec<usize>> =
-        vec![Vec::new(); crate::data::signs::NUM_CLASSES];
-    for (i, &l) in data.labels.iter().enumerate() {
-        per_class[l as usize].push(i);
-    }
-    let mut shards: Vec<Shard> = (0..k)
-        .map(|c| Shard { client: c, indices: Vec::new() })
-        .collect();
-    for bucket in per_class.iter_mut() {
-        rng.shuffle(bucket);
-        // Dirichlet via normalized Gamma(alpha, 1) draws (Marsaglia-Tsang
-        // would be overkill; alpha is O(1), use the sum-of-exponentials
-        // approximation for alpha>=1 and Johnk-style fallback otherwise —
-        // here we use the simple normalized power of uniforms which is
-        // adequate for shard skew).
-        let weights: Vec<f64> = (0..k)
-            .map(|_| {
-                // Gamma(alpha) approximated by Weibull-ish transform: for
-                // shard assignment purposes only the relative skew matters.
-                let u: f64 = rng.uniform().max(1e-12);
-                (-u.ln()).powf(1.0 / alpha)
-            })
-            .collect();
-        let total: f64 = weights.iter().sum();
-        let mut start = 0usize;
-        for (c, w) in weights.iter().enumerate() {
-            let take = if c + 1 == k {
-                bucket.len() - start
-            } else {
-                ((w / total) * bucket.len() as f64).round() as usize
-            };
-            let end = (start + take).min(bucket.len());
-            shards[c].indices.extend_from_slice(&bucket[start..end]);
-            start = end;
-        }
-    }
-    shards
+    let recipe = dirichlet_recipe(&data.labels, k, alpha, 0.0, 1, rng)
+        .expect("dirichlet shard parameters");
+    (0..k)
+        .map(|c| Shard { client: c, indices: recipe.shard_of(c).to_vec() })
+        .collect()
 }
 
 #[cfg(test)]
@@ -119,6 +278,53 @@ mod tests {
             shards.iter().flat_map(|s| s.indices.iter().copied()).collect();
         all.sort_unstable();
         assert_eq!(all, (0..430).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn recipe_is_exact_deterministic_and_floored() {
+        // synthetic labels matching Dataset::generate's class-balanced
+        // round-robin construction, without rendering any images
+        let n = 860usize;
+        let labels: Vec<i32> = (0..n)
+            .map(|i| (i % crate::data::signs::NUM_CLASSES) as i32)
+            .collect();
+        let mut r1 = Rng::seed_from(7).stream("shard");
+        let mut r2 = Rng::seed_from(7).stream("shard");
+        let a = dirichlet_recipe(&labels, 6, 0.1, 0.0, 8, &mut r1).unwrap();
+        let b = dirichlet_recipe(&labels, 6, 0.1, 0.0, 8, &mut r2).unwrap();
+        assert_eq!(a, b, "same seed, same recipe");
+        // exact partition: every sample exactly once
+        let mut all = a.order.clone();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>());
+        // min_per floor honored even at heavy skew
+        for c in 0..a.clients() {
+            assert!(a.shard_of(c).len() >= 8, "client {c} under the floor");
+        }
+        // infeasible floor is a config error, not a panic
+        assert!(dirichlet_recipe(&labels, 200, 1.0, 0.0, 8, &mut r1).is_err());
+        assert!(dirichlet_recipe(&labels, 6, 0.0, 0.0, 8, &mut r1).is_err());
+        assert!(dirichlet_recipe(&labels, 6, 1.0, -1.0, 8, &mut r1).is_err());
+    }
+
+    #[test]
+    fn zipf_skew_orders_expected_shard_sizes() {
+        let n = 4300usize;
+        let labels: Vec<i32> = (0..n)
+            .map(|i| (i % crate::data::signs::NUM_CLASSES) as i32)
+            .collect();
+        // large alpha isolates the size skew from the label skew
+        let mut rng = Rng::seed_from(11).stream("shard");
+        let r = dirichlet_recipe(&labels, 8, 50.0, 1.2, 8, &mut rng).unwrap();
+        let sizes: Vec<usize> = (0..8).map(|c| r.shard_of(c).len()).collect();
+        assert!(
+            sizes[0] > 2 * sizes[7],
+            "zipf head {} should dwarf the tail {}",
+            sizes[0],
+            sizes[7]
+        );
+        // head-heavy overall: earlier clients hold more than later ones
+        assert!(sizes[0] > sizes[3] && sizes[3] > sizes[7], "{sizes:?}");
     }
 
     #[test]

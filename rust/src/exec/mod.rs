@@ -34,7 +34,7 @@ pub mod train;
 
 pub use pool::{must_inline, pool, ExecPool};
 pub use service::{GatewayStep, TrainCall, TrainService};
-pub use train::{RuntimeStep, TrainBackend, TrainStep};
+pub use train::{RuntimeStep, StepMetrics, TrainBackend, TrainStep};
 
 /// Debug-build assertion that every mutable range handed out through
 /// [`SendPtr`]/[`SendMutPtr`]/[`DisjointMut`] by a dispatch THIS thread

@@ -14,6 +14,14 @@ use anyhow::Result;
 use crate::quant::Precision;
 use crate::runtime::{EvalResult, Runtime, TrainOutput};
 
+/// Scalar step statistics returned by the allocation-free
+/// [`TrainStep::train_step_into`] entry point.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub correct: f32,
+}
+
 /// One SGD minibatch step at a given precision — the client state
 /// machine's only dependency on the execution backend.
 pub trait TrainStep {
@@ -25,6 +33,26 @@ pub trait TrainStep {
         labels: &[i32],
         lr: f32,
     ) -> Result<TrainOutput>;
+
+    /// Allocation-free variant: write the updated model into
+    /// `new_theta_out` instead of returning a fresh `Vec`.  The default
+    /// delegates to [`TrainStep::train_step`] (the PJRT path keeps its
+    /// historical allocation behaviour bit-for-bit); pure-rust backends
+    /// override it to run the steady-state round loop without heap
+    /// traffic.
+    fn train_step_into(
+        &self,
+        precision: Precision,
+        theta: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+        new_theta_out: &mut [f32],
+    ) -> Result<StepMetrics> {
+        let out = self.train_step(precision, theta, images, labels, lr)?;
+        new_theta_out.copy_from_slice(&out.new_theta);
+        Ok(StepMetrics { loss: out.loss, correct: out.correct })
+    }
 }
 
 /// A full training/evaluation backend that can replace PJRT for a run
@@ -40,6 +68,23 @@ pub trait TrainBackend: Send + Sync {
         labels: &[i32],
         lr: f32,
     ) -> Result<TrainOutput>;
+
+    /// Allocation-free step (see [`TrainStep::train_step_into`]).  The
+    /// default preserves the allocating behaviour; deterministic mock
+    /// backends override it for the zero-alloc round contract.
+    fn train_step_into(
+        &self,
+        precision: Precision,
+        theta: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+        new_theta_out: &mut [f32],
+    ) -> Result<StepMetrics> {
+        let out = TrainBackend::train_step(self, precision, theta, images, labels, lr)?;
+        new_theta_out.copy_from_slice(&out.new_theta);
+        Ok(StepMetrics { loss: out.loss, correct: out.correct })
+    }
 
     /// Evaluate a flat model over a labelled set.
     fn evaluate(&self, theta: &[f32], images: &[f32], labels: &[i32])
@@ -68,6 +113,20 @@ impl TrainStep for dyn TrainBackend {
         lr: f32,
     ) -> Result<TrainOutput> {
         TrainBackend::train_step(self, precision, theta, images, labels, lr)
+    }
+
+    fn train_step_into(
+        &self,
+        precision: Precision,
+        theta: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+        new_theta_out: &mut [f32],
+    ) -> Result<StepMetrics> {
+        TrainBackend::train_step_into(
+            self, precision, theta, images, labels, lr, new_theta_out,
+        )
     }
 }
 

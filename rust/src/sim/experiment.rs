@@ -201,6 +201,13 @@ impl ExperimentBuilder {
         self
     }
 
+    /// [`backend`](Self::backend) for an already-boxed trait object —
+    /// what a per-cell [`crate::sim::sweep::BackendFactory`] produces.
+    pub fn backend_boxed(mut self, b: Box<dyn crate::exec::TrainBackend>) -> Self {
+        self.parts.backend = Some(b);
+        self
+    }
+
     /// Attach a round observer (repeatable).
     pub fn observe(mut self, o: impl RoundObserver + 'static) -> Self {
         self.parts.observers.push(Box::new(o));

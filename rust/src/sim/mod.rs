@@ -69,7 +69,7 @@ pub use policy::{
     EnergyBudget, LossPlateau, PolicyCtx, PrecisionPolicy, ProfilingPlanner,
     RoundFeedback, SnrAdaptive, StaticScheme,
 };
-pub use sweep::{SweepReport, SweepSpec};
+pub use sweep::{BackendFactory, SweepReport, SweepSpec};
 
 use std::rc::Rc;
 

@@ -41,10 +41,19 @@
 //! buffers) and fill their canonical grid slot — the consolidated report
 //! is byte-identical to the serial run's regardless of completion order
 //! (`parallel_sweep_matches_serial_cell_for_cell`; CI diffs the two
-//! modulo per-cell wall-clock).  Full-FL cells stay serial: they share
-//! one PJRT runtime, which is single-threaded by construction (`Rc`-based
-//! client) — inside each cell the client phase still parallelizes via
-//! `workers`.
+//! modulo per-cell wall-clock).  Full-FL cells run concurrently too when
+//! a [`BackendFactory`] supplies each cell its own `TrainBackend` (every
+//! pool task loads its own PJRT-free runtime and owns every mutable
+//! part); without a factory they stay serial, sharing one PJRT runtime —
+//! single-threaded by construction (`Rc`-based client) — with the client
+//! phase still parallelized via `workers` inside each cell.
+//!
+//! Non-IID axes: `partitions`/`alphas` sweep the training-data partition
+//! (`RunConfig::partition`/`alpha`).  They are full-FL axes — a
+//! channel-only sweep trains nothing, so widening them there is a
+//! config error.  When both axes sit at the base config's values the
+//! grid JSON omits them, keeping channel-only reports byte-identical
+//! across binary generations (the CI id-parity diff).
 //!
 //! Streaming: `SweepSpec::stream` (CLI `--stream`) appends every cell's
 //! per-round records to one JSONL file, each line tagged with its cell's
@@ -58,7 +67,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::channel::FadingKind;
-use crate::config::{Aggregation, PolicyKind, RunConfig};
+use crate::config::{Aggregation, PartitionKind, PolicyKind, RunConfig};
 use crate::fl::{self, Scheme};
 use crate::json::Value;
 use crate::kernels::{PackedPlane, PayloadPlane};
@@ -75,7 +84,7 @@ use super::{
 
 /// One cell's grid coordinates, in canonical axis order: scheme, SNR,
 /// aggregation, channel model, policy, fleet, shard size, deadline,
-/// dropout probability.
+/// dropout probability, data partition, Dirichlet alpha.
 type CellCoord<'a> = (
     &'a Scheme,
     f32,
@@ -86,7 +95,17 @@ type CellCoord<'a> = (
     usize,
     f64,
     f64,
+    PartitionKind,
+    f64,
 );
+
+/// Per-cell training-backend constructor for parallel full-FL sweeps:
+/// each pool task builds its OWN backend, so no `Sync` state is shared
+/// across concurrently-running cells.  The factory must be deterministic
+/// (same backend behaviour for every call) for the serial-vs-parallel
+/// report parity to hold.
+pub type BackendFactory =
+    std::sync::Arc<dyn Fn() -> Box<dyn crate::exec::TrainBackend> + Send + Sync>;
 
 /// A config grid: the base run crossed with schemes × SNRs × aggregators
 /// × channel models × precision policies.
@@ -126,6 +145,17 @@ pub struct SweepSpec {
     /// `dropout_p`; `0` = nobody drops).  The drop process follows the
     /// base config's `dropout_model`/`dropout_burst`.
     pub dropouts: Vec<f64>,
+    /// Training-data partitions to sweep (each cell sets `partition`).
+    /// Full-FL axis: channel-only sweeps reject a widened partition grid.
+    pub partitions: Vec<PartitionKind>,
+    /// Dirichlet concentrations to sweep (each cell sets `alpha`; only
+    /// read by dirichlet cells).  Full-FL axis, like `partitions`.
+    pub alphas: Vec<f64>,
+    /// Per-cell backend constructor: hands every full-FL cell its own
+    /// `TrainBackend`, which unlocks concurrent fl-mode cells (bounded by
+    /// `base.workers`, like the channel-only path).  `None` = the shared
+    /// PJRT runtime, serial cells.
+    pub backend_factory: Option<BackendFactory>,
     /// Payload length for the channel-only mode (full FL runs use the
     /// model's parameter count instead).
     pub payload_len: usize,
@@ -148,6 +178,9 @@ impl SweepSpec {
             shard_sizes: vec![base.shard_size],
             deadlines: vec![base.deadline_s],
             dropouts: vec![base.dropout_p],
+            partitions: vec![base.partition],
+            alphas: vec![base.alpha],
+            backend_factory: None,
             payload_len: 4096,
             stream: None,
             base,
@@ -165,6 +198,17 @@ impl SweepSpec {
             * self.shard_sizes.len()
             * self.deadlines.len()
             * self.dropouts.len()
+            * self.partitions.len()
+            * self.alphas.len()
+    }
+
+    /// True when the partition axes carry no information beyond the base
+    /// config — the report's grid JSON then omits them entirely, keeping
+    /// partition-free sweep reports byte-identical across binary
+    /// generations (the CI id-parity diff pins this).
+    fn partition_axes_trivial(&self) -> bool {
+        self.partitions.as_slice() == [self.base.partition]
+            && self.alphas.as_slice() == [self.base.alpha]
     }
 
     /// Reject grids whose axes a per-cell policy would silently ignore: a
@@ -219,6 +263,32 @@ impl SweepSpec {
                 bail!("dropout probability {dp} must be in [0, 1)");
             }
         }
+        for &a in &self.alphas {
+            if !(a > 0.0 && a.is_finite()) {
+                bail!("alpha {a} must be positive and finite");
+            }
+        }
+        if !self.partition_axes_trivial() {
+            // Partition cells are convergence experiments: precision is
+            // assigned over the K = clients_per_round SELECTED clients, so
+            // a static scheme must divide K for every fleet on the grid —
+            // caught here at spec-build time (the fleet % groups check
+            // above covers only full-participation cells).
+            if self.policies.iter().any(|&p| p == PolicyKind::Static) {
+                for &fleet in &self.fleets {
+                    let kk = self.base.clients_per_round.min(fleet);
+                    for scheme in &self.schemes {
+                        let g = scheme.groups().len();
+                        if kk % g != 0 {
+                            bail!(
+                                "clients-per-round {kk} does not divide into \
+                                 the {g} groups of scheme '{scheme}'"
+                            );
+                        }
+                    }
+                }
+            }
+        }
         Ok(())
     }
 
@@ -234,6 +304,8 @@ impl SweepSpec {
         shard: usize,
         deadline: f64,
         dropout: f64,
+        partition: PartitionKind,
+        alpha: f64,
     ) -> RunConfig {
         let mut cfg = self.base.clone();
         cfg.scheme = scheme.clone();
@@ -246,11 +318,14 @@ impl SweepSpec {
         cfg.shard_size = shard;
         cfg.deadline_s = deadline;
         cfg.dropout_p = dropout;
+        cfg.partition = partition;
+        cfg.alpha = alpha;
         cfg
     }
 
     /// Enumerate the grid in canonical axis order (schemes outermost,
-    /// dropout probabilities innermost).
+    /// Dirichlet alphas innermost — trivial partition axes therefore
+    /// preserve the historical cell order exactly).
     #[allow(clippy::type_complexity)]
     fn cells_iter(&self) -> Vec<CellCoord<'_>> {
         let mut cells = Vec::with_capacity(self.grid_size());
@@ -263,10 +338,16 @@ impl SweepSpec {
                                 for &shard in &self.shard_sizes {
                                     for &dl in &self.deadlines {
                                         for &dp in &self.dropouts {
-                                            cells.push((
-                                                scheme, snr, agg, model, pol,
-                                                fleet, shard, dl, dp,
-                                            ));
+                                            for &part in &self.partitions {
+                                                for &al in &self.alphas {
+                                                    cells.push((
+                                                        scheme, snr, agg,
+                                                        model, pol, fleet,
+                                                        shard, dl, dp, part,
+                                                        al,
+                                                    ));
+                                                }
+                                            }
                                         }
                                     }
                                 }
@@ -335,6 +416,23 @@ impl SweepSpec {
             "dropouts",
             Value::Array(self.dropouts.iter().map(|&d| Value::Num(d)).collect()),
         );
+        // emitted ONLY when non-trivial: partition-free reports stay
+        // byte-identical to earlier binary generations (CI id-parity)
+        if !self.partition_axes_trivial() {
+            g.set(
+                "partitions",
+                Value::Array(
+                    self.partitions
+                        .iter()
+                        .map(|p| Value::Str(p.to_string()))
+                        .collect(),
+                ),
+            );
+            g.set(
+                "alphas",
+                Value::Array(self.alphas.iter().map(|&a| Value::Num(a)).collect()),
+            );
+        }
         g
     }
 }
@@ -381,70 +479,139 @@ pub fn run_fl_sweep(spec: &SweepSpec) -> Result<SweepReport> {
 
 /// [`run_fl_sweep`] over an already-loaded runtime (callers that also use
 /// the runtime for pretraining or warm pools pass it in here).
+///
+/// With a [`BackendFactory`] (`spec.backend_factory`) and `workers > 1`,
+/// independent cells run CONCURRENTLY on the exec pool: each pool task
+/// loads its own runtime, builds its own backend from the factory, and
+/// fills its canonical grid slot — the consolidated report is identical
+/// to the serial run's modulo per-cell wall-clock (pinned by
+/// `parallel_fl_sweep_matches_serial` and the CI byte-diff).  Without a
+/// factory the cells stay serial: they share ONE PJRT runtime, which is
+/// single-threaded by construction (`Rc`-based client); `workers` still
+/// parallelizes the client phase inside each cell.
 pub fn run_fl_sweep_on(spec: &SweepSpec, runtime: Rc<Runtime>) -> Result<SweepReport> {
     spec.validate()?;
     let t0 = Instant::now();
-    let mut arena = Arena::default();
-    let mut cells = Vec::new();
-    // Cells run serially: they share ONE PJRT runtime, which is
-    // single-threaded by construction (Rc-based client).  `workers` still
-    // parallelizes the client phase INSIDE each cell.
-    for (i, (scheme, snr, agg, model, pol, fleet, shard, dl, dp)) in
-        spec.cells_iter().into_iter().enumerate()
-    {
-        let cfg =
-            spec.cell_config(scheme, snr, agg, model, pol, fleet, shard, dl, dp);
-        let cell_t0 = Instant::now();
-        // the builder constructs fresh channel-model/policy instances from
-        // this cell's config — no mutable state crosses cell boundaries
-        let mut builder = Experiment::builder(cfg).runtime(runtime.clone()).arena(arena);
-        if let Some(path) = &spec.stream {
-            // one shared JSONL file: first cell truncates, the rest append
-            let streamer = if i == 0 {
-                crate::sim::JsonlStreamer::create(path)?
-            } else {
-                crate::sim::JsonlStreamer::append(path)?
-            };
-            builder = builder.observe(streamer.with_label(cell_label(
-                scheme, snr, agg, model, pol, fleet, shard, dl, dp,
-            )));
-        }
-        let mut exp = builder.build()?;
-        let report = exp.run()?;
-        arena = exp.into_arena();
+    let coords = spec.cells_iter();
+    let bound = spec.base.workers.min(coords.len()).max(1);
+    let parallel = spec.backend_factory.is_some()
+        && bound > 1
+        && spec.stream.is_none()
+        && crate::exec::pool().max_workers() > 0
+        && !crate::exec::must_inline();
 
-        let mean_mse = mean_of(report.log.rounds.iter().map(|r| r.ota_mse));
-        let mut c = Value::object();
-        c.set("scheme", Value::Str(scheme.to_string()));
-        c.set("snr_db", Value::Num(snr as f64));
-        c.set("aggregation", Value::Str(agg.to_string()));
-        c.set("channel_model", Value::Str(model.to_string()));
-        c.set("policy", Value::Str(pol.to_string()));
-        c.set("clients", Value::Num(fleet as f64));
-        c.set("shard_size", Value::Num(shard as f64));
-        c.set("deadline_s", Value::Num(dl));
-        c.set("dropout_p", Value::Num(dp));
-        c.set("label", Value::Str(report.label.clone()));
-        c.set("final_accuracy", Value::Num(report.final_accuracy));
-        c.set("final_loss", Value::Num(report.final_loss));
-        c.set("best_accuracy", Value::Num(report.log.best_accuracy()));
-        c.set(
-            "rounds_to_90",
-            match report.rounds_to_90 {
-                Some(r) => Value::Num(r as f64),
-                None => Value::Null,
-            },
-        );
-        c.set("mean_ota_mse", Value::Num(mean_mse));
-        c.set("energy_j", Value::Num(report.energy.actual_joules));
-        c.set(
-            "energy_saving_vs_32_pct",
-            Value::Num(report.energy.saving_vs_32()),
-        );
-        c.set("wall_secs", Value::Num(cell_t0.elapsed().as_secs_f64()));
-        cells.push(c);
-    }
+    let cells: Vec<Value> = if parallel {
+        let slots: Vec<std::sync::OnceLock<Result<Value>>> =
+            (0..coords.len()).map(|_| std::sync::OnceLock::new()).collect();
+        let task = |i: usize| {
+            let r = fl_cell(spec, coords[i], None, Arena::default(), None)
+                .map(|(v, _)| v);
+            let _ = slots[i].set(r);
+        };
+        crate::exec::pool().broadcast_limit(coords.len(), bound, &task);
+        let mut out = Vec::with_capacity(slots.len());
+        // canonical grid order regardless of completion order; the first
+        // failing cell (in grid order) propagates, like the serial path
+        for s in slots {
+            out.push(s.into_inner().expect("sweep cell completed")?);
+        }
+        out
+    } else {
+        let mut arena = Arena::default();
+        let mut out = Vec::with_capacity(coords.len());
+        for (i, coord) in coords.into_iter().enumerate() {
+            let stream = match &spec.stream {
+                // one shared JSONL file: first cell truncates, the rest
+                // append
+                Some(path) if i == 0 => Some(crate::sim::JsonlStreamer::create(path)?),
+                Some(path) => Some(crate::sim::JsonlStreamer::append(path)?),
+                None => None,
+            };
+            // factory cells build their runtime/backend exactly like the
+            // parallel path (fresh per cell — byte parity by
+            // construction); default cells share the caller's runtime and
+            // recycle the arena
+            let shared = if spec.backend_factory.is_some() {
+                None
+            } else {
+                Some(runtime.clone())
+            };
+            let (v, a) = fl_cell(spec, coord, shared, arena, stream)?;
+            arena = a;
+            out.push(v);
+        }
+        out
+    };
     Ok(SweepReport { json: consolidated(spec, "fl", cells, t0.elapsed().as_secs_f64()) })
+}
+
+/// One full-FL grid cell: a fresh [`Experiment`] from the cell config.
+/// `shared_runtime` is the serial path's single PJRT runtime; `None`
+/// loads a fresh runtime from the cell config (cheap and PJRT-free under
+/// an injected backend — the per-cell-backend path, safe on any pool
+/// worker).  Returns the report entry plus the recyclable arena.
+fn fl_cell(
+    spec: &SweepSpec,
+    coord: CellCoord<'_>,
+    shared_runtime: Option<Rc<Runtime>>,
+    arena: Arena,
+    stream: Option<crate::sim::JsonlStreamer>,
+) -> Result<(Value, Arena)> {
+    let (scheme, snr, agg, model, pol, fleet, shard, dl, dp, part, al) = coord;
+    let cfg = spec
+        .cell_config(scheme, snr, agg, model, pol, fleet, shard, dl, dp, part, al);
+    let cell_t0 = Instant::now();
+    let runtime = match shared_runtime {
+        Some(rt) => rt,
+        None => Rc::new(Runtime::load(&cfg.artifacts_dir)?),
+    };
+    // the builder constructs fresh channel-model/policy instances from
+    // this cell's config — no mutable state crosses cell boundaries
+    let mut builder = Experiment::builder(cfg).runtime(runtime).arena(arena);
+    if let Some(factory) = &spec.backend_factory {
+        builder = builder.backend_boxed(factory());
+    }
+    if let Some(streamer) = stream {
+        builder = builder.observe(streamer.with_label(cell_label(
+            scheme, snr, agg, model, pol, fleet, shard, dl, dp, part, al,
+        )));
+    }
+    let mut exp = builder.build()?;
+    let report = exp.run()?;
+    let arena = exp.into_arena();
+
+    let mean_mse = mean_of(report.log.rounds.iter().map(|r| r.ota_mse));
+    let mut c = Value::object();
+    c.set("scheme", Value::Str(scheme.to_string()));
+    c.set("snr_db", Value::Num(snr as f64));
+    c.set("aggregation", Value::Str(agg.to_string()));
+    c.set("channel_model", Value::Str(model.to_string()));
+    c.set("policy", Value::Str(pol.to_string()));
+    c.set("clients", Value::Num(fleet as f64));
+    c.set("shard_size", Value::Num(shard as f64));
+    c.set("deadline_s", Value::Num(dl));
+    c.set("dropout_p", Value::Num(dp));
+    c.set("partition", Value::Str(part.to_string()));
+    c.set("alpha", Value::Num(al));
+    c.set("label", Value::Str(report.label.clone()));
+    c.set("final_accuracy", Value::Num(report.final_accuracy));
+    c.set("final_loss", Value::Num(report.final_loss));
+    c.set("best_accuracy", Value::Num(report.log.best_accuracy()));
+    c.set(
+        "rounds_to_90",
+        match report.rounds_to_90 {
+            Some(r) => Value::Num(r as f64),
+            None => Value::Null,
+        },
+    );
+    c.set("mean_ota_mse", Value::Num(mean_mse));
+    c.set("energy_j", Value::Num(report.energy.actual_joules));
+    c.set(
+        "energy_saving_vs_32_pct",
+        Value::Num(report.energy.saving_vs_32()),
+    );
+    c.set("wall_secs", Value::Num(cell_t0.elapsed().as_secs_f64()));
+    Ok((c, arena))
 }
 
 /// Per-cell scratch for the channel-only sweep — recycled across cells in
@@ -559,8 +726,8 @@ fn gen_super_shard(
 /// Includes every grid axis — cells differing only in fleet or shard
 /// size must still tag their streamed JSONL rows distinguishably.  The
 /// deadline/dropout suffix appears ONLY when the cell actually excludes
-/// clients (non-zero knobs), so robustness-free sweeps keep the
-/// historical label shape byte for byte.
+/// clients (non-zero knobs), and the partition suffix ONLY for non-IID
+/// cells, so historical sweeps keep their label shape byte for byte.
 #[allow(clippy::too_many_arguments)]
 fn cell_label(
     scheme: &Scheme,
@@ -572,10 +739,15 @@ fn cell_label(
     shard: usize,
     deadline: f64,
     dropout: f64,
+    partition: PartitionKind,
+    alpha: f64,
 ) -> String {
     let mut label = format!("{scheme}@{snr}dB@{agg}@{model}/{pol}@n{fleet}/s{shard}");
     if deadline > 0.0 || dropout > 0.0 {
         label.push_str(&format!("@dl{deadline}@dp{dropout}"));
+    }
+    if partition != PartitionKind::Iid {
+        label.push_str(&format!("@{partition}(a{alpha})"));
     }
     label
 }
@@ -625,8 +797,11 @@ fn channel_cell(
     let rounds = base.rounds;
     // mpota-lint: allow(R4): each sweep cell reseeds from the sweep's base seed by design
     let root = Rng::seed_from(base.seed);
+    // channel-only cells never touch training data, so the partition
+    // coords are pinned to the base config (trivial axes by validation)
     let cfg = spec.cell_config(
         scheme, snr, agg, model, polkind, fleet, shard_size, deadline, dropout,
+        spec.base.partition, spec.base.alpha,
     );
     let clients = cfg.clients;
     let selection =
@@ -973,6 +1148,12 @@ fn channel_cell(
 /// (`spec.stream`) shares one JSONL writer and therefore runs serially.
 pub fn run_channel_sweep(spec: &SweepSpec) -> Result<SweepReport> {
     spec.validate()?;
+    if !spec.partition_axes_trivial() {
+        bail!(
+            "partition/alpha axes sweep the training data, which \
+             channel-only cells never touch; use an fl-mode sweep"
+        );
+    }
     let t0 = Instant::now();
     let coords = spec.cells_iter();
     let bound = spec.base.workers.min(coords.len()).max(1);
@@ -985,7 +1166,8 @@ pub fn run_channel_sweep(spec: &SweepSpec) -> Result<SweepReport> {
         let slots: Vec<std::sync::OnceLock<Result<Value>>> =
             (0..coords.len()).map(|_| std::sync::OnceLock::new()).collect();
         let task = |i: usize| {
-            let (scheme, snr, agg, model, pol, fleet, shard, dl, dp) = coords[i];
+            let (scheme, snr, agg, model, pol, fleet, shard, dl, dp, _, _) =
+                coords[i];
             let mut bufs = CellBufs::default();
             let r = channel_cell(
                 spec, scheme, snr, agg, model, pol, fleet, shard, dl, dp,
@@ -1010,10 +1192,11 @@ pub fn run_channel_sweep(spec: &SweepSpec) -> Result<SweepReport> {
             None => None,
         };
         let mut out = Vec::with_capacity(coords.len());
-        for (scheme, snr, agg, model, pol, fleet, shard, dl, dp) in coords {
+        for (scheme, snr, agg, model, pol, fleet, shard, dl, dp, part, al) in coords
+        {
             if let Some(s) = stream.as_mut() {
                 s.set_label(cell_label(
-                    scheme, snr, agg, model, pol, fleet, shard, dl, dp,
+                    scheme, snr, agg, model, pol, fleet, shard, dl, dp, part, al,
                 ));
             }
             out.push(channel_cell(
@@ -1534,6 +1717,121 @@ mod tests {
                 assert_eq!(x.get(key), y.get(key), "{key} differs packed vs f32");
                 assert_eq!(x.get(key), z.get(key), "{key} differs packed vs piped");
             }
+        }
+    }
+
+    #[test]
+    fn partition_axes_require_fl_mode() {
+        // channel-only cells never touch training data: a widened
+        // partition grid is a loud config error, not silently-identical
+        // cells under different labels
+        let mut spec = tiny_spec();
+        spec.partitions = vec![PartitionKind::Iid, PartitionKind::Dirichlet];
+        spec.alphas = vec![0.1, 1.0];
+        let err = run_channel_sweep(&spec).unwrap_err().to_string();
+        assert!(err.contains("fl-mode"), "unexpected error: {err}");
+        // trivial axes (the base config's own values) stay accepted, and
+        // the grid JSON omits the partition keys entirely (id-parity)
+        let spec = tiny_spec();
+        let rep = run_channel_sweep(&spec).unwrap();
+        let grid = rep.json.get("grid").unwrap();
+        assert!(grid.get("partitions").is_none());
+        assert!(grid.get("alphas").is_none());
+    }
+
+    #[test]
+    fn partition_sweep_prevalidates_clients_per_round_divisibility() {
+        // precision is assigned over the K selected clients — a static
+        // scheme that cannot divide K must fail at spec-build time, with
+        // both values named (PR-6 error-text style)
+        let mut base = RunConfig::default();
+        base.clients = 12;
+        base.clients_per_round = 8;
+        let mut spec = SweepSpec::new(base);
+        spec.schemes = vec![Scheme::parse("16,8,4").unwrap()]; // 3 groups
+        spec.partitions = vec![PartitionKind::Dirichlet];
+        spec.alphas = vec![0.1, 1.0];
+        let err = spec.validate().unwrap_err().to_string();
+        assert_eq!(
+            err,
+            "clients-per-round 8 does not divide into the 3 groups of \
+             scheme '16,8,4'"
+        );
+        // K = 6 divides: the same grid validates
+        spec.base.clients_per_round = 6;
+        spec.validate().unwrap();
+        // bad alphas are caught up front too
+        spec.alphas = vec![0.0];
+        assert!(spec.validate().is_err());
+    }
+
+    fn fl_mock_spec(tag: &str) -> SweepSpec {
+        let dir = crate::testing::mock_artifacts_dir(tag);
+        let mut base = RunConfig::default();
+        base.artifacts_dir = dir.to_path_buf();
+        base.variant = "mock".into();
+        base.clients = 6;
+        base.clients_per_round = 6;
+        base.rounds = 3;
+        base.train_samples = 96;
+        base.test_samples = 32;
+        base.scheme = Scheme::parse("16,8,4").unwrap();
+        let mut spec = SweepSpec::new(base);
+        spec.snrs_db = vec![5.0, 20.0];
+        spec.partitions = vec![PartitionKind::Iid, PartitionKind::Dirichlet];
+        spec.alphas = vec![0.5];
+        spec.backend_factory = Some(std::sync::Arc::new(|| {
+            Box::new(crate::testing::GradStatsBackend::for_mock())
+                as Box<dyn crate::exec::TrainBackend>
+        }));
+        spec
+    }
+
+    #[test]
+    fn parallel_fl_sweep_matches_serial() {
+        // the PR-4 caveat lifted: with a per-cell backend factory,
+        // fl-mode cells run concurrently on the pool and the report is
+        // identical to the serial run's, cell for cell (wall_secs is the
+        // only timing field)
+        let mut spec = fl_mock_spec("flsweep-par");
+        let serial = run_fl_sweep(&spec).unwrap();
+        spec.base.workers = 4;
+        let parallel = run_fl_sweep(&spec).unwrap();
+        let (ca, cb) = (
+            serial.json.get("cells").unwrap().as_array().unwrap(),
+            parallel.json.get("cells").unwrap().as_array().unwrap(),
+        );
+        assert_eq!(ca.len(), cb.len());
+        assert_eq!(ca.len(), spec.grid_size());
+        for (x, y) in ca.iter().zip(cb.iter()) {
+            for key in [
+                "scheme",
+                "snr_db",
+                "partition",
+                "alpha",
+                "label",
+                "final_accuracy",
+                "final_loss",
+                "best_accuracy",
+                "mean_ota_mse",
+                "energy_j",
+            ] {
+                assert_eq!(x.get(key), y.get(key), "{key} differs serial vs parallel");
+            }
+        }
+        // the non-trivial partition axes surface in the grid JSON
+        let grid = serial.json.get("grid").unwrap();
+        assert!(grid.get("partitions").is_some());
+        assert!(grid.get("alphas").is_some());
+        // and the dirichlet cells carry the partition label suffix
+        let dirichlet_labels = ca
+            .iter()
+            .filter(|c| c.get("partition").unwrap().as_str().unwrap() == "dirichlet")
+            .map(|c| c.get("label").unwrap().as_str().unwrap().to_string())
+            .collect::<Vec<_>>();
+        assert_eq!(dirichlet_labels.len(), 2);
+        for l in &dirichlet_labels {
+            assert!(l.contains("dirichlet"), "label {l}");
         }
     }
 

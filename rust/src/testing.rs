@@ -269,6 +269,174 @@ impl crate::exec::TrainBackend for MockTrainer {
     }
 }
 
+// ---------------------------------------------------------------------
+// Convergence-science mock backend
+// ---------------------------------------------------------------------
+
+/// Deterministic, PJRT-free [`crate::exec::TrainBackend`] whose gradient
+/// statistics depend on each batch's LABEL MARGINAL, so non-IID
+/// convergence effects are testable without hardware.
+///
+/// The model: a shared synthetic optimum `opt` plus one unit direction
+/// per class.  A batch with label histogram `w` pulls the model toward
+/// the pseudo-optimum
+///
+/// ```text
+/// θ*(w) = opt + δ · (Σ_c w_c · dir_c − mean_c dir_c)
+/// ```
+///
+/// via one explicit SGD step on the quadratic ½‖θ − θ*(w)‖², plus a small
+/// deterministic zero-mean perturbation (hash-derived, a pure function of
+/// the call inputs — never of thread or execution order).  For IID shards
+/// the batch marginal is a noisy draw around uniform, so displacements
+/// cancel across clients and rounds and the fleet contracts to `opt`; a
+/// Dirichlet(α) shard concentrates `w` on few classes, giving each client
+/// a persistently displaced optimum whose unweighted fleet mean no longer
+/// cancels — the classic FedAvg heterogeneity penalty, here measurable as
+/// a higher final [`evaluate`](crate::exec::TrainBackend::evaluate) loss
+/// against the shared `opt`.  Aggregation noise (AnalogOta at low SNR)
+/// perturbs the global model directly and slows every partition alike.
+///
+/// Implements the allocation-free
+/// [`train_step_into`](crate::exec::TrainStep::train_step_into) seam, so
+/// warm full-FL rounds through this backend stay heap-silent.
+pub struct GradStatsBackend {
+    dim: usize,
+    /// Shared optimum (the evaluation target).
+    opt: Vec<f32>,
+    /// Per-class unit directions, row-major `[NUM_CLASSES][dim]`.
+    dirs: Vec<f32>,
+    /// Mean over classes of `dirs` (the uniform-marginal displacement).
+    dir_mean: Vec<f32>,
+    /// Displacement strength δ.
+    delta: f32,
+    /// Zero-mean per-step perturbation scale σ.
+    sigma: f32,
+}
+
+impl GradStatsBackend {
+    pub fn new(dim: usize) -> Self {
+        use crate::data::NUM_CLASSES;
+        // mpota-lint: allow(R4): fixed seed for the synthetic-optimum fixture
+        let root = Rng::seed_from(0x6EAD_57A7);
+        let mut opt = vec![0.0f32; dim];
+        root.stream("opt").fill_normal(&mut opt, 0.0, 0.3);
+        let mut dirs = vec![0.0f32; NUM_CLASSES * dim];
+        let mut dir_rng = root.stream("dirs");
+        let mut dir_mean = vec![0.0f32; dim];
+        for c in 0..NUM_CLASSES {
+            let row = &mut dirs[c * dim..(c + 1) * dim];
+            dir_rng.fill_normal(row, 0.0, 1.0);
+            let norm = row.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+            let inv = (1.0 / norm.max(1e-12)) as f32;
+            for (m, r) in dir_mean.iter_mut().zip(row.iter_mut()) {
+                *r *= inv;
+                *m += *r / NUM_CLASSES as f32;
+            }
+        }
+        GradStatsBackend { dim, opt, dirs, dir_mean, delta: 2.0, sigma: 0.02 }
+    }
+
+    /// The backend sized for the mock artifacts fixture.
+    pub fn for_mock() -> Self {
+        GradStatsBackend::new(MOCK_PARAMS)
+    }
+}
+
+impl crate::exec::TrainBackend for GradStatsBackend {
+    fn train_step(
+        &self,
+        p: crate::quant::Precision,
+        theta: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+    ) -> anyhow::Result<crate::runtime::TrainOutput> {
+        let mut new_theta = vec![0.0f32; theta.len()];
+        let m = crate::exec::TrainBackend::train_step_into(
+            self, p, theta, images, labels, lr, &mut new_theta,
+        )?;
+        Ok(crate::runtime::TrainOutput {
+            new_theta,
+            loss: m.loss,
+            correct: m.correct,
+        })
+    }
+
+    fn train_step_into(
+        &self,
+        _p: crate::quant::Precision,
+        theta: &[f32],
+        _images: &[f32],
+        labels: &[i32],
+        lr: f32,
+        new_theta_out: &mut [f32],
+    ) -> anyhow::Result<crate::exec::StepMetrics> {
+        use crate::data::NUM_CLASSES;
+        assert_eq!(theta.len(), self.dim, "model size != backend dim");
+        // batch label histogram -> the (class, weight) pairs present
+        let mut counts = [0u32; NUM_CLASSES];
+        let mut h = 0x6A09_E667_F3BC_C908u64;
+        for &l in labels {
+            counts[l as usize] += 1;
+            h = mix(h ^ l as u64);
+        }
+        // fold a strided model checksum in so the perturbation decorrelates
+        // across rounds even for a frozen batch order
+        for &t in theta.iter().step_by(997) {
+            h = mix(h ^ t.to_bits() as u64);
+        }
+        let inv_b = 1.0f32 / labels.len() as f32;
+        let mut cls = [0usize; NUM_CLASSES];
+        let mut wgt = [0f32; NUM_CLASSES];
+        let mut present = 0usize;
+        for (c, &n) in counts.iter().enumerate() {
+            if n > 0 {
+                cls[present] = c;
+                wgt[present] = n as f32 * inv_b;
+                present += 1;
+            }
+        }
+        let mut sumsq = 0.0f64;
+        for j in 0..self.dim {
+            let mut s = 0.0f32;
+            for i in 0..present {
+                s += wgt[i] * self.dirs[cls[i] * self.dim + j];
+            }
+            let target = self.opt[j] + self.delta * (s - self.dir_mean[j]);
+            let noise = (mix(h ^ j as u64) >> 40) as f32 / (1u64 << 24) as f32 - 0.5;
+            let resid = theta[j] - target;
+            sumsq += (resid as f64) * (resid as f64);
+            new_theta_out[j] = theta[j] - lr * (resid + self.sigma * noise);
+        }
+        let loss = (0.5 * sumsq / self.dim as f64) as f32;
+        Ok(crate::exec::StepMetrics {
+            loss,
+            correct: labels.len() as f32 / (1.0 + 50.0 * loss),
+        })
+    }
+
+    fn evaluate(
+        &self,
+        theta: &[f32],
+        _images: &[f32],
+        labels: &[i32],
+    ) -> anyhow::Result<crate::runtime::EvalResult> {
+        assert_eq!(theta.len(), self.dim, "model size != backend dim");
+        let mut sumsq = 0.0f64;
+        for (t, o) in theta.iter().zip(self.opt.iter()) {
+            let d = (t - o) as f64;
+            sumsq += d * d;
+        }
+        let loss = 0.5 * sumsq / self.dim as f64;
+        Ok(crate::runtime::EvalResult {
+            loss,
+            accuracy: 1.0 / (1.0 + 50.0 * loss),
+            samples: labels.len(),
+        })
+    }
+}
+
 /// Relative-or-absolute closeness for float comparisons in tests.
 pub fn close(a: f64, b: f64, rel: f64, abs: f64) -> bool {
     let diff = (a - b).abs();

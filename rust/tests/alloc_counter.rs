@@ -677,4 +677,53 @@ fn steady_state_round_path_is_allocation_free() {
         "steady-state packed streaming rounds allocated {} times",
         after - before
     );
+
+    // ---- phase 8: full-FL warm rounds (Dirichlet + GradStatsBackend) ----
+    // the convergence suite's round shape END TO END through the real
+    // coordinator: Dirichlet CSR shards through the lazy fleet, client
+    // SGD via the allocation-free `train_step_into` double buffer, analog
+    // OTA aggregation and the per-round evaluation — driven as bare
+    // `Coordinator::round` calls (no log pushes), with the client phase
+    // on 4 pool workers exactly as a parallel fl-sweep cell runs it.
+    // Warmup materializes the 6 clients into the fleet window (capacity
+    // 2·K — nothing evicts) and grows every scratch; steady-state rounds
+    // must then be heap-silent.
+    let fl_dir = mpota::testing::mock_artifacts_dir("alloc_fl");
+    let mut fl_cfg = mpota::config::RunConfig::default();
+    fl_cfg.artifacts_dir = fl_dir;
+    fl_cfg.variant = "mock".into();
+    fl_cfg.clients = 6;
+    fl_cfg.clients_per_round = 6;
+    fl_cfg.rounds = 8;
+    fl_cfg.train_samples = 192;
+    fl_cfg.test_samples = 32;
+    fl_cfg.scheme = Scheme::parse("16,8,4").unwrap();
+    fl_cfg.partition = mpota::config::PartitionKind::Dirichlet;
+    fl_cfg.alpha = 0.3;
+    fl_cfg.skew_zipf = 0.5;
+    fl_cfg.workers = 4;
+    let fl_runtime =
+        std::rc::Rc::new(mpota::runtime::Runtime::load(&fl_cfg.artifacts_dir).unwrap());
+    let mut fl_exp = mpota::sim::Experiment::builder(fl_cfg)
+        .runtime(fl_runtime)
+        .backend_boxed(Box::new(mpota::testing::GradStatsBackend::for_mock()))
+        .build()
+        .unwrap();
+    let coord = fl_exp.coordinator_mut();
+    for t in 1..=2 {
+        let rec = coord.round(t).unwrap();
+        std::hint::black_box(rec.participants);
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for t in 3..=8 {
+        let rec = coord.round(t).unwrap();
+        std::hint::black_box(rec.participants);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state Dirichlet full-FL rounds allocated {} times",
+        after - before
+    );
 }

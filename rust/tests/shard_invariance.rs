@@ -419,6 +419,56 @@ fn packed_transport_covers_every_row_kind() {
 }
 
 #[test]
+fn dirichlet_gradstats_runs_bit_identical_across_every_axis() {
+    // Non-IID partitions ride the same CSR shard path as IID through the
+    // lazy fleet, and the GradStatsBackend's step is a pure function of
+    // its call inputs — so a Dirichlet full-FL run (the convergence-suite
+    // configuration) is ALSO bit-identical across pipeline_depth ×
+    // shard_size × threads × workers.
+    let dir = mock_artifacts_dir("shardinv_dirichlet");
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    let mk = |depth: usize, shard: usize, threads: usize, workers: usize| {
+        let mut cfg = base_cfg(FadingKind::Rayleigh, &dir);
+        cfg.partition = mpota::config::PartitionKind::Dirichlet;
+        cfg.alpha = 0.3;
+        cfg.skew_zipf = 0.8;
+        cfg.train_samples = 192; // room for unequal shards above train_batch
+        cfg.pipeline_depth = depth;
+        cfg.shard_size = shard;
+        cfg.threads = threads;
+        cfg.workers = workers;
+        cfg
+    };
+    let run_gs = |cfg: RunConfig| {
+        let mut exp = Experiment::builder(cfg)
+            .runtime(rt.clone())
+            .backend_boxed(Box::new(mpota::testing::GradStatsBackend::for_mock()))
+            .build()
+            .unwrap();
+        let report = exp.run().unwrap();
+        let bits: Vec<u32> = exp.global_model().iter().map(|v| v.to_bits()).collect();
+        (bits, report)
+    };
+    let reference = run_gs(mk(0, 0, 1, 1));
+    assert_eq!(reference.1.log.rounds.len(), 3);
+    for depth in [0usize, 2] {
+        for shard in [1usize, 3] {
+            for (threads, workers) in [(1usize, 4usize), (4, 1), (4, 4)] {
+                let got = run_gs(mk(depth, shard, threads, workers));
+                assert_trajectories_equal(
+                    &format!(
+                        "dirichlet depth={depth} shard={shard} threads={threads} \
+                         workers={workers}"
+                    ),
+                    &reference,
+                    &got,
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn shard_size_larger_than_k_is_one_shard() {
     // shard_size > K clamps to one whole-round shard — same trajectory
     let dir = mock_artifacts_dir("shardinv_clamp");
